@@ -1,0 +1,83 @@
+//! Bench: core engine performance (the §Perf hot path) — simulator event
+//! throughput, the PJRT payload latency, and the PJRT histogram vs the
+//! pure-Rust histogram on large traces.
+#[path = "harness.rs"]
+mod harness;
+
+use simfaas::runtime::{Engine, PayloadKind};
+use simfaas::sim::{Histogram, Rng, ServerlessSimulator, SimConfig};
+
+fn main() {
+    harness::header(
+        "Engine",
+        "simulator events/s; PJRT payload latency; histogram backends",
+        "(perf targets in DESIGN.md §Perf)",
+    );
+    // --- simulator throughput ---
+    let horizon = if harness::quick() { 2e5 } else { 1e6 };
+    let cfg = SimConfig::table1().with_horizon(horizon);
+    let (res, results) = harness::bench("sim/table1_horizon_1e6", 5, || {
+        ServerlessSimulator::new(cfg.clone()).run()
+    });
+    // Events: arrival + departure per request, plus expirations (~#instances)
+    let events = results.total_requests * 2 + results.instances_expired;
+    println!(
+        "  -> {:.2} M events/s ({} events in {:.3} s)",
+        events as f64 / res.mean_s / 1e6,
+        events,
+        res.mean_s
+    );
+
+    // High-load variant: bigger pools stress the idle-pool data structure.
+    let cfg_hi = SimConfig::table1().with_arrival_rate(50.0).with_horizon(horizon / 10.0);
+    let (res_hi, results_hi) = harness::bench("sim/high_load_rate50", 3, || {
+        ServerlessSimulator::new(cfg_hi.clone()).run()
+    });
+    let events_hi = results_hi.total_requests * 2 + results_hi.instances_expired;
+    println!(
+        "  -> {:.2} M events/s at ~100-instance pool",
+        events_hi as f64 / res_hi.mean_s / 1e6
+    );
+
+    // --- PJRT payload latency ---
+    match Engine::load_dir(simfaas::runtime::default_artifacts_dir()) {
+        Ok(engine) => {
+            for kind in PayloadKind::ALL {
+                let x = vec![0.25f32; kind.input_len()];
+                let iters = if harness::quick() { 20 } else { 100 };
+                let (r, _) = harness::bench(
+                    &format!("pjrt/{}", kind.artifact_name()),
+                    iters,
+                    || engine.run_payload(kind, &x).unwrap(),
+                );
+                let (b, d_in, _) = kind.shape();
+                let flops = 2.0 * b as f64 * (d_in * 2 * d_in + 2 * d_in * 128) as f64;
+                println!("  -> ~{:.2} MFLOP/exec, {:.1} us/exec", flops / 1e6, r.mean_s * 1e6);
+            }
+
+            // --- histogram backends on a 4M-sample trace ---
+            let mut rng = Rng::new(1);
+            let n = if harness::quick() { 500_000 } else { 4_000_000 };
+            let samples_f32: Vec<f32> = (0..n).map(|_| rng.exponential(0.5) as f32).collect();
+            let samples_f64: Vec<f64> = samples_f32.iter().map(|&x| x as f64).collect();
+            let (rust_r, h) = harness::bench("hist/pure_rust_4M", 5, || {
+                let mut h = Histogram::new(0.0, 16.0, 64);
+                for &s in &samples_f64 {
+                    h.push(s);
+                }
+                h
+            });
+            let (pjrt_r, counts) = harness::bench("hist/pjrt_kernel_4M", 5, || {
+                engine.run_histogram(&samples_f32, 0.0, 16.0).unwrap()
+            });
+            let expect: Vec<f64> = h.counts().iter().map(|&c| c as f64).collect();
+            assert_eq!(counts, expect, "backends must agree exactly");
+            println!(
+                "  -> pure rust {:.1} Msamples/s, pjrt kernel {:.1} Msamples/s (identical counts)",
+                n as f64 / rust_r.mean_s / 1e6,
+                n as f64 / pjrt_r.mean_s / 1e6
+            );
+        }
+        Err(e) => println!("(pjrt benches skipped: {e:#})"),
+    }
+}

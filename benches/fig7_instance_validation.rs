@@ -1,0 +1,44 @@
+//! Bench: regenerate Fig. 7 — average instance count vs arrival rate,
+//! simulation vs emulated platform. Paper MAPE: 3.43%.
+#[path = "harness.rs"]
+mod harness;
+
+use simfaas::figures::{self, ValidationOpts};
+
+fn main() {
+    harness::header(
+        "Fig 7",
+        "average instance count vs arrival rate: simulator vs emulator",
+        "MAPE 3.43%; count grows sublinearly with rate",
+    );
+    // NOTE: this testbed has a single CPU core; the emulator's threads
+    // timeshare it, so validation is restricted to arrival rates whose
+    // thread count the core can serve faithfully (see EXPERIMENTS.md).
+    let quick = harness::quick();
+    let rates: Vec<f64> =
+        if quick { vec![0.25, 0.5, 1.0] } else { vec![0.25, 0.5, 0.75, 1.0] };
+    let opts = ValidationOpts {
+        emu_horizon: if quick { 6_000.0 } else { 30_000.0 },
+        time_scale: 500.0,
+        sim_horizon: 400_000.0,
+        skip: 600.0,
+        seed: 0x717,
+    };
+    let (_, rows) = harness::bench("fig7/validation_sweep", 1, || {
+        figures::validation_rows(&rates, &opts)
+    });
+    println!();
+    println!("rate    sim servers   emu servers");
+    for r in &rows {
+        println!(
+            "{:<7.2} {:>10.4}   {:>10.4}",
+            r.rate, r.sim.avg_server_count, r.emu.avg_server_count
+        );
+    }
+    let (_, e7, _) = figures::validation_errors(&rows);
+    println!("MAPE (servers): {e7:.2}%   (paper: 3.43%)");
+    // Shape: server count increases with rate.
+    let counts: Vec<f64> = rows.iter().map(|r| r.emu.avg_server_count).collect();
+    assert!(counts.windows(2).all(|w| w[1] > w[0] * 0.95), "count should grow with rate");
+    println!("shape OK: instance count grows with arrival rate");
+}

@@ -1,0 +1,75 @@
+//! Shared micro-bench harness for the paper-figure benches.
+//!
+//! No external bench crates are available in this environment, so each
+//! bench target is a plain binary (`harness = false`) including this module
+//! via `#[path = "harness.rs"]`. It provides wall-clock measurement with
+//! warm-up, repetition statistics, and uniform reporting, so `cargo bench`
+//! output is comparable across targets.
+
+use std::time::Instant;
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} {:>10.4} s/iter (±{:.4}, min {:.4}, max {:.4}, n={})",
+            self.name, self.mean_s, self.std_s, self.min_s, self.max_s, self.iters
+        );
+    }
+}
+
+/// Run `f` `iters` times (after one warm-up call) and report timing stats.
+/// Returns the last iteration's output for further inspection.
+pub fn bench<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) -> (BenchResult, T) {
+    assert!(iters >= 1);
+    let _warmup = f();
+    let mut times = Vec::with_capacity(iters);
+    let mut last = None;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let out = f();
+        times.push(t0.elapsed().as_secs_f64());
+        last = Some(out);
+    }
+    let n = times.len() as f64;
+    let mean = times.iter().sum::<f64>() / n;
+    let var = if times.len() > 1 {
+        times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / (n - 1.0)
+    } else {
+        0.0
+    };
+    let result = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: times.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    };
+    result.report();
+    (result, last.unwrap())
+}
+
+/// Quick-mode switch: `SIMFAAS_BENCH_QUICK=1` shrinks horizons so the whole
+/// suite stays in CI budgets; full mode reproduces the paper-scale runs.
+pub fn quick() -> bool {
+    std::env::var("SIMFAAS_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Standard header so bench outputs are self-describing in bench_output.txt.
+pub fn header(id: &str, what: &str, paper: &str) {
+    println!("==============================================================");
+    println!("{id}: {what}");
+    println!("paper reference: {paper}");
+    println!("==============================================================");
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate the paper's Table 1 (steady-state example) and report
+//! simulator wall time for the 1e6-second horizon.
+#[path = "harness.rs"]
+mod harness;
+
+use simfaas::figures;
+
+fn main() {
+    harness::header(
+        "Table 1",
+        "steady-state example: lambda=0.9/s, warm 1.991 s, cold 2.244 s, threshold 600 s",
+        "P(cold)=0.14%, P(rej)=0%, lifespan 6307.74 s, servers 7.6795, running 1.7902, idle 5.8893",
+    );
+    let horizon = if harness::quick() { 1e5 } else { 1e6 };
+    let (_, r) = harness::bench("table1/simulate_1e6s", 3, || figures::table1(horizon, 0x5EED));
+    println!();
+    print!("{r}");
+    println!("paper: 0.14% | 0% | 6307.7389 s | 7.6795 | 1.7902 | 5.8893");
+}

@@ -1,0 +1,77 @@
+//! Cost calculation (paper §4.4): predict developer charges (per-request +
+//! GB-s runtime) and provider infrastructure cost under different loads and
+//! providers, directly from simulation outputs.
+//!
+//! Run with: `cargo run --release --example cost_planning`
+
+use simfaas::cost::{estimate, scale_to, FunctionConfig, PricingTable, Provider};
+use simfaas::output::Table;
+use simfaas::sim::{ServerlessSimulator, SimConfig};
+
+fn main() {
+    println!("== monthly cost vs load (AWS Lambda pricing, 128 MB) ==\n");
+    let month = 30.0 * 86_400.0;
+    let mut t = Table::new(vec![
+        "rate req/s",
+        "p_cold %",
+        "avg servers",
+        "dev $/month",
+        "infra $/month",
+        "waste %",
+    ]);
+    for rate in [0.1, 0.5, 1.0, 2.0, 5.0, 10.0] {
+        let cfg = SimConfig::table1().with_arrival_rate(rate).with_horizon(200_000.0);
+        let r = ServerlessSimulator::new(cfg).run();
+        let est = estimate(&r, &FunctionConfig::new(128.0), &PricingTable::aws_lambda());
+        let m = scale_to(&est, month);
+        t.row_f64(
+            &[
+                rate,
+                r.cold_start_prob * 100.0,
+                r.avg_server_count,
+                m.developer_total(),
+                m.provider_infra_cost,
+                r.wasted_capacity * 100.0,
+            ],
+            3,
+        );
+    }
+    print!("{t}");
+
+    println!("\n== provider comparison at 1 req/s, 256 MB ==\n");
+    let cfg = SimConfig::table1().with_arrival_rate(1.0).with_horizon(200_000.0);
+    let r = ServerlessSimulator::new(cfg).run();
+    let mut t = Table::new(vec!["provider", "dev $/month", "requests %", "runtime %"]);
+    for (name, p) in [
+        ("AWS Lambda", Provider::AwsLambda),
+        ("Google Cloud Functions", Provider::GoogleCloudFunctions),
+        ("Azure Functions", Provider::AzureFunctions),
+        ("IBM Cloud Functions", Provider::IbmCloudFunctions),
+    ] {
+        let est = estimate(&r, &FunctionConfig::new(256.0), &PricingTable::for_provider(p));
+        let m = scale_to(&est, month);
+        let total = m.developer_total();
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", total),
+            format!("{:.1}", 100.0 * m.request_charges / total),
+            format!("{:.1}", 100.0 * m.runtime_charges / total),
+        ]);
+    }
+    print!("{t}");
+
+    println!("\n== expiration threshold: provider cost vs developer QoS ==\n");
+    let mut t = Table::new(vec!["threshold s", "p_cold %", "infra $/month", "dev $/month"]);
+    for th in [60.0, 300.0, 600.0, 1800.0] {
+        let cfg = SimConfig::table1().with_expiration_threshold(th).with_horizon(200_000.0);
+        let r = ServerlessSimulator::new(cfg).run();
+        let est = estimate(&r, &FunctionConfig::new(128.0), &PricingTable::aws_lambda());
+        let m = scale_to(&est, month);
+        t.row_f64(
+            &[th, r.cold_start_prob * 100.0, m.provider_infra_cost, m.developer_total()],
+            3,
+        );
+    }
+    print!("{t}");
+    println!("(longer threshold: fewer cold starts, linearly higher provider cost)");
+}

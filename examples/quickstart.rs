@@ -1,0 +1,41 @@
+//! Quickstart: reproduce the paper's Table 1 steady-state analysis.
+//!
+//! Runs the `ServerlessSimulator` with the paper's example parameters
+//! (Poisson(0.9/s) arrivals, exp warm/cold service with means 1.991 s /
+//! 2.244 s, a 10-minute expiration threshold, a 1e6 s horizon and a 100 s
+//! warm-up skip) and prints the Table-1 output rows next to the values the
+//! paper reports.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use simfaas::sim::{ServerlessSimulator, SimConfig};
+
+fn main() {
+    let cfg = SimConfig::table1();
+    println!("== SimFaaS quickstart: paper Table 1 ==");
+    println!("Arrival Rate            0.9 req/s (Poisson)");
+    println!("Warm Service Time       1.991 s (exponential)");
+    println!("Cold Service Time       2.244 s (exponential)");
+    println!("Expiration Threshold    600 s");
+    println!("Simulation Time         1e6 s   Skip Initial: 100 s");
+    println!();
+
+    let t0 = std::time::Instant::now();
+    let results = ServerlessSimulator::new(cfg).run();
+    let wall = t0.elapsed();
+
+    println!("{results}");
+    println!("-- paper reference values --");
+    println!("Cold Start Probability    0.14 %");
+    println!("Rejection Probability     0 %");
+    println!("Average Instance Lifespan 6307.7389 s");
+    println!("Average Server Count      7.6795");
+    println!("Average Running Servers   1.7902");
+    println!("Average Idle Count        5.8893");
+    println!();
+    println!(
+        "simulated 1e6 s ({} requests) in {:.3} s wall clock",
+        results.total_requests,
+        wall.as_secs_f64()
+    );
+}

@@ -1,0 +1,51 @@
+//! Transient analysis (paper §4.2, Fig. 4): time-bounded metrics from custom
+//! initial states, with replications and confidence intervals — the
+//! capability the Markovian models of prior work could only offer for
+//! exponential processes.
+//!
+//! Run with: `cargo run --release --example transient_analysis`
+
+use simfaas::output::{ascii_lines, Series};
+use simfaas::sim::{InitialState, ServerlessTemporalSimulator, SimConfig};
+
+fn main() {
+    let mut cfg = SimConfig::table1();
+    cfg.horizon = 30_000.0;
+    cfg.sample_interval = 150.0;
+
+    println!("== Fig 4: average instance count over time (10 runs, 95% CI) ==\n");
+    let res = ServerlessTemporalSimulator::new(cfg.clone(), InitialState::empty(), 10).run();
+    let band = res.average_count_band();
+    let series = vec![
+        Series::new("mean", band.iter().map(|&(t, m, _)| (t, m)).collect()),
+        Series::new("mean+ci", band.iter().map(|&(t, m, h)| (t, m + h)).collect()),
+        Series::new("mean-ci", band.iter().map(|&(t, m, h)| (t, m - h)).collect()),
+    ];
+    print!("{}", ascii_lines(&series, 72, 16));
+    let last = band.last().unwrap();
+    println!(
+        "final estimate {:.4} ± {:.4} ({:.2}% of mean; paper reports <1%)\n",
+        last.1,
+        last.2,
+        100.0 * last.2 / last.1
+    );
+
+    println!("== cold vs pre-warmed start (time-bounded QoS guarantees) ==\n");
+    // An operator pre-warms 10 instances before a product launch: what is
+    // the cold-start exposure over the first 10 minutes?
+    let mut short = cfg;
+    short.horizon = 600.0;
+    short.sample_interval = 10.0;
+    for (label, init) in [
+        ("empty platform", InitialState::empty()),
+        ("pre-warmed pool of 10", InitialState::warm_pool(10)),
+    ] {
+        let r = ServerlessTemporalSimulator::new(short.clone(), init, 20).run();
+        let (p, hw) = r.cold_start_prob_ci;
+        println!(
+            "  {label:<24} P(cold over first 10 min) = {:.3}% ± {:.3}%",
+            p * 100.0,
+            hw * 100.0
+        );
+    }
+}

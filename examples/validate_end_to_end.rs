@@ -1,0 +1,158 @@
+//! END-TO-END driver (the DESIGN.md §5 validation experiment, Figs. 6–8,
+//! with all three layers composing):
+//!
+//!   1. The **platform emulator** (L3, threads + virtual clock) serves a
+//!      Poisson workload; each request's function body executes the
+//!      **AOT-compiled JAX/Pallas MLP payload** (L2/L1) through the PJRT
+//!      runtime — Python never runs here.
+//!   2. The emulator's trace is written as CSV, re-parsed, and fed through
+//!      **parameter identification** (paper §5.2).
+//!   3. The **discrete-event simulator** is configured with the identified
+//!      parameters and predicts the platform's behaviour.
+//!   4. Predictions are compared against the emulator's measurements with
+//!      the paper's error metrics (Fig 6: P(cold); Fig 7: instance count;
+//!      Fig 8: wasted capacity), and the PDF/CDF analysis of the measured
+//!      response times runs on the **PJRT histogram kernel**, cross-checked
+//!      against the pure-Rust histogram.
+//!
+//! Run with: `cargo run --release --example validate_end_to_end`
+
+use simfaas::emulator::{EmulatorConfig, Platform};
+use simfaas::output::Table;
+use simfaas::runtime::{ComputePool, Engine, PayloadKind, HIST_NBINS};
+use simfaas::sim::{EmpiricalProcess, ServerlessSimulator, SimConfig};
+use simfaas::trace;
+use simfaas::workload;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = simfaas::runtime::default_artifacts_dir();
+    println!("loading artifacts from {}...", artifacts.display());
+    let pool = Arc::new(ComputePool::new(&artifacts, 8)?);
+    // Warm the executables (first PJRT execution pays lazy-init costs that
+    // would otherwise distort the first cold starts).
+    for _ in 0..8 {
+        let k = PayloadKind::Small;
+        pool.run_payload(k, vec![0.0; k.input_len()])?;
+    }
+    let engine = Engine::load_dir(&artifacts)?;
+
+    // --- 1. emulate the platform with real compute payloads -------------
+    let time_scale = 100.0;
+    let horizon = 2_500.0; // virtual seconds
+    let rate = 1.0;
+    let mut cfg = EmulatorConfig::lambda_like(time_scale);
+    cfg.payload = Some(PayloadKind::Small);
+    cfg.payload_reps = 1;
+    cfg.app_init_reps = 1; // "load the model" on cold start
+    cfg.provisioning_delay = 0.25;
+    cfg.expiration_threshold = 600.0;
+    cfg.synthetic_service = Some(Arc::new(simfaas::sim::ExpProcess::with_mean(1.8)));
+    cfg.tick = 2.0;
+
+    let mut rng = simfaas::sim::Rng::new(99);
+    let w = workload::poisson(rate, horizon, &mut rng);
+    println!(
+        "emulating {} requests over {horizon} virtual s at {time_scale}x (payload: MLP small via PJRT)...",
+        w.len()
+    );
+    let t0 = std::time::Instant::now();
+    let res = Platform::new(cfg, Some(pool)).run(&w)?;
+    println!("emulation done in {:.1} s wall", t0.elapsed().as_secs_f64());
+
+    // --- 2. trace out/in + parameter identification ----------------------
+    let mut buf = Vec::new();
+    trace::write_csv(&mut buf, &res.records)?;
+    let records = trace::read_csv(&buf[..])?;
+    let params = trace::identify(&records);
+    println!(
+        "\nidentified: rate {:.3}/s, warm {:.3} s (std {:.3}), cold {:.3} s, p_cold {:.3}%",
+        params.arrival_rate,
+        params.warm_mean,
+        params.warm_std,
+        params.cold_mean,
+        params.cold_start_prob * 100.0
+    );
+
+    // --- 3. simulator with identified parameters -------------------------
+    let warm: Vec<f64> = records
+        .iter()
+        .filter(|r| r.outcome == trace::Outcome::Warm)
+        .map(|r| r.response_time)
+        .collect();
+    let cold: Vec<f64> = records
+        .iter()
+        .filter(|r| r.outcome == trace::Outcome::Cold)
+        .map(|r| r.response_time)
+        .collect();
+    let mut sim_cfg = SimConfig::table1()
+        .with_arrival_rate(params.arrival_rate)
+        .with_horizon(300_000.0);
+    sim_cfg.skip_initial = 300.0;
+    sim_cfg.warm_service = Arc::new(EmpiricalProcess::new(warm));
+    sim_cfg.cold_service = if cold.len() >= 10 {
+        Arc::new(EmpiricalProcess::new(cold))
+    } else {
+        Arc::new(simfaas::sim::GaussianProcess::new(params.cold_mean, params.cold_std.max(0.01)))
+    };
+    let sim = ServerlessSimulator::new(sim_cfg).run();
+
+    // --- 4. compare -------------------------------------------------------
+    let emu = res.metrics(300.0);
+    let mut t = Table::new(vec!["metric", "simulator", "emulator", "|err| %"]);
+    let mut add = |name: &str, s: f64, e: f64| {
+        let err = if e != 0.0 { 100.0 * ((s - e) / e).abs() } else { 0.0 };
+        t.row(vec![
+            name.to_string(),
+            format!("{s:.4}"),
+            format!("{e:.4}"),
+            format!("{err:.2}"),
+        ]);
+    };
+    add("P(cold) %", sim.cold_start_prob * 100.0, emu.cold_start_prob * 100.0);
+    add("avg server count", sim.avg_server_count, emu.avg_server_count);
+    add("avg running", sim.avg_running_count, emu.avg_running_count);
+    add("wasted capacity %", sim.wasted_capacity * 100.0, emu.wasted_capacity * 100.0);
+    add("avg warm response s", sim.avg_warm_response_time, emu.avg_warm_response);
+    println!();
+    print!("{t}");
+    println!("(paper Fig 6-8 errors: 12.75% / 3.43% / 0.17%)");
+
+    // --- PDF/CDF tooling on the PJRT histogram kernel --------------------
+    let resp: Vec<f32> = records
+        .iter()
+        .filter(|r| r.outcome != trace::Outcome::Rejected)
+        .map(|r| r.response_time as f32)
+        .collect();
+    let hi = 10.0f32;
+    let counts = engine.run_histogram(&resp, 0.0, hi)?;
+    let mut h = simfaas::sim::Histogram::new(0.0, hi as f64, HIST_NBINS);
+    for r in &records {
+        if r.outcome != trace::Outcome::Rejected {
+            h.push(r.response_time);
+        }
+    }
+    let rust_counts: Vec<f64> = h.counts().iter().map(|&c| c as f64).collect();
+    anyhow::ensure!(counts == rust_counts, "PJRT histogram != pure-Rust histogram");
+    let total: f64 = counts.iter().sum();
+    let p50_bin = {
+        let mut acc = 0.0;
+        let mut bin = 0;
+        for (i, &c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= total / 2.0 {
+                bin = i;
+                break;
+            }
+        }
+        bin
+    };
+    println!(
+        "\nresponse-time CDF via PJRT histogram kernel: {} samples, median bin {} (~{:.2} s); pure-Rust cross-check OK",
+        total as u64,
+        p50_bin,
+        (p50_bin as f32 + 0.5) * hi / HIST_NBINS as f32
+    );
+    println!("\nEND-TO-END OK: L1 Pallas kernels -> L2 JAX graphs -> AOT HLO -> L3 rust emulator+simulator");
+    Ok(())
+}

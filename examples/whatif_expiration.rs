@@ -1,0 +1,49 @@
+//! What-if analysis (paper §4.3, Fig. 5): sweep the expiration threshold and
+//! arrival rate, then use the optimizer to pick a cost/QoS-balanced
+//! threshold for a given workload — the provider-side knob the paper's
+//! conclusion highlights.
+//!
+//! Run with: `cargo run --release --example whatif_expiration`
+
+use simfaas::figures;
+use simfaas::output::{ascii_lines, Series, Table};
+use simfaas::sim::SimConfig;
+use simfaas::whatif::optimize_expiration_threshold;
+
+fn main() {
+    let rates = [0.1, 0.3, 0.5, 0.9, 1.5, 2.5];
+    let thresholds = [120.0, 300.0, 600.0, 1200.0];
+    println!("== Fig 5: P(cold) vs arrival rate for several thresholds ==\n");
+    let out = figures::fig5_sweep(&rates, &thresholds, 200_000.0, 11);
+
+    let mut table = Table::new(
+        std::iter::once("rate".to_string())
+            .chain(thresholds.iter().map(|t| format!("p%@{t}s")))
+            .collect::<Vec<_>>(),
+    );
+    for (i, &rate) in rates.iter().enumerate() {
+        let mut row = vec![rate];
+        for (_, s) in &out {
+            row.push(s[i].1 * 100.0);
+        }
+        table.row_f64(&row, 4);
+    }
+    print!("{table}\n");
+    let series: Vec<Series> = out
+        .iter()
+        .map(|(th, s)| Series::new(format!("{th}s"), s.iter().map(|&(r, p)| (r, p * 100.0)).collect()))
+        .collect();
+    print!("{}", ascii_lines(&series, 64, 16));
+
+    println!("\n== threshold optimization for the Table 1 workload ==");
+    let base = SimConfig::table1().with_horizon(150_000.0);
+    let grid = [60.0, 120.0, 300.0, 600.0, 1200.0, 2400.0];
+    for (wc, wq, label) in [
+        (1.0, 0.25, "cost-biased  (infra $ matters 4x more)"),
+        (1.0, 1.0, "balanced"),
+        (0.25, 1.0, "QoS-biased   (cold starts matter 4x more)"),
+    ] {
+        let (best, _) = optimize_expiration_threshold(&base, &grid, wc, wq);
+        println!("  {label:<44} -> best threshold {best:>6.0} s");
+    }
+}

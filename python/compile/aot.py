@@ -1,0 +1,70 @@
+"""AOT lowering: JAX entry points -> HLO text artifacts for the Rust side.
+
+HLO *text* (not a serialized ``HloModuleProto``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids, which the `xla` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Run: ``cd python && python -m compile.aot --out-dir ../artifacts``
+Produces one ``<name>.hlo.txt`` per entry point plus ``manifest.txt``
+describing the input shapes the Rust runtime must feed.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, example_args) -> str:
+    """Lower a jittable function to XLA HLO text via StableHLO."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the payloads bake their weights as constants;
+    # the default printer elides them as `constant({...})`, which does not
+    # parse back. Full literals make the text artifact self-contained.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def describe(example_args) -> str:
+    parts = []
+    for a in example_args:
+        dims = "x".join(str(d) for d in a.shape) if a.shape else "scalar"
+        parts.append(f"{a.dtype}[{dims}]")
+    return " ".join(parts)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--only", default=None, help="lower a single entry point by name"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for name, (fn, example_args) in model.ENTRY_POINTS.items():
+        if args.only and name != args.only:
+            continue
+        text = to_hlo_text(fn, example_args)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name} {describe(example_args)}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest_path = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest_path, "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

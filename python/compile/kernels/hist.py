@@ -1,0 +1,94 @@
+"""Layer-1 Pallas kernel: batched fixed-bin histogram.
+
+The simulator's PDF/CDF approximation tools (paper §3: "generate
+approximations for PDF and CDF from the simulations") reduce multi-million
+sample traces to fixed-bin histograms. This kernel computes the bin counts
+as a grid reduction:
+
+* Samples are tiled ``BLOCK_N`` per grid step (VMEM-resident block).
+* Each step computes its partial counts as a one-hot mask contraction
+  ``(block, nbins)`` — a dense VPU-friendly compare+reduce rather than a
+  scatter (TPUs have no fast scatter; this is the standard histogram
+  rewrite for SIMD machines).
+* All grid steps map to the *same* output block (index_map -> 0), so the
+  output behaves as an accumulator: step 0 initializes, later steps add.
+
+VMEM per step (defaults: BLOCK_N=65536, nbins=64, f32):
+  samples 64Ki x 4B      = 256 KiB
+  one-hot mask (implicit) = materialized tile-by-tile by the compiler
+  counts 64 x 4B          = 256 B
+Fits comfortably; nbins stays in the lane dimension (64 <= 128).
+
+Lowered with ``interpret=True`` for CPU-PJRT execution (see mlp.py note).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Samples per grid step.
+BLOCK_N = 65536
+
+
+def _hist_kernel(lo_ref, width_ref, x_ref, o_ref, *, nbins: int):
+    """Accumulate one sample block's counts into the shared output block."""
+    i = pl.program_id(0)
+    x = x_ref[...]
+    lo = lo_ref[0]
+    width = width_ref[0]
+    idx = jnp.floor((x - lo) / width).astype(jnp.int32)
+    in_range = (idx >= 0) & (idx < nbins)
+    idx = jnp.clip(idx, 0, nbins - 1)
+    one_hot = (idx[:, None] == jnp.arange(nbins)[None, :]) & in_range[:, None]
+    partial = one_hot.astype(jnp.float32).sum(axis=0)
+
+    # First step initializes the accumulator, later steps add to it.
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(i != 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("nbins", "block_n", "interpret"))
+def histogram(samples, lo, hi, *, nbins: int = 64, block_n: int = BLOCK_N,
+              interpret: bool = True):
+    """Histogram counts (float32, shape (nbins,)) of ``samples`` over
+    ``[lo, hi)``. ``len(samples)`` must be a multiple of ``block_n``;
+    ``histogram_padded`` handles ragged sizes.
+    """
+    (n,) = samples.shape
+    assert n % block_n == 0, f"n {n} not a multiple of {block_n}"
+    lo = jnp.asarray([lo], jnp.float32)
+    width = jnp.asarray([(hi - lo[0]) / nbins], jnp.float32)
+
+    grid = (n // block_n,)
+    kernel = functools.partial(_hist_kernel, nbins=nbins)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        # All steps write the same (only) output block: accumulator.
+        out_specs=pl.BlockSpec((nbins,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((nbins,), jnp.float32),
+        interpret=interpret,
+    )(lo, width, samples)
+
+
+def histogram_padded(samples, lo, hi, *, nbins: int = 64, block_n: int = BLOCK_N):
+    """Histogram for arbitrary sample counts: pads with out-of-range
+    sentinels (hi + 1) which the kernel drops."""
+    n = samples.shape[0]
+    padded = ((n + block_n - 1) // block_n) * block_n
+    if padded != n:
+        pad = jnp.full((padded - n,), hi + 1.0, samples.dtype)
+        samples = jnp.concatenate([samples, pad])
+    return histogram(samples, lo, hi, nbins=nbins, block_n=block_n)

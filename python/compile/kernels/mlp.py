@@ -1,0 +1,94 @@
+"""Layer-1 Pallas kernel: tiled two-layer MLP forward.
+
+This is the compute hot-spot of the emulated serverless function (an
+ML-inference app). The kernel is written for the TPU memory hierarchy:
+
+* The batch dimension is tiled with ``BLOCK_B`` rows per grid step; each
+  grid step's activations live in VMEM.
+* Weights (``w1``, ``w2``) use whole-array BlockSpecs: they fit in VMEM for
+  the payload sizes we ship (<= 512x1024 f32 = 2 MiB) and are reused across
+  every grid step, so HBM traffic is one weight read amortized over the
+  batch — the standard inference-serving schedule.
+* Matmuls contract over the feature axis with ``preferred_element_type=
+  float32`` so the MXU accumulates in f32.
+* Tile sizes are MXU/VPU-aligned: BLOCK_B is a multiple of 8 (f32 sublane),
+  feature dims are multiples of 128 (lane).
+
+VMEM footprint per grid step (defaults, f32):
+  x tile   128x256  = 128 KiB
+  w1       256x512  = 512 KiB
+  h        128x512  = 256 KiB
+  w2       512x128  = 256 KiB  (d_out padded to 128)
+  out      128x128  =  64 KiB
+  total ~= 1.2 MiB  << 16 MiB VMEM -> double-buffering headroom.
+
+NOTE: lowered with ``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; on a real TPU the same code lowers to Mosaic (see
+DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block size over the batch dimension (8-sublane aligned).
+BLOCK_B = 128
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One batch tile: o = relu(x @ w1 + b1) @ w2 + b2."""
+    x = x_ref[...]
+    h = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    h = jnp.maximum(h + b1_ref[...], 0.0)
+    o = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = o + b2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def mlp_forward(x, w1, b1, w2, b2, *, block_b: int = BLOCK_B, interpret: bool = True):
+    """Tiled MLP forward via ``pallas_call``.
+
+    ``x`` rows must be a multiple of ``block_b`` (the AOT entry points pad
+    the batch; `python/tests` sweeps non-multiples through the padded path).
+    """
+    batch, d_in = x.shape
+    d_hidden = w1.shape[1]
+    d_out = w2.shape[1]
+    assert w1.shape == (d_in, d_hidden)
+    assert b1.shape == (d_hidden,)
+    assert w2.shape == (d_hidden, d_out)
+    assert b2.shape == (d_out,)
+    assert batch % block_b == 0, f"batch {batch} not a multiple of {block_b}"
+
+    grid = (batch // block_b,)
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            # One batch tile per grid step.
+            pl.BlockSpec((block_b, d_in), lambda i: (i, 0)),
+            # Weights/biases: whole array resident, reused across steps.
+            pl.BlockSpec((d_in, d_hidden), lambda i: (0, 0)),
+            pl.BlockSpec((d_hidden,), lambda i: (0,)),
+            pl.BlockSpec((d_hidden, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((d_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, d_out), jnp.float32),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)
+
+
+def mlp_forward_padded(x, w1, b1, w2, b2, *, block_b: int = BLOCK_B):
+    """MLP forward for arbitrary batch sizes: pads to the tile size and
+    slices the result back (the AOT model entry uses fixed shapes, but the
+    tests exercise this wrapper to check padding correctness)."""
+    batch = x.shape[0]
+    padded = ((batch + block_b - 1) // block_b) * block_b
+    if padded != batch:
+        pad = jnp.zeros((padded - batch, x.shape[1]), x.dtype)
+        x = jnp.concatenate([x, pad], axis=0)
+    out = mlp_forward(x, w1, b1, w2, b2, block_b=block_b)
+    return out[:batch]

@@ -1,0 +1,45 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` ops only. ``python/tests`` sweeps shapes and
+dtypes (hypothesis) and asserts the kernels match these oracles — the core
+correctness signal for Layer 1.
+"""
+
+import jax.numpy as jnp
+
+
+def mlp_forward_ref(x, w1, b1, w2, b2):
+    """Two-layer MLP forward: relu(x @ w1 + b1) @ w2 + b2.
+
+    This is the serverless function's compute payload (an ML-inference
+    app — the paper's motivating example of application initialization is
+    "loading a machine learning model"). Shapes:
+      x: (batch, d_in), w1: (d_in, d_hidden), b1: (d_hidden,)
+      w2: (d_hidden, d_out), b2: (d_out,)
+    """
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    return h @ w2 + b2
+
+
+def histogram_ref(samples, lo, hi, nbins):
+    """Fixed-bin histogram over ``[lo, hi)`` with ``nbins`` equal bins.
+
+    Returns float32 counts of shape (nbins,). Out-of-range samples are
+    dropped (mirrors ``sim::hist::Histogram`` semantics for in-range bins).
+    Used by the simulator's PDF/CDF approximation tools for multi-million
+    sample traces.
+    """
+    width = (hi - lo) / nbins
+    idx = jnp.floor((samples - lo) / width).astype(jnp.int32)
+    in_range = (samples >= lo) & (samples < hi)
+    idx = jnp.clip(idx, 0, nbins - 1)
+    one_hot = (idx[:, None] == jnp.arange(nbins)[None, :]) & in_range[:, None]
+    return one_hot.astype(jnp.float32).sum(axis=0)
+
+
+def empirical_cdf_ref(samples, lo, hi, nbins):
+    """CDF evaluated at the right edge of each bin (in-range mass only)."""
+    counts = histogram_ref(samples, lo, hi, nbins)
+    total = jnp.maximum(counts.sum(), 1.0)
+    return jnp.cumsum(counts) / total

@@ -1,0 +1,104 @@
+"""Layer-2 JAX model: the serverless function payloads and analysis graphs.
+
+The emulator's function instances execute these computations on their
+request path (via the AOT artifacts — Python never runs at serve time):
+
+* ``payload_small`` / ``payload_medium`` / ``payload_large`` — MLP-inference
+  serverless functions at three sizes, standing in for the paper's three
+  memory configurations (128/256/512 MB): larger memory on Lambda means a
+  proportionally faster-but-bigger footprint; here it means a bigger model
+  per request, giving distinct, realistic service-time distributions.
+* ``trace_histogram`` — the simulator-side analysis graph: fixed-bin
+  histogram of a sample trace (PDF/CDF tooling), backed by the Pallas
+  histogram kernel.
+
+Weights are generated once from a fixed seed and baked into the lowered
+HLO as constants — a deployed inference function's weights are part of its
+deployment package, which is exactly the paper's "application initializing"
+story (load model once per instance).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import hist as hist_kernel
+from .kernels import mlp as mlp_kernel
+
+# Payload geometry per emulated memory configuration. Feature dims are
+# 128-lane aligned; batch is one BLOCK_B tile.
+PAYLOAD_SHAPES = {
+    # name: (batch, d_in, d_hidden, d_out)
+    "small": (128, 128, 256, 128),
+    "medium": (128, 256, 512, 128),
+    "large": (128, 512, 1024, 128),
+}
+
+# Histogram geometry (must match rust/src/runtime/payload.rs).
+HIST_N = hist_kernel.BLOCK_N * 2  # two grid steps exercises accumulation
+HIST_NBINS = 64
+
+
+def make_weights(name: str, seed: int = 0):
+    """Deterministic weights for a payload variant."""
+    batch, d_in, d_hidden, d_out = PAYLOAD_SHAPES[name]
+    del batch
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    scale1 = (2.0 / d_in) ** 0.5
+    scale2 = (2.0 / d_hidden) ** 0.5
+    return (
+        jax.random.normal(k1, (d_in, d_hidden), jnp.float32) * scale1,
+        jax.random.normal(k2, (d_hidden,), jnp.float32) * 0.01,
+        jax.random.normal(k3, (d_hidden, d_out), jnp.float32) * scale2,
+        jax.random.normal(k4, (d_out,), jnp.float32) * 0.01,
+    )
+
+
+def make_payload(name: str):
+    """Build the payload function ``x -> logits`` with baked weights,
+    plus its example input spec (for lowering)."""
+    batch, d_in, _, _ = PAYLOAD_SHAPES[name]
+    w1, b1, w2, b2 = make_weights(name)
+
+    def payload(x):
+        return (mlp_kernel.mlp_forward(x, w1, b1, w2, b2),)
+
+    example = jax.ShapeDtypeStruct((batch, d_in), jnp.float32)
+    return payload, (example,)
+
+
+def payload_small(x):
+    return make_payload("small")[0](x)
+
+
+def payload_medium(x):
+    return make_payload("medium")[0](x)
+
+
+def payload_large(x):
+    return make_payload("large")[0](x)
+
+
+def make_trace_histogram():
+    """Analysis graph: histogram of a fixed-size sample trace over a
+    dynamic range [lo, hi)."""
+
+    def trace_histogram(samples, lo, hi):
+        return (
+            hist_kernel.histogram(samples, lo, hi, nbins=HIST_NBINS),
+        )
+
+    example = (
+        jax.ShapeDtypeStruct((HIST_N,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    return trace_histogram, example
+
+
+#: All AOT entry points: name -> (fn, example_args).
+ENTRY_POINTS = {
+    "payload_small": make_payload("small"),
+    "payload_medium": make_payload("medium"),
+    "payload_large": make_payload("large"),
+    "trace_histogram": make_trace_histogram(),
+}

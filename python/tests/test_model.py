@@ -1,0 +1,64 @@
+"""Layer-2 correctness: payload/analysis entry points (shapes, determinism,
+and agreement with the un-jitted reference composition)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+class TestPayloads:
+    def test_all_variants_produce_logits(self):
+        for name, (batch, d_in, _, d_out) in model.PAYLOAD_SHAPES.items():
+            fn, (spec,) = model.make_payload(name)
+            assert spec.shape == (batch, d_in)
+            x = jnp.ones(spec.shape, spec.dtype)
+            (out,) = fn(x)
+            assert out.shape == (batch, d_out), name
+            assert bool(jnp.isfinite(out).all()), name
+
+    def test_payload_matches_reference_composition(self):
+        fn, (spec,) = model.make_payload("small")
+        x = jax.random.normal(jax.random.PRNGKey(3), spec.shape, spec.dtype)
+        (got,) = fn(x)
+        w1, b1, w2, b2 = model.make_weights("small")
+        want = ref.mlp_forward_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_weights_deterministic(self):
+        a = model.make_weights("medium")
+        b = model.make_weights("medium")
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+    def test_variants_have_increasing_flops(self):
+        # FLOPs ~ batch * (d_in*d_h + d_h*d_out): the service-time knob.
+        def flops(name):
+            batch, d_in, d_h, d_out = model.PAYLOAD_SHAPES[name]
+            return batch * (d_in * d_h + d_h * d_out)
+
+        assert flops("small") < flops("medium") < flops("large")
+
+
+class TestTraceHistogram:
+    def test_matches_reference(self):
+        fn, (spec, _, _) = model.make_trace_histogram()
+        x = jax.random.exponential(jax.random.PRNGKey(4), spec.shape).astype(jnp.float32)
+        lo, hi = jnp.float32(0.0), jnp.float32(10.0)
+        (got,) = fn(x, lo, hi)
+        want = ref.histogram_ref(x, lo, hi, model.HIST_NBINS)
+        np.testing.assert_allclose(got, want)
+        assert got.shape == (model.HIST_NBINS,)
+
+    def test_entry_points_registry_complete(self):
+        assert set(model.ENTRY_POINTS) == {
+            "payload_small",
+            "payload_medium",
+            "payload_large",
+            "trace_histogram",
+        }
+        for name, (fn, args) in model.ENTRY_POINTS.items():
+            assert callable(fn), name
+            assert len(args) >= 1, name

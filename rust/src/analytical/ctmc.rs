@@ -1,0 +1,249 @@
+//! Sparse continuous-time Markov chain (CTMC) solvers.
+//!
+//! The analytical performance models that preceded SimFaaS (Mahmoudi &
+//! Khazaei 2020a/b) are CTMCs; this module provides the substrate they run
+//! on: a sparse generator matrix, a steady-state solver (Gauss–Seidel on the
+//! balance equations with normalization), and a transient solver
+//! (uniformization / Jensen's method).
+
+/// Sparse CTMC over states `0..n`.
+///
+/// Transitions are stored per source state as `(dest, rate)` lists. Diagonal
+/// entries are implicit (negative row sums).
+#[derive(Debug, Clone)]
+pub struct Ctmc {
+    /// Outgoing transitions per state.
+    out: Vec<Vec<(usize, f64)>>,
+}
+
+impl Ctmc {
+    pub fn new(n: usize) -> Self {
+        Ctmc { out: vec![Vec::new(); n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.out.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.out.is_empty()
+    }
+
+    /// Add a transition `from -> to` with the given rate (accumulates if the
+    /// pair already exists).
+    pub fn add(&mut self, from: usize, to: usize, rate: f64) {
+        assert!(rate >= 0.0, "negative rate");
+        assert!(from < self.len() && to < self.len());
+        if rate == 0.0 || from == to {
+            return;
+        }
+        if let Some(e) = self.out[from].iter_mut().find(|(d, _)| *d == to) {
+            e.1 += rate;
+        } else {
+            self.out[from].push((to, rate));
+        }
+    }
+
+    /// Total exit rate of a state.
+    pub fn exit_rate(&self, s: usize) -> f64 {
+        self.out[s].iter().map(|(_, r)| r).sum()
+    }
+
+    pub fn transitions(&self, s: usize) -> &[(usize, f64)] {
+        &self.out[s]
+    }
+
+    /// Steady-state distribution via Gauss–Seidel sweeps over the global
+    /// balance equations `pi Q = 0`, `sum pi = 1`.
+    ///
+    /// Converges for the irreducible finite chains the serverless models
+    /// produce. `tol` bounds the L1 change per sweep.
+    pub fn steady_state(&self, tol: f64, max_sweeps: usize) -> Vec<f64> {
+        let n = self.len();
+        assert!(n > 0);
+        // Incoming lists for Gauss-Seidel: pi[s] = (sum_in pi[j] q_ji) / exit(s)
+        let mut incoming: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+        for (from, outs) in self.out.iter().enumerate() {
+            for &(to, rate) in outs {
+                incoming[to].push((from, rate));
+            }
+        }
+        let exit: Vec<f64> = (0..n).map(|s| self.exit_rate(s)).collect();
+        let mut pi = vec![1.0 / n as f64; n];
+        for _sweep in 0..max_sweeps {
+            let mut delta = 0.0;
+            for s in 0..n {
+                if exit[s] <= 0.0 {
+                    continue; // absorbing state keeps its mass via normalization
+                }
+                let inflow: f64 = incoming[s].iter().map(|&(j, r)| pi[j] * r).sum();
+                let new = inflow / exit[s];
+                delta += (new - pi[s]).abs();
+                pi[s] = new;
+            }
+            // Normalize.
+            let total: f64 = pi.iter().sum();
+            if total > 0.0 {
+                for p in pi.iter_mut() {
+                    *p /= total;
+                }
+            }
+            if delta < tol {
+                break;
+            }
+        }
+        pi
+    }
+
+    /// Transient distribution at time `t` from `initial`, via uniformization:
+    /// `pi(t) = sum_k PoissonPMF(k; q t) * initial P^k` where
+    /// `P = I + Q/q` and `q >= max exit rate`.
+    pub fn transient(&self, initial: &[f64], t: f64) -> Vec<f64> {
+        let n = self.len();
+        assert_eq!(initial.len(), n);
+        if t <= 0.0 {
+            return initial.to_vec();
+        }
+        let q = (0..n)
+            .map(|s| self.exit_rate(s))
+            .fold(0.0f64, f64::max)
+            .max(1e-12)
+            * 1.02; // slack keeps P strictly substochastic off-diagonal
+        let qt = q * t;
+        // Truncation point: mean + 8 sqrt(mean) + 10 covers > 1-1e-12 mass.
+        let kmax = (qt + 8.0 * qt.sqrt() + 10.0).ceil() as usize;
+        let mut v = initial.to_vec(); // initial P^k
+        let mut acc = vec![0.0; n];
+        // Poisson weights computed iteratively in log space to avoid
+        // overflow for large qt.
+        let mut log_w = -qt; // log PMF(0)
+        let mut added_mass = 0.0;
+        for k in 0..=kmax {
+            let w = log_w.exp();
+            if w > 0.0 {
+                for (a, &x) in acc.iter_mut().zip(v.iter()) {
+                    *a += w * x;
+                }
+                added_mass += w;
+            }
+            if added_mass > 1.0 - 1e-12 {
+                break;
+            }
+            // v <- v P  (P = I + Q/q)
+            let mut next = v.clone();
+            for (from, outs) in self.out.iter().enumerate() {
+                let exit = self.exit_rate(from);
+                // diagonal of P: 1 - exit/q
+                next[from] -= v[from] * (exit / q);
+                for &(to, rate) in outs {
+                    next[to] += v[from] * rate / q;
+                }
+            }
+            v = next;
+            log_w += (qt).ln() - ((k + 1) as f64).ln();
+        }
+        // Renormalize the truncated tail.
+        let total: f64 = acc.iter().sum();
+        if total > 0.0 {
+            for a in acc.iter_mut() {
+                *a /= total;
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// M/M/1 with arrival l, service m: pi_k = (1-rho) rho^k.
+    fn mm1(l: f64, m: f64, cap: usize) -> Ctmc {
+        let mut c = Ctmc::new(cap + 1);
+        for k in 0..cap {
+            c.add(k, k + 1, l);
+            c.add(k + 1, k, m);
+        }
+        c
+    }
+
+    #[test]
+    fn mm1_steady_state_geometric() {
+        let c = mm1(0.5, 1.0, 60);
+        let pi = c.steady_state(1e-14, 20_000);
+        let rho: f64 = 0.5;
+        for k in 0..10 {
+            let expect = (1.0 - rho) * rho.powi(k as i32);
+            assert!(
+                (pi[k] - expect).abs() < 1e-8,
+                "pi[{k}]={} expect={expect}",
+                pi[k]
+            );
+        }
+    }
+
+    #[test]
+    fn mmck_erlang_b() {
+        // M/M/c/c loss system: blocking probability = Erlang B.
+        let l = 3.0;
+        let m = 1.0;
+        let c_servers = 5usize;
+        let mut c = Ctmc::new(c_servers + 1);
+        for k in 0..c_servers {
+            c.add(k, k + 1, l);
+            c.add(k + 1, k, (k + 1) as f64 * m);
+        }
+        let pi = c.steady_state(1e-14, 20_000);
+        // Erlang B recursive: B(0)=1; B(k) = a B(k-1) / (k + a B(k-1))
+        let a = l / m;
+        let mut b = 1.0;
+        for k in 1..=c_servers {
+            b = a * b / (k as f64 + a * b);
+        }
+        assert!((pi[c_servers] - b).abs() < 1e-9, "pi_c={} erlangB={b}", pi[c_servers]);
+    }
+
+    #[test]
+    fn transient_converges_to_steady_state() {
+        let c = mm1(0.5, 1.0, 40);
+        let mut init = vec![0.0; 41];
+        init[0] = 1.0;
+        let pt = c.transient(&init, 200.0);
+        let pi = c.steady_state(1e-14, 20_000);
+        let l1: f64 = pt.iter().zip(&pi).map(|(a, b)| (a - b).abs()).sum();
+        assert!(l1 < 1e-6, "l1={l1}");
+    }
+
+    #[test]
+    fn transient_short_horizon_keeps_mass_near_start() {
+        let c = mm1(0.1, 1.0, 10);
+        let mut init = vec![0.0; 11];
+        init[0] = 1.0;
+        let pt = c.transient(&init, 0.01);
+        assert!(pt[0] > 0.99);
+        let sum: f64 = pt.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transient_two_state_closed_form() {
+        // 0 -> 1 rate a, 1 -> 0 rate b. P(in 1 at t | start 0)
+        // = a/(a+b) (1 - exp(-(a+b) t)).
+        let (a, b) = (2.0, 3.0);
+        let mut c = Ctmc::new(2);
+        c.add(0, 1, a);
+        c.add(1, 0, b);
+        let pt = c.transient(&[1.0, 0.0], 0.3);
+        let expect = a / (a + b) * (1.0 - (-(a + b) * 0.3f64).exp());
+        assert!((pt[1] - expect).abs() < 1e-9, "pt={} expect={expect}", pt[1]);
+    }
+
+    #[test]
+    fn add_accumulates_parallel_edges() {
+        let mut c = Ctmc::new(2);
+        c.add(0, 1, 1.0);
+        c.add(0, 1, 2.0);
+        assert_eq!(c.transitions(0), &[(1, 3.0)]);
+        assert_eq!(c.exit_rate(0), 3.0);
+    }
+}

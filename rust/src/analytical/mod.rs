@@ -1,0 +1,21 @@
+//! Markovian analytical performance models for scale-per-request serverless
+//! platforms — the baseline SimFaaS supersedes (Mahmoudi & Khazaei 2020a/b)
+//! and the cross-validation oracle for the simulator:
+//!
+//! * [`ctmc`] — sparse CTMC steady-state (Gauss–Seidel) and transient
+//!   (uniformization) solvers.
+//! * [`steady_state`] — the `(busy, idle)` birth–death model with
+//!   exponential-expiration approximation.
+//! * [`transient`] — time-bounded metrics from a custom initial state.
+//! * [`compare`] — side-by-side model-vs-simulator reports (the
+//!   model-validation workflow the paper describes in §3).
+
+pub mod compare;
+pub mod ctmc;
+pub mod steady_state;
+pub mod transient;
+
+pub use compare::{compare_steady_state, compare_steady_state_markovian, ComparisonReport};
+pub use ctmc::Ctmc;
+pub use steady_state::{SteadyStateMetrics, SteadyStateModel};
+pub use transient::{TransientMetrics, TransientModel};

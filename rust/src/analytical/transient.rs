@@ -1,0 +1,137 @@
+//! Markovian transient model (Mahmoudi & Khazaei, "Temporal Performance
+//! Modelling of Serverless Computing Platforms", WOSC 2020b): the
+//! uniformization-based transient solution of the steady-state CTMC,
+//! yielding time-bounded metrics from a custom initial state — the
+//! analytical counterpart of `sim::ServerlessTemporalSimulator`.
+
+use super::ctmc::Ctmc;
+use super::steady_state::SteadyStateModel;
+
+/// Transient metrics at a single time point.
+#[derive(Debug, Clone, Copy)]
+pub struct TransientMetrics {
+    pub t: f64,
+    pub avg_server_count: f64,
+    pub avg_running_count: f64,
+    pub avg_idle_count: f64,
+    /// Probability an arrival at `t` would be a cold start (PASTA).
+    pub cold_start_prob: f64,
+}
+
+/// Transient solver wrapping a [`SteadyStateModel`]'s CTMC.
+pub struct TransientModel {
+    pub model: SteadyStateModel,
+    ctmc: Ctmc,
+}
+
+impl TransientModel {
+    pub fn new(model: SteadyStateModel) -> Self {
+        let ctmc = model.build_ctmc();
+        TransientModel { model, ctmc }
+    }
+
+    /// Initial distribution concentrated at `(busy, idle)`.
+    pub fn point_initial(&self, busy: usize, idle: usize) -> Vec<f64> {
+        let ni = self.model.max_idle + 1;
+        let nb = self.model.max_busy + 1;
+        assert!(busy < nb && idle < ni, "initial state outside truncation");
+        let mut v = vec![0.0; nb * ni];
+        v[busy * ni + idle] = 1.0;
+        v
+    }
+
+    /// Metrics of a distribution over states.
+    fn metrics_of(&self, t: f64, pi: &[f64]) -> TransientMetrics {
+        let ni = self.model.max_idle + 1;
+        let cap = self.model.max_concurrency.min(self.model.max_busy);
+        let mut busy = 0.0;
+        let mut idle = 0.0;
+        let mut p_cold = 0.0;
+        let mut p_reject = 0.0;
+        for (s, &p) in pi.iter().enumerate() {
+            let b = s / ni;
+            let i = s % ni;
+            busy += p * b as f64;
+            idle += p * i as f64;
+            if i == 0 {
+                if b < cap {
+                    p_cold += p;
+                } else {
+                    p_reject += p;
+                }
+            }
+        }
+        TransientMetrics {
+            t,
+            avg_server_count: busy + idle,
+            avg_running_count: busy,
+            avg_idle_count: idle,
+            cold_start_prob: p_cold / (1.0 - p_reject).max(1e-300),
+        }
+    }
+
+    /// Evaluate metrics at each requested time (each solved from t=0; the
+    /// chain is re-propagated incrementally between sorted time points).
+    pub fn evaluate(&self, initial: &[f64], times: &[f64]) -> Vec<TransientMetrics> {
+        let mut out = Vec::with_capacity(times.len());
+        let mut sorted: Vec<f64> = times.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut current = initial.to_vec();
+        let mut t_now = 0.0;
+        for &t in &sorted {
+            let dt = (t - t_now).max(0.0);
+            if dt > 0.0 {
+                current = self.ctmc.transient(&current, dt);
+                t_now = t;
+            }
+            out.push(self.metrics_of(t, &current));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transient_approaches_steady_state() {
+        let model = SteadyStateModel::new(0.9, 1.991, 120.0);
+        let steady = model.solve();
+        let tm = TransientModel::new(model);
+        let init = tm.point_initial(0, 0);
+        let ms = tm.evaluate(&init, &[2000.0]);
+        let m = ms[0];
+        assert!(
+            (m.avg_server_count - steady.avg_server_count).abs()
+                / steady.avg_server_count
+                < 0.02,
+            "transient {} vs steady {}",
+            m.avg_server_count,
+            steady.avg_server_count
+        );
+    }
+
+    #[test]
+    fn cold_pool_warms_up_over_time() {
+        let model = SteadyStateModel::new(0.9, 1.991, 600.0);
+        let tm = TransientModel::new(model);
+        let init = tm.point_initial(0, 0);
+        let ms = tm.evaluate(&init, &[1.0, 30.0, 300.0, 3000.0]);
+        // Server count grows monotonically toward steady state from empty.
+        assert!(ms[0].avg_server_count < ms[1].avg_server_count);
+        assert!(ms[1].avg_server_count < ms[2].avg_server_count);
+        // Cold start probability decays as the pool warms.
+        assert!(ms[3].cold_start_prob < ms[0].cold_start_prob);
+    }
+
+    #[test]
+    fn warm_initial_state_starts_high() {
+        let model = SteadyStateModel::new(0.9, 1.991, 600.0);
+        let tm = TransientModel::new(model);
+        let init = tm.point_initial(0, 10);
+        let ms = tm.evaluate(&init, &[0.5]);
+        assert!(ms[0].avg_server_count > 9.0);
+        assert!(ms[0].cold_start_prob < 0.05);
+    }
+}

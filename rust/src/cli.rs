@@ -1,0 +1,163 @@
+//! Minimal CLI argument parsing (no external crates in this environment).
+//!
+//! Supports `--flag value`, `--flag=value` and boolean `--flag` forms, plus
+//! a positional subcommand. Unknown flags are an error (catches typos in
+//! experiment scripts).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand + flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags that were consumed by a getter (for unknown-flag detection).
+    seen: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, val) = if let Some((k, v)) = stripped.split_once('=') {
+                    (k.to_string(), v.to_string())
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    (stripped.to_string(), it.next().unwrap())
+                } else {
+                    (stripped.to_string(), "true".to_string())
+                };
+                if args.flags.insert(key.clone(), val).is_some() {
+                    bail!("duplicate flag --{key}");
+                }
+            } else if args.command.is_none() {
+                args.command = Some(a);
+            } else {
+                bail!("unexpected positional argument {a:?}");
+            }
+        }
+        Ok(args)
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().insert(key.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.get_u64(key, default as u64)? as usize)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Comma-separated f64 list.
+    pub fn get_f64_list(&self, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<f64>()
+                        .with_context(|| format!("--{key}: bad number {s:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Error on any flag never queried by the command.
+    pub fn check_unknown(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<&String> =
+            self.flags.keys().filter(|k| !seen.contains(*k)).collect();
+        if !unknown.is_empty() {
+            bail!("unknown flag(s): {unknown:?}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = parse("steady --rate 0.9 --json --horizon=5000");
+        assert_eq!(a.command.as_deref(), Some("steady"));
+        assert_eq!(a.get_f64("rate", 1.0).unwrap(), 0.9);
+        assert_eq!(a.get_f64("horizon", 0.0).unwrap(), 5000.0);
+        assert!(a.get_bool("json"));
+        a.check_unknown().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("steady");
+        assert_eq!(a.get_f64("rate", 0.9).unwrap(), 0.9);
+        assert_eq!(a.get_str("payload", "none"), "none");
+    }
+
+    #[test]
+    fn lists_parse() {
+        let b = parse("sweep --rates 0.1,0.5,1.0");
+        assert_eq!(b.get_f64_list("rates", &[]).unwrap(), vec![0.1, 0.5, 1.0]);
+        // A stray second positional is an error.
+        assert!(Args::parse(
+            ["sweep", "--rates", "0.1,", "1.0"].map(String::from)
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = parse("steady --ratee 0.9");
+        let _ = a.get_f64("rate", 0.9);
+        assert!(a.check_unknown().is_err());
+    }
+
+    #[test]
+    fn duplicate_flag_is_error() {
+        assert!(Args::parse(["--x", "1", "--x", "2"].map(String::from)).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("steady --rate abc");
+        assert!(a.get_f64("rate", 1.0).is_err());
+    }
+}

@@ -1,0 +1,162 @@
+//! Cost engine (paper §4.4 "Cost Calculation").
+//!
+//! All charges incurred by serverless functions are either **per-request**
+//! charges or **runtime** charges billed on execution time and memory
+//! (GB-s). Developer cost needs the request rate, cold-start probability
+//! and average running-server count that the simulator predicts; the
+//! provider's infrastructure cost is linearly proportional to the *total*
+//! server count (busy + idle), which the simulator also reports.
+
+pub mod pricing;
+
+pub use pricing::{PricingTable, Provider};
+
+use crate::sim::SimResults;
+
+/// A function's billing-relevant configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct FunctionConfig {
+    /// Allocated memory in MB (AWS Lambda bills GB-s of allocated memory).
+    pub memory_mb: f64,
+    /// Average per-request charge from external APIs/services (USD), on top
+    /// of the platform's own per-request fee.
+    pub external_per_request: f64,
+}
+
+impl FunctionConfig {
+    pub fn new(memory_mb: f64) -> Self {
+        FunctionConfig { memory_mb, external_per_request: 0.0 }
+    }
+}
+
+/// Cost estimate over a time window.
+#[derive(Debug, Clone, Copy)]
+pub struct CostEstimate {
+    /// Window length in seconds.
+    pub window: f64,
+    /// Requests billed.
+    pub requests: f64,
+    /// Billed GB-seconds.
+    pub gb_seconds: f64,
+    /// Developer: per-request platform + external charges (USD).
+    pub request_charges: f64,
+    /// Developer: runtime (GB-s) charges (USD).
+    pub runtime_charges: f64,
+    /// Provider: infrastructure cost ∝ total server count (USD,
+    /// at `PricingTable::infra_cost_per_instance_hour`).
+    pub provider_infra_cost: f64,
+}
+
+impl CostEstimate {
+    pub fn developer_total(&self) -> f64 {
+        self.request_charges + self.runtime_charges
+    }
+
+    /// Provider margin proxy: developer revenue minus infra cost.
+    pub fn provider_margin(&self) -> f64 {
+        self.runtime_charges + self.request_charges - self.provider_infra_cost
+    }
+}
+
+/// Estimate costs from simulation results.
+///
+/// Runtime charges derive from `billed_instance_seconds` (busy time ×
+/// memory); provider infrastructure cost derives from the average *total*
+/// server count over the window.
+pub fn estimate(
+    results: &SimResults,
+    cfg: &FunctionConfig,
+    pricing: &PricingTable,
+) -> CostEstimate {
+    let window = results.measured_time;
+    let served = (results.cold_requests + results.warm_requests) as f64;
+    let gb = cfg.memory_mb / 1024.0;
+    let gb_seconds = results.billed_instance_seconds * gb;
+    let request_charges = served * (pricing.per_request + cfg.external_per_request);
+    let runtime_charges = gb_seconds * pricing.per_gb_second;
+    let instance_hours = results.avg_server_count * window / 3600.0;
+    // Provider provisions a full instance regardless of busy/idle.
+    let provider_infra_cost = instance_hours * pricing.infra_cost_per_instance_hour * gb;
+    CostEstimate {
+        window,
+        requests: served,
+        gb_seconds,
+        request_charges,
+        runtime_charges,
+        provider_infra_cost,
+    }
+}
+
+/// Scale an estimate to a different window (e.g. report per-month).
+pub fn scale_to(est: &CostEstimate, window: f64) -> CostEstimate {
+    let k = window / est.window;
+    CostEstimate {
+        window,
+        requests: est.requests * k,
+        gb_seconds: est.gb_seconds * k,
+        request_charges: est.request_charges * k,
+        runtime_charges: est.runtime_charges * k,
+        provider_infra_cost: est.provider_infra_cost * k,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{ServerlessSimulator, SimConfig};
+
+    #[test]
+    fn cost_estimate_matches_hand_calculation() {
+        let mut cfg = SimConfig::table1();
+        cfg.horizon = 50_000.0;
+        let results = ServerlessSimulator::new(cfg).run();
+        let f = FunctionConfig::new(128.0);
+        let pricing = PricingTable::aws_lambda();
+        let est = estimate(&results, &f, &pricing);
+
+        let served = (results.cold_requests + results.warm_requests) as f64;
+        assert!((est.requests - served).abs() < 1e-9);
+        let expect_gbs = results.billed_instance_seconds * 128.0 / 1024.0;
+        assert!((est.gb_seconds - expect_gbs).abs() < 1e-9);
+        assert!(est.runtime_charges > 0.0);
+        assert!(est.request_charges > 0.0);
+        assert!(est.provider_infra_cost > 0.0);
+        // Billed busy time ~ lambda * E[S] * window * gb
+        let rough = 0.9 * 1.9915 * results.measured_time * (128.0 / 1024.0);
+        assert!((est.gb_seconds - rough).abs() / rough < 0.05);
+    }
+
+    #[test]
+    fn monthly_scaling_linear() {
+        let mut cfg = SimConfig::table1();
+        cfg.horizon = 20_000.0;
+        let results = ServerlessSimulator::new(cfg).run();
+        let est = estimate(&results, &FunctionConfig::new(256.0), &PricingTable::aws_lambda());
+        let month = scale_to(&est, 30.0 * 86_400.0);
+        let k = month.window / est.window;
+        assert!((month.runtime_charges - est.runtime_charges * k).abs() < 1e-9);
+        assert!((month.developer_total() - est.developer_total() * k).abs() < 1e-9);
+    }
+
+    #[test]
+    fn external_charges_add_per_request() {
+        let mut cfg = SimConfig::table1();
+        cfg.horizon = 20_000.0;
+        let results = ServerlessSimulator::new(cfg).run();
+        let mut f = FunctionConfig::new(128.0);
+        let base = estimate(&results, &f, &PricingTable::aws_lambda());
+        f.external_per_request = 1e-4;
+        let with_ext = estimate(&results, &f, &PricingTable::aws_lambda());
+        let delta = with_ext.request_charges - base.request_charges;
+        assert!((delta - with_ext.requests * 1e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn providers_have_distinct_tables() {
+        let aws = PricingTable::aws_lambda();
+        let gcf = PricingTable::google_cloud_functions();
+        let az = PricingTable::azure_functions();
+        assert!(aws.per_gb_second > 0.0 && gcf.per_gb_second > 0.0 && az.per_gb_second > 0.0);
+        assert!(aws.per_request != gcf.per_request || aws.per_gb_second != gcf.per_gb_second);
+    }
+}

@@ -1,0 +1,93 @@
+//! Virtual (scaled) clock for the platform emulator.
+//!
+//! The paper's validation experiments span 28-hour windows; the emulator
+//! compresses them by running on a virtual clock that advances `scale`
+//! seconds per wall-clock second. All platform timings (arrival schedules,
+//! provisioning delays, expiration thresholds, IO sleeps) are expressed in
+//! *virtual* seconds and converted at the sleep sites; compute payload
+//! executions take the wall time they take, and their duration is measured
+//! and reported in virtual seconds — so PJRT execution time becomes a
+//! realistic, noisy service-time component, exactly the role real Lambda
+//! function bodies play in the paper's testbed.
+
+use std::time::{Duration, Instant};
+
+/// A monotone scaled clock. Cheap to clone (copies the epoch).
+#[derive(Debug, Clone, Copy)]
+pub struct VirtualClock {
+    epoch: Instant,
+    scale: f64,
+}
+
+impl VirtualClock {
+    /// `scale` = virtual seconds per wall second (e.g. 1000.0).
+    pub fn new(scale: f64) -> Self {
+        assert!(scale > 0.0);
+        VirtualClock { epoch: Instant::now(), scale }
+    }
+
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Current virtual time (seconds since construction).
+    pub fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * self.scale
+    }
+
+    /// Sleep until virtual time `t` (no-op if already past).
+    pub fn sleep_until(&self, t: f64) {
+        let now = self.now();
+        if t > now {
+            std::thread::sleep(Duration::from_secs_f64((t - now) / self.scale));
+        }
+    }
+
+    /// Sleep for `dt` virtual seconds.
+    pub fn sleep(&self, dt: f64) {
+        if dt > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(dt / self.scale));
+        }
+    }
+
+    /// Convert a virtual duration to wall-clock.
+    pub fn to_wall(&self, dt_virtual: f64) -> Duration {
+        Duration::from_secs_f64((dt_virtual / self.scale).max(0.0))
+    }
+
+    /// Convert a wall duration to virtual seconds.
+    pub fn to_virtual(&self, wall: Duration) -> f64 {
+        wall.as_secs_f64() * self.scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances_scaled() {
+        let c = VirtualClock::new(1000.0);
+        let t0 = c.now();
+        std::thread::sleep(Duration::from_millis(20));
+        let t1 = c.now();
+        // 20 ms wall = 20 virtual seconds (generous jitter bounds for CI).
+        assert!(t1 - t0 >= 15.0 && t1 - t0 < 200.0, "dt={}", t1 - t0);
+    }
+
+    #[test]
+    fn sleep_until_past_is_noop() {
+        let c = VirtualClock::new(100.0);
+        let before = Instant::now();
+        c.sleep_until(0.0);
+        assert!(before.elapsed() < Duration::from_millis(5));
+    }
+
+    #[test]
+    fn conversions_roundtrip() {
+        let c = VirtualClock::new(250.0);
+        let wall = c.to_wall(500.0);
+        assert!((wall.as_secs_f64() - 2.0).abs() < 1e-9);
+        assert!((c.to_virtual(wall) - 500.0).abs() < 1e-9);
+    }
+}

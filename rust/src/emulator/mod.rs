@@ -1,0 +1,23 @@
+//! Platform emulator: the concurrent, virtual-clock stand-in for the
+//! paper's AWS Lambda testbed. See `platform` for the architecture and
+//! DESIGN.md §3 for why this substitution preserves the validation
+//! methodology.
+
+pub mod clock;
+pub mod platform;
+pub mod probe;
+
+pub use clock::VirtualClock;
+pub use platform::{EmulationResult, EmulatorConfig, EmuMetrics, InstanceRecord, Platform};
+pub use probe::EmulatorProbe;
+
+/// Serializes emulator-driven tests: the emulator measures real thread
+/// timing, and two emulations sharing this single-core testbed distort
+/// each other. Test-only.
+#[cfg(test)]
+pub(crate) static EMU_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[cfg(test)]
+pub(crate) fn emu_test_guard() -> std::sync::MutexGuard<'static, ()> {
+    EMU_TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}

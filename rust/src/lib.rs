@@ -1,0 +1,48 @@
+//! # SimFaaS — a performance simulator for serverless computing platforms
+//!
+//! Rust + JAX + Pallas reproduction of *SimFaaS: A Performance Simulator for
+//! Serverless Computing Platforms* (Mahmoudi & Khazaei, 2021).
+//!
+//! The crate is organized as the paper's system plus every substrate it
+//! depends on:
+//!
+//! * [`sim`] — the discrete-event simulation core (`ServerlessSimulator`,
+//!   `ServerlessTemporalSimulator`, `ParServerlessSimulator`, the
+//!   `SimProcess` family, metrics and PDF/CDF tools).
+//! * [`analytical`] — the Markovian performance models (Mahmoudi & Khazaei
+//!   2020a/b) that SimFaaS supersedes; used as the cross-validation
+//!   baseline.
+//! * [`emulator`] — a tokio-based scale-per-request platform emulator with a
+//!   real concurrent request path (the stand-in for the paper's AWS Lambda
+//!   testbed); function bodies execute AOT-compiled JAX/Pallas payloads via
+//!   PJRT.
+//! * [`runtime`] — the PJRT bridge: loads `artifacts/*.hlo.txt` produced by
+//!   `python/compile/aot.py` and executes them from Rust.
+//! * [`workload`] — open-loop workload generators (Poisson, deterministic,
+//!   batch, MMPP, Azure-style diurnal traces).
+//! * [`trace`] — request/instance trace records, CSV I/O, and parameter
+//!   identification (expiration-threshold probing, service-time fitting).
+//! * [`cost`] — provider pricing tables and developer/provider cost
+//!   estimation.
+//! * [`whatif`] — parameter sweeps and configuration optimization.
+//! * [`output`] — ASCII tables/plots and CSV/JSON writers used by the CLI,
+//!   examples and benches.
+//!
+//! See `DESIGN.md` for the per-experiment index mapping every table and
+//! figure of the paper to the modules and benches that regenerate it.
+
+pub mod analytical;
+pub mod cli;
+pub mod cost;
+pub mod emulator;
+pub mod figures;
+pub mod output;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod whatif;
+pub mod workload;
+
+pub use sim::{
+    ServerlessSimulator, ServerlessTemporalSimulator, SimConfig, SimProcess, SimResults,
+};

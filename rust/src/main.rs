@@ -1,0 +1,536 @@
+//! `simfaas` — the SimFaaS command-line interface.
+//!
+//! Subcommands (run `simfaas help` for flags):
+//!
+//! * `steady`    — steady-state simulation (paper Table 1)
+//! * `temporal`  — transient analysis with replications + CI (Fig. 4)
+//! * `sweep`     — what-if sweeps over rate × expiration threshold (Fig. 5)
+//! * `emulate`   — run the platform emulator on a Poisson workload
+//! * `validate`  — simulator-vs-emulator validation (Figs. 6–8)
+//! * `compare`   — simulator vs the Markovian analytical baseline
+//! * `cost`      — developer/provider cost estimation (paper §4.4)
+//! * `identify`  — parameter identification from a trace CSV (paper §5.2)
+//! * `probe`     — expiration-threshold probing against the emulator
+//! * `figures`   — regenerate every paper table/figure (ASCII + CSV)
+
+use anyhow::{bail, Context, Result};
+use simfaas::cli::Args;
+use simfaas::cost::{estimate, scale_to, FunctionConfig, PricingTable, Provider};
+use simfaas::emulator::{EmulatorConfig, Platform};
+use simfaas::figures;
+use simfaas::output::json::results_to_json;
+use simfaas::output::{ascii_histogram, ascii_lines, Series, Table};
+use simfaas::sim::{
+    InitialState, ServerlessSimulator, ServerlessTemporalSimulator, SimConfig,
+};
+use simfaas::workload;
+use std::sync::Arc;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_deref() {
+        Some("steady") => cmd_steady(&args),
+        Some("temporal") => cmd_temporal(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("emulate") => cmd_emulate(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("cost") => cmd_cost(&args),
+        Some("identify") => cmd_identify(&args),
+        Some("probe") => cmd_probe(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command {other:?}; see `simfaas help`"),
+    }?;
+    args.check_unknown()
+}
+
+const HELP: &str = r#"simfaas — performance simulator for serverless platforms
+
+usage: simfaas <command> [flags]
+
+commands:
+  steady     steady-state simulation (Table 1)
+             --rate --warm --cold --threshold --max-concurrency
+             --horizon --skip --seed --json
+  temporal   transient analysis with CI (Fig. 4)
+             --replications --horizon --interval --warm-pool --seed
+  sweep      what-if sweep (Fig. 5)
+             --rates a,b,c --thresholds x,y --horizon --seed
+  emulate    run the platform emulator
+             --rate --horizon --scale --payload none|small|medium|large
+             --threshold --csv out.csv
+  validate   simulator vs emulator (Figs. 6-8)
+             --rates a,b,c --emu-horizon --scale --sim-horizon --seed
+  compare    simulator vs Markovian analytical model
+             --rate --service --threshold --horizon --markovian-expiration
+  cost       cost estimation  --rate --memory --provider --horizon --month
+  identify   parameters from a trace CSV  --trace file.csv
+  probe      expiration-threshold probe against the emulator
+             --threshold --scale --step --max-gap
+  figures    regenerate paper tables/figures
+             --all | --fig 1|3|4|5|6 (6 covers 6-8) [--out-dir results/]
+             [--quick]
+"#;
+
+fn sim_cfg_from_args(args: &Args) -> Result<SimConfig> {
+    use simfaas::sim::ExpProcess;
+    let mut cfg = SimConfig::table1();
+    cfg.arrival = Arc::new(ExpProcess::with_rate(args.get_f64("rate", 0.9)?));
+    cfg.warm_service = Arc::new(ExpProcess::with_mean(args.get_f64("warm", figures::WARM_MEAN)?));
+    cfg.cold_service = Arc::new(ExpProcess::with_mean(args.get_f64("cold", figures::COLD_MEAN)?));
+    cfg.expiration_threshold = args.get_f64("threshold", 600.0)?;
+    cfg.max_concurrency = args.get_usize("max-concurrency", 1000)?;
+    cfg.horizon = args.get_f64("horizon", 1e6)?;
+    cfg.skip_initial = args.get_f64("skip", 100.0)?;
+    cfg.seed = args.get_u64("seed", 0x5EED)?;
+    Ok(cfg)
+}
+
+fn cmd_steady(args: &Args) -> Result<()> {
+    let cfg = sim_cfg_from_args(args)?;
+    let results = ServerlessSimulator::new(cfg).run();
+    if args.get_bool("json") {
+        println!("{}", results_to_json(&results).to_string());
+    } else {
+        print!("{results}");
+    }
+    Ok(())
+}
+
+fn cmd_temporal(args: &Args) -> Result<()> {
+    let mut cfg = sim_cfg_from_args(args)?;
+    cfg.horizon = args.get_f64("horizon", 10_000.0)?;
+    cfg.sample_interval = args.get_f64("interval", cfg.horizon / 100.0)?;
+    let reps = args.get_usize("replications", 10)?;
+    let warm_pool = args.get_usize("warm-pool", 0)?;
+    let init = if warm_pool > 0 {
+        InitialState::warm_pool(warm_pool)
+    } else {
+        InitialState::empty()
+    };
+    let res = ServerlessTemporalSimulator::new(cfg, init, reps).run();
+    let band = res.average_count_band();
+    let series = vec![
+        Series::new("mean", band.iter().map(|&(t, m, _)| (t, m)).collect()),
+        Series::new("mean+ci", band.iter().map(|&(t, m, h)| (t, m + h)).collect()),
+        Series::new("mean-ci", band.iter().map(|&(t, m, h)| (t, m - h)).collect()),
+    ];
+    println!("Average instance count over time ({reps} runs, 95% CI):");
+    print!("{}", ascii_lines(&series, 72, 18));
+    let (m, hw) = res.avg_server_count_ci;
+    println!("final avg server count: {m:.4} ± {hw:.4} (95% CI)");
+    let (pc, pch) = res.cold_start_prob_ci;
+    println!("cold start probability: {:.4}% ± {:.4}%", pc * 100.0, pch * 100.0);
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let rates = args.get_f64_list("rates", &[0.1, 0.3, 0.5, 0.9, 1.5, 2.5])?;
+    let thresholds = args.get_f64_list("thresholds", &[120.0, 300.0, 600.0, 1200.0])?;
+    let horizon = args.get_f64("horizon", 200_000.0)?;
+    let seed = args.get_u64("seed", 0x5EED)?;
+    let out = figures::fig5_sweep(&rates, &thresholds, horizon, seed);
+    let mut table = Table::new(
+        std::iter::once("rate".to_string())
+            .chain(out.iter().map(|(th, _)| format!("p_cold@{th}s")))
+            .collect::<Vec<_>>(),
+    );
+    for (i, &rate) in rates.iter().enumerate() {
+        let mut row = vec![rate];
+        for (_, series) in &out {
+            row.push(series[i].1 * 100.0);
+        }
+        table.row_f64(&row, 4);
+    }
+    println!("Cold start probability (%) vs arrival rate x expiration threshold:");
+    print!("{table}");
+    let series: Vec<Series> = out
+        .iter()
+        .map(|(th, s)| Series::new(format!("{th} s"), s.clone()))
+        .collect();
+    print!("{}", ascii_lines(&series, 72, 18));
+    Ok(())
+}
+
+fn emulator_cfg_from_args(
+    args: &Args,
+) -> Result<(EmulatorConfig, Option<Arc<simfaas::runtime::ComputePool>>)> {
+    use simfaas::runtime::{ComputePool, PayloadKind};
+    use simfaas::sim::ExpProcess;
+    let scale = args.get_f64("scale", 2_000.0)?;
+    let mut cfg = EmulatorConfig::lambda_like(scale);
+    cfg.expiration_threshold = args.get_f64("threshold", 600.0)?;
+    cfg.synthetic_service = Some(Arc::new(ExpProcess::with_mean(
+        args.get_f64("warm", figures::WARM_MEAN)?,
+    )));
+    cfg.provisioning_delay =
+        args.get_f64("provisioning", figures::COLD_MEAN - figures::WARM_MEAN)?;
+    let payload = args.get_str("payload", "none");
+    let pool = match payload.as_str() {
+        "none" => None,
+        name => {
+            let kind = match name {
+                "small" => PayloadKind::Small,
+                "medium" => PayloadKind::Medium,
+                "large" => PayloadKind::Large,
+                other => bail!("unknown payload {other:?}"),
+            };
+            cfg.payload = Some(kind);
+            cfg.payload_reps = args.get_u64("payload-reps", 1)? as u32;
+            cfg.app_init_reps = args.get_u64("app-init-reps", 2)? as u32;
+            let workers = args.get_usize("pool-workers", 4)?;
+            Some(Arc::new(ComputePool::new(
+                simfaas::runtime::default_artifacts_dir(),
+                workers,
+            )?))
+        }
+    };
+    Ok((cfg, pool))
+}
+
+fn cmd_emulate(args: &Args) -> Result<()> {
+    let (cfg, pool) = emulator_cfg_from_args(args)?;
+    let rate = args.get_f64("rate", 0.9)?;
+    let horizon = args.get_f64("horizon", 10_000.0)?;
+    let seed = args.get_u64("seed", 7)?;
+    let skip = args.get_f64("skip", 300.0)?;
+    let mut rng = simfaas::sim::Rng::new(seed);
+    let w = workload::poisson(rate, horizon, &mut rng);
+    println!(
+        "emulating {} requests over {horizon} virtual s (scale {}x)...",
+        w.len(),
+        cfg.time_scale
+    );
+    let platform = Platform::new(cfg, pool);
+    let t0 = std::time::Instant::now();
+    let res = platform.run(&w)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let m = res.metrics(skip);
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["cold start prob".to_string(), format!("{:.4} %", m.cold_start_prob * 100.0)]);
+    t.row(vec!["rejection prob".to_string(), format!("{:.4} %", m.rejection_prob * 100.0)]);
+    t.row(vec!["avg server count".to_string(), format!("{:.4}", m.avg_server_count)]);
+    t.row(vec!["avg running".to_string(), format!("{:.4}", m.avg_running_count)]);
+    t.row(vec!["avg idle".to_string(), format!("{:.4}", m.avg_idle_count)]);
+    t.row(vec!["wasted capacity".to_string(), format!("{:.4} %", m.wasted_capacity * 100.0)]);
+    t.row(vec!["avg warm response".to_string(), format!("{:.4} s", m.avg_warm_response)]);
+    t.row(vec!["avg cold response".to_string(), format!("{:.4} s", m.avg_cold_response)]);
+    t.row(vec!["instances".to_string(), format!("{}", res.instances.len())]);
+    t.row(vec!["wall time".to_string(), format!("{wall:.2} s")]);
+    print!("{t}");
+    if let Some(path) = args.get("csv") {
+        let path = path.to_string();
+        let f = std::fs::File::create(&path).with_context(|| format!("creating {path}"))?;
+        simfaas::trace::write_csv(std::io::BufWriter::new(f), &res.records)?;
+        println!("trace written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let rates = args.get_f64_list("rates", &[0.5, 1.0, 2.0])?;
+    let opts = figures::ValidationOpts {
+        emu_horizon: args.get_f64("emu-horizon", 40_000.0)?,
+        time_scale: args.get_f64("scale", 4_000.0)?,
+        sim_horizon: args.get_f64("sim-horizon", 400_000.0)?,
+        skip: args.get_f64("skip", 600.0)?,
+        seed: args.get_u64("seed", 0xF16)?,
+    };
+    let rows = figures::validation_rows(&rates, &opts);
+    print_validation(&rows);
+    Ok(())
+}
+
+fn print_validation(rows: &[figures::ValidationRow]) {
+    let mut t = Table::new(vec![
+        "rate",
+        "sim p_cold%",
+        "emu p_cold%",
+        "sim servers",
+        "emu servers",
+        "sim waste%",
+        "emu waste%",
+    ]);
+    for r in rows {
+        t.row_f64(
+            &[
+                r.rate,
+                r.sim.cold_start_prob * 100.0,
+                r.emu.cold_start_prob * 100.0,
+                r.sim.avg_server_count,
+                r.emu.avg_server_count,
+                r.sim.wasted_capacity * 100.0,
+                r.emu.wasted_capacity * 100.0,
+            ],
+            3,
+        );
+    }
+    print!("{t}");
+    let (e6, e7, e8) = figures::validation_errors(rows);
+    println!(
+        "Fig6 avg %err (p_cold): {e6:.2}%   Fig7 MAPE (servers): {e7:.2}%   Fig8 MAPE (waste): {e8:.2}%"
+    );
+    println!("(paper: 12.75%, 3.43%, 0.17%)");
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    use simfaas::analytical;
+    let mut cfg = sim_cfg_from_args(args)?;
+    let service = args.get_f64("service", figures::WARM_MEAN)?;
+    cfg.cold_service = Arc::new(simfaas::sim::ExpProcess::with_mean(service));
+    cfg.warm_service = Arc::new(simfaas::sim::ExpProcess::with_mean(service));
+    let report = if args.get_bool("markovian-expiration") {
+        analytical::compare_steady_state_markovian(&cfg, service)
+    } else {
+        analytical::compare_steady_state(&cfg, service)
+    };
+    print!("{}", report.to_table());
+    Ok(())
+}
+
+fn cmd_cost(args: &Args) -> Result<()> {
+    let cfg = sim_cfg_from_args(args)?;
+    let results = ServerlessSimulator::new(cfg).run();
+    let provider = match args.get_str("provider", "aws").as_str() {
+        "aws" => Provider::AwsLambda,
+        "gcf" | "google" => Provider::GoogleCloudFunctions,
+        "azure" => Provider::AzureFunctions,
+        "ibm" => Provider::IbmCloudFunctions,
+        other => bail!("unknown provider {other:?}"),
+    };
+    let f = FunctionConfig::new(args.get_f64("memory", 128.0)?);
+    let est = estimate(&results, &f, &PricingTable::for_provider(provider));
+    let month = scale_to(&est, 30.0 * 86_400.0);
+    let mut t = Table::new(vec!["item", "per window", "per 30 days"]);
+    t.row(vec![
+        "requests".to_string(),
+        format!("{:.0}", est.requests),
+        format!("{:.0}", month.requests),
+    ]);
+    t.row(vec![
+        "GB-seconds".to_string(),
+        format!("{:.1}", est.gb_seconds),
+        format!("{:.1}", month.gb_seconds),
+    ]);
+    t.row(vec![
+        "request charges".to_string(),
+        format!("${:.4}", est.request_charges),
+        format!("${:.2}", month.request_charges),
+    ]);
+    t.row(vec![
+        "runtime charges".to_string(),
+        format!("${:.4}", est.runtime_charges),
+        format!("${:.2}", month.runtime_charges),
+    ]);
+    t.row(vec![
+        "developer total".to_string(),
+        format!("${:.4}", est.developer_total()),
+        format!("${:.2}", month.developer_total()),
+    ]);
+    t.row(vec![
+        "provider infra cost".to_string(),
+        format!("${:.4}", est.provider_infra_cost),
+        format!("${:.2}", month.provider_infra_cost),
+    ]);
+    print!("{t}");
+    println!(
+        "cold start prob {:.4}% | avg servers {:.3} | wasted {:.1}%",
+        results.cold_start_prob * 100.0,
+        results.avg_server_count,
+        results.wasted_capacity * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_identify(args: &Args) -> Result<()> {
+    let path = args.get("trace").context("--trace <file.csv> is required")?.to_string();
+    let f = std::fs::File::open(&path).with_context(|| format!("opening {path}"))?;
+    let records = simfaas::trace::read_csv(std::io::BufReader::new(f))?;
+    let p = simfaas::trace::identify(&records);
+    let pool = simfaas::trace::mean_warm_pool(&records, 600.0, 600.0);
+    let mut t = Table::new(vec!["parameter", "estimate"]);
+    t.row(vec!["arrival rate".to_string(), format!("{:.4} req/s", p.arrival_rate)]);
+    t.row(vec!["warm mean".to_string(), format!("{:.4} s (std {:.4})", p.warm_mean, p.warm_std)]);
+    t.row(vec!["cold mean".to_string(), format!("{:.4} s (std {:.4})", p.cold_mean, p.cold_std)]);
+    t.row(vec!["cold start prob".to_string(), format!("{:.4} %", p.cold_start_prob * 100.0)]);
+    t.row(vec!["rejection prob".to_string(), format!("{:.4} %", p.rejection_prob * 100.0)]);
+    t.row(vec!["warm pool (10 min window)".to_string(), format!("{pool:.3}")]);
+    print!("{t}");
+    Ok(())
+}
+
+fn cmd_probe(args: &Args) -> Result<()> {
+    use simfaas::emulator::EmulatorProbe;
+    use simfaas::trace::probe_expiration_threshold;
+    let mut cfg = EmulatorConfig::lambda_like(args.get_f64("scale", 10_000.0)?);
+    cfg.expiration_threshold = args.get_f64("threshold", 600.0)?;
+    cfg.synthetic_service = Some(Arc::new(simfaas::sim::ConstProcess::new(1.0)));
+    cfg.provisioning_delay = 0.25;
+    cfg.tick = 1.0;
+    let step = args.get_f64("step", 60.0)?;
+    let max_gap = args.get_f64("max-gap", 1_500.0)?;
+    println!(
+        "probing emulator (true threshold {} s) with step {} s...",
+        cfg.expiration_threshold, step
+    );
+    let mut probe = EmulatorProbe::new(cfg);
+    let (lo, hi) = probe_expiration_threshold(&mut probe, step, step, max_gap);
+    println!("expiration threshold bracketed in ({lo:.1} s, {hi:.1} s]");
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let all = args.get_bool("all");
+    let which = args.get_u64("fig", 0)?;
+    let out_dir = args.get_str("out-dir", "results");
+    std::fs::create_dir_all(&out_dir)?;
+    let seed = args.get_u64("seed", 0x5EED)?;
+    let quick = args.get_bool("quick");
+    let horizon = if quick { 100_000.0 } else { 1e6 };
+
+    if all || which == 0 {
+        println!("=== Table 1: steady-state example ===");
+        let r = figures::table1(horizon, seed);
+        print!("{r}");
+        simfaas::output::write_csv_rows(
+            format!("{out_dir}/table1.csv"),
+            &[
+                "cold_start_prob",
+                "rejection_prob",
+                "avg_lifespan",
+                "avg_server",
+                "avg_running",
+                "avg_idle",
+            ],
+            &[vec![
+                r.cold_start_prob,
+                r.rejection_prob,
+                r.avg_lifespan,
+                r.avg_server_count,
+                r.avg_running_count,
+                r.avg_idle_count,
+            ]],
+        )?;
+    }
+    if all || which == 1 {
+        println!("\n=== Fig 1: concurrency value (c=1 vs c=3) ===");
+        use simfaas::sim::ParServerlessSimulator;
+        let cfg = SimConfig::table1().with_arrival_rate(3.0).with_horizon(horizon.min(2e5));
+        let r1 = ParServerlessSimulator::new(cfg.clone(), 1).run();
+        let r3 = ParServerlessSimulator::new(cfg, 3).run();
+        let mut t = Table::new(vec!["concurrency value", "avg servers", "p_cold %"]);
+        t.row_f64(&[1.0, r1.avg_server_count, r1.cold_start_prob * 100.0], 4);
+        t.row_f64(&[3.0, r3.avg_server_count, r3.cold_start_prob * 100.0], 4);
+        print!("{t}");
+    }
+    if all || which == 3 {
+        println!("\n=== Fig 3: instance count distribution ===");
+        let pmf = figures::fig3_distribution(horizon, seed);
+        let labels: Vec<String> = (0..pmf.len()).map(|i| i.to_string()).collect();
+        print!("{}", ascii_histogram(&labels, &pmf, 48));
+        simfaas::output::write_csv_rows(
+            format!("{out_dir}/fig3.csv"),
+            &["count", "p"],
+            &pmf.iter().enumerate().map(|(i, &p)| vec![i as f64, p]).collect::<Vec<_>>(),
+        )?;
+    }
+    if all || which == 4 {
+        println!("\n=== Fig 4: avg instance count over time (10 runs, 95% CI) ===");
+        let band = figures::fig4_band(if quick { 20_000.0 } else { 100_000.0 }, 200.0, 10, seed);
+        let series = vec![
+            Series::new("mean", band.iter().map(|&(t, m, _)| (t, m)).collect()),
+            Series::new("mean+ci", band.iter().map(|&(t, m, h)| (t, m + h)).collect()),
+            Series::new("mean-ci", band.iter().map(|&(t, m, h)| (t, m - h)).collect()),
+        ];
+        print!("{}", ascii_lines(&series, 72, 16));
+        let last = band.last().unwrap();
+        println!(
+            "final: {:.4} ± {:.4} ({:.2}% of mean)",
+            last.1,
+            last.2,
+            100.0 * last.2 / last.1
+        );
+        simfaas::output::write_csv_rows(
+            format!("{out_dir}/fig4.csv"),
+            &["t", "mean", "ci95_half_width"],
+            &band.iter().map(|&(t, m, h)| vec![t, m, h]).collect::<Vec<_>>(),
+        )?;
+    }
+    if all || which == 5 {
+        println!("\n=== Fig 5: p_cold vs rate x threshold ===");
+        let rates = [0.1, 0.2, 0.3, 0.5, 0.7, 0.9, 1.2, 1.5, 2.0, 2.5, 3.0];
+        let thresholds = [120.0, 300.0, 600.0, 1200.0];
+        let out = figures::fig5_sweep(&rates, &thresholds, horizon.min(3e5), seed);
+        let series: Vec<Series> = out
+            .iter()
+            .map(|(th, s)| {
+                Series::new(format!("{th} s"), s.iter().map(|&(r, p)| (r, p * 100.0)).collect())
+            })
+            .collect();
+        print!("{}", ascii_lines(&series, 72, 18));
+        let rows: Vec<Vec<f64>> = rates
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| std::iter::once(r).chain(out.iter().map(|(_, s)| s[i].1)).collect())
+            .collect();
+        simfaas::output::write_csv_rows(
+            format!("{out_dir}/fig5.csv"),
+            &["rate", "p_cold_120s", "p_cold_300s", "p_cold_600s", "p_cold_1200s"],
+            &rows,
+        )?;
+    }
+    if all || which == 6 {
+        println!("\n=== Figs 6-8: validation (simulator vs emulator) ===");
+        let rates = if quick {
+            vec![0.5, 1.0, 2.0]
+        } else {
+            vec![0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 3.0]
+        };
+        let opts = figures::ValidationOpts {
+            emu_horizon: if quick { 10_000.0 } else { 40_000.0 },
+            ..Default::default()
+        };
+        let rows = figures::validation_rows(&rates, &opts);
+        print_validation(&rows);
+        simfaas::output::write_csv_rows(
+            format!("{out_dir}/fig6_7_8.csv"),
+            &[
+                "rate",
+                "sim_p_cold",
+                "emu_p_cold",
+                "sim_servers",
+                "emu_servers",
+                "sim_waste",
+                "emu_waste",
+            ],
+            &rows
+                .iter()
+                .map(|r| {
+                    vec![
+                        r.rate,
+                        r.sim.cold_start_prob,
+                        r.emu.cold_start_prob,
+                        r.sim.avg_server_count,
+                        r.emu.avg_server_count,
+                        r.sim.wasted_capacity,
+                        r.emu.wasted_capacity,
+                    ]
+                })
+                .collect::<Vec<_>>(),
+        )?;
+    }
+    println!("\nCSV outputs in {out_dir}/");
+    Ok(())
+}

@@ -1,0 +1,188 @@
+//! Minimal JSON writer (no serde in this environment). Only what the CLI
+//! and benches need: objects, arrays, numbers, strings, bools.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A JSON value (build with the `From` impls and [`JsonValue::object`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Number(f64),
+    String(String),
+    Array(Vec<JsonValue>),
+    Object(BTreeMap<String, JsonValue>),
+}
+
+impl JsonValue {
+    pub fn object() -> JsonValue {
+        JsonValue::Object(BTreeMap::new())
+    }
+
+    /// Insert into an object (panics on non-objects).
+    pub fn set<K: Into<String>, V: Into<JsonValue>>(&mut self, key: K, value: V) -> &mut Self {
+        match self {
+            JsonValue::Object(map) => {
+                map.insert(key.into(), value.into());
+            }
+            _ => panic!("set() on non-object"),
+        }
+        self
+    }
+
+    /// Serialize to a compact JSON string.
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            JsonValue::Null => out.push_str("null"),
+            JsonValue::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            JsonValue::Number(n) => {
+                if n.is_finite() {
+                    let _ = write!(out, "{n}");
+                } else {
+                    out.push_str("null"); // JSON has no Inf/NaN
+                }
+            }
+            JsonValue::String(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            JsonValue::Array(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            JsonValue::Object(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    JsonValue::String(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl From<f64> for JsonValue {
+    fn from(v: f64) -> Self {
+        JsonValue::Number(v)
+    }
+}
+impl From<u64> for JsonValue {
+    fn from(v: u64) -> Self {
+        JsonValue::Number(v as f64)
+    }
+}
+impl From<usize> for JsonValue {
+    fn from(v: usize) -> Self {
+        JsonValue::Number(v as f64)
+    }
+}
+impl From<bool> for JsonValue {
+    fn from(v: bool) -> Self {
+        JsonValue::Bool(v)
+    }
+}
+impl From<&str> for JsonValue {
+    fn from(v: &str) -> Self {
+        JsonValue::String(v.to_string())
+    }
+}
+impl From<String> for JsonValue {
+    fn from(v: String) -> Self {
+        JsonValue::String(v)
+    }
+}
+impl<T: Into<JsonValue>> From<Vec<T>> for JsonValue {
+    fn from(v: Vec<T>) -> Self {
+        JsonValue::Array(v.into_iter().map(Into::into).collect())
+    }
+}
+
+/// Serialize `SimResults` (used by the CLI's `--json` flag).
+pub fn results_to_json(r: &crate::sim::SimResults) -> JsonValue {
+    let mut o = JsonValue::object();
+    o.set("measured_time", r.measured_time)
+        .set("total_requests", r.total_requests)
+        .set("cold_requests", r.cold_requests)
+        .set("warm_requests", r.warm_requests)
+        .set("rejected_requests", r.rejected_requests)
+        .set("cold_start_prob", r.cold_start_prob)
+        .set("rejection_prob", r.rejection_prob)
+        .set("avg_lifespan", r.avg_lifespan)
+        .set("avg_server_count", r.avg_server_count)
+        .set("avg_running_count", r.avg_running_count)
+        .set("avg_idle_count", r.avg_idle_count)
+        .set("max_server_count", r.max_server_count)
+        .set("wasted_capacity", r.wasted_capacity)
+        .set("avg_response_time", r.avg_response_time)
+        .set("response_p50", r.response_p50)
+        .set("response_p95", r.response_p95)
+        .set("response_p99", r.response_p99)
+        .set("billed_instance_seconds", r.billed_instance_seconds)
+        .set("observed_arrival_rate", r.observed_arrival_rate)
+        .set("instance_count_pmf", r.instance_count_pmf.clone());
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_encoding() {
+        assert_eq!(JsonValue::from(1.5).to_string(), "1.5");
+        assert_eq!(JsonValue::from(true).to_string(), "true");
+        assert_eq!(JsonValue::Null.to_string(), "null");
+        assert_eq!(JsonValue::from("a\"b\n").to_string(), "\"a\\\"b\\n\"");
+        assert_eq!(JsonValue::Number(f64::NAN).to_string(), "null");
+    }
+
+    #[test]
+    fn object_and_array_encoding() {
+        let mut o = JsonValue::object();
+        o.set("b", 2u64).set("a", vec![1.0, 2.5]);
+        // BTreeMap: keys sorted.
+        assert_eq!(o.to_string(), r#"{"a":[1,2.5],"b":2}"#);
+    }
+
+    #[test]
+    fn results_json_has_key_fields() {
+        use crate::sim::{ServerlessSimulator, SimConfig};
+        let mut cfg = SimConfig::table1();
+        cfg.horizon = 2_000.0;
+        let r = ServerlessSimulator::new(cfg).run();
+        let j = results_to_json(&r).to_string();
+        assert!(j.contains("\"cold_start_prob\""));
+        assert!(j.contains("\"instance_count_pmf\":["));
+    }
+}

@@ -1,0 +1,43 @@
+//! Terminal/file output substrate: ASCII tables, terminal plots (the
+//! figures render as text series so every paper figure regenerates without a
+//! plotting stack), CSV and a minimal JSON writer (no external
+//! serialization crates are available in this environment).
+
+pub mod json;
+pub mod plot;
+pub mod table;
+
+pub use json::JsonValue;
+pub use plot::{ascii_histogram, ascii_lines, Series};
+pub use table::Table;
+
+use anyhow::Result;
+use std::io::Write;
+use std::path::Path;
+
+/// Write rows of floats as CSV with a header.
+pub fn write_csv_rows<P: AsRef<Path>>(path: P, header: &[&str], rows: &[Vec<f64>]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        writeln!(f, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_rows_roundtrip_textually() {
+        let dir = std::env::temp_dir().join(format!("simfaas-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rows.csv");
+        write_csv_rows(&path, &["a", "b"], &[vec![1.0, 2.0], vec![3.5, 4.25]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3.5,4.25\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,121 @@
+//! Terminal plots: multi-series line charts and histograms rendered as
+//! ASCII. Every figure of the paper regenerates as one of these (plus a CSV
+//! for external plotting).
+
+/// A named data series for [`ascii_lines`].
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new<S: Into<String>>(name: S, points: Vec<(f64, f64)>) -> Self {
+        Series { name: name.into(), points }
+    }
+}
+
+/// Render series into a `width x height` character grid with axis labels.
+/// Each series gets a distinct glyph; overlapping points show the later
+/// series' glyph.
+pub fn ascii_lines(series: &[Series], width: usize, height: usize) -> String {
+    const GLYPHS: [char; 8] = ['*', 'o', '+', 'x', '#', '@', '%', '&'];
+    let pts: Vec<&(f64, f64)> = series.iter().flat_map(|s| &s.points).collect();
+    if pts.is_empty() {
+        return String::from("(no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &&(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if x1 <= x0 {
+        x1 = x0 + 1.0;
+    }
+    if y1 <= y0 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let g = GLYPHS[si % GLYPHS.len()];
+        for &(x, y) in &s.points {
+            let cx = (((x - x0) / (x1 - x0)) * (width as f64 - 1.0)).round() as usize;
+            let cy = (((y - y0) / (y1 - y0)) * (height as f64 - 1.0)).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = g;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{y1:>12.4} ┐\n"));
+    for row in grid {
+        out.push_str("             │");
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push_str(&format!("{y0:>12.4} └"));
+    out.push_str(&"─".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("{:>14}{:.4} .. {:.4}\n", "x: ", x0, x1));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", GLYPHS[si % GLYPHS.len()], s.name));
+    }
+    out
+}
+
+/// Render a histogram/PMF as horizontal bars (Fig. 3 style: one bar per
+/// integer level, length proportional to probability).
+pub fn ascii_histogram(labels: &[String], values: &[f64], width: usize) -> String {
+    assert_eq!(labels.len(), values.len());
+    let vmax = values.iter().cloned().fold(0.0f64, f64::max).max(1e-300);
+    let lw = labels.iter().map(|l| l.len()).max().unwrap_or(1);
+    let mut out = String::new();
+    for (l, &v) in labels.iter().zip(values) {
+        let bar = ((v / vmax) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{l:>lw$} │{} {v:.4}\n",
+            "█".repeat(bar),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lines_renders_monotone_series() {
+        let s = Series::new("test", (0..20).map(|i| (i as f64, i as f64 * 2.0)).collect());
+        let out = ascii_lines(&[s], 40, 10);
+        assert!(out.contains('*'));
+        assert!(out.contains("test"));
+        // y-max label present
+        assert!(out.contains("38.0000"));
+    }
+
+    #[test]
+    fn lines_multi_series_glyphs() {
+        let a = Series::new("a", vec![(0.0, 0.0), (1.0, 1.0)]);
+        let b = Series::new("b", vec![(0.0, 1.0), (1.0, 0.0)]);
+        let out = ascii_lines(&[a, b], 20, 8);
+        assert!(out.contains('*') && out.contains('o'));
+    }
+
+    #[test]
+    fn histogram_bars_proportional() {
+        let labels: Vec<String> = (0..3).map(|i| i.to_string()).collect();
+        let out = ascii_histogram(&labels, &[0.1, 0.2, 0.4], 20);
+        let bars: Vec<usize> = out.lines().map(|l| l.matches('█').count()).collect();
+        assert_eq!(bars[2], 20);
+        assert_eq!(bars[1], 10);
+        assert_eq!(bars[0], 5);
+    }
+
+    #[test]
+    fn empty_series_no_panic() {
+        assert_eq!(ascii_lines(&[], 10, 5), "(no data)\n");
+    }
+}

@@ -1,0 +1,189 @@
+//! PJRT engine: load HLO-text artifacts and execute them.
+//!
+//! The pattern follows the verified reference in /opt/xla-example/load_hlo:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`. HLO *text*
+//! is the interchange format (serialized protos from jax ≥ 0.5 are rejected
+//! by xla_extension 0.5.1 — see `python/compile/aot.py`).
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so an `Engine` is thread-bound;
+//! multi-threaded consumers use [`super::pool::ComputePool`], which owns one
+//! engine per worker thread.
+
+use super::payload::{PayloadKind, HIST_ARTIFACT, HIST_N, HIST_NBINS};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A thread-bound PJRT execution engine over the AOT artifacts.
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Engine {
+    /// Load and compile every artifact in `dir` (per `manifest.txt`).
+    pub fn load_dir<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.txt");
+        let manifest = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {manifest:?}; run `make artifacts` first"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for line in manifest.lines() {
+            let name = match line.split_whitespace().next() {
+                Some(n) => n,
+                None => continue,
+            };
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let exe = Self::compile_file(&client, &path)
+                .with_context(|| format!("compiling {path:?}"))?;
+            executables.insert(name.to_string(), exe);
+        }
+        if executables.is_empty() {
+            bail!("no artifacts found in {dir:?}");
+        }
+        Ok(Engine { client, executables, dir })
+    }
+
+    fn compile_file(
+        client: &xla::PjRtClient,
+        path: &Path,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(client.compile(&comp)?)
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("unknown artifact {name:?}"))?;
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        // Lowered with return_tuple=True: single replica/partition, 1-tuple.
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple1()?)
+    }
+
+    /// Run an inference payload: `x` is the flattened f32 input of shape
+    /// (batch, d_in); returns the flattened (batch, d_out) logits.
+    pub fn run_payload(&self, kind: PayloadKind, x: &[f32]) -> Result<Vec<f32>> {
+        let (batch, d_in, _) = kind.shape();
+        if x.len() != batch * d_in {
+            bail!("payload {kind:?} expects {} f32s, got {}", batch * d_in, x.len());
+        }
+        let lit = xla::Literal::vec1(x).reshape(&[batch as i64, d_in as i64])?;
+        let out = self.execute(kind.artifact_name(), &[lit])?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Run the histogram analysis graph over exactly [`HIST_N`] samples.
+    pub fn run_histogram_block(&self, samples: &[f32], lo: f32, hi: f32) -> Result<Vec<f32>> {
+        if samples.len() != HIST_N {
+            bail!("histogram expects {HIST_N} samples, got {}", samples.len());
+        }
+        let x = xla::Literal::vec1(samples);
+        let lo = xla::Literal::scalar(lo);
+        let hi = xla::Literal::scalar(hi);
+        let out = self.execute(HIST_ARTIFACT, &[x, lo, hi])?;
+        let counts = out.to_vec::<f32>()?;
+        debug_assert_eq!(counts.len(), HIST_NBINS);
+        Ok(counts)
+    }
+
+    /// Histogram over arbitrarily many samples: chunks into [`HIST_N`]
+    /// blocks (padding the tail with out-of-range sentinels) and sums the
+    /// per-block counts. This is the accelerated backend for
+    /// `sim::hist::Histogram` on multi-million-sample traces.
+    pub fn run_histogram(&self, samples: &[f32], lo: f32, hi: f32) -> Result<Vec<f64>> {
+        let mut counts = vec![0.0f64; HIST_NBINS];
+        let sentinel = hi + 1.0;
+        let mut block = vec![sentinel; HIST_N];
+        for chunk in samples.chunks(HIST_N) {
+            block[..chunk.len()].copy_from_slice(chunk);
+            block[chunk.len()..].fill(sentinel);
+            let partial = self.run_histogram_block(&block, lo, hi)?;
+            for (acc, p) in counts.iter_mut().zip(partial) {
+                *acc += p as f64;
+            }
+        }
+        Ok(counts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn engine() -> Engine {
+        Engine::load_dir(artifacts_dir()).expect("run `make artifacts` before cargo test")
+    }
+
+    #[test]
+    fn loads_all_artifacts() {
+        let e = engine();
+        for k in PayloadKind::ALL {
+            assert!(e.has(k.artifact_name()));
+        }
+        assert!(e.has(HIST_ARTIFACT));
+    }
+
+    #[test]
+    fn payload_executes_and_is_deterministic() {
+        let e = engine();
+        let k = PayloadKind::Small;
+        let x = vec![0.5f32; k.input_len()];
+        let a = e.run_payload(k, &x).unwrap();
+        let b = e.run_payload(k, &x).unwrap();
+        assert_eq!(a.len(), k.output_len());
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| v.is_finite()));
+        // Not all zeros (weights baked in).
+        assert!(a.iter().any(|v| v.abs() > 1e-6));
+    }
+
+    #[test]
+    fn payload_rejects_bad_input_len() {
+        let e = engine();
+        assert!(e.run_payload(PayloadKind::Small, &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn histogram_matches_rust_reference() {
+        let e = engine();
+        let mut rng = crate::sim::Rng::new(42);
+        let samples: Vec<f32> = (0..300_000).map(|_| rng.exponential(1.0) as f32).collect();
+        let counts = e.run_histogram(&samples, 0.0, 8.0).unwrap();
+        // Pure-rust reference.
+        let mut h = crate::sim::Histogram::new(0.0, 8.0, HIST_NBINS);
+        for &s in &samples {
+            h.push(s as f64);
+        }
+        let expect: Vec<f64> = h.counts().iter().map(|&c| c as f64).collect();
+        assert_eq!(counts, expect);
+    }
+
+    #[test]
+    fn histogram_empty_input_gives_zero_counts() {
+        let e = engine();
+        let counts = e.run_histogram(&[], 0.0, 1.0).unwrap();
+        assert_eq!(counts, vec![0.0; HIST_NBINS]);
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime bridge: loads the `artifacts/*.hlo.txt` produced by
+//! `python/compile/aot.py` (Layer 2 lowering of the Layer-1 Pallas kernels)
+//! and executes them from Rust. Python never runs on the request path.
+
+pub mod engine;
+pub mod payload;
+pub mod pool;
+
+pub use engine::Engine;
+pub use payload::{PayloadKind, HIST_ARTIFACT, HIST_N, HIST_NBINS};
+pub use pool::ComputePool;
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$SIMFAAS_ARTIFACTS` or `<crate>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("SIMFAAS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}

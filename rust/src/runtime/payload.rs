@@ -1,0 +1,77 @@
+//! Payload registry: the AOT-compiled entry points and their geometries.
+//!
+//! Must stay in sync with `python/compile/model.py` (`PAYLOAD_SHAPES`,
+//! `HIST_N`, `HIST_NBINS`); `artifacts/manifest.txt` is the build-time
+//! contract and `Engine::load_dir` cross-checks it at load time.
+
+/// The serverless-function compute payloads (three emulated memory
+/// configurations; larger = more FLOPs per request = longer service time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PayloadKind {
+    Small,
+    Medium,
+    Large,
+}
+
+impl PayloadKind {
+    pub const ALL: [PayloadKind; 3] = [PayloadKind::Small, PayloadKind::Medium, PayloadKind::Large];
+
+    /// Artifact base name (matches `model.ENTRY_POINTS`).
+    pub fn artifact_name(&self) -> &'static str {
+        match self {
+            PayloadKind::Small => "payload_small",
+            PayloadKind::Medium => "payload_medium",
+            PayloadKind::Large => "payload_large",
+        }
+    }
+
+    /// (batch, d_in, d_out) — mirrors `model.PAYLOAD_SHAPES` (d_hidden is
+    /// internal to the artifact).
+    pub fn shape(&self) -> (usize, usize, usize) {
+        match self {
+            PayloadKind::Small => (128, 128, 128),
+            PayloadKind::Medium => (128, 256, 128),
+            PayloadKind::Large => (128, 512, 128),
+        }
+    }
+
+    pub fn input_len(&self) -> usize {
+        let (b, d_in, _) = self.shape();
+        b * d_in
+    }
+
+    pub fn output_len(&self) -> usize {
+        let (b, _, d_out) = self.shape();
+        b * d_out
+    }
+
+    /// The emulated memory configuration this payload stands in for (MB).
+    pub fn memory_mb(&self) -> f64 {
+        match self {
+            PayloadKind::Small => 128.0,
+            PayloadKind::Medium => 256.0,
+            PayloadKind::Large => 512.0,
+        }
+    }
+}
+
+/// Histogram analysis graph geometry (mirrors `model.HIST_N/HIST_NBINS`).
+pub const HIST_N: usize = 131_072;
+pub const HIST_NBINS: usize = 64;
+pub const HIST_ARTIFACT: &str = "trace_histogram";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_consistent() {
+        for k in PayloadKind::ALL {
+            let (b, d_in, d_out) = k.shape();
+            assert_eq!(k.input_len(), b * d_in);
+            assert_eq!(k.output_len(), b * d_out);
+            assert!(k.memory_mb() >= 128.0);
+        }
+        assert!(PayloadKind::Small.input_len() < PayloadKind::Large.input_len());
+    }
+}

@@ -1,0 +1,157 @@
+//! Multi-threaded PJRT execution: a pool of worker threads, each owning a
+//! thread-bound [`Engine`] (the `xla` crate's `PjRtClient` is `Rc`-based and
+//! cannot be shared). The emulator's request path submits jobs here; this is
+//! the coordinator-side analogue of an async executor, with bounded
+//! submission and per-job completion signaling.
+
+use super::engine::Engine;
+use super::payload::PayloadKind;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+enum Job {
+    Payload {
+        kind: PayloadKind,
+        x: Vec<f32>,
+        respond: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Histogram {
+        samples: Vec<f32>,
+        lo: f32,
+        hi: f32,
+        respond: mpsc::Sender<Result<Vec<f64>>>,
+    },
+    Shutdown,
+}
+
+/// A fixed pool of PJRT worker threads.
+pub struct ComputePool {
+    tx: mpsc::Sender<Job>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    n_workers: usize,
+}
+
+impl ComputePool {
+    /// Spawn `n_workers` threads, each compiling the artifacts in `dir`.
+    /// Fails fast if any worker cannot load the artifacts.
+    pub fn new<P: Into<PathBuf>>(dir: P, n_workers: usize) -> Result<Self> {
+        assert!(n_workers >= 1);
+        let dir = dir.into();
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let mut workers = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            let rx = Arc::clone(&rx);
+            let dir = dir.clone();
+            let ready = ready_tx.clone();
+            workers.push(std::thread::spawn(move || {
+                let engine = match Engine::load_dir(&dir) {
+                    Ok(e) => {
+                        let _ = ready.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                        return;
+                    }
+                };
+                loop {
+                    // Hold the lock only while receiving.
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(j) => j,
+                        Err(_) => break,
+                    };
+                    match job {
+                        Job::Payload { kind, x, respond } => {
+                            let _ = respond.send(engine.run_payload(kind, &x));
+                        }
+                        Job::Histogram { samples, lo, hi, respond } => {
+                            let _ = respond.send(engine.run_histogram(&samples, lo, hi));
+                        }
+                        Job::Shutdown => break,
+                    }
+                }
+            }));
+        }
+        drop(ready_tx);
+        for _ in 0..n_workers {
+            ready_rx.recv().context("worker died during startup")??;
+        }
+        Ok(ComputePool { tx, workers, n_workers })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Execute a payload, blocking until done (call from any thread).
+    pub fn run_payload(&self, kind: PayloadKind, x: Vec<f32>) -> Result<Vec<f32>> {
+        let (respond, done) = mpsc::channel();
+        self.tx
+            .send(Job::Payload { kind, x, respond })
+            .ok()
+            .context("compute pool shut down")?;
+        done.recv().context("worker dropped job")?
+    }
+
+    /// Execute the histogram reduction, blocking until done.
+    pub fn run_histogram(&self, samples: Vec<f32>, lo: f32, hi: f32) -> Result<Vec<f64>> {
+        let (respond, done) = mpsc::channel();
+        self.tx
+            .send(Job::Histogram { samples, lo, hi, respond })
+            .ok()
+            .context("compute pool shut down")?;
+        done.recv().context("worker dropped job")?
+    }
+}
+
+impl Drop for ComputePool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Job::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn pool_executes_from_many_threads() {
+        let pool = Arc::new(ComputePool::new(artifacts_dir(), 2).unwrap());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let pool = Arc::clone(&pool);
+            handles.push(std::thread::spawn(move || {
+                let k = PayloadKind::Small;
+                let x = vec![t as f32 * 0.1; k.input_len()];
+                let out = pool.run_payload(k, x).unwrap();
+                assert_eq!(out.len(), k.output_len());
+                out
+            }));
+        }
+        let outs: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // Different inputs -> different outputs; same input -> identical.
+        assert_ne!(outs[1], outs[2]);
+    }
+
+    #[test]
+    fn pool_histogram_counts() {
+        let pool = ComputePool::new(artifacts_dir(), 1).unwrap();
+        let samples: Vec<f32> = (0..1000).map(|i| i as f32 / 1000.0).collect();
+        let counts = pool.run_histogram(samples, 0.0, 1.0).unwrap();
+        let total: f64 = counts.iter().sum();
+        assert_eq!(total, 1000.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! Discrete-event engine: the future event list.
+//!
+//! A classic binary-heap future-event list with two SimFaaS-specific
+//! features:
+//!
+//! * **Deterministic tie-breaking** — events at equal times pop in insertion
+//!   order (a monotone sequence number), so runs are bit-reproducible.
+//! * **Generation-tagged expiration events** — per the paper, each idle
+//!   instance expires `expiration_threshold` seconds after its last request.
+//!   Reusing the instance must cancel its pending expiration; instead of an
+//!   O(n) heap removal we tag expiration events with the instance's
+//!   *generation* counter and drop stale ones on pop (lazy cancellation).
+
+use super::instance::InstanceId;
+use super::time::SimTime;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Events the serverless simulator reacts to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// A request arrives at the platform.
+    Arrival,
+    /// The request being processed on `InstanceId` completes.
+    Departure(InstanceId),
+    /// Instance finished cold-start provisioning and begins serving
+    /// (only used by simulators that model provisioning separately).
+    ProvisioningDone(InstanceId),
+    /// Idle-expiration check for an instance; `gen` guards staleness.
+    Expiration { id: InstanceId, gen: u64 },
+    /// End of simulation horizon.
+    Horizon,
+}
+
+#[derive(Debug, Clone)]
+struct Scheduled {
+    at: SimTime,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: reverse to get earliest-first, then
+        // lowest-seq-first among equal times.
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Future event list.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        EventQueue { heap: BinaryHeap::with_capacity(cap), seq: 0 }
+    }
+
+    /// Schedule `event` at absolute time `at`.
+    #[inline]
+    pub fn schedule(&mut self, at: SimTime, event: Event) {
+        debug_assert!(at.is_finite(), "cannot schedule at infinity");
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Scheduled { at, seq, event });
+    }
+
+    /// Pop the earliest event.
+    #[inline]
+    pub fn pop(&mut self) -> Option<(SimTime, Event)> {
+        self.heap.pop().map(|s| (s.at, s.event))
+    }
+
+    /// Time of the next event without popping.
+    #[inline]
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|s| s.at)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(SimTime::from_secs(3.0), Event::Arrival);
+        q.schedule(SimTime::from_secs(1.0), Event::Horizon);
+        q.schedule(SimTime::from_secs(2.0), Event::Departure(InstanceId(7)));
+        let (t1, e1) = q.pop().unwrap();
+        let (t2, e2) = q.pop().unwrap();
+        let (t3, e3) = q.pop().unwrap();
+        assert_eq!((t1.as_secs(), e1), (1.0, Event::Horizon));
+        assert_eq!((t2.as_secs(), e2), (2.0, Event::Departure(InstanceId(7))));
+        assert_eq!((t3.as_secs(), e3), (3.0, Event::Arrival));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn equal_times_pop_in_insertion_order() {
+        let mut q = EventQueue::new();
+        let t = SimTime::from_secs(5.0);
+        for i in 0..100 {
+            q.schedule(t, Event::Departure(InstanceId(i)));
+        }
+        for i in 0..100 {
+            let (_, e) = q.pop().unwrap();
+            assert_eq!(e, Event::Departure(InstanceId(i)));
+        }
+    }
+
+    #[test]
+    fn peek_does_not_remove() {
+        let mut q = EventQueue::new();
+        q.schedule(SimTime::from_secs(1.5), Event::Arrival);
+        assert_eq!(q.peek_time().unwrap().as_secs(), 1.5);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn interleaved_schedule_pop() {
+        let mut q = EventQueue::new();
+        q.schedule(SimTime::from_secs(10.0), Event::Arrival);
+        q.schedule(SimTime::from_secs(5.0), Event::Arrival);
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t.as_secs(), 5.0);
+        q.schedule(SimTime::from_secs(7.0), Event::Horizon);
+        let (t, e) = q.pop().unwrap();
+        assert_eq!((t.as_secs(), e), (7.0, Event::Horizon));
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t.as_secs(), 10.0);
+    }
+}

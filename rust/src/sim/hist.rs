@@ -1,0 +1,286 @@
+//! PDF/CDF approximation tools (paper §3: "tools that can accept custom
+//! state encoding and generate approximations for Probability Density
+//! Functions (PDF) and Cumulative Distribution Functions (CDF) from the
+//! simulations").
+//!
+//! Two flavours:
+//!
+//! * [`CountDistribution`] — time-weighted distribution over integer levels
+//!   (instance counts). This is what Fig. 3 plots: the portion of simulated
+//!   time spent at each instance count.
+//! * [`Histogram`] — fixed-bin histogram over continuous samples (response
+//!   times, lifespans), with PDF/CDF extraction and comparison against an
+//!   analytical CDF. For multi-million-sample traces the bin counting can
+//!   also be offloaded to the AOT-compiled Pallas histogram kernel via
+//!   `runtime::AnalyticsEngine`; `Histogram` is the pure-Rust reference the
+//!   kernel is cross-checked against.
+
+use super::time::SimTime;
+
+/// Time-weighted distribution over small non-negative integer levels.
+#[derive(Debug, Clone)]
+pub struct CountDistribution {
+    /// time spent at level i.
+    weights: Vec<f64>,
+    last_t: SimTime,
+    level: usize,
+    total: f64,
+}
+
+impl CountDistribution {
+    pub fn new(start: SimTime, initial_level: usize) -> Self {
+        CountDistribution { weights: vec![0.0; 16], last_t: start, level: initial_level, total: 0.0 }
+    }
+
+    /// Record a level change at time `t`.
+    pub fn update(&mut self, t: SimTime, new_level: usize) {
+        debug_assert!(t >= self.last_t);
+        let dt = t.since(self.last_t);
+        if self.level >= self.weights.len() {
+            self.weights.resize(self.level + 1, 0.0);
+        }
+        self.weights[self.level] += dt;
+        self.total += dt;
+        self.last_t = t;
+        self.level = new_level;
+    }
+
+    /// Close the window at `t` keeping the level.
+    pub fn finish(&mut self, t: SimTime) {
+        let lvl = self.level;
+        self.update(t, lvl);
+    }
+
+    /// Restart accumulation (skip warm-up transient).
+    pub fn reset_at(&mut self, t: SimTime) {
+        self.weights.iter_mut().for_each(|w| *w = 0.0);
+        self.total = 0.0;
+        self.last_t = t;
+    }
+
+    /// Probability mass function over levels: portion of time at each count.
+    pub fn pmf(&self) -> Vec<f64> {
+        if self.total <= 0.0 {
+            return vec![];
+        }
+        let hi = self
+            .weights
+            .iter()
+            .rposition(|&w| w > 0.0)
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        self.weights[..hi].iter().map(|w| w / self.total).collect()
+    }
+
+    /// CDF over levels.
+    pub fn cdf(&self) -> Vec<f64> {
+        let mut acc = 0.0;
+        self.pmf()
+            .into_iter()
+            .map(|p| {
+                acc += p;
+                acc
+            })
+            .collect()
+    }
+
+    /// Time-weighted mean level.
+    pub fn mean(&self) -> f64 {
+        if self.total <= 0.0 {
+            return f64::NAN;
+        }
+        self.weights
+            .iter()
+            .enumerate()
+            .map(|(i, w)| i as f64 * w)
+            .sum::<f64>()
+            / self.total
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.total
+    }
+}
+
+/// Fixed-bin histogram over continuous non-negative samples.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    below: u64,
+    above: u64,
+    n: u64,
+}
+
+impl Histogram {
+    /// `nbins` equal-width bins covering [lo, hi).
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins], below: 0, above: 0, n: 0 }
+    }
+
+    /// Build from samples with automatic range (min..max padded).
+    pub fn auto(samples: &[f64], nbins: usize) -> Self {
+        assert!(!samples.is_empty());
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &s in samples {
+            lo = lo.min(s);
+            hi = hi.max(s);
+        }
+        if hi <= lo {
+            hi = lo + 1.0;
+        }
+        let pad = (hi - lo) * 1e-9;
+        let mut h = Histogram::new(lo, hi + pad, nbins);
+        for &s in samples {
+            h.push(s);
+        }
+        h
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        if x < self.lo {
+            self.below += 1;
+        } else if x >= self.hi {
+            self.above += 1;
+        } else {
+            let nbins = self.bins.len();
+            let w = (self.hi - self.lo) / nbins as f64;
+            let idx = (((x - self.lo) / w) as usize).min(nbins - 1);
+            self.bins[idx] += 1;
+        }
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.bins
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn range(&self) -> (f64, f64) {
+        (self.lo, self.hi)
+    }
+
+    pub fn bin_width(&self) -> f64 {
+        (self.hi - self.lo) / self.bins.len() as f64
+    }
+
+    /// Bin centers.
+    pub fn centers(&self) -> Vec<f64> {
+        let w = self.bin_width();
+        (0..self.bins.len())
+            .map(|i| self.lo + (i as f64 + 0.5) * w)
+            .collect()
+    }
+
+    /// Density estimate (integrates to the in-range mass).
+    pub fn pdf(&self) -> Vec<f64> {
+        if self.n == 0 {
+            return vec![0.0; self.bins.len()];
+        }
+        let w = self.bin_width();
+        self.bins
+            .iter()
+            .map(|&c| c as f64 / (self.n as f64 * w))
+            .collect()
+    }
+
+    /// Empirical CDF evaluated at the right edge of each bin.
+    pub fn cdf(&self) -> Vec<f64> {
+        let mut acc = self.below as f64;
+        self.bins
+            .iter()
+            .map(|&c| {
+                acc += c as f64;
+                acc / self.n as f64
+            })
+            .collect()
+    }
+
+    /// Max deviation between this histogram's CDF and an analytical CDF
+    /// (paper §3: verify a developed model against simulation output).
+    pub fn max_cdf_deviation<F: Fn(f64) -> f64>(&self, analytical: F) -> f64 {
+        let w = self.bin_width();
+        self.cdf()
+            .iter()
+            .enumerate()
+            .map(|(i, &emp)| {
+                let edge = self.lo + (i as f64 + 1.0) * w;
+                (emp - analytical(edge)).abs()
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::rng::Rng;
+
+    #[test]
+    fn count_distribution_pmf_sums_to_one() {
+        let mut d = CountDistribution::new(SimTime::ZERO, 0);
+        d.update(SimTime::from_secs(1.0), 1); // level 0 for 1s
+        d.update(SimTime::from_secs(3.0), 2); // level 1 for 2s
+        d.finish(SimTime::from_secs(4.0)); // level 2 for 1s
+        let pmf = d.pmf();
+        assert_eq!(pmf.len(), 3);
+        assert!((pmf.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((pmf[0] - 0.25).abs() < 1e-12);
+        assert!((pmf[1] - 0.5).abs() < 1e-12);
+        assert!((pmf[2] - 0.25).abs() < 1e-12);
+        assert!((d.mean() - 1.0).abs() < 1e-12);
+        let cdf = d.cdf();
+        assert!((cdf[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn count_distribution_grows_levels() {
+        let mut d = CountDistribution::new(SimTime::ZERO, 40);
+        d.finish(SimTime::from_secs(2.0));
+        assert_eq!(d.pmf().len(), 41);
+        assert!((d.mean() - 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_bins_and_edges() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [0.0, 0.5, 1.5, 9.99] {
+            h.push(x);
+        }
+        h.push(-1.0); // below
+        h.push(10.0); // above (right-open)
+        assert_eq!(h.n(), 6);
+        assert_eq!(h.counts()[0], 2);
+        assert_eq!(h.counts()[1], 1);
+        assert_eq!(h.counts()[9], 1);
+        let cdf = h.cdf();
+        assert!((cdf[9] - 5.0 / 6.0).abs() < 1e-12); // 'above' never enters bins
+    }
+
+    #[test]
+    fn histogram_pdf_integrates_to_mass() {
+        let mut rng = Rng::new(20);
+        let samples: Vec<f64> = (0..100_000).map(|_| rng.exponential(1.0)).collect();
+        let h = Histogram::auto(&samples, 200);
+        let mass: f64 = h.pdf().iter().sum::<f64>() * h.bin_width();
+        assert!((mass - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cdf_deviation_against_true_exponential() {
+        let mut rng = Rng::new(21);
+        let mut h = Histogram::new(0.0, 20.0, 400);
+        for _ in 0..200_000 {
+            h.push(rng.exponential(1.0));
+        }
+        let dev = h.max_cdf_deviation(|x| 1.0 - (-x).exp());
+        assert!(dev < 0.01, "dev={dev}");
+    }
+}

@@ -1,0 +1,208 @@
+//! Function instance lifecycle (`FunctionInstance` in the paper's package
+//! diagram).
+//!
+//! Each instance moves through the three states the paper identifies
+//! (§2 "Function Instance States"):
+//!
+//! ```text
+//!   Initializing ──────► Running ◄──────► Idle ──────► (terminated)
+//!   (cold start:          (billed)        (not billed;  after
+//!    platform + app                        expires      expiration
+//!    init; app part                        after the    threshold of
+//!    billed)                               expiration   inactivity
+//!                                          threshold)
+//! ```
+//!
+//! In scale-per-request platforms a cold request's *response* time spans the
+//! initializing and running states; the paper's "cold service time" input
+//! covers provisioning + service, so the simulator models a cold request as
+//! a single busy period of that duration (matching the reference SimFaaS
+//! implementation). Instances record their lifespan and billed time so the
+//! simulator can report developer cost and provider infrastructure cost.
+
+use super::time::SimTime;
+
+/// Dense instance identifier. Ids are allocated monotonically by the
+/// simulator, so a larger id always means a *newer* instance — the paper's
+/// newest-first routing priority reduces to "max id in the idle pool".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct InstanceId(pub u64);
+
+impl std::fmt::Display for InstanceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "i-{:08}", self.0)
+    }
+}
+
+/// Instance lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstanceState {
+    /// Spinning up (cold start in flight; the triggering request is being
+    /// provisioned-for and then served).
+    Initializing,
+    /// Serving a request (billed).
+    Running,
+    /// Warm and unoccupied; expires after the expiration threshold.
+    Idle,
+    /// Expired and reclaimed.
+    Terminated,
+}
+
+/// A single function instance plus its accounting.
+#[derive(Debug, Clone)]
+pub struct FunctionInstance {
+    pub id: InstanceId,
+    pub state: InstanceState,
+    /// Creation (cold-start trigger) time.
+    pub created_at: SimTime,
+    /// When the instance last became idle (valid while `state == Idle`).
+    pub idle_since: SimTime,
+    /// When the current busy period started (valid while busy).
+    pub busy_since: SimTime,
+    /// When the instance was terminated (valid once `Terminated`).
+    pub terminated_at: SimTime,
+    /// Generation counter guarding expiration events (bumped on every
+    /// reuse; stale expiration events carry an older generation).
+    pub generation: u64,
+    /// Cumulative billed busy time (running, plus the billed app-init part
+    /// of cold starts — the whole cold service time here, matching the
+    /// paper's billing note that app init is billed).
+    pub busy_time: f64,
+    /// Requests served (including the cold-start request).
+    pub requests_served: u64,
+    /// True if this instance has only ever served its cold-start request.
+    pub cold_only: bool,
+}
+
+impl FunctionInstance {
+    /// Create an instance that immediately starts serving its cold request.
+    pub fn cold_start(id: InstanceId, now: SimTime) -> Self {
+        FunctionInstance {
+            id,
+            state: InstanceState::Initializing,
+            created_at: now,
+            idle_since: now,
+            busy_since: now,
+            terminated_at: now,
+            generation: 0,
+            busy_time: 0.0,
+            requests_served: 0,
+            cold_only: true,
+        }
+    }
+
+    /// The cold request finishes provisioning+service and the instance
+    /// becomes idle. Returns the new generation for the expiration event.
+    pub fn finish_request(&mut self, now: SimTime, busy: f64) -> u64 {
+        debug_assert!(matches!(self.state, InstanceState::Initializing | InstanceState::Running));
+        self.state = InstanceState::Idle;
+        self.idle_since = now;
+        self.busy_time += busy;
+        self.requests_served += 1;
+        self.generation += 1;
+        self.generation
+    }
+
+    /// A warm request is routed to this (idle) instance.
+    pub fn start_warm(&mut self, now: SimTime) {
+        debug_assert_eq!(self.state, InstanceState::Idle);
+        debug_assert!(now >= self.idle_since);
+        self.state = InstanceState::Running;
+        self.cold_only = false;
+        self.busy_since = now;
+        // Bump generation so the pending expiration event is invalidated.
+        self.generation += 1;
+    }
+
+    /// Expire the instance (only valid while idle).
+    pub fn terminate(&mut self, now: SimTime) {
+        debug_assert_eq!(self.state, InstanceState::Idle);
+        self.state = InstanceState::Terminated;
+        self.terminated_at = now;
+    }
+
+    /// Lifespan from creation to termination (paper Table 1 "Average
+    /// Instance Lifespan"). Valid once terminated; for live instances,
+    /// pass the current time.
+    pub fn lifespan(&self, now: SimTime) -> f64 {
+        match self.state {
+            InstanceState::Terminated => self.terminated_at.since(self.created_at),
+            _ => now.since(self.created_at),
+        }
+    }
+
+    /// Fraction of its life this instance spent billed (busy).
+    pub fn utilization(&self, now: SimTime) -> f64 {
+        let life = self.lifespan(now);
+        if life <= 0.0 {
+            0.0
+        } else {
+            (self.busy_time / life).clamp(0.0, 1.0)
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.state == InstanceState::Idle
+    }
+
+    pub fn is_busy(&self) -> bool {
+        matches!(self.state, InstanceState::Initializing | InstanceState::Running)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: f64) -> SimTime {
+        SimTime::from_secs(s)
+    }
+
+    #[test]
+    fn cold_start_lifecycle() {
+        let mut inst = FunctionInstance::cold_start(InstanceId(0), t(0.0));
+        assert_eq!(inst.state, InstanceState::Initializing);
+        assert!(inst.is_busy());
+
+        let g = inst.finish_request(t(2.244), 2.244);
+        assert_eq!(g, 1);
+        assert!(inst.is_idle());
+        assert_eq!(inst.requests_served, 1);
+        assert!(inst.cold_only);
+
+        inst.start_warm(t(10.0));
+        assert_eq!(inst.state, InstanceState::Running);
+        assert!(!inst.cold_only);
+        assert_eq!(inst.generation, 2); // expiration from gen 1 now stale
+
+        let g = inst.finish_request(t(12.0), 2.0);
+        assert_eq!(g, 3);
+        assert!((inst.busy_time - 4.244).abs() < 1e-12);
+
+        inst.terminate(t(612.0));
+        assert_eq!(inst.state, InstanceState::Terminated);
+        assert!((inst.lifespan(t(9999.0)) - 612.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let mut inst = FunctionInstance::cold_start(InstanceId(1), t(0.0));
+        inst.finish_request(t(1.0), 1.0);
+        inst.terminate(t(601.0));
+        let u = inst.utilization(t(601.0));
+        assert!(u > 0.0 && u < 1.0);
+        assert!((u - 1.0 / 601.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn live_lifespan_uses_now() {
+        let inst = FunctionInstance::cold_start(InstanceId(2), t(5.0));
+        assert!((inst.lifespan(t(15.0)) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn id_ordering_is_creation_order() {
+        assert!(InstanceId(10) > InstanceId(9));
+        assert_eq!(format!("{}", InstanceId(3)), "i-00000003");
+    }
+}

@@ -1,0 +1,468 @@
+//! Online statistics used by the simulators and the validation harness.
+//!
+//! * [`OnlineStats`] — Welford's algorithm for per-request quantities
+//!   (response times, lifespans).
+//! * [`TimeWeighted`] — time-weighted averages for level processes
+//!   (instance counts, running counts): the paper's "average server count"
+//!   is the time integral of the count divided by the horizon.
+//! * [`P2Quantile`] — the P² streaming quantile estimator (Jain & Chlamtac),
+//!   used for tail response times without storing the trace.
+//! * [`confidence_interval_95`] — Student-t CIs across independent runs
+//!   (paper Fig. 4 plots the 95% CI over 10 simulations).
+//! * [`mape`], [`avg_pct_error`], [`ks_distance`] — the error metrics the
+//!   paper reports when validating simulation against experiment.
+
+use super::time::SimTime;
+
+/// Welford online mean/variance over scalar observations.
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            f64::NAN
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn std_err(&self) -> f64 {
+        self.std_dev() / (self.n as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Merge another accumulator (parallel reduction; Chan et al.).
+    pub fn merge(&mut self, other: &OnlineStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        let mean = self.mean + delta * other.n as f64 / n as f64;
+        let m2 = self.m2
+            + other.m2
+            + delta * delta * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Time-weighted average of a piecewise-constant level process.
+///
+/// `update(t, level)` must be called with non-decreasing `t`; the level is
+/// assumed constant on [last_t, t). The average over [start, last_t] is
+/// `integral / elapsed`.
+#[derive(Debug, Clone)]
+pub struct TimeWeighted {
+    start: SimTime,
+    last_t: SimTime,
+    level: f64,
+    integral: f64,
+    max_level: f64,
+}
+
+impl TimeWeighted {
+    pub fn new(start: SimTime, initial_level: f64) -> Self {
+        TimeWeighted {
+            start,
+            last_t: start,
+            level: initial_level,
+            integral: 0.0,
+            max_level: initial_level,
+        }
+    }
+
+    /// Advance time to `t` with the level unchanged, then set a new level.
+    #[inline]
+    pub fn update(&mut self, t: SimTime, new_level: f64) {
+        debug_assert!(t >= self.last_t, "time must be non-decreasing");
+        self.integral += self.level * t.since(self.last_t);
+        self.last_t = t;
+        self.level = new_level;
+        if new_level > self.max_level {
+            self.max_level = new_level;
+        }
+    }
+
+    /// Advance to `t` without changing the level (e.g. at the horizon).
+    #[inline]
+    pub fn advance(&mut self, t: SimTime) {
+        let lvl = self.level;
+        self.update(t, lvl);
+    }
+
+    pub fn average(&self) -> f64 {
+        let elapsed = self.last_t.since(self.start);
+        if elapsed <= 0.0 {
+            self.level
+        } else {
+            self.integral / elapsed
+        }
+    }
+
+    pub fn current(&self) -> f64 {
+        self.level
+    }
+
+    pub fn max_level(&self) -> f64 {
+        self.max_level
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.last_t.since(self.start)
+    }
+
+    /// Time of the most recent update.
+    pub fn last_time(&self) -> SimTime {
+        self.last_t
+    }
+
+    /// Integral of the level over [start, last_time].
+    pub fn integral(&self) -> f64 {
+        self.integral
+    }
+
+    /// Restart accumulation at `t` keeping the current level (used to skip
+    /// the transient warm-up window, paper Table 1 "Skip Initial Time").
+    pub fn reset_at(&mut self, t: SimTime) {
+        self.start = t;
+        self.last_t = t;
+        self.integral = 0.0;
+        self.max_level = self.level;
+    }
+}
+
+/// P² streaming quantile estimator (Jain & Chlamtac 1985).
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    p: f64,
+    /// Marker heights.
+    q: [f64; 5],
+    /// Marker positions (1-based).
+    n: [f64; 5],
+    /// Desired positions.
+    np: [f64; 5],
+    /// Position increments.
+    dn: [f64; 5],
+    count: usize,
+    initial: Vec<f64>,
+}
+
+impl P2Quantile {
+    pub fn new(p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p));
+        P2Quantile {
+            p,
+            q: [0.0; 5],
+            n: [1.0, 2.0, 3.0, 4.0, 5.0],
+            np: [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            count: 0,
+            initial: Vec::with_capacity(5),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        if self.initial.len() < 5 {
+            self.initial.push(x);
+            if self.initial.len() == 5 {
+                self.initial.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                for i in 0..5 {
+                    self.q[i] = self.initial[i];
+                }
+            }
+            return;
+        }
+        // Find cell k.
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            for i in 0..4 {
+                if x >= self.q[i] && x < self.q[i + 1] {
+                    k = i;
+                    break;
+                }
+            }
+            k
+        };
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.np[i] += self.dn[i];
+        }
+        // Adjust interior markers.
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let d = d.signum();
+                let qp = self.parabolic(i, d);
+                self.q[i] = if self.q[i - 1] < qp && qp < self.q[i + 1] {
+                    qp
+                } else {
+                    self.linear(i, d)
+                };
+                self.n[i] += d;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let q = &self.q;
+        let n = &self.n;
+        q[i] + d / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = (i as f64 + d) as usize;
+        self.q[i] + d * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+    }
+
+    pub fn quantile(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if self.initial.len() < 5 {
+            let mut v = self.initial.clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let idx = ((v.len() as f64 - 1.0) * self.p).round() as usize;
+            return v[idx];
+        }
+        self.q[2]
+    }
+}
+
+/// Two-sided 95% Student-t critical values; index = degrees of freedom.
+/// Values beyond the table fall back to the normal quantile 1.96.
+const T_95: [f64; 31] = [
+    f64::NAN, 12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201,
+    2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
+    2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+];
+
+/// 95% confidence half-width of the mean of `xs` (independent runs).
+pub fn confidence_interval_95(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len();
+    assert!(n >= 2, "CI needs at least 2 observations");
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n as f64 - 1.0);
+    let se = (var / n as f64).sqrt();
+    let df = n - 1;
+    let t = if df < T_95.len() { T_95[df] } else { 1.96 };
+    (mean, t * se)
+}
+
+/// Mean Absolute Percentage Error between predictions and references,
+/// in percent — the metric the paper reports for Figs. 7 and 8.
+pub fn mape(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    assert!(!pred.is_empty());
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for (p, t) in pred.iter().zip(truth) {
+        if *t != 0.0 {
+            acc += ((p - t) / t).abs();
+            n += 1;
+        }
+    }
+    100.0 * acc / n.max(1) as f64
+}
+
+/// Average percent error |p-t|/t, identical to MAPE; the paper labels the
+/// Fig. 6 metric "average error", we keep both names for clarity at call
+/// sites.
+pub fn avg_pct_error(pred: &[f64], truth: &[f64]) -> f64 {
+    mape(pred, truth)
+}
+
+/// Two-sample Kolmogorov–Smirnov distance between empirical CDFs.
+pub fn ks_distance(a: &[f64], b: &[f64]) -> f64 {
+    assert!(!a.is_empty() && !b.is_empty());
+    let mut a = a.to_vec();
+    let mut b = b.to_vec();
+    a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut d: f64 = 0.0;
+    while i < a.len() && j < b.len() {
+        let x = a[i].min(b[j]);
+        while i < a.len() && a[i] <= x {
+            i += 1;
+        }
+        while j < b.len() && b[j] <= x {
+            j += 1;
+        }
+        let fa = i as f64 / a.len() as f64;
+        let fb = j as f64 / b.len() as f64;
+        d = d.max((fa - fb).abs());
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::rng::Rng;
+
+    #[test]
+    fn online_stats_matches_batch() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut s = OnlineStats::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean() - 4.0).abs() < 1e-12);
+        let batch_var = xs.iter().map(|x| (x - 4.0) * (x - 4.0)).sum::<f64>() / 4.0;
+        assert!((s.variance() - batch_var).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 10.0);
+    }
+
+    #[test]
+    fn online_stats_merge_equals_single_pass() {
+        let mut rng = Rng::new(11);
+        let xs: Vec<f64> = (0..1000).map(|_| rng.normal(3.0, 2.0)).collect();
+        let mut whole = OnlineStats::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut a = OnlineStats::new();
+        let mut b = OnlineStats::new();
+        for &x in &xs[..400] {
+            a.push(x);
+        }
+        for &x in &xs[400..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-10);
+        assert!((a.variance() - whole.variance()).abs() < 1e-8);
+    }
+
+    #[test]
+    fn time_weighted_average() {
+        let mut tw = TimeWeighted::new(SimTime::ZERO, 0.0);
+        tw.update(SimTime::from_secs(10.0), 2.0); // level 0 on [0,10)
+        tw.update(SimTime::from_secs(20.0), 4.0); // level 2 on [10,20)
+        tw.advance(SimTime::from_secs(30.0)); // level 4 on [20,30)
+        // integral = 0*10 + 2*10 + 4*10 = 60 over 30s
+        assert!((tw.average() - 2.0).abs() < 1e-12);
+        assert_eq!(tw.max_level(), 4.0);
+        assert_eq!(tw.current(), 4.0);
+    }
+
+    #[test]
+    fn time_weighted_reset_skips_warmup() {
+        let mut tw = TimeWeighted::new(SimTime::ZERO, 100.0);
+        tw.update(SimTime::from_secs(10.0), 1.0);
+        tw.reset_at(SimTime::from_secs(10.0));
+        tw.advance(SimTime::from_secs(20.0));
+        assert!((tw.average() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p2_approximates_quantiles() {
+        let mut rng = Rng::new(12);
+        let mut p50 = P2Quantile::new(0.5);
+        let mut p99 = P2Quantile::new(0.99);
+        let mut xs = Vec::new();
+        for _ in 0..100_000 {
+            let x = rng.exponential(1.0);
+            p50.push(x);
+            p99.push(x);
+            xs.push(x);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let true_p50 = xs[xs.len() / 2];
+        let true_p99 = xs[(xs.len() as f64 * 0.99) as usize];
+        assert!((p50.quantile() - true_p50).abs() / true_p50 < 0.05);
+        assert!((p99.quantile() - true_p99).abs() / true_p99 < 0.1);
+    }
+
+    #[test]
+    fn ci_95_sane() {
+        let xs = [10.0, 10.1, 9.9, 10.05, 9.95, 10.0, 10.02, 9.98, 10.03, 9.97];
+        let (mean, hw) = confidence_interval_95(&xs);
+        assert!((mean - 10.0).abs() < 0.01);
+        assert!(hw > 0.0 && hw < 0.1);
+    }
+
+    #[test]
+    fn mape_and_ks() {
+        assert!((mape(&[1.1, 2.2], &[1.0, 2.0]) - 10.0).abs() < 1e-9);
+        let a: Vec<f64> = (0..1000).map(|i| i as f64 / 1000.0).collect();
+        let b: Vec<f64> = (0..1000).map(|i| i as f64 / 1000.0).collect();
+        assert!(ks_distance(&a, &b) < 0.01);
+        let c: Vec<f64> = a.iter().map(|x| x + 0.5).collect();
+        assert!(ks_distance(&a, &c) > 0.4);
+    }
+}

@@ -1,0 +1,36 @@
+//! The SimFaaS discrete-event simulation core.
+//!
+//! Mirrors the paper's package diagram (Fig. 2): [`process`] is
+//! `SimProcess`, [`instance`] is `FunctionInstance`, [`simulator`] is
+//! `ServerlessSimulator`, [`temporal`] is `ServerlessTemporalSimulator`,
+//! and [`metrics`]/[`hist`] are the `Utility` helpers. [`par_simulator`] is
+//! the `ParServerlessSimulator` extension (§3.1).
+
+pub mod event;
+pub mod hist;
+pub mod instance;
+pub mod metrics;
+pub mod par_simulator;
+pub mod process;
+pub mod results;
+pub mod rng;
+pub mod simulator;
+pub mod temporal;
+pub mod time;
+
+pub use event::{Event, EventQueue};
+pub use hist::{CountDistribution, Histogram};
+pub use instance::{FunctionInstance, InstanceId, InstanceState};
+pub use metrics::{confidence_interval_95, ks_distance, mape, OnlineStats, P2Quantile, TimeWeighted};
+pub use par_simulator::ParServerlessSimulator;
+pub use process::{
+    ConstProcess, EmpiricalProcess, ExpProcess, GammaProcess, GaussianProcess,
+    LogNormalProcess, MmppProcess, ParetoProcess, SimProcess, WeibullProcess,
+};
+pub use results::SimResults;
+pub use rng::Rng;
+pub use simulator::{
+    CountSample, RequestLogEntry, RequestOutcome, ServerlessSimulator, SimConfig,
+};
+pub use temporal::{InitialState, ServerlessTemporalSimulator, TemporalResults};
+pub use time::SimTime;

@@ -1,0 +1,390 @@
+//! `ParServerlessSimulator` — the paper's extensibility demonstration
+//! (§3.1): serverless platforms whose instances admit **queuing / a
+//! concurrency value > 1** (Google Cloud Run, Knative; paper Fig. 1) while
+//! keeping the scale-per-request expiration behaviour.
+//!
+//! Each instance can hold up to `concurrency_value` requests at once. An
+//! arrival is routed to the *newest* instance with spare capacity
+//! (consistent with the paper's newest-first routing priority); if none has
+//! capacity and the platform is below the maximum concurrency level, a new
+//! instance cold-starts. Requests in excess of an instance's processor share
+//! its capacity: with k requests in service the per-request rate is
+//! unaffected up to `concurrency_value` (Cloud Run semantics — concurrent
+//! slots, not processor sharing), which reduces to scale-per-request when
+//! `concurrency_value == 1`.
+
+use super::event::{Event, EventQueue};
+use super::hist::CountDistribution;
+use super::instance::InstanceId;
+use super::metrics::{OnlineStats, TimeWeighted};
+use super::results::SimResults;
+use super::rng::Rng;
+use super::simulator::SimConfig;
+use super::time::SimTime;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ParState {
+    Busy,
+    Idle,
+    Terminated,
+}
+
+#[derive(Debug, Clone)]
+struct ParInstance {
+    state: ParState,
+    in_flight: u32,
+    generation: u64,
+    created_at: SimTime,
+    busy_accum: f64,
+    /// Start of the current "has in-flight work" period.
+    busy_since: SimTime,
+    terminated_at: SimTime,
+}
+
+/// Scale-per-request simulator generalized with a per-instance concurrency
+/// value (paper Fig. 1: one instance absorbs `c` concurrent requests).
+pub struct ParServerlessSimulator {
+    cfg: SimConfig,
+    pub concurrency_value: u32,
+    rng: Rng,
+    events: EventQueue,
+    now: SimTime,
+    instances: Vec<ParInstance>,
+    /// Instances with spare slots, keyed by id (newest = max).
+    available: BTreeMap<InstanceId, u32>,
+    live_count: usize,
+    /// Total in-flight requests.
+    in_flight: u64,
+
+    stats_started: bool,
+    stats_start: SimTime,
+    total_requests: u64,
+    cold_requests: u64,
+    warm_requests: u64,
+    rejected_requests: u64,
+    instances_created: u64,
+    instances_expired: u64,
+    server_tw: TimeWeighted,
+    running_tw: TimeWeighted,
+    busy_inst_tw: TimeWeighted,
+    count_dist: CountDistribution,
+    lifespan_stats: OnlineStats,
+    response_stats: OnlineStats,
+    warm_response_stats: OnlineStats,
+    cold_response_stats: OnlineStats,
+    billed_seconds: f64,
+}
+
+impl ParServerlessSimulator {
+    pub fn new(cfg: SimConfig, concurrency_value: u32) -> Self {
+        assert!(concurrency_value >= 1);
+        let rng = Rng::new(cfg.seed);
+        let start = SimTime::ZERO;
+        ParServerlessSimulator {
+            concurrency_value,
+            rng,
+            events: EventQueue::with_capacity(1024),
+            now: start,
+            instances: Vec::new(),
+            available: BTreeMap::new(),
+            live_count: 0,
+            in_flight: 0,
+            stats_started: cfg.skip_initial <= 0.0,
+            stats_start: SimTime::from_secs(cfg.skip_initial.max(0.0)),
+            total_requests: 0,
+            cold_requests: 0,
+            warm_requests: 0,
+            rejected_requests: 0,
+            instances_created: 0,
+            instances_expired: 0,
+            server_tw: TimeWeighted::new(start, 0.0),
+            running_tw: TimeWeighted::new(start, 0.0),
+            busy_inst_tw: TimeWeighted::new(start, 0.0),
+            count_dist: CountDistribution::new(start, 0),
+            lifespan_stats: OnlineStats::new(),
+            response_stats: OnlineStats::new(),
+            warm_response_stats: OnlineStats::new(),
+            cold_response_stats: OnlineStats::new(),
+            billed_seconds: 0.0,
+            cfg,
+        }
+    }
+
+    fn sync(&mut self) {
+        self.server_tw.update(self.now, self.live_count as f64);
+        self.running_tw.update(self.now, self.in_flight as f64);
+        let busy_instances = self
+            .instances
+            .iter()
+            .filter(|i| i.state == ParState::Busy)
+            .count() as f64;
+        self.busy_inst_tw.update(self.now, busy_instances);
+        self.count_dist.update(self.now, self.live_count);
+    }
+
+    fn maybe_start_stats(&mut self, t: SimTime) {
+        if self.stats_started || t < self.stats_start {
+            return;
+        }
+        let b = self.stats_start;
+        self.server_tw.advance(b);
+        self.running_tw.advance(b);
+        self.busy_inst_tw.advance(b);
+        self.count_dist.finish(b);
+        self.server_tw.reset_at(b);
+        self.running_tw.reset_at(b);
+        self.busy_inst_tw.reset_at(b);
+        self.count_dist.reset_at(b);
+        self.stats_started = true;
+    }
+
+    fn handle_arrival(&mut self) {
+        if self.stats_started {
+            self.total_requests += 1;
+        }
+        // Newest instance with spare capacity.
+        let target = self.available.iter().next_back().map(|(&id, &slots)| (id, slots));
+        if let Some((id, slots)) = target {
+            let inst = &mut self.instances[id.0 as usize];
+            if inst.state == ParState::Idle {
+                inst.state = ParState::Busy;
+                inst.busy_since = self.now;
+                inst.generation += 1; // cancel pending expiration
+            }
+            inst.in_flight += 1;
+            self.in_flight += 1;
+            if slots <= 1 {
+                self.available.remove(&id);
+            } else {
+                self.available.insert(id, slots - 1);
+            }
+            let service = self.cfg.warm_service.sample(&mut self.rng);
+            self.events.schedule(self.now.after(service), Event::Departure(id));
+            if self.stats_started {
+                self.warm_requests += 1;
+                self.response_stats.push(service);
+                self.warm_response_stats.push(service);
+            }
+        } else if self.live_count < self.cfg.max_concurrency {
+            let id = InstanceId(self.instances.len() as u64);
+            self.instances.push(ParInstance {
+                state: ParState::Busy,
+                in_flight: 1,
+                generation: 0,
+                created_at: self.now,
+                busy_accum: 0.0,
+                busy_since: self.now,
+                terminated_at: self.now,
+            });
+            self.live_count += 1;
+            self.in_flight += 1;
+            if self.concurrency_value > 1 {
+                self.available.insert(id, self.concurrency_value - 1);
+            }
+            let service = self.cfg.cold_service.sample(&mut self.rng);
+            self.events.schedule(self.now.after(service), Event::Departure(id));
+            if self.stats_started {
+                self.cold_requests += 1;
+                self.instances_created += 1;
+                self.response_stats.push(service);
+                self.cold_response_stats.push(service);
+            }
+        } else if self.stats_started {
+            self.rejected_requests += 1;
+        }
+        self.sync();
+        let gap = self.cfg.arrival.sample(&mut self.rng);
+        self.events.schedule(self.now.after(gap), Event::Arrival);
+    }
+
+    fn handle_departure(&mut self, id: InstanceId) {
+        let schedule_expiration;
+        let gen;
+        {
+            let inst = &mut self.instances[id.0 as usize];
+            debug_assert!(inst.in_flight > 0);
+            inst.in_flight -= 1;
+            self.in_flight -= 1;
+            if inst.in_flight == 0 {
+                // Busy period ends; bill it once (slots share the instance).
+                let busy = self.now.since(inst.busy_since).max(0.0);
+                inst.busy_accum += busy;
+                if self.stats_started {
+                    self.billed_seconds += busy;
+                }
+                inst.state = ParState::Idle;
+                inst.generation += 1;
+                schedule_expiration = true;
+                gen = inst.generation;
+            } else {
+                schedule_expiration = false;
+                gen = inst.generation;
+            }
+        }
+        // Free one slot.
+        let slots = self.available.get(&id).copied().unwrap_or(0) + 1;
+        self.available.insert(id, slots.min(self.concurrency_value));
+        if schedule_expiration {
+            let threshold = self.cfg.expiration_threshold;
+            self.events.schedule(self.now.after(threshold), Event::Expiration { id, gen });
+        }
+        self.sync();
+    }
+
+    fn handle_expiration(&mut self, id: InstanceId, gen: u64) {
+        let inst = &mut self.instances[id.0 as usize];
+        if inst.generation != gen || inst.state != ParState::Idle {
+            return;
+        }
+        inst.state = ParState::Terminated;
+        inst.terminated_at = self.now;
+        let lifespan = self.now.since(inst.created_at);
+        self.available.remove(&id);
+        self.live_count -= 1;
+        if self.stats_started {
+            self.instances_expired += 1;
+            self.lifespan_stats.push(lifespan);
+        }
+        self.sync();
+    }
+
+    pub fn run(&mut self) -> SimResults {
+        let horizon = SimTime::from_secs(self.cfg.horizon);
+        let first = self.cfg.arrival.sample(&mut self.rng);
+        self.events.schedule(SimTime::from_secs(first), Event::Arrival);
+        self.events.schedule(horizon, Event::Horizon);
+        while let Some((t, ev)) = self.events.pop() {
+            self.maybe_start_stats(t);
+            self.now = t;
+            match ev {
+                Event::Arrival => self.handle_arrival(),
+                Event::Departure(id) => self.handle_departure(id),
+                Event::Expiration { id, gen } => self.handle_expiration(id, gen),
+                Event::ProvisioningDone(_) => unreachable!(),
+                Event::Horizon => break,
+            }
+        }
+        self.now = horizon;
+        self.server_tw.advance(horizon);
+        self.running_tw.advance(horizon);
+        self.busy_inst_tw.advance(horizon);
+        self.count_dist.finish(horizon);
+
+        let measured = horizon.since(self.stats_start).max(0.0);
+        let served = self.cold_requests + self.warm_requests;
+        let avg_server = self.server_tw.average();
+        let avg_busy_inst = self.busy_inst_tw.average();
+        SimResults {
+            measured_time: measured,
+            total_requests: self.total_requests,
+            cold_requests: self.cold_requests,
+            warm_requests: self.warm_requests,
+            rejected_requests: self.rejected_requests,
+            cold_start_prob: if served > 0 {
+                self.cold_requests as f64 / served as f64
+            } else {
+                0.0
+            },
+            rejection_prob: if self.total_requests > 0 {
+                self.rejected_requests as f64 / self.total_requests as f64
+            } else {
+                0.0
+            },
+            avg_lifespan: self.lifespan_stats.mean(),
+            instances_created: self.instances_created,
+            instances_expired: self.instances_expired,
+            avg_server_count: avg_server,
+            avg_running_count: self.running_tw.average(),
+            avg_idle_count: avg_server - avg_busy_inst,
+            max_server_count: self.server_tw.max_level(),
+            wasted_capacity: if avg_server > 0.0 {
+                (avg_server - avg_busy_inst) / avg_server
+            } else {
+                0.0
+            },
+            avg_response_time: self.response_stats.mean(),
+            avg_warm_response_time: self.warm_response_stats.mean(),
+            avg_cold_response_time: self.cold_response_stats.mean(),
+            response_p50: f64::NAN,
+            response_p95: f64::NAN,
+            response_p99: f64::NAN,
+            billed_instance_seconds: self.billed_seconds,
+            observed_arrival_rate: if measured > 0.0 {
+                self.total_requests as f64 / measured
+            } else {
+                0.0
+            },
+            instance_count_pmf: self.count_dist.pmf(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::process::ExpProcess;
+    use crate::sim::simulator::ServerlessSimulator;
+    use std::sync::Arc;
+
+    fn cfg(rate: f64, horizon: f64, seed: u64) -> SimConfig {
+        SimConfig {
+            arrival: Arc::new(ExpProcess::with_rate(rate)),
+            batch_size: None,
+            warm_service: Arc::new(ExpProcess::with_mean(1.991)),
+            cold_service: Arc::new(ExpProcess::with_mean(2.244)),
+            expiration_threshold: 600.0,
+            expiration_process: None,
+            max_concurrency: 1000,
+            horizon,
+            skip_initial: 100.0,
+            seed,
+            capture_request_log: false,
+            sample_interval: 0.0,
+        }
+    }
+
+    #[test]
+    fn concurrency_one_matches_scale_per_request() {
+        // With c=1 the generalized simulator must agree (statistically)
+        // with ServerlessSimulator on the same workload.
+        let r1 = ParServerlessSimulator::new(cfg(0.9, 100_000.0, 1), 1).run();
+        let r2 = ServerlessSimulator::new(cfg(0.9, 100_000.0, 1)).run();
+        assert!((r1.avg_server_count - r2.avg_server_count).abs() / r2.avg_server_count < 0.05);
+        assert!((r1.avg_running_count - r2.avg_running_count).abs() / r2.avg_running_count < 0.05);
+        // Cold start probabilities are both sub-1%.
+        assert!(r1.cold_start_prob < 0.01 && r2.cold_start_prob < 0.01);
+    }
+
+    #[test]
+    fn higher_concurrency_needs_fewer_instances() {
+        // Paper Fig. 1: c=3 absorbs the same traffic with fewer instances.
+        let r1 = ParServerlessSimulator::new(cfg(3.0, 100_000.0, 2), 1).run();
+        let r3 = ParServerlessSimulator::new(cfg(3.0, 100_000.0, 2), 3).run();
+        assert!(
+            r3.avg_server_count < r1.avg_server_count,
+            "c=3 {} vs c=1 {}",
+            r3.avg_server_count,
+            r1.avg_server_count
+        );
+        assert!(r3.cold_start_prob <= r1.cold_start_prob + 0.01);
+    }
+
+    #[test]
+    fn in_flight_never_exceeds_capacity() {
+        let mut sim = ParServerlessSimulator::new(cfg(5.0, 5_000.0, 3), 4);
+        let _ = sim.run();
+        for inst in &sim.instances {
+            assert!(inst.in_flight <= 4);
+        }
+    }
+
+    #[test]
+    fn rejection_when_capacity_exhausted() {
+        let mut c = cfg(50.0, 5_000.0, 4);
+        c.max_concurrency = 3;
+        let r = ParServerlessSimulator::new(c, 2).run();
+        // Offered load 50*2 ~ 100 >> 6 slots.
+        assert!(r.rejection_prob > 0.5);
+    }
+}

@@ -1,0 +1,546 @@
+//! Stochastic processes (`SimProcess` in the paper's package diagram).
+//!
+//! A [`SimProcess`] generates the inter-event times that drive the simulator:
+//! request inter-arrival times, warm service times, cold service times, and
+//! (optionally) non-deterministic expiration thresholds. The paper ships
+//! exponential, deterministic ("fixed-interval") and Gaussian processes and
+//! lets users plug their own by subclassing; we mirror that with a trait and
+//! provide a wider set of built-ins plus trace-driven (`Empirical`) and
+//! Markov-modulated (`Mmpp`) processes, which the paper calls out as beyond
+//! the reach of its Markovian analytical predecessors.
+//!
+//! Where a closed form exists, processes also expose their theoretical
+//! `mean`, `pdf` and `cdf` so simulation output can be compared against an
+//! analytical model (paper §3: "the user can include their analytically
+//! produced PDF and CDF functions to be compared against the simulation
+//! trace results").
+
+use super::rng::Rng;
+
+/// A stochastic process generating non-negative durations (seconds).
+pub trait SimProcess: Send + Sync {
+    /// Draw the next duration.
+    fn sample(&self, rng: &mut Rng) -> f64;
+
+    /// Theoretical mean, if known in closed form.
+    fn mean(&self) -> Option<f64> {
+        None
+    }
+
+    /// Theoretical PDF at `x`, if known.
+    fn pdf(&self, _x: f64) -> Option<f64> {
+        None
+    }
+
+    /// Theoretical CDF at `x`, if known.
+    fn cdf(&self, _x: f64) -> Option<f64> {
+        None
+    }
+
+    /// Human-readable description (used in reports).
+    fn describe(&self) -> String;
+}
+
+/// Exponential(rate) process — the paper's default for arrivals and service.
+#[derive(Debug, Clone)]
+pub struct ExpProcess {
+    pub rate: f64,
+}
+
+impl ExpProcess {
+    /// From rate (events per second).
+    pub fn with_rate(rate: f64) -> Self {
+        assert!(rate > 0.0, "rate must be positive");
+        ExpProcess { rate }
+    }
+
+    /// From mean duration (seconds).
+    pub fn with_mean(mean: f64) -> Self {
+        assert!(mean > 0.0, "mean must be positive");
+        ExpProcess { rate: 1.0 / mean }
+    }
+}
+
+impl SimProcess for ExpProcess {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        rng.exponential(self.rate)
+    }
+
+    fn mean(&self) -> Option<f64> {
+        Some(1.0 / self.rate)
+    }
+
+    fn pdf(&self, x: f64) -> Option<f64> {
+        Some(if x < 0.0 { 0.0 } else { self.rate * (-self.rate * x).exp() })
+    }
+
+    fn cdf(&self, x: f64) -> Option<f64> {
+        Some(if x < 0.0 { 0.0 } else { 1.0 - (-self.rate * x).exp() })
+    }
+
+    fn describe(&self) -> String {
+        format!("Exponential(rate={:.6}/s, mean={:.6}s)", self.rate, 1.0 / self.rate)
+    }
+}
+
+/// Deterministic (fixed-interval) process — e.g. cron-triggered workloads.
+#[derive(Debug, Clone)]
+pub struct ConstProcess {
+    pub value: f64,
+}
+
+impl ConstProcess {
+    pub fn new(value: f64) -> Self {
+        assert!(value >= 0.0, "duration must be non-negative");
+        ConstProcess { value }
+    }
+}
+
+impl SimProcess for ConstProcess {
+    fn sample(&self, _rng: &mut Rng) -> f64 {
+        self.value
+    }
+
+    fn mean(&self) -> Option<f64> {
+        Some(self.value)
+    }
+
+    fn cdf(&self, x: f64) -> Option<f64> {
+        Some(if x >= self.value { 1.0 } else { 0.0 })
+    }
+
+    fn describe(&self) -> String {
+        format!("Deterministic({:.6}s)", self.value)
+    }
+}
+
+/// Gaussian process truncated at zero (durations cannot be negative).
+/// Matches the paper's bundled Gaussian example.
+#[derive(Debug, Clone)]
+pub struct GaussianProcess {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl GaussianProcess {
+    pub fn new(mean: f64, std: f64) -> Self {
+        assert!(std >= 0.0);
+        GaussianProcess { mean, std }
+    }
+}
+
+impl SimProcess for GaussianProcess {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        rng.normal(self.mean, self.std).max(0.0)
+    }
+
+    fn mean(&self) -> Option<f64> {
+        // Exact only when truncation mass is negligible; good enough for the
+        // service-time regimes the simulator targets (mean >> std).
+        Some(self.mean)
+    }
+
+    fn describe(&self) -> String {
+        format!("Gaussian(mean={:.6}s, std={:.6}s, truncated at 0)", self.mean, self.std)
+    }
+}
+
+/// LogNormal process parameterized by the *observed* mean and coefficient of
+/// variation (handier for fitting measured response times than mu/sigma).
+#[derive(Debug, Clone)]
+pub struct LogNormalProcess {
+    mu: f64,
+    sigma: f64,
+}
+
+impl LogNormalProcess {
+    /// From underlying normal parameters.
+    pub fn from_mu_sigma(mu: f64, sigma: f64) -> Self {
+        assert!(sigma > 0.0);
+        LogNormalProcess { mu, sigma }
+    }
+
+    /// From target mean and coefficient of variation (std/mean) of the
+    /// lognormal variate itself.
+    pub fn from_mean_cv(mean: f64, cv: f64) -> Self {
+        assert!(mean > 0.0 && cv > 0.0);
+        let sigma2 = (1.0 + cv * cv).ln();
+        let mu = mean.ln() - sigma2 / 2.0;
+        LogNormalProcess { mu, sigma: sigma2.sqrt() }
+    }
+}
+
+impl SimProcess for LogNormalProcess {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        rng.lognormal(self.mu, self.sigma)
+    }
+
+    fn mean(&self) -> Option<f64> {
+        Some((self.mu + self.sigma * self.sigma / 2.0).exp())
+    }
+
+    fn describe(&self) -> String {
+        format!("LogNormal(mu={:.4}, sigma={:.4})", self.mu, self.sigma)
+    }
+}
+
+/// Gamma process (shape, scale).
+#[derive(Debug, Clone)]
+pub struct GammaProcess {
+    pub shape: f64,
+    pub scale: f64,
+}
+
+impl GammaProcess {
+    pub fn new(shape: f64, scale: f64) -> Self {
+        assert!(shape > 0.0 && scale > 0.0);
+        GammaProcess { shape, scale }
+    }
+}
+
+impl SimProcess for GammaProcess {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        rng.gamma(self.shape, self.scale)
+    }
+
+    fn mean(&self) -> Option<f64> {
+        Some(self.shape * self.scale)
+    }
+
+    fn describe(&self) -> String {
+        format!("Gamma(shape={:.4}, scale={:.4})", self.shape, self.scale)
+    }
+}
+
+/// Weibull process (shape, scale) — common fit for cold-start provisioning.
+#[derive(Debug, Clone)]
+pub struct WeibullProcess {
+    pub shape: f64,
+    pub scale: f64,
+}
+
+impl WeibullProcess {
+    pub fn new(shape: f64, scale: f64) -> Self {
+        assert!(shape > 0.0 && scale > 0.0);
+        WeibullProcess { shape, scale }
+    }
+}
+
+impl SimProcess for WeibullProcess {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        rng.weibull(self.shape, self.scale)
+    }
+
+    fn mean(&self) -> Option<f64> {
+        Some(self.scale * gamma_fn(1.0 + 1.0 / self.shape))
+    }
+
+    fn cdf(&self, x: f64) -> Option<f64> {
+        Some(if x < 0.0 {
+            0.0
+        } else {
+            1.0 - (-(x / self.scale).powf(self.shape)).exp()
+        })
+    }
+
+    fn describe(&self) -> String {
+        format!("Weibull(shape={:.4}, scale={:.4})", self.shape, self.scale)
+    }
+}
+
+/// Pareto process — heavy-tailed service times (batch/analytics workloads).
+#[derive(Debug, Clone)]
+pub struct ParetoProcess {
+    pub x_m: f64,
+    pub alpha: f64,
+}
+
+impl ParetoProcess {
+    pub fn new(x_m: f64, alpha: f64) -> Self {
+        assert!(x_m > 0.0 && alpha > 0.0);
+        ParetoProcess { x_m, alpha }
+    }
+}
+
+impl SimProcess for ParetoProcess {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        rng.pareto(self.x_m, self.alpha)
+    }
+
+    fn mean(&self) -> Option<f64> {
+        if self.alpha > 1.0 {
+            Some(self.alpha * self.x_m / (self.alpha - 1.0))
+        } else {
+            None // infinite mean
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("Pareto(x_m={:.4}, alpha={:.4})", self.x_m, self.alpha)
+    }
+}
+
+/// Empirical process: resamples i.i.d. from a measured trace (bootstrap).
+/// This is how measured Lambda response-time logs plug into the simulator.
+#[derive(Debug, Clone)]
+pub struct EmpiricalProcess {
+    samples: Vec<f64>,
+    mean: f64,
+}
+
+impl EmpiricalProcess {
+    pub fn new(samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty(), "empirical process needs samples");
+        assert!(samples.iter().all(|&x| x >= 0.0 && x.is_finite()));
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        EmpiricalProcess { samples, mean }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
+impl SimProcess for EmpiricalProcess {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        self.samples[rng.below(self.samples.len() as u64) as usize]
+    }
+
+    fn mean(&self) -> Option<f64> {
+        Some(self.mean)
+    }
+
+    fn cdf(&self, x: f64) -> Option<f64> {
+        let below = self.samples.iter().filter(|&&s| s <= x).count();
+        Some(below as f64 / self.samples.len() as f64)
+    }
+
+    fn describe(&self) -> String {
+        format!("Empirical(n={}, mean={:.6}s)", self.samples.len(), self.mean)
+    }
+}
+
+/// Markov-modulated Poisson process (2-state on/off), for bursty arrivals —
+/// explicitly beyond what the paper's Markovian analytical models handle.
+///
+/// NOTE: unlike the other processes, MMPP is *stateful* (it remembers its
+/// current phase). Sharing one instance across simulator runs (e.g. by
+/// cloning a `SimConfig`) carries the phase over; construct a fresh process
+/// per run when bit-reproducibility across runs is required.
+///
+/// The process alternates between two exponential-rate phases; phase
+/// residence times are exponential. `sample` returns the next inter-arrival
+/// time accounting for phase changes between events. Interior mutability via
+/// atomically-updated phase state is intentionally avoided: MMPP keeps its
+/// phase in a `std::sync::Mutex` because `SimProcess` is `&self` (processes
+/// are shared) — contention is nil in the single-threaded sim loop.
+#[derive(Debug)]
+pub struct MmppProcess {
+    pub rate: [f64; 2],
+    /// Phase switch rates: switch[i] = rate of leaving phase i.
+    pub switch: [f64; 2],
+    state: std::sync::Mutex<MmppState>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct MmppState {
+    phase: usize,
+    /// Remaining time in the current phase.
+    residual: f64,
+}
+
+impl MmppProcess {
+    pub fn new(rate: [f64; 2], switch: [f64; 2]) -> Self {
+        assert!(rate.iter().all(|&r| r > 0.0));
+        assert!(switch.iter().all(|&r| r > 0.0));
+        MmppProcess {
+            rate,
+            switch,
+            state: std::sync::Mutex::new(MmppState { phase: 0, residual: 0.0 }),
+        }
+    }
+
+    /// Long-run average arrival rate.
+    pub fn average_rate(&self) -> f64 {
+        // Stationary phase probabilities of a 2-state CTMC.
+        let p0 = self.switch[1] / (self.switch[0] + self.switch[1]);
+        p0 * self.rate[0] + (1.0 - p0) * self.rate[1]
+    }
+}
+
+impl SimProcess for MmppProcess {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        let mut st = self.state.lock().unwrap();
+        if st.residual <= 0.0 {
+            st.residual = rng.exponential(self.switch[st.phase]);
+        }
+        let mut elapsed = 0.0;
+        loop {
+            let gap = rng.exponential(self.rate[st.phase]);
+            if gap <= st.residual {
+                st.residual -= gap;
+                return elapsed + gap;
+            }
+            // Phase expires before the next arrival; advance to phase switch.
+            elapsed += st.residual;
+            st.phase = 1 - st.phase;
+            st.residual = rng.exponential(self.switch[st.phase]);
+        }
+    }
+
+    fn mean(&self) -> Option<f64> {
+        Some(1.0 / self.average_rate())
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "MMPP(rates=[{:.4},{:.4}]/s, switch=[{:.4},{:.4}]/s, avg_rate={:.4}/s)",
+            self.rate[0],
+            self.rate[1],
+            self.switch[0],
+            self.switch[1],
+            self.average_rate()
+        )
+    }
+}
+
+/// Lanczos approximation of the Gamma function (for Weibull mean, CI widths).
+pub fn gamma_fn(x: f64) -> f64 {
+    // g = 7, n = 9 Lanczos coefficients.
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        std::f64::consts::PI / ((std::f64::consts::PI * x).sin() * gamma_fn(1.0 - x))
+    } else {
+        let x = x - 1.0;
+        let mut a = C[0];
+        let t = x + G + 0.5;
+        for (i, &c) in C.iter().enumerate().skip(1) {
+            a += c / (x + i as f64);
+        }
+        (2.0 * std::f64::consts::PI).sqrt() * t.powf(x + 0.5) * (-t).exp() * a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_mean(p: &dyn SimProcess, n: usize, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| p.sample(&mut rng)).sum::<f64>() / n as f64
+    }
+
+    #[test]
+    fn exp_process_matches_theory() {
+        let p = ExpProcess::with_rate(0.9);
+        let m = sample_mean(&p, 200_000, 1);
+        assert!((m - p.mean().unwrap()).abs() / p.mean().unwrap() < 0.01);
+        assert!((p.cdf(0.0).unwrap() - 0.0).abs() < 1e-12);
+        assert!((p.cdf(f64::INFINITY).unwrap() - 1.0).abs() < 1e-12);
+        // PDF integrates to ~1 (trapezoid over [0, 20/rate])
+        let mut acc = 0.0;
+        let h = 0.001;
+        let mut x = 0.0;
+        while x < 20.0 / 0.9 {
+            acc += h * (p.pdf(x).unwrap() + p.pdf(x + h).unwrap()) / 2.0;
+            x += h;
+        }
+        assert!((acc - 1.0).abs() < 1e-3, "integral={acc}");
+    }
+
+    #[test]
+    fn exp_from_mean() {
+        let p = ExpProcess::with_mean(2.0);
+        assert!((p.rate - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn const_process() {
+        let p = ConstProcess::new(3.0);
+        let mut rng = Rng::new(1);
+        assert_eq!(p.sample(&mut rng), 3.0);
+        assert_eq!(p.cdf(2.9), Some(0.0));
+        assert_eq!(p.cdf(3.0), Some(1.0));
+    }
+
+    #[test]
+    fn gaussian_truncates() {
+        let p = GaussianProcess::new(0.1, 10.0);
+        let mut rng = Rng::new(2);
+        for _ in 0..10_000 {
+            assert!(p.sample(&mut rng) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn lognormal_from_mean_cv() {
+        let p = LogNormalProcess::from_mean_cv(2.0, 0.5);
+        assert!((p.mean().unwrap() - 2.0).abs() < 1e-9);
+        let m = sample_mean(&p, 300_000, 3);
+        assert!((m - 2.0).abs() < 0.02, "m={m}");
+    }
+
+    #[test]
+    fn weibull_mean_closed_form() {
+        let p = WeibullProcess::new(2.0, 1.0);
+        // Gamma(1.5) = sqrt(pi)/2
+        let expect = std::f64::consts::PI.sqrt() / 2.0;
+        assert!((p.mean().unwrap() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pareto_infinite_mean_flagged() {
+        assert!(ParetoProcess::new(1.0, 0.9).mean().is_none());
+        let p = ParetoProcess::new(1.0, 3.0);
+        assert!((p.mean().unwrap() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empirical_resamples_support() {
+        let p = EmpiricalProcess::new(vec![1.0, 2.0, 3.0]);
+        let mut rng = Rng::new(4);
+        for _ in 0..1000 {
+            let s = p.sample(&mut rng);
+            assert!(s == 1.0 || s == 2.0 || s == 3.0);
+        }
+        assert!((p.mean().unwrap() - 2.0).abs() < 1e-12);
+        assert!((p.cdf(2.0).unwrap() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mmpp_average_rate() {
+        // Symmetric switch: phases equally likely; avg rate = (10+1)/2
+        let p = MmppProcess::new([10.0, 1.0], [0.1, 0.1]);
+        assert!((p.average_rate() - 5.5).abs() < 1e-12);
+        // Long-run empirical rate matches.
+        let mut rng = Rng::new(5);
+        let n = 300_000;
+        let total: f64 = (0..n).map(|_| p.sample(&mut rng)).sum();
+        let rate = n as f64 / total;
+        assert!((rate - 5.5).abs() / 5.5 < 0.05, "rate={rate}");
+    }
+
+    #[test]
+    fn gamma_fn_known_values() {
+        assert!((gamma_fn(1.0) - 1.0).abs() < 1e-10);
+        assert!((gamma_fn(2.0) - 1.0).abs() < 1e-10);
+        assert!((gamma_fn(5.0) - 24.0).abs() < 1e-7);
+        assert!((gamma_fn(0.5) - std::f64::consts::PI.sqrt()).abs() < 1e-10);
+    }
+}

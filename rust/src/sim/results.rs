@@ -1,0 +1,159 @@
+//! Simulation results (the output half of the paper's Table 1).
+
+/// Aggregated results of a steady-state or temporal simulation run.
+///
+/// Field names mirror the paper's Table 1 output rows; all times in seconds.
+#[derive(Debug, Clone)]
+pub struct SimResults {
+    /// Simulated horizon actually measured (after skipping warm-up).
+    pub measured_time: f64,
+    /// Total requests that arrived in the measured window.
+    pub total_requests: u64,
+    /// Requests served by a fresh (cold-started) instance.
+    pub cold_requests: u64,
+    /// Requests served by a warm (idle) instance.
+    pub warm_requests: u64,
+    /// Requests rejected at the maximum concurrency level.
+    pub rejected_requests: u64,
+    /// P(cold start) among served requests — paper Table 1 "*Cold Start
+    /// Probability".
+    pub cold_start_prob: f64,
+    /// P(rejection) among all arrivals — "*Rejection Probability".
+    pub rejection_prob: f64,
+    /// Mean lifespan of terminated instances — "*Average Instance Lifespan".
+    pub avg_lifespan: f64,
+    /// Number of instances that were created in the measured window.
+    pub instances_created: u64,
+    /// Number of instances that expired in the measured window.
+    pub instances_expired: u64,
+    /// Time-weighted mean of the total instance count — "*Average Server
+    /// Count" (the provider's infrastructure footprint).
+    pub avg_server_count: f64,
+    /// Time-weighted mean of the busy instance count — "*Average Running
+    /// Servers" (what the developer is billed for).
+    pub avg_running_count: f64,
+    /// Time-weighted mean of the idle instance count — "*Average Idle
+    /// Count".
+    pub avg_idle_count: f64,
+    /// Peak total instance count observed.
+    pub max_server_count: f64,
+    /// avg_idle / avg_server — the paper's Fig. 8 "wasted capacity".
+    pub wasted_capacity: f64,
+    /// Mean response time over served requests.
+    pub avg_response_time: f64,
+    /// Mean response time over warm requests only (= mean warm service).
+    pub avg_warm_response_time: f64,
+    /// Mean response time over cold requests only.
+    pub avg_cold_response_time: f64,
+    /// Streaming P50 / P95 / P99 of response time.
+    pub response_p50: f64,
+    pub response_p95: f64,
+    pub response_p99: f64,
+    /// Total billed instance-seconds in the measured window (runtime
+    /// charges are proportional to this).
+    pub billed_instance_seconds: f64,
+    /// Observed mean arrival rate (sanity check against the input process).
+    pub observed_arrival_rate: f64,
+    /// Portion of simulated time at each total-instance-count level
+    /// (Fig. 3). `instance_count_pmf[k]` = fraction of time with k
+    /// instances.
+    pub instance_count_pmf: Vec<f64>,
+}
+
+impl SimResults {
+    /// Utilized capacity ratio = running / total (1 - wasted).
+    pub fn utilized_capacity(&self) -> f64 {
+        if self.avg_server_count <= 0.0 {
+            0.0
+        } else {
+            self.avg_running_count / self.avg_server_count
+        }
+    }
+
+    /// Render the Table-1-style two-column report.
+    pub fn to_table(&self) -> String {
+        let rows = [
+            ("*Cold Start Probability", format!("{:.4} %", self.cold_start_prob * 100.0)),
+            ("*Rejection Probability", format!("{:.4} %", self.rejection_prob * 100.0)),
+            ("*Average Instance Lifespan", format!("{:.4} s", self.avg_lifespan)),
+            ("*Average Server Count", format!("{:.4}", self.avg_server_count)),
+            ("*Average Running Servers", format!("{:.4}", self.avg_running_count)),
+            ("*Average Idle Count", format!("{:.4}", self.avg_idle_count)),
+            ("*Average Wasted Capacity", format!("{:.4} %", self.wasted_capacity * 100.0)),
+            ("*Average Response Time", format!("{:.4} s", self.avg_response_time)),
+            ("*Response Time P99", format!("{:.4} s", self.response_p99)),
+            ("Requests (total/cold/warm/rej)", format!(
+                "{}/{}/{}/{}",
+                self.total_requests, self.cold_requests, self.warm_requests, self.rejected_requests
+            )),
+        ];
+        let w = rows.iter().map(|(k, _)| k.len()).max().unwrap_or(0);
+        let mut s = String::new();
+        for (k, v) in rows {
+            s.push_str(&format!("{k:<w$}  {v}\n"));
+        }
+        s
+    }
+}
+
+impl std::fmt::Display for SimResults {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_table())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy() -> SimResults {
+        SimResults {
+            measured_time: 1e6,
+            total_requests: 900_000,
+            cold_requests: 1260,
+            warm_requests: 898_740,
+            rejected_requests: 0,
+            cold_start_prob: 0.0014,
+            rejection_prob: 0.0,
+            avg_lifespan: 6307.7,
+            instances_created: 1260,
+            instances_expired: 1255,
+            avg_server_count: 7.6795,
+            avg_running_count: 1.7902,
+            avg_idle_count: 5.8893,
+            max_server_count: 14.0,
+            wasted_capacity: 5.8893 / 7.6795,
+            avg_response_time: 1.9915,
+            avg_warm_response_time: 1.991,
+            avg_cold_response_time: 2.244,
+            response_p50: 1.38,
+            response_p95: 5.96,
+            response_p99: 9.17,
+            billed_instance_seconds: 1.79e6,
+            observed_arrival_rate: 0.9,
+            instance_count_pmf: vec![0.0, 0.1, 0.2, 0.3, 0.4],
+        }
+    }
+
+    #[test]
+    fn table_contains_paper_rows() {
+        let t = dummy().to_table();
+        assert!(t.contains("Cold Start Probability"));
+        assert!(t.contains("Average Instance Lifespan"));
+        assert!(t.contains("Average Server Count"));
+        assert!(t.contains("0.1400 %"));
+    }
+
+    #[test]
+    fn utilized_plus_wasted_is_one() {
+        let r = dummy();
+        assert!((r.utilized_capacity() + r.wasted_capacity - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pmf_preserved() {
+        let r = dummy();
+        assert_eq!(r.instance_count_pmf.len(), 5);
+        assert!((r.instance_count_pmf.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+}

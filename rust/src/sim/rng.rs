@@ -1,0 +1,410 @@
+//! Deterministic pseudo-random number generation and samplers.
+//!
+//! SimFaaS results must be bit-reproducible given a seed, across platforms
+//! and library versions, so we implement the generator in-repo instead of
+//! depending on an external crate:
+//!
+//! * [`SplitMix64`] — seed expansion (Steele et al., used to initialize the
+//!   main generator from a single `u64`).
+//! * [`Rng`] — xoshiro256++ (Blackman & Vigna), a fast, high-quality,
+//!   non-cryptographic generator; plus the samplers the simulator needs:
+//!   uniform, exponential, normal (Box–Muller), lognormal, gamma
+//!   (Marsaglia–Tsang), Weibull, Pareto, Erlang and integer ranges.
+
+/// SplitMix64: used for seeding xoshiro state from a single u64.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ PRNG with sampling helpers.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal variate from Box–Muller.
+    gauss_spare: Option<f64>,
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s = [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()];
+        Rng { s, gauss_spare: None }
+    }
+
+    /// Derive an independent child generator (for per-component streams).
+    /// Uses the 2^128 jump polynomial so streams are provably disjoint for
+    /// any realistic simulation length.
+    pub fn split(&mut self) -> Rng {
+        let child = self.clone();
+        self.jump();
+        let mut c = child;
+        c.gauss_spare = None;
+        c
+    }
+
+    /// xoshiro256++ jump: advances this generator by 2^128 steps.
+    pub fn jump(&mut self) {
+        const JUMP: [u64; 4] = [
+            0x180EC6D33CFD0ABA,
+            0xD5A61266F0C9392C,
+            0xA9582618E03FC9AA,
+            0x39ABDC4529B1661C,
+        ];
+        let mut s0 = 0u64;
+        let mut s1 = 0u64;
+        let mut s2 = 0u64;
+        let mut s3 = 0u64;
+        for j in JUMP {
+            for b in 0..64 {
+                if (j & (1u64 << b)) != 0 {
+                    s0 ^= self.s[0];
+                    s1 ^= self.s[1];
+                    s2 ^= self.s[2];
+                    s3 ^= self.s[3];
+                }
+                self.next_u64();
+            }
+        }
+        self.s = [s0, s1, s2, s3];
+        self.gauss_spare = None;
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1). 53-bit resolution.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in (0, 1] — safe as the argument of `ln`.
+    #[inline]
+    pub fn uniform_pos(&mut self) -> f64 {
+        1.0 - self.uniform()
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n) (Lemire's method, unbiased).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Exponential with rate `rate` (mean 1/rate).
+    #[inline]
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        -self.uniform_pos().ln() / rate
+    }
+
+    /// Standard normal via Box–Muller (with caching of the paired variate).
+    pub fn standard_normal(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        let u1 = self.uniform_pos();
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.gauss_spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal(mean, std).
+    #[inline]
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.standard_normal()
+    }
+
+    /// LogNormal with the given *underlying* normal parameters mu, sigma.
+    #[inline]
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal(mu, sigma).exp()
+    }
+
+    /// Gamma(shape k, scale theta) via Marsaglia–Tsang; handles k < 1 by
+    /// boosting (Gamma(k) = Gamma(k+1) * U^{1/k}).
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        debug_assert!(shape > 0.0 && scale > 0.0);
+        if shape < 1.0 {
+            let u = self.uniform_pos();
+            return self.gamma(shape + 1.0, scale) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.standard_normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.uniform_pos();
+            if u < 1.0 - 0.0331 * x * x * x * x {
+                return d * v * scale;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v * scale;
+            }
+        }
+    }
+
+    /// Erlang(k, rate) = sum of k exponentials — exact, O(1) via Gamma.
+    #[inline]
+    pub fn erlang(&mut self, k: u32, rate: f64) -> f64 {
+        self.gamma(k as f64, 1.0 / rate)
+    }
+
+    /// Weibull(shape k, scale lambda).
+    #[inline]
+    pub fn weibull(&mut self, shape: f64, scale: f64) -> f64 {
+        scale * (-self.uniform_pos().ln()).powf(1.0 / shape)
+    }
+
+    /// Pareto (Lomax-free, classic): x_m * U^{-1/alpha}, support [x_m, inf).
+    #[inline]
+    pub fn pareto(&mut self, x_m: f64, alpha: f64) -> f64 {
+        x_m * self.uniform_pos().powf(-1.0 / alpha)
+    }
+
+    /// Poisson(lambda) count via inversion for small lambda, normal
+    /// approximation fallback for large lambda (used by batch arrivals).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        debug_assert!(lambda >= 0.0);
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.uniform();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            // PTRS would be exact; the normal approximation is adequate for
+            // the batch sizes the simulator uses and keeps the code small.
+            let x = self.normal(lambda, lambda.sqrt()).round();
+            if x < 0.0 {
+                0
+            } else {
+                x as u64
+            }
+        }
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element index weighted by `weights`.
+    pub fn weighted_index(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut x = self.uniform() * total;
+        for (i, w) in weights.iter().enumerate() {
+            if x < *w {
+                return i;
+            }
+            x -= w;
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_and_var(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+        (mean, var)
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(Rng::new(42).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let mut root = Rng::new(7);
+        let mut a = root.split();
+        let mut b = root.split();
+        let xa: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let xb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xa, xb);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            let v = r.uniform_pos();
+            assert!(v > 0.0 && v <= 1.0);
+        }
+    }
+
+    #[test]
+    fn exponential_moments() {
+        let mut r = Rng::new(2);
+        let xs: Vec<f64> = (0..200_000).map(|_| r.exponential(0.5)).collect();
+        let (mean, var) = mean_and_var(&xs);
+        assert!((mean - 2.0).abs() < 0.05, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.3, "var={var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let xs: Vec<f64> = (0..200_000).map(|_| r.normal(5.0, 2.0)).collect();
+        let (mean, var) = mean_and_var(&xs);
+        assert!((mean - 5.0).abs() < 0.05);
+        assert!((var - 4.0).abs() < 0.15);
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut r = Rng::new(4);
+        // shape 3, scale 2 => mean 6, var 12
+        let xs: Vec<f64> = (0..200_000).map(|_| r.gamma(3.0, 2.0)).collect();
+        let (mean, var) = mean_and_var(&xs);
+        assert!((mean - 6.0).abs() < 0.1, "mean={mean}");
+        assert!((var - 12.0).abs() < 0.7, "var={var}");
+        // shape < 1 boosting path
+        let xs: Vec<f64> = (0..200_000).map(|_| r.gamma(0.5, 1.0)).collect();
+        let (mean, _) = mean_and_var(&xs);
+        assert!((mean - 0.5).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn weibull_mean() {
+        let mut r = Rng::new(5);
+        // k=2, lambda=1 => mean = Gamma(1.5) = sqrt(pi)/2 ~= 0.8862
+        let xs: Vec<f64> = (0..200_000).map(|_| r.weibull(2.0, 1.0)).collect();
+        let (mean, _) = mean_and_var(&xs);
+        assert!((mean - 0.8862).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn pareto_support_and_median() {
+        let mut r = Rng::new(6);
+        let xs: Vec<f64> = (0..100_000).map(|_| r.pareto(1.0, 2.0)).collect();
+        assert!(xs.iter().all(|&x| x >= 1.0));
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // median = x_m * 2^{1/alpha} = 2^{0.5}
+        let med = sorted[sorted.len() / 2];
+        assert!((med - 2f64.sqrt()).abs() < 0.02, "median={med}");
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large() {
+        let mut r = Rng::new(7);
+        let xs: Vec<f64> = (0..100_000).map(|_| r.poisson(3.0) as f64).collect();
+        let (mean, var) = mean_and_var(&xs);
+        assert!((mean - 3.0).abs() < 0.05);
+        assert!((var - 3.0).abs() < 0.15);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.poisson(100.0) as f64).collect();
+        let (mean, _) = mean_and_var(&xs);
+        assert!((mean - 100.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(8);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn weighted_index_respects_weights() {
+        let mut r = Rng::new(9);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[r.weighted_index(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.2, "ratio={ratio}");
+    }
+
+    #[test]
+    fn erlang_is_sum_of_exponentials() {
+        let mut r = Rng::new(10);
+        let xs: Vec<f64> = (0..100_000).map(|_| r.erlang(4, 2.0)).collect();
+        let (mean, var) = mean_and_var(&xs);
+        assert!((mean - 2.0).abs() < 0.03); // k/rate
+        assert!((var - 1.0).abs() < 0.05); // k/rate^2
+    }
+}

@@ -1,0 +1,190 @@
+//! `ServerlessTemporalSimulator` — transient analysis (paper §4.2, Fig. 4).
+//!
+//! Performs simulations like `ServerlessSimulator` but with a **customized
+//! initial state** (a warm pool with given idle ages and in-flight requests
+//! with given remaining service) and **time-bounded** result windows, plus
+//! multi-run replication with 95% confidence intervals so short-horizon
+//! estimates come with error bars (the paper's Fig. 4 runs 10 replications
+//! and reports <1% CI deviation).
+
+use super::metrics::confidence_interval_95;
+use super::results::SimResults;
+use super::simulator::{CountSample, ServerlessSimulator, SimConfig};
+
+/// Initial platform state for a transient simulation.
+#[derive(Debug, Clone, Default)]
+pub struct InitialState {
+    /// Idle instances, each with the time (seconds) it has already spent
+    /// idle. An instance idle for `a` expires after `threshold - a` more
+    /// seconds unless reused.
+    pub idle_ages: Vec<f64>,
+    /// Running instances, each with its remaining busy time in seconds.
+    pub running_remaining: Vec<f64>,
+}
+
+impl InitialState {
+    /// Empty platform (no warm pool) — the steady-state simulator's start.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// A warm pool of `n` instances that just became idle.
+    pub fn warm_pool(n: usize) -> Self {
+        InitialState { idle_ages: vec![0.0; n], running_remaining: vec![] }
+    }
+
+    pub fn total_instances(&self) -> usize {
+        self.idle_ages.len() + self.running_remaining.len()
+    }
+}
+
+/// Result of one replication set: per-run results plus CI summaries.
+#[derive(Debug, Clone)]
+pub struct TemporalResults {
+    pub runs: Vec<SimResults>,
+    /// (mean, 95% half-width) across runs.
+    pub cold_start_prob_ci: (f64, f64),
+    pub avg_server_count_ci: (f64, f64),
+    pub avg_running_count_ci: (f64, f64),
+    pub avg_idle_count_ci: (f64, f64),
+    /// Sampled cumulative-average instance count per run (Fig. 4 series);
+    /// aligned time grids, one inner Vec per run.
+    pub sample_series: Vec<Vec<CountSample>>,
+}
+
+impl TemporalResults {
+    /// Fig. 4: per-grid-point mean and 95% CI half-width of the cumulative
+    /// average instance count across runs. Returns (t, mean, half_width).
+    pub fn average_count_band(&self) -> Vec<(f64, f64, f64)> {
+        if self.sample_series.is_empty() {
+            return vec![];
+        }
+        let min_len = self.sample_series.iter().map(|s| s.len()).min().unwrap_or(0);
+        (0..min_len)
+            .map(|i| {
+                let t = self.sample_series[0][i].t;
+                let vals: Vec<f64> =
+                    self.sample_series.iter().map(|s| s[i].cumulative_avg).collect();
+                let (mean, hw) = confidence_interval_95(&vals);
+                (t, mean, hw)
+            })
+            .collect()
+    }
+}
+
+/// Transient (time-bounded, custom-initial-state, replicated) simulator.
+pub struct ServerlessTemporalSimulator {
+    cfg: SimConfig,
+    initial: InitialState,
+    replications: usize,
+}
+
+impl ServerlessTemporalSimulator {
+    /// `cfg.skip_initial` is ignored (transient analysis measures from t=0);
+    /// `cfg.sample_interval` should be set for Fig.4-style series.
+    pub fn new(cfg: SimConfig, initial: InitialState, replications: usize) -> Self {
+        assert!(replications >= 1);
+        let mut cfg = cfg;
+        cfg.skip_initial = 0.0;
+        ServerlessTemporalSimulator { cfg, initial, replications }
+    }
+
+    /// Run all replications (seeds `seed..seed+replications`).
+    pub fn run(&self) -> TemporalResults {
+        let mut runs = Vec::with_capacity(self.replications);
+        let mut series = Vec::with_capacity(self.replications);
+        for i in 0..self.replications {
+            let cfg = self.cfg.clone().with_seed(self.cfg.seed.wrapping_add(i as u64));
+            let mut sim = ServerlessSimulator::new(cfg);
+            sim.set_initial_state(&self.initial.idle_ages, &self.initial.running_remaining);
+            let res = sim.run();
+            series.push(sim.samples().to_vec());
+            runs.push(res);
+        }
+        let ci = |f: fn(&SimResults) -> f64| {
+            let xs: Vec<f64> = runs.iter().map(f).collect();
+            if xs.len() >= 2 {
+                confidence_interval_95(&xs)
+            } else {
+                (xs[0], 0.0)
+            }
+        };
+        TemporalResults {
+            cold_start_prob_ci: ci(|r| r.cold_start_prob),
+            avg_server_count_ci: ci(|r| r.avg_server_count),
+            avg_running_count_ci: ci(|r| r.avg_running_count),
+            avg_idle_count_ci: ci(|r| r.avg_idle_count),
+            sample_series: series,
+            runs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::process::ExpProcess;
+    use std::sync::Arc;
+
+    fn cfg(horizon: f64) -> SimConfig {
+        SimConfig {
+            arrival: Arc::new(ExpProcess::with_rate(0.9)),
+            batch_size: None,
+            warm_service: Arc::new(ExpProcess::with_mean(1.991)),
+            cold_service: Arc::new(ExpProcess::with_mean(2.244)),
+            expiration_threshold: 600.0,
+            expiration_process: None,
+            max_concurrency: 1000,
+            horizon,
+            skip_initial: 0.0,
+            seed: 123,
+            capture_request_log: false,
+            sample_interval: 50.0,
+        }
+    }
+
+    #[test]
+    fn replications_and_ci() {
+        let sim = ServerlessTemporalSimulator::new(cfg(5_000.0), InitialState::empty(), 5);
+        let res = sim.run();
+        assert_eq!(res.runs.len(), 5);
+        let (mean, hw) = res.avg_server_count_ci;
+        assert!(mean > 0.0 && hw >= 0.0);
+        let band = res.average_count_band();
+        assert!(band.len() >= 90, "band={}", band.len());
+        // CI shrinks over time: late half-width (relative) below early.
+        let early = band[4];
+        let late = *band.last().unwrap();
+        assert!(late.2 / late.1 <= early.2 / early.1 + 0.05);
+    }
+
+    #[test]
+    fn warm_pool_start_reduces_early_cold_starts() {
+        // With a big warm pool there should be fewer cold starts in a short
+        // window than starting empty.
+        let empty = ServerlessTemporalSimulator::new(cfg(600.0), InitialState::empty(), 3).run();
+        let warm =
+            ServerlessTemporalSimulator::new(cfg(600.0), InitialState::warm_pool(10), 3).run();
+        assert!(warm.cold_start_prob_ci.0 <= empty.cold_start_prob_ci.0);
+        // Warm start run begins with 10 instances.
+        assert!(warm.avg_server_count_ci.0 > empty.avg_server_count_ci.0);
+    }
+
+    #[test]
+    fn single_replication_zero_ci() {
+        let sim = ServerlessTemporalSimulator::new(cfg(1_000.0), InitialState::empty(), 1);
+        let res = sim.run();
+        assert_eq!(res.runs.len(), 1);
+        assert_eq!(res.cold_start_prob_ci.1, 0.0);
+    }
+
+    #[test]
+    fn running_initial_state_counts_in_flight() {
+        let init = InitialState { idle_ages: vec![], running_remaining: vec![100.0, 100.0] };
+        assert_eq!(init.total_instances(), 2);
+        let sim = ServerlessTemporalSimulator::new(cfg(50.0), init, 2);
+        let res = sim.run();
+        // For the whole 50 s window those two instances are running.
+        assert!(res.avg_running_count_ci.0 >= 2.0 * 0.9); // plus arrival traffic
+    }
+}

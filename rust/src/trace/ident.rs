@@ -1,0 +1,245 @@
+//! Parameter identification (paper §5.2): estimate the simulator's input
+//! parameters from measured traces — the exact procedures the paper runs
+//! against AWS Lambda, here runnable against any trace in the shared CSV
+//! schema (including the emulator's logs).
+//!
+//! * **Expiration threshold probing**: issue requests with increasing
+//!   inter-arrival gaps until a cold start appears; the previous gap bounds
+//!   the threshold ("starting inter-arrival time of 10 seconds, each time
+//!   increasing it by 10 seconds until we see a cold start").
+//! * **Warm/cold response-time estimation**: averages over the measured
+//!   response times per outcome class.
+//! * **Arrival-rate estimation** and instance-count reconstruction: count
+//!   unique instance ids seen in a sliding window ("we count the number of
+//!   unique instances that have responded ... in the past 10 minutes").
+
+use super::record::{Outcome, RequestRecord};
+
+/// Estimated workload/platform parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct IdentifiedParams {
+    pub arrival_rate: f64,
+    pub warm_mean: f64,
+    pub warm_std: f64,
+    pub cold_mean: f64,
+    pub cold_std: f64,
+    pub cold_start_prob: f64,
+    pub rejection_prob: f64,
+}
+
+/// Estimate workload parameters from a request trace.
+pub fn identify(records: &[RequestRecord]) -> IdentifiedParams {
+    assert!(!records.is_empty());
+    let horizon = records.last().unwrap().arrived_at - records[0].arrived_at;
+    let mut warm = Vec::new();
+    let mut cold = Vec::new();
+    let mut rejected = 0u64;
+    for r in records {
+        match r.outcome {
+            Outcome::Warm => warm.push(r.response_time),
+            Outcome::Cold => cold.push(r.response_time),
+            Outcome::Rejected => rejected += 1,
+        }
+    }
+    let stats = |xs: &[f64]| -> (f64, f64) {
+        if xs.is_empty() {
+            return (f64::NAN, f64::NAN);
+        }
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = if xs.len() > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0)
+        } else {
+            0.0
+        };
+        (mean, var.sqrt())
+    };
+    let (warm_mean, warm_std) = stats(&warm);
+    let (cold_mean, cold_std) = stats(&cold);
+    let served = warm.len() + cold.len();
+    IdentifiedParams {
+        arrival_rate: if horizon > 0.0 {
+            records.len() as f64 / horizon
+        } else {
+            f64::NAN
+        },
+        warm_mean,
+        warm_std,
+        cold_mean,
+        cold_std,
+        cold_start_prob: if served > 0 {
+            cold.len() as f64 / served as f64
+        } else {
+            0.0
+        },
+        rejection_prob: rejected as f64 / records.len() as f64,
+    }
+}
+
+/// A probe target: something that answers "was this request, issued after
+/// `gap` seconds of silence, a cold start?" — implemented by the emulator
+/// and by the simulator-backed mock in tests.
+pub trait ColdStartProbe {
+    /// Issue a request after the given idle gap; returns true on cold start.
+    fn probe(&mut self, gap_seconds: f64) -> bool;
+}
+
+/// The paper's §5.2 experiment: increasing inter-arrival probes. Returns
+/// `(lower_bound, upper_bound)` for the expiration threshold: the last gap
+/// that stayed warm, and the first gap that went cold.
+pub fn probe_expiration_threshold(
+    probe: &mut dyn ColdStartProbe,
+    start_gap: f64,
+    step: f64,
+    max_gap: f64,
+) -> (f64, f64) {
+    assert!(start_gap > 0.0 && step > 0.0);
+    // Prime: first request is always cold; second immediately after warms.
+    let _ = probe.probe(0.0);
+    let mut last_warm = 0.0;
+    let mut gap = start_gap;
+    while gap <= max_gap {
+        if probe.probe(gap) {
+            return (last_warm, gap);
+        }
+        last_warm = gap;
+        gap += step;
+    }
+    (last_warm, f64::INFINITY)
+}
+
+/// Sliding-window unique-instance count (paper §5.3 "Mean Number of
+/// Instances in the Warm Pool"): at each request time, count distinct
+/// instance ids observed in the trailing `window` seconds. Returns
+/// `(time, count)` samples at each request.
+pub fn warm_pool_series(records: &[RequestRecord], window: f64) -> Vec<(f64, usize)> {
+    use std::collections::HashMap;
+    let mut out = Vec::with_capacity(records.len());
+    let mut last_seen: HashMap<&str, f64> = HashMap::new();
+    let mut order: std::collections::VecDeque<(f64, &str)> = Default::default();
+    for r in records {
+        if r.outcome != Outcome::Rejected && !r.instance_id.is_empty() {
+            last_seen.insert(r.instance_id.as_str(), r.arrived_at);
+            order.push_back((r.arrived_at, r.instance_id.as_str()));
+        }
+        // Evict entries whose *latest* sighting left the window.
+        while let Some(&(t, id)) = order.front() {
+            if t >= r.arrived_at - window {
+                break;
+            }
+            order.pop_front();
+            if last_seen.get(id) == Some(&t) {
+                last_seen.remove(id);
+            }
+        }
+        out.push((r.arrived_at, last_seen.len()));
+    }
+    out
+}
+
+/// Mean of the warm-pool series after a warm-up prefix.
+pub fn mean_warm_pool(records: &[RequestRecord], window: f64, skip: f64) -> f64 {
+    let series = warm_pool_series(records, window);
+    if series.is_empty() {
+        return f64::NAN;
+    }
+    let t0 = series[0].0 + skip;
+    let tail: Vec<f64> = series
+        .iter()
+        .filter(|(t, _)| *t >= t0)
+        .map(|(_, c)| *c as f64)
+        .collect();
+    if tail.is_empty() {
+        f64::NAN
+    } else {
+        tail.iter().sum::<f64>() / tail.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Rng, SimProcess};
+
+    #[test]
+    fn identify_recovers_parameters() {
+        // Build a synthetic trace with known parameters.
+        let mut rng = Rng::new(42);
+        let warm_p = crate::sim::ExpProcess::with_mean(2.0);
+        let cold_p = crate::sim::ExpProcess::with_mean(3.0);
+        let mut records = Vec::new();
+        let mut t = 0.0;
+        for i in 0..50_000 {
+            t += rng.exponential(1.5);
+            let cold = i % 100 == 0; // 1% cold
+            records.push(RequestRecord {
+                arrived_at: t,
+                outcome: if cold { Outcome::Cold } else { Outcome::Warm },
+                response_time: if cold {
+                    cold_p.sample(&mut rng)
+                } else {
+                    warm_p.sample(&mut rng)
+                },
+                instance_id: format!("i-{:04}", i % 7),
+            });
+        }
+        let p = identify(&records);
+        assert!((p.arrival_rate - 1.5).abs() < 0.05, "rate={}", p.arrival_rate);
+        assert!((p.warm_mean - 2.0).abs() < 0.05);
+        assert!((p.cold_mean - 3.0).abs() < 0.3);
+        assert!((p.cold_start_prob - 0.01).abs() < 0.002);
+        assert_eq!(p.rejection_prob, 0.0);
+    }
+
+    /// Probe backed by the actual expiration rule.
+    struct FakePlatform {
+        threshold: f64,
+        idle_since: Option<f64>,
+        now: f64,
+    }
+
+    impl ColdStartProbe for FakePlatform {
+        fn probe(&mut self, gap: f64) -> bool {
+            self.now += gap;
+            let cold = match self.idle_since {
+                None => true,
+                Some(t0) => self.now - t0 > self.threshold,
+            };
+            // Request processes instantly; instance idle from now on.
+            self.idle_since = Some(self.now);
+            cold
+        }
+    }
+
+    #[test]
+    fn probe_brackets_threshold() {
+        let mut p = FakePlatform { threshold: 600.0, idle_since: None, now: 0.0 };
+        let (lo, hi) = probe_expiration_threshold(&mut p, 10.0, 10.0, 1200.0);
+        assert!(lo <= 600.0 && 600.0 <= hi, "({lo},{hi})");
+        assert!((hi - lo - 10.0).abs() < 1e-9); // bracketed to one step
+    }
+
+    #[test]
+    fn probe_gives_infinite_upper_when_never_cold() {
+        let mut p = FakePlatform { threshold: 1e9, idle_since: None, now: 0.0 };
+        let (lo, hi) = probe_expiration_threshold(&mut p, 10.0, 10.0, 100.0);
+        assert_eq!(hi, f64::INFINITY);
+        assert!(lo >= 90.0);
+    }
+
+    #[test]
+    fn warm_pool_counts_unique_instances() {
+        let records = vec![
+            RequestRecord { arrived_at: 0.0, outcome: Outcome::Cold, response_time: 1.0, instance_id: "a".into() },
+            RequestRecord { arrived_at: 1.0, outcome: Outcome::Cold, response_time: 1.0, instance_id: "b".into() },
+            RequestRecord { arrived_at: 2.0, outcome: Outcome::Warm, response_time: 1.0, instance_id: "a".into() },
+            // 700 s later, only "c" is in the 600 s window.
+            RequestRecord { arrived_at: 700.0, outcome: Outcome::Cold, response_time: 1.0, instance_id: "c".into() },
+        ];
+        let series = warm_pool_series(&records, 600.0);
+        assert_eq!(series[0].1, 1);
+        assert_eq!(series[1].1, 2);
+        assert_eq!(series[2].1, 2); // a seen twice, still 2 unique
+        assert_eq!(series[3].1, 1); // a and b evicted
+    }
+}

@@ -1,0 +1,12 @@
+//! Trace substrate: the shared request-trace schema (CSV), bridges from the
+//! simulator's and emulator's logs, and the parameter-identification
+//! procedures of paper §5.2.
+
+pub mod ident;
+pub mod record;
+
+pub use ident::{
+    identify, mean_warm_pool, probe_expiration_threshold, warm_pool_series, ColdStartProbe,
+    IdentifiedParams,
+};
+pub use record::{from_sim_log, read_csv, write_csv, Outcome, RequestRecord};

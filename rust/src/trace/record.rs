@@ -1,0 +1,190 @@
+//! Trace records and CSV I/O.
+//!
+//! The paper's validation pipeline stores each request's outcome in a CSV
+//! ("The result is stored in a CSV file and then processed using Pandas"),
+//! keyed by a unique per-instance identifier recovered via the technique of
+//! Wang et al. 2018. The emulator writes the same schema, and the parameter
+//! identification (`trace::ident`) and validation benches consume it — so
+//! the exact code path a user would run against real AWS Lambda logs runs
+//! here against emulator logs.
+//!
+//! Schema (`request` CSV): `arrived_at,outcome,response_time,instance_id`
+//! with outcome ∈ {cold, warm, rejected}.
+
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, Write};
+
+/// One request observation (client side).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestRecord {
+    /// Client-observed arrival (submission) time, seconds.
+    pub arrived_at: f64,
+    /// cold / warm / rejected.
+    pub outcome: Outcome,
+    /// Client-observed response time, seconds (0 for rejected).
+    pub response_time: f64,
+    /// Unique serving-instance identifier ("" if rejected).
+    pub instance_id: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    Cold,
+    Warm,
+    Rejected,
+}
+
+impl Outcome {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Outcome::Cold => "cold",
+            Outcome::Warm => "warm",
+            Outcome::Rejected => "rejected",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Outcome> {
+        match s {
+            "cold" => Ok(Outcome::Cold),
+            "warm" => Ok(Outcome::Warm),
+            "rejected" => Ok(Outcome::Rejected),
+            other => bail!("unknown outcome {other:?}"),
+        }
+    }
+}
+
+pub const REQUEST_CSV_HEADER: &str = "arrived_at,outcome,response_time,instance_id";
+
+/// Write records as CSV (with header).
+pub fn write_csv<W: Write>(mut w: W, records: &[RequestRecord]) -> Result<()> {
+    writeln!(w, "{REQUEST_CSV_HEADER}")?;
+    for r in records {
+        writeln!(
+            w,
+            "{:.6},{},{:.6},{}",
+            r.arrived_at,
+            r.outcome.as_str(),
+            r.response_time,
+            r.instance_id
+        )?;
+    }
+    Ok(())
+}
+
+/// Parse records from CSV (header required).
+pub fn read_csv<R: BufRead>(r: R) -> Result<Vec<RequestRecord>> {
+    let mut lines = r.lines();
+    let header = lines
+        .next()
+        .context("empty trace file")?
+        .context("read error")?;
+    if header.trim() != REQUEST_CSV_HEADER {
+        bail!("unexpected header {header:?}");
+    }
+    let mut out = Vec::new();
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut parts = line.splitn(4, ',');
+        let arrived_at: f64 = parts
+            .next()
+            .with_context(|| format!("line {}: missing arrived_at", lineno + 2))?
+            .parse()
+            .with_context(|| format!("line {}: bad arrived_at", lineno + 2))?;
+        let outcome = Outcome::parse(parts.next().context("missing outcome")?)?;
+        let response_time: f64 = parts
+            .next()
+            .context("missing response_time")?
+            .parse()
+            .context("bad response_time")?;
+        let instance_id = parts.next().unwrap_or("").to_string();
+        out.push(RequestRecord { arrived_at, outcome, response_time, instance_id });
+    }
+    Ok(out)
+}
+
+/// Convert the simulator's request log into trace records (bridges
+/// `sim::RequestLogEntry` to the shared schema).
+pub fn from_sim_log(log: &[crate::sim::RequestLogEntry]) -> Vec<RequestRecord> {
+    log.iter()
+        .map(|e| RequestRecord {
+            arrived_at: e.arrived_at,
+            outcome: match e.outcome {
+                crate::sim::RequestOutcome::Cold => Outcome::Cold,
+                crate::sim::RequestOutcome::Warm => Outcome::Warm,
+                crate::sim::RequestOutcome::Rejected => Outcome::Rejected,
+            },
+            response_time: e.response_time,
+            instance_id: e.instance.map(|i| i.to_string()).unwrap_or_default(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<RequestRecord> {
+        vec![
+            RequestRecord {
+                arrived_at: 0.5,
+                outcome: Outcome::Cold,
+                response_time: 2.25,
+                instance_id: "i-00000000".into(),
+            },
+            RequestRecord {
+                arrived_at: 1.75,
+                outcome: Outcome::Warm,
+                response_time: 1.99,
+                instance_id: "i-00000000".into(),
+            },
+            RequestRecord {
+                arrived_at: 2.0,
+                outcome: Outcome::Rejected,
+                response_time: 0.0,
+                instance_id: "".into(),
+            },
+        ]
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let records = sample();
+        let mut buf = Vec::new();
+        write_csv(&mut buf, &records).unwrap();
+        let parsed = read_csv(&buf[..]).unwrap();
+        assert_eq!(parsed.len(), 3);
+        assert_eq!(parsed[0].outcome, Outcome::Cold);
+        assert_eq!(parsed[2].outcome, Outcome::Rejected);
+        assert!((parsed[1].response_time - 1.99).abs() < 1e-9);
+        assert_eq!(parsed[1].instance_id, "i-00000000");
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        let data = b"nope\n1,cold,2,x\n";
+        assert!(read_csv(&data[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_outcome() {
+        let data = format!("{REQUEST_CSV_HEADER}\n1.0,tepid,2.0,x\n");
+        assert!(read_csv(data.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn sim_log_bridge() {
+        use crate::sim::{ServerlessSimulator, SimConfig};
+        let mut cfg = SimConfig::table1();
+        cfg.horizon = 2_000.0;
+        cfg.capture_request_log = true;
+        let mut sim = ServerlessSimulator::new(cfg);
+        let res = sim.run();
+        let records = from_sim_log(sim.request_log());
+        assert_eq!(records.len() as u64, res.total_requests);
+        let cold = records.iter().filter(|r| r.outcome == Outcome::Cold).count() as u64;
+        assert_eq!(cold, res.cold_requests);
+    }
+}

@@ -1,0 +1,81 @@
+//! What-if analysis engine (paper §4.3): sweep platform/workload
+//! configurations through the simulator, in parallel across OS threads, and
+//! find best-performing settings — e.g. the expiration-threshold trade-off
+//! of Fig. 5, or a cost/QoS-optimal threshold per workload.
+
+pub mod sweep;
+
+pub use sweep::{sweep, sweep_grid, GridPoint, SweepOutcome};
+
+use crate::sim::{ServerlessSimulator, SimConfig, SimResults};
+
+/// Optimize the expiration threshold for a workload: minimize
+/// `cost_weight * avg_server_count + coldstart_weight * cold_start_prob`
+/// over a threshold grid (both terms normalized by their grid maxima so the
+/// weights express relative importance). Returns the best threshold and the
+/// per-point outcomes.
+///
+/// This is the provider-side knob the paper highlights: "provide users with
+/// fine-grain control over the cost-performance trade-off by modifying the
+/// platform parameters (e.g., expiration threshold)".
+pub fn optimize_expiration_threshold(
+    base: &SimConfig,
+    thresholds: &[f64],
+    cost_weight: f64,
+    coldstart_weight: f64,
+) -> (f64, Vec<(f64, SimResults)>) {
+    assert!(!thresholds.is_empty());
+    let outcomes: Vec<(f64, SimResults)> = sweep(thresholds, |&th| {
+        let cfg = base.clone().with_expiration_threshold(th);
+        ServerlessSimulator::new(cfg).run()
+    })
+    .into_iter()
+    .map(|(th, r)| (*th, r))
+    .collect();
+
+    let max_servers = outcomes
+        .iter()
+        .map(|(_, r)| r.avg_server_count)
+        .fold(f64::MIN, f64::max)
+        .max(1e-12);
+    let max_cold = outcomes
+        .iter()
+        .map(|(_, r)| r.cold_start_prob)
+        .fold(f64::MIN, f64::max)
+        .max(1e-12);
+    let best = outcomes
+        .iter()
+        .min_by(|a, b| {
+            let score = |r: &SimResults| {
+                cost_weight * r.avg_server_count / max_servers
+                    + coldstart_weight * r.cold_start_prob / max_cold
+            };
+            score(&a.1).partial_cmp(&score(&b.1)).unwrap()
+        })
+        .map(|(th, _)| *th)
+        .unwrap();
+    (best, outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimizer_prefers_long_threshold_when_cold_starts_dominate() {
+        let mut base = SimConfig::table1();
+        base.horizon = 60_000.0;
+        let thresholds = [60.0, 600.0, 1800.0];
+        let (best, outcomes) = optimize_expiration_threshold(&base, &thresholds, 0.0, 1.0);
+        assert_eq!(best, 1800.0, "outcomes: {:?}", outcomes.iter().map(|(t, r)| (*t, r.cold_start_prob)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn optimizer_prefers_short_threshold_when_cost_dominates() {
+        let mut base = SimConfig::table1();
+        base.horizon = 60_000.0;
+        let thresholds = [60.0, 600.0, 1800.0];
+        let (best, _) = optimize_expiration_threshold(&base, &thresholds, 1.0, 0.0);
+        assert_eq!(best, 60.0);
+    }
+}

@@ -1,0 +1,113 @@
+//! Parallel parameter sweeps over the simulator.
+//!
+//! `sweep` fans a list of parameter points across OS threads (scoped, no
+//! external executor) and returns results in input order — the machinery
+//! behind Fig. 5 (cold-start probability vs arrival rate × expiration
+//! threshold) and the validation figures' arrival-rate sweeps.
+
+/// Outcome of one grid point (generic in the result type).
+pub type SweepOutcome<'a, P, R> = (&'a P, R);
+
+/// Run `f` over `points` in parallel; results return in input order.
+pub fn sweep<'a, P, R, F>(points: &'a [P], f: F) -> Vec<SweepOutcome<'a, P, R>>
+where
+    P: Sync,
+    R: Send,
+    F: Fn(&P) -> R + Sync,
+{
+    let n = points.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(n);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    let slots_mutex = std::sync::Mutex::new(&mut slots);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&points[i]);
+                let mut guard = slots_mutex.lock().unwrap();
+                guard[i] = Some(r);
+            });
+        }
+    });
+
+    points
+        .iter()
+        .zip(slots.into_iter().map(|s| s.expect("worker filled slot")))
+        .collect()
+}
+
+/// A 2-D grid point (e.g. arrival rate × expiration threshold, Fig. 5).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GridPoint {
+    pub x: f64,
+    pub y: f64,
+}
+
+/// Cartesian-product sweep over two axes.
+pub fn sweep_grid<R, F>(xs: &[f64], ys: &[f64], f: F) -> Vec<(GridPoint, R)>
+where
+    R: Send,
+    F: Fn(f64, f64) -> R + Sync,
+{
+    let points: Vec<GridPoint> = ys
+        .iter()
+        .flat_map(|&y| xs.iter().map(move |&x| GridPoint { x, y }))
+        .collect();
+    sweep(&points, |p| f(p.x, p.y))
+        .into_iter()
+        .map(|(p, r)| (*p, r))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_preserves_order_and_values() {
+        let points: Vec<u64> = (0..64).collect();
+        let out = sweep(&points, |&p| p * p);
+        for (i, (p, r)) in out.iter().enumerate() {
+            assert_eq!(**p, i as u64);
+            assert_eq!(*r, (i * i) as u64);
+        }
+    }
+
+    #[test]
+    fn sweep_runs_simulations_in_parallel() {
+        use crate::sim::{ServerlessSimulator, SimConfig};
+        let rates = [0.3, 0.9, 1.5];
+        let out = sweep(&rates, |&rate| {
+            let cfg = SimConfig::table1().with_arrival_rate(rate).with_horizon(20_000.0);
+            ServerlessSimulator::new(cfg).run()
+        });
+        // Higher arrival rate -> more running servers.
+        assert!(out[0].1.avg_running_count < out[1].1.avg_running_count);
+        assert!(out[1].1.avg_running_count < out[2].1.avg_running_count);
+    }
+
+    #[test]
+    fn grid_covers_product() {
+        let out = sweep_grid(&[1.0, 2.0], &[10.0, 20.0, 30.0], |x, y| x + y);
+        assert_eq!(out.len(), 6);
+        assert!(out.iter().any(|(p, r)| p.x == 2.0 && p.y == 30.0 && *r == 32.0));
+    }
+
+    #[test]
+    fn empty_sweep_is_empty() {
+        let out: Vec<(&f64, f64)> = sweep(&[], |&x: &f64| x);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,130 @@
+//! Synthetic Azure-Functions-style workload traces.
+//!
+//! The paper cites Shahrad et al. 2020 ("Serverless in the Wild") for
+//! platform behaviour; that work characterizes production Azure Functions
+//! invocation patterns: a heavy-tailed popularity distribution across
+//! functions, strong diurnal cycles, and a large mass of rarely-invoked
+//! functions. We have no access to the production trace (repro gate), so
+//! this module generates synthetic traces with those published
+//! characteristics — the substitution documented in DESIGN.md §3. They
+//! exercise the same code paths: per-function workloads, trace-driven
+//! simulation and what-if sweeps over heterogeneous functions.
+
+use super::generator::{nonhomogeneous, Workload};
+use crate::sim::rng::Rng;
+
+/// One synthetic function's workload profile.
+#[derive(Debug, Clone)]
+pub struct FunctionProfile {
+    pub name: String,
+    /// Mean invocation rate (req/s) averaged over a day.
+    pub mean_rate: f64,
+    /// Diurnal modulation depth in [0,1): rate(t) = mean*(1 + depth*sin).
+    pub diurnal_depth: f64,
+    /// Phase offset of the daily peak, seconds.
+    pub peak_offset: f64,
+    /// Mean warm service time (s).
+    pub warm_service_mean: f64,
+    /// Mean cold service time (s).
+    pub cold_service_mean: f64,
+}
+
+/// A bundle of functions approximating an Azure-style tenant mix.
+#[derive(Debug, Clone)]
+pub struct SyntheticTrace {
+    pub functions: Vec<FunctionProfile>,
+}
+
+impl SyntheticTrace {
+    /// Generate `n` functions whose mean rates follow a Pareto popularity
+    /// distribution (alpha ~ 1.1, per Shahrad et al.'s heavy tail), with
+    /// random diurnal depth and phase, and a CPU/IO service-time mix
+    /// (paper §5: "a combination of CPU intensive and I/O intensive
+    /// workloads").
+    pub fn generate(n: usize, rng: &mut Rng) -> Self {
+        let mut functions = Vec::with_capacity(n);
+        for k in 0..n {
+            // Popularity: heavy-tailed rates clamped to a sane band.
+            let raw = rng.pareto(0.002, 1.1);
+            let mean_rate = raw.min(5.0);
+            let io_bound = rng.uniform() < 0.5;
+            let (warm, cold) = if io_bound {
+                // IO-intensive: longer, higher-variance service.
+                (rng.uniform_range(0.5, 3.0), rng.uniform_range(1.5, 5.0))
+            } else {
+                // CPU-intensive: shorter service, dominated by compute.
+                (rng.uniform_range(0.05, 0.8), rng.uniform_range(0.3, 2.0))
+            };
+            functions.push(FunctionProfile {
+                name: format!("fn-{k:04}"),
+                mean_rate,
+                diurnal_depth: rng.uniform_range(0.2, 0.9),
+                peak_offset: rng.uniform_range(0.0, 86_400.0),
+                warm_service_mean: warm,
+                cold_service_mean: cold.max(warm * 1.05),
+            });
+        }
+        SyntheticTrace { functions }
+    }
+
+    /// Materialize one function's arrivals over `horizon` seconds.
+    pub fn arrivals_for(&self, idx: usize, horizon: f64, rng: &mut Rng) -> Workload {
+        let f = &self.functions[idx];
+        let day = 86_400.0;
+        let depth = f.diurnal_depth;
+        let mean = f.mean_rate;
+        let offset = f.peak_offset;
+        let rate = move |t: f64| {
+            mean * (1.0 + depth * (2.0 * std::f64::consts::PI * (t + offset) / day).sin())
+        };
+        let rate_max = mean * (1.0 + depth);
+        nonhomogeneous(rate, rate_max, horizon, rng)
+    }
+
+    /// Aggregate mean rate across all functions.
+    pub fn total_mean_rate(&self) -> f64 {
+        self.functions.iter().map(|f| f.mean_rate).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_heavy_tailed_mix() {
+        let mut rng = Rng::new(9);
+        let trace = SyntheticTrace::generate(500, &mut rng);
+        assert_eq!(trace.functions.len(), 500);
+        let mut rates: Vec<f64> = trace.functions.iter().map(|f| f.mean_rate).collect();
+        rates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Heavy tail: the top function dominates the median by >10x.
+        let median = rates[250];
+        let top = rates[499];
+        assert!(top / median > 10.0, "top={top} median={median}");
+        // Cold > warm for every function.
+        assert!(trace.functions.iter().all(|f| f.cold_service_mean > f.warm_service_mean));
+    }
+
+    #[test]
+    fn arrivals_follow_mean_rate() {
+        let mut rng = Rng::new(10);
+        let mut trace = SyntheticTrace::generate(3, &mut rng);
+        trace.functions[0].mean_rate = 1.0;
+        trace.functions[0].diurnal_depth = 0.5;
+        let w = trace.arrivals_for(0, 2.0 * 86_400.0, &mut rng);
+        // Over whole days the diurnal modulation integrates out.
+        let rate = w.rate_over(2.0 * 86_400.0);
+        assert!((rate - 1.0).abs() < 0.05, "rate={rate}");
+    }
+
+    #[test]
+    fn deterministic_generation_per_seed() {
+        let t1 = SyntheticTrace::generate(10, &mut Rng::new(5));
+        let t2 = SyntheticTrace::generate(10, &mut Rng::new(5));
+        for (a, b) in t1.functions.iter().zip(&t2.functions) {
+            assert_eq!(a.mean_rate, b.mean_rate);
+            assert_eq!(a.peak_offset, b.peak_offset);
+        }
+    }
+}

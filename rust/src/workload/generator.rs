@@ -1,0 +1,202 @@
+//! Open-loop workload generators.
+//!
+//! The paper's experiments drive AWS Lambda with an open-loop Poisson client
+//! (their in-house `pacswg` library). This module is the equivalent
+//! substrate: it materializes arrival timestamp vectors for the emulator and
+//! for trace-driven simulation — Poisson, deterministic (cron), batch
+//! (paper §4.2 calls out batch arrivals as beyond Markovian models), MMPP
+//! bursty traffic, and non-homogeneous Poisson with an arbitrary rate
+//! profile (used by the Azure-style diurnal traces).
+
+use crate::sim::process::SimProcess;
+use crate::sim::rng::Rng;
+
+/// A materialized open-loop workload: sorted arrival times in seconds.
+#[derive(Debug, Clone, Default)]
+pub struct Workload {
+    pub arrivals: Vec<f64>,
+}
+
+impl Workload {
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    /// Observed average rate over the horizon.
+    pub fn rate_over(&self, horizon: f64) -> f64 {
+        if horizon <= 0.0 {
+            0.0
+        } else {
+            self.arrivals.len() as f64 / horizon
+        }
+    }
+
+    /// Merge two workloads (e.g. two functions sharing a client).
+    pub fn merge(mut self, other: &Workload) -> Workload {
+        self.arrivals.extend_from_slice(&other.arrivals);
+        self.arrivals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        self
+    }
+
+    /// Inter-arrival gaps (empirical process input).
+    pub fn gaps(&self) -> Vec<f64> {
+        self.arrivals
+            .windows(2)
+            .map(|w| w[1] - w[0])
+            .collect()
+    }
+}
+
+/// Homogeneous Poisson arrivals at `rate` over `[0, horizon)`.
+pub fn poisson(rate: f64, horizon: f64, rng: &mut Rng) -> Workload {
+    assert!(rate > 0.0 && horizon > 0.0);
+    let mut t = 0.0;
+    let mut arrivals = Vec::with_capacity((rate * horizon * 1.1) as usize + 16);
+    loop {
+        t += rng.exponential(rate);
+        if t >= horizon {
+            break;
+        }
+        arrivals.push(t);
+    }
+    Workload { arrivals }
+}
+
+/// Deterministic arrivals every `interval` seconds starting at `offset`
+/// (cron-style triggers).
+pub fn deterministic(interval: f64, offset: f64, horizon: f64) -> Workload {
+    assert!(interval > 0.0);
+    let mut arrivals = Vec::new();
+    let mut t = offset;
+    while t < horizon {
+        arrivals.push(t);
+        t += interval;
+    }
+    Workload { arrivals }
+}
+
+/// Batch arrivals: batch epochs are Poisson(`batch_rate`); each epoch brings
+/// `1 + Poisson(mean_batch_size - 1)` simultaneous requests.
+pub fn batch(batch_rate: f64, mean_batch_size: f64, horizon: f64, rng: &mut Rng) -> Workload {
+    assert!(batch_rate > 0.0 && mean_batch_size >= 1.0);
+    let mut arrivals = Vec::new();
+    let mut t = 0.0;
+    loop {
+        t += rng.exponential(batch_rate);
+        if t >= horizon {
+            break;
+        }
+        let size = 1 + rng.poisson(mean_batch_size - 1.0);
+        for _ in 0..size {
+            arrivals.push(t);
+        }
+    }
+    Workload { arrivals }
+}
+
+/// Arrivals driven by any [`SimProcess`] used as the inter-arrival process.
+pub fn from_process(process: &dyn SimProcess, horizon: f64, rng: &mut Rng) -> Workload {
+    let mut arrivals = Vec::new();
+    let mut t = 0.0;
+    loop {
+        t += process.sample(rng);
+        if t >= horizon {
+            break;
+        }
+        arrivals.push(t);
+    }
+    Workload { arrivals }
+}
+
+/// Non-homogeneous Poisson via thinning (Lewis & Shedler): `rate(t)` must be
+/// bounded by `rate_max` on `[0, horizon)`.
+pub fn nonhomogeneous<F: Fn(f64) -> f64>(
+    rate: F,
+    rate_max: f64,
+    horizon: f64,
+    rng: &mut Rng,
+) -> Workload {
+    assert!(rate_max > 0.0);
+    let mut arrivals = Vec::new();
+    let mut t = 0.0;
+    loop {
+        t += rng.exponential(rate_max);
+        if t >= horizon {
+            break;
+        }
+        let r = rate(t);
+        debug_assert!(r <= rate_max * (1.0 + 1e-9), "rate(t) exceeds rate_max");
+        if rng.uniform() * rate_max < r {
+            arrivals.push(t);
+        }
+    }
+    Workload { arrivals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_matches() {
+        let mut rng = Rng::new(1);
+        let w = poisson(2.0, 100_000.0, &mut rng);
+        let rate = w.rate_over(100_000.0);
+        assert!((rate - 2.0).abs() < 0.05, "rate={rate}");
+        assert!(w.arrivals.windows(2).all(|x| x[1] >= x[0]));
+    }
+
+    #[test]
+    fn deterministic_grid() {
+        let w = deterministic(60.0, 0.0, 3600.0);
+        assert_eq!(w.len(), 60);
+        assert_eq!(w.arrivals[1] - w.arrivals[0], 60.0);
+    }
+
+    #[test]
+    fn batch_brings_simultaneous_arrivals() {
+        let mut rng = Rng::new(2);
+        let w = batch(0.1, 5.0, 100_000.0, &mut rng);
+        // Average rate = batch_rate * mean_batch_size = 0.5
+        let rate = w.rate_over(100_000.0);
+        assert!((rate - 0.5).abs() < 0.05, "rate={rate}");
+        // Simultaneity: many zero gaps.
+        let zero_gaps = w.gaps().iter().filter(|&&g| g == 0.0).count();
+        assert!(zero_gaps > w.len() / 2);
+    }
+
+    #[test]
+    fn nonhomogeneous_diurnal_shape() {
+        let mut rng = Rng::new(3);
+        let day = 86_400.0;
+        // Sinusoidal profile peaking mid-day.
+        let rate = |t: f64| 1.0 + (2.0 * std::f64::consts::PI * t / day).sin().max(-1.0);
+        let w = nonhomogeneous(rate, 2.0, day, &mut rng);
+        // First half (rising sine, rate>1) denser than second half.
+        let mid = day / 2.0;
+        let first = w.arrivals.iter().filter(|&&t| t < mid).count();
+        let second = w.len() - first;
+        assert!(first > second, "first={first} second={second}");
+    }
+
+    #[test]
+    fn merge_sorts() {
+        let a = Workload { arrivals: vec![1.0, 3.0] };
+        let b = Workload { arrivals: vec![2.0, 4.0] };
+        let m = a.merge(&b);
+        assert_eq!(m.arrivals, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn from_process_respects_horizon() {
+        use crate::sim::process::ConstProcess;
+        let mut rng = Rng::new(4);
+        let w = from_process(&ConstProcess::new(10.0), 95.0, &mut rng);
+        assert_eq!(w.len(), 9);
+        assert!(w.arrivals.iter().all(|&t| t < 95.0));
+    }
+}

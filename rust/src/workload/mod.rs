@@ -1,0 +1,9 @@
+//! Workload generation substrate: open-loop arrival generators (the
+//! equivalent of the paper's `pacswg` Poisson load generator) and synthetic
+//! Azure-style multi-function traces.
+
+pub mod azure;
+pub mod generator;
+
+pub use azure::{FunctionProfile, SyntheticTrace};
+pub use generator::{batch, deterministic, from_process, nonhomogeneous, poisson, Workload};

@@ -1,0 +1,150 @@
+//! CLI smoke tests: every subcommand runs end-to-end through the real
+//! binary (std::process on `CARGO_BIN_EXE_simfaas`) with small horizons.
+
+use std::process::Command;
+
+fn simfaas(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_simfaas"))
+        .args(args)
+        .output()
+        .expect("binary runs");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_lists_commands() {
+    let (ok, text) = simfaas(&["help"]);
+    assert!(ok);
+    for cmd in ["steady", "temporal", "sweep", "emulate", "validate", "cost", "figures"] {
+        assert!(text.contains(cmd), "help missing {cmd}: {text}");
+    }
+}
+
+#[test]
+fn steady_reports_table1_rows() {
+    let (ok, text) = simfaas(&["steady", "--horizon", "20000", "--seed", "1"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("Cold Start Probability"));
+    assert!(text.contains("Average Server Count"));
+}
+
+#[test]
+fn steady_json_is_parsable_shape() {
+    let (ok, text) = simfaas(&["steady", "--horizon", "10000", "--json"]);
+    assert!(ok, "{text}");
+    let line = text.lines().find(|l| l.starts_with('{')).expect("json line");
+    assert!(line.contains("\"cold_start_prob\":"));
+    assert!(line.ends_with('}'));
+}
+
+#[test]
+fn temporal_prints_ci() {
+    let (ok, text) =
+        simfaas(&["temporal", "--horizon", "3000", "--replications", "4", "--interval", "100"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("95% CI"));
+    assert!(text.contains("cold start probability"));
+}
+
+#[test]
+fn sweep_prints_grid() {
+    let (ok, text) = simfaas(&[
+        "sweep",
+        "--rates",
+        "0.5,1.0",
+        "--thresholds",
+        "300,600",
+        "--horizon",
+        "20000",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("p_cold@300s"));
+    assert!(text.contains("p_cold@600s"));
+}
+
+#[test]
+fn emulate_writes_csv_trace() {
+    let dir = std::env::temp_dir().join(format!("simfaas-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("trace.csv");
+    let (ok, text) = simfaas(&[
+        "emulate",
+        "--rate",
+        "1.0",
+        "--horizon",
+        "2000",
+        "--scale",
+        "4000",
+        "--csv",
+        csv.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("cold start prob"));
+    let content = std::fs::read_to_string(&csv).unwrap();
+    assert!(content.starts_with("arrived_at,outcome,response_time,instance_id"));
+    assert!(content.lines().count() > 1000);
+
+    // identify reads the trace back.
+    let (ok, text) = simfaas(&["identify", "--trace", csv.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(text.contains("arrival rate"));
+    assert!(text.contains("warm mean"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn compare_shows_model_gap_table() {
+    let (ok, text) = simfaas(&[
+        "compare",
+        "--rate",
+        "0.9",
+        "--threshold",
+        "120",
+        "--horizon",
+        "50000",
+        "--markovian-expiration",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("cold_start_prob"));
+    assert!(text.contains("avg_server_count"));
+}
+
+#[test]
+fn cost_reports_monthly() {
+    let (ok, text) = simfaas(&["cost", "--horizon", "20000", "--memory", "256", "--provider", "azure"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("per 30 days"));
+    assert!(text.contains("provider infra cost"));
+}
+
+#[test]
+fn unknown_command_and_flag_fail() {
+    let (ok, text) = simfaas(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown command"));
+    let (ok, text) = simfaas(&["steady", "--horizont", "1"]);
+    assert!(!ok);
+    assert!(text.contains("unknown flag"), "{text}");
+}
+
+#[test]
+fn figures_quick_subset_runs() {
+    let dir = std::env::temp_dir().join(format!("simfaas-figs-{}", std::process::id()));
+    let (ok, text) = simfaas(&[
+        "figures",
+        "--fig",
+        "3",
+        "--quick",
+        "--out-dir",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("Fig 3"));
+    assert!(dir.join("fig3.csv").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,301 @@
+//! Property-based tests over the simulator's invariants.
+//!
+//! No property-testing crate is available offline, so this file carries a
+//! small in-repo harness: seeded random configuration generators (driven by
+//! the library's own deterministic `Rng`) and a `forall` runner that, on
+//! failure, reports the failing seed so the case can be replayed exactly.
+//! Each property runs against dozens of randomized workload/platform
+//! configurations spanning deterministic, exponential, gamma, Pareto and
+//! MMPP processes, low/high load, tight/loose concurrency caps.
+
+use simfaas::sim::process::*;
+use simfaas::sim::{
+    Rng, ServerlessSimulator, SimConfig, SimResults,
+};
+use std::sync::Arc;
+
+/// Mini property harness: run `prop` for `cases` generated configs; panic
+/// with the seed on the first failure.
+fn forall(name: &str, cases: u64, prop: impl Fn(&SimConfig, &SimResults)) {
+    for case in 0..cases {
+        let seed = 0xBEEF_0000 + case;
+        let cfg = gen_config(seed);
+        let results = ServerlessSimulator::new(cfg.clone()).run();
+        // Property panics carry context via assert messages.
+        let ctx = format!("property {name:?} failed for generator seed {seed:#x}");
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&cfg, &results)
+        }));
+        if let Err(e) = result {
+            eprintln!("{ctx}: cfg horizon={} max_conc={}", cfg.horizon, cfg.max_concurrency);
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Random but *valid* simulator configuration.
+fn gen_config(seed: u64) -> SimConfig {
+    let mut g = Rng::new(seed);
+    let arrival: Arc<dyn SimProcess> = match g.below(4) {
+        0 => Arc::new(ExpProcess::with_rate(g.uniform_range(0.05, 5.0))),
+        1 => Arc::new(ConstProcess::new(g.uniform_range(0.2, 10.0))),
+        2 => Arc::new(GammaProcess::new(g.uniform_range(0.5, 4.0), g.uniform_range(0.2, 2.0))),
+        _ => Arc::new(MmppProcess::new(
+            [g.uniform_range(0.5, 5.0), g.uniform_range(0.05, 0.5)],
+            [g.uniform_range(0.005, 0.05), g.uniform_range(0.005, 0.05)],
+        )),
+    };
+    let service = |g: &mut Rng| -> Arc<dyn SimProcess> {
+        match g.below(4) {
+            0 => Arc::new(ExpProcess::with_mean(g.uniform_range(0.2, 4.0))),
+            1 => Arc::new(ConstProcess::new(g.uniform_range(0.2, 4.0))),
+            2 => Arc::new(GaussianProcess::new(g.uniform_range(0.5, 3.0), g.uniform_range(0.1, 1.0))),
+            _ => Arc::new(ParetoProcess::new(g.uniform_range(0.2, 1.0), g.uniform_range(1.5, 3.0))),
+        }
+    };
+    let warm = service(&mut g);
+    let cold = service(&mut g);
+    SimConfig {
+        arrival,
+        batch_size: if g.uniform() < 0.25 {
+            Some(Arc::new(GammaProcess::new(2.0, g.uniform_range(0.5, 2.0))))
+        } else {
+            None
+        },
+        warm_service: warm,
+        cold_service: cold,
+        expiration_threshold: g.uniform_range(10.0, 1200.0),
+        expiration_process: if g.uniform() < 0.25 {
+            Some(Arc::new(ExpProcess::with_mean(g.uniform_range(10.0, 600.0))))
+        } else {
+            None
+        },
+        max_concurrency: if g.uniform() < 0.3 {
+            g.below(20) as usize + 1 // tight cap: rejections happen
+        } else {
+            1000
+        },
+        horizon: g.uniform_range(2_000.0, 20_000.0),
+        skip_initial: if g.uniform() < 0.5 { 0.0 } else { g.uniform_range(10.0, 500.0) },
+        seed: g.next_u64(),
+        capture_request_log: true,
+        sample_interval: 0.0,
+    }
+}
+
+#[test]
+fn request_accounting_is_exhaustive() {
+    // Every arrival in the measured window is cold, warm, or rejected.
+    forall("accounting", 40, |_cfg, r| {
+        assert_eq!(
+            r.total_requests,
+            r.cold_requests + r.warm_requests + r.rejected_requests
+        );
+    });
+}
+
+#[test]
+fn probabilities_are_probabilities() {
+    forall("probabilities", 40, |_cfg, r| {
+        assert!((0.0..=1.0).contains(&r.cold_start_prob), "p_cold={}", r.cold_start_prob);
+        assert!((0.0..=1.0).contains(&r.rejection_prob));
+        assert!((0.0..=1.0).contains(&r.wasted_capacity) || r.avg_server_count == 0.0);
+    });
+}
+
+#[test]
+fn level_decomposition_total_equals_running_plus_idle() {
+    forall("levels", 40, |_cfg, r| {
+        assert!(
+            (r.avg_server_count - r.avg_running_count - r.avg_idle_count).abs() < 1e-6,
+            "total {} != running {} + idle {}",
+            r.avg_server_count,
+            r.avg_running_count,
+            r.avg_idle_count
+        );
+        assert!(r.avg_running_count >= -1e-12);
+        assert!(r.avg_idle_count >= -1e-12);
+        assert!(r.max_server_count + 1e-12 >= r.avg_server_count);
+    });
+}
+
+#[test]
+fn concurrency_cap_is_respected() {
+    forall("cap", 40, |cfg, r| {
+        assert!(
+            r.max_server_count <= cfg.max_concurrency as f64 + 1e-9,
+            "max {} exceeds cap {}",
+            r.max_server_count,
+            cfg.max_concurrency
+        );
+    });
+}
+
+#[test]
+fn billed_time_bounded_by_server_time() {
+    // Billed busy seconds cannot exceed the total instance-seconds online.
+    forall("billing", 40, |_cfg, r| {
+        let server_seconds = r.avg_server_count * r.measured_time;
+        assert!(
+            r.billed_instance_seconds <= server_seconds * (1.0 + 1e-6) + 1.0,
+            "billed {} > online {}",
+            r.billed_instance_seconds,
+            server_seconds
+        );
+        assert!(r.billed_instance_seconds >= 0.0);
+    });
+}
+
+#[test]
+fn instance_creation_matches_cold_starts() {
+    // In the measured window each cold start creates exactly one instance.
+    forall("creation", 40, |_cfg, r| {
+        assert_eq!(r.instances_created, r.cold_requests);
+        assert!(r.instances_expired <= r.instances_created + 1000); // initial state margin
+    });
+}
+
+#[test]
+fn pmf_is_a_distribution() {
+    forall("pmf", 30, |_cfg, r| {
+        if r.instance_count_pmf.is_empty() {
+            return;
+        }
+        let sum: f64 = r.instance_count_pmf.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "pmf sums to {sum}");
+        assert!(r.instance_count_pmf.iter().all(|&p| (0.0..=1.0 + 1e-12).contains(&p)));
+        // PMF mean equals the time-weighted average server count.
+        let mean: f64 = r
+            .instance_count_pmf
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| i as f64 * p)
+            .sum();
+        assert!(
+            (mean - r.avg_server_count).abs() < 1e-6,
+            "pmf mean {mean} != avg {}",
+            r.avg_server_count
+        );
+    });
+}
+
+#[test]
+fn quantiles_are_ordered() {
+    forall("quantiles", 30, |_cfg, r| {
+        if r.total_requests < 100 || r.cold_requests + r.warm_requests == 0 {
+            return;
+        }
+        assert!(r.response_p50 <= r.response_p95 + 1e-9);
+        assert!(r.response_p95 <= r.response_p99 + 1e-9);
+        assert!(r.response_p50 >= 0.0);
+    });
+}
+
+#[test]
+fn request_log_is_chronological_and_consistent() {
+    forall("log", 25, |_cfg, r| {
+        // (log checked through a fresh run to access the simulator object)
+        let _ = r;
+    });
+    // Direct check with a dedicated run:
+    for seed in 0..10u64 {
+        let cfg = gen_config(0xFACE + seed);
+        let mut sim = ServerlessSimulator::new(cfg);
+        let r = sim.run();
+        let log = sim.request_log();
+        assert_eq!(log.len() as u64, r.total_requests);
+        assert!(log.windows(2).all(|w| w[0].arrived_at <= w[1].arrived_at));
+        for e in log {
+            match e.outcome {
+                simfaas::sim::RequestOutcome::Rejected => assert!(e.instance.is_none()),
+                _ => assert!(e.instance.is_some()),
+            }
+        }
+    }
+}
+
+#[test]
+fn same_seed_same_results_across_process_state() {
+    // Bit-reproducibility: regenerating the same seed gives identical runs.
+    // (Note: configs are *regenerated*, not cloned — a cloned config shares
+    // any stateful process like MMPP, whose phase carries across runs by
+    // design; fresh construction is the reproducibility contract.)
+    for seed in [1u64, 99, 0xDEAD] {
+        let a = ServerlessSimulator::new(gen_config(seed)).run();
+        let b = ServerlessSimulator::new(gen_config(seed)).run();
+        assert_eq!(a.total_requests, b.total_requests);
+        assert_eq!(a.cold_requests, b.cold_requests);
+        assert_eq!(a.rejected_requests, b.rejected_requests);
+        assert!((a.avg_server_count - b.avg_server_count).abs() < 1e-12);
+        assert!((a.billed_instance_seconds - b.billed_instance_seconds).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn newest_first_routing_targets_youngest_idle_instance() {
+    // Direct check of the paper's §2 routing rule: seed a warm pool of
+    // three idle instances (ids 0,1,2; 2 is the newest) and drive light
+    // deterministic traffic. Every request must be served by instance 2,
+    // and the starved instances 0 and 1 must expire at the threshold.
+    use simfaas::sim::{InstanceId, InstanceState};
+    let cfg = SimConfig {
+        arrival: Arc::new(ConstProcess::new(10.0)),
+        batch_size: None,
+        warm_service: Arc::new(ConstProcess::new(1.0)),
+        cold_service: Arc::new(ConstProcess::new(1.2)),
+        expiration_threshold: 25.0,
+        expiration_process: None,
+        max_concurrency: 1000,
+        horizon: 200.0,
+        skip_initial: 0.0,
+        seed: 42,
+        capture_request_log: true,
+        sample_interval: 0.0,
+    };
+    let mut sim = ServerlessSimulator::new(cfg);
+    sim.set_initial_state(&[0.0, 0.0, 0.0], &[]);
+    let r = sim.run();
+    assert_eq!(r.cold_requests, 0, "warm pool must absorb all traffic");
+    assert!(sim
+        .request_log()
+        .iter()
+        .all(|e| e.instance == Some(InstanceId(2))));
+    let insts = sim.instances();
+    assert_eq!(insts[0].state, InstanceState::Terminated);
+    assert_eq!(insts[1].state, InstanceState::Terminated);
+    assert_ne!(insts[2].state, InstanceState::Terminated);
+    // The starved instances expired exactly at the threshold.
+    assert!((insts[0].terminated_at.as_secs() - 25.0).abs() < 1e-9);
+}
+
+#[test]
+fn batch_arrivals_spawn_parallel_instances() {
+    // Paper §4.2/§6: batch arrivals (beyond Markovian models). A constant
+    // batch of 4 with slow epochs and short service needs 4 instances at
+    // every epoch: all four get created at the first epoch and then reused.
+    let cfg = SimConfig {
+        arrival: Arc::new(ConstProcess::new(10.0)),
+        batch_size: Some(Arc::new(ConstProcess::new(4.0))),
+        warm_service: Arc::new(ConstProcess::new(1.0)),
+        cold_service: Arc::new(ConstProcess::new(1.5)),
+        expiration_threshold: 60.0,
+        expiration_process: None,
+        max_concurrency: 1000,
+        horizon: 500.0,
+        skip_initial: 0.0,
+        seed: 9,
+        capture_request_log: true,
+        sample_interval: 0.0,
+    };
+    let mut sim = ServerlessSimulator::new(cfg);
+    let r = sim.run();
+    assert_eq!(r.cold_requests, 4, "first epoch cold-starts the pool");
+    assert_eq!(r.total_requests % 4, 0);
+    assert!((r.max_server_count - 4.0).abs() < 1e-9);
+    // Requests arrive in epochs of 4 simultaneous entries.
+    let log = sim.request_log();
+    for chunk in log.chunks(4) {
+        assert_eq!(chunk.len(), 4);
+        assert!(chunk.iter().all(|e| e.arrived_at == chunk[0].arrived_at));
+    }
+}

@@ -1,0 +1,96 @@
+//! Integration test: the AOT contract between `python/compile/aot.py` and
+//! the Rust PJRT runtime — every artifact loads, compiles and executes with
+//! correct shapes; the histogram kernel agrees bit-for-bit with the
+//! pure-Rust reference; payloads are deterministic and variant-distinct.
+//!
+//! Requires `make artifacts` (the Makefile test target orders this).
+
+use simfaas::runtime::{ComputePool, Engine, PayloadKind, HIST_NBINS};
+use simfaas::sim::{Histogram, Rng};
+
+fn engine() -> Engine {
+    Engine::load_dir(simfaas::runtime::default_artifacts_dir())
+        .expect("artifacts missing: run `make artifacts`")
+}
+
+#[test]
+fn all_payload_variants_execute_with_correct_shapes() {
+    let e = engine();
+    for kind in PayloadKind::ALL {
+        let x: Vec<f32> = (0..kind.input_len()).map(|i| (i as f32 * 0.001).sin()).collect();
+        let out = e.run_payload(kind, &x).unwrap();
+        assert_eq!(out.len(), kind.output_len(), "{kind:?}");
+        assert!(out.iter().all(|v| v.is_finite()), "{kind:?} produced non-finite output");
+    }
+}
+
+#[test]
+fn payload_variants_have_distinct_weights() {
+    // Same input prefix, different baked weights -> different outputs.
+    let e = engine();
+    let x_small = vec![0.3f32; PayloadKind::Small.input_len()];
+    let a = e.run_payload(PayloadKind::Small, &x_small).unwrap();
+    let b = e.run_payload(PayloadKind::Small, &x_small).unwrap();
+    assert_eq!(a, b, "payload must be deterministic");
+    let x_medium = vec![0.3f32; PayloadKind::Medium.input_len()];
+    let c = e.run_payload(PayloadKind::Medium, &x_medium).unwrap();
+    assert_ne!(a[..8], c[..8], "variants should differ");
+}
+
+#[test]
+fn payload_is_input_sensitive() {
+    let e = engine();
+    let k = PayloadKind::Small;
+    let zeros = vec![0.0f32; k.input_len()];
+    let ones = vec![1.0f32; k.input_len()];
+    let a = e.run_payload(k, &zeros).unwrap();
+    let b = e.run_payload(k, &ones).unwrap();
+    assert_ne!(a, b);
+    // relu(0 @ w1 + b1) @ w2 + b2 is a constant row repeated per batch row.
+    let (batch, _, d_out) = k.shape();
+    for row in 1..batch {
+        for j in 0..d_out {
+            assert!((a[row * d_out + j] - a[j]).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn histogram_kernel_exactly_matches_rust_reference() {
+    let e = engine();
+    let mut rng = Rng::new(0xCAFE);
+    for (n, lo, hi) in [(1000usize, 0.0f32, 1.0f32), (200_000, 0.0, 8.0), (131_072, -2.0, 2.0)] {
+        let samples: Vec<f32> = (0..n)
+            .map(|_| (rng.normal(1.0, 1.5)) as f32)
+            .collect();
+        let counts = e.run_histogram(&samples, lo, hi).unwrap();
+        let mut h = Histogram::new(lo as f64, hi as f64, HIST_NBINS);
+        for &s in &samples {
+            h.push(s as f64);
+        }
+        let expect: Vec<f64> = h.counts().iter().map(|&c| c as f64).collect();
+        assert_eq!(counts, expect, "n={n} lo={lo} hi={hi}");
+    }
+}
+
+#[test]
+fn compute_pool_parallel_consistency() {
+    // The pool must give the same answers as a direct engine, from any
+    // number of client threads.
+    let e = engine();
+    let pool = std::sync::Arc::new(
+        ComputePool::new(simfaas::runtime::default_artifacts_dir(), 2).unwrap(),
+    );
+    let k = PayloadKind::Small;
+    let x = vec![0.7f32; k.input_len()];
+    let direct = e.run_payload(k, &x).unwrap();
+    let mut handles = Vec::new();
+    for _ in 0..6 {
+        let pool = std::sync::Arc::clone(&pool);
+        let x = x.clone();
+        handles.push(std::thread::spawn(move || pool.run_payload(k, x).unwrap()));
+    }
+    for h in handles {
+        assert_eq!(h.join().unwrap(), direct);
+    }
+}

@@ -1,0 +1,138 @@
+//! Integration test: the full paper-§5 validation pipeline on a small
+//! workload — emulate → trace CSV round-trip → parameter identification →
+//! simulate with identified parameters → compare. This is the CI-sized
+//! version of `examples/validate_end_to_end.rs` (no PJRT payload, so it
+//! stays fast and timing-robust).
+
+use simfaas::emulator::{EmulatorConfig, Platform};
+use simfaas::sim::{EmpiricalProcess, ExpProcess, ServerlessSimulator, SimConfig};
+use simfaas::trace;
+use simfaas::workload;
+use std::sync::Arc;
+
+/// The emulator is a real-time concurrent system; on this single-core
+/// testbed two emulations running in parallel distort each other's thread
+/// timing, so the emulator-backed tests serialize on this lock.
+static EMULATOR_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn emulator_guard() -> std::sync::MutexGuard<'static, ()> {
+    // A panicking sibling test must not poison this lock into a second
+    // failure — the lock only serializes timing, it protects no data.
+    EMULATOR_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Retry-once runner: the emulator carries genuine testbed timing noise
+/// (single core); a tolerance breach on one window is retried on a fresh
+/// window before declaring failure, mirroring how the paper averages
+/// multiple experiment windows.
+fn with_retry(name: &str, attempt: impl Fn(u64) -> Result<(), String>) {
+    let mut last = String::new();
+    for seed_bump in 0..2 {
+        match attempt(seed_bump) {
+            Ok(()) => return,
+            Err(e) => last = e,
+        }
+    }
+    panic!("{name} failed on both windows: {last}");
+}
+
+#[test]
+fn emulate_identify_simulate_compare() {
+    let _guard = emulator_guard();
+    with_retry("pipeline", |bump| pipeline_attempt(bump));
+}
+
+fn pipeline_attempt(seed_bump: u64) -> Result<(), String> {
+    // 1. Emulate.
+    let mut cfg = EmulatorConfig::lambda_like(500.0);
+    cfg.synthetic_service = Some(Arc::new(ExpProcess::with_mean(1.991)));
+    cfg.provisioning_delay = 0.253;
+    cfg.expiration_threshold = 600.0;
+    cfg.tick = 2.0;
+    let mut rng = simfaas::sim::Rng::new(7 + seed_bump);
+    let w = workload::poisson(1.0, 6_000.0, &mut rng);
+    let res = Platform::new(cfg, None).run(&w).unwrap();
+    assert!(res.records.len() as f64 > 5_500.0 * 0.9);
+    // (assertions below return Err for retry; hard invariants stay asserts)
+
+    // 2. CSV round-trip.
+    let mut buf = Vec::new();
+    trace::write_csv(&mut buf, &res.records).unwrap();
+    let records = trace::read_csv(&buf[..]).unwrap();
+    assert_eq!(records.len(), res.records.len());
+
+    // 3. Identify.
+    let p = trace::identify(&records);
+    assert!((p.arrival_rate - 1.0).abs() < 0.05, "rate={}", p.arrival_rate);
+    assert!(p.warm_mean > 1.8 && p.warm_mean < 2.6, "warm={}", p.warm_mean);
+    assert!(p.cold_mean > p.warm_mean, "cold {} <= warm {}", p.cold_mean, p.warm_mean);
+
+    // 4. Simulate with identified parameters (empirical service bootstrap).
+    let warm: Vec<f64> = records
+        .iter()
+        .filter(|r| r.outcome == trace::Outcome::Warm)
+        .map(|r| r.response_time)
+        .collect();
+    let mut sim_cfg = SimConfig::table1()
+        .with_arrival_rate(p.arrival_rate)
+        .with_horizon(150_000.0);
+    sim_cfg.skip_initial = 300.0;
+    sim_cfg.warm_service = Arc::new(EmpiricalProcess::new(warm));
+    sim_cfg.cold_service = Arc::new(ExpProcess::with_mean(p.cold_mean));
+    let sim = ServerlessSimulator::new(sim_cfg).run();
+
+    // 5. Compare: pool size and waste agree within tolerance on a short
+    //    emulated window (P(cold) is too rare to compare at this scale).
+    let emu = res.metrics(300.0);
+    let server_err =
+        (sim.avg_server_count - emu.avg_server_count).abs() / emu.avg_server_count;
+    // Tolerances are deliberately loose: this is a pipeline test on a
+    // single-core testbed where the emulator carries real timing noise;
+    // EXPERIMENTS.md records the precision achieved on quiet full runs.
+    if server_err >= 0.35 {
+        return Err(format!(
+            "server count error {:.1}%: sim {} vs emu {}",
+            server_err * 100.0,
+            sim.avg_server_count,
+            emu.avg_server_count
+        ));
+    }
+    let waste_err = (sim.wasted_capacity - emu.wasted_capacity).abs();
+    if waste_err >= 0.18 {
+        return Err(format!("waste differs by {waste_err}"));
+    }
+    Ok(())
+}
+
+#[test]
+fn warm_pool_reconstruction_tracks_true_pool() {
+    let _guard = emulator_guard();
+    with_retry("warm_pool", |bump| warm_pool_attempt(bump));
+}
+
+fn warm_pool_attempt(seed_bump: u64) -> Result<(), String> {
+    // The paper's §5.3 estimator (unique instance ids in a trailing window)
+    // applied to emulator records approximates the emulator's true pool.
+    let mut cfg = EmulatorConfig::lambda_like(500.0);
+    cfg.synthetic_service = Some(Arc::new(ExpProcess::with_mean(1.991)));
+    cfg.provisioning_delay = 0.253;
+    cfg.expiration_threshold = 300.0;
+    cfg.tick = 2.0;
+    let mut rng = simfaas::sim::Rng::new(8 + seed_bump);
+    let w = workload::poisson(1.5, 5_000.0, &mut rng);
+    let res = Platform::new(cfg, None).run(&w).unwrap();
+    let est = trace::mean_warm_pool(&res.records, 300.0, 600.0);
+    let emu = res.metrics(600.0);
+    // Window-based reconstruction undercounts instances idle longer than
+    // the window; agreement within ~35% is what the method achieves (the
+    // paper uses it only as an observational proxy).
+    let err = (est - emu.avg_server_count).abs() / emu.avg_server_count;
+    if err >= 0.35 {
+        return Err(format!(
+            "estimated pool {est} vs emulated {} (err {:.0}%)",
+            emu.avg_server_count,
+            err * 100.0
+        ));
+    }
+    Ok(())
+}
