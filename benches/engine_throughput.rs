@@ -1,43 +1,94 @@
-//! Bench: core engine performance (the §Perf hot path) — simulator event
-//! throughput, the PJRT payload latency, and the PJRT histogram vs the
-//! pure-Rust histogram on large traces.
+//! Bench: core engine performance (the §Perf hot path in DESIGN.md) —
+//! simulator event throughput (scale-per-request and concurrency-value
+//! simulators), multi-threaded ensemble throughput, the PJRT payload
+//! latency, and the PJRT histogram vs the pure-Rust histogram.
+//!
+//! Emits a machine-readable `BENCH_engine.json` (path overridable via
+//! `SIMFAAS_BENCH_JSON`) so CI can archive the events/s trajectory.
 #[path = "harness.rs"]
 mod harness;
 
+use simfaas::output::JsonValue;
 use simfaas::runtime::{Engine, PayloadKind};
-use simfaas::sim::{Histogram, Rng, ServerlessSimulator, SimConfig};
+use simfaas::sim::ensemble::{run_ensemble, EnsembleOpts};
+use simfaas::sim::{Histogram, ParServerlessSimulator, Rng, ServerlessSimulator, SimConfig};
+
+/// arrival + departure per served request, plus expirations (~#instances).
+fn event_count(r: &simfaas::sim::SimResults) -> u64 {
+    r.total_requests * 2 + r.instances_expired
+}
 
 fn main() {
     harness::header(
         "Engine",
-        "simulator events/s; PJRT payload latency; histogram backends",
+        "simulator events/s; ensemble scaling; PJRT payload latency; histogram backends",
         "(perf targets in DESIGN.md §Perf)",
     );
-    // --- simulator throughput ---
+    let mut json = JsonValue::object();
+    json.set("bench", "engine_throughput").set("quick", harness::quick());
+    let mut rates = JsonValue::object();
+
+    // --- scale-per-request simulator throughput ---
     let horizon = if harness::quick() { 2e5 } else { 1e6 };
     let cfg = SimConfig::table1().with_horizon(horizon);
     let (res, results) = harness::bench("sim/table1_horizon_1e6", 5, || {
         ServerlessSimulator::new(cfg.clone()).run()
     });
-    // Events: arrival + departure per request, plus expirations (~#instances)
-    let events = results.total_requests * 2 + results.instances_expired;
+    let events = event_count(&results);
+    let eps_table1 = events as f64 / res.mean_s;
     println!(
         "  -> {:.2} M events/s ({} events in {:.3} s)",
-        events as f64 / res.mean_s / 1e6,
+        eps_table1 / 1e6,
         events,
         res.mean_s
     );
+    rates.set("sim_table1_events_per_sec", eps_table1);
 
     // High-load variant: bigger pools stress the idle-pool data structure.
     let cfg_hi = SimConfig::table1().with_arrival_rate(50.0).with_horizon(horizon / 10.0);
     let (res_hi, results_hi) = harness::bench("sim/high_load_rate50", 3, || {
         ServerlessSimulator::new(cfg_hi.clone()).run()
     });
-    let events_hi = results_hi.total_requests * 2 + results_hi.instances_expired;
+    let eps_hi = event_count(&results_hi) as f64 / res_hi.mean_s;
+    println!("  -> {:.2} M events/s at ~100-instance pool", eps_hi / 1e6);
+    rates.set("sim_high_load_events_per_sec", eps_hi);
+
+    // Concurrency-value simulator under the same high load: this is the
+    // case the seed's per-event O(all-instances) busy scan made quadratic
+    // (DESIGN.md §Perf targets ≥5x here post-fix).
+    let (res_par, results_par) = harness::bench("par/high_load_rate50", 3, || {
+        ParServerlessSimulator::new(cfg_hi.clone(), 4).run()
+    });
+    let eps_par = event_count(&results_par) as f64 / res_par.mean_s;
+    println!("  -> {:.2} M events/s (concurrency value c=4)", eps_par / 1e6);
+    rates.set("par_high_load_events_per_sec", eps_par);
+
+    // --- multi-threaded ensemble throughput ---
+    // 8 replications of a shorter Table-1 run; aggregate events/s across
+    // the whole ensemble shows the replication-level scaling.
+    let cfg_ens = SimConfig::table1().with_horizon(horizon / 10.0);
+    let opts = EnsembleOpts::new(8, 0x5EED);
+    let (res_ens, ens) = harness::bench("ensemble/8_replications_all_cores", 3, || {
+        run_ensemble(&cfg_ens, &opts)
+    });
+    let ens_events: u64 = ens.runs.iter().map(event_count).sum();
+    let eps_ens = ens_events as f64 / res_ens.mean_s;
+    let s = ens.summary();
     println!(
-        "  -> {:.2} M events/s at ~100-instance pool",
-        events_hi as f64 / res_hi.mean_s / 1e6
+        "  -> {:.2} M events/s aggregate; p_cold {:.4}% ± {:.4}",
+        eps_ens / 1e6,
+        s.cold_start_prob.mean * 100.0,
+        s.cold_start_prob.ci_half * 100.0
     );
+    rates.set("ensemble_events_per_sec", eps_ens);
+
+    json.set("events_per_sec", rates);
+    let path = std::env::var("SIMFAAS_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_engine.json".to_string());
+    match std::fs::write(&path, json.to_string() + "\n") {
+        Ok(()) => println!("  (events/s recorded in {path})"),
+        Err(e) => println!("  (could not write {path}: {e})"),
+    }
 
     // --- PJRT payload latency ---
     match Engine::load_dir(simfaas::runtime::default_artifacts_dir()) {

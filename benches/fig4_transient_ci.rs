@@ -8,7 +8,8 @@ use simfaas::figures;
 fn main() {
     harness::header(
         "Fig 4",
-        "cumulative-average instance count vs time, 10 runs, 95% CI",
+        "cumulative-average instance count vs time, 10 runs, 95% CI \
+         (replications fan out on the sim::ensemble thread pool)",
         "CI deviation < 1% of the mean at the end of the run",
     );
     let horizon = if harness::quick() { 2e4 } else { 1e5 };

@@ -7,9 +7,8 @@
 //! Run with: `cargo run --release --example trace_driven`
 
 use simfaas::output::Table;
-use simfaas::sim::{EmpiricalProcess, ServerlessSimulator, SimConfig};
+use simfaas::sim::{Process, ServerlessSimulator, SimConfig};
 use simfaas::workload::SyntheticTrace;
-use std::sync::Arc;
 
 fn main() {
     let mut rng = simfaas::sim::Rng::new(2024);
@@ -44,15 +43,13 @@ fn main() {
             continue;
         }
         let mut cfg = SimConfig::table1();
-        cfg.arrival = Arc::new(EmpiricalProcess::new(gaps));
-        cfg.warm_service = Arc::new(simfaas::sim::GammaProcess::new(
+        cfg.arrival = Process::empirical(gaps);
+        cfg.warm_service = simfaas::sim::GammaProcess::new(
             4.0,
             f.warm_service_mean / 4.0, // CV=0.5: realistic, non-Markovian
-        ));
-        cfg.cold_service = Arc::new(simfaas::sim::GaussianProcess::new(
-            f.cold_service_mean,
-            f.cold_service_mean * 0.15,
-        ));
+        )
+        .into();
+        cfg.cold_service = Process::gaussian(f.cold_service_mean, f.cold_service_mean * 0.15);
         cfg.horizon = horizon;
         let r = ServerlessSimulator::new(cfg).run();
         t.row(vec![

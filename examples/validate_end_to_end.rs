@@ -20,7 +20,7 @@
 use simfaas::emulator::{EmulatorConfig, Platform};
 use simfaas::output::Table;
 use simfaas::runtime::{ComputePool, Engine, PayloadKind, HIST_NBINS};
-use simfaas::sim::{EmpiricalProcess, ServerlessSimulator, SimConfig};
+use simfaas::sim::{Process, ServerlessSimulator, SimConfig};
 use simfaas::trace;
 use simfaas::workload;
 use std::sync::Arc;
@@ -89,11 +89,11 @@ fn main() -> anyhow::Result<()> {
         .with_arrival_rate(params.arrival_rate)
         .with_horizon(300_000.0);
     sim_cfg.skip_initial = 300.0;
-    sim_cfg.warm_service = Arc::new(EmpiricalProcess::new(warm));
+    sim_cfg.warm_service = Process::empirical(warm);
     sim_cfg.cold_service = if cold.len() >= 10 {
-        Arc::new(EmpiricalProcess::new(cold))
+        Process::empirical(cold)
     } else {
-        Arc::new(simfaas::sim::GaussianProcess::new(params.cold_mean, params.cold_std.max(0.01)))
+        Process::gaussian(params.cold_mean, params.cold_std.max(0.01))
     };
     let sim = ServerlessSimulator::new(sim_cfg).run();
 

@@ -121,25 +121,23 @@ pub fn compare_steady_state_markovian(
     sim_cfg: &SimConfig,
     mean_service: f64,
 ) -> ComparisonReport {
-    use crate::sim::ExpProcess;
-    use std::sync::Arc;
+    use crate::sim::Process;
     let mut cfg = sim_cfg.clone();
-    cfg.expiration_process = Some(Arc::new(ExpProcess::with_mean(cfg.expiration_threshold)));
+    cfg.expiration_process = Some(Process::exp_mean(cfg.expiration_threshold));
     compare_steady_state(&cfg, mean_service)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::ExpProcess;
-    use std::sync::Arc;
+    use crate::sim::Process;
 
     fn cfg() -> SimConfig {
         SimConfig {
-            arrival: Arc::new(ExpProcess::with_rate(0.9)),
+            arrival: Process::exp_rate(0.9),
             batch_size: None,
-            warm_service: Arc::new(ExpProcess::with_mean(1.991)),
-            cold_service: Arc::new(ExpProcess::with_mean(1.991)), // model has one mu
+            warm_service: Process::exp_mean(1.991),
+            cold_service: Process::exp_mean(1.991), // model has one mu
             expiration_threshold: 120.0,
             expiration_process: None,
             max_concurrency: 1000,

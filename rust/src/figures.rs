@@ -6,7 +6,8 @@
 use crate::emulator::{EmulatorConfig, EmuMetrics, Platform};
 use crate::sim::process::ExpProcess;
 use crate::sim::{
-    InitialState, ServerlessSimulator, ServerlessTemporalSimulator, SimConfig, SimResults,
+    InitialState, Process, ServerlessSimulator, ServerlessTemporalSimulator, SimConfig,
+    SimResults,
 };
 use crate::whatif::sweep::sweep;
 use crate::workload;
@@ -204,14 +205,14 @@ pub fn validation_rows(rates: &[f64], opts: &ValidationOpts) -> Vec<ValidationRo
             // 3. Simulator configured with the identified parameters.
             let mut cfg = paper_sim_cfg(params.arrival_rate, opts);
             cfg.warm_service = if warm_samples.len() >= 50 {
-                Arc::new(crate::sim::EmpiricalProcess::new(warm_samples))
+                Process::empirical(warm_samples)
             } else {
-                Arc::new(ExpProcess::with_mean(params.warm_mean))
+                Process::exp_mean(params.warm_mean)
             };
             cfg.cold_service = if cold_samples.len() >= 20 {
-                Arc::new(crate::sim::EmpiricalProcess::new(cold_samples))
+                Process::empirical(cold_samples)
             } else {
-                Arc::new(ExpProcess::with_mean(params.cold_mean))
+                Process::exp_mean(params.cold_mean)
             };
             let sim = ServerlessSimulator::new(cfg).run();
 

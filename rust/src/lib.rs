@@ -44,5 +44,6 @@ pub mod whatif;
 pub mod workload;
 
 pub use sim::{
-    ServerlessSimulator, ServerlessTemporalSimulator, SimConfig, SimProcess, SimResults,
+    run_ensemble, EnsembleOpts, EnsembleResults, Process, ServerlessSimulator,
+    ServerlessTemporalSimulator, SimConfig, SimProcess, SimResults,
 };

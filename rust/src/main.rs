@@ -4,6 +4,8 @@
 //!
 //! * `steady`    — steady-state simulation (paper Table 1)
 //! * `temporal`  — transient analysis with replications + CI (Fig. 4)
+//! * `ensemble`  — multi-threaded replication ensemble, mean ± 95% CI per
+//!                 metric; optional expiration-threshold grid
 //! * `sweep`     — what-if sweeps over rate × expiration threshold (Fig. 5)
 //! * `emulate`   — run the platform emulator on a Poisson workload
 //! * `validate`  — simulator-vs-emulator validation (Figs. 6–8)
@@ -21,7 +23,7 @@ use simfaas::figures;
 use simfaas::output::json::results_to_json;
 use simfaas::output::{ascii_histogram, ascii_lines, Series, Table};
 use simfaas::sim::{
-    InitialState, ServerlessSimulator, ServerlessTemporalSimulator, SimConfig,
+    InitialState, Process, ServerlessSimulator, ServerlessTemporalSimulator, SimConfig,
 };
 use simfaas::workload;
 use std::sync::Arc;
@@ -39,6 +41,7 @@ fn run(argv: Vec<String>) -> Result<()> {
     match args.command.as_deref() {
         Some("steady") => cmd_steady(&args),
         Some("temporal") => cmd_temporal(&args),
+        Some("ensemble") => cmd_ensemble(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("emulate") => cmd_emulate(&args),
         Some("validate") => cmd_validate(&args),
@@ -66,6 +69,10 @@ commands:
              --horizon --skip --seed --json
   temporal   transient analysis with CI (Fig. 4)
              --replications --horizon --interval --warm-pool --seed
+  ensemble   multi-threaded replication ensemble: mean ± 95% CI per metric
+             --replications --threads (0 = all cores) --rate --warm --cold
+             --threshold --horizon --skip --seed
+             [--thresholds a,b,c  parallel expiration-threshold grid]
   sweep      what-if sweep (Fig. 5)
              --rates a,b,c --thresholds x,y --horizon --seed
   emulate    run the platform emulator
@@ -85,11 +92,10 @@ commands:
 "#;
 
 fn sim_cfg_from_args(args: &Args) -> Result<SimConfig> {
-    use simfaas::sim::ExpProcess;
     let mut cfg = SimConfig::table1();
-    cfg.arrival = Arc::new(ExpProcess::with_rate(args.get_f64("rate", 0.9)?));
-    cfg.warm_service = Arc::new(ExpProcess::with_mean(args.get_f64("warm", figures::WARM_MEAN)?));
-    cfg.cold_service = Arc::new(ExpProcess::with_mean(args.get_f64("cold", figures::COLD_MEAN)?));
+    cfg.arrival = Process::exp_rate(args.get_f64("rate", 0.9)?);
+    cfg.warm_service = Process::exp_mean(args.get_f64("warm", figures::WARM_MEAN)?);
+    cfg.cold_service = Process::exp_mean(args.get_f64("cold", figures::COLD_MEAN)?);
     cfg.expiration_threshold = args.get_f64("threshold", 600.0)?;
     cfg.max_concurrency = args.get_usize("max-concurrency", 1000)?;
     cfg.horizon = args.get_f64("horizon", 1e6)?;
@@ -133,6 +139,50 @@ fn cmd_temporal(args: &Args) -> Result<()> {
     println!("final avg server count: {m:.4} ± {hw:.4} (95% CI)");
     let (pc, pch) = res.cold_start_prob_ci;
     println!("cold start probability: {:.4}% ± {:.4}%", pc * 100.0, pch * 100.0);
+    Ok(())
+}
+
+fn cmd_ensemble(args: &Args) -> Result<()> {
+    use simfaas::sim::ensemble::{run_ensemble, EnsembleOpts};
+    let cfg = sim_cfg_from_args(args)?;
+    let replications = args.get_usize("replications", 10)?;
+    if replications == 0 {
+        bail!("--replications must be at least 1");
+    }
+    let opts = EnsembleOpts {
+        replications,
+        threads: args.get_usize("threads", 0)?,
+        root_seed: cfg.seed,
+    };
+    let thresholds = args.get_f64_list("thresholds", &[])?;
+    if thresholds.is_empty() {
+        let res = run_ensemble(&cfg, &opts);
+        print!("{}", res.summary().to_table());
+    } else {
+        let out = simfaas::whatif::expiration_threshold_ensemble(&cfg, &thresholds, &opts);
+        println!(
+            "{} replications per threshold, 95% CI half-widths:",
+            opts.replications
+        );
+        let mut t = Table::new(vec![
+            "threshold s",
+            "p_cold %",
+            "avg servers",
+            "waste %",
+        ]);
+        for (th, res) in &out {
+            let p = res.ci_of(|r| r.cold_start_prob);
+            let s = res.ci_of(|r| r.avg_server_count);
+            let w = res.ci_of(|r| r.wasted_capacity);
+            t.row(vec![
+                format!("{th:.0}"),
+                format!("{:.4} ± {:.4}", p.mean * 100.0, p.ci_half * 100.0),
+                format!("{:.4} ± {:.4}", s.mean, s.ci_half),
+                format!("{:.3} ± {:.3}", w.mean * 100.0, w.ci_half * 100.0),
+            ]);
+        }
+        print!("{t}");
+    }
     Ok(())
 }
 
@@ -289,8 +339,8 @@ fn cmd_compare(args: &Args) -> Result<()> {
     use simfaas::analytical;
     let mut cfg = sim_cfg_from_args(args)?;
     let service = args.get_f64("service", figures::WARM_MEAN)?;
-    cfg.cold_service = Arc::new(simfaas::sim::ExpProcess::with_mean(service));
-    cfg.warm_service = Arc::new(simfaas::sim::ExpProcess::with_mean(service));
+    cfg.cold_service = Process::exp_mean(service);
+    cfg.warm_service = Process::exp_mean(service);
     let report = if args.get_bool("markovian-expiration") {
         analytical::compare_steady_state_markovian(&cfg, service)
     } else {

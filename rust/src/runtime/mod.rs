@@ -2,13 +2,25 @@
 //! `python/compile/aot.py` (Layer 2 lowering of the Layer-1 Pallas kernels)
 //! and executes them from Rust. Python never runs on the request path.
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod payload;
+#[cfg(feature = "pjrt")]
 pub mod pool;
+#[cfg(not(feature = "pjrt"))]
+mod stub;
 
+#[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use payload::{PayloadKind, HIST_ARTIFACT, HIST_N, HIST_NBINS};
+#[cfg(feature = "pjrt")]
 pub use pool::ComputePool;
+// Without the `pjrt` feature (and the vendored `xla` bindings it needs)
+// the runtime substitutes API-compatible stubs that fail at call time, so
+// every compile-time consumer — CLI, emulator, benches, examples — builds
+// and degrades gracefully.
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{ComputePool, Engine};
 
 use std::path::PathBuf;
 

@@ -1,0 +1,77 @@
+//! API-compatible stand-ins for the PJRT runtime when the `pjrt` feature
+//! (and the vendored `xla` bindings it needs) is not compiled in.
+//!
+//! Construction fails with a clear error at *runtime*; every consumer (the
+//! emulator, benches, examples, the CLI) keeps *compiling*. Consumers that
+//! treat PJRT as optional degrade gracefully — `benches/engine_throughput.rs`
+//! prints "(pjrt benches skipped: ...)" and moves on, the emulator runs with
+//! synthetic service times — while PJRT-dependent entry points
+//! (`examples/validate_end_to_end.rs`) exit early with this error.
+//!
+//! Note the `pjrt` feature itself only builds on a host that also provides
+//! the vendored `xla` bindings as a crate; the dependency is deliberately
+//! not declared in Cargo.toml so the default build works offline.
+
+use super::payload::PayloadKind;
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+
+const UNAVAILABLE: &str = "PJRT support not compiled in: requires the `pjrt` feature and a host \
+     providing the vendored `xla` bindings (add the dependency in rust/Cargo.toml there)";
+
+/// Stand-in for the PJRT engine; [`Engine::load_dir`] always fails.
+pub struct Engine {
+    dir: PathBuf,
+}
+
+impl Engine {
+    pub fn load_dir<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let _ = dir.as_ref();
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn run_payload(&self, _kind: PayloadKind, _x: &[f32]) -> Result<Vec<f32>> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn run_histogram_block(&self, _samples: &[f32], _lo: f32, _hi: f32) -> Result<Vec<f32>> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn run_histogram(&self, _samples: &[f32], _lo: f32, _hi: f32) -> Result<Vec<f64>> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+/// Stand-in for the PJRT worker pool; [`ComputePool::new`] always fails.
+pub struct ComputePool {
+    n_workers: usize,
+}
+
+impl ComputePool {
+    pub fn new<P: Into<PathBuf>>(dir: P, n_workers: usize) -> Result<Self> {
+        let _: PathBuf = dir.into();
+        let _ = n_workers;
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    pub fn run_payload(&self, _kind: PayloadKind, _x: Vec<f32>) -> Result<Vec<f32>> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn run_histogram(&self, _samples: Vec<f32>, _lo: f32, _hi: f32) -> Result<Vec<f64>> {
+        bail!("{UNAVAILABLE}")
+    }
+}

@@ -1,0 +1,314 @@
+//! `sim::ensemble` — deterministic multi-threaded replication engine.
+//!
+//! The paper's headline use-cases (cold-start probability, transient CI
+//! bands, what-if sweeps) all average many independent replications, and
+//! the ROADMAP's "fast as the hardware allows" goal makes replication the
+//! cheapest axis to parallelize: replications share nothing, so they scale
+//! linearly with cores. This module provides:
+//!
+//! * [`derive_seeds`] — per-replication seeds expanded from one root seed
+//!   via SplitMix64, so an ensemble is fully described by
+//!   `(config, root_seed, replications)`.
+//! * [`run_indexed`] — the scheduling primitive: a scoped thread pool that
+//!   maps `f(0..n)` into an index-ordered `Vec`. Work distribution over
+//!   threads is racy (an atomic ticket counter), but results land in their
+//!   index slot and every replication's inputs depend only on its index —
+//!   so the output is **bit-identical for any thread count**, including 1.
+//! * [`run_ensemble`] / [`run_par_ensemble`] — replication ensembles over
+//!   [`ServerlessSimulator`] / [`super::par_simulator::ParServerlessSimulator`],
+//!   aggregated into per-metric mean ± 95% confidence intervals.
+//!
+//! Determinism contract: replication `i` simulates `cfg.replica_with_seed
+//! (seeds[i])` — stateful built-in processes (MMPP) are re-created per
+//! replication so threads never share mutable process state. The one
+//! escape: a stateful `Process::Custom` is shared as-is (the trait cannot
+//! re-create it); such configs are still *seed*-deterministic only under a
+//! single thread.
+
+use super::metrics::confidence_interval_95;
+use super::par_simulator::ParServerlessSimulator;
+use super::results::SimResults;
+use super::rng::SplitMix64;
+use super::simulator::{ServerlessSimulator, SimConfig};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Expand one root seed into `n` per-replication seeds (SplitMix64 stream).
+pub fn derive_seeds(root_seed: u64, n: usize) -> Vec<u64> {
+    let mut sm = SplitMix64::new(root_seed);
+    (0..n).map(|_| sm.next_u64()).collect()
+}
+
+/// Map `f` over `0..n` on `threads` worker threads (0 = one per available
+/// core), returning results in index order. `f(i)` must depend only on `i`
+/// for the output to be thread-count-invariant — which is exactly how the
+/// ensemble runners call it.
+pub fn run_indexed<R, F>(n: usize, threads: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4)
+            .min(n)
+    } else {
+        threads.min(n)
+    };
+    if workers <= 1 {
+        // Inline fast path: no pool, no locks — and the reference order
+        // against which the multi-threaded path is bit-compared in tests.
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    let slots = Mutex::new(slots);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                slots.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .expect("no worker panicked holding the slot lock")
+        .into_iter()
+        .map(|s| s.expect("worker filled every slot"))
+        .collect()
+}
+
+/// Ensemble parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct EnsembleOpts {
+    /// Number of independent replications.
+    pub replications: usize,
+    /// Worker threads; 0 = one per available core.
+    pub threads: usize,
+    /// Root seed; per-replication seeds derive from it via SplitMix64.
+    pub root_seed: u64,
+}
+
+impl EnsembleOpts {
+    pub fn new(replications: usize, root_seed: u64) -> Self {
+        EnsembleOpts { replications, threads: 0, root_seed }
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+}
+
+/// Mean and 95% confidence half-width of one metric across replications.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricCi {
+    pub mean: f64,
+    pub ci_half: f64,
+}
+
+/// All replication results of one ensemble, in replication order.
+#[derive(Debug, Clone)]
+pub struct EnsembleResults {
+    /// Per-replication seeds (index-aligned with `runs`).
+    pub seeds: Vec<u64>,
+    pub runs: Vec<SimResults>,
+}
+
+impl EnsembleResults {
+    /// Mean ± 95% CI of an arbitrary metric extractor across replications.
+    pub fn ci_of<F: Fn(&SimResults) -> f64>(&self, f: F) -> MetricCi {
+        let xs: Vec<f64> = self.runs.iter().map(f).collect();
+        if xs.len() < 2 {
+            MetricCi { mean: xs.first().copied().unwrap_or(f64::NAN), ci_half: 0.0 }
+        } else {
+            let (mean, ci_half) = confidence_interval_95(&xs);
+            MetricCi { mean, ci_half }
+        }
+    }
+
+    /// Aggregate the paper's Table-1 metrics into mean ± 95% CI.
+    pub fn summary(&self) -> EnsembleSummary {
+        EnsembleSummary {
+            replications: self.runs.len(),
+            cold_start_prob: self.ci_of(|r| r.cold_start_prob),
+            rejection_prob: self.ci_of(|r| r.rejection_prob),
+            avg_server_count: self.ci_of(|r| r.avg_server_count),
+            avg_running_count: self.ci_of(|r| r.avg_running_count),
+            avg_idle_count: self.ci_of(|r| r.avg_idle_count),
+            wasted_capacity: self.ci_of(|r| r.wasted_capacity),
+            avg_response_time: self.ci_of(|r| r.avg_response_time),
+            response_p95: self.ci_of(|r| r.response_p95),
+            billed_instance_seconds: self.ci_of(|r| r.billed_instance_seconds),
+        }
+    }
+}
+
+/// Per-metric mean ± 95% CI across an ensemble (the Table 1 output rows
+/// with error bars, which a single run cannot provide).
+#[derive(Debug, Clone)]
+pub struct EnsembleSummary {
+    pub replications: usize,
+    pub cold_start_prob: MetricCi,
+    pub rejection_prob: MetricCi,
+    pub avg_server_count: MetricCi,
+    pub avg_running_count: MetricCi,
+    pub avg_idle_count: MetricCi,
+    pub wasted_capacity: MetricCi,
+    pub avg_response_time: MetricCi,
+    pub response_p95: MetricCi,
+    pub billed_instance_seconds: MetricCi,
+}
+
+impl EnsembleSummary {
+    /// Two-column report: metric, mean ± 95% CI half-width.
+    pub fn to_table(&self) -> String {
+        let pct = |m: &MetricCi| format!("{:.4} % ± {:.4}", m.mean * 100.0, m.ci_half * 100.0);
+        let num = |m: &MetricCi| format!("{:.4} ± {:.4}", m.mean, m.ci_half);
+        let rows = [
+            ("*Cold Start Probability", pct(&self.cold_start_prob)),
+            ("*Rejection Probability", pct(&self.rejection_prob)),
+            ("*Average Server Count", num(&self.avg_server_count)),
+            ("*Average Running Servers", num(&self.avg_running_count)),
+            ("*Average Idle Count", num(&self.avg_idle_count)),
+            ("*Average Wasted Capacity", pct(&self.wasted_capacity)),
+            ("*Average Response Time", num(&self.avg_response_time)),
+            ("*Response Time P95", num(&self.response_p95)),
+            ("Billed instance-seconds", num(&self.billed_instance_seconds)),
+        ];
+        let w = rows.iter().map(|(k, _)| k.len()).max().unwrap_or(0);
+        let mut s = format!("{} replications, 95% CI half-widths:\n", self.replications);
+        for (k, v) in rows {
+            s.push_str(&format!("{k:<w$}  {v}\n"));
+        }
+        s
+    }
+}
+
+/// Run a replication ensemble of [`ServerlessSimulator`] over `cfg`.
+/// Bit-identical output for any `opts.threads` given the same root seed.
+pub fn run_ensemble(cfg: &SimConfig, opts: &EnsembleOpts) -> EnsembleResults {
+    assert!(opts.replications >= 1);
+    let seeds = derive_seeds(opts.root_seed, opts.replications);
+    let runs = run_indexed(opts.replications, opts.threads, |i| {
+        ServerlessSimulator::new(cfg.replica_with_seed(seeds[i])).run()
+    });
+    EnsembleResults { seeds, runs }
+}
+
+/// Same, for the concurrency-value-`c` [`ParServerlessSimulator`].
+pub fn run_par_ensemble(
+    cfg: &SimConfig,
+    concurrency_value: u32,
+    opts: &EnsembleOpts,
+) -> EnsembleResults {
+    assert!(opts.replications >= 1);
+    let seeds = derive_seeds(opts.root_seed, opts.replications);
+    let runs = run_indexed(opts.replications, opts.threads, |i| {
+        ParServerlessSimulator::new(cfg.replica_with_seed(seeds[i]), concurrency_value).run()
+    });
+    EnsembleResults { seeds, runs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> SimConfig {
+        SimConfig::table1().with_horizon(5_000.0)
+    }
+
+    fn fingerprint(res: &EnsembleResults) -> Vec<u64> {
+        let mut fp = Vec::new();
+        for r in &res.runs {
+            fp.push(r.total_requests);
+            fp.push(r.cold_requests);
+            fp.push(r.avg_server_count.to_bits());
+            fp.push(r.billed_instance_seconds.to_bits());
+        }
+        fp
+    }
+
+    #[test]
+    fn derive_seeds_is_deterministic_and_distinct() {
+        let a = derive_seeds(42, 16);
+        let b = derive_seeds(42, 16);
+        assert_eq!(a, b);
+        let mut dedup = a.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 16, "seeds must be distinct");
+        assert_ne!(derive_seeds(43, 16), a);
+    }
+
+    #[test]
+    fn run_indexed_preserves_order_across_thread_counts() {
+        let seq: Vec<usize> = run_indexed(64, 1, |i| i * i);
+        for threads in [2, 3, 8] {
+            assert_eq!(run_indexed(64, threads, |i| i * i), seq);
+        }
+        assert!(run_indexed(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn ensemble_bit_identical_across_thread_counts() {
+        let cfg = quick_cfg();
+        let base = run_ensemble(&cfg, &EnsembleOpts::new(8, 0xE15).with_threads(1));
+        for threads in [2, 8] {
+            let res = run_ensemble(&cfg, &EnsembleOpts::new(8, 0xE15).with_threads(threads));
+            assert_eq!(fingerprint(&res), fingerprint(&base), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn different_root_seeds_differ() {
+        let cfg = quick_cfg();
+        let a = run_ensemble(&cfg, &EnsembleOpts::new(4, 1));
+        let b = run_ensemble(&cfg, &EnsembleOpts::new(4, 2));
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+    }
+
+    #[test]
+    fn summary_ci_is_sane() {
+        let cfg = quick_cfg();
+        let res = run_ensemble(&cfg, &EnsembleOpts::new(6, 7));
+        let s = res.summary();
+        assert_eq!(s.replications, 6);
+        assert!(s.avg_server_count.mean > 0.0);
+        assert!(s.avg_server_count.ci_half >= 0.0);
+        // Decomposition holds for the aggregated means too.
+        assert!(
+            (s.avg_server_count.mean - s.avg_running_count.mean - s.avg_idle_count.mean).abs()
+                < 1e-9
+        );
+        let table = s.to_table();
+        assert!(table.contains("Cold Start Probability"));
+        assert!(table.contains("95% CI"));
+    }
+
+    #[test]
+    fn single_replication_has_zero_ci() {
+        let res = run_ensemble(&quick_cfg(), &EnsembleOpts::new(1, 3));
+        assert_eq!(res.runs.len(), 1);
+        assert_eq!(res.summary().cold_start_prob.ci_half, 0.0);
+    }
+
+    #[test]
+    fn par_ensemble_runs_and_is_deterministic() {
+        let cfg = quick_cfg().with_arrival_rate(3.0);
+        let a = run_par_ensemble(&cfg, 3, &EnsembleOpts::new(4, 9).with_threads(1));
+        let b = run_par_ensemble(&cfg, 3, &EnsembleOpts::new(4, 9).with_threads(4));
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+        assert!(a.summary().avg_server_count.mean > 0.0);
+    }
+}

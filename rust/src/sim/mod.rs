@@ -4,8 +4,11 @@
 //! `SimProcess`, [`instance`] is `FunctionInstance`, [`simulator`] is
 //! `ServerlessSimulator`, [`temporal`] is `ServerlessTemporalSimulator`,
 //! and [`metrics`]/[`hist`] are the `Utility` helpers. [`par_simulator`] is
-//! the `ParServerlessSimulator` extension (§3.1).
+//! the `ParServerlessSimulator` extension (§3.1). Beyond the paper,
+//! [`ensemble`] is the deterministic multi-threaded replication engine and
+//! [`process::Process`] the monomorphic hot-path dispatch (DESIGN.md §Perf).
 
+pub mod ensemble;
 pub mod event;
 pub mod hist;
 pub mod instance;
@@ -18,6 +21,10 @@ pub mod simulator;
 pub mod temporal;
 pub mod time;
 
+pub use ensemble::{
+    derive_seeds, run_ensemble, run_indexed, run_par_ensemble, EnsembleOpts, EnsembleResults,
+    EnsembleSummary, MetricCi,
+};
 pub use event::{Event, EventQueue};
 pub use hist::{CountDistribution, Histogram};
 pub use instance::{FunctionInstance, InstanceId, InstanceState};
@@ -25,7 +32,7 @@ pub use metrics::{confidence_interval_95, ks_distance, mape, OnlineStats, P2Quan
 pub use par_simulator::ParServerlessSimulator;
 pub use process::{
     ConstProcess, EmpiricalProcess, ExpProcess, GammaProcess, GaussianProcess,
-    LogNormalProcess, MmppProcess, ParetoProcess, SimProcess, WeibullProcess,
+    LogNormalProcess, MmppProcess, ParetoProcess, Process, SimProcess, WeibullProcess,
 };
 pub use results::SimResults;
 pub use rng::Rng;

@@ -16,7 +16,7 @@
 use super::event::{Event, EventQueue};
 use super::hist::CountDistribution;
 use super::instance::InstanceId;
-use super::metrics::{OnlineStats, TimeWeighted};
+use super::metrics::{OnlineStats, P2Quantile, TimeWeighted};
 use super::results::SimResults;
 use super::rng::Rng;
 use super::simulator::SimConfig;
@@ -56,6 +56,12 @@ pub struct ParServerlessSimulator {
     live_count: usize,
     /// Total in-flight requests.
     in_flight: u64,
+    /// Count of instances in the `Busy` state, maintained incrementally on
+    /// the three state transitions (Idle→Busy, cold start, Busy→Idle)
+    /// instead of re-scanning every instance ever created on each event —
+    /// the seed's per-event O(all-instances) scan dominated high-load runs
+    /// (§Perf: the par/high_load_rate50 bench).
+    busy_instances: usize,
 
     stats_started: bool,
     stats_start: SimTime,
@@ -73,6 +79,9 @@ pub struct ParServerlessSimulator {
     response_stats: OnlineStats,
     warm_response_stats: OnlineStats,
     cold_response_stats: OnlineStats,
+    response_p50: P2Quantile,
+    response_p95: P2Quantile,
+    response_p99: P2Quantile,
     billed_seconds: f64,
 }
 
@@ -84,12 +93,13 @@ impl ParServerlessSimulator {
         ParServerlessSimulator {
             concurrency_value,
             rng,
-            events: EventQueue::with_capacity(1024),
+            events: EventQueue::with_capacity(4096),
             now: start,
-            instances: Vec::new(),
+            instances: Vec::with_capacity(1024),
             available: BTreeMap::new(),
             live_count: 0,
             in_flight: 0,
+            busy_instances: 0,
             stats_started: cfg.skip_initial <= 0.0,
             stats_start: SimTime::from_secs(cfg.skip_initial.max(0.0)),
             total_requests: 0,
@@ -106,21 +116,35 @@ impl ParServerlessSimulator {
             response_stats: OnlineStats::new(),
             warm_response_stats: OnlineStats::new(),
             cold_response_stats: OnlineStats::new(),
+            response_p50: P2Quantile::new(0.5),
+            response_p95: P2Quantile::new(0.95),
+            response_p99: P2Quantile::new(0.99),
             billed_seconds: 0.0,
             cfg,
         }
     }
 
+    /// O(1): every level is an incrementally-maintained counter.
     fn sync(&mut self) {
         self.server_tw.update(self.now, self.live_count as f64);
         self.running_tw.update(self.now, self.in_flight as f64);
-        let busy_instances = self
-            .instances
-            .iter()
-            .filter(|i| i.state == ParState::Busy)
-            .count() as f64;
-        self.busy_inst_tw.update(self.now, busy_instances);
+        self.busy_inst_tw.update(self.now, self.busy_instances as f64);
         self.count_dist.update(self.now, self.live_count);
+    }
+
+    fn record_response(&mut self, rt: f64, cold: bool) {
+        if !self.stats_started {
+            return;
+        }
+        self.response_stats.push(rt);
+        if cold {
+            self.cold_response_stats.push(rt);
+        } else {
+            self.warm_response_stats.push(rt);
+        }
+        self.response_p50.push(rt);
+        self.response_p95.push(rt);
+        self.response_p99.push(rt);
     }
 
     fn maybe_start_stats(&mut self, t: SimTime) {
@@ -151,6 +175,7 @@ impl ParServerlessSimulator {
                 inst.state = ParState::Busy;
                 inst.busy_since = self.now;
                 inst.generation += 1; // cancel pending expiration
+                self.busy_instances += 1;
             }
             inst.in_flight += 1;
             self.in_flight += 1;
@@ -163,9 +188,9 @@ impl ParServerlessSimulator {
             self.events.schedule(self.now.after(service), Event::Departure(id));
             if self.stats_started {
                 self.warm_requests += 1;
-                self.response_stats.push(service);
-                self.warm_response_stats.push(service);
             }
+            self.record_response(service, false);
+            self.sync();
         } else if self.live_count < self.cfg.max_concurrency {
             let id = InstanceId(self.instances.len() as u64);
             self.instances.push(ParInstance {
@@ -179,6 +204,7 @@ impl ParServerlessSimulator {
             });
             self.live_count += 1;
             self.in_flight += 1;
+            self.busy_instances += 1;
             if self.concurrency_value > 1 {
                 self.available.insert(id, self.concurrency_value - 1);
             }
@@ -187,13 +213,15 @@ impl ParServerlessSimulator {
             if self.stats_started {
                 self.cold_requests += 1;
                 self.instances_created += 1;
-                self.response_stats.push(service);
-                self.cold_response_stats.push(service);
             }
-        } else if self.stats_started {
-            self.rejected_requests += 1;
+            self.record_response(service, true);
+            self.sync();
+        } else {
+            // Rejection changes no level: skip the accumulator sync.
+            if self.stats_started {
+                self.rejected_requests += 1;
+            }
         }
-        self.sync();
         let gap = self.cfg.arrival.sample(&mut self.rng);
         self.events.schedule(self.now.after(gap), Event::Arrival);
     }
@@ -217,6 +245,7 @@ impl ParServerlessSimulator {
                 inst.generation += 1;
                 schedule_expiration = true;
                 gen = inst.generation;
+                self.busy_instances -= 1;
             } else {
                 schedule_expiration = false;
                 gen = inst.generation;
@@ -306,9 +335,9 @@ impl ParServerlessSimulator {
             avg_response_time: self.response_stats.mean(),
             avg_warm_response_time: self.warm_response_stats.mean(),
             avg_cold_response_time: self.cold_response_stats.mean(),
-            response_p50: f64::NAN,
-            response_p95: f64::NAN,
-            response_p99: f64::NAN,
+            response_p50: self.response_p50.quantile(),
+            response_p95: self.response_p95.quantile(),
+            response_p99: self.response_p99.quantile(),
             billed_instance_seconds: self.billed_seconds,
             observed_arrival_rate: if measured > 0.0 {
                 self.total_requests as f64 / measured
@@ -323,16 +352,15 @@ impl ParServerlessSimulator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::process::ExpProcess;
+    use crate::sim::process::{ExpProcess, Process};
     use crate::sim::simulator::ServerlessSimulator;
-    use std::sync::Arc;
 
     fn cfg(rate: f64, horizon: f64, seed: u64) -> SimConfig {
         SimConfig {
-            arrival: Arc::new(ExpProcess::with_rate(rate)),
+            arrival: Process::exp_rate(rate),
             batch_size: None,
-            warm_service: Arc::new(ExpProcess::with_mean(1.991)),
-            cold_service: Arc::new(ExpProcess::with_mean(2.244)),
+            warm_service: Process::exp_mean(1.991),
+            cold_service: Process::exp_mean(2.244),
             expiration_threshold: 600.0,
             expiration_process: None,
             max_concurrency: 1000,
@@ -386,5 +414,67 @@ mod tests {
         let r = ParServerlessSimulator::new(c, 2).run();
         // Offered load 50*2 ~ 100 >> 6 slots.
         assert!(r.rejection_prob > 0.5);
+    }
+
+    #[test]
+    fn busy_counter_matches_full_scan() {
+        // The incrementally-maintained busy-instance counter must agree
+        // with a from-scratch recount of every instance ever created (the
+        // seed's per-event O(n) scan, now a test-only oracle).
+        for seed in [5u64, 6, 7] {
+            let mut sim = ParServerlessSimulator::new(cfg(8.0, 10_000.0, seed), 3);
+            let _ = sim.run();
+            let scan = sim
+                .instances
+                .iter()
+                .filter(|i| i.state == ParState::Busy)
+                .count();
+            assert_eq!(sim.busy_instances, scan, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn enum_and_custom_dispatch_bit_identical() {
+        // Regression vs the seed behavior: swapping the monomorphic enum
+        // for the trait-object escape hatch (the seed's dispatch mechanism)
+        // changes nothing on a fixed seed — counters, averages, and the
+        // new percentile estimators all match bit-for-bit.
+        let base = cfg(5.0, 50_000.0, 9);
+        let mut custom = base.clone();
+        custom.arrival = Process::custom(ExpProcess::with_rate(5.0));
+        custom.warm_service = Process::custom(ExpProcess::with_mean(1.991));
+        custom.cold_service = Process::custom(ExpProcess::with_mean(2.244));
+        let a = ParServerlessSimulator::new(base, 2).run();
+        let b = ParServerlessSimulator::new(custom, 2).run();
+        assert_eq!(a.total_requests, b.total_requests);
+        assert_eq!(a.cold_requests, b.cold_requests);
+        assert_eq!(a.warm_requests, b.warm_requests);
+        assert_eq!(a.instances_expired, b.instances_expired);
+        assert_eq!(a.avg_server_count.to_bits(), b.avg_server_count.to_bits());
+        assert_eq!(
+            a.billed_instance_seconds.to_bits(),
+            b.billed_instance_seconds.to_bits()
+        );
+        assert_eq!(a.response_p95.to_bits(), b.response_p95.to_bits());
+    }
+
+    #[test]
+    fn percentiles_at_c1_match_scale_per_request_simulator() {
+        // With c=1 and a deterministic expiration threshold the two
+        // simulators are the same stochastic system drawing the same RNG
+        // stream, so the P2 percentile estimators see identical response
+        // sequences.
+        let c = cfg(0.9, 100_000.0, 11);
+        let par = ParServerlessSimulator::new(c.clone(), 1).run();
+        let spr = ServerlessSimulator::new(c).run();
+        assert_eq!(par.total_requests, spr.total_requests);
+        assert_eq!(par.cold_requests, spr.cold_requests);
+        assert!(par.response_p50.is_finite() && par.response_p50 > 0.0);
+        assert!((par.response_p50 - spr.response_p50).abs() < 1e-9);
+        assert!((par.response_p95 - spr.response_p95).abs() < 1e-9);
+        assert!((par.response_p99 - spr.response_p99).abs() < 1e-9);
+        // Percentiles are ordered and bracket the mean sanely.
+        assert!(par.response_p50 <= par.response_p95);
+        assert!(par.response_p95 <= par.response_p99);
     }
 }

@@ -16,6 +16,7 @@
 //! trace results").
 
 use super::rng::Rng;
+use std::sync::Arc;
 
 /// A stochastic process generating non-negative durations (seconds).
 pub trait SimProcess: Send + Sync {
@@ -408,6 +409,231 @@ impl SimProcess for MmppProcess {
     }
 }
 
+/// Monomorphic process dispatch for the simulator hot path.
+///
+/// The simulators draw inter-arrival and service times millions of times per
+/// run; routing every draw through `Arc<dyn SimProcess>` costs an indirect
+/// call the optimizer cannot inline (§Perf in DESIGN.md). `Process`
+/// enumerates the built-in processes so the common draws compile to direct,
+/// inlinable calls, while the `Custom` variant keeps the trait-object escape
+/// hatch for user-defined processes (paper §3: "the user can pass a random
+/// generator function with a custom distribution").
+///
+/// `Clone` is cheap for every variant except `Empirical` (which clones its
+/// sample buffer — still negligible next to a simulation run). The stateful
+/// `Mmpp` variant is shared behind an `Arc`; use [`Process::replica`] to get
+/// an independent copy with fresh phase state for parallel replications.
+#[derive(Clone)]
+pub enum Process {
+    /// Exponential(rate) — the paper's default for arrivals and service.
+    Exp(ExpProcess),
+    /// Deterministic fixed interval.
+    Const(ConstProcess),
+    /// Gaussian truncated at zero.
+    Gaussian(GaussianProcess),
+    /// Bootstrap resampling from a measured trace.
+    Empirical(EmpiricalProcess),
+    /// 2-state Markov-modulated Poisson process (stateful, shared).
+    Mmpp(Arc<MmppProcess>),
+    /// Any user-supplied [`SimProcess`] (virtual dispatch).
+    Custom(Arc<dyn SimProcess>),
+}
+
+impl Process {
+    /// Exponential process from a rate (events per second).
+    pub fn exp_rate(rate: f64) -> Self {
+        Process::Exp(ExpProcess::with_rate(rate))
+    }
+
+    /// Exponential process from a mean duration (seconds).
+    pub fn exp_mean(mean: f64) -> Self {
+        Process::Exp(ExpProcess::with_mean(mean))
+    }
+
+    /// Deterministic process.
+    pub fn constant(value: f64) -> Self {
+        Process::Const(ConstProcess::new(value))
+    }
+
+    /// Truncated Gaussian process.
+    pub fn gaussian(mean: f64, std: f64) -> Self {
+        Process::Gaussian(GaussianProcess::new(mean, std))
+    }
+
+    /// Empirical (bootstrap) process over measured samples.
+    pub fn empirical(samples: Vec<f64>) -> Self {
+        Process::Empirical(EmpiricalProcess::new(samples))
+    }
+
+    /// 2-state MMPP with fresh phase state.
+    pub fn mmpp(rate: [f64; 2], switch: [f64; 2]) -> Self {
+        Process::Mmpp(Arc::new(MmppProcess::new(rate, switch)))
+    }
+
+    /// Wrap any [`SimProcess`] (virtual-dispatch escape hatch).
+    pub fn custom<P: SimProcess + 'static>(p: P) -> Self {
+        Process::Custom(Arc::new(p))
+    }
+
+    /// Independent replica for parallel replications: stateful built-ins
+    /// (MMPP) are re-created with fresh phase state so replications never
+    /// share mutable state across threads; stateless variants are cloned.
+    /// `Custom` processes are shared as-is — the trait exposes no way to
+    /// re-create them, so determinism across thread counts for a stateful
+    /// custom process is the caller's responsibility.
+    pub fn replica(&self) -> Process {
+        match self {
+            Process::Mmpp(p) => Process::Mmpp(Arc::new(MmppProcess::new(p.rate, p.switch))),
+            other => other.clone(),
+        }
+    }
+
+    /// Draw the next duration. Built-in variants dispatch statically.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match self {
+            Process::Exp(p) => p.sample(rng),
+            Process::Const(p) => p.sample(rng),
+            Process::Gaussian(p) => p.sample(rng),
+            Process::Empirical(p) => p.sample(rng),
+            Process::Mmpp(p) => p.as_ref().sample(rng),
+            Process::Custom(p) => p.sample(rng),
+        }
+    }
+
+    /// Theoretical mean, if known in closed form.
+    pub fn mean(&self) -> Option<f64> {
+        match self {
+            Process::Exp(p) => SimProcess::mean(p),
+            Process::Const(p) => SimProcess::mean(p),
+            Process::Gaussian(p) => SimProcess::mean(p),
+            Process::Empirical(p) => SimProcess::mean(p),
+            Process::Mmpp(p) => SimProcess::mean(p.as_ref()),
+            Process::Custom(p) => p.mean(),
+        }
+    }
+
+    /// Theoretical PDF at `x`, if known.
+    pub fn pdf(&self, x: f64) -> Option<f64> {
+        match self {
+            Process::Exp(p) => p.pdf(x),
+            Process::Const(p) => SimProcess::pdf(p, x),
+            Process::Gaussian(p) => SimProcess::pdf(p, x),
+            Process::Empirical(p) => SimProcess::pdf(p, x),
+            Process::Mmpp(p) => SimProcess::pdf(p.as_ref(), x),
+            Process::Custom(p) => p.pdf(x),
+        }
+    }
+
+    /// Theoretical CDF at `x`, if known.
+    pub fn cdf(&self, x: f64) -> Option<f64> {
+        match self {
+            Process::Exp(p) => p.cdf(x),
+            Process::Const(p) => p.cdf(x),
+            Process::Gaussian(p) => SimProcess::cdf(p, x),
+            Process::Empirical(p) => p.cdf(x),
+            Process::Mmpp(p) => SimProcess::cdf(p.as_ref(), x),
+            Process::Custom(p) => p.cdf(x),
+        }
+    }
+
+    /// Human-readable description.
+    pub fn describe(&self) -> String {
+        match self {
+            Process::Exp(p) => p.describe(),
+            Process::Const(p) => p.describe(),
+            Process::Gaussian(p) => p.describe(),
+            Process::Empirical(p) => p.describe(),
+            Process::Mmpp(p) => p.describe(),
+            Process::Custom(p) => p.describe(),
+        }
+    }
+}
+
+/// `Process` is itself a `SimProcess`, so it plugs into trait-based
+/// consumers (e.g. `workload::from_process`) unchanged.
+impl SimProcess for Process {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        Process::sample(self, rng)
+    }
+
+    fn mean(&self) -> Option<f64> {
+        Process::mean(self)
+    }
+
+    fn pdf(&self, x: f64) -> Option<f64> {
+        Process::pdf(self, x)
+    }
+
+    fn cdf(&self, x: f64) -> Option<f64> {
+        Process::cdf(self, x)
+    }
+
+    fn describe(&self) -> String {
+        Process::describe(self)
+    }
+}
+
+impl From<ExpProcess> for Process {
+    fn from(p: ExpProcess) -> Self {
+        Process::Exp(p)
+    }
+}
+
+impl From<ConstProcess> for Process {
+    fn from(p: ConstProcess) -> Self {
+        Process::Const(p)
+    }
+}
+
+impl From<GaussianProcess> for Process {
+    fn from(p: GaussianProcess) -> Self {
+        Process::Gaussian(p)
+    }
+}
+
+impl From<EmpiricalProcess> for Process {
+    fn from(p: EmpiricalProcess) -> Self {
+        Process::Empirical(p)
+    }
+}
+
+impl From<MmppProcess> for Process {
+    fn from(p: MmppProcess) -> Self {
+        Process::Mmpp(Arc::new(p))
+    }
+}
+
+impl From<LogNormalProcess> for Process {
+    fn from(p: LogNormalProcess) -> Self {
+        Process::custom(p)
+    }
+}
+
+impl From<GammaProcess> for Process {
+    fn from(p: GammaProcess) -> Self {
+        Process::custom(p)
+    }
+}
+
+impl From<WeibullProcess> for Process {
+    fn from(p: WeibullProcess) -> Self {
+        Process::custom(p)
+    }
+}
+
+impl From<ParetoProcess> for Process {
+    fn from(p: ParetoProcess) -> Self {
+        Process::custom(p)
+    }
+}
+
+impl From<Arc<dyn SimProcess>> for Process {
+    fn from(p: Arc<dyn SimProcess>) -> Self {
+        Process::Custom(p)
+    }
+}
+
 /// Lanczos approximation of the Gamma function (for Weibull mean, CI widths).
 pub fn gamma_fn(x: f64) -> f64 {
     // g = 7, n = 9 Lanczos coefficients.
@@ -534,6 +760,67 @@ mod tests {
         let total: f64 = (0..n).map(|_| p.sample(&mut rng)).sum();
         let rate = n as f64 / total;
         assert!((rate - 5.5).abs() / 5.5 < 0.05, "rate={rate}");
+    }
+
+    #[test]
+    fn process_enum_bit_identical_to_trait_dispatch() {
+        // The monomorphic fast path must draw the exact same stream as the
+        // trait-object escape hatch: same samplers, same RNG consumption.
+        let e = ExpProcess::with_rate(0.7);
+        let enum_p = Process::Exp(e.clone());
+        let custom_p = Process::custom(e);
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        for _ in 0..10_000 {
+            assert_eq!(
+                enum_p.sample(&mut r1).to_bits(),
+                custom_p.sample(&mut r2).to_bits()
+            );
+        }
+        assert_eq!(enum_p.mean(), custom_p.mean());
+        assert_eq!(enum_p.cdf(1.0), custom_p.cdf(1.0));
+    }
+
+    #[test]
+    fn process_replica_resets_mmpp_state() {
+        let p = Process::mmpp([10.0, 1.0], [0.1, 0.1]);
+        // Advance the shared phase state so a plain clone would carry it.
+        let mut r = Rng::new(3);
+        for _ in 0..100 {
+            p.sample(&mut r);
+        }
+        // Replicas start from fresh state: identical draws given equal RNGs.
+        let a = p.replica();
+        let b = p.replica();
+        let mut ra = Rng::new(42);
+        let mut rb = Rng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.sample(&mut ra).to_bits(), b.sample(&mut rb).to_bits());
+        }
+    }
+
+    #[test]
+    fn process_from_impls_cover_builtins() {
+        let ps: Vec<Process> = vec![
+            ExpProcess::with_rate(1.0).into(),
+            ConstProcess::new(1.0).into(),
+            GaussianProcess::new(1.0, 0.1).into(),
+            EmpiricalProcess::new(vec![1.0, 2.0]).into(),
+            MmppProcess::new([1.0, 2.0], [0.1, 0.2]).into(),
+            GammaProcess::new(2.0, 1.0).into(),
+            LogNormalProcess::from_mean_cv(1.0, 0.5).into(),
+            WeibullProcess::new(2.0, 1.0).into(),
+            ParetoProcess::new(1.0, 2.0).into(),
+        ];
+        let mut rng = Rng::new(1);
+        for p in &ps {
+            let x = p.sample(&mut rng);
+            assert!(x >= 0.0 && x.is_finite());
+            assert!(!p.describe().is_empty());
+        }
+        // The enum is itself a SimProcess (trait consumers keep working).
+        let as_trait: &dyn SimProcess = &ps[0];
+        assert!(as_trait.mean().is_some());
     }
 
     #[test]

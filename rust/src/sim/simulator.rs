@@ -21,11 +21,10 @@ use super::event::{Event, EventQueue};
 use super::hist::CountDistribution;
 use super::instance::{FunctionInstance, InstanceId, InstanceState};
 use super::metrics::{OnlineStats, P2Quantile, TimeWeighted};
-use super::process::SimProcess;
+use super::process::Process;
 use super::results::SimResults;
 use super::rng::Rng;
 use super::time::SimTime;
-use std::sync::Arc;
 
 /// Outcome of a single request, for the optional per-request trace.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -48,24 +47,28 @@ pub struct RequestLogEntry {
 }
 
 /// Simulation input parameters (the paper's Table 1 input rows).
+///
+/// Processes are held as the monomorphic [`Process`] enum so the hot-path
+/// draws dispatch statically; any [`super::process::SimProcess`] still plugs
+/// in via [`Process::custom`] / `.into()`.
 #[derive(Clone)]
 pub struct SimConfig {
     /// Inter-arrival time process.
-    pub arrival: Arc<dyn SimProcess>,
+    pub arrival: Process,
     /// Optional batch-size process: each arrival epoch brings
     /// `max(1, round(sample))` simultaneous requests (paper §4.2/§6 calls
     /// out batch arrivals as beyond the Markovian models' reach). `None`
     /// means single arrivals.
-    pub batch_size: Option<Arc<dyn SimProcess>>,
+    pub batch_size: Option<Process>,
     /// Warm-start busy-period process (service time).
-    pub warm_service: Arc<dyn SimProcess>,
+    pub warm_service: Process,
     /// Cold-start busy-period process (provisioning + service).
-    pub cold_service: Arc<dyn SimProcess>,
+    pub cold_service: Process,
     /// Idle expiration threshold in seconds (AWS Lambda: 600 s).
     /// A stochastic threshold can be supplied via `expiration_process`.
     pub expiration_threshold: f64,
     /// Optional stochastic expiration threshold, overriding the constant.
-    pub expiration_process: Option<Arc<dyn SimProcess>>,
+    pub expiration_process: Option<Process>,
     /// Maximum concurrency level (AWS Lambda default: 1000).
     pub max_concurrency: usize,
     /// Simulation horizon in seconds.
@@ -86,12 +89,11 @@ impl SimConfig {
     /// exp(1.991 s) warm, exp(2.244 s) cold, 10 min threshold, 1e6 s
     /// horizon, 100 s warm-up skip.
     pub fn table1() -> Self {
-        use super::process::ExpProcess;
         SimConfig {
-            arrival: Arc::new(ExpProcess::with_rate(0.9)),
+            arrival: Process::exp_rate(0.9),
             batch_size: None,
-            warm_service: Arc::new(ExpProcess::with_mean(1.991)),
-            cold_service: Arc::new(ExpProcess::with_mean(2.244)),
+            warm_service: Process::exp_mean(1.991),
+            cold_service: Process::exp_mean(2.244),
             expiration_threshold: 600.0,
             expiration_process: None,
             max_concurrency: 1000,
@@ -114,14 +116,29 @@ impl SimConfig {
     }
 
     pub fn with_arrival_rate(mut self, rate: f64) -> Self {
-        use super::process::ExpProcess;
-        self.arrival = Arc::new(ExpProcess::with_rate(rate));
+        self.arrival = Process::exp_rate(rate);
         self
     }
 
     pub fn with_expiration_threshold(mut self, secs: f64) -> Self {
         self.expiration_threshold = secs;
         self
+    }
+
+    /// Clone this configuration for an independent replication: stateful
+    /// processes get fresh state (see [`Process::replica`]) and the RNG is
+    /// re-seeded. The ensemble and temporal engines use this so parallel
+    /// replications never share mutable process state across threads —
+    /// the precondition for bit-identical results at any thread count.
+    pub fn replica_with_seed(&self, seed: u64) -> SimConfig {
+        let mut cfg = self.clone();
+        cfg.arrival = cfg.arrival.replica();
+        cfg.batch_size = cfg.batch_size.as_ref().map(Process::replica);
+        cfg.warm_service = cfg.warm_service.replica();
+        cfg.cold_service = cfg.cold_service.replica();
+        cfg.expiration_process = cfg.expiration_process.as_ref().map(Process::replica);
+        cfg.seed = seed;
+        cfg
     }
 }
 
@@ -164,8 +181,10 @@ pub struct ServerlessSimulator {
     instances_created: u64,
     instances_expired: u64,
     server_count_tw: TimeWeighted,
+    // The idle level is total - busy at every instant, so its time-weighted
+    // average is derived exactly at finish() instead of paying a third
+    // accumulator update on every level change (§Perf).
     running_tw: TimeWeighted,
-    idle_tw: TimeWeighted,
     count_dist: CountDistribution,
     lifespan_stats: OnlineStats,
     response_stats: OnlineStats,
@@ -184,12 +203,15 @@ impl ServerlessSimulator {
     pub fn new(cfg: SimConfig) -> Self {
         let rng = Rng::new(cfg.seed);
         let start = SimTime::ZERO;
+        // Pre-reserve hot storage: a Table-1-scale run allocates thousands
+        // of instances and keeps a few thousand events in flight; growing
+        // these Vecs inside the event loop shows up in profiles (§Perf).
         ServerlessSimulator {
             rng,
-            events: EventQueue::with_capacity(1024),
+            events: EventQueue::with_capacity(4096),
             now: start,
-            instances: Vec::new(),
-            idle_pool: Vec::new(),
+            instances: Vec::with_capacity(1024),
+            idle_pool: Vec::with_capacity(64),
             live_count: 0,
             busy_count: 0,
             stats_started: cfg.skip_initial <= 0.0,
@@ -202,7 +224,6 @@ impl ServerlessSimulator {
             instances_expired: 0,
             server_count_tw: TimeWeighted::new(start, 0.0),
             running_tw: TimeWeighted::new(start, 0.0),
-            idle_tw: TimeWeighted::new(start, 0.0),
             count_dist: CountDistribution::new(start, 0),
             lifespan_stats: OnlineStats::new(),
             response_stats: OnlineStats::new(),
@@ -271,7 +292,6 @@ impl ServerlessSimulator {
         let busy = self.busy_count as f64;
         self.server_count_tw.update(self.now, total);
         self.running_tw.update(self.now, busy);
-        self.idle_tw.update(self.now, total - busy);
         self.count_dist.update(self.now, self.live_count);
     }
 
@@ -310,11 +330,9 @@ impl ServerlessSimulator {
         let boundary = self.stats_start;
         self.server_count_tw.advance(boundary);
         self.running_tw.advance(boundary);
-        self.idle_tw.advance(boundary);
         self.count_dist.finish(boundary);
         self.server_count_tw.reset_at(boundary);
         self.running_tw.reset_at(boundary);
-        self.idle_tw.reset_at(boundary);
         self.count_dist.reset_at(boundary);
         self.stats_started = true;
     }
@@ -347,10 +365,16 @@ impl ServerlessSimulator {
                 }
             }
         };
+        let (live0, busy0) = (self.live_count, self.busy_count);
         for _ in 0..batch {
             self.route_one_request();
         }
-        self.sync_levels();
+        // Lazy sync: a fully-rejected epoch changes no level, so skip the
+        // accumulator updates entirely (they stay correct because the level
+        // is unchanged since the last sync).
+        if self.live_count != live0 || self.busy_count != busy0 {
+            self.sync_levels();
+        }
         // Schedule the next arrival epoch.
         let gap = self.cfg.arrival.sample(&mut self.rng);
         self.events.schedule(self.now.after(gap), Event::Arrival);
@@ -491,14 +515,16 @@ impl ServerlessSimulator {
         self.now = horizon;
         self.server_count_tw.advance(horizon);
         self.running_tw.advance(horizon);
-        self.idle_tw.advance(horizon);
         self.count_dist.finish(horizon);
         self.emit_samples();
 
         let measured = horizon.since(self.stats_start).max(0.0);
         let served = self.cold_requests + self.warm_requests;
         let avg_server = self.server_count_tw.average();
-        let avg_idle = self.idle_tw.average();
+        let avg_running = self.running_tw.average();
+        // idle(t) = total(t) - busy(t) at every instant, so the averages
+        // decompose exactly (no third accumulator needed on the hot path).
+        let avg_idle = avg_server - avg_running;
         SimResults {
             measured_time: measured,
             total_requests: self.total_requests,
@@ -519,7 +545,7 @@ impl ServerlessSimulator {
             instances_created: self.instances_created,
             instances_expired: self.instances_expired,
             avg_server_count: avg_server,
-            avg_running_count: self.running_tw.average(),
+            avg_running_count: avg_running,
             avg_idle_count: avg_idle,
             max_server_count: self.server_count_tw.max_level(),
             wasted_capacity: if avg_server > 0.0 { avg_idle / avg_server } else { 0.0 },
@@ -563,14 +589,13 @@ impl ServerlessSimulator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::process::{ConstProcess, ExpProcess};
 
     fn quick_cfg(rate: f64, horizon: f64, seed: u64) -> SimConfig {
         SimConfig {
-            arrival: Arc::new(ExpProcess::with_rate(rate)),
+            arrival: Process::exp_rate(rate),
             batch_size: None,
-            warm_service: Arc::new(ExpProcess::with_mean(1.991)),
-            cold_service: Arc::new(ExpProcess::with_mean(2.244)),
+            warm_service: Process::exp_mean(1.991),
+            cold_service: Process::exp_mean(2.244),
             expiration_threshold: 600.0,
             expiration_process: None,
             max_concurrency: 1000,
@@ -603,6 +628,29 @@ mod tests {
         assert_eq!(a.total_requests, b.total_requests);
         assert_eq!(a.cold_requests, b.cold_requests);
         assert!((a.avg_server_count - b.avg_server_count).abs() < 1e-12);
+    }
+
+    #[test]
+    fn enum_and_custom_dispatch_runs_bit_identical() {
+        // The monomorphic hot path must reproduce the trait-object ("seed
+        // behavior") path exactly: same draws, same events, same stats.
+        use crate::sim::process::ExpProcess;
+        let base = quick_cfg(0.9, 50_000.0, 77);
+        let mut custom = base.clone();
+        custom.arrival = Process::custom(ExpProcess::with_rate(0.9));
+        custom.warm_service = Process::custom(ExpProcess::with_mean(1.991));
+        custom.cold_service = Process::custom(ExpProcess::with_mean(2.244));
+        let a = ServerlessSimulator::new(base).run();
+        let b = ServerlessSimulator::new(custom).run();
+        assert_eq!(a.total_requests, b.total_requests);
+        assert_eq!(a.cold_requests, b.cold_requests);
+        assert_eq!(a.instances_expired, b.instances_expired);
+        assert_eq!(a.avg_server_count.to_bits(), b.avg_server_count.to_bits());
+        assert_eq!(
+            a.billed_instance_seconds.to_bits(),
+            b.billed_instance_seconds.to_bits()
+        );
+        assert_eq!(a.response_p99.to_bits(), b.response_p99.to_bits());
     }
 
     #[test]
@@ -639,10 +687,10 @@ mod tests {
         // Arrivals every 5 s, service 1 s, threshold 600 s: after the first
         // cold start the single instance is always reused.
         let cfg = SimConfig {
-            arrival: Arc::new(ConstProcess::new(5.0)),
+            arrival: Process::constant(5.0),
             batch_size: None,
-            warm_service: Arc::new(ConstProcess::new(1.0)),
-            cold_service: Arc::new(ConstProcess::new(2.0)),
+            warm_service: Process::constant(1.0),
+            cold_service: Process::constant(2.0),
             expiration_threshold: 600.0,
             expiration_process: None,
             max_concurrency: 1000,
@@ -662,10 +710,10 @@ mod tests {
     fn instances_expire_when_idle_long_enough() {
         // Arrivals every 700 s > threshold 600 s: every request is cold.
         let cfg = SimConfig {
-            arrival: Arc::new(ConstProcess::new(700.0)),
+            arrival: Process::constant(700.0),
             batch_size: None,
-            warm_service: Arc::new(ConstProcess::new(1.0)),
-            cold_service: Arc::new(ConstProcess::new(2.0)),
+            warm_service: Process::constant(1.0),
+            cold_service: Process::constant(2.0),
             expiration_threshold: 600.0,
             expiration_process: None,
             max_concurrency: 1000,

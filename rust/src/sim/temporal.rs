@@ -7,6 +7,7 @@
 //! estimates come with error bars (the paper's Fig. 4 runs 10 replications
 //! and reports <1% CI deviation).
 
+use super::ensemble::run_indexed;
 use super::metrics::confidence_interval_95;
 use super::results::SimResults;
 use super::simulator::{CountSample, ServerlessSimulator, SimConfig};
@@ -89,17 +90,31 @@ impl ServerlessTemporalSimulator {
         ServerlessTemporalSimulator { cfg, initial, replications }
     }
 
-    /// Run all replications (seeds `seed..seed+replications`).
+    /// Run all replications (seeds `seed..seed+replications`) across all
+    /// available cores. Results are bit-identical to the sequential run:
+    /// see [`run_with_threads`](Self::run_with_threads).
     pub fn run(&self) -> TemporalResults {
-        let mut runs = Vec::with_capacity(self.replications);
-        let mut series = Vec::with_capacity(self.replications);
-        for i in 0..self.replications {
-            let cfg = self.cfg.clone().with_seed(self.cfg.seed.wrapping_add(i as u64));
+        self.run_with_threads(0)
+    }
+
+    /// Run the replications on `threads` worker threads (0 = one per core).
+    /// Replication `i` always simulates seed `root + i` on a fresh process
+    /// replica and aggregation happens in replication order, so the output
+    /// is bit-identical for any thread count.
+    pub fn run_with_threads(&self, threads: usize) -> TemporalResults {
+        let outs = run_indexed(self.replications, threads, |i| {
+            let cfg = self.cfg.replica_with_seed(self.cfg.seed.wrapping_add(i as u64));
             let mut sim = ServerlessSimulator::new(cfg);
             sim.set_initial_state(&self.initial.idle_ages, &self.initial.running_remaining);
             let res = sim.run();
-            series.push(sim.samples().to_vec());
+            let samples = sim.samples().to_vec();
+            (res, samples)
+        });
+        let mut runs = Vec::with_capacity(outs.len());
+        let mut series = Vec::with_capacity(outs.len());
+        for (res, samples) in outs {
             runs.push(res);
+            series.push(samples);
         }
         let ci = |f: fn(&SimResults) -> f64| {
             let xs: Vec<f64> = runs.iter().map(f).collect();
@@ -123,15 +138,14 @@ impl ServerlessTemporalSimulator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::process::ExpProcess;
-    use std::sync::Arc;
+    use crate::sim::process::Process;
 
     fn cfg(horizon: f64) -> SimConfig {
         SimConfig {
-            arrival: Arc::new(ExpProcess::with_rate(0.9)),
+            arrival: Process::exp_rate(0.9),
             batch_size: None,
-            warm_service: Arc::new(ExpProcess::with_mean(1.991)),
-            cold_service: Arc::new(ExpProcess::with_mean(2.244)),
+            warm_service: Process::exp_mean(1.991),
+            cold_service: Process::exp_mean(2.244),
             expiration_threshold: 600.0,
             expiration_process: None,
             max_concurrency: 1000,
@@ -168,6 +182,32 @@ mod tests {
         assert!(warm.cold_start_prob_ci.0 <= empty.cold_start_prob_ci.0);
         // Warm start run begins with 10 instances.
         assert!(warm.avg_server_count_ci.0 > empty.avg_server_count_ci.0);
+    }
+
+    #[test]
+    fn parallel_replications_bit_identical_to_sequential() {
+        let sim = ServerlessTemporalSimulator::new(cfg(2_000.0), InitialState::warm_pool(3), 6);
+        let seq = sim.run_with_threads(1);
+        for threads in [2, 6] {
+            let par = sim.run_with_threads(threads);
+            assert_eq!(par.runs.len(), seq.runs.len());
+            for (a, b) in par.runs.iter().zip(&seq.runs) {
+                assert_eq!(a.total_requests, b.total_requests);
+                assert_eq!(a.avg_server_count.to_bits(), b.avg_server_count.to_bits());
+            }
+            assert_eq!(
+                par.avg_server_count_ci.0.to_bits(),
+                seq.avg_server_count_ci.0.to_bits()
+            );
+            assert_eq!(par.sample_series.len(), seq.sample_series.len());
+            for (sa, sb) in par.sample_series.iter().zip(&seq.sample_series) {
+                assert_eq!(sa.len(), sb.len());
+                for (ca, cb) in sa.iter().zip(sb) {
+                    assert_eq!(ca.t.to_bits(), cb.t.to_bits());
+                    assert_eq!(ca.cumulative_avg.to_bits(), cb.cumulative_avg.to_bits());
+                }
+            }
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@ pub mod sweep;
 
 pub use sweep::{sweep, sweep_grid, GridPoint, SweepOutcome};
 
+use crate::sim::ensemble::{derive_seeds, run_indexed, EnsembleOpts, EnsembleResults};
 use crate::sim::{ServerlessSimulator, SimConfig, SimResults};
 
 /// Optimize the expiration threshold for a workload: minimize
@@ -57,9 +58,63 @@ pub fn optimize_expiration_threshold(
     (best, outcomes)
 }
 
+/// Ensemble what-if over the expiration-threshold grid (Fig. 5 with error
+/// bars): every `(threshold, replication)` pair is one job on a single
+/// shared thread pool, so the grid and the replications parallelize
+/// together instead of nesting pools. Per-threshold results aggregate into
+/// an [`EnsembleResults`] (mean ± 95% CI via
+/// [`EnsembleResults::summary`]). Deterministic for a fixed
+/// `opts.root_seed` regardless of `opts.threads`.
+pub fn expiration_threshold_ensemble(
+    base: &SimConfig,
+    thresholds: &[f64],
+    opts: &EnsembleOpts,
+) -> Vec<(f64, EnsembleResults)> {
+    assert!(!thresholds.is_empty());
+    assert!(opts.replications >= 1);
+    let seeds = derive_seeds(opts.root_seed, opts.replications);
+    let n = thresholds.len() * opts.replications;
+    let runs = run_indexed(n, opts.threads, |j| {
+        let th = thresholds[j / opts.replications];
+        let seed = seeds[j % opts.replications];
+        let cfg = base.replica_with_seed(seed).with_expiration_threshold(th);
+        ServerlessSimulator::new(cfg).run()
+    });
+    let mut out = Vec::with_capacity(thresholds.len());
+    let mut it = runs.into_iter();
+    for &th in thresholds {
+        let chunk: Vec<SimResults> = it.by_ref().take(opts.replications).collect();
+        out.push((th, EnsembleResults { seeds: seeds.clone(), runs: chunk }));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn threshold_ensemble_deterministic_and_monotone() {
+        let mut base = SimConfig::table1();
+        base.horizon = 8_000.0;
+        let thresholds = [60.0, 1200.0];
+        let opts = EnsembleOpts::new(4, 0x5EED);
+        let a = expiration_threshold_ensemble(&base, &thresholds, &opts.with_threads(1));
+        let b = expiration_threshold_ensemble(&base, &thresholds, &opts.with_threads(4));
+        assert_eq!(a.len(), 2);
+        for ((tha, ra), (thb, rb)) in a.iter().zip(&b) {
+            assert_eq!(tha, thb);
+            for (x, y) in ra.runs.iter().zip(&rb.runs) {
+                assert_eq!(x.total_requests, y.total_requests);
+                assert_eq!(x.cold_requests, y.cold_requests);
+                assert_eq!(x.avg_server_count.to_bits(), y.avg_server_count.to_bits());
+            }
+        }
+        // Longer threshold -> fewer cold starts (Fig. 5 shape), now with CI.
+        let p_short = a[0].1.ci_of(|r| r.cold_start_prob);
+        let p_long = a[1].1.ci_of(|r| r.cold_start_prob);
+        assert!(p_long.mean < p_short.mean, "short={p_short:?} long={p_long:?}");
+    }
 
     #[test]
     fn optimizer_prefers_long_threshold_when_cold_starts_dominate() {

@@ -1,51 +1,28 @@
 //! Parallel parameter sweeps over the simulator.
 //!
-//! `sweep` fans a list of parameter points across OS threads (scoped, no
-//! external executor) and returns results in input order — the machinery
-//! behind Fig. 5 (cold-start probability vs arrival rate × expiration
-//! threshold) and the validation figures' arrival-rate sweeps.
+//! `sweep` fans a list of parameter points across OS threads and returns
+//! results in input order — the machinery behind Fig. 5 (cold-start
+//! probability vs arrival rate × expiration threshold) and the validation
+//! figures' arrival-rate sweeps. The scheduling primitive is shared with
+//! the replication engine ([`crate::sim::ensemble::run_indexed`]), so
+//! sweeps inherit its determinism contract: point `i` always computes
+//! `f(&points[i])` and lands in slot `i`, regardless of thread count.
+
+use crate::sim::ensemble::run_indexed;
 
 /// Outcome of one grid point (generic in the result type).
 pub type SweepOutcome<'a, P, R> = (&'a P, R);
 
-/// Run `f` over `points` in parallel; results return in input order.
+/// Run `f` over `points` in parallel (one worker per available core);
+/// results return in input order.
 pub fn sweep<'a, P, R, F>(points: &'a [P], f: F) -> Vec<SweepOutcome<'a, P, R>>
 where
     P: Sync,
     R: Send,
     F: Fn(&P) -> R + Sync,
 {
-    let n = points.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    let workers = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(4)
-        .min(n);
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
-    slots.resize_with(n, || None);
-    let slots_mutex = std::sync::Mutex::new(&mut slots);
-
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(&points[i]);
-                let mut guard = slots_mutex.lock().unwrap();
-                guard[i] = Some(r);
-            });
-        }
-    });
-
-    points
-        .iter()
-        .zip(slots.into_iter().map(|s| s.expect("worker filled slot")))
-        .collect()
+    let results = run_indexed(points.len(), 0, |i| f(&points[i]));
+    points.iter().zip(results).collect()
 }
 
 /// A 2-D grid point (e.g. arrival rate × expiration threshold, Fig. 5).

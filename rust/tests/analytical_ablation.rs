@@ -11,15 +11,14 @@
 //!      construction — the gap the paper's simulator closes.
 
 use simfaas::analytical::SteadyStateModel;
-use simfaas::sim::{ExpProcess, ServerlessSimulator, SimConfig};
-use std::sync::Arc;
+use simfaas::sim::{Process, ServerlessSimulator, SimConfig};
 
 fn base_cfg(threshold: f64, horizon: f64) -> SimConfig {
     SimConfig {
-        arrival: Arc::new(ExpProcess::with_rate(0.9)),
+        arrival: Process::exp_rate(0.9),
         batch_size: None,
-        warm_service: Arc::new(ExpProcess::with_mean(1.991)),
-        cold_service: Arc::new(ExpProcess::with_mean(1.991)),
+        warm_service: Process::exp_mean(1.991),
+        cold_service: Process::exp_mean(1.991),
         expiration_threshold: threshold,
         expiration_process: None,
         max_concurrency: 1000,
@@ -35,7 +34,7 @@ fn base_cfg(threshold: f64, horizon: f64) -> SimConfig {
 fn markovian_simulator_and_ctmc_agree_under_exponential_expiration() {
     let threshold = 120.0;
     let mut cfg = base_cfg(threshold, 400_000.0);
-    cfg.expiration_process = Some(Arc::new(ExpProcess::with_mean(threshold)));
+    cfg.expiration_process = Some(Process::exp_mean(threshold));
     let sim = ServerlessSimulator::new(cfg).run();
     let model = SteadyStateModel::new(0.9, 1.991, threshold).solve();
 
@@ -93,7 +92,7 @@ fn transient_model_and_temporal_simulator_agree_in_markovian_regime() {
 
     let mut cfg = base_cfg(threshold, 300.0);
     cfg.skip_initial = 0.0;
-    cfg.expiration_process = Some(Arc::new(ExpProcess::with_mean(threshold)));
+    cfg.expiration_process = Some(Process::exp_mean(threshold));
     cfg.sample_interval = 300.0;
     let res = ServerlessTemporalSimulator::new(cfg, InitialState::empty(), 24).run();
 

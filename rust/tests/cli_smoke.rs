@@ -20,9 +20,51 @@ fn simfaas(args: &[&str]) -> (bool, String) {
 fn help_lists_commands() {
     let (ok, text) = simfaas(&["help"]);
     assert!(ok);
-    for cmd in ["steady", "temporal", "sweep", "emulate", "validate", "cost", "figures"] {
+    for cmd in
+        ["steady", "temporal", "ensemble", "sweep", "emulate", "validate", "cost", "figures"]
+    {
         assert!(text.contains(cmd), "help missing {cmd}: {text}");
     }
+}
+
+#[test]
+fn ensemble_reports_ci_summary() {
+    let (ok, text) = simfaas(&[
+        "ensemble",
+        "--horizon",
+        "5000",
+        "--replications",
+        "4",
+        "--threads",
+        "2",
+        "--seed",
+        "7",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("95% CI"), "{text}");
+    assert!(text.contains("Cold Start Probability"), "{text}");
+
+    // Zero replications is a clean CLI error, not a panic.
+    let (ok, text) = simfaas(&["ensemble", "--horizon", "1000", "--replications", "0"]);
+    assert!(!ok);
+    assert!(text.contains("replications"), "{text}");
+}
+
+#[test]
+fn ensemble_threshold_grid_reports_ci() {
+    let (ok, text) = simfaas(&[
+        "ensemble",
+        "--horizon",
+        "5000",
+        "--replications",
+        "3",
+        "--thresholds",
+        "120,600",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("threshold"), "{text}");
+    assert!(text.contains("p_cold"), "{text}");
+    assert!(text.contains("95% CI"), "{text}");
 }
 
 #[test]

@@ -1,0 +1,102 @@
+//! Integration test: the `sim::ensemble` determinism contract.
+//!
+//! The ensemble engine promises that a fixed `(config, root_seed,
+//! replications)` triple produces **bit-identical** aggregated results for
+//! any thread count — the property that makes parallel replication a pure
+//! speedup rather than a reproducibility trade-off. These tests pin that
+//! contract at 1, 2, and 8 threads, for the plain simulator, the
+//! concurrency-value simulator, the stateful MMPP arrival process (which
+//! requires per-replication process replicas), and the temporal simulator
+//! that Fig. 4 is built on.
+
+use simfaas::sim::ensemble::{run_ensemble, run_par_ensemble, EnsembleOpts};
+use simfaas::sim::{
+    EnsembleResults, InitialState, Process, ServerlessTemporalSimulator, SimConfig,
+};
+
+/// Exact (bit-level) digest of an ensemble's aggregated output.
+fn digest(res: &EnsembleResults) -> Vec<u64> {
+    let mut d: Vec<u64> = res.seeds.clone();
+    for r in &res.runs {
+        d.push(r.total_requests);
+        d.push(r.cold_requests);
+        d.push(r.warm_requests);
+        d.push(r.rejected_requests);
+        d.push(r.avg_server_count.to_bits());
+        d.push(r.avg_running_count.to_bits());
+        d.push(r.billed_instance_seconds.to_bits());
+        d.push(r.response_p99.to_bits());
+    }
+    let s = res.summary();
+    d.push(s.cold_start_prob.mean.to_bits());
+    d.push(s.cold_start_prob.ci_half.to_bits());
+    d.push(s.avg_server_count.mean.to_bits());
+    d.push(s.avg_server_count.ci_half.to_bits());
+    d
+}
+
+#[test]
+fn same_root_seed_bit_identical_across_1_2_8_threads() {
+    let cfg = SimConfig::table1().with_horizon(10_000.0);
+    let reference = run_ensemble(&cfg, &EnsembleOpts::new(8, 0xD15C).with_threads(1));
+    for threads in [2, 8] {
+        let res = run_ensemble(&cfg, &EnsembleOpts::new(8, 0xD15C).with_threads(threads));
+        assert_eq!(digest(&res), digest(&reference), "threads={threads}");
+    }
+}
+
+#[test]
+fn different_root_seeds_differ() {
+    let cfg = SimConfig::table1().with_horizon(5_000.0);
+    let a = run_ensemble(&cfg, &EnsembleOpts::new(4, 1));
+    let b = run_ensemble(&cfg, &EnsembleOpts::new(4, 2));
+    assert_ne!(digest(&a), digest(&b));
+}
+
+#[test]
+fn stateful_mmpp_arrival_is_still_deterministic() {
+    // MMPP keeps mutable phase state; without per-replication replicas,
+    // parallel replications would race on it and the digest would depend
+    // on scheduling. replica_with_seed re-creates the process per
+    // replication, restoring the contract.
+    let mut cfg = SimConfig::table1().with_horizon(5_000.0);
+    cfg.arrival = Process::mmpp([3.0, 0.3], [0.02, 0.02]);
+    let reference = run_ensemble(&cfg, &EnsembleOpts::new(8, 0xABCD).with_threads(1));
+    for threads in [2, 8] {
+        let res = run_ensemble(&cfg, &EnsembleOpts::new(8, 0xABCD).with_threads(threads));
+        assert_eq!(digest(&res), digest(&reference), "threads={threads}");
+    }
+}
+
+#[test]
+fn par_simulator_ensemble_deterministic() {
+    let cfg = SimConfig::table1().with_arrival_rate(3.0).with_horizon(5_000.0);
+    let reference = run_par_ensemble(&cfg, 3, &EnsembleOpts::new(6, 0xF00).with_threads(1));
+    for threads in [2, 8] {
+        let res = run_par_ensemble(&cfg, 3, &EnsembleOpts::new(6, 0xF00).with_threads(threads));
+        assert_eq!(digest(&res), digest(&reference), "threads={threads}");
+    }
+}
+
+#[test]
+fn temporal_simulator_rides_the_same_contract() {
+    let mut cfg = SimConfig::table1().with_horizon(3_000.0);
+    cfg.skip_initial = 0.0;
+    cfg.sample_interval = 100.0;
+    let sim = ServerlessTemporalSimulator::new(cfg, InitialState::warm_pool(5), 8);
+    let seq = sim.run_with_threads(1);
+    let par = sim.run_with_threads(8);
+    assert_eq!(seq.runs.len(), par.runs.len());
+    for (a, b) in seq.runs.iter().zip(&par.runs) {
+        assert_eq!(a.total_requests, b.total_requests);
+        assert_eq!(a.avg_server_count.to_bits(), b.avg_server_count.to_bits());
+    }
+    let band_a = seq.average_count_band();
+    let band_b = par.average_count_band();
+    assert_eq!(band_a.len(), band_b.len());
+    for ((t1, m1, h1), (t2, m2, h2)) in band_a.iter().zip(&band_b) {
+        assert_eq!(t1.to_bits(), t2.to_bits());
+        assert_eq!(m1.to_bits(), m2.to_bits());
+        assert_eq!(h1.to_bits(), h2.to_bits());
+    }
+}

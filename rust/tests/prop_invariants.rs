@@ -12,7 +12,6 @@ use simfaas::sim::process::*;
 use simfaas::sim::{
     Rng, ServerlessSimulator, SimConfig, SimResults,
 };
-use std::sync::Arc;
 
 /// Mini property harness: run `prop` for `cases` generated configs; panic
 /// with the seed on the first failure.
@@ -36,21 +35,24 @@ fn forall(name: &str, cases: u64, prop: impl Fn(&SimConfig, &SimResults)) {
 /// Random but *valid* simulator configuration.
 fn gen_config(seed: u64) -> SimConfig {
     let mut g = Rng::new(seed);
-    let arrival: Arc<dyn SimProcess> = match g.below(4) {
-        0 => Arc::new(ExpProcess::with_rate(g.uniform_range(0.05, 5.0))),
-        1 => Arc::new(ConstProcess::new(g.uniform_range(0.2, 10.0))),
-        2 => Arc::new(GammaProcess::new(g.uniform_range(0.5, 4.0), g.uniform_range(0.2, 2.0))),
-        _ => Arc::new(MmppProcess::new(
+    let arrival: Process = match g.below(4) {
+        0 => ExpProcess::with_rate(g.uniform_range(0.05, 5.0)).into(),
+        1 => ConstProcess::new(g.uniform_range(0.2, 10.0)).into(),
+        2 => GammaProcess::new(g.uniform_range(0.5, 4.0), g.uniform_range(0.2, 2.0)).into(),
+        _ => MmppProcess::new(
             [g.uniform_range(0.5, 5.0), g.uniform_range(0.05, 0.5)],
             [g.uniform_range(0.005, 0.05), g.uniform_range(0.005, 0.05)],
-        )),
+        )
+        .into(),
     };
-    let service = |g: &mut Rng| -> Arc<dyn SimProcess> {
+    let service = |g: &mut Rng| -> Process {
         match g.below(4) {
-            0 => Arc::new(ExpProcess::with_mean(g.uniform_range(0.2, 4.0))),
-            1 => Arc::new(ConstProcess::new(g.uniform_range(0.2, 4.0))),
-            2 => Arc::new(GaussianProcess::new(g.uniform_range(0.5, 3.0), g.uniform_range(0.1, 1.0))),
-            _ => Arc::new(ParetoProcess::new(g.uniform_range(0.2, 1.0), g.uniform_range(1.5, 3.0))),
+            0 => ExpProcess::with_mean(g.uniform_range(0.2, 4.0)).into(),
+            1 => ConstProcess::new(g.uniform_range(0.2, 4.0)).into(),
+            2 => GaussianProcess::new(g.uniform_range(0.5, 3.0), g.uniform_range(0.1, 1.0))
+                .into(),
+            _ => ParetoProcess::new(g.uniform_range(0.2, 1.0), g.uniform_range(1.5, 3.0))
+                .into(),
         }
     };
     let warm = service(&mut g);
@@ -58,7 +60,7 @@ fn gen_config(seed: u64) -> SimConfig {
     SimConfig {
         arrival,
         batch_size: if g.uniform() < 0.25 {
-            Some(Arc::new(GammaProcess::new(2.0, g.uniform_range(0.5, 2.0))))
+            Some(GammaProcess::new(2.0, g.uniform_range(0.5, 2.0)).into())
         } else {
             None
         },
@@ -66,7 +68,7 @@ fn gen_config(seed: u64) -> SimConfig {
         cold_service: cold,
         expiration_threshold: g.uniform_range(10.0, 1200.0),
         expiration_process: if g.uniform() < 0.25 {
-            Some(Arc::new(ExpProcess::with_mean(g.uniform_range(10.0, 600.0))))
+            Some(Process::exp_mean(g.uniform_range(10.0, 600.0)))
         } else {
             None
         },
@@ -239,10 +241,10 @@ fn newest_first_routing_targets_youngest_idle_instance() {
     // and the starved instances 0 and 1 must expire at the threshold.
     use simfaas::sim::{InstanceId, InstanceState};
     let cfg = SimConfig {
-        arrival: Arc::new(ConstProcess::new(10.0)),
+        arrival: Process::constant(10.0),
         batch_size: None,
-        warm_service: Arc::new(ConstProcess::new(1.0)),
-        cold_service: Arc::new(ConstProcess::new(1.2)),
+        warm_service: Process::constant(1.0),
+        cold_service: Process::constant(1.2),
         expiration_threshold: 25.0,
         expiration_process: None,
         max_concurrency: 1000,
@@ -274,10 +276,10 @@ fn batch_arrivals_spawn_parallel_instances() {
     // batch of 4 with slow epochs and short service needs 4 instances at
     // every epoch: all four get created at the first epoch and then reused.
     let cfg = SimConfig {
-        arrival: Arc::new(ConstProcess::new(10.0)),
-        batch_size: Some(Arc::new(ConstProcess::new(4.0))),
-        warm_service: Arc::new(ConstProcess::new(1.0)),
-        cold_service: Arc::new(ConstProcess::new(1.5)),
+        arrival: Process::constant(10.0),
+        batch_size: Some(Process::constant(4.0)),
+        warm_service: Process::constant(1.0),
+        cold_service: Process::constant(1.5),
         expiration_threshold: 60.0,
         expiration_process: None,
         max_concurrency: 1000,

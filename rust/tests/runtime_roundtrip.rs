@@ -3,7 +3,10 @@
 //! correct shapes; the histogram kernel agrees bit-for-bit with the
 //! pure-Rust reference; payloads are deterministic and variant-distinct.
 //!
-//! Requires `make artifacts` (the Makefile test target orders this).
+//! Requires `make artifacts` (the Makefile test target orders this) and a
+//! build with the `pjrt` feature; the default (offline) build compiles
+//! this file to nothing.
+#![cfg(feature = "pjrt")]
 
 use simfaas::runtime::{ComputePool, Engine, PayloadKind, HIST_NBINS};
 use simfaas::sim::{Histogram, Rng};

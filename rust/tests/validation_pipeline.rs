@@ -5,7 +5,7 @@
 //! stays fast and timing-robust).
 
 use simfaas::emulator::{EmulatorConfig, Platform};
-use simfaas::sim::{EmpiricalProcess, ExpProcess, ServerlessSimulator, SimConfig};
+use simfaas::sim::{ExpProcess, Process, ServerlessSimulator, SimConfig};
 use simfaas::trace;
 use simfaas::workload;
 use std::sync::Arc;
@@ -77,8 +77,8 @@ fn pipeline_attempt(seed_bump: u64) -> Result<(), String> {
         .with_arrival_rate(p.arrival_rate)
         .with_horizon(150_000.0);
     sim_cfg.skip_initial = 300.0;
-    sim_cfg.warm_service = Arc::new(EmpiricalProcess::new(warm));
-    sim_cfg.cold_service = Arc::new(ExpProcess::with_mean(p.cold_mean));
+    sim_cfg.warm_service = Process::empirical(warm);
+    sim_cfg.cold_service = Process::exp_mean(p.cold_mean);
     let sim = ServerlessSimulator::new(sim_cfg).run();
 
     // 5. Compare: pool size and waste agree within tolerance on a short
