@@ -8,10 +8,12 @@
 #[path = "harness.rs"]
 mod harness;
 
+use simfaas::fleet::{FleetConfig, FleetResults, PolicySpec};
 use simfaas::output::JsonValue;
 use simfaas::runtime::{Engine, PayloadKind};
 use simfaas::sim::ensemble::{run_ensemble, EnsembleOpts};
 use simfaas::sim::{Histogram, ParServerlessSimulator, Rng, ServerlessSimulator, SimConfig};
+use simfaas::workload::SyntheticTrace;
 
 /// arrival + departure per served request, plus expirations (~#instances).
 fn event_count(r: &simfaas::sim::SimResults) -> u64 {
@@ -81,6 +83,47 @@ fn main() {
         s.cold_start_prob.ci_half * 100.0
     );
     rates.set("ensemble_events_per_sec", eps_ens);
+
+    // --- fleet simulator throughput (500-function synthetic tenant mix) ---
+    // The acceptance bar for the fleet subsystem: a 500-function
+    // Azure-style mix completes under the bench harness AND its output is
+    // bit-identical at 1/2/8 shards (checked here, untimed) before the
+    // timed all-cores runs.
+    let fleet_horizon = if harness::quick() { 4_000.0 } else { 40_000.0 };
+    let mut trace_rng = Rng::new(0xF1EE7);
+    let trace = SyntheticTrace::generate(500, &mut trace_rng);
+    let fleet_cfg =
+        FleetConfig::from_trace(&trace, fleet_horizon, 0.0, 0xF1EE7, PolicySpec::fixed(600.0));
+    let fleet_digest = |r: &FleetResults| {
+        let a = &r.aggregate;
+        [
+            a.total_requests,
+            a.cold_requests,
+            a.rejected_requests,
+            a.avg_server_count.to_bits(),
+            a.billed_instance_seconds.to_bits(),
+            a.response_p95.to_bits(),
+        ]
+    };
+    let ref_digest = fleet_digest(&fleet_cfg.clone().with_threads(1).run());
+    for threads in [2, 8] {
+        let d = fleet_digest(&fleet_cfg.clone().with_threads(threads).run());
+        assert_eq!(d, ref_digest, "fleet output depends on shard count ({threads} threads)");
+    }
+    let (res_fleet, fleet_res) = harness::bench("fleet/500_functions_all_cores", 3, || {
+        fleet_cfg.run()
+    });
+    assert_eq!(fleet_digest(&fleet_res), ref_digest, "all-cores fleet run diverged");
+    let fleet_events =
+        fleet_res.aggregate.total_requests * 2 + fleet_res.aggregate.instances_expired;
+    let eps_fleet = fleet_events as f64 / res_fleet.mean_s;
+    println!(
+        "  -> {:.2} M events/s across 500 functions ({} requests, p_cold {:.3}%)",
+        eps_fleet / 1e6,
+        fleet_res.aggregate.total_requests,
+        fleet_res.aggregate.cold_start_prob * 100.0
+    );
+    rates.set("fleet_events_per_sec", eps_fleet);
 
     json.set("events_per_sec", rates);
     let path = std::env::var("SIMFAAS_BENCH_JSON")

@@ -48,6 +48,33 @@ pub struct CostEstimate {
 }
 
 impl CostEstimate {
+    /// An empty estimate over `window` (the additive identity for
+    /// [`CostEstimate::accumulate`]; used by fleet cost rollups).
+    pub fn zero(window: f64) -> Self {
+        CostEstimate {
+            window,
+            requests: 0.0,
+            gb_seconds: 0.0,
+            request_charges: 0.0,
+            runtime_charges: 0.0,
+            provider_infra_cost: 0.0,
+        }
+    }
+
+    /// Add another estimate over the same window (fleet totals are the sum
+    /// of per-function estimates; every charge component is linear).
+    pub fn accumulate(&mut self, other: &CostEstimate) {
+        debug_assert!(
+            (self.window - other.window).abs() < 1e-6,
+            "accumulating estimates over different windows"
+        );
+        self.requests += other.requests;
+        self.gb_seconds += other.gb_seconds;
+        self.request_charges += other.request_charges;
+        self.runtime_charges += other.runtime_charges;
+        self.provider_infra_cost += other.provider_infra_cost;
+    }
+
     pub fn developer_total(&self) -> f64 {
         self.request_charges + self.runtime_charges
     }

@@ -1,0 +1,35 @@
+//! Fleet-level simulation: an entire serverless tenant mix in one run.
+//!
+//! The paper's `ServerlessSimulator` models a single function; providers
+//! tune their platform against a *mix* of tenants (the paper's own framing:
+//! "tailor their platforms to be workload-aware"). This subsystem simulates
+//! N heterogeneous functions — from an Azure-style
+//! [`crate::workload::SyntheticTrace`] or explicit per-function
+//! [`crate::sim::SimConfig`]s — under a pluggable keep-alive policy
+//! ([`KeepAlivePolicy`]), with an optional fleet-wide concurrent-instance
+//! cap that couples functions through admission/rejection.
+//!
+//! * [`policy`] — the [`KeepAlivePolicy`] trait, the paper's
+//!   [`FixedExpiration`] model, and the Azure-style
+//!   [`HybridHistogramPolicy`].
+//! * [`simulator`] — [`FleetConfig`] / [`FleetResults`]: sharded execution
+//!   for independent functions (bit-identical for any thread count),
+//!   single-queue coupled execution when the fleet cap binds, per-function
+//!   and aggregate metrics, and the [`fleet_cost`] pricing rollup.
+//!
+//! `whatif::keepalive_policy_comparison` sweeps a fixed-threshold grid
+//! against adaptive policies on the same mix; the `fleet` CLI subcommand
+//! and the `fleet/500_functions` bench case in `benches/engine_throughput`
+//! drive it end to end.
+
+mod engine;
+pub mod policy;
+pub mod simulator;
+
+pub use policy::{
+    FixedExpiration, HybridHistogramPolicy, KeepAlivePolicy, PolicySpec, StochasticExpiration,
+};
+pub use simulator::{
+    fleet_cost, ArrivalMode, FleetAggregate, FleetConfig, FleetCostReport, FleetResults,
+    FunctionSpec,
+};

@@ -1,0 +1,406 @@
+//! Keep-alive policies (`KeepAlivePolicy`) — the fleet simulator's pluggable
+//! answer to "how long does an idle instance stay warm?".
+//!
+//! The paper models the policy every major provider shipped in 2020: a fixed
+//! idle-expiration threshold (AWS Lambda ~10 min). [`FixedExpiration`]
+//! reproduces that model exactly — a 1-function fleet under it is
+//! bit-identical to [`crate::sim::ServerlessSimulator`] (regression-tested).
+//! Beyond the paper, [`HybridHistogramPolicy`] is a deterministic variant of
+//! the histogram half of Azure's hybrid policy (Shahrad et al. 2020,
+//! "Serverless in the Wild"): it learns each function's inter-arrival
+//! distribution online and keeps instances warm just past the distribution's
+//! tail, shrinking idle waste on predictable workloads without raising the
+//! cold-start rate. [`StochasticExpiration`] mirrors the core simulator's
+//! stochastic-threshold escape hatch ([`crate::sim::SimConfig`]'s
+//! `expiration_process`).
+//!
+//! Policies are **per-function**: each simulated function gets its own
+//! instance built from a [`PolicySpec`], so adaptive state never leaks
+//! between functions and the sharded fleet runner stays deterministic for
+//! any thread count.
+
+use crate::sim::process::Process;
+use crate::sim::rng::Rng;
+use std::sync::Arc;
+
+/// Decides the keep-alive window of idle instances for one function.
+///
+/// `keep_alive` is consulted every time an instance goes idle (one draw of
+/// the expiration threshold); `on_arrival` lets adaptive policies observe
+/// the function's arrival pattern. Implementations must be deterministic
+/// given the same call sequence and `rng` state — the fleet determinism
+/// contract (bit-identical results for any shard count) depends on it.
+pub trait KeepAlivePolicy: Send {
+    /// Keep-alive window in seconds for an instance going idle at `now`.
+    fn keep_alive(&mut self, now: f64, rng: &mut Rng) -> f64;
+
+    /// Observe a request arrival epoch at `now` (adaptive policies learn
+    /// from the inter-arrival sequence; the default ignores it).
+    fn on_arrival(&mut self, _now: f64) {}
+
+    /// Human-readable description (used in policy-comparison reports).
+    fn describe(&self) -> String;
+}
+
+/// The paper's provider model: a fixed idle-expiration threshold.
+#[derive(Debug, Clone)]
+pub struct FixedExpiration {
+    pub threshold: f64,
+}
+
+impl FixedExpiration {
+    pub fn new(threshold: f64) -> Self {
+        assert!(threshold >= 0.0, "threshold must be non-negative");
+        FixedExpiration { threshold }
+    }
+}
+
+impl KeepAlivePolicy for FixedExpiration {
+    fn keep_alive(&mut self, _now: f64, _rng: &mut Rng) -> f64 {
+        self.threshold
+    }
+
+    fn describe(&self) -> String {
+        format!("fixed({:.0}s)", self.threshold)
+    }
+}
+
+/// Stochastic keep-alive window: one draw of `process` per idle period
+/// (the fleet-level counterpart of `SimConfig::expiration_process`).
+#[derive(Clone)]
+pub struct StochasticExpiration {
+    pub process: Process,
+}
+
+impl StochasticExpiration {
+    pub fn new(process: Process) -> Self {
+        StochasticExpiration { process }
+    }
+}
+
+impl KeepAlivePolicy for StochasticExpiration {
+    fn keep_alive(&mut self, _now: f64, rng: &mut Rng) -> f64 {
+        // Raw sample, no clamping: `ServerlessSimulator::sample_expiration`
+        // does not clamp either, and the bit-identity contract requires the
+        // two paths to diverge nowhere. SimProcess is documented to produce
+        // non-negative durations.
+        self.process.sample(rng)
+    }
+
+    fn describe(&self) -> String {
+        format!("stochastic({})", self.process.describe())
+    }
+}
+
+/// Deterministic histogram half of Azure's hybrid keep-alive policy
+/// (Shahrad et al. 2020): bin the function's observed inter-arrival times,
+/// then keep idle instances warm for the tail percentile of that histogram
+/// (plus a safety margin), capped at `range`.
+///
+/// Falls back to the conservative `range` window while the histogram is
+/// still cold (fewer than `min_samples` observations) or when the pattern
+/// escapes the histogram's range too often (`oob_threshold`) — the regimes
+/// where the production policy defers to a default window or ARIMA
+/// forecasting. The ARIMA arm and the head-percentile pre-warming arm are
+/// intentionally out of scope: the simulator models reactive cold starts
+/// only, and determinism is part of the fleet contract.
+#[derive(Debug, Clone)]
+pub struct HybridHistogramPolicy {
+    range: f64,
+    bin_len: f64,
+    tail: f64,
+    margin: f64,
+    min_samples: u64,
+    oob_threshold: f64,
+    bins: Vec<u64>,
+    total: u64,
+    oob: u64,
+    last_arrival: Option<f64>,
+}
+
+impl HybridHistogramPolicy {
+    /// `range` is both the histogram span and the fallback keep-alive
+    /// window; `bin_len` the bin width (Azure uses 1-minute bins over a
+    /// 4-hour range). Tail percentile 0.99, margin 10%, 8 warm-up samples,
+    /// 50% out-of-bounds fallback threshold.
+    pub fn new(range: f64, bin_len: f64) -> Self {
+        Self::with_params(range, bin_len, 0.99, 0.10, 8, 0.5)
+    }
+
+    pub fn with_params(
+        range: f64,
+        bin_len: f64,
+        tail: f64,
+        margin: f64,
+        min_samples: u64,
+        oob_threshold: f64,
+    ) -> Self {
+        assert!(range > 0.0 && bin_len > 0.0 && bin_len <= range);
+        assert!((0.0..=1.0).contains(&tail));
+        let n_bins = (range / bin_len).ceil() as usize;
+        HybridHistogramPolicy {
+            range,
+            bin_len,
+            tail,
+            margin,
+            min_samples,
+            oob_threshold,
+            bins: vec![0; n_bins.max(1)],
+            total: 0,
+            oob: 0,
+            last_arrival: None,
+        }
+    }
+
+    /// Index of the bin at the configured tail percentile.
+    fn tail_bin(&self) -> usize {
+        let target = (self.total as f64 * self.tail).ceil() as u64;
+        let mut prefix = 0u64;
+        for (i, c) in self.bins.iter().enumerate() {
+            prefix += c;
+            if prefix >= target {
+                return i;
+            }
+        }
+        self.bins.len() - 1
+    }
+
+    /// Fraction of observed inter-arrival times beyond the histogram range.
+    pub fn oob_rate(&self) -> f64 {
+        let seen = self.total + self.oob;
+        if seen == 0 {
+            0.0
+        } else {
+            self.oob as f64 / seen as f64
+        }
+    }
+
+    /// Observations recorded so far (in-range).
+    pub fn samples(&self) -> u64 {
+        self.total
+    }
+}
+
+impl KeepAlivePolicy for HybridHistogramPolicy {
+    fn keep_alive(&mut self, _now: f64, _rng: &mut Rng) -> f64 {
+        if self.total < self.min_samples || self.oob_rate() >= self.oob_threshold {
+            // Cold histogram or pattern escapes the range: conservative
+            // default window (the production policy's fallback arm).
+            return self.range;
+        }
+        let window = (self.tail_bin() + 1) as f64 * self.bin_len * (1.0 + self.margin);
+        window.min(self.range)
+    }
+
+    fn on_arrival(&mut self, now: f64) {
+        if let Some(last) = self.last_arrival {
+            let gap = (now - last).max(0.0);
+            let bin = (gap / self.bin_len).floor() as usize;
+            if bin < self.bins.len() {
+                self.bins[bin] += 1;
+                self.total += 1;
+            } else {
+                self.oob += 1;
+            }
+        }
+        self.last_arrival = Some(now);
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "hybrid-histogram(range={:.0}s, bin={:.0}s, p{:.0}+{:.0}%)",
+            self.range,
+            self.bin_len,
+            self.tail * 100.0,
+            self.margin * 100.0
+        )
+    }
+}
+
+/// Buildable policy description: the fleet configuration holds a spec, and
+/// every function (in every shard) builds its own fresh policy instance
+/// from it — the fleet analogue of `SimConfig::replica_with_seed`'s
+/// fresh-process-state rule, and the reason adaptive policies do not break
+/// the any-thread-count determinism contract.
+#[derive(Clone)]
+pub enum PolicySpec {
+    /// The paper's fixed idle-expiration threshold.
+    Fixed { threshold: f64 },
+    /// Stochastic keep-alive window drawn from a process per idle period.
+    Stochastic { process: Process },
+    /// Deterministic histogram arm of Azure's hybrid policy.
+    HybridHistogram {
+        range: f64,
+        bin_len: f64,
+        tail: f64,
+        margin: f64,
+        min_samples: u64,
+        oob_threshold: f64,
+    },
+    /// Any user-supplied policy, via a factory so each function gets an
+    /// independent instance.
+    Custom {
+        label: String,
+        build: Arc<dyn Fn() -> Box<dyn KeepAlivePolicy> + Send + Sync>,
+    },
+}
+
+impl PolicySpec {
+    pub fn fixed(threshold: f64) -> Self {
+        PolicySpec::Fixed { threshold }
+    }
+
+    pub fn stochastic(process: Process) -> Self {
+        PolicySpec::Stochastic { process }
+    }
+
+    /// Hybrid-histogram policy with the default tail/margin parameters.
+    pub fn hybrid_histogram(range: f64, bin_len: f64) -> Self {
+        PolicySpec::HybridHistogram {
+            range,
+            bin_len,
+            tail: 0.99,
+            margin: 0.10,
+            min_samples: 8,
+            oob_threshold: 0.5,
+        }
+    }
+
+    pub fn custom<F>(label: impl Into<String>, build: F) -> Self
+    where
+        F: Fn() -> Box<dyn KeepAlivePolicy> + Send + Sync + 'static,
+    {
+        PolicySpec::Custom { label: label.into(), build: Arc::new(build) }
+    }
+
+    /// Build a fresh policy instance (one per function per run).
+    pub fn build(&self) -> Box<dyn KeepAlivePolicy> {
+        match self {
+            PolicySpec::Fixed { threshold } => Box::new(FixedExpiration::new(*threshold)),
+            PolicySpec::Stochastic { process } => {
+                Box::new(StochasticExpiration::new(process.replica()))
+            }
+            PolicySpec::HybridHistogram {
+                range,
+                bin_len,
+                tail,
+                margin,
+                min_samples,
+                oob_threshold,
+            } => Box::new(HybridHistogramPolicy::with_params(
+                *range,
+                *bin_len,
+                *tail,
+                *margin,
+                *min_samples,
+                *oob_threshold,
+            )),
+            PolicySpec::Custom { build, .. } => build(),
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            PolicySpec::Custom { label, .. } => label.clone(),
+            other => other.build().describe(),
+        }
+    }
+}
+
+impl std::fmt::Debug for PolicySpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PolicySpec({})", self.describe())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_policy_is_constant_and_rng_free() {
+        let mut p = FixedExpiration::new(600.0);
+        let mut rng = Rng::new(1);
+        let before = rng.clone().next_u64();
+        for t in [0.0, 10.0, 1e6] {
+            assert_eq!(p.keep_alive(t, &mut rng), 600.0);
+        }
+        // No RNG draws consumed — required for bit-identity with
+        // ServerlessSimulator's constant-threshold path.
+        assert_eq!(rng.next_u64(), before);
+    }
+
+    #[test]
+    fn stochastic_policy_draws_from_process() {
+        let mut p = StochasticExpiration::new(Process::exp_mean(100.0));
+        let mut rng = Rng::new(2);
+        let xs: Vec<f64> = (0..10_000).map(|i| p.keep_alive(i as f64, &mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - 100.0).abs() < 5.0, "mean={mean}");
+        assert!(xs.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn histogram_policy_defaults_to_range_while_cold() {
+        let mut p = HybridHistogramPolicy::new(600.0, 10.0);
+        let mut rng = Rng::new(3);
+        assert_eq!(p.keep_alive(0.0, &mut rng), 600.0);
+        // Below min_samples it still falls back.
+        for k in 0..5 {
+            p.on_arrival(k as f64 * 50.0);
+        }
+        assert_eq!(p.keep_alive(300.0, &mut rng), 600.0);
+    }
+
+    #[test]
+    fn histogram_policy_learns_periodic_tail() {
+        let mut p = HybridHistogramPolicy::new(600.0, 10.0);
+        let mut rng = Rng::new(4);
+        // Strictly periodic arrivals every 100 s.
+        for k in 0..50 {
+            p.on_arrival(k as f64 * 100.0);
+        }
+        // Tail bin = floor(100/10) = 10 -> window (10+1)*10*1.1 = 121 s:
+        // just past the period, far below the 600 s fallback.
+        let w = p.keep_alive(5_000.0, &mut rng);
+        assert!((w - 121.0).abs() < 1e-9, "w={w}");
+        assert_eq!(p.oob_rate(), 0.0);
+        assert_eq!(p.samples(), 49);
+    }
+
+    #[test]
+    fn histogram_policy_falls_back_when_out_of_range() {
+        let mut p = HybridHistogramPolicy::new(600.0, 10.0);
+        let mut rng = Rng::new(5);
+        // Inter-arrival 5000 s >> range: every observation lands oob.
+        for k in 0..20 {
+            p.on_arrival(k as f64 * 5_000.0);
+        }
+        assert!(p.oob_rate() > 0.99);
+        assert_eq!(p.keep_alive(1e5, &mut rng), 600.0);
+    }
+
+    #[test]
+    fn spec_builds_fresh_instances() {
+        let spec = PolicySpec::hybrid_histogram(600.0, 10.0);
+        let mut a = spec.build();
+        for k in 0..50 {
+            a.on_arrival(k as f64 * 100.0);
+        }
+        let mut rng = Rng::new(6);
+        let adapted = a.keep_alive(5_000.0, &mut rng);
+        // A new build has no learned state.
+        let fresh = spec.build().keep_alive(5_000.0, &mut rng);
+        assert!(adapted < fresh, "adapted={adapted} fresh={fresh}");
+        assert!(spec.describe().contains("hybrid-histogram"));
+        assert!(PolicySpec::fixed(600.0).describe().contains("fixed"));
+    }
+
+    #[test]
+    fn custom_spec_plugs_in() {
+        let spec = PolicySpec::custom("always-5s", || Box::new(FixedExpiration::new(5.0)));
+        let mut rng = Rng::new(7);
+        assert_eq!(spec.build().keep_alive(0.0, &mut rng), 5.0);
+        assert_eq!(spec.describe(), "always-5s");
+    }
+}

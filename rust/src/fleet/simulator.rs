@@ -1,0 +1,677 @@
+//! The fleet simulator: N heterogeneous functions under one keep-alive
+//! policy, with an optional fleet-wide concurrency cap.
+//!
+//! Two execution strategies, chosen automatically:
+//!
+//! * **Sharded** (no fleet cap): functions are independent, so each one
+//!   runs on its own event queue and the fleet fans them across scoped
+//!   threads with [`crate::sim::ensemble::run_indexed`]. Function `i`'s
+//!   evolution depends only on its spec and seed, so fleet output is
+//!   **bit-identical for any thread count** — the same contract (and the
+//!   same scheduling primitive) as the replication ensemble.
+//! * **Coupled** (fleet cap set): the cap couples functions through
+//!   admission — a cold start anywhere consumes shared capacity — so all
+//!   functions interleave on one queue, single-threaded, with the shared
+//!   [`super::engine::FleetGate`] deciding admission. Deterministic by
+//!   construction (one thread, seq-tie-broken queue).
+//!
+//! With the cap absent the two strategies produce identical per-function
+//! results (functions never interact), which `coupled_matches_sharded_*`
+//! pins below.
+
+use super::engine::{FleetGate, FleetQueue, FunctionEngine};
+use super::policy::PolicySpec;
+use crate::cost::{estimate, CostEstimate, FunctionConfig, PricingTable};
+use crate::sim::ensemble::{derive_seeds, run_indexed};
+use crate::sim::event::Event;
+use crate::sim::process::Process;
+use crate::sim::results::SimResults;
+use crate::sim::rng::Rng;
+use crate::sim::simulator::SimConfig;
+use crate::sim::time::SimTime;
+use crate::workload::azure::SyntheticTrace;
+use std::sync::Arc;
+
+/// One function's arrival source.
+#[derive(Clone)]
+pub enum ArrivalMode {
+    /// Inter-arrival process (the core simulator's model).
+    Process(Process),
+    /// Replay of pre-materialized, sorted absolute arrival times (e.g. a
+    /// diurnal trace from [`SyntheticTrace::arrivals_for`]). `Arc` keeps
+    /// `FleetConfig::clone` cheap for what-if sweeps.
+    Trace(Arc<Vec<f64>>),
+}
+
+/// Per-function simulation parameters within a fleet.
+#[derive(Clone)]
+pub struct FunctionSpec {
+    pub name: String,
+    pub arrival: ArrivalMode,
+    /// Optional batch-size process (see [`SimConfig::batch_size`]).
+    pub batch_size: Option<Process>,
+    pub warm_service: Process,
+    pub cold_service: Process,
+    /// Per-function maximum concurrency (AWS Lambda default: 1000).
+    pub max_concurrency: usize,
+    /// Allocated memory in MB, for the fleet cost report.
+    pub memory_mb: f64,
+    /// RNG seed for this function's service (and process-arrival) draws.
+    pub seed: u64,
+}
+
+impl FunctionSpec {
+    /// Lift a core [`SimConfig`] into a fleet member. The config's own
+    /// expiration fields are superseded by the fleet's policy, and the
+    /// diagnostic-only knobs (`capture_request_log`, `sample_interval`)
+    /// are not carried over — the fleet engine keeps per-function
+    /// [`SimResults`] but no per-request log or transient samples. The
+    /// seed is kept so a 1-function fleet under [`PolicySpec::Fixed`]
+    /// reproduces `ServerlessSimulator::new(cfg).run()` bit-for-bit.
+    pub fn from_sim_config(name: impl Into<String>, cfg: &SimConfig) -> Self {
+        FunctionSpec {
+            name: name.into(),
+            arrival: ArrivalMode::Process(cfg.arrival.replica()),
+            batch_size: cfg.batch_size.as_ref().map(Process::replica),
+            warm_service: cfg.warm_service.replica(),
+            cold_service: cfg.cold_service.replica(),
+            max_concurrency: cfg.max_concurrency,
+            memory_mb: 128.0,
+            seed: cfg.seed,
+        }
+    }
+}
+
+/// Fleet simulation input: the tenant mix, the keep-alive policy, and the
+/// optional fleet-wide concurrency cap that couples functions.
+#[derive(Clone)]
+pub struct FleetConfig {
+    pub functions: Vec<FunctionSpec>,
+    pub policy: PolicySpec,
+    /// Fleet-wide cap on concurrently live instances across *all*
+    /// functions. `None` = uncoupled (sharded execution).
+    pub fleet_max_concurrency: Option<usize>,
+    /// Simulation horizon in seconds.
+    pub horizon: f64,
+    /// Warm-up window excluded from statistics.
+    pub skip_initial: f64,
+    /// Worker threads for the sharded path; 0 = one per available core.
+    pub threads: usize,
+}
+
+impl FleetConfig {
+    /// Fleet of explicit per-function configs (each keeps its own seed).
+    /// Horizon and warm-up skip come from the first config.
+    pub fn from_sim_configs(cfgs: &[SimConfig], policy: PolicySpec) -> Self {
+        assert!(!cfgs.is_empty());
+        let functions = cfgs
+            .iter()
+            .enumerate()
+            .map(|(i, c)| FunctionSpec::from_sim_config(format!("fn-{i:04}"), c))
+            .collect();
+        FleetConfig {
+            functions,
+            policy,
+            fleet_max_concurrency: None,
+            horizon: cfgs[0].horizon,
+            skip_initial: cfgs[0].skip_initial,
+            threads: 0,
+        }
+    }
+
+    /// Fleet from a synthetic Azure-style tenant mix: each function gets a
+    /// diurnal arrival trace materialized over the horizon plus exponential
+    /// warm/cold service at the profile's means. Per-function seeds derive
+    /// from `root_seed` via SplitMix64 (two streams per function: trace
+    /// materialization and service draws), so the whole fleet is described
+    /// by `(trace, horizon, root_seed)` and is shard-count-invariant.
+    pub fn from_trace(
+        trace: &SyntheticTrace,
+        horizon: f64,
+        skip_initial: f64,
+        root_seed: u64,
+        policy: PolicySpec,
+    ) -> Self {
+        let n = trace.functions.len();
+        assert!(n > 0, "trace has no functions");
+        let seeds = derive_seeds(root_seed, 2 * n);
+        let functions = trace
+            .functions
+            .iter()
+            .enumerate()
+            .map(|(i, f)| {
+                let mut arr_rng = Rng::new(seeds[2 * i]);
+                let arrivals = trace.arrivals_for(i, horizon, &mut arr_rng);
+                FunctionSpec {
+                    name: f.name.clone(),
+                    arrival: ArrivalMode::Trace(Arc::new(arrivals.arrivals)),
+                    batch_size: None,
+                    warm_service: Process::exp_mean(f.warm_service_mean),
+                    cold_service: Process::exp_mean(f.cold_service_mean),
+                    max_concurrency: 1000,
+                    memory_mb: 128.0,
+                    seed: seeds[2 * i + 1],
+                }
+            })
+            .collect();
+        FleetConfig {
+            functions,
+            policy,
+            fleet_max_concurrency: None,
+            horizon,
+            skip_initial,
+            threads: 0,
+        }
+    }
+
+    pub fn with_policy(mut self, policy: PolicySpec) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_fleet_cap(mut self, cap: usize) -> Self {
+        self.fleet_max_concurrency = Some(cap);
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    fn build_engine(&self, i: usize) -> FunctionEngine {
+        FunctionEngine::new(i as u32, &self.functions[i], self.policy.build(), self.skip_initial)
+    }
+
+    /// Run the fleet to the horizon.
+    pub fn run(&self) -> FleetResults {
+        assert!(!self.functions.is_empty(), "fleet has no functions");
+        let (per_function, cap_rejections) = match self.fleet_max_concurrency {
+            None => (self.run_sharded(), 0),
+            Some(cap) => self.run_coupled(cap),
+        };
+        let names = self.functions.iter().map(|f| f.name.clone()).collect();
+        let aggregate = FleetAggregate::from_runs(&per_function, cap_rejections);
+        FleetResults { names, per_function, aggregate }
+    }
+
+    /// Independent functions, one engine per shard job.
+    fn run_sharded(&self) -> Vec<SimResults> {
+        let horizon = SimTime::from_secs(self.horizon);
+        run_indexed(self.functions.len(), self.threads, |i| {
+            let mut engine = self.build_engine(i);
+            let mut queue = FleetQueue::with_capacity(1024);
+            let mut gate = FleetGate::unbounded();
+            engine.schedule_first_arrival(&mut queue);
+            queue.schedule(horizon, 0, Event::Horizon);
+            while let Some((t, _f, ev)) = queue.pop() {
+                engine.maybe_start_stats(t);
+                engine.set_now(t);
+                match ev {
+                    Event::Arrival => engine.handle_arrival(&mut queue, &mut gate),
+                    Event::Departure(id) => engine.handle_departure(&mut queue, id),
+                    Event::Expiration { id, gen } => engine.handle_expiration(id, gen, &mut gate),
+                    Event::Horizon => break,
+                    Event::ProvisioningDone(_) => unreachable!("not used by the fleet engine"),
+                }
+            }
+            engine.finish(horizon)
+        })
+    }
+
+    /// Cap-coupled functions interleaved on one queue (single-threaded).
+    fn run_coupled(&self, cap: usize) -> (Vec<SimResults>, u64) {
+        let horizon = SimTime::from_secs(self.horizon);
+        let mut engines: Vec<FunctionEngine> =
+            (0..self.functions.len()).map(|i| self.build_engine(i)).collect();
+        let mut queue = FleetQueue::with_capacity(1024 * engines.len().min(64));
+        for engine in engines.iter_mut() {
+            engine.schedule_first_arrival(&mut queue);
+        }
+        queue.schedule(horizon, 0, Event::Horizon);
+        let mut gate = FleetGate::capped(cap);
+        while let Some((t, f, ev)) = queue.pop() {
+            if matches!(ev, Event::Horizon) {
+                break;
+            }
+            let engine = &mut engines[f as usize];
+            engine.maybe_start_stats(t);
+            engine.set_now(t);
+            match ev {
+                Event::Arrival => engine.handle_arrival(&mut queue, &mut gate),
+                Event::Departure(id) => engine.handle_departure(&mut queue, id),
+                Event::Expiration { id, gen } => engine.handle_expiration(id, gen, &mut gate),
+                Event::Horizon | Event::ProvisioningDone(_) => unreachable!(),
+            }
+        }
+        let runs = engines.iter_mut().map(|e| e.finish(horizon)).collect();
+        (runs, gate.cap_rejections)
+    }
+}
+
+/// Fleet-level rollup of the per-function results.
+///
+/// Request counters and time-weighted level averages sum exactly across
+/// functions (accumulated in function-index order, so the rollup is as
+/// shard-count-invariant as the per-function results). Response means and
+/// P² percentiles are merged request-weighted: exact for the means,
+/// approximate at the mixture level for the percentiles (each function's
+/// P² estimate is exact, but a weighted mean of per-function quantiles is
+/// not the quantile of the pooled distribution).
+#[derive(Debug, Clone)]
+pub struct FleetAggregate {
+    pub functions: usize,
+    pub measured_time: f64,
+    pub total_requests: u64,
+    pub cold_requests: u64,
+    pub warm_requests: u64,
+    pub rejected_requests: u64,
+    /// Rejections attributable to the fleet-wide cap alone (0 when uncapped).
+    pub cap_rejections: u64,
+    pub cold_start_prob: f64,
+    pub rejection_prob: f64,
+    pub avg_server_count: f64,
+    pub avg_running_count: f64,
+    pub avg_idle_count: f64,
+    pub wasted_capacity: f64,
+    pub instances_created: u64,
+    pub instances_expired: u64,
+    /// Request-weighted mean lifespan of expired instances.
+    pub avg_lifespan: f64,
+    pub avg_response_time: f64,
+    pub response_p50: f64,
+    pub response_p95: f64,
+    pub response_p99: f64,
+    pub billed_instance_seconds: f64,
+    pub observed_arrival_rate: f64,
+}
+
+impl FleetAggregate {
+    fn from_runs(runs: &[SimResults], cap_rejections: u64) -> FleetAggregate {
+        let measured_time = runs.first().map(|r| r.measured_time).unwrap_or(0.0);
+        let mut total = 0u64;
+        let mut cold = 0u64;
+        let mut warm = 0u64;
+        let mut rejected = 0u64;
+        let mut created = 0u64;
+        let mut expired = 0u64;
+        let mut avg_server = 0.0;
+        let mut avg_running = 0.0;
+        let mut billed = 0.0;
+        // Request-weighted response merges, skipping empty functions whose
+        // OnlineStats/P² report NaN.
+        let mut resp_w = 0.0;
+        let mut resp = 0.0;
+        let mut p50 = 0.0;
+        let mut p95 = 0.0;
+        let mut p99 = 0.0;
+        let mut life_w = 0.0;
+        let mut life = 0.0;
+        for r in runs {
+            total += r.total_requests;
+            cold += r.cold_requests;
+            warm += r.warm_requests;
+            rejected += r.rejected_requests;
+            created += r.instances_created;
+            expired += r.instances_expired;
+            avg_server += r.avg_server_count;
+            avg_running += r.avg_running_count;
+            billed += r.billed_instance_seconds;
+            let served = (r.cold_requests + r.warm_requests) as f64;
+            if served > 0.0 {
+                resp_w += served;
+                resp += served * r.avg_response_time;
+                p50 += served * r.response_p50;
+                p95 += served * r.response_p95;
+                p99 += served * r.response_p99;
+            }
+            if r.instances_expired > 0 {
+                life_w += r.instances_expired as f64;
+                life += r.instances_expired as f64 * r.avg_lifespan;
+            }
+        }
+        let served = cold + warm;
+        let avg_idle = avg_server - avg_running;
+        FleetAggregate {
+            functions: runs.len(),
+            measured_time,
+            total_requests: total,
+            cold_requests: cold,
+            warm_requests: warm,
+            rejected_requests: rejected,
+            cap_rejections,
+            cold_start_prob: if served > 0 { cold as f64 / served as f64 } else { 0.0 },
+            rejection_prob: if total > 0 { rejected as f64 / total as f64 } else { 0.0 },
+            avg_server_count: avg_server,
+            avg_running_count: avg_running,
+            avg_idle_count: avg_idle,
+            wasted_capacity: if avg_server > 0.0 { avg_idle / avg_server } else { 0.0 },
+            instances_created: created,
+            instances_expired: expired,
+            avg_lifespan: if life_w > 0.0 { life / life_w } else { f64::NAN },
+            avg_response_time: if resp_w > 0.0 { resp / resp_w } else { f64::NAN },
+            response_p50: if resp_w > 0.0 { p50 / resp_w } else { f64::NAN },
+            response_p95: if resp_w > 0.0 { p95 / resp_w } else { f64::NAN },
+            response_p99: if resp_w > 0.0 { p99 / resp_w } else { f64::NAN },
+            billed_instance_seconds: billed,
+            observed_arrival_rate: if measured_time > 0.0 {
+                total as f64 / measured_time
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// Two-column fleet report in the Table-1 style.
+    pub fn to_table(&self) -> String {
+        let rows = [
+            ("Functions", format!("{}", self.functions)),
+            ("*Cold Start Probability", format!("{:.4} %", self.cold_start_prob * 100.0)),
+            ("*Rejection Probability", format!("{:.4} %", self.rejection_prob * 100.0)),
+            ("  of which fleet-cap", format!("{}", self.cap_rejections)),
+            ("*Average Server Count", format!("{:.4}", self.avg_server_count)),
+            ("*Average Running Servers", format!("{:.4}", self.avg_running_count)),
+            ("*Average Idle Count", format!("{:.4}", self.avg_idle_count)),
+            ("*Average Wasted Capacity", format!("{:.4} %", self.wasted_capacity * 100.0)),
+            ("*Average Response Time", format!("{:.4} s", self.avg_response_time)),
+            ("Response P95 (merged)", format!("{:.4} s", self.response_p95)),
+            ("Billed instance-seconds", format!("{:.1}", self.billed_instance_seconds)),
+            ("Observed arrival rate", format!("{:.4} req/s", self.observed_arrival_rate)),
+            ("Requests (total/cold/warm/rej)", format!(
+                "{}/{}/{}/{}",
+                self.total_requests, self.cold_requests, self.warm_requests,
+                self.rejected_requests
+            )),
+        ];
+        let w = rows.iter().map(|(k, _)| k.len()).max().unwrap_or(0);
+        let mut s = String::new();
+        for (k, v) in rows {
+            s.push_str(&format!("{k:<w$}  {v}\n"));
+        }
+        s
+    }
+}
+
+/// Results of one fleet run: per-function [`SimResults`] (index-aligned
+/// with [`FleetConfig::functions`]) plus the fleet rollup.
+#[derive(Debug, Clone)]
+pub struct FleetResults {
+    pub names: Vec<String>,
+    pub per_function: Vec<SimResults>,
+    pub aggregate: FleetAggregate,
+}
+
+/// Fleet cost rollup: per-function estimates plus the exact sum.
+#[derive(Debug, Clone)]
+pub struct FleetCostReport {
+    pub per_function: Vec<CostEstimate>,
+    pub total: CostEstimate,
+}
+
+/// Price a fleet run through a provider's [`PricingTable`]: each function
+/// billed at its own `memory_mb`, summed into the fleet total. With no
+/// fleet cap the per-function estimates equal those of solo
+/// `ServerlessSimulator` runs (regression-tested in `tests/cost_properties`).
+pub fn fleet_cost(
+    cfg: &FleetConfig,
+    results: &FleetResults,
+    pricing: &PricingTable,
+) -> FleetCostReport {
+    assert_eq!(cfg.functions.len(), results.per_function.len());
+    let mut per_function = Vec::with_capacity(results.per_function.len());
+    let mut total = CostEstimate::zero(results.aggregate.measured_time);
+    for (spec, r) in cfg.functions.iter().zip(&results.per_function) {
+        let est = estimate(r, &FunctionConfig::new(spec.memory_mb), pricing);
+        total.accumulate(&est);
+        per_function.push(est);
+    }
+    FleetCostReport { per_function, total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::policy::PolicySpec;
+    use crate::sim::ServerlessSimulator;
+
+    fn results_bits(r: &SimResults) -> Vec<u64> {
+        vec![
+            r.total_requests,
+            r.cold_requests,
+            r.warm_requests,
+            r.rejected_requests,
+            r.instances_created,
+            r.instances_expired,
+            r.cold_start_prob.to_bits(),
+            r.avg_lifespan.to_bits(),
+            r.avg_server_count.to_bits(),
+            r.avg_running_count.to_bits(),
+            r.avg_idle_count.to_bits(),
+            r.max_server_count.to_bits(),
+            r.avg_response_time.to_bits(),
+            r.response_p50.to_bits(),
+            r.response_p95.to_bits(),
+            r.response_p99.to_bits(),
+            r.billed_instance_seconds.to_bits(),
+        ]
+    }
+
+    fn fleet_digest(res: &FleetResults) -> Vec<u64> {
+        let mut d: Vec<u64> = res.per_function.iter().flat_map(results_bits).collect();
+        let a = &res.aggregate;
+        d.extend([
+            a.total_requests,
+            a.cold_requests,
+            a.rejected_requests,
+            a.cap_rejections,
+            a.cold_start_prob.to_bits(),
+            a.avg_server_count.to_bits(),
+            a.response_p95.to_bits(),
+            a.billed_instance_seconds.to_bits(),
+        ]);
+        d
+    }
+
+    #[test]
+    fn one_function_fixed_fleet_reproduces_serverless_simulator_bitwise() {
+        // The ISSUE's headline regression: fleet(1 fn, FixedExpiration,
+        // no cap) == ServerlessSimulator, bit for bit, same seed.
+        let cfg = SimConfig::table1().with_horizon(50_000.0).with_seed(0xFACE);
+        let solo = ServerlessSimulator::new(cfg.clone()).run();
+        let fleet = FleetConfig::from_sim_configs(
+            &[cfg],
+            PolicySpec::fixed(600.0),
+        )
+        .run();
+        assert_eq!(fleet.per_function.len(), 1);
+        assert_eq!(results_bits(&fleet.per_function[0]), results_bits(&solo));
+        assert_eq!(fleet.per_function[0].instance_count_pmf, solo.instance_count_pmf);
+        // The 1-function aggregate is that function.
+        assert_eq!(fleet.aggregate.total_requests, solo.total_requests);
+        assert_eq!(
+            fleet.aggregate.avg_server_count.to_bits(),
+            solo.avg_server_count.to_bits()
+        );
+    }
+
+    #[test]
+    fn one_function_batch_and_stochastic_expiration_still_match() {
+        // The batch path and the stochastic-threshold path consume extra
+        // RNG draws; the engine must mirror both.
+        let mut cfg = SimConfig::table1().with_horizon(20_000.0).with_seed(7);
+        cfg.batch_size = Some(Process::constant(2.0));
+        cfg.expiration_process = Some(Process::exp_mean(600.0));
+        let solo = ServerlessSimulator::new(cfg.clone()).run();
+        let policy = PolicySpec::stochastic(Process::exp_mean(600.0));
+        let fleet = FleetConfig::from_sim_configs(&[cfg], policy).run();
+        assert_eq!(results_bits(&fleet.per_function[0]), results_bits(&solo));
+    }
+
+    #[test]
+    fn sharded_fleet_bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(21);
+        let trace = SyntheticTrace::generate(24, &mut rng);
+        let base = FleetConfig::from_trace(&trace, 4_000.0, 0.0, 0xF1EE7, PolicySpec::fixed(300.0));
+        let reference = base.clone().with_threads(1).run();
+        for threads in [2, 8] {
+            let res = base.clone().with_threads(threads).run();
+            assert_eq!(fleet_digest(&res), fleet_digest(&reference), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn coupled_matches_sharded_when_cap_never_binds() {
+        let mut rng = Rng::new(22);
+        let trace = SyntheticTrace::generate(8, &mut rng);
+        let base = FleetConfig::from_trace(&trace, 3_000.0, 0.0, 5, PolicySpec::fixed(120.0));
+        let sharded = base.clone().run();
+        let coupled = base.clone().with_fleet_cap(1_000_000).run();
+        assert_eq!(fleet_digest(&sharded), fleet_digest(&coupled));
+        assert_eq!(coupled.aggregate.cap_rejections, 0);
+    }
+
+    #[test]
+    fn fleet_cap_couples_functions_through_admission() {
+        // Two hot functions that each need ~5 concurrent instances; a
+        // fleet cap of 4 must starve them *jointly*.
+        let mk = |seed: u64| {
+            let mut c = SimConfig::table1().with_arrival_rate(2.5).with_horizon(20_000.0);
+            c.seed = seed;
+            c
+        };
+        let base = FleetConfig::from_sim_configs(&[mk(1), mk(2)], PolicySpec::fixed(600.0));
+        let uncapped = base.clone().run();
+        assert_eq!(uncapped.aggregate.rejected_requests, 0);
+        let capped = base.with_fleet_cap(4).run();
+        assert!(capped.aggregate.rejected_requests > 0);
+        assert_eq!(
+            capped.aggregate.cap_rejections,
+            capped.aggregate.rejected_requests,
+            "per-function limit (1000) never binds here; every rejection is the cap's"
+        );
+        // Both functions feel the cap (coupling, not per-function limits).
+        assert!(capped.per_function.iter().all(|r| r.rejected_requests > 0));
+        // The shared pool can never exceed the cap.
+        assert!(capped.aggregate.avg_server_count <= 4.0 + 1e-9);
+    }
+
+    #[test]
+    fn adaptive_policy_beats_fixed_thresholds_on_periodic_load() {
+        // Cron-style function: one request every 100 s from t=100 to
+        // t=10_000, then silence until the 50_000 s horizon. Deterministic
+        // services make every number below exact.
+        let periodic = || {
+            let times: Vec<f64> = (1..=100).map(|i| i as f64 * 100.0).collect();
+            FunctionSpec {
+                name: "cron".into(),
+                arrival: ArrivalMode::Trace(Arc::new(times)),
+                batch_size: None,
+                warm_service: Process::constant(1.0),
+                cold_service: Process::constant(2.0),
+                max_concurrency: 1000,
+                memory_mb: 128.0,
+                seed: 11,
+            }
+        };
+        let run_with = |policy: PolicySpec| {
+            FleetConfig {
+                functions: vec![periodic()],
+                policy,
+                fleet_max_concurrency: None,
+                horizon: 50_000.0,
+                skip_initial: 0.0,
+                threads: 1,
+            }
+            .run()
+        };
+        // A 60 s threshold is shorter than the 99 s idle gap: every
+        // request cold-starts.
+        let short = run_with(PolicySpec::fixed(60.0));
+        assert!(short.aggregate.cold_start_prob > 0.99);
+        // The histogram policy learns the period (tail bin 100 s -> window
+        // 121 s) and keeps the instance warm: only the first request is
+        // cold...
+        let adaptive = run_with(PolicySpec::hybrid_histogram(600.0, 10.0));
+        assert!(
+            adaptive.aggregate.cold_start_prob < 0.02,
+            "p_cold={}",
+            adaptive.aggregate.cold_start_prob
+        );
+        // ...while holding the instance ~480 fewer idle server-seconds
+        // after the workload goes quiet than a 600 s fixed threshold that
+        // achieves the same cold-start rate (expiry ~t=10_122 vs ~10_601).
+        let long = run_with(PolicySpec::fixed(600.0));
+        assert_eq!(long.aggregate.cold_requests, adaptive.aggregate.cold_requests);
+        let saved = (long.aggregate.avg_server_count - adaptive.aggregate.avg_server_count)
+            * 50_000.0;
+        assert!(
+            (saved - 479.0).abs() < 25.0,
+            "saved server-seconds = {saved} (long={}, adaptive={})",
+            long.aggregate.avg_server_count,
+            adaptive.aggregate.avg_server_count
+        );
+    }
+
+    #[test]
+    fn aggregate_sums_and_probabilities_are_consistent() {
+        let mut rng = Rng::new(23);
+        let trace = SyntheticTrace::generate(12, &mut rng);
+        let res = FleetConfig::from_trace(&trace, 3_000.0, 0.0, 9, PolicySpec::fixed(600.0)).run();
+        let a = &res.aggregate;
+        let sum_total: u64 = res.per_function.iter().map(|r| r.total_requests).sum();
+        assert_eq!(a.total_requests, sum_total);
+        assert_eq!(a.total_requests, a.cold_requests + a.warm_requests + a.rejected_requests);
+        let sum_server: f64 = res.per_function.iter().map(|r| r.avg_server_count).sum();
+        assert!((a.avg_server_count - sum_server).abs() < 1e-12);
+        assert!((a.avg_server_count - a.avg_running_count - a.avg_idle_count).abs() < 1e-9);
+        assert!(a.cold_start_prob > 0.0 && a.cold_start_prob <= 1.0);
+        let table = a.to_table();
+        assert!(table.contains("Cold Start Probability"));
+        assert!(table.contains("Functions"));
+    }
+
+    #[test]
+    fn fleet_cost_totals_sum_per_function() {
+        let mk = |seed: u64, rate: f64| {
+            SimConfig::table1().with_arrival_rate(rate).with_horizon(10_000.0).with_seed(seed)
+        };
+        let cfg =
+            FleetConfig::from_sim_configs(&[mk(1, 0.5), mk(2, 1.5)], PolicySpec::fixed(600.0));
+        let res = cfg.run();
+        let report = fleet_cost(&cfg, &res, &PricingTable::aws_lambda());
+        assert_eq!(report.per_function.len(), 2);
+        let dev_sum: f64 = report.per_function.iter().map(|e| e.developer_total()).sum();
+        assert!((report.total.developer_total() - dev_sum).abs() < 1e-12);
+        let infra_sum: f64 = report.per_function.iter().map(|e| e.provider_infra_cost).sum();
+        assert!((report.total.provider_infra_cost - infra_sum).abs() < 1e-12);
+        assert!(report.total.requests > 0.0);
+    }
+
+    #[test]
+    fn trace_driven_arrivals_replay_every_timestamp() {
+        // A hand-built trace: 10 arrivals, all before the horizon.
+        let times: Vec<f64> = (0..10).map(|i| 10.0 + i as f64).collect();
+        let spec = FunctionSpec {
+            name: "t".into(),
+            arrival: ArrivalMode::Trace(Arc::new(times)),
+            batch_size: None,
+            warm_service: Process::constant(0.5),
+            cold_service: Process::constant(1.0),
+            max_concurrency: 10,
+            memory_mb: 128.0,
+            seed: 3,
+        };
+        let cfg = FleetConfig {
+            functions: vec![spec],
+            policy: PolicySpec::fixed(600.0),
+            fleet_max_concurrency: None,
+            horizon: 100.0,
+            skip_initial: 0.0,
+            threads: 1,
+        };
+        let res = cfg.run();
+        assert_eq!(res.aggregate.total_requests, 10);
+        assert_eq!(res.aggregate.cold_requests, 1);
+        assert_eq!(res.aggregate.warm_requests, 9);
+    }
+}

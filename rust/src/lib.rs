@@ -24,7 +24,11 @@
 //!   identification (expiration-threshold probing, service-time fitting).
 //! * [`cost`] — provider pricing tables and developer/provider cost
 //!   estimation.
-//! * [`whatif`] — parameter sweeps and configuration optimization.
+//! * [`fleet`] — multi-function fleet simulation: N heterogeneous functions
+//!   under a pluggable keep-alive policy, with an optional fleet-wide
+//!   concurrency cap and a fleet cost rollup.
+//! * [`whatif`] — parameter sweeps, configuration optimization and
+//!   keep-alive policy comparison.
 //! * [`output`] — ASCII tables/plots and CSV/JSON writers used by the CLI,
 //!   examples and benches.
 //!
@@ -36,6 +40,7 @@ pub mod cli;
 pub mod cost;
 pub mod emulator;
 pub mod figures;
+pub mod fleet;
 pub mod output;
 pub mod runtime;
 pub mod sim;
@@ -43,6 +48,7 @@ pub mod trace;
 pub mod whatif;
 pub mod workload;
 
+pub use fleet::{FleetConfig, FleetResults, KeepAlivePolicy, PolicySpec};
 pub use sim::{
     run_ensemble, EnsembleOpts, EnsembleResults, Process, ServerlessSimulator,
     ServerlessTemporalSimulator, SimConfig, SimProcess, SimResults,

@@ -6,6 +6,8 @@
 //! * `temporal`  — transient analysis with replications + CI (Fig. 4)
 //! * `ensemble`  — multi-threaded replication ensemble, mean ± 95% CI per
 //!                 metric; optional expiration-threshold grid
+//! * `fleet`     — multi-function fleet simulation under a keep-alive
+//!                 policy; optional fleet cap and policy-comparison sweep
 //! * `sweep`     — what-if sweeps over rate × expiration threshold (Fig. 5)
 //! * `emulate`   — run the platform emulator on a Poisson workload
 //! * `validate`  — simulator-vs-emulator validation (Figs. 6–8)
@@ -42,6 +44,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         Some("steady") => cmd_steady(&args),
         Some("temporal") => cmd_temporal(&args),
         Some("ensemble") => cmd_ensemble(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("emulate") => cmd_emulate(&args),
         Some("validate") => cmd_validate(&args),
@@ -73,6 +76,12 @@ commands:
              --replications --threads (0 = all cores) --rate --warm --cold
              --threshold --horizon --skip --seed
              [--thresholds a,b,c  parallel expiration-threshold grid]
+  fleet      multi-function fleet simulation (synthetic Azure-style mix)
+             --functions N --horizon --skip --seed --threads
+             --policy fixed|adaptive --threshold (fixed)
+             --range --bin (adaptive) --fleet-cap (0 = none)
+             --provider --memory --top K --json
+             [--compare-thresholds a,b,c  fixed grid vs adaptive sweep]
   sweep      what-if sweep (Fig. 5)
              --rates a,b,c --thresholds x,y --horizon --seed
   emulate    run the platform emulator
@@ -108,7 +117,7 @@ fn cmd_steady(args: &Args) -> Result<()> {
     let cfg = sim_cfg_from_args(args)?;
     let results = ServerlessSimulator::new(cfg).run();
     if args.get_bool("json") {
-        println!("{}", results_to_json(&results).to_string());
+        println!("{}", results_to_json(&results));
     } else {
         print!("{results}");
     }
@@ -181,6 +190,146 @@ fn cmd_ensemble(args: &Args) -> Result<()> {
                 format!("{:.3} ± {:.3}", w.mean * 100.0, w.ci_half * 100.0),
             ]);
         }
+        print!("{t}");
+    }
+    Ok(())
+}
+
+fn provider_from_args(args: &Args) -> Result<Provider> {
+    Ok(match args.get_str("provider", "aws").as_str() {
+        "aws" => Provider::AwsLambda,
+        "gcf" | "google" => Provider::GoogleCloudFunctions,
+        "azure" => Provider::AzureFunctions,
+        "ibm" => Provider::IbmCloudFunctions,
+        other => bail!("unknown provider {other:?}"),
+    })
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    use simfaas::fleet::{fleet_cost, FleetConfig, PolicySpec};
+    use simfaas::output::json::fleet_to_json;
+    use simfaas::workload::SyntheticTrace;
+
+    let n = args.get_usize("functions", 50)?;
+    if n == 0 {
+        bail!("--functions must be at least 1");
+    }
+    let horizon = args.get_f64("horizon", 86_400.0)?;
+    let skip = args.get_f64("skip", 0.0)?;
+    let seed = args.get_u64("seed", 0x5EED)?;
+    let threads = args.get_usize("threads", 0)?;
+    // Consume both policy parameter sets up front so e.g. `--threshold`
+    // with `--policy adaptive` is ignored rather than an unknown flag.
+    let threshold = args.get_f64("threshold", 600.0)?;
+    let range = args.get_f64("range", 3_600.0)?;
+    let bin = args.get_f64("bin", 60.0)?;
+    let adaptive = PolicySpec::hybrid_histogram(range, bin);
+    let policy = match args.get_str("policy", "fixed").as_str() {
+        "fixed" => PolicySpec::fixed(threshold),
+        "adaptive" => adaptive.clone(),
+        other => bail!("unknown policy {other:?} (expected fixed|adaptive)"),
+    };
+
+    let mut rng = simfaas::sim::Rng::new(seed);
+    let trace = SyntheticTrace::generate(n, &mut rng);
+    let mut cfg = FleetConfig::from_trace(&trace, horizon, skip, seed, policy);
+    cfg.threads = threads;
+    let cap = args.get_usize("fleet-cap", 0)?;
+    if cap > 0 {
+        cfg.fleet_max_concurrency = Some(cap);
+    }
+    let memory = args.get_f64("memory", 128.0)?;
+    for f in &mut cfg.functions {
+        f.memory_mb = memory;
+    }
+    let pricing = PricingTable::for_provider(provider_from_args(args)?);
+    // Consume the reporting flags up front: they are no-ops in the
+    // comparison branch but must not read as unknown flags there.
+    let json_out = args.get_bool("json");
+    let top_k = args.get_usize("top", 5)?;
+
+    let compare = args.get_f64_list("compare-thresholds", &[])?;
+    if !compare.is_empty() {
+        let outcomes = simfaas::whatif::keepalive_policy_comparison(
+            &cfg,
+            &compare,
+            std::slice::from_ref(&adaptive),
+            &pricing,
+        );
+        println!(
+            "{} functions, horizon {horizon} s, seed {seed}: keep-alive policy comparison",
+            cfg.functions.len()
+        );
+        let mut t = Table::new(vec![
+            "policy",
+            "p_cold %",
+            "rejected",
+            "avg servers",
+            "waste %",
+            "dev cost $",
+            "infra cost $",
+        ]);
+        for o in &outcomes {
+            let a = &o.results.aggregate;
+            t.row(vec![
+                o.label.clone(),
+                format!("{:.4}", a.cold_start_prob * 100.0),
+                format!("{}", a.rejected_requests),
+                format!("{:.3}", a.avg_server_count),
+                format!("{:.2}", a.wasted_capacity * 100.0),
+                format!("{:.4}", o.cost.total.developer_total()),
+                format!("{:.4}", o.cost.total.provider_infra_cost),
+            ]);
+        }
+        print!("{t}");
+        return Ok(());
+    }
+
+    let results = cfg.run();
+    let cost = fleet_cost(&cfg, &results, &pricing);
+    if json_out {
+        println!("{}", fleet_to_json(&results, Some(&cost)));
+        return Ok(());
+    }
+    println!(
+        "fleet: {} functions under {} (horizon {horizon} s, seed {seed})",
+        cfg.functions.len(),
+        cfg.policy.describe()
+    );
+    print!("{}", results.aggregate.to_table());
+    println!(
+        "developer cost ${:.4} (requests ${:.4} + runtime ${:.4}) | provider infra ${:.4}",
+        cost.total.developer_total(),
+        cost.total.request_charges,
+        cost.total.runtime_charges,
+        cost.total.provider_infra_cost
+    );
+    let top = top_k.min(results.per_function.len());
+    if top > 0 {
+        let mut order: Vec<usize> = (0..results.per_function.len()).collect();
+        order.sort_by(|&a, &b| {
+            results.per_function[b]
+                .total_requests
+                .cmp(&results.per_function[a].total_requests)
+        });
+        let mut t = Table::new(vec![
+            "function",
+            "requests",
+            "p_cold %",
+            "avg servers",
+            "billed s",
+        ]);
+        for &i in order.iter().take(top) {
+            let r = &results.per_function[i];
+            t.row(vec![
+                results.names[i].clone(),
+                format!("{}", r.total_requests),
+                format!("{:.4}", r.cold_start_prob * 100.0),
+                format!("{:.4}", r.avg_server_count),
+                format!("{:.1}", r.billed_instance_seconds),
+            ]);
+        }
+        println!("top {top} functions by request volume:");
         print!("{t}");
     }
     Ok(())
@@ -353,13 +502,7 @@ fn cmd_compare(args: &Args) -> Result<()> {
 fn cmd_cost(args: &Args) -> Result<()> {
     let cfg = sim_cfg_from_args(args)?;
     let results = ServerlessSimulator::new(cfg).run();
-    let provider = match args.get_str("provider", "aws").as_str() {
-        "aws" => Provider::AwsLambda,
-        "gcf" | "google" => Provider::GoogleCloudFunctions,
-        "azure" => Provider::AzureFunctions,
-        "ibm" => Provider::IbmCloudFunctions,
-        other => bail!("unknown provider {other:?}"),
-    };
+    let provider = provider_from_args(args)?;
     let f = FunctionConfig::new(args.get_f64("memory", 128.0)?);
     let est = estimate(&results, &f, &PricingTable::for_provider(provider));
     let month = scale_to(&est, 30.0 * 86_400.0);

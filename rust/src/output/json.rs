@@ -31,13 +31,6 @@ impl JsonValue {
         self
     }
 
-    /// Serialize to a compact JSON string.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             JsonValue::Null => out.push_str("null"),
@@ -89,6 +82,16 @@ impl JsonValue {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact JSON serialization (`value.to_string()` via the blanket
+/// `ToString`).
+impl std::fmt::Display for JsonValue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 
@@ -154,6 +157,66 @@ pub fn results_to_json(r: &crate::sim::SimResults) -> JsonValue {
     o
 }
 
+/// Serialize a fleet run (used by `simfaas fleet --json`): the aggregate
+/// rollup, a per-function array, and (optionally) the priced cost totals.
+pub fn fleet_to_json(
+    results: &crate::fleet::FleetResults,
+    cost: Option<&crate::fleet::FleetCostReport>,
+) -> JsonValue {
+    let a = &results.aggregate;
+    let mut agg = JsonValue::object();
+    agg.set("functions", a.functions)
+        .set("measured_time", a.measured_time)
+        .set("total_requests", a.total_requests)
+        .set("cold_requests", a.cold_requests)
+        .set("warm_requests", a.warm_requests)
+        .set("rejected_requests", a.rejected_requests)
+        .set("cap_rejections", a.cap_rejections)
+        .set("cold_start_prob", a.cold_start_prob)
+        .set("rejection_prob", a.rejection_prob)
+        .set("avg_server_count", a.avg_server_count)
+        .set("avg_running_count", a.avg_running_count)
+        .set("avg_idle_count", a.avg_idle_count)
+        .set("wasted_capacity", a.wasted_capacity)
+        .set("avg_response_time", a.avg_response_time)
+        .set("response_p50", a.response_p50)
+        .set("response_p95", a.response_p95)
+        .set("response_p99", a.response_p99)
+        .set("billed_instance_seconds", a.billed_instance_seconds)
+        .set("observed_arrival_rate", a.observed_arrival_rate);
+
+    let functions: Vec<JsonValue> = results
+        .names
+        .iter()
+        .zip(&results.per_function)
+        .map(|(name, r)| {
+            let mut f = JsonValue::object();
+            f.set("name", name.as_str())
+                .set("total_requests", r.total_requests)
+                .set("cold_start_prob", r.cold_start_prob)
+                .set("rejection_prob", r.rejection_prob)
+                .set("avg_server_count", r.avg_server_count)
+                .set("avg_response_time", r.avg_response_time)
+                .set("billed_instance_seconds", r.billed_instance_seconds);
+            f
+        })
+        .collect();
+
+    let mut o = JsonValue::object();
+    o.set("aggregate", agg).set("functions", JsonValue::Array(functions));
+    if let Some(c) = cost {
+        let mut cj = JsonValue::object();
+        cj.set("requests", c.total.requests)
+            .set("gb_seconds", c.total.gb_seconds)
+            .set("request_charges", c.total.request_charges)
+            .set("runtime_charges", c.total.runtime_charges)
+            .set("developer_total", c.total.developer_total())
+            .set("provider_infra_cost", c.total.provider_infra_cost);
+        o.set("cost", cj);
+    }
+    o
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -173,6 +236,24 @@ mod tests {
         o.set("b", 2u64).set("a", vec![1.0, 2.5]);
         // BTreeMap: keys sorted.
         assert_eq!(o.to_string(), r#"{"a":[1,2.5],"b":2}"#);
+    }
+
+    #[test]
+    fn fleet_json_has_aggregate_and_functions() {
+        use crate::fleet::{fleet_cost, FleetConfig, PolicySpec};
+        use crate::sim::SimConfig;
+        let cfg = FleetConfig::from_sim_configs(
+            &[SimConfig::table1().with_horizon(2_000.0)],
+            PolicySpec::fixed(600.0),
+        );
+        let res = cfg.run();
+        let cost = fleet_cost(&cfg, &res, &crate::cost::PricingTable::aws_lambda());
+        let j = fleet_to_json(&res, Some(&cost)).to_string();
+        assert!(j.contains("\"aggregate\":{"));
+        assert!(j.contains("\"functions\":["));
+        assert!(j.contains("\"cold_start_prob\""));
+        assert!(j.contains("\"cost\":{"));
+        assert!(j.contains("\"developer_total\""));
     }
 
     #[test]

@@ -7,6 +7,8 @@ pub mod sweep;
 
 pub use sweep::{sweep, sweep_grid, GridPoint, SweepOutcome};
 
+use crate::cost::PricingTable;
+use crate::fleet::{fleet_cost, FleetConfig, FleetCostReport, FleetResults, PolicySpec};
 use crate::sim::ensemble::{derive_seeds, run_indexed, EnsembleOpts, EnsembleResults};
 use crate::sim::{ServerlessSimulator, SimConfig, SimResults};
 
@@ -89,6 +91,47 @@ pub fn expiration_threshold_ensemble(
     out
 }
 
+/// Outcome of running one keep-alive policy over a fleet: the fleet
+/// results plus the priced cost rollup.
+pub struct PolicyOutcome {
+    pub label: String,
+    pub results: FleetResults,
+    pub cost: FleetCostReport,
+}
+
+/// Fleet-scale what-if: the same tenant mix (same traces, same seeds) under
+/// a grid of fixed keep-alive thresholds plus any number of additional
+/// policies (typically the adaptive hybrid-histogram policy). This is the
+/// provider-side question the fleet subsystem exists to answer: what does
+/// switching the platform's keep-alive policy do to cold starts, idle
+/// waste, and cost across the whole mix?
+///
+/// Policies run sequentially; each fleet run parallelizes internally
+/// (sharded across `base.threads` workers), so the grid inherits the
+/// fleet's any-thread-count determinism.
+pub fn keepalive_policy_comparison(
+    base: &FleetConfig,
+    fixed_thresholds: &[f64],
+    extra_policies: &[PolicySpec],
+    pricing: &PricingTable,
+) -> Vec<PolicyOutcome> {
+    let specs: Vec<PolicySpec> = fixed_thresholds
+        .iter()
+        .map(|&th| PolicySpec::fixed(th))
+        .chain(extra_policies.iter().cloned())
+        .collect();
+    assert!(!specs.is_empty(), "no policies to compare");
+    specs
+        .into_iter()
+        .map(|policy| {
+            let cfg = base.clone().with_policy(policy);
+            let results = cfg.run();
+            let cost = fleet_cost(&cfg, &results, pricing);
+            PolicyOutcome { label: cfg.policy.describe(), results, cost }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,7 +165,9 @@ mod tests {
         base.horizon = 60_000.0;
         let thresholds = [60.0, 600.0, 1800.0];
         let (best, outcomes) = optimize_expiration_threshold(&base, &thresholds, 0.0, 1.0);
-        assert_eq!(best, 1800.0, "outcomes: {:?}", outcomes.iter().map(|(t, r)| (*t, r.cold_start_prob)).collect::<Vec<_>>());
+        let probs: Vec<(f64, f64)> =
+            outcomes.iter().map(|(t, r)| (*t, r.cold_start_prob)).collect();
+        assert_eq!(best, 1800.0, "outcomes: {probs:?}");
     }
 
     #[test]
@@ -132,5 +177,36 @@ mod tests {
         let thresholds = [60.0, 600.0, 1800.0];
         let (best, _) = optimize_expiration_threshold(&base, &thresholds, 1.0, 0.0);
         assert_eq!(best, 60.0);
+    }
+
+    #[test]
+    fn policy_comparison_covers_grid_and_adaptive_on_same_trace() {
+        use crate::sim::Rng;
+        use crate::workload::SyntheticTrace;
+        let mut rng = Rng::new(31);
+        let trace = SyntheticTrace::generate(10, &mut rng);
+        let base =
+            FleetConfig::from_trace(&trace, 4_000.0, 0.0, 0xCAFE, PolicySpec::fixed(600.0));
+        let out = keepalive_policy_comparison(
+            &base,
+            &[60.0, 1200.0],
+            &[PolicySpec::hybrid_histogram(3_600.0, 60.0)],
+            &PricingTable::aws_lambda(),
+        );
+        assert_eq!(out.len(), 3);
+        assert!(out[0].label.contains("fixed(60s)"));
+        assert!(out[2].label.contains("hybrid-histogram"));
+        // Same trace everywhere: total arrivals are policy-invariant.
+        let totals: Vec<u64> =
+            out.iter().map(|o| o.results.aggregate.total_requests).collect();
+        assert_eq!(totals[0], totals[1]);
+        assert_eq!(totals[0], totals[2]);
+        // Fig. 5 shape at fleet scale: longer threshold, fewer cold starts,
+        // more idle servers.
+        let (short, long) = (&out[0].results.aggregate, &out[1].results.aggregate);
+        assert!(long.cold_start_prob < short.cold_start_prob);
+        assert!(long.avg_server_count > short.avg_server_count);
+        // Cost report rides along for every policy.
+        assert!(out.iter().all(|o| o.cost.total.requests > 0.0));
     }
 }

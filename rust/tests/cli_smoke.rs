@@ -20,9 +20,10 @@ fn simfaas(args: &[&str]) -> (bool, String) {
 fn help_lists_commands() {
     let (ok, text) = simfaas(&["help"]);
     assert!(ok);
-    for cmd in
-        ["steady", "temporal", "ensemble", "sweep", "emulate", "validate", "cost", "figures"]
-    {
+    for cmd in [
+        "steady", "temporal", "ensemble", "fleet", "sweep", "emulate", "validate", "cost",
+        "figures",
+    ] {
         assert!(text.contains(cmd), "help missing {cmd}: {text}");
     }
 }
@@ -94,6 +95,76 @@ fn temporal_prints_ci() {
 }
 
 #[test]
+fn fleet_reports_aggregate_and_cost() {
+    let (ok, text) = simfaas(&[
+        "fleet",
+        "--functions",
+        "5",
+        "--horizon",
+        "2000",
+        "--seed",
+        "3",
+        "--threads",
+        "2",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("Cold Start Probability"), "{text}");
+    assert!(text.contains("Functions"), "{text}");
+    assert!(text.contains("developer cost"), "{text}");
+    assert!(text.contains("top"), "{text}");
+}
+
+#[test]
+fn fleet_json_and_policy_comparison() {
+    let (ok, text) = simfaas(&[
+        "fleet",
+        "--functions",
+        "4",
+        "--horizon",
+        "1500",
+        "--policy",
+        "adaptive",
+        "--json",
+    ]);
+    assert!(ok, "{text}");
+    let line = text.lines().find(|l| l.starts_with('{')).expect("json line");
+    assert!(line.contains("\"aggregate\""), "{line}");
+    assert!(line.contains("\"cost\""), "{line}");
+    assert!(line.ends_with('}'));
+
+    let (ok, text) = simfaas(&[
+        "fleet",
+        "--functions",
+        "4",
+        "--horizon",
+        "1500",
+        "--compare-thresholds",
+        "60,600",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("fixed(60s)"), "{text}");
+    assert!(text.contains("fixed(600s)"), "{text}");
+    assert!(text.contains("hybrid-histogram"), "{text}");
+    assert!(text.contains("p_cold"), "{text}");
+}
+
+#[test]
+fn fleet_rejects_bad_flags() {
+    // Unknown flag is a clean error, not a panic.
+    let (ok, text) = simfaas(&["fleet", "--functions", "2", "--horizont", "100"]);
+    assert!(!ok);
+    assert!(text.contains("unknown flag"), "{text}");
+    // Unknown policy name is a clean error too.
+    let (ok, text) = simfaas(&["fleet", "--functions", "2", "--policy", "oracle"]);
+    assert!(!ok);
+    assert!(text.contains("unknown policy"), "{text}");
+    // Zero functions is rejected.
+    let (ok, text) = simfaas(&["fleet", "--functions", "0"]);
+    assert!(!ok);
+    assert!(text.contains("functions"), "{text}");
+}
+
+#[test]
 fn sweep_prints_grid() {
     let (ok, text) = simfaas(&[
         "sweep",
@@ -158,7 +229,8 @@ fn compare_shows_model_gap_table() {
 
 #[test]
 fn cost_reports_monthly() {
-    let (ok, text) = simfaas(&["cost", "--horizon", "20000", "--memory", "256", "--provider", "azure"]);
+    let (ok, text) =
+        simfaas(&["cost", "--horizon", "20000", "--memory", "256", "--provider", "azure"]);
     assert!(ok, "{text}");
     assert!(text.contains("per 30 days"));
     assert!(text.contains("provider infra cost"));

@@ -1,0 +1,125 @@
+//! Integration tests for the cost engine at fleet scale.
+//!
+//! Two pins the ISSUE asks for:
+//!
+//! 1. **Linearity** — when no fleet cap binds, functions are independent,
+//!    so the fleet cost report must equal the sum of solo
+//!    `ServerlessSimulator` runs priced one at a time (and the fleet total
+//!    must equal the sum of its own per-function rows). Exercised across
+//!    heterogeneous rates, memory sizes and providers.
+//! 2. **Pricing tables** — the four provider tables are data the paper's
+//!    §4.4 math multiplies through; pin the 2020-era constants so a silent
+//!    edit can't skew every cost figure.
+
+use simfaas::cost::{estimate, FunctionConfig, PricingTable, Provider};
+use simfaas::fleet::{fleet_cost, FleetConfig, PolicySpec};
+use simfaas::sim::{Process, ServerlessSimulator, SimConfig};
+
+fn cfg(seed: u64, rate: f64, warm: f64) -> SimConfig {
+    let mut c = SimConfig::table1().with_horizon(15_000.0).with_seed(seed);
+    c.arrival = Process::exp_rate(rate);
+    c.warm_service = Process::exp_mean(warm);
+    c
+}
+
+#[test]
+fn uncapped_fleet_cost_is_sum_of_solo_function_costs() {
+    let sim_cfgs = [cfg(11, 0.4, 1.0), cfg(22, 1.2, 2.5), cfg(33, 2.0, 0.5)];
+    let memories = [128.0, 512.0, 1024.0];
+
+    let mut fleet_cfg = FleetConfig::from_sim_configs(&sim_cfgs, PolicySpec::fixed(600.0));
+    for (spec, &m) in fleet_cfg.functions.iter_mut().zip(&memories) {
+        spec.memory_mb = m;
+    }
+    let results = fleet_cfg.run();
+
+    for provider in [
+        Provider::AwsLambda,
+        Provider::GoogleCloudFunctions,
+        Provider::AzureFunctions,
+        Provider::IbmCloudFunctions,
+    ] {
+        let pricing = PricingTable::for_provider(provider);
+        let report = fleet_cost(&fleet_cfg, &results, &pricing);
+
+        // Per-function fleet estimates equal solo-simulator estimates: the
+        // uncapped fleet engine is bit-identical to ServerlessSimulator,
+        // so the priced numbers match exactly too.
+        for ((c, &m), fleet_est) in
+            sim_cfgs.iter().zip(&memories).zip(&report.per_function)
+        {
+            let solo = ServerlessSimulator::new(c.clone()).run();
+            let solo_est = estimate(&solo, &FunctionConfig::new(m), &pricing);
+            assert_eq!(solo_est.requests.to_bits(), fleet_est.requests.to_bits());
+            assert_eq!(solo_est.gb_seconds.to_bits(), fleet_est.gb_seconds.to_bits());
+            assert_eq!(
+                solo_est.request_charges.to_bits(),
+                fleet_est.request_charges.to_bits()
+            );
+            assert_eq!(
+                solo_est.runtime_charges.to_bits(),
+                fleet_est.runtime_charges.to_bits()
+            );
+            assert_eq!(
+                solo_est.provider_infra_cost.to_bits(),
+                fleet_est.provider_infra_cost.to_bits()
+            );
+        }
+
+        // The fleet total is the exact sum of its per-function rows.
+        let sum = |f: fn(&simfaas::cost::CostEstimate) -> f64| -> f64 {
+            report.per_function.iter().map(f).sum()
+        };
+        assert!((report.total.requests - sum(|e| e.requests)).abs() < 1e-9);
+        assert!((report.total.gb_seconds - sum(|e| e.gb_seconds)).abs() < 1e-9);
+        assert!(
+            (report.total.developer_total() - sum(|e| e.developer_total())).abs() < 1e-12
+        );
+        assert!(
+            (report.total.provider_infra_cost - sum(|e| e.provider_infra_cost)).abs() < 1e-12
+        );
+    }
+}
+
+#[test]
+fn capped_fleet_costs_less_than_uncapped() {
+    // A binding cap rejects work: fewer served requests and fewer
+    // provisioned instances must never cost *more*.
+    let sim_cfgs = [cfg(1, 2.5, 2.0), cfg(2, 2.5, 2.0)];
+    let base = FleetConfig::from_sim_configs(&sim_cfgs, PolicySpec::fixed(600.0));
+    let pricing = PricingTable::aws_lambda();
+    let free = base.clone().run();
+    let free_cost = fleet_cost(&base, &free, &pricing);
+    let capped_cfg = base.with_fleet_cap(3);
+    let capped = capped_cfg.run();
+    let capped_cost = fleet_cost(&capped_cfg, &capped, &pricing);
+    assert!(capped.aggregate.rejected_requests > 0);
+    assert!(capped_cost.total.developer_total() < free_cost.total.developer_total());
+    assert!(capped_cost.total.provider_infra_cost < free_cost.total.provider_infra_cost);
+}
+
+#[test]
+fn provider_pricing_tables_pinned() {
+    // (provider, per_request, per_gb_second, infra_per_instance_hour)
+    let expected = [
+        (Provider::AwsLambda, 0.20 / 1e6, 0.000_016_666_7, 0.0116),
+        (Provider::GoogleCloudFunctions, 0.40 / 1e6, 0.000_016_5, 0.0118),
+        (Provider::AzureFunctions, 0.20 / 1e6, 0.000_016, 0.0115),
+        (Provider::IbmCloudFunctions, 0.0, 0.000_017, 0.0117),
+    ];
+    for (provider, per_request, per_gb_second, infra) in expected {
+        let t = PricingTable::for_provider(provider);
+        assert_eq!(t.provider, provider);
+        assert_eq!(t.per_request.to_bits(), per_request.to_bits(), "{provider:?} per_request");
+        assert_eq!(
+            t.per_gb_second.to_bits(),
+            per_gb_second.to_bits(),
+            "{provider:?} per_gb_second"
+        );
+        assert_eq!(
+            t.infra_cost_per_instance_hour.to_bits(),
+            infra.to_bits(),
+            "{provider:?} infra"
+        );
+    }
+}

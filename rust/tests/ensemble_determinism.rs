@@ -9,10 +9,12 @@
 //! requires per-replication process replicas), and the temporal simulator
 //! that Fig. 4 is built on.
 
+use simfaas::fleet::{FleetConfig, FleetResults, PolicySpec};
 use simfaas::sim::ensemble::{run_ensemble, run_par_ensemble, EnsembleOpts};
 use simfaas::sim::{
-    EnsembleResults, InitialState, Process, ServerlessTemporalSimulator, SimConfig,
+    EnsembleResults, InitialState, Process, Rng, ServerlessTemporalSimulator, SimConfig,
 };
+use simfaas::workload::SyntheticTrace;
 
 /// Exact (bit-level) digest of an ensemble's aggregated output.
 fn digest(res: &EnsembleResults) -> Vec<u64> {
@@ -76,6 +78,59 @@ fn par_simulator_ensemble_deterministic() {
         let res = run_par_ensemble(&cfg, 3, &EnsembleOpts::new(6, 0xF00).with_threads(threads));
         assert_eq!(digest(&res), digest(&reference), "threads={threads}");
     }
+}
+
+/// Exact digest of a fleet run: every per-function result plus the rollup.
+fn fleet_digest(res: &FleetResults) -> Vec<u64> {
+    let mut d = Vec::new();
+    for r in &res.per_function {
+        d.push(r.total_requests);
+        d.push(r.cold_requests);
+        d.push(r.warm_requests);
+        d.push(r.rejected_requests);
+        d.push(r.avg_server_count.to_bits());
+        d.push(r.avg_running_count.to_bits());
+        d.push(r.billed_instance_seconds.to_bits());
+        d.push(r.response_p99.to_bits());
+    }
+    let a = &res.aggregate;
+    d.push(a.total_requests);
+    d.push(a.cold_requests);
+    d.push(a.cold_start_prob.to_bits());
+    d.push(a.avg_server_count.to_bits());
+    d.push(a.response_p95.to_bits());
+    d.push(a.billed_instance_seconds.to_bits());
+    d
+}
+
+#[test]
+fn fleet_shards_bit_identical_across_1_2_8_threads() {
+    // The fleet simulator shards functions over the same indexed runner as
+    // the replication ensemble, so it inherits the identical contract:
+    // per-function AND aggregate output must not depend on shard count.
+    let mut rng = Rng::new(0xF17);
+    let trace = SyntheticTrace::generate(32, &mut rng);
+    let base = FleetConfig::from_trace(
+        &trace,
+        5_000.0,
+        0.0,
+        0xF17,
+        PolicySpec::hybrid_histogram(3_600.0, 60.0),
+    );
+    let reference = base.clone().with_threads(1).run();
+    for threads in [2, 8] {
+        let res = base.clone().with_threads(threads).run();
+        assert_eq!(fleet_digest(&res), fleet_digest(&reference), "threads={threads}");
+    }
+}
+
+#[test]
+fn fleet_different_root_seeds_differ() {
+    let mut rng = Rng::new(0xF18);
+    let trace = SyntheticTrace::generate(8, &mut rng);
+    let a = FleetConfig::from_trace(&trace, 3_000.0, 0.0, 1, PolicySpec::fixed(600.0)).run();
+    let b = FleetConfig::from_trace(&trace, 3_000.0, 0.0, 2, PolicySpec::fixed(600.0)).run();
+    assert_ne!(fleet_digest(&a), fleet_digest(&b));
 }
 
 #[test]
