@@ -1,19 +1,24 @@
 //! Minimal CLI argument parsing (no external crates in this environment).
 //!
-//! Supports `--flag value`, `--flag=value` and boolean `--flag` forms, plus
-//! a positional subcommand. Unknown flags are an error (catches typos in
-//! experiment scripts).
+//! Supports `--flag value`, `--flag=value` and boolean `--flag` forms, a
+//! positional subcommand, plus further positional operands (e.g. `simfaas
+//! run <scenario.json>`). Unknown flags — and positionals the command
+//! never consumed — are errors (catches typos in experiment scripts).
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
-/// Parsed arguments: subcommand + flags.
+/// Parsed arguments: subcommand + positional operands + flags.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub command: Option<String>,
+    /// Positional operands after the subcommand, in order.
+    positionals: Vec<String>,
     flags: BTreeMap<String, String>,
     /// Flags that were consumed by a getter (for unknown-flag detection).
     seen: std::cell::RefCell<std::collections::BTreeSet<String>>,
+    /// How many leading positionals a getter consumed.
+    positionals_seen: std::cell::Cell<usize>,
 }
 
 impl Args {
@@ -39,7 +44,7 @@ impl Args {
             } else if args.command.is_none() {
                 args.command = Some(a);
             } else {
-                bail!("unexpected positional argument {a:?}");
+                args.positionals.push(a);
             }
         }
         Ok(args)
@@ -47,6 +52,21 @@ impl Args {
 
     fn mark(&self, key: &str) {
         self.seen.borrow_mut().insert(key.to_string());
+    }
+
+    /// Positional operand `idx` (0 = first after the subcommand). Like the
+    /// flag getters, consuming marks it for [`check_unknown`](Self::check_unknown).
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        let watermark = self.positionals_seen.get().max(idx + 1);
+        self.positionals_seen.set(watermark);
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+
+    /// Number of positional operands parsed (does not mark them consumed —
+    /// lets the dispatcher fail fast on operands a command cannot take,
+    /// before any simulation runs).
+    pub fn positional_count(&self) -> usize {
+        self.positionals.len()
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -95,13 +115,19 @@ impl Args {
         }
     }
 
-    /// Error on any flag never queried by the command.
+    /// Error on any flag or positional never queried by the command.
     pub fn check_unknown(&self) -> Result<()> {
         let seen = self.seen.borrow();
         let unknown: Vec<&String> =
             self.flags.keys().filter(|k| !seen.contains(*k)).collect();
         if !unknown.is_empty() {
             bail!("unknown flag(s): {unknown:?}");
+        }
+        if self.positionals.len() > self.positionals_seen.get() {
+            bail!(
+                "unexpected positional argument {:?}",
+                self.positionals[self.positionals_seen.get()]
+            );
         }
         Ok(())
     }
@@ -136,11 +162,23 @@ mod tests {
     fn lists_parse() {
         let b = parse("sweep --rates 0.1,0.5,1.0");
         assert_eq!(b.get_f64_list("rates", &[]).unwrap(), vec![0.1, 0.5, 1.0]);
-        // A stray second positional is an error.
-        assert!(Args::parse(
-            ["sweep", "--rates", "0.1,", "1.0"].map(String::from)
-        )
-        .is_err());
+        b.check_unknown().unwrap();
+        // A stray positional the command never consumes is an error (the
+        // CLI always runs check_unknown after dispatch).
+        let b = Args::parse(["sweep", "--rates", "0.1,", "1.0"].map(String::from)).unwrap();
+        let _ = b.get_f64_list("rates", &[]);
+        let err = b.check_unknown().unwrap_err().to_string();
+        assert!(err.contains("unexpected positional"), "{err}");
+    }
+
+    #[test]
+    fn positionals_consumed_in_order() {
+        let a = parse("run scenario.json --json");
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.positional(0), Some("scenario.json"));
+        assert_eq!(a.positional(1), None);
+        assert!(a.get_bool("json"));
+        a.check_unknown().unwrap();
     }
 
     #[test]

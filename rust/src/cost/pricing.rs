@@ -11,6 +11,38 @@ pub enum Provider {
     IbmCloudFunctions,
 }
 
+impl Provider {
+    /// Canonical short name — the form the CLI accepts and the scenario
+    /// writer emits (`FromStr` accepts these plus longer aliases).
+    pub fn canonical_name(&self) -> &'static str {
+        match self {
+            Provider::AwsLambda => "aws",
+            Provider::GoogleCloudFunctions => "gcf",
+            Provider::AzureFunctions => "azure",
+            Provider::IbmCloudFunctions => "ibm",
+        }
+    }
+}
+
+/// Shared string→provider parsing for the CLI (`--provider`) and the
+/// scenario JSON reader (`cost.provider`), so the accepted names and the
+/// error message cannot drift between the two surfaces.
+impl std::str::FromStr for Provider {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "aws" | "aws-lambda" | "lambda" => Provider::AwsLambda,
+            "gcf" | "google" | "google-cloud-functions" => Provider::GoogleCloudFunctions,
+            "azure" | "azure-functions" => Provider::AzureFunctions,
+            "ibm" | "ibm-cloud-functions" => Provider::IbmCloudFunctions,
+            other => anyhow::bail!(
+                "unknown provider {other:?} (expected aws|gcf|google|azure|ibm)"
+            ),
+        })
+    }
+}
+
 /// Billing rates.
 #[derive(Debug, Clone, Copy)]
 pub struct PricingTable {
@@ -104,5 +136,23 @@ mod tests {
     fn aws_million_requests_costs_20_cents() {
         let t = PricingTable::aws_lambda();
         assert!((t.per_request * 1e6 - 0.20).abs() < 1e-12);
+    }
+
+    #[test]
+    fn provider_parses_canonical_names_and_aliases() {
+        for p in [
+            Provider::AwsLambda,
+            Provider::GoogleCloudFunctions,
+            Provider::AzureFunctions,
+            Provider::IbmCloudFunctions,
+        ] {
+            // Canonical name round-trips through FromStr.
+            assert_eq!(p.canonical_name().parse::<Provider>().unwrap(), p);
+        }
+        assert_eq!("google".parse::<Provider>().unwrap(), Provider::GoogleCloudFunctions);
+        assert_eq!("lambda".parse::<Provider>().unwrap(), Provider::AwsLambda);
+        let err = "ec2".parse::<Provider>().unwrap_err().to_string();
+        assert!(err.contains("unknown provider"), "{err}");
+        assert!(err.contains("aws|gcf|google|azure|ibm"), "{err}");
     }
 }

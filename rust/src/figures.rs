@@ -40,8 +40,25 @@ pub fn fig4_band(
 }
 
 /// Fig. 5: cold-start probability vs arrival rate for several expiration
-/// thresholds. Returns one series per threshold: (threshold, [(rate, p)]).
+/// thresholds, over the paper's Table 1 platform. Returns one series per
+/// threshold: (threshold, [(rate, p)]).
 pub fn fig5_sweep(
+    rates: &[f64],
+    thresholds: &[f64],
+    horizon: f64,
+    seed: u64,
+) -> Vec<(f64, Vec<(f64, f64)>)> {
+    fig5_sweep_from(&SimConfig::table1(), rates, thresholds, horizon, seed)
+}
+
+/// [`fig5_sweep`] over an arbitrary base platform (service processes,
+/// concurrency limit, warm-up skip come from `base`; arrival rate,
+/// threshold, horizon and seed are overridden per grid point). The
+/// scenario layer routes sweep experiments here so a non-Table-1 platform
+/// can be swept; with `base == SimConfig::table1()` the output is
+/// bit-identical to [`fig5_sweep`].
+pub fn fig5_sweep_from(
+    base: &SimConfig,
     rates: &[f64],
     thresholds: &[f64],
     horizon: f64,
@@ -52,11 +69,13 @@ pub fn fig5_sweep(
         .flat_map(|&th| rates.iter().map(move |&r| (r, th)))
         .collect();
     let results = sweep(&points, |&(rate, th)| {
-        let cfg = SimConfig::table1()
+        // replica_with_seed (not clone) so stateful processes in `base`
+        // never share mutable state across the parallel grid jobs.
+        let cfg = base
+            .replica_with_seed(seed ^ ((th as u64) << 20) ^ (rate * 1e4) as u64)
             .with_arrival_rate(rate)
             .with_expiration_threshold(th)
-            .with_horizon(horizon)
-            .with_seed(seed ^ ((th as u64) << 20) ^ (rate * 1e4) as u64);
+            .with_horizon(horizon);
         ServerlessSimulator::new(cfg).run().cold_start_prob
     });
     thresholds

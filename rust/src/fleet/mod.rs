@@ -27,7 +27,8 @@ pub mod policy;
 pub mod simulator;
 
 pub use policy::{
-    FixedExpiration, HybridHistogramPolicy, KeepAlivePolicy, PolicySpec, StochasticExpiration,
+    FixedExpiration, HybridHistogramPolicy, KeepAlivePolicy, PolicyKind, PolicySpec,
+    StochasticExpiration,
 };
 pub use simulator::{
     fleet_cost, ArrivalMode, FleetAggregate, FleetConfig, FleetCostReport, FleetResults,

@@ -119,12 +119,18 @@ pub struct HybridHistogramPolicy {
 }
 
 impl HybridHistogramPolicy {
+    /// Default tuning `(tail, margin, min_samples, oob_threshold)` — the
+    /// single source for [`Self::new`], [`PolicySpec::hybrid_histogram`]
+    /// and the scenario layer's `KeepAliveSpec::hybrid_histogram`.
+    pub const DEFAULT_TUNING: (f64, f64, u64, f64) = (0.99, 0.10, 8, 0.5);
+
     /// `range` is both the histogram span and the fallback keep-alive
     /// window; `bin_len` the bin width (Azure uses 1-minute bins over a
     /// 4-hour range). Tail percentile 0.99, margin 10%, 8 warm-up samples,
     /// 50% out-of-bounds fallback threshold.
     pub fn new(range: f64, bin_len: f64) -> Self {
-        Self::with_params(range, bin_len, 0.99, 0.10, 8, 0.5)
+        let (tail, margin, min_samples, oob_threshold) = Self::DEFAULT_TUNING;
+        Self::with_params(range, bin_len, tail, margin, min_samples, oob_threshold)
     }
 
     pub fn with_params(
@@ -217,6 +223,30 @@ impl KeepAlivePolicy for HybridHistogramPolicy {
     }
 }
 
+/// The two policy families selectable by name — the CLI's `--policy` flag
+/// and the scenario reader's `policy.type` tag both parse through this, so
+/// the accepted names and error text cannot drift apart. Parameters (fixed
+/// threshold; histogram range/bin) ride separately.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// The paper's fixed idle-expiration threshold.
+    Fixed,
+    /// The Azure-style adaptive hybrid-histogram policy.
+    Adaptive,
+}
+
+impl std::str::FromStr for PolicyKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "fixed" => PolicyKind::Fixed,
+            "adaptive" | "hybrid" | "hybrid-histogram" => PolicyKind::Adaptive,
+            other => anyhow::bail!("unknown policy {other:?} (expected fixed|adaptive)"),
+        })
+    }
+}
+
 /// Buildable policy description: the fleet configuration holds a spec, and
 /// every function (in every shard) builds its own fresh policy instance
 /// from it — the fleet analogue of `SimConfig::replica_with_seed`'s
@@ -256,14 +286,8 @@ impl PolicySpec {
 
     /// Hybrid-histogram policy with the default tail/margin parameters.
     pub fn hybrid_histogram(range: f64, bin_len: f64) -> Self {
-        PolicySpec::HybridHistogram {
-            range,
-            bin_len,
-            tail: 0.99,
-            margin: 0.10,
-            min_samples: 8,
-            oob_threshold: 0.5,
-        }
+        let (tail, margin, min_samples, oob_threshold) = HybridHistogramPolicy::DEFAULT_TUNING;
+        PolicySpec::HybridHistogram { range, bin_len, tail, margin, min_samples, oob_threshold }
     }
 
     pub fn custom<F>(label: impl Into<String>, build: F) -> Self
@@ -402,5 +426,16 @@ mod tests {
         let mut rng = Rng::new(7);
         assert_eq!(spec.build().keep_alive(0.0, &mut rng), 5.0);
         assert_eq!(spec.describe(), "always-5s");
+    }
+
+    #[test]
+    fn policy_kind_parses_names_and_aliases() {
+        assert_eq!("fixed".parse::<PolicyKind>().unwrap(), PolicyKind::Fixed);
+        for alias in ["adaptive", "hybrid", "hybrid-histogram"] {
+            assert_eq!(alias.parse::<PolicyKind>().unwrap(), PolicyKind::Adaptive);
+        }
+        let err = "oracle".parse::<PolicyKind>().unwrap_err().to_string();
+        assert!(err.contains("unknown policy"), "{err}");
+        assert!(err.contains("fixed|adaptive"), "{err}");
     }
 }

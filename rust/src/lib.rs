@@ -29,6 +29,11 @@
 //!   concurrency cap and a fleet cost rollup.
 //! * [`whatif`] — parameter sweeps, configuration optimization and
 //!   keep-alive policy comparison.
+//! * [`scenario`] — **the documented programmatic surface**: a typed,
+//!   serializable [`ScenarioSpec`] (workload × platform × experiment ×
+//!   cost × output) executed by one [`run_scenario`] entry point. The CLI
+//!   subcommands are thin translators over it, and `simfaas run
+//!   <scenario.json>` executes spec files directly.
 //! * [`output`] — ASCII tables/plots and CSV/JSON writers used by the CLI,
 //!   examples and benches.
 //!
@@ -43,12 +48,16 @@ pub mod figures;
 pub mod fleet;
 pub mod output;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod trace;
 pub mod whatif;
 pub mod workload;
 
 pub use fleet::{FleetConfig, FleetResults, KeepAlivePolicy, PolicySpec};
+pub use scenario::{
+    run_scenario, ExperimentSpec, ProcessSpec, ScenarioReport, ScenarioSpec,
+};
 pub use sim::{
     run_ensemble, EnsembleOpts, EnsembleResults, Process, ServerlessSimulator,
     ServerlessTemporalSimulator, SimConfig, SimProcess, SimResults,

@@ -1,32 +1,30 @@
 //! `simfaas` — the SimFaaS command-line interface.
 //!
-//! Subcommands (run `simfaas help` for flags):
+//! Every simulation-side subcommand (`steady`, `temporal`, `ensemble`,
+//! `fleet`, `sweep`, `compare`, `cost`) is a thin translator from flags to
+//! a [`simfaas::scenario::ScenarioSpec`], executed by the one
+//! [`simfaas::scenario::run_scenario`] entry point — `simfaas run
+//! <scenario.json>` executes the same specs from files (bundled examples
+//! under `examples/scenarios/`). The emulator-side commands (`emulate`,
+//! `validate`, `probe`), trace identification (`identify`) and the paper
+//! figure regenerator (`figures`) drive their subsystems directly.
 //!
-//! * `steady`    — steady-state simulation (paper Table 1)
-//! * `temporal`  — transient analysis with replications + CI (Fig. 4)
-//! * `ensemble`  — multi-threaded replication ensemble, mean ± 95% CI per
-//!                 metric; optional expiration-threshold grid
-//! * `fleet`     — multi-function fleet simulation under a keep-alive
-//!                 policy; optional fleet cap and policy-comparison sweep
-//! * `sweep`     — what-if sweeps over rate × expiration threshold (Fig. 5)
-//! * `emulate`   — run the platform emulator on a Poisson workload
-//! * `validate`  — simulator-vs-emulator validation (Figs. 6–8)
-//! * `compare`   — simulator vs the Markovian analytical baseline
-//! * `cost`      — developer/provider cost estimation (paper §4.4)
-//! * `identify`  — parameter identification from a trace CSV (paper §5.2)
-//! * `probe`     — expiration-threshold probing against the emulator
-//! * `figures`   — regenerate every paper table/figure (ASCII + CSV)
+//! The command table below ([`COMMANDS`]) is the single source of truth:
+//! dispatch, `simfaas help` and the unknown-command message all derive
+//! from it, so the three can never disagree (pinned by `tests/cli_smoke`).
 
 use anyhow::{bail, Context, Result};
 use simfaas::cli::Args;
-use simfaas::cost::{estimate, scale_to, FunctionConfig, PricingTable, Provider};
+use simfaas::cost::Provider;
 use simfaas::emulator::{EmulatorConfig, Platform};
 use simfaas::figures;
-use simfaas::output::json::results_to_json;
+use simfaas::fleet::PolicyKind;
 use simfaas::output::{ascii_histogram, ascii_lines, Series, Table};
-use simfaas::sim::{
-    InitialState, Process, ServerlessSimulator, ServerlessTemporalSimulator, SimConfig,
+use simfaas::scenario::{
+    run_scenario_to_string, CostSpec, ExperimentSpec, FleetScenario, KeepAliveSpec,
+    OutputFormat, ProcessSpec, ScenarioSpec,
 };
+use simfaas::sim::SimConfig;
 use simfaas::workload;
 use std::sync::Arc;
 
@@ -38,329 +36,298 @@ fn main() {
     }
 }
 
+/// One CLI subcommand: dispatch target plus its help text.
+struct Cmd {
+    name: &'static str,
+    summary: &'static str,
+    /// Flag reference lines listed under the summary in `simfaas help`.
+    flags: &'static str,
+    /// Maximum positional operands after the subcommand; extras fail fast
+    /// before the command runs (a typo'd flag value must not trigger a
+    /// full simulation with default parameters).
+    operands: usize,
+    run: fn(&Args) -> Result<()>,
+}
+
+/// The command registry — help, dispatch and the unknown-command message
+/// all derive from this table.
+const COMMANDS: &[Cmd] = &[
+    Cmd {
+        name: "run",
+        summary: "execute a declarative scenario file (examples/scenarios/)",
+        flags: "simfaas run <scenario.json> [--json] [--print-spec]",
+        operands: 1,
+        run: cmd_run,
+    },
+    Cmd {
+        name: "steady",
+        summary: "steady-state simulation (Table 1)",
+        flags: "--rate --warm --cold --threshold --max-concurrency\n--horizon --skip --seed --json",
+        operands: 0,
+        run: cmd_steady,
+    },
+    Cmd {
+        name: "temporal",
+        summary: "transient analysis with CI (Fig. 4)",
+        flags: "--replications --horizon --interval --warm-pool --seed",
+        operands: 0,
+        run: cmd_temporal,
+    },
+    Cmd {
+        name: "ensemble",
+        summary: "multi-threaded replication ensemble: mean ± 95% CI per metric",
+        flags: "--replications --threads (0 = all cores) --rate --warm --cold\n--threshold --horizon --skip --seed\n[--thresholds a,b,c  parallel expiration-threshold grid]",
+        operands: 0,
+        run: cmd_ensemble,
+    },
+    Cmd {
+        name: "fleet",
+        summary: "multi-function fleet simulation (synthetic Azure-style mix)",
+        flags: "--functions N --horizon --skip --seed --threads\n--policy fixed|adaptive --threshold (fixed)\n--range --bin (adaptive) --fleet-cap (0 = none)\n--provider --memory --top K --json\n[--compare-thresholds a,b,c  fixed grid vs adaptive sweep]",
+        operands: 0,
+        run: cmd_fleet,
+    },
+    Cmd {
+        name: "sweep",
+        summary: "what-if sweep (Fig. 5)",
+        flags: "--rates a,b,c --thresholds x,y --horizon --seed",
+        operands: 0,
+        run: cmd_sweep,
+    },
+    Cmd {
+        name: "emulate",
+        summary: "run the platform emulator",
+        flags: "--rate --horizon --scale --payload none|small|medium|large\n--threshold --csv out.csv",
+        operands: 0,
+        run: cmd_emulate,
+    },
+    Cmd {
+        name: "validate",
+        summary: "simulator vs emulator (Figs. 6-8)",
+        flags: "--rates a,b,c --emu-horizon --scale --sim-horizon --seed",
+        operands: 0,
+        run: cmd_validate,
+    },
+    Cmd {
+        name: "compare",
+        summary: "simulator vs Markovian analytical model",
+        flags: "--rate --service --threshold --horizon --markovian-expiration",
+        operands: 0,
+        run: cmd_compare,
+    },
+    Cmd {
+        name: "cost",
+        summary: "cost estimation (paper §4.4)",
+        flags: "--rate --memory --provider --horizon",
+        operands: 0,
+        run: cmd_cost,
+    },
+    Cmd {
+        name: "identify",
+        summary: "parameters from a trace CSV",
+        flags: "--trace file.csv",
+        operands: 0,
+        run: cmd_identify,
+    },
+    Cmd {
+        name: "probe",
+        summary: "expiration-threshold probe against the emulator",
+        flags: "--threshold --scale --step --max-gap",
+        operands: 0,
+        run: cmd_probe,
+    },
+    Cmd {
+        name: "figures",
+        summary: "regenerate paper tables/figures",
+        flags: "--all | --fig 1|3|4|5|6 (6 covers 6-8) [--out-dir results/]\n[--quick]",
+        operands: 0,
+        run: cmd_figures,
+    },
+];
+
+fn command_names() -> Vec<&'static str> {
+    COMMANDS.iter().map(|c| c.name).collect()
+}
+
+fn help_text() -> String {
+    let mut s = String::from(
+        "simfaas — performance simulator for serverless platforms\n\n\
+         usage: simfaas <command> [flags]\n\ncommands:\n",
+    );
+    for c in COMMANDS {
+        s.push_str(&format!("  {:<11}{}\n", c.name, c.summary));
+        for line in c.flags.lines() {
+            s.push_str(&format!("             {line}\n"));
+        }
+    }
+    s.push_str("  help       show this message\n");
+    s
+}
+
 fn run(argv: Vec<String>) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.command.as_deref() {
-        Some("steady") => cmd_steady(&args),
-        Some("temporal") => cmd_temporal(&args),
-        Some("ensemble") => cmd_ensemble(&args),
-        Some("fleet") => cmd_fleet(&args),
-        Some("sweep") => cmd_sweep(&args),
-        Some("emulate") => cmd_emulate(&args),
-        Some("validate") => cmd_validate(&args),
-        Some("compare") => cmd_compare(&args),
-        Some("cost") => cmd_cost(&args),
-        Some("identify") => cmd_identify(&args),
-        Some("probe") => cmd_probe(&args),
-        Some("figures") => cmd_figures(&args),
-        Some("help") | None => {
-            print!("{HELP}");
-            Ok(())
-        }
-        Some(other) => bail!("unknown command {other:?}; see `simfaas help`"),
-    }?;
+        Some("help") | None => print!("{}", help_text()),
+        Some(name) => match COMMANDS.iter().find(|c| c.name == name) {
+            Some(cmd) => {
+                if args.positional_count() > cmd.operands {
+                    bail!(
+                        "unexpected positional argument {:?}",
+                        args.positional(cmd.operands).unwrap()
+                    );
+                }
+                (cmd.run)(&args)?
+            }
+            None => bail!(
+                "unknown command {name:?}; expected one of: {}, help",
+                command_names().join(", ")
+            ),
+        },
+    }
     args.check_unknown()
 }
 
-const HELP: &str = r#"simfaas — performance simulator for serverless platforms
+/// Run a scenario and print its report (the single exit every
+/// simulation-side subcommand funnels through). By this point the
+/// translator has consumed every flag it understands, so unknown-flag
+/// detection runs *before* the simulation — a typo'd flag must not burn a
+/// paper-scale run on default parameters first.
+fn execute(args: &Args, spec: &ScenarioSpec) -> Result<()> {
+    args.check_unknown()?;
+    print!("{}", run_scenario_to_string(spec)?);
+    Ok(())
+}
 
-usage: simfaas <command> [flags]
+/// Flags → the shared workload/platform/run axes, with the historical
+/// `sim_cfg_from_args` defaults (the paper's Table 1 configuration).
+fn core_spec(args: &Args, name: &str) -> Result<ScenarioSpec> {
+    Ok(ScenarioSpec::new(name)
+        .with_arrival(ProcessSpec::ExpRate(args.get_f64("rate", 0.9)?))
+        .with_services(
+            ProcessSpec::ExpMean(args.get_f64("warm", figures::WARM_MEAN)?),
+            ProcessSpec::ExpMean(args.get_f64("cold", figures::COLD_MEAN)?),
+        )
+        .with_expiration_threshold(args.get_f64("threshold", 600.0)?)
+        .with_max_concurrency(args.get_usize("max-concurrency", 1000)?)
+        .with_horizon(args.get_f64("horizon", 1e6)?)
+        .with_skip_initial(args.get_f64("skip", 100.0)?)
+        .with_seed(args.get_u64("seed", 0x5EED)?))
+}
 
-commands:
-  steady     steady-state simulation (Table 1)
-             --rate --warm --cold --threshold --max-concurrency
-             --horizon --skip --seed --json
-  temporal   transient analysis with CI (Fig. 4)
-             --replications --horizon --interval --warm-pool --seed
-  ensemble   multi-threaded replication ensemble: mean ± 95% CI per metric
-             --replications --threads (0 = all cores) --rate --warm --cold
-             --threshold --horizon --skip --seed
-             [--thresholds a,b,c  parallel expiration-threshold grid]
-  fleet      multi-function fleet simulation (synthetic Azure-style mix)
-             --functions N --horizon --skip --seed --threads
-             --policy fixed|adaptive --threshold (fixed)
-             --range --bin (adaptive) --fleet-cap (0 = none)
-             --provider --memory --top K --json
-             [--compare-thresholds a,b,c  fixed grid vs adaptive sweep]
-  sweep      what-if sweep (Fig. 5)
-             --rates a,b,c --thresholds x,y --horizon --seed
-  emulate    run the platform emulator
-             --rate --horizon --scale --payload none|small|medium|large
-             --threshold --csv out.csv
-  validate   simulator vs emulator (Figs. 6-8)
-             --rates a,b,c --emu-horizon --scale --sim-horizon --seed
-  compare    simulator vs Markovian analytical model
-             --rate --service --threshold --horizon --markovian-expiration
-  cost       cost estimation  --rate --memory --provider --horizon --month
-  identify   parameters from a trace CSV  --trace file.csv
-  probe      expiration-threshold probe against the emulator
-             --threshold --scale --step --max-gap
-  figures    regenerate paper tables/figures
-             --all | --fig 1|3|4|5|6 (6 covers 6-8) [--out-dir results/]
-             [--quick]
-"#;
-
-fn sim_cfg_from_args(args: &Args) -> Result<SimConfig> {
-    let mut cfg = SimConfig::table1();
-    cfg.arrival = Process::exp_rate(args.get_f64("rate", 0.9)?);
-    cfg.warm_service = Process::exp_mean(args.get_f64("warm", figures::WARM_MEAN)?);
-    cfg.cold_service = Process::exp_mean(args.get_f64("cold", figures::COLD_MEAN)?);
-    cfg.expiration_threshold = args.get_f64("threshold", 600.0)?;
-    cfg.max_concurrency = args.get_usize("max-concurrency", 1000)?;
-    cfg.horizon = args.get_f64("horizon", 1e6)?;
-    cfg.skip_initial = args.get_f64("skip", 100.0)?;
-    cfg.seed = args.get_u64("seed", 0x5EED)?;
-    Ok(cfg)
+fn cmd_run(args: &Args) -> Result<()> {
+    let path = args
+        .positional(0)
+        .context("usage: simfaas run <scenario.json> [--json] [--print-spec]")?
+        .to_string();
+    let text =
+        std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+    let mut spec =
+        ScenarioSpec::from_json_str(&text).with_context(|| format!("parsing {path}"))?;
+    if args.get_bool("json") {
+        spec = spec.with_output(OutputFormat::Json);
+    }
+    if args.get_bool("print-spec") {
+        // Echo the canonical (defaults-resolved) form without running.
+        println!("{}", spec.to_json_string());
+        return Ok(());
+    }
+    execute(args, &spec)
 }
 
 fn cmd_steady(args: &Args) -> Result<()> {
-    let cfg = sim_cfg_from_args(args)?;
-    let results = ServerlessSimulator::new(cfg).run();
+    let mut spec = core_spec(args, "steady")?;
     if args.get_bool("json") {
-        println!("{}", results_to_json(&results));
-    } else {
-        print!("{results}");
+        spec = spec.with_output(OutputFormat::Json);
     }
-    Ok(())
+    execute(args, &spec)
 }
 
 fn cmd_temporal(args: &Args) -> Result<()> {
-    let mut cfg = sim_cfg_from_args(args)?;
-    cfg.horizon = args.get_f64("horizon", 10_000.0)?;
-    cfg.sample_interval = args.get_f64("interval", cfg.horizon / 100.0)?;
-    let reps = args.get_usize("replications", 10)?;
-    let warm_pool = args.get_usize("warm-pool", 0)?;
-    let init = if warm_pool > 0 {
-        InitialState::warm_pool(warm_pool)
-    } else {
-        InitialState::empty()
-    };
-    let res = ServerlessTemporalSimulator::new(cfg, init, reps).run();
-    let band = res.average_count_band();
-    let series = vec![
-        Series::new("mean", band.iter().map(|&(t, m, _)| (t, m)).collect()),
-        Series::new("mean+ci", band.iter().map(|&(t, m, h)| (t, m + h)).collect()),
-        Series::new("mean-ci", band.iter().map(|&(t, m, h)| (t, m - h)).collect()),
-    ];
-    println!("Average instance count over time ({reps} runs, 95% CI):");
-    print!("{}", ascii_lines(&series, 72, 18));
-    let (m, hw) = res.avg_server_count_ci;
-    println!("final avg server count: {m:.4} ± {hw:.4} (95% CI)");
-    let (pc, pch) = res.cold_start_prob_ci;
-    println!("cold start probability: {:.4}% ± {:.4}%", pc * 100.0, pch * 100.0);
-    Ok(())
+    // The transient default horizon is shorter than the steady-state one.
+    let horizon = args.get_f64("horizon", 10_000.0)?;
+    let spec = core_spec(args, "temporal")?
+        .with_horizon(horizon)
+        .with_experiment(ExperimentSpec::Temporal {
+            replications: args.get_usize("replications", 10)?,
+            sample_interval: Some(args.get_f64("interval", horizon / 100.0)?),
+            warm_pool: args.get_usize("warm-pool", 0)?,
+        });
+    execute(args, &spec)
 }
 
 fn cmd_ensemble(args: &Args) -> Result<()> {
-    use simfaas::sim::ensemble::{run_ensemble, EnsembleOpts};
-    let cfg = sim_cfg_from_args(args)?;
-    let replications = args.get_usize("replications", 10)?;
-    if replications == 0 {
-        bail!("--replications must be at least 1");
-    }
-    let opts = EnsembleOpts {
-        replications,
+    let spec = core_spec(args, "ensemble")?.with_experiment(ExperimentSpec::Ensemble {
+        replications: args.get_usize("replications", 10)?,
         threads: args.get_usize("threads", 0)?,
-        root_seed: cfg.seed,
-    };
-    let thresholds = args.get_f64_list("thresholds", &[])?;
-    if thresholds.is_empty() {
-        let res = run_ensemble(&cfg, &opts);
-        print!("{}", res.summary().to_table());
-    } else {
-        let out = simfaas::whatif::expiration_threshold_ensemble(&cfg, &thresholds, &opts);
-        println!(
-            "{} replications per threshold, 95% CI half-widths:",
-            opts.replications
-        );
-        let mut t = Table::new(vec![
-            "threshold s",
-            "p_cold %",
-            "avg servers",
-            "waste %",
-        ]);
-        for (th, res) in &out {
-            let p = res.ci_of(|r| r.cold_start_prob);
-            let s = res.ci_of(|r| r.avg_server_count);
-            let w = res.ci_of(|r| r.wasted_capacity);
-            t.row(vec![
-                format!("{th:.0}"),
-                format!("{:.4} ± {:.4}", p.mean * 100.0, p.ci_half * 100.0),
-                format!("{:.4} ± {:.4}", s.mean, s.ci_half),
-                format!("{:.3} ± {:.3}", w.mean * 100.0, w.ci_half * 100.0),
-            ]);
-        }
-        print!("{t}");
-    }
-    Ok(())
-}
-
-fn provider_from_args(args: &Args) -> Result<Provider> {
-    Ok(match args.get_str("provider", "aws").as_str() {
-        "aws" => Provider::AwsLambda,
-        "gcf" | "google" => Provider::GoogleCloudFunctions,
-        "azure" => Provider::AzureFunctions,
-        "ibm" => Provider::IbmCloudFunctions,
-        other => bail!("unknown provider {other:?}"),
-    })
+        thresholds: args.get_f64_list("thresholds", &[])?,
+    });
+    execute(args, &spec)
 }
 
 fn cmd_fleet(args: &Args) -> Result<()> {
-    use simfaas::fleet::{fleet_cost, FleetConfig, PolicySpec};
-    use simfaas::output::json::fleet_to_json;
-    use simfaas::workload::SyntheticTrace;
-
-    let n = args.get_usize("functions", 50)?;
-    if n == 0 {
-        bail!("--functions must be at least 1");
-    }
-    let horizon = args.get_f64("horizon", 86_400.0)?;
-    let skip = args.get_f64("skip", 0.0)?;
-    let seed = args.get_u64("seed", 0x5EED)?;
-    let threads = args.get_usize("threads", 0)?;
+    let mut fleet = FleetScenario::new(args.get_usize("functions", 50)?);
+    fleet.threads = args.get_usize("threads", 0)?;
     // Consume both policy parameter sets up front so e.g. `--threshold`
     // with `--policy adaptive` is ignored rather than an unknown flag.
     let threshold = args.get_f64("threshold", 600.0)?;
     let range = args.get_f64("range", 3_600.0)?;
     let bin = args.get_f64("bin", 60.0)?;
-    let adaptive = PolicySpec::hybrid_histogram(range, bin);
-    let policy = match args.get_str("policy", "fixed").as_str() {
-        "fixed" => PolicySpec::fixed(threshold),
-        "adaptive" => adaptive.clone(),
-        other => bail!("unknown policy {other:?} (expected fixed|adaptive)"),
+    let adaptive = KeepAliveSpec::hybrid_histogram(range, bin);
+    fleet.policy = match args.get_str("policy", "fixed").parse::<PolicyKind>()? {
+        PolicyKind::Fixed => KeepAliveSpec::fixed(threshold),
+        PolicyKind::Adaptive => adaptive.clone(),
     };
-
-    let mut rng = simfaas::sim::Rng::new(seed);
-    let trace = SyntheticTrace::generate(n, &mut rng);
-    let mut cfg = FleetConfig::from_trace(&trace, horizon, skip, seed, policy);
-    cfg.threads = threads;
     let cap = args.get_usize("fleet-cap", 0)?;
-    if cap > 0 {
-        cfg.fleet_max_concurrency = Some(cap);
+    fleet.fleet_cap = if cap > 0 { Some(cap) } else { None };
+    fleet.memory_mb = args.get_f64("memory", 128.0)?;
+    fleet.top_k = args.get_usize("top", 5)?;
+    fleet.compare_thresholds = args.get_f64_list("compare-thresholds", &[])?;
+    let comparison = !fleet.compare_thresholds.is_empty();
+    if comparison {
+        fleet.compare_extra = vec![adaptive];
     }
-    let memory = args.get_f64("memory", 128.0)?;
-    for f in &mut cfg.functions {
-        f.memory_mb = memory;
-    }
-    let pricing = PricingTable::for_provider(provider_from_args(args)?);
-    // Consume the reporting flags up front: they are no-ops in the
-    // comparison branch but must not read as unknown flags there.
+    let provider: Provider = args.get_str("provider", "aws").parse()?;
+    let memory_mb = fleet.memory_mb;
+    // Consume --json up front: it is a no-op in the comparison branch
+    // (which always rendered as a table) but must not read as unknown.
     let json_out = args.get_bool("json");
-    let top_k = args.get_usize("top", 5)?;
 
-    let compare = args.get_f64_list("compare-thresholds", &[])?;
-    if !compare.is_empty() {
-        let outcomes = simfaas::whatif::keepalive_policy_comparison(
-            &cfg,
-            &compare,
-            std::slice::from_ref(&adaptive),
-            &pricing,
-        );
-        println!(
-            "{} functions, horizon {horizon} s, seed {seed}: keep-alive policy comparison",
-            cfg.functions.len()
-        );
-        let mut t = Table::new(vec![
-            "policy",
-            "p_cold %",
-            "rejected",
-            "avg servers",
-            "waste %",
-            "dev cost $",
-            "infra cost $",
-        ]);
-        for o in &outcomes {
-            let a = &o.results.aggregate;
-            t.row(vec![
-                o.label.clone(),
-                format!("{:.4}", a.cold_start_prob * 100.0),
-                format!("{}", a.rejected_requests),
-                format!("{:.3}", a.avg_server_count),
-                format!("{:.2}", a.wasted_capacity * 100.0),
-                format!("{:.4}", o.cost.total.developer_total()),
-                format!("{:.4}", o.cost.total.provider_infra_cost),
-            ]);
-        }
-        print!("{t}");
-        return Ok(());
+    let mut spec = ScenarioSpec::new("fleet")
+        .with_horizon(args.get_f64("horizon", 86_400.0)?)
+        .with_skip_initial(args.get_f64("skip", 0.0)?)
+        .with_seed(args.get_u64("seed", 0x5EED)?)
+        .with_experiment(ExperimentSpec::Fleet(fleet))
+        .with_cost(CostSpec { provider, memory_mb, ..CostSpec::default() });
+    if json_out && !comparison {
+        spec = spec.with_output(OutputFormat::Json);
     }
-
-    let results = cfg.run();
-    let cost = fleet_cost(&cfg, &results, &pricing);
-    if json_out {
-        println!("{}", fleet_to_json(&results, Some(&cost)));
-        return Ok(());
-    }
-    println!(
-        "fleet: {} functions under {} (horizon {horizon} s, seed {seed})",
-        cfg.functions.len(),
-        cfg.policy.describe()
-    );
-    print!("{}", results.aggregate.to_table());
-    println!(
-        "developer cost ${:.4} (requests ${:.4} + runtime ${:.4}) | provider infra ${:.4}",
-        cost.total.developer_total(),
-        cost.total.request_charges,
-        cost.total.runtime_charges,
-        cost.total.provider_infra_cost
-    );
-    let top = top_k.min(results.per_function.len());
-    if top > 0 {
-        let mut order: Vec<usize> = (0..results.per_function.len()).collect();
-        order.sort_by(|&a, &b| {
-            results.per_function[b]
-                .total_requests
-                .cmp(&results.per_function[a].total_requests)
-        });
-        let mut t = Table::new(vec![
-            "function",
-            "requests",
-            "p_cold %",
-            "avg servers",
-            "billed s",
-        ]);
-        for &i in order.iter().take(top) {
-            let r = &results.per_function[i];
-            t.row(vec![
-                results.names[i].clone(),
-                format!("{}", r.total_requests),
-                format!("{:.4}", r.cold_start_prob * 100.0),
-                format!("{:.4}", r.avg_server_count),
-                format!("{:.1}", r.billed_instance_seconds),
-            ]);
-        }
-        println!("top {top} functions by request volume:");
-        print!("{t}");
-    }
-    Ok(())
+    execute(args, &spec)
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    let rates = args.get_f64_list("rates", &[0.1, 0.3, 0.5, 0.9, 1.5, 2.5])?;
-    let thresholds = args.get_f64_list("thresholds", &[120.0, 300.0, 600.0, 1200.0])?;
-    let horizon = args.get_f64("horizon", 200_000.0)?;
-    let seed = args.get_u64("seed", 0x5EED)?;
-    let out = figures::fig5_sweep(&rates, &thresholds, horizon, seed);
-    let mut table = Table::new(
-        std::iter::once("rate".to_string())
-            .chain(out.iter().map(|(th, _)| format!("p_cold@{th}s")))
-            .collect::<Vec<_>>(),
-    );
-    for (i, &rate) in rates.iter().enumerate() {
-        let mut row = vec![rate];
-        for (_, series) in &out {
-            row.push(series[i].1 * 100.0);
-        }
-        table.row_f64(&row, 4);
-    }
-    println!("Cold start probability (%) vs arrival rate x expiration threshold:");
-    print!("{table}");
-    let series: Vec<Series> = out
-        .iter()
-        .map(|(th, s)| Series::new(format!("{th} s"), s.clone()))
-        .collect();
-    print!("{}", ascii_lines(&series, 72, 18));
-    Ok(())
+    let spec = ScenarioSpec::new("sweep")
+        .with_horizon(args.get_f64("horizon", 200_000.0)?)
+        .with_seed(args.get_u64("seed", 0x5EED)?)
+        .with_experiment(ExperimentSpec::Sweep {
+            rates: args.get_f64_list("rates", &[0.1, 0.3, 0.5, 0.9, 1.5, 2.5])?,
+            thresholds: args.get_f64_list("thresholds", &[120.0, 300.0, 600.0, 1200.0])?,
+        });
+    execute(args, &spec)
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let spec = core_spec(args, "compare")?.with_experiment(ExperimentSpec::Compare {
+        service_mean: args.get_f64("service", figures::WARM_MEAN)?,
+        markovian_expiration: args.get_bool("markovian-expiration"),
+    });
+    execute(args, &spec)
+}
+
+fn cmd_cost(args: &Args) -> Result<()> {
+    let provider: Provider = args.get_str("provider", "aws").parse()?;
+    let spec = core_spec(args, "cost")?
+        .with_cost(CostSpec::monthly(provider, args.get_f64("memory", 128.0)?));
+    execute(args, &spec)
 }
 
 fn emulator_cfg_from_args(
@@ -380,13 +347,7 @@ fn emulator_cfg_from_args(
     let pool = match payload.as_str() {
         "none" => None,
         name => {
-            let kind = match name {
-                "small" => PayloadKind::Small,
-                "medium" => PayloadKind::Medium,
-                "large" => PayloadKind::Large,
-                other => bail!("unknown payload {other:?}"),
-            };
-            cfg.payload = Some(kind);
+            cfg.payload = Some(name.parse::<PayloadKind>()?);
             cfg.payload_reps = args.get_u64("payload-reps", 1)? as u32;
             cfg.app_init_reps = args.get_u64("app-init-reps", 2)? as u32;
             let workers = args.get_usize("pool-workers", 4)?;
@@ -405,6 +366,9 @@ fn cmd_emulate(args: &Args) -> Result<()> {
     let horizon = args.get_f64("horizon", 10_000.0)?;
     let seed = args.get_u64("seed", 7)?;
     let skip = args.get_f64("skip", 300.0)?;
+    // All flags consumed — surface typos before the (real-time) emulation.
+    let csv_path = args.get("csv").map(str::to_string);
+    args.check_unknown()?;
     let mut rng = simfaas::sim::Rng::new(seed);
     let w = workload::poisson(rate, horizon, &mut rng);
     println!(
@@ -429,8 +393,7 @@ fn cmd_emulate(args: &Args) -> Result<()> {
     t.row(vec!["instances".to_string(), format!("{}", res.instances.len())]);
     t.row(vec!["wall time".to_string(), format!("{wall:.2} s")]);
     print!("{t}");
-    if let Some(path) = args.get("csv") {
-        let path = path.to_string();
+    if let Some(path) = csv_path {
         let f = std::fs::File::create(&path).with_context(|| format!("creating {path}"))?;
         simfaas::trace::write_csv(std::io::BufWriter::new(f), &res.records)?;
         println!("trace written to {path}");
@@ -447,6 +410,7 @@ fn cmd_validate(args: &Args) -> Result<()> {
         skip: args.get_f64("skip", 600.0)?,
         seed: args.get_u64("seed", 0xF16)?,
     };
+    args.check_unknown()?;
     let rows = figures::validation_rows(&rates, &opts);
     print_validation(&rows);
     Ok(())
@@ -484,69 +448,6 @@ fn print_validation(rows: &[figures::ValidationRow]) {
     println!("(paper: 12.75%, 3.43%, 0.17%)");
 }
 
-fn cmd_compare(args: &Args) -> Result<()> {
-    use simfaas::analytical;
-    let mut cfg = sim_cfg_from_args(args)?;
-    let service = args.get_f64("service", figures::WARM_MEAN)?;
-    cfg.cold_service = Process::exp_mean(service);
-    cfg.warm_service = Process::exp_mean(service);
-    let report = if args.get_bool("markovian-expiration") {
-        analytical::compare_steady_state_markovian(&cfg, service)
-    } else {
-        analytical::compare_steady_state(&cfg, service)
-    };
-    print!("{}", report.to_table());
-    Ok(())
-}
-
-fn cmd_cost(args: &Args) -> Result<()> {
-    let cfg = sim_cfg_from_args(args)?;
-    let results = ServerlessSimulator::new(cfg).run();
-    let provider = provider_from_args(args)?;
-    let f = FunctionConfig::new(args.get_f64("memory", 128.0)?);
-    let est = estimate(&results, &f, &PricingTable::for_provider(provider));
-    let month = scale_to(&est, 30.0 * 86_400.0);
-    let mut t = Table::new(vec!["item", "per window", "per 30 days"]);
-    t.row(vec![
-        "requests".to_string(),
-        format!("{:.0}", est.requests),
-        format!("{:.0}", month.requests),
-    ]);
-    t.row(vec![
-        "GB-seconds".to_string(),
-        format!("{:.1}", est.gb_seconds),
-        format!("{:.1}", month.gb_seconds),
-    ]);
-    t.row(vec![
-        "request charges".to_string(),
-        format!("${:.4}", est.request_charges),
-        format!("${:.2}", month.request_charges),
-    ]);
-    t.row(vec![
-        "runtime charges".to_string(),
-        format!("${:.4}", est.runtime_charges),
-        format!("${:.2}", month.runtime_charges),
-    ]);
-    t.row(vec![
-        "developer total".to_string(),
-        format!("${:.4}", est.developer_total()),
-        format!("${:.2}", month.developer_total()),
-    ]);
-    t.row(vec![
-        "provider infra cost".to_string(),
-        format!("${:.4}", est.provider_infra_cost),
-        format!("${:.2}", month.provider_infra_cost),
-    ]);
-    print!("{t}");
-    println!(
-        "cold start prob {:.4}% | avg servers {:.3} | wasted {:.1}%",
-        results.cold_start_prob * 100.0,
-        results.avg_server_count,
-        results.wasted_capacity * 100.0
-    );
-    Ok(())
-}
-
 fn cmd_identify(args: &Args) -> Result<()> {
     let path = args.get("trace").context("--trace <file.csv> is required")?.to_string();
     let f = std::fs::File::open(&path).with_context(|| format!("opening {path}"))?;
@@ -574,6 +475,7 @@ fn cmd_probe(args: &Args) -> Result<()> {
     cfg.tick = 1.0;
     let step = args.get_f64("step", 60.0)?;
     let max_gap = args.get_f64("max-gap", 1_500.0)?;
+    args.check_unknown()?;
     println!(
         "probing emulator (true threshold {} s) with step {} s...",
         cfg.expiration_threshold, step
@@ -591,6 +493,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
     std::fs::create_dir_all(&out_dir)?;
     let seed = args.get_u64("seed", 0x5EED)?;
     let quick = args.get_bool("quick");
+    args.check_unknown()?;
     let horizon = if quick { 100_000.0 } else { 1e6 };
 
     if all || which == 0 {

@@ -1,6 +1,10 @@
-//! Minimal JSON writer (no serde in this environment). Only what the CLI
-//! and benches need: objects, arrays, numbers, strings, bools.
+//! Minimal JSON reader/writer (no serde in this environment). The writer
+//! covers what the CLI and benches need: objects, arrays, numbers, strings,
+//! bools. [`JsonValue::parse`] is the reader half — strict JSON with full
+//! string escapes — added for the declarative scenario layer
+//! (`crate::scenario`), which deserializes `ScenarioSpec` files through it.
 
+use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
@@ -18,6 +22,79 @@ pub enum JsonValue {
 impl JsonValue {
     pub fn object() -> JsonValue {
         JsonValue::Object(BTreeMap::new())
+    }
+
+    /// Parse JSON text. Strict grammar (no comments, no trailing commas);
+    /// numbers parse as `f64` (JSON has no integer type — see
+    /// [`JsonValue::as_u64`] for the exact-integer window); duplicate
+    /// object keys keep the last value. Errors carry the byte offset.
+    pub fn parse(input: &str) -> Result<JsonValue> {
+        let mut p = Parser { bytes: input.as_bytes(), pos: 0, depth: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            bail!("trailing characters after JSON value at byte {}", p.pos);
+        }
+        Ok(v)
+    }
+
+    /// Object member lookup (None on non-objects and missing keys).
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Object(map) => map.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Number(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Exact non-negative integer, if this is one. Numbers ride as `f64`,
+    /// so only integers strictly below 2^53 are unambiguous; 2^53 itself
+    /// is rejected (the literal 2^53 + 1 also rounds to it, so accepting
+    /// it would silently corrupt that neighbour), as is anything larger,
+    /// fractional, or negative.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            JsonValue::Number(n)
+                if *n >= 0.0 && n.fract() == 0.0 && *n < 9_007_199_254_740_992.0 =>
+            {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            JsonValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::String(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Array(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&BTreeMap<String, JsonValue>> {
+        match self {
+            JsonValue::Object(map) => Some(map),
+            _ => None,
+        }
     }
 
     /// Insert into an object (panics on non-objects).
@@ -93,6 +170,317 @@ impl std::fmt::Display for JsonValue {
         self.write(&mut s);
         f.write_str(&s)
     }
+}
+
+/// Recursion ceiling for nested arrays/objects: descent is one stack
+/// frame per level, so an unbounded input (e.g. 100k `[`s) would abort
+/// the process with a stack overflow instead of a parse error.
+const MAX_DEPTH: usize = 128;
+
+/// Recursive-descent JSON parser over the input bytes. The input comes in
+/// as `&str`, so raw string segments are valid UTF-8 by construction (the
+/// scanner only splits at ASCII bytes).
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    /// Current container nesting level (bounded by [`MAX_DEPTH`]).
+    depth: usize,
+}
+
+impl Parser<'_> {
+    /// Enter a nested container; the matching decrement happens in
+    /// [`array`](Self::array)/[`object`](Self::object) (errors abandon
+    /// the whole parse, so no unwinding bookkeeping is needed).
+    fn descend(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            bail!("nesting deeper than {MAX_DEPTH} levels at byte {}", self.pos);
+        }
+        Ok(())
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.bytes.get(self.pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        match self.peek() {
+            Some(c) if c == b => {
+                self.pos += 1;
+                Ok(())
+            }
+            Some(c) => bail!(
+                "expected {:?} at byte {}, got {:?}",
+                b as char,
+                self.pos,
+                c as char
+            ),
+            None => bail!("expected {:?} at byte {}, got end of input", b as char, self.pos),
+        }
+    }
+
+    fn literal(&mut self, word: &str) -> Result<()> {
+        let end = self.pos + word.len();
+        if self.bytes.len() >= end && &self.bytes[self.pos..end] == word.as_bytes() {
+            self.pos = end;
+            Ok(())
+        } else {
+            bail!("invalid token at byte {} (expected {word:?})", self.pos)
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonValue> {
+        self.skip_ws();
+        match self.peek() {
+            None => bail!("unexpected end of input at byte {}", self.pos),
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(JsonValue::String(self.string()?)),
+            Some(b't') => {
+                self.literal("true")?;
+                Ok(JsonValue::Bool(true))
+            }
+            Some(b'f') => {
+                self.literal("false")?;
+                Ok(JsonValue::Bool(false))
+            }
+            Some(b'n') => {
+                self.literal("null")?;
+                Ok(JsonValue::Null)
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => bail!("unexpected character {:?} at byte {}", c as char, self.pos),
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonValue> {
+        let start = self.pos;
+        while matches!(
+            self.bytes.get(self.pos),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        ) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii number bytes");
+        // Enforce the RFC 8259 grammar before handing to f64's (laxer)
+        // FromStr — "01", "1." and "-.5" must fail like any JSON parser.
+        if !is_json_number(text) {
+            bail!("invalid number {text:?} at byte {start}");
+        }
+        let n: f64 = text
+            .parse()
+            .with_context(|| format!("invalid number {text:?} at byte {start}"))?;
+        if !n.is_finite() {
+            bail!("number {text:?} at byte {start} overflows f64");
+        }
+        Ok(JsonValue::Number(n))
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let end = self.pos + 4;
+        if self.bytes.len() < end {
+            bail!("truncated \\u escape at byte {}", self.pos);
+        }
+        let text = std::str::from_utf8(&self.bytes[self.pos..end])
+            .ok()
+            .filter(|t| t.bytes().all(|b| b.is_ascii_hexdigit()))
+            .with_context(|| format!("invalid \\u escape at byte {}", self.pos))?;
+        self.pos = end;
+        Ok(u32::from_str_radix(text, 16).expect("validated hex digits"))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let start = self.pos;
+            while let Some(&c) = self.bytes.get(self.pos) {
+                if c == b'"' || c == b'\\' || c < 0x20 {
+                    break;
+                }
+                self.pos += 1;
+            }
+            out.push_str(
+                std::str::from_utf8(&self.bytes[start..self.pos])
+                    .expect("input is UTF-8 and the scan splits at ASCII bytes"),
+            );
+            match self.peek() {
+                None => bail!("unterminated string at byte {}", self.pos),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self
+                        .peek()
+                        .with_context(|| format!("truncated escape at byte {}", self.pos))?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let code = if (0xD800..=0xDBFF).contains(&hi) {
+                                self.expect(b'\\')?;
+                                self.expect(b'u')?;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..=0xDFFF).contains(&lo) {
+                                    bail!(
+                                        "invalid surrogate pair before byte {}",
+                                        self.pos
+                                    );
+                                }
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else {
+                                hi
+                            };
+                            out.push(char::from_u32(code).with_context(|| {
+                                format!("invalid \\u code point before byte {}", self.pos)
+                            })?);
+                        }
+                        other => bail!(
+                            "invalid escape \\{} at byte {}",
+                            other as char,
+                            self.pos - 1
+                        ),
+                    }
+                }
+                Some(c) => bail!(
+                    "unescaped control character 0x{c:02x} in string at byte {}",
+                    self.pos
+                ),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<JsonValue> {
+        self.descend()?;
+        let v = self.array_body();
+        self.depth -= 1;
+        v
+    }
+
+    fn array_body(&mut self) -> Result<JsonValue> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(JsonValue::Array(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Array(items));
+                }
+                Some(c) => bail!(
+                    "expected ',' or ']' at byte {}, got {:?}",
+                    self.pos,
+                    c as char
+                ),
+                None => bail!("unterminated array at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<JsonValue> {
+        self.descend()?;
+        let v = self.object_body();
+        self.depth -= 1;
+        v
+    }
+
+    fn object_body(&mut self) -> Result<JsonValue> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(JsonValue::Object(map));
+        }
+        loop {
+            self.skip_ws();
+            if self.peek() != Some(b'"') {
+                bail!("expected string object key at byte {}", self.pos);
+            }
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Object(map));
+                }
+                Some(c) => bail!(
+                    "expected ',' or '}}' at byte {}, got {:?}",
+                    self.pos,
+                    c as char
+                ),
+                None => bail!("unterminated object at byte {}", self.pos),
+            }
+        }
+    }
+}
+
+/// RFC 8259 number grammar: `-? int frac? exp?` with `int = 0 | [1-9][0-9]*`.
+fn is_json_number(s: &str) -> bool {
+    let b = s.as_bytes();
+    let mut i = 0;
+    if b.get(i) == Some(&b'-') {
+        i += 1;
+    }
+    match b.get(i) {
+        Some(b'0') => i += 1,
+        Some(b'1'..=b'9') => {
+            while matches!(b.get(i), Some(b'0'..=b'9')) {
+                i += 1;
+            }
+        }
+        _ => return false,
+    }
+    if b.get(i) == Some(&b'.') {
+        i += 1;
+        if !matches!(b.get(i), Some(b'0'..=b'9')) {
+            return false;
+        }
+        while matches!(b.get(i), Some(b'0'..=b'9')) {
+            i += 1;
+        }
+    }
+    if matches!(b.get(i), Some(b'e' | b'E')) {
+        i += 1;
+        if matches!(b.get(i), Some(b'+' | b'-')) {
+            i += 1;
+        }
+        if !matches!(b.get(i), Some(b'0'..=b'9')) {
+            return false;
+        }
+        while matches!(b.get(i), Some(b'0'..=b'9')) {
+            i += 1;
+        }
+    }
+    i == b.len()
 }
 
 impl From<f64> for JsonValue {
@@ -254,6 +642,130 @@ mod tests {
         assert!(j.contains("\"cold_start_prob\""));
         assert!(j.contains("\"cost\":{"));
         assert!(j.contains("\"developer_total\""));
+    }
+
+    #[test]
+    fn parse_scalars_and_containers() {
+        assert_eq!(JsonValue::parse("1.5").unwrap(), JsonValue::Number(1.5));
+        assert_eq!(JsonValue::parse(" -2e3 ").unwrap(), JsonValue::Number(-2000.0));
+        assert_eq!(JsonValue::parse("true").unwrap(), JsonValue::Bool(true));
+        assert_eq!(JsonValue::parse("null").unwrap(), JsonValue::Null);
+        assert_eq!(
+            JsonValue::parse(r#"[1, 2.5, "x"]"#).unwrap(),
+            JsonValue::Array(vec![
+                JsonValue::Number(1.0),
+                JsonValue::Number(2.5),
+                JsonValue::String("x".to_string()),
+            ])
+        );
+        let v = JsonValue::parse(r#"{ "a": [true, {}], "b": "c" }"#).unwrap();
+        assert_eq!(v.get("b").and_then(JsonValue::as_str), Some("c"));
+        assert_eq!(v.get("a").and_then(JsonValue::as_array).map(<[_]>::len), Some(2));
+    }
+
+    #[test]
+    fn parse_string_escapes() {
+        assert_eq!(
+            JsonValue::parse(r#""a\"b\\c\n\tAé""#).unwrap(),
+            JsonValue::String("a\"b\\c\n\tA\u{e9}".to_string())
+        );
+        // Surrogate pair: U+1F600 via \u escapes.
+        assert_eq!(
+            JsonValue::parse("\"\\ud83d\\ude00\"").unwrap(),
+            JsonValue::String("\u{1F600}".to_string())
+        );
+        // Non-ASCII passes through raw.
+        assert_eq!(
+            JsonValue::parse("\"héllo\"").unwrap(),
+            JsonValue::String("héllo".to_string())
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        for bad in [
+            "",
+            "{",
+            "[1,",
+            "{\"a\" 1}",
+            "{\"a\":}",
+            "{a:1}",
+            "tru",
+            "1.5x",
+            "\"unterminated",
+            "\"bad \\q escape\"",
+            "[1] trailing",
+            "nan",
+            "1e999",
+            // Laxer-than-JSON numeric forms f64::from_str would accept.
+            "01",
+            "1.",
+            "[-.5]",
+            "[1.5e]",
+        ] {
+            let err = JsonValue::parse(bad);
+            assert!(err.is_err(), "accepted {bad:?}");
+            assert!(
+                format!("{:#}", err.unwrap_err()).contains("byte"),
+                "error for {bad:?} lacks a byte offset"
+            );
+        }
+    }
+
+    #[test]
+    fn deep_nesting_is_an_error_not_a_stack_overflow() {
+        // Deeply nested containers must hit the depth ceiling cleanly.
+        let deep = "[".repeat(100_000);
+        let err = format!("{:#}", JsonValue::parse(&deep).unwrap_err());
+        assert!(err.contains("nesting"), "{err}");
+        // Sibling containers at the same level do not accumulate depth.
+        let wide = format!("[{}]", vec!["[[]]"; 64].join(","));
+        JsonValue::parse(&wide).unwrap();
+        // And 64 levels is comfortably within the limit.
+        let ok = format!("{}{}", "[".repeat(64), "]".repeat(64));
+        JsonValue::parse(&ok).unwrap();
+    }
+
+    #[test]
+    fn parse_roundtrips_serializer_output() {
+        // Writer → parser is the identity on everything the crate emits
+        // (NaN excepted: it serializes as null by design).
+        let mut o = JsonValue::object();
+        o.set("pi", 3.141592653589793)
+            .set("n", 1e6)
+            .set("neg", -0.25)
+            .set("flag", true)
+            .set("name", "sim\\faas \"quoted\"\n")
+            .set("items", vec![1.0, 2.0, 4.5])
+            .set("nested", {
+                let mut n = JsonValue::object();
+                n.set("empty", JsonValue::Array(vec![])).set("z", JsonValue::Null);
+                n
+            });
+        let text = o.to_string();
+        assert_eq!(JsonValue::parse(&text).unwrap(), o);
+    }
+
+    #[test]
+    fn integer_accessor_window() {
+        assert_eq!(JsonValue::Number(42.0).as_u64(), Some(42));
+        assert_eq!(JsonValue::Number(0.0).as_u64(), Some(0));
+        assert_eq!(JsonValue::Number(1.5).as_u64(), None);
+        assert_eq!(JsonValue::Number(-1.0).as_u64(), None);
+        assert_eq!(JsonValue::Number(1e300).as_u64(), None);
+        assert_eq!(JsonValue::from("7").as_u64(), None);
+        // 2^53 - 1 is the last unambiguous integer; 2^53 is rejected
+        // because the literal 2^53 + 1 also rounds to it.
+        assert_eq!(
+            JsonValue::Number(9_007_199_254_740_991.0).as_u64(),
+            Some(9_007_199_254_740_991)
+        );
+        assert_eq!(JsonValue::Number(9_007_199_254_740_992.0).as_u64(), None);
+        assert_eq!(
+            JsonValue::parse("9007199254740993").unwrap().as_u64(),
+            None,
+            "a rounded literal must not silently become a different integer"
+        );
     }
 
     #[test]

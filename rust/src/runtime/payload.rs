@@ -55,6 +55,21 @@ impl PayloadKind {
     }
 }
 
+/// Shared string→payload parsing for the CLI (`--payload`); the sentinel
+/// "none" (no payload) is the caller's concern, not a `PayloadKind`.
+impl std::str::FromStr for PayloadKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "small" => PayloadKind::Small,
+            "medium" => PayloadKind::Medium,
+            "large" => PayloadKind::Large,
+            other => anyhow::bail!("unknown payload {other:?} (expected small|medium|large)"),
+        })
+    }
+}
+
 /// Histogram analysis graph geometry (mirrors `model.HIST_N/HIST_NBINS`).
 pub const HIST_N: usize = 131_072;
 pub const HIST_NBINS: usize = 64;

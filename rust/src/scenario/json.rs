@@ -1,0 +1,851 @@
+//! `ScenarioSpec` ↔ JSON, built on [`crate::output::json::JsonValue`].
+//!
+//! The schema is documented in DESIGN.md §Scenario API; bundled examples
+//! live under `examples/scenarios/`. Reader philosophy matches the CLI's
+//! flag handling: every field is optional with the documented (Table 1 /
+//! historical CLI) default, **unknown keys are errors** — the same
+//! typo-catching contract `cli::Args::check_unknown` gives flags — and all
+//! error messages name the offending path.
+
+use super::spec::{
+    CostSpec, ExperimentSpec, FleetScenario, KeepAliveSpec, OutputFormat, OutputSpec,
+    PlatformSpec, ProcessSpec, RunSpec, ScenarioSpec, WorkloadSpec,
+};
+use crate::cost::Provider;
+use crate::fleet::PolicyKind;
+use crate::output::json::JsonValue;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+type Obj = BTreeMap<String, JsonValue>;
+
+fn as_obj<'a>(v: &'a JsonValue, what: &str) -> Result<&'a Obj> {
+    v.as_object().with_context(|| format!("{what} must be a JSON object"))
+}
+
+/// Reject unknown keys (catches typos the defaults would otherwise
+/// silently swallow — the JSON analogue of an unknown CLI flag).
+fn check_keys(o: &Obj, allowed: &[&str], what: &str) -> Result<()> {
+    for k in o.keys() {
+        if !allowed.contains(&k.as_str()) {
+            bail!("{what}: unknown key {k:?} (expected one of: {})", allowed.join(", "));
+        }
+    }
+    Ok(())
+}
+
+fn f64_field(o: &Obj, key: &str, what: &str, default: f64) -> Result<f64> {
+    match o.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_f64().with_context(|| format!("{what}.{key} must be a number")),
+    }
+}
+
+fn req_f64(o: &Obj, key: &str, what: &str) -> Result<f64> {
+    o.get(key)
+        .with_context(|| format!("{what}.{key} is required"))?
+        .as_f64()
+        .with_context(|| format!("{what}.{key} must be a number"))
+}
+
+fn u64_field(o: &Obj, key: &str, what: &str, default: u64) -> Result<u64> {
+    match o.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_u64()
+            .with_context(|| format!("{what}.{key} must be a non-negative integer")),
+    }
+}
+
+fn usize_field(o: &Obj, key: &str, what: &str, default: usize) -> Result<usize> {
+    Ok(u64_field(o, key, what, default as u64)? as usize)
+}
+
+fn bool_field(o: &Obj, key: &str, what: &str, default: bool) -> Result<bool> {
+    match o.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_bool().with_context(|| format!("{what}.{key} must be a boolean")),
+    }
+}
+
+fn str_field<'a>(o: &'a Obj, key: &str, what: &str) -> Result<&'a str> {
+    o.get(key)
+        .with_context(|| format!("{what}.{key} is required"))?
+        .as_str()
+        .with_context(|| format!("{what}.{key} must be a string"))
+}
+
+fn f64_list(v: &JsonValue, what: &str) -> Result<Vec<f64>> {
+    v.as_array()
+        .with_context(|| format!("{what} must be an array of numbers"))?
+        .iter()
+        .map(|x| x.as_f64().with_context(|| format!("{what} must contain only numbers")))
+        .collect()
+}
+
+fn f64_list_field(o: &Obj, key: &str, what: &str) -> Result<Vec<f64>> {
+    match o.get(key) {
+        None => Ok(Vec::new()),
+        Some(v) => f64_list(v, &format!("{what}.{key}")),
+    }
+}
+
+/// Largest integer the reader accepts as a JSON number (2^53 - 1; matches
+/// [`JsonValue::as_u64`]'s window — 2^53 itself is ambiguous with 2^53+1
+/// after f64 rounding, so it goes to the string form too).
+const JSON_EXACT_MAX: u64 = 9_007_199_254_740_991;
+
+/// `run.seed` is a full u64. Values above 2^53 exceed JSON's
+/// exact-integer window, so the writer emits them as decimal strings and
+/// the reader accepts both forms — keeping `from_json` the exact inverse
+/// of `to_json` over the whole seed range.
+fn seed_value(v: &JsonValue) -> Result<u64> {
+    if let Some(n) = v.as_u64() {
+        return Ok(n);
+    }
+    if let Some(s) = v.as_str() {
+        return s
+            .parse::<u64>()
+            .with_context(|| format!("run.seed string must be a u64 integer, got {s:?}"));
+    }
+    bail!("run.seed must be a non-negative integer (or a decimal string for seeds above 2^53)")
+}
+
+fn f64_pair(o: &Obj, key: &str, what: &str) -> Result<[f64; 2]> {
+    let xs = f64_list(
+        o.get(key).with_context(|| format!("{what}.{key} is required"))?,
+        &format!("{what}.{key}"),
+    )?;
+    match xs.as_slice() {
+        [a, b] => Ok([*a, *b]),
+        _ => bail!("{what}.{key} must be an array of exactly 2 numbers"),
+    }
+}
+
+// ---------------------------------------------------------------- processes
+
+fn process_to_json(p: &ProcessSpec) -> JsonValue {
+    let mut o = JsonValue::object();
+    match p {
+        ProcessSpec::ExpRate(r) => {
+            o.set("type", "exp").set("rate", *r);
+        }
+        ProcessSpec::ExpMean(m) => {
+            o.set("type", "exp").set("mean", *m);
+        }
+        ProcessSpec::Constant(v) => {
+            o.set("type", "const").set("value", *v);
+        }
+        ProcessSpec::Gaussian { mean, std } => {
+            o.set("type", "gaussian").set("mean", *mean).set("std", *std);
+        }
+        ProcessSpec::LogNormal { mean, cv } => {
+            o.set("type", "lognormal").set("mean", *mean).set("cv", *cv);
+        }
+        ProcessSpec::Gamma { shape, scale } => {
+            o.set("type", "gamma").set("shape", *shape).set("scale", *scale);
+        }
+        ProcessSpec::Weibull { shape, scale } => {
+            o.set("type", "weibull").set("shape", *shape).set("scale", *scale);
+        }
+        ProcessSpec::Pareto { x_m, alpha } => {
+            o.set("type", "pareto").set("x_m", *x_m).set("alpha", *alpha);
+        }
+        ProcessSpec::Empirical(samples) => {
+            o.set("type", "empirical").set("samples", samples.clone());
+        }
+        ProcessSpec::Mmpp { rates, switch } => {
+            o.set("type", "mmpp")
+                .set("rates", rates.to_vec())
+                .set("switch", switch.to_vec());
+        }
+    }
+    o
+}
+
+fn process_from_json(v: &JsonValue, what: &str) -> Result<ProcessSpec> {
+    let o = as_obj(v, what)?;
+    let tag = str_field(o, "type", what)?;
+    let spec = match tag {
+        "exp" => {
+            check_keys(o, &["type", "rate", "mean"], what)?;
+            match (o.get("rate"), o.get("mean")) {
+                (Some(r), None) => ProcessSpec::ExpRate(
+                    r.as_f64().with_context(|| format!("{what}.rate must be a number"))?,
+                ),
+                (None, Some(m)) => ProcessSpec::ExpMean(
+                    m.as_f64().with_context(|| format!("{what}.mean must be a number"))?,
+                ),
+                _ => bail!("{what}: exp needs exactly one of \"rate\" or \"mean\""),
+            }
+        }
+        "const" => {
+            check_keys(o, &["type", "value"], what)?;
+            ProcessSpec::Constant(req_f64(o, "value", what)?)
+        }
+        "gaussian" => {
+            check_keys(o, &["type", "mean", "std"], what)?;
+            ProcessSpec::Gaussian { mean: req_f64(o, "mean", what)?, std: req_f64(o, "std", what)? }
+        }
+        "lognormal" => {
+            check_keys(o, &["type", "mean", "cv"], what)?;
+            ProcessSpec::LogNormal { mean: req_f64(o, "mean", what)?, cv: req_f64(o, "cv", what)? }
+        }
+        "gamma" => {
+            check_keys(o, &["type", "shape", "scale"], what)?;
+            ProcessSpec::Gamma {
+                shape: req_f64(o, "shape", what)?,
+                scale: req_f64(o, "scale", what)?,
+            }
+        }
+        "weibull" => {
+            check_keys(o, &["type", "shape", "scale"], what)?;
+            ProcessSpec::Weibull {
+                shape: req_f64(o, "shape", what)?,
+                scale: req_f64(o, "scale", what)?,
+            }
+        }
+        "pareto" => {
+            check_keys(o, &["type", "x_m", "alpha"], what)?;
+            ProcessSpec::Pareto { x_m: req_f64(o, "x_m", what)?, alpha: req_f64(o, "alpha", what)? }
+        }
+        "empirical" => {
+            check_keys(o, &["type", "samples"], what)?;
+            ProcessSpec::Empirical(f64_list(
+                o.get("samples").with_context(|| format!("{what}.samples is required"))?,
+                &format!("{what}.samples"),
+            )?)
+        }
+        "mmpp" => {
+            check_keys(o, &["type", "rates", "switch"], what)?;
+            ProcessSpec::Mmpp {
+                rates: f64_pair(o, "rates", what)?,
+                switch: f64_pair(o, "switch", what)?,
+            }
+        }
+        other => bail!(
+            "{what}.type: unknown process {other:?} (expected \
+             exp|const|gaussian|lognormal|gamma|weibull|pareto|empirical|mmpp)"
+        ),
+    };
+    Ok(spec)
+}
+
+// ------------------------------------------------------------------ policy
+
+fn policy_to_json(p: &KeepAliveSpec) -> JsonValue {
+    let mut o = JsonValue::object();
+    match p {
+        KeepAliveSpec::Fixed { threshold } => {
+            o.set("type", "fixed").set("threshold", *threshold);
+        }
+        KeepAliveSpec::Stochastic { process } => {
+            o.set("type", "stochastic").set("process", process_to_json(process));
+        }
+        KeepAliveSpec::HybridHistogram {
+            range,
+            bin_len,
+            tail,
+            margin,
+            min_samples,
+            oob_threshold,
+        } => {
+            o.set("type", "adaptive")
+                .set("range", *range)
+                .set("bin_len", *bin_len)
+                .set("tail", *tail)
+                .set("margin", *margin)
+                .set("min_samples", *min_samples)
+                .set("oob_threshold", *oob_threshold);
+        }
+    }
+    o
+}
+
+fn policy_from_json(v: &JsonValue, what: &str) -> Result<KeepAliveSpec> {
+    let o = as_obj(v, what)?;
+    let tag = str_field(o, "type", what)?;
+    if tag == "stochastic" {
+        check_keys(o, &["type", "process"], what)?;
+        let pv = o.get("process").with_context(|| format!("{what}.process is required"))?;
+        return Ok(KeepAliveSpec::Stochastic {
+            process: process_from_json(pv, &format!("{what}.process"))?,
+        });
+    }
+    // "fixed"/"adaptive" (and aliases) share the CLI's parser, so names and
+    // error text cannot drift between the two surfaces.
+    let kind: PolicyKind = tag
+        .parse()
+        .with_context(|| format!("{what}.type (also accepted: \"stochastic\")"))?;
+    Ok(match kind {
+        PolicyKind::Fixed => {
+            check_keys(o, &["type", "threshold"], what)?;
+            KeepAliveSpec::Fixed { threshold: f64_field(o, "threshold", what, 600.0)? }
+        }
+        PolicyKind::Adaptive => {
+            check_keys(
+                o,
+                &["type", "range", "bin_len", "tail", "margin", "min_samples", "oob_threshold"],
+                what,
+            )?;
+            let defaults = KeepAliveSpec::HYBRID_DEFAULTS;
+            KeepAliveSpec::HybridHistogram {
+                range: f64_field(o, "range", what, 3_600.0)?,
+                bin_len: f64_field(o, "bin_len", what, 60.0)?,
+                tail: f64_field(o, "tail", what, defaults.0)?,
+                margin: f64_field(o, "margin", what, defaults.1)?,
+                min_samples: u64_field(o, "min_samples", what, defaults.2)?,
+                oob_threshold: f64_field(o, "oob_threshold", what, defaults.3)?,
+            }
+        }
+    })
+}
+
+// -------------------------------------------------------------- experiment
+
+fn experiment_to_json(e: &ExperimentSpec) -> JsonValue {
+    let mut o = JsonValue::object();
+    o.set("type", e.kind());
+    match e {
+        ExperimentSpec::Steady => {}
+        ExperimentSpec::Temporal { replications, sample_interval, warm_pool } => {
+            o.set("replications", *replications).set("warm_pool", *warm_pool);
+            if let Some(si) = sample_interval {
+                o.set("sample_interval", *si);
+            }
+        }
+        ExperimentSpec::Ensemble { replications, threads, thresholds } => {
+            o.set("replications", *replications)
+                .set("threads", *threads)
+                .set("thresholds", thresholds.clone());
+        }
+        ExperimentSpec::Sweep { rates, thresholds } => {
+            o.set("rates", rates.clone()).set("thresholds", thresholds.clone());
+        }
+        ExperimentSpec::Compare { service_mean, markovian_expiration } => {
+            o.set("service_mean", *service_mean)
+                .set("markovian_expiration", *markovian_expiration);
+        }
+        ExperimentSpec::Fleet(f) => {
+            o.set("functions", f.functions)
+                .set("threads", f.threads)
+                .set("policy", policy_to_json(&f.policy))
+                .set("memory_mb", f.memory_mb)
+                .set("top_k", f.top_k);
+            if let Some(cap) = f.fleet_cap {
+                o.set("fleet_cap", cap);
+            }
+            if !f.compare_thresholds.is_empty() || !f.compare_extra.is_empty() {
+                o.set("compare_thresholds", f.compare_thresholds.clone()).set(
+                    "compare_extra",
+                    JsonValue::Array(f.compare_extra.iter().map(policy_to_json).collect()),
+                );
+            }
+        }
+    }
+    o
+}
+
+fn experiment_from_json(v: &JsonValue) -> Result<ExperimentSpec> {
+    let what = "experiment";
+    let o = as_obj(v, what)?;
+    let tag = str_field(o, "type", what)?;
+    Ok(match tag {
+        "steady" => {
+            check_keys(o, &["type"], what)?;
+            ExperimentSpec::Steady
+        }
+        "temporal" => {
+            check_keys(o, &["type", "replications", "sample_interval", "warm_pool"], what)?;
+            ExperimentSpec::Temporal {
+                replications: usize_field(o, "replications", what, 10)?,
+                sample_interval: match o.get("sample_interval") {
+                    None => None,
+                    Some(v) => Some(
+                        v.as_f64()
+                            .context("experiment.sample_interval must be a number")?,
+                    ),
+                },
+                warm_pool: usize_field(o, "warm_pool", what, 0)?,
+            }
+        }
+        "ensemble" => {
+            check_keys(o, &["type", "replications", "threads", "thresholds"], what)?;
+            ExperimentSpec::Ensemble {
+                replications: usize_field(o, "replications", what, 10)?,
+                threads: usize_field(o, "threads", what, 0)?,
+                thresholds: f64_list_field(o, "thresholds", what)?,
+            }
+        }
+        "sweep" => {
+            check_keys(o, &["type", "rates", "thresholds"], what)?;
+            ExperimentSpec::Sweep {
+                rates: f64_list_field(o, "rates", what)?,
+                thresholds: f64_list_field(o, "thresholds", what)?,
+            }
+        }
+        "compare" => {
+            check_keys(o, &["type", "service_mean", "markovian_expiration"], what)?;
+            ExperimentSpec::Compare {
+                service_mean: f64_field(o, "service_mean", what, crate::figures::WARM_MEAN)?,
+                markovian_expiration: bool_field(o, "markovian_expiration", what, false)?,
+            }
+        }
+        "fleet" => {
+            check_keys(
+                o,
+                &[
+                    "type",
+                    "functions",
+                    "threads",
+                    "policy",
+                    "fleet_cap",
+                    "memory_mb",
+                    "top_k",
+                    "compare_thresholds",
+                    "compare_extra",
+                ],
+                what,
+            )?;
+            let mut f = FleetScenario::new(usize_field(o, "functions", what, 50)?);
+            f.threads = usize_field(o, "threads", what, 0)?;
+            if let Some(pv) = o.get("policy") {
+                f.policy = policy_from_json(pv, "experiment.policy")?;
+            }
+            f.fleet_cap = match usize_field(o, "fleet_cap", what, 0)? {
+                0 => None,
+                cap => Some(cap),
+            };
+            f.memory_mb = f64_field(o, "memory_mb", what, 128.0)?;
+            f.top_k = usize_field(o, "top_k", what, 5)?;
+            f.compare_thresholds = f64_list_field(o, "compare_thresholds", what)?;
+            if let Some(xv) = o.get("compare_extra") {
+                f.compare_extra = xv
+                    .as_array()
+                    .context("experiment.compare_extra must be an array of policies")?
+                    .iter()
+                    .map(|p| policy_from_json(p, "experiment.compare_extra[..]"))
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            ExperimentSpec::Fleet(f)
+        }
+        other => bail!(
+            "experiment.type: unknown experiment {other:?} \
+             (expected steady|temporal|ensemble|sweep|compare|fleet)"
+        ),
+    })
+}
+
+// -------------------------------------------------------------- spec level
+
+impl ScenarioSpec {
+    /// Serialize to the canonical JSON form ([`Self::from_json`] is its
+    /// exact inverse — pinned by round-trip tests).
+    pub fn to_json(&self) -> JsonValue {
+        let mut workload = JsonValue::object();
+        workload.set("arrival", process_to_json(&self.workload.arrival));
+        if let Some(b) = &self.workload.batch_size {
+            workload.set("batch_size", process_to_json(b));
+        }
+
+        let mut platform = JsonValue::object();
+        platform
+            .set("warm_service", process_to_json(&self.platform.warm_service))
+            .set("cold_service", process_to_json(&self.platform.cold_service))
+            .set("expiration_threshold", self.platform.expiration_threshold)
+            .set("max_concurrency", self.platform.max_concurrency);
+        if let Some(p) = &self.platform.expiration_process {
+            platform.set("expiration_process", process_to_json(p));
+        }
+
+        let mut run = JsonValue::object();
+        run.set("horizon", self.run.horizon).set("skip_initial", self.run.skip_initial);
+        if self.run.seed <= JSON_EXACT_MAX {
+            run.set("seed", self.run.seed);
+        } else {
+            run.set("seed", self.run.seed.to_string());
+        }
+
+        let mut o = JsonValue::object();
+        o.set("name", self.name.as_str())
+            .set("workload", workload)
+            .set("platform", platform)
+            .set("run", run)
+            .set("experiment", experiment_to_json(&self.experiment));
+        if let Some(c) = &self.cost {
+            let mut cj = JsonValue::object();
+            cj.set("provider", c.provider.canonical_name())
+                .set("memory_mb", c.memory_mb)
+                .set("external_per_request", c.external_per_request);
+            if let Some(w) = c.scale_to_window {
+                cj.set("scale_to_window", w);
+            }
+            o.set("cost", cj);
+        }
+        let mut out = JsonValue::object();
+        out.set(
+            "format",
+            match self.output.format {
+                OutputFormat::Table => "table",
+                OutputFormat::Json => "json",
+            },
+        );
+        o.set("output", out);
+        o
+    }
+
+    /// Compact one-line JSON text.
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Deserialize from a parsed [`JsonValue`]. Every axis is optional
+    /// with Table-1 / CLI defaults except `name` and `experiment`; unknown
+    /// keys anywhere are errors.
+    pub fn from_json(v: &JsonValue) -> Result<ScenarioSpec> {
+        let o = as_obj(v, "scenario")?;
+        check_keys(
+            o,
+            &["name", "workload", "platform", "run", "experiment", "cost", "output"],
+            "scenario",
+        )?;
+        let name = str_field(o, "name", "scenario")?.to_string();
+
+        let workload = match o.get("workload") {
+            None => WorkloadSpec::default(),
+            Some(wv) => {
+                let w = as_obj(wv, "workload")?;
+                check_keys(w, &["arrival", "batch_size"], "workload")?;
+                WorkloadSpec {
+                    arrival: match w.get("arrival") {
+                        None => WorkloadSpec::default().arrival,
+                        Some(a) => process_from_json(a, "workload.arrival")?,
+                    },
+                    batch_size: match w.get("batch_size") {
+                        None => None,
+                        Some(b) => Some(process_from_json(b, "workload.batch_size")?),
+                    },
+                }
+            }
+        };
+
+        let platform = match o.get("platform") {
+            None => PlatformSpec::default(),
+            Some(pv) => {
+                let p = as_obj(pv, "platform")?;
+                check_keys(
+                    p,
+                    &[
+                        "warm_service",
+                        "cold_service",
+                        "expiration_threshold",
+                        "expiration_process",
+                        "max_concurrency",
+                    ],
+                    "platform",
+                )?;
+                let d = PlatformSpec::default();
+                PlatformSpec {
+                    warm_service: match p.get("warm_service") {
+                        None => d.warm_service,
+                        Some(v) => process_from_json(v, "platform.warm_service")?,
+                    },
+                    cold_service: match p.get("cold_service") {
+                        None => d.cold_service,
+                        Some(v) => process_from_json(v, "platform.cold_service")?,
+                    },
+                    expiration_threshold: f64_field(
+                        p,
+                        "expiration_threshold",
+                        "platform",
+                        d.expiration_threshold,
+                    )?,
+                    expiration_process: match p.get("expiration_process") {
+                        None => None,
+                        Some(v) => Some(process_from_json(v, "platform.expiration_process")?),
+                    },
+                    max_concurrency: usize_field(
+                        p,
+                        "max_concurrency",
+                        "platform",
+                        d.max_concurrency,
+                    )?,
+                }
+            }
+        };
+
+        let run = match o.get("run") {
+            None => RunSpec::default(),
+            Some(rv) => {
+                let r = as_obj(rv, "run")?;
+                check_keys(r, &["horizon", "skip_initial", "seed"], "run")?;
+                let d = RunSpec::default();
+                RunSpec {
+                    horizon: f64_field(r, "horizon", "run", d.horizon)?,
+                    skip_initial: f64_field(r, "skip_initial", "run", d.skip_initial)?,
+                    seed: match r.get("seed") {
+                        None => d.seed,
+                        Some(v) => seed_value(v)?,
+                    },
+                }
+            }
+        };
+
+        let experiment = experiment_from_json(
+            o.get("experiment").context("scenario.experiment is required")?,
+        )?;
+
+        let cost = match o.get("cost") {
+            None => None,
+            Some(cv) => {
+                let c = as_obj(cv, "cost")?;
+                check_keys(
+                    c,
+                    &["provider", "memory_mb", "external_per_request", "scale_to_window"],
+                    "cost",
+                )?;
+                let d = CostSpec::default();
+                let provider: Provider = match c.get("provider") {
+                    None => d.provider,
+                    Some(p) => p
+                        .as_str()
+                        .context("cost.provider must be a string")?
+                        .parse()
+                        .context("cost.provider")?,
+                };
+                Some(CostSpec {
+                    provider,
+                    memory_mb: f64_field(c, "memory_mb", "cost", d.memory_mb)?,
+                    external_per_request: f64_field(
+                        c,
+                        "external_per_request",
+                        "cost",
+                        d.external_per_request,
+                    )?,
+                    scale_to_window: match c.get("scale_to_window") {
+                        None => None,
+                        Some(w) => Some(
+                            w.as_f64().context("cost.scale_to_window must be a number")?,
+                        ),
+                    },
+                })
+            }
+        };
+
+        let output = match o.get("output") {
+            None => OutputSpec::default(),
+            Some(ov) => {
+                let out = as_obj(ov, "output")?;
+                check_keys(out, &["format"], "output")?;
+                let format = match out.get("format") {
+                    None => OutputFormat::default(),
+                    Some(f) => match f.as_str().context("output.format must be a string")? {
+                        "table" => OutputFormat::Table,
+                        "json" => OutputFormat::Json,
+                        other => {
+                            bail!("output.format: unknown format {other:?} (expected table|json)")
+                        }
+                    },
+                };
+                OutputSpec { format }
+            }
+        };
+
+        Ok(ScenarioSpec { name, workload, platform, run, experiment, cost, output })
+    }
+
+    /// Parse JSON text into a spec (reader for `simfaas run` files).
+    pub fn from_json_str(text: &str) -> Result<ScenarioSpec> {
+        let v = JsonValue::parse(text).context("scenario file is not valid JSON")?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::spec::DEFAULT_SEED;
+
+    fn roundtrip(spec: &ScenarioSpec) {
+        let text = spec.to_json_string();
+        let back = ScenarioSpec::from_json_str(&text)
+            .unwrap_or_else(|e| panic!("reparse failed for {text}: {e:#}"));
+        assert_eq!(&back, spec, "round trip changed the spec: {text}");
+    }
+
+    #[test]
+    fn default_and_rich_specs_roundtrip() {
+        roundtrip(&ScenarioSpec::new("plain"));
+        roundtrip(
+            &ScenarioSpec::new("rich")
+                .with_arrival(ProcessSpec::Mmpp { rates: [2.0, 0.2], switch: [0.01, 0.02] })
+                .with_batch_size(ProcessSpec::Constant(2.0))
+                .with_services(
+                    ProcessSpec::LogNormal { mean: 1.5, cv: 0.4 },
+                    ProcessSpec::Gamma { shape: 2.0, scale: 1.1 },
+                )
+                .with_expiration_process(ProcessSpec::Gaussian { mean: 600.0, std: 30.0 })
+                .with_horizon(12_345.5)
+                .with_seed(987_654_321)
+                .with_experiment(ExperimentSpec::Ensemble {
+                    replications: 7,
+                    threads: 2,
+                    thresholds: vec![60.0, 600.0],
+                })
+                .with_cost(CostSpec::monthly(Provider::IbmCloudFunctions, 256.0))
+                .with_output(OutputFormat::Json),
+        );
+        roundtrip(
+            &ScenarioSpec::new("fleet").with_experiment(ExperimentSpec::Fleet(
+                FleetScenario::new(12)
+                    .with_policy(KeepAliveSpec::hybrid_histogram(1_800.0, 30.0))
+                    .with_fleet_cap(64)
+                    .with_comparison(
+                        vec![120.0, 600.0],
+                        vec![KeepAliveSpec::Stochastic {
+                            process: ProcessSpec::ExpMean(600.0),
+                        }],
+                    ),
+            )),
+        );
+        roundtrip(
+            &ScenarioSpec::new("temporal").with_experiment(ExperimentSpec::Temporal {
+                replications: 4,
+                sample_interval: Some(50.0),
+                warm_pool: 3,
+            }),
+        );
+        roundtrip(&ScenarioSpec::new("sweep").with_experiment(ExperimentSpec::Sweep {
+            rates: vec![0.5, 1.0],
+            thresholds: vec![120.0, 600.0],
+        }));
+        roundtrip(&ScenarioSpec::new("cmp").with_experiment(ExperimentSpec::Compare {
+            service_mean: 2.0,
+            markovian_expiration: true,
+        }));
+    }
+
+    #[test]
+    fn seeds_above_2_pow_53_roundtrip_via_strings() {
+        // f64 JSON numbers cannot hold these exactly; the writer switches
+        // to a decimal string and the reader accepts both forms.
+        for seed in [u64::MAX, 1u64 << 60, (1u64 << 53) + 1] {
+            let spec = ScenarioSpec::new("big-seed").with_seed(seed);
+            let text = spec.to_json_string();
+            assert!(text.contains(&format!("\"seed\":\"{seed}\"")), "{text}");
+            roundtrip(&spec);
+        }
+        // Small seeds stay plain numbers.
+        let text = ScenarioSpec::new("small").with_seed(7).to_json_string();
+        assert!(text.contains("\"seed\":7"), "{text}");
+        // Explicit string form parses even below the threshold.
+        let spec =
+            ScenarioSpec::from_json_str(r#"{"name":"s","run":{"seed":"42"},"experiment":{"type":"steady"}}"#)
+                .unwrap();
+        assert_eq!(spec.run.seed, 42);
+        // Garbage string seeds fail with the path named.
+        let err = format!(
+            "{:#}",
+            ScenarioSpec::from_json_str(
+                r#"{"name":"s","run":{"seed":"forty-two"},"experiment":{"type":"steady"}}"#
+            )
+            .unwrap_err()
+        );
+        assert!(err.contains("run.seed"), "{err}");
+    }
+
+    #[test]
+    fn minimal_spec_gets_all_defaults() {
+        let spec =
+            ScenarioSpec::from_json_str(r#"{"name":"m","experiment":{"type":"steady"}}"#).unwrap();
+        assert_eq!(spec, ScenarioSpec::new("m"));
+        assert_eq!(spec.run.seed, DEFAULT_SEED);
+    }
+
+    #[test]
+    fn unknown_keys_are_errors_at_every_level() {
+        for (text, needle) in [
+            (r#"{"name":"x","experiment":{"type":"steady"},"wrkload":{}}"#, "wrkload"),
+            (
+                r#"{"name":"x","experiment":{"type":"steady","reps":3}}"#,
+                "reps",
+            ),
+            (
+                r#"{"name":"x","experiment":{"type":"steady"},"run":{"horizn":5}}"#,
+                "horizn",
+            ),
+            (
+                r#"{"name":"x","experiment":{"type":"fleet","policy":{"type":"fixed","range":9}}}"#,
+                "range",
+            ),
+        ] {
+            let err = format!("{:#}", ScenarioSpec::from_json_str(text).unwrap_err());
+            assert!(err.contains("unknown key"), "{text} -> {err}");
+            assert!(err.contains(needle), "{text} -> {err}");
+        }
+    }
+
+    #[test]
+    fn malformed_specs_report_helpful_errors() {
+        // Required fields.
+        let err = format!(
+            "{:#}",
+            ScenarioSpec::from_json_str(r#"{"experiment":{"type":"steady"}}"#).unwrap_err()
+        );
+        assert!(err.contains("scenario.name"), "{err}");
+        let err = format!("{:#}", ScenarioSpec::from_json_str(r#"{"name":"x"}"#).unwrap_err());
+        assert!(err.contains("experiment"), "{err}");
+        // Enumerated values list the accepted set.
+        let err = format!(
+            "{:#}",
+            ScenarioSpec::from_json_str(
+                r#"{"name":"x","experiment":{"type":"warp-drive"}}"#
+            )
+            .unwrap_err()
+        );
+        assert!(err.contains("steady|temporal|ensemble|sweep|compare|fleet"), "{err}");
+        let err = format!(
+            "{:#}",
+            ScenarioSpec::from_json_str(
+                r#"{"name":"x","experiment":{"type":"steady"},"cost":{"provider":"ec2"}}"#
+            )
+            .unwrap_err()
+        );
+        assert!(err.contains("aws|gcf|google|azure|ibm"), "{err}");
+        let err = format!(
+            "{:#}",
+            ScenarioSpec::from_json_str(
+                r#"{"name":"x","workload":{"arrival":{"type":"zipf"}},"experiment":{"type":"steady"}}"#
+            )
+            .unwrap_err()
+        );
+        assert!(err.contains("unknown process"), "{err}");
+        // Type errors name the path.
+        let err = format!(
+            "{:#}",
+            ScenarioSpec::from_json_str(
+                r#"{"name":"x","experiment":{"type":"steady"},"run":{"seed":-3}}"#
+            )
+            .unwrap_err()
+        );
+        assert!(err.contains("run.seed"), "{err}");
+        // Invalid JSON reports the parse layer.
+        let err =
+            format!("{:#}", ScenarioSpec::from_json_str(r#"{"name": "x", "#).unwrap_err());
+        assert!(err.contains("not valid JSON"), "{err}");
+    }
+
+    #[test]
+    fn exp_process_needs_exactly_one_parameterization() {
+        let err = format!(
+            "{:#}",
+            process_from_json(
+                &JsonValue::parse(r#"{"type":"exp","rate":1.0,"mean":1.0}"#).unwrap(),
+                "p"
+            )
+            .unwrap_err()
+        );
+        assert!(err.contains("exactly one"), "{err}");
+        assert!(process_from_json(&JsonValue::parse(r#"{"type":"exp"}"#).unwrap(), "p").is_err());
+    }
+}

@@ -1,0 +1,48 @@
+//! The declarative scenario layer — one typed description, one entry
+//! point, every experiment.
+//!
+//! SimFaaS's pitch is "describe a platform configuration, get performance
+//! and cost predictions". This module is that description made first-class:
+//!
+//! * [`spec`] — [`ScenarioSpec`], the typed experiment value (workload ×
+//!   platform × experiment × cost × output) with a fluent builder. Plain
+//!   data; building one runs nothing.
+//! * [`json`] — the serialized form: [`ScenarioSpec::to_json`] /
+//!   [`ScenarioSpec::from_json_str`] over the crate's own
+//!   [`crate::output::json::JsonValue`] reader/writer. Bundled examples
+//!   live in `examples/scenarios/`; the schema is documented in DESIGN.md.
+//! * [`run`] — [`run_scenario`]: the single dispatcher that routes a spec
+//!   to `ServerlessSimulator`, `ServerlessTemporalSimulator`, the
+//!   replication ensemble, the fleet engine, what-if sweeps, the
+//!   analytical baseline and the cost engine, returning a
+//!   [`ScenarioReport`] that renders as the CLI's tables or as JSON.
+//!
+//! The CLI subcommands (`steady`, `temporal`, `ensemble`, `fleet`,
+//! `sweep`, `compare`, `cost`, plus `simfaas run <scenario.json>`) are
+//! thin flag→spec translators over this module, pinned bit-identical to
+//! the pre-scenario code paths by regression tests. New experiment kinds
+//! (trace files, autoscalers, learned policies — see ROADMAP.md) extend
+//! [`ExperimentSpec`] here instead of growing another hand-wired
+//! subcommand.
+//!
+//! ```no_run
+//! use simfaas::scenario::{run_scenario, ExperimentSpec, ScenarioSpec};
+//!
+//! let spec = ScenarioSpec::new("quick-ci")
+//!     .with_arrival_rate(1.5)
+//!     .with_horizon(100_000.0)
+//!     .with_experiment(ExperimentSpec::ensemble(8));
+//! let report = run_scenario(&spec)?;
+//! println!("{}", report.render(&spec));
+//! # anyhow::Ok(())
+//! ```
+
+pub mod json;
+pub mod run;
+pub mod spec;
+
+pub use run::{run_scenario, run_scenario_to_string, CostBlock, ScenarioReport};
+pub use spec::{
+    CostSpec, ExperimentSpec, FleetScenario, KeepAliveSpec, OutputFormat, OutputSpec,
+    PlatformSpec, ProcessSpec, RunSpec, ScenarioSpec, WorkloadSpec, DEFAULT_SEED,
+};

@@ -1,0 +1,979 @@
+//! `run_scenario` — the single entry point that executes a
+//! [`ScenarioSpec`] on the right engine, plus the [`ScenarioReport`] it
+//! returns.
+//!
+//! Every arm reproduces what the corresponding CLI subcommand used to
+//! hand-wire, bit for bit: the same config construction, the same engine
+//! call, the same report text (the CLI now routes through here, and the
+//! regression tests in this module pin scenario output against direct
+//! engine invocation).
+
+use super::spec::{CostSpec, ExperimentSpec, OutputFormat, ScenarioSpec};
+use crate::analytical::{self, ComparisonReport};
+use crate::cost::{estimate, scale_to, CostEstimate, FunctionConfig, PricingTable};
+use crate::figures;
+use crate::fleet::{fleet_cost, FleetConfig, FleetCostReport, FleetResults};
+use crate::output::json::{fleet_to_json, results_to_json, JsonValue};
+use crate::output::{ascii_lines, Series, Table};
+use crate::sim::ensemble::{run_ensemble, EnsembleOpts, EnsembleResults, MetricCi};
+use crate::sim::{
+    InitialState, Process, Rng, ServerlessSimulator, ServerlessTemporalSimulator, SimResults,
+    TemporalResults,
+};
+use crate::whatif::{self, PolicyOutcome};
+use crate::workload::SyntheticTrace;
+use anyhow::Result;
+
+/// Priced view of a single-function run (the `cost` axis output).
+#[derive(Debug, Clone)]
+pub struct CostBlock {
+    pub estimate: CostEstimate,
+    /// The estimate scaled to `CostSpec::scale_to_window`, when set.
+    pub scaled: Option<CostEstimate>,
+}
+
+/// What [`run_scenario`] hands back: the engine results for the spec's
+/// experiment, renderable as the CLI's tables ([`ScenarioReport::render`])
+/// or as JSON ([`ScenarioReport::to_json`]).
+pub enum ScenarioReport {
+    Steady { results: SimResults, cost: Option<CostBlock> },
+    Temporal { replications: usize, results: TemporalResults },
+    EnsembleSingle { results: EnsembleResults },
+    EnsembleGrid { replications: usize, grid: Vec<(f64, EnsembleResults)> },
+    Sweep { rates: Vec<f64>, series: Vec<(f64, Vec<(f64, f64)>)> },
+    Compare { report: ComparisonReport },
+    Fleet { policy: String, results: FleetResults, cost: FleetCostReport, top_k: usize },
+    FleetComparison { functions: usize, outcomes: Vec<PolicyOutcome> },
+}
+
+/// Execute a scenario. Validates first, so malformed specs fail with a
+/// message naming the field rather than an engine panic. Deterministic:
+/// equal specs produce bit-identical reports.
+pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport> {
+    spec.validate()?;
+    Ok(match &spec.experiment {
+        ExperimentSpec::Steady => {
+            let results = ServerlessSimulator::new(spec.sim_config()).run();
+            let cost = spec.cost.as_ref().map(|c| price(&results, c));
+            ScenarioReport::Steady { results, cost }
+        }
+        ExperimentSpec::Temporal { replications, sample_interval, warm_pool } => {
+            let mut cfg = spec.sim_config();
+            cfg.sample_interval = sample_interval.unwrap_or(cfg.horizon / 100.0);
+            let init = if *warm_pool > 0 {
+                InitialState::warm_pool(*warm_pool)
+            } else {
+                InitialState::empty()
+            };
+            let results =
+                ServerlessTemporalSimulator::new(cfg, init, *replications).run();
+            ScenarioReport::Temporal { replications: *replications, results }
+        }
+        ExperimentSpec::Ensemble { replications, threads, thresholds } => {
+            let cfg = spec.sim_config();
+            let opts = EnsembleOpts {
+                replications: *replications,
+                threads: *threads,
+                root_seed: cfg.seed,
+            };
+            if thresholds.is_empty() {
+                ScenarioReport::EnsembleSingle { results: run_ensemble(&cfg, &opts) }
+            } else {
+                ScenarioReport::EnsembleGrid {
+                    replications: *replications,
+                    grid: whatif::expiration_threshold_ensemble(&cfg, thresholds, &opts),
+                }
+            }
+        }
+        ExperimentSpec::Sweep { rates, thresholds } => {
+            let base = spec.sim_config();
+            let series = figures::fig5_sweep_from(
+                &base,
+                rates,
+                thresholds,
+                spec.run.horizon,
+                spec.run.seed,
+            );
+            ScenarioReport::Sweep { rates: rates.clone(), series }
+        }
+        ExperimentSpec::Compare { service_mean, markovian_expiration } => {
+            let mut cfg = spec.sim_config();
+            cfg.cold_service = Process::exp_mean(*service_mean);
+            cfg.warm_service = Process::exp_mean(*service_mean);
+            let report = if *markovian_expiration {
+                analytical::compare_steady_state_markovian(&cfg, *service_mean)
+            } else {
+                analytical::compare_steady_state(&cfg, *service_mean)
+            };
+            ScenarioReport::Compare { report }
+        }
+        ExperimentSpec::Fleet(f) => {
+            // Same construction sequence as the historical `fleet`
+            // subcommand: one RNG seeded from the run seed generates the
+            // mix, then the fleet derives per-function streams from the
+            // same root seed.
+            let mut rng = Rng::new(spec.run.seed);
+            let trace = SyntheticTrace::generate(f.functions, &mut rng);
+            let mut cfg = FleetConfig::from_trace(
+                &trace,
+                spec.run.horizon,
+                spec.run.skip_initial,
+                spec.run.seed,
+                f.policy.build(),
+            );
+            cfg.threads = f.threads;
+            cfg.fleet_max_concurrency = f.fleet_cap;
+            for func in &mut cfg.functions {
+                func.memory_mb = f.memory_mb;
+            }
+            let provider = spec
+                .cost
+                .as_ref()
+                .map(|c| c.provider)
+                .unwrap_or(crate::cost::Provider::AwsLambda);
+            let pricing = PricingTable::for_provider(provider);
+            // Comparison mode whenever any policy grid is given — a spec
+            // listing only `compare_extra` policies still compares.
+            if !f.compare_thresholds.is_empty() || !f.compare_extra.is_empty() {
+                let extra: Vec<_> = f.compare_extra.iter().map(|p| p.build()).collect();
+                let outcomes = whatif::keepalive_policy_comparison(
+                    &cfg,
+                    &f.compare_thresholds,
+                    &extra,
+                    &pricing,
+                );
+                ScenarioReport::FleetComparison { functions: cfg.functions.len(), outcomes }
+            } else {
+                let results = cfg.run();
+                let cost = fleet_cost(&cfg, &results, &pricing);
+                ScenarioReport::Fleet {
+                    policy: cfg.policy.describe(),
+                    results,
+                    cost,
+                    top_k: f.top_k,
+                }
+            }
+        }
+    })
+}
+
+/// Run a scenario and format it per the spec's output axis — what the CLI
+/// prints verbatim.
+pub fn run_scenario_to_string(spec: &ScenarioSpec) -> Result<String> {
+    let report = run_scenario(spec)?;
+    Ok(match spec.output.format {
+        OutputFormat::Table => report.render(spec),
+        OutputFormat::Json => format!("{}\n", report.to_json(spec)),
+    })
+}
+
+fn price(results: &SimResults, c: &CostSpec) -> CostBlock {
+    let f = FunctionConfig {
+        memory_mb: c.memory_mb,
+        external_per_request: c.external_per_request,
+    };
+    let est = estimate(results, &f, &PricingTable::for_provider(c.provider));
+    CostBlock { estimate: est, scaled: c.scale_to_window.map(|w| scale_to(&est, w)) }
+}
+
+impl ScenarioReport {
+    /// Render the human-readable report — character-identical to what the
+    /// pre-scenario CLI subcommands printed.
+    pub fn render(&self, spec: &ScenarioSpec) -> String {
+        let mut s = String::new();
+        match self {
+            ScenarioReport::Steady { results, cost } => match cost {
+                // The `cost` subcommand's report: pricing table + summary.
+                Some(block) => s.push_str(&render_cost(results, block)),
+                None => s.push_str(&results.to_string()),
+            },
+            ScenarioReport::Temporal { replications, results } => {
+                let band = results.average_count_band();
+                let series = vec![
+                    Series::new("mean", band.iter().map(|&(t, m, _)| (t, m)).collect()),
+                    Series::new("mean+ci", band.iter().map(|&(t, m, h)| (t, m + h)).collect()),
+                    Series::new("mean-ci", band.iter().map(|&(t, m, h)| (t, m - h)).collect()),
+                ];
+                s.push_str(&format!(
+                    "Average instance count over time ({replications} runs, 95% CI):\n"
+                ));
+                s.push_str(&ascii_lines(&series, 72, 18));
+                let (m, hw) = results.avg_server_count_ci;
+                s.push_str(&format!("final avg server count: {m:.4} ± {hw:.4} (95% CI)\n"));
+                let (pc, pch) = results.cold_start_prob_ci;
+                s.push_str(&format!(
+                    "cold start probability: {:.4}% ± {:.4}%\n",
+                    pc * 100.0,
+                    pch * 100.0
+                ));
+            }
+            ScenarioReport::EnsembleSingle { results } => {
+                s.push_str(&results.summary().to_table());
+            }
+            ScenarioReport::EnsembleGrid { replications, grid } => {
+                s.push_str(&format!(
+                    "{replications} replications per threshold, 95% CI half-widths:\n"
+                ));
+                let mut t =
+                    Table::new(vec!["threshold s", "p_cold %", "avg servers", "waste %"]);
+                for (th, res) in grid {
+                    let p = res.ci_of(|r| r.cold_start_prob);
+                    let sv = res.ci_of(|r| r.avg_server_count);
+                    let w = res.ci_of(|r| r.wasted_capacity);
+                    t.row(vec![
+                        format!("{th:.0}"),
+                        format!("{:.4} ± {:.4}", p.mean * 100.0, p.ci_half * 100.0),
+                        format!("{:.4} ± {:.4}", sv.mean, sv.ci_half),
+                        format!("{:.3} ± {:.3}", w.mean * 100.0, w.ci_half * 100.0),
+                    ]);
+                }
+                s.push_str(&t.render());
+            }
+            ScenarioReport::Sweep { rates, series } => {
+                let mut table = Table::new(
+                    std::iter::once("rate".to_string())
+                        .chain(series.iter().map(|(th, _)| format!("p_cold@{th}s")))
+                        .collect::<Vec<_>>(),
+                );
+                for (i, &rate) in rates.iter().enumerate() {
+                    let mut row = vec![rate];
+                    for (_, points) in series {
+                        row.push(points[i].1 * 100.0);
+                    }
+                    table.row_f64(&row, 4);
+                }
+                s.push_str(
+                    "Cold start probability (%) vs arrival rate x expiration threshold:\n",
+                );
+                s.push_str(&table.render());
+                let plotted: Vec<Series> = series
+                    .iter()
+                    .map(|(th, pts)| Series::new(format!("{th} s"), pts.clone()))
+                    .collect();
+                s.push_str(&ascii_lines(&plotted, 72, 18));
+            }
+            ScenarioReport::Compare { report } => {
+                s.push_str(&report.to_table());
+            }
+            ScenarioReport::Fleet { policy, results, cost, top_k } => {
+                let horizon = spec.run.horizon;
+                let seed = spec.run.seed;
+                s.push_str(&format!(
+                    "fleet: {} functions under {policy} (horizon {horizon} s, seed {seed})\n",
+                    results.per_function.len()
+                ));
+                s.push_str(&results.aggregate.to_table());
+                s.push_str(&format!(
+                    "developer cost ${:.4} (requests ${:.4} + runtime ${:.4}) | provider infra ${:.4}\n",
+                    cost.total.developer_total(),
+                    cost.total.request_charges,
+                    cost.total.runtime_charges,
+                    cost.total.provider_infra_cost
+                ));
+                let top = (*top_k).min(results.per_function.len());
+                if top > 0 {
+                    let mut order: Vec<usize> = (0..results.per_function.len()).collect();
+                    order.sort_by(|&a, &b| {
+                        results.per_function[b]
+                            .total_requests
+                            .cmp(&results.per_function[a].total_requests)
+                    });
+                    let mut t = Table::new(vec![
+                        "function",
+                        "requests",
+                        "p_cold %",
+                        "avg servers",
+                        "billed s",
+                    ]);
+                    for &i in order.iter().take(top) {
+                        let r = &results.per_function[i];
+                        t.row(vec![
+                            results.names[i].clone(),
+                            format!("{}", r.total_requests),
+                            format!("{:.4}", r.cold_start_prob * 100.0),
+                            format!("{:.4}", r.avg_server_count),
+                            format!("{:.1}", r.billed_instance_seconds),
+                        ]);
+                    }
+                    s.push_str(&format!("top {top} functions by request volume:\n"));
+                    s.push_str(&t.render());
+                }
+            }
+            ScenarioReport::FleetComparison { functions, outcomes } => {
+                let horizon = spec.run.horizon;
+                let seed = spec.run.seed;
+                s.push_str(&format!(
+                    "{functions} functions, horizon {horizon} s, seed {seed}: keep-alive policy comparison\n"
+                ));
+                let mut t = Table::new(vec![
+                    "policy",
+                    "p_cold %",
+                    "rejected",
+                    "avg servers",
+                    "waste %",
+                    "dev cost $",
+                    "infra cost $",
+                ]);
+                for o in outcomes {
+                    let a = &o.results.aggregate;
+                    t.row(vec![
+                        o.label.clone(),
+                        format!("{:.4}", a.cold_start_prob * 100.0),
+                        format!("{}", a.rejected_requests),
+                        format!("{:.3}", a.avg_server_count),
+                        format!("{:.2}", a.wasted_capacity * 100.0),
+                        format!("{:.4}", o.cost.total.developer_total()),
+                        format!("{:.4}", o.cost.total.provider_infra_cost),
+                    ]);
+                }
+                s.push_str(&t.render());
+            }
+        }
+        s
+    }
+
+    /// Serialize the report. For steady and fleet runs this is exactly the
+    /// JSON the CLI's historical `--json` flag emitted; the other kinds
+    /// gained JSON with the scenario layer.
+    pub fn to_json(&self, spec: &ScenarioSpec) -> JsonValue {
+        match self {
+            ScenarioReport::Steady { results, cost } => {
+                let mut o = results_to_json(results);
+                if let Some(block) = cost {
+                    o.set("cost", cost_block_json(block));
+                }
+                o
+            }
+            ScenarioReport::Temporal { replications, results } => {
+                let mut o = JsonValue::object();
+                let (m, hw) = results.avg_server_count_ci;
+                let (pc, pch) = results.cold_start_prob_ci;
+                o.set("replications", *replications)
+                    .set("avg_server_count", ci_json(m, hw))
+                    .set("cold_start_prob", ci_json(pc, pch))
+                    .set(
+                        "band",
+                        JsonValue::Array(
+                            results
+                                .average_count_band()
+                                .into_iter()
+                                .map(|(t, mean, half)| {
+                                    JsonValue::Array(vec![t.into(), mean.into(), half.into()])
+                                })
+                                .collect(),
+                        ),
+                    );
+                o
+            }
+            ScenarioReport::EnsembleSingle { results } => summary_json(results),
+            ScenarioReport::EnsembleGrid { replications, grid } => {
+                let mut o = JsonValue::object();
+                o.set("replications", *replications).set(
+                    "thresholds",
+                    JsonValue::Array(
+                        grid.iter()
+                            .map(|(th, res)| {
+                                let mut e = summary_json(res);
+                                e.set("threshold", *th);
+                                e
+                            })
+                            .collect(),
+                    ),
+                );
+                o
+            }
+            ScenarioReport::Sweep { rates, series } => {
+                let mut o = JsonValue::object();
+                o.set("rates", rates.clone()).set(
+                    "series",
+                    JsonValue::Array(
+                        series
+                            .iter()
+                            .map(|(th, pts)| {
+                                let mut e = JsonValue::object();
+                                e.set("threshold", *th).set(
+                                    "points",
+                                    JsonValue::Array(
+                                        pts.iter()
+                                            .map(|&(r, p)| {
+                                                JsonValue::Array(vec![r.into(), p.into()])
+                                            })
+                                            .collect(),
+                                    ),
+                                );
+                                e
+                            })
+                            .collect(),
+                    ),
+                );
+                o
+            }
+            ScenarioReport::Compare { report } => {
+                let mut o = JsonValue::object();
+                o.set(
+                    "rows",
+                    JsonValue::Array(
+                        report
+                            .rows
+                            .iter()
+                            .map(|r| {
+                                let mut e = JsonValue::object();
+                                e.set("metric", r.name)
+                                    .set("analytical", r.analytical)
+                                    .set("simulated", r.simulated)
+                                    .set("pct_error", r.pct_error());
+                                e
+                            })
+                            .collect(),
+                    ),
+                );
+                o
+            }
+            ScenarioReport::Fleet { results, cost, .. } => {
+                fleet_to_json(results, Some(cost))
+            }
+            ScenarioReport::FleetComparison { outcomes, .. } => {
+                let mut o = JsonValue::object();
+                o.set("experiment", spec.experiment.kind()).set(
+                    "policies",
+                    JsonValue::Array(
+                        outcomes
+                            .iter()
+                            .map(|p| {
+                                let a = &p.results.aggregate;
+                                let mut e = JsonValue::object();
+                                e.set("policy", p.label.as_str())
+                                    .set("cold_start_prob", a.cold_start_prob)
+                                    .set("rejected_requests", a.rejected_requests)
+                                    .set("avg_server_count", a.avg_server_count)
+                                    .set("wasted_capacity", a.wasted_capacity)
+                                    .set("developer_total", p.cost.total.developer_total())
+                                    .set(
+                                        "provider_infra_cost",
+                                        p.cost.total.provider_infra_cost,
+                                    );
+                                e
+                            })
+                            .collect(),
+                    ),
+                );
+                o
+            }
+        }
+    }
+}
+
+fn ci_json(mean: f64, ci_half: f64) -> JsonValue {
+    let mut o = JsonValue::object();
+    o.set("mean", mean).set("ci_half", ci_half);
+    o
+}
+
+fn metric_ci_json(m: &MetricCi) -> JsonValue {
+    ci_json(m.mean, m.ci_half)
+}
+
+/// The Table-1 CI summary as JSON (shared by single/grid ensemble output).
+fn summary_json(results: &EnsembleResults) -> JsonValue {
+    let sum = results.summary();
+    let mut o = JsonValue::object();
+    o.set("replications", sum.replications)
+        .set("cold_start_prob", metric_ci_json(&sum.cold_start_prob))
+        .set("rejection_prob", metric_ci_json(&sum.rejection_prob))
+        .set("avg_server_count", metric_ci_json(&sum.avg_server_count))
+        .set("avg_running_count", metric_ci_json(&sum.avg_running_count))
+        .set("avg_idle_count", metric_ci_json(&sum.avg_idle_count))
+        .set("wasted_capacity", metric_ci_json(&sum.wasted_capacity))
+        .set("avg_response_time", metric_ci_json(&sum.avg_response_time))
+        .set("response_p95", metric_ci_json(&sum.response_p95))
+        .set("billed_instance_seconds", metric_ci_json(&sum.billed_instance_seconds));
+    o
+}
+
+fn cost_block_json(block: &CostBlock) -> JsonValue {
+    let mut o = JsonValue::object();
+    o.set("window", cost_estimate_json(&block.estimate));
+    if let Some(scaled) = &block.scaled {
+        o.set("scaled", cost_estimate_json(scaled));
+    }
+    o
+}
+
+fn cost_estimate_json(e: &CostEstimate) -> JsonValue {
+    let mut o = JsonValue::object();
+    o.set("window", e.window)
+        .set("requests", e.requests)
+        .set("gb_seconds", e.gb_seconds)
+        .set("request_charges", e.request_charges)
+        .set("runtime_charges", e.runtime_charges)
+        .set("developer_total", e.developer_total())
+        .set("provider_infra_cost", e.provider_infra_cost);
+    o
+}
+
+/// The historical `cost` subcommand report: per-window / per-30-days
+/// pricing table plus a one-line simulation summary.
+fn render_cost(results: &SimResults, block: &CostBlock) -> String {
+    let est = &block.estimate;
+    // With no explicit scale window the CLI always reported 30 days.
+    let month_owned;
+    let month = match &block.scaled {
+        Some(m) => m,
+        None => {
+            month_owned = scale_to(est, 30.0 * 86_400.0);
+            &month_owned
+        }
+    };
+    let mut t = Table::new(vec!["item", "per window", "per 30 days"]);
+    t.row(vec![
+        "requests".to_string(),
+        format!("{:.0}", est.requests),
+        format!("{:.0}", month.requests),
+    ]);
+    t.row(vec![
+        "GB-seconds".to_string(),
+        format!("{:.1}", est.gb_seconds),
+        format!("{:.1}", month.gb_seconds),
+    ]);
+    t.row(vec![
+        "request charges".to_string(),
+        format!("${:.4}", est.request_charges),
+        format!("${:.2}", month.request_charges),
+    ]);
+    t.row(vec![
+        "runtime charges".to_string(),
+        format!("${:.4}", est.runtime_charges),
+        format!("${:.2}", month.runtime_charges),
+    ]);
+    t.row(vec![
+        "developer total".to_string(),
+        format!("${:.4}", est.developer_total()),
+        format!("${:.2}", month.developer_total()),
+    ]);
+    t.row(vec![
+        "provider infra cost".to_string(),
+        format!("${:.4}", est.provider_infra_cost),
+        format!("${:.2}", month.provider_infra_cost),
+    ]);
+    let mut s = t.render();
+    s.push_str(&format!(
+        "cold start prob {:.4}% | avg servers {:.3} | wasted {:.1}%\n",
+        results.cold_start_prob * 100.0,
+        results.avg_server_count,
+        results.wasted_capacity * 100.0
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::spec::{FleetScenario, KeepAliveSpec, ProcessSpec};
+    use crate::sim::SimConfig;
+
+    fn assert_results_bit_identical(a: &SimResults, b: &SimResults) {
+        assert_eq!(a.total_requests, b.total_requests);
+        assert_eq!(a.cold_requests, b.cold_requests);
+        assert_eq!(a.warm_requests, b.warm_requests);
+        assert_eq!(a.rejected_requests, b.rejected_requests);
+        assert_eq!(a.cold_start_prob.to_bits(), b.cold_start_prob.to_bits());
+        assert_eq!(a.avg_server_count.to_bits(), b.avg_server_count.to_bits());
+        assert_eq!(a.avg_response_time.to_bits(), b.avg_response_time.to_bits());
+        assert_eq!(
+            a.billed_instance_seconds.to_bits(),
+            b.billed_instance_seconds.to_bits()
+        );
+        assert_eq!(a.wasted_capacity.to_bits(), b.wasted_capacity.to_bits());
+    }
+
+    /// `run_scenario(steady)` == hand-built `ServerlessSimulator` (the old
+    /// `steady` subcommand body), bit for bit.
+    #[test]
+    fn steady_matches_direct_simulator() {
+        let spec = ScenarioSpec::new("t").with_horizon(20_000.0).with_seed(1);
+        let report = run_scenario(&spec).unwrap();
+        let direct = {
+            let mut cfg = SimConfig::table1();
+            cfg.horizon = 20_000.0;
+            cfg.seed = 1;
+            ServerlessSimulator::new(cfg).run()
+        };
+        match report {
+            ScenarioReport::Steady { results, cost } => {
+                assert!(cost.is_none());
+                assert_results_bit_identical(&results, &direct);
+            }
+            _ => panic!("wrong report kind"),
+        }
+    }
+
+    /// `run_scenario(temporal)` == the old `temporal` subcommand body.
+    #[test]
+    fn temporal_matches_direct_engine() {
+        let spec = ScenarioSpec::new("t")
+            .with_horizon(3_000.0)
+            .with_experiment(ExperimentSpec::Temporal {
+                replications: 4,
+                sample_interval: Some(100.0),
+                warm_pool: 2,
+            });
+        let report = run_scenario(&spec).unwrap();
+        let direct = {
+            let mut cfg = SimConfig::table1();
+            cfg.horizon = 3_000.0;
+            cfg.sample_interval = 100.0;
+            ServerlessTemporalSimulator::new(cfg, InitialState::warm_pool(2), 4).run()
+        };
+        match report {
+            ScenarioReport::Temporal { results, .. } => {
+                assert_eq!(results.runs.len(), direct.runs.len());
+                for (a, b) in results.runs.iter().zip(&direct.runs) {
+                    assert_results_bit_identical(a, b);
+                }
+                assert_eq!(
+                    results.avg_server_count_ci.0.to_bits(),
+                    direct.avg_server_count_ci.0.to_bits()
+                );
+            }
+            _ => panic!("wrong report kind"),
+        }
+    }
+
+    /// `run_scenario(ensemble)` == `run_ensemble` / the what-if grid.
+    #[test]
+    fn ensemble_matches_direct_engine() {
+        let base = ScenarioSpec::new("t").with_horizon(4_000.0).with_seed(7);
+        let spec = base.clone().with_experiment(ExperimentSpec::Ensemble {
+            replications: 3,
+            threads: 2,
+            thresholds: vec![],
+        });
+        let direct = {
+            let mut cfg = SimConfig::table1();
+            cfg.horizon = 4_000.0;
+            cfg.seed = 7;
+            run_ensemble(&cfg, &EnsembleOpts { replications: 3, threads: 2, root_seed: 7 })
+        };
+        match run_scenario(&spec).unwrap() {
+            ScenarioReport::EnsembleSingle { results } => {
+                assert_eq!(results.seeds, direct.seeds);
+                for (a, b) in results.runs.iter().zip(&direct.runs) {
+                    assert_results_bit_identical(a, b);
+                }
+            }
+            _ => panic!("wrong report kind"),
+        }
+
+        let spec = base.with_experiment(ExperimentSpec::Ensemble {
+            replications: 3,
+            threads: 2,
+            thresholds: vec![120.0, 600.0],
+        });
+        let direct_grid = {
+            let mut cfg = SimConfig::table1();
+            cfg.horizon = 4_000.0;
+            cfg.seed = 7;
+            whatif::expiration_threshold_ensemble(
+                &cfg,
+                &[120.0, 600.0],
+                &EnsembleOpts { replications: 3, threads: 2, root_seed: 7 },
+            )
+        };
+        match run_scenario(&spec).unwrap() {
+            ScenarioReport::EnsembleGrid { grid, .. } => {
+                assert_eq!(grid.len(), direct_grid.len());
+                for ((tha, ra), (thb, rb)) in grid.iter().zip(&direct_grid) {
+                    assert_eq!(tha, thb);
+                    for (a, b) in ra.runs.iter().zip(&rb.runs) {
+                        assert_results_bit_identical(a, b);
+                    }
+                }
+            }
+            _ => panic!("wrong report kind"),
+        }
+    }
+
+    /// `run_scenario(sweep)` on the default platform == `figures::fig5_sweep`
+    /// (the old `sweep` subcommand body).
+    #[test]
+    fn sweep_matches_fig5() {
+        let rates = vec![0.5, 1.0];
+        let thresholds = vec![300.0, 600.0];
+        let spec = ScenarioSpec::new("t")
+            .with_horizon(8_000.0)
+            .with_seed(0x5EED)
+            .with_experiment(ExperimentSpec::Sweep {
+                rates: rates.clone(),
+                thresholds: thresholds.clone(),
+            });
+        let direct = figures::fig5_sweep(&rates, &thresholds, 8_000.0, 0x5EED);
+        match run_scenario(&spec).unwrap() {
+            ScenarioReport::Sweep { series, .. } => {
+                assert_eq!(series.len(), direct.len());
+                for ((tha, sa), (thb, sb)) in series.iter().zip(&direct) {
+                    assert_eq!(tha, thb);
+                    for (&(ra, pa), &(rb, pb)) in sa.iter().zip(sb) {
+                        assert_eq!(ra.to_bits(), rb.to_bits());
+                        assert_eq!(pa.to_bits(), pb.to_bits());
+                    }
+                }
+            }
+            _ => panic!("wrong report kind"),
+        }
+    }
+
+    /// `run_scenario(compare)` == `analytical::compare_steady_state` (the
+    /// old `compare` subcommand body).
+    #[test]
+    fn compare_matches_direct_baseline() {
+        let spec = ScenarioSpec::new("t")
+            .with_horizon(10_000.0)
+            .with_expiration_threshold(120.0)
+            .with_experiment(ExperimentSpec::Compare {
+                service_mean: 2.0,
+                markovian_expiration: true,
+            });
+        let direct = {
+            let mut cfg = SimConfig::table1();
+            cfg.horizon = 10_000.0;
+            cfg.expiration_threshold = 120.0;
+            cfg.cold_service = Process::exp_mean(2.0);
+            cfg.warm_service = Process::exp_mean(2.0);
+            analytical::compare_steady_state_markovian(&cfg, 2.0)
+        };
+        match run_scenario(&spec).unwrap() {
+            ScenarioReport::Compare { report } => {
+                assert_eq!(report.rows.len(), direct.rows.len());
+                for (a, b) in report.rows.iter().zip(&direct.rows) {
+                    assert_eq!(a.name, b.name);
+                    assert_eq!(a.analytical.to_bits(), b.analytical.to_bits());
+                    assert_eq!(a.simulated.to_bits(), b.simulated.to_bits());
+                }
+            }
+            _ => panic!("wrong report kind"),
+        }
+    }
+
+    /// `run_scenario(fleet)` == the old `fleet` subcommand body: same trace
+    /// generation, same fleet config, same cost pass.
+    #[test]
+    fn fleet_matches_direct_engine() {
+        let spec = ScenarioSpec::new("t")
+            .with_horizon(1_500.0)
+            .with_skip_initial(0.0)
+            .with_seed(3)
+            .with_experiment(ExperimentSpec::Fleet(
+                FleetScenario::new(5).with_threads(2),
+            ));
+        let direct = {
+            let mut rng = Rng::new(3);
+            let trace = SyntheticTrace::generate(5, &mut rng);
+            let mut cfg = FleetConfig::from_trace(
+                &trace,
+                1_500.0,
+                0.0,
+                3,
+                crate::fleet::PolicySpec::fixed(600.0),
+            );
+            cfg.threads = 2;
+            let results = cfg.run();
+            let cost =
+                fleet_cost(&cfg, &results, &PricingTable::aws_lambda());
+            (results, cost)
+        };
+        match run_scenario(&spec).unwrap() {
+            ScenarioReport::Fleet { results, cost, .. } => {
+                assert_eq!(results.names, direct.0.names);
+                for (a, b) in results.per_function.iter().zip(&direct.0.per_function) {
+                    assert_results_bit_identical(a, b);
+                }
+                assert_eq!(
+                    cost.total.developer_total().to_bits(),
+                    direct.1.total.developer_total().to_bits()
+                );
+            }
+            _ => panic!("wrong report kind"),
+        }
+    }
+
+    /// A spec listing only `compare_extra` policies (no fixed-threshold
+    /// grid) still enters comparison mode rather than silently running
+    /// the primary policy alone.
+    #[test]
+    fn fleet_compare_extra_alone_triggers_comparison() {
+        let spec = ScenarioSpec::new("t")
+            .with_horizon(600.0)
+            .with_skip_initial(0.0)
+            .with_experiment(ExperimentSpec::Fleet(FleetScenario::new(2).with_comparison(
+                vec![],
+                vec![KeepAliveSpec::hybrid_histogram(3_600.0, 60.0)],
+            )));
+        match run_scenario(&spec).unwrap() {
+            ScenarioReport::FleetComparison { outcomes, .. } => {
+                assert_eq!(outcomes.len(), 1);
+                assert!(outcomes[0].label.contains("hybrid-histogram"));
+            }
+            _ => panic!("expected comparison mode"),
+        }
+    }
+
+    /// Fleet policy comparison routes through the same what-if sweep.
+    #[test]
+    fn fleet_comparison_matches_whatif() {
+        let spec = ScenarioSpec::new("t")
+            .with_horizon(1_200.0)
+            .with_skip_initial(0.0)
+            .with_seed(9)
+            .with_experiment(ExperimentSpec::Fleet(
+                FleetScenario::new(4).with_comparison(
+                    vec![60.0, 600.0],
+                    vec![KeepAliveSpec::hybrid_histogram(3_600.0, 60.0)],
+                ),
+            ));
+        match run_scenario(&spec).unwrap() {
+            ScenarioReport::FleetComparison { outcomes, functions } => {
+                assert_eq!(functions, 4);
+                assert_eq!(outcomes.len(), 3);
+                assert!(outcomes[0].label.contains("fixed(60s)"));
+                assert!(outcomes[2].label.contains("hybrid-histogram"));
+                // Same mix under every policy: arrivals are policy-invariant.
+                let totals: Vec<u64> =
+                    outcomes.iter().map(|o| o.results.aggregate.total_requests).collect();
+                assert_eq!(totals[0], totals[1]);
+                assert_eq!(totals[0], totals[2]);
+            }
+            _ => panic!("wrong report kind"),
+        }
+    }
+
+    /// The cost axis reproduces the old `cost` subcommand numbers.
+    #[test]
+    fn cost_axis_matches_direct_estimate() {
+        let spec = ScenarioSpec::new("t")
+            .with_horizon(20_000.0)
+            .with_cost(CostSpec::monthly(crate::cost::Provider::AzureFunctions, 256.0));
+        let direct = {
+            let mut cfg = SimConfig::table1();
+            cfg.horizon = 20_000.0;
+            let results = ServerlessSimulator::new(cfg).run();
+            let est = estimate(
+                &results,
+                &FunctionConfig::new(256.0),
+                &PricingTable::azure_functions(),
+            );
+            (scale_to(&est, 30.0 * 86_400.0), est)
+        };
+        match run_scenario(&spec).unwrap() {
+            ScenarioReport::Steady { cost: Some(block), .. } => {
+                assert_eq!(
+                    block.estimate.gb_seconds.to_bits(),
+                    direct.1.gb_seconds.to_bits()
+                );
+                assert_eq!(
+                    block.estimate.developer_total().to_bits(),
+                    direct.1.developer_total().to_bits()
+                );
+                let scaled = block.scaled.expect("monthly window");
+                assert_eq!(
+                    scaled.runtime_charges.to_bits(),
+                    direct.0.runtime_charges.to_bits()
+                );
+            }
+            _ => panic!("wrong report kind"),
+        }
+    }
+
+    /// Spec → JSON → parse → run is bit-identical to spec → run.
+    #[test]
+    fn json_roundtrip_runs_bit_identical() {
+        let spec = ScenarioSpec::new("rt")
+            .with_arrival(ProcessSpec::Mmpp { rates: [1.5, 0.3], switch: [0.02, 0.05] })
+            .with_services(
+                ProcessSpec::Gaussian { mean: 2.0, std: 0.4 },
+                ProcessSpec::ExpMean(2.5),
+            )
+            .with_horizon(6_000.0)
+            .with_seed(42);
+        let reparsed = ScenarioSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(reparsed, spec);
+        let a = run_scenario(&spec).unwrap();
+        let b = run_scenario(&reparsed).unwrap();
+        match (a, b) {
+            (
+                ScenarioReport::Steady { results: ra, .. },
+                ScenarioReport::Steady { results: rb, .. },
+            ) => assert_results_bit_identical(&ra, &rb),
+            _ => panic!("wrong report kinds"),
+        }
+    }
+
+    #[test]
+    fn render_and_json_cover_every_kind() {
+        let specs = vec![
+            ScenarioSpec::new("steady").with_horizon(2_000.0),
+            ScenarioSpec::new("cost")
+                .with_horizon(2_000.0)
+                .with_cost(CostSpec::default()),
+            ScenarioSpec::new("temporal")
+                .with_horizon(1_000.0)
+                .with_experiment(ExperimentSpec::Temporal {
+                    replications: 2,
+                    sample_interval: Some(100.0),
+                    warm_pool: 0,
+                }),
+            ScenarioSpec::new("ens")
+                .with_horizon(1_000.0)
+                .with_experiment(ExperimentSpec::ensemble(2)),
+            ScenarioSpec::new("grid").with_horizon(1_000.0).with_experiment(
+                ExperimentSpec::Ensemble {
+                    replications: 2,
+                    threads: 1,
+                    thresholds: vec![120.0, 600.0],
+                },
+            ),
+            ScenarioSpec::new("sweep").with_horizon(1_000.0).with_experiment(
+                ExperimentSpec::Sweep { rates: vec![0.5, 1.0], thresholds: vec![600.0] },
+            ),
+            ScenarioSpec::new("cmp")
+                .with_horizon(5_000.0)
+                .with_experiment(ExperimentSpec::Compare {
+                    service_mean: 2.0,
+                    markovian_expiration: false,
+                }),
+            ScenarioSpec::new("fleet")
+                .with_horizon(800.0)
+                .with_skip_initial(0.0)
+                .with_experiment(ExperimentSpec::Fleet(FleetScenario::new(3))),
+            ScenarioSpec::new("fleetcmp")
+                .with_horizon(800.0)
+                .with_skip_initial(0.0)
+                .with_experiment(ExperimentSpec::Fleet(
+                    FleetScenario::new(3)
+                        .with_comparison(vec![120.0], vec![]),
+                )),
+        ];
+        for spec in specs {
+            let report = run_scenario(&spec).unwrap();
+            let text = report.render(&spec);
+            assert!(!text.is_empty(), "{} rendered empty", spec.name);
+            assert!(text.ends_with('\n'), "{} render lacks trailing newline", spec.name);
+            let json = report.to_json(&spec).to_string();
+            assert!(json.starts_with('{'), "{}: {json}", spec.name);
+            // Report JSON is parseable by our own reader.
+            JsonValue::parse(&json).unwrap();
+            // And the formatted runner honours the output axis.
+            let line = run_scenario_to_string(
+                &spec.clone().with_output(OutputFormat::Json),
+            )
+            .unwrap();
+            assert!(line.starts_with('{') && line.ends_with("}\n"), "{line}");
+        }
+    }
+
+    #[test]
+    fn invalid_spec_is_rejected_before_running() {
+        let spec = ScenarioSpec::new("bad").with_experiment(ExperimentSpec::ensemble(0));
+        let err = run_scenario(&spec).unwrap_err().to_string();
+        assert!(err.contains("replications"), "{err}");
+    }
+}

@@ -1,0 +1,840 @@
+//! The typed scenario description: every experiment the crate can run,
+//! as one serializable value.
+//!
+//! A [`ScenarioSpec`] is the cartesian frame the CLI subcommands used to
+//! wire by hand: **workload** (arrival process, batching) × **platform**
+//! (service processes, expiration, concurrency limit) × **experiment**
+//! (which engine: steady / temporal / ensemble / sweep / compare / fleet)
+//! × **cost** (optional pricing pass) × **output** (table or JSON). The
+//! spec is plain data — building one never runs anything; hand it to
+//! [`crate::scenario::run_scenario`] to execute.
+//!
+//! Defaults everywhere mirror the paper's Table 1 configuration (and the
+//! CLI's historical flag defaults), so `ScenarioSpec::new("x")` is exactly
+//! the `simfaas steady` experiment.
+
+use crate::cost::Provider;
+use crate::fleet::PolicySpec;
+use crate::figures::{COLD_MEAN, WARM_MEAN};
+use crate::sim::process::{
+    GammaProcess, LogNormalProcess, ParetoProcess, Process, WeibullProcess,
+};
+use crate::sim::simulator::SimConfig;
+use anyhow::{bail, Result};
+
+/// Default RNG seed (the CLI's historical `--seed` default).
+pub const DEFAULT_SEED: u64 = 0x5EED;
+
+/// Serializable description of a stochastic process — the data half of
+/// [`Process`]. `ExpRate`/`ExpMean` both build exponentials; keeping the
+/// parameterization the user wrote makes specs round-trip losslessly.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProcessSpec {
+    /// Exponential, parameterized by rate (events/s).
+    ExpRate(f64),
+    /// Exponential, parameterized by mean duration (s).
+    ExpMean(f64),
+    /// Deterministic fixed interval (s).
+    Constant(f64),
+    /// Gaussian truncated at zero.
+    Gaussian { mean: f64, std: f64 },
+    /// LogNormal by observed mean and coefficient of variation.
+    LogNormal { mean: f64, cv: f64 },
+    Gamma { shape: f64, scale: f64 },
+    Weibull { shape: f64, scale: f64 },
+    Pareto { x_m: f64, alpha: f64 },
+    /// Bootstrap resampling over measured samples.
+    Empirical(Vec<f64>),
+    /// 2-state Markov-modulated Poisson process.
+    Mmpp { rates: [f64; 2], switch: [f64; 2] },
+}
+
+impl ProcessSpec {
+    /// Check parameters without building (the constructors `assert!`;
+    /// scenario files must fail with an error, not a panic).
+    pub fn validate(&self, what: &str) -> Result<()> {
+        let ok = match self {
+            ProcessSpec::ExpRate(r) => *r > 0.0,
+            ProcessSpec::ExpMean(m) => *m > 0.0,
+            ProcessSpec::Constant(v) => *v >= 0.0,
+            ProcessSpec::Gaussian { std, .. } => *std >= 0.0,
+            ProcessSpec::LogNormal { mean, cv } => *mean > 0.0 && *cv > 0.0,
+            ProcessSpec::Gamma { shape, scale } | ProcessSpec::Weibull { shape, scale } => {
+                *shape > 0.0 && *scale > 0.0
+            }
+            ProcessSpec::Pareto { x_m, alpha } => *x_m > 0.0 && *alpha > 0.0,
+            ProcessSpec::Empirical(samples) => {
+                !samples.is_empty() && samples.iter().all(|&x| x >= 0.0 && x.is_finite())
+            }
+            ProcessSpec::Mmpp { rates, switch } => {
+                rates.iter().all(|&r| r > 0.0) && switch.iter().all(|&r| r > 0.0)
+            }
+        };
+        if !ok {
+            bail!("{what}: invalid parameters for {self:?}");
+        }
+        Ok(())
+    }
+
+    /// True when every draw is certainly 0 — degenerate processes that
+    /// would freeze an arrival clock (the simulator reschedules the next
+    /// arrival at `now + 0` forever). Checked for the arrival axis in
+    /// [`ScenarioSpec::validate`].
+    fn always_zero(&self) -> bool {
+        match self {
+            ProcessSpec::Constant(v) => *v == 0.0,
+            ProcessSpec::Empirical(samples) => samples.iter().all(|&x| x == 0.0),
+            // Truncation at zero makes a non-positive-mean, zero-std
+            // Gaussian constant 0; with std > 0 positive draws remain
+            // possible, so the clock still advances.
+            ProcessSpec::Gaussian { mean, std } => *std == 0.0 && *mean <= 0.0,
+            _ => false,
+        }
+    }
+
+    /// Build the runnable [`Process`]. Call [`validate`](Self::validate)
+    /// first when the parameters came from an untrusted file.
+    pub fn build(&self) -> Process {
+        match self {
+            ProcessSpec::ExpRate(r) => Process::exp_rate(*r),
+            ProcessSpec::ExpMean(m) => Process::exp_mean(*m),
+            ProcessSpec::Constant(v) => Process::constant(*v),
+            ProcessSpec::Gaussian { mean, std } => Process::gaussian(*mean, *std),
+            ProcessSpec::LogNormal { mean, cv } => {
+                LogNormalProcess::from_mean_cv(*mean, *cv).into()
+            }
+            ProcessSpec::Gamma { shape, scale } => GammaProcess::new(*shape, *scale).into(),
+            ProcessSpec::Weibull { shape, scale } => WeibullProcess::new(*shape, *scale).into(),
+            ProcessSpec::Pareto { x_m, alpha } => ParetoProcess::new(*x_m, *alpha).into(),
+            ProcessSpec::Empirical(samples) => Process::empirical(samples.clone()),
+            ProcessSpec::Mmpp { rates, switch } => Process::mmpp(*rates, *switch),
+        }
+    }
+}
+
+/// Serializable keep-alive policy for fleet experiments — the data half of
+/// [`PolicySpec`] (which additionally offers non-serializable `Custom`
+/// factories for programmatic use).
+#[derive(Debug, Clone, PartialEq)]
+pub enum KeepAliveSpec {
+    /// The paper's fixed idle-expiration threshold.
+    Fixed { threshold: f64 },
+    /// One keep-alive draw from a process per idle period.
+    Stochastic { process: ProcessSpec },
+    /// Deterministic histogram arm of Azure's hybrid policy.
+    HybridHistogram {
+        range: f64,
+        bin_len: f64,
+        tail: f64,
+        margin: f64,
+        min_samples: u64,
+        oob_threshold: f64,
+    },
+}
+
+impl KeepAliveSpec {
+    /// Default hybrid-histogram tuning `(tail, margin, min_samples,
+    /// oob_threshold)`, shared with the fleet engine's builders so the
+    /// CLI and scenario surfaces can never diverge.
+    pub const HYBRID_DEFAULTS: (f64, f64, u64, f64) =
+        crate::fleet::HybridHistogramPolicy::DEFAULT_TUNING;
+
+    pub fn fixed(threshold: f64) -> Self {
+        KeepAliveSpec::Fixed { threshold }
+    }
+
+    /// Hybrid-histogram policy with the default tail/margin tuning.
+    pub fn hybrid_histogram(range: f64, bin_len: f64) -> Self {
+        let (tail, margin, min_samples, oob_threshold) = Self::HYBRID_DEFAULTS;
+        KeepAliveSpec::HybridHistogram { range, bin_len, tail, margin, min_samples, oob_threshold }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            KeepAliveSpec::Fixed { threshold } => {
+                if *threshold < 0.0 {
+                    bail!("policy: fixed threshold must be non-negative, got {threshold}");
+                }
+            }
+            KeepAliveSpec::Stochastic { process } => process.validate("policy.process")?,
+            KeepAliveSpec::HybridHistogram { range, bin_len, tail, margin, .. } => {
+                if !(*range > 0.0 && *bin_len > 0.0 && *range >= *bin_len) {
+                    bail!("policy: hybrid-histogram needs range >= bin_len > 0");
+                }
+                if !(0.0 < *tail && *tail <= 1.0) || *margin < 0.0 {
+                    bail!("policy: hybrid-histogram needs 0 < tail <= 1 and margin >= 0");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Build the fleet-engine [`PolicySpec`].
+    pub fn build(&self) -> PolicySpec {
+        match self {
+            KeepAliveSpec::Fixed { threshold } => PolicySpec::fixed(*threshold),
+            KeepAliveSpec::Stochastic { process } => PolicySpec::stochastic(process.build()),
+            KeepAliveSpec::HybridHistogram {
+                range,
+                bin_len,
+                tail,
+                margin,
+                min_samples,
+                oob_threshold,
+            } => PolicySpec::HybridHistogram {
+                range: *range,
+                bin_len: *bin_len,
+                tail: *tail,
+                margin: *margin,
+                min_samples: *min_samples,
+                oob_threshold: *oob_threshold,
+            },
+        }
+    }
+}
+
+/// The workload axis: what drives requests at the platform.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    /// Inter-arrival time process.
+    pub arrival: ProcessSpec,
+    /// Optional batch-size process (each arrival epoch brings
+    /// `max(1, round(sample))` simultaneous requests).
+    pub batch_size: Option<ProcessSpec>,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec { arrival: ProcessSpec::ExpRate(0.9), batch_size: None }
+    }
+}
+
+/// The platform axis: the paper's Table 1 input rows minus the workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformSpec {
+    pub warm_service: ProcessSpec,
+    pub cold_service: ProcessSpec,
+    /// Idle expiration threshold in seconds.
+    pub expiration_threshold: f64,
+    /// Optional stochastic expiration threshold, overriding the constant.
+    pub expiration_process: Option<ProcessSpec>,
+    /// Maximum concurrency level (AWS Lambda default: 1000).
+    pub max_concurrency: usize,
+}
+
+impl Default for PlatformSpec {
+    fn default() -> Self {
+        PlatformSpec {
+            warm_service: ProcessSpec::ExpMean(WARM_MEAN),
+            cold_service: ProcessSpec::ExpMean(COLD_MEAN),
+            expiration_threshold: 600.0,
+            expiration_process: None,
+            max_concurrency: 1000,
+        }
+    }
+}
+
+/// The run axis: how long, what warm-up skip, which seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSpec {
+    /// Simulation horizon in seconds.
+    pub horizon: f64,
+    /// Warm-up window excluded from statistics (ignored by temporal runs,
+    /// which measure from t = 0).
+    pub skip_initial: f64,
+    /// Root RNG seed; equal seeds give bit-identical scenarios.
+    pub seed: u64,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        RunSpec { horizon: 1e6, skip_initial: 100.0, seed: DEFAULT_SEED }
+    }
+}
+
+/// Fleet experiment parameters (the `simfaas fleet` surface): a synthetic
+/// Azure-style tenant mix derived from the run seed, under one keep-alive
+/// policy, optionally compared against a fixed-threshold grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetScenario {
+    /// Number of functions in the synthetic mix.
+    pub functions: usize,
+    /// Worker threads for the sharded path; 0 = one per core.
+    pub threads: usize,
+    pub policy: KeepAliveSpec,
+    /// Fleet-wide concurrent-instance cap (None = uncoupled).
+    pub fleet_cap: Option<usize>,
+    /// Memory allocated to every function (MB), for billing.
+    pub memory_mb: f64,
+    /// Report the top-K functions by request volume (table output).
+    pub top_k: usize,
+    /// Policy-comparison mode (entered when this grid **or**
+    /// `compare_extra` is non-empty): every fixed threshold here plus
+    /// every extra policy runs on the same mix.
+    pub compare_thresholds: Vec<f64>,
+    /// Extra policies appended to the comparison grid.
+    pub compare_extra: Vec<KeepAliveSpec>,
+}
+
+impl FleetScenario {
+    pub fn new(functions: usize) -> Self {
+        FleetScenario {
+            functions,
+            threads: 0,
+            policy: KeepAliveSpec::fixed(600.0),
+            fleet_cap: None,
+            memory_mb: 128.0,
+            top_k: 5,
+            compare_thresholds: Vec::new(),
+            compare_extra: Vec::new(),
+        }
+    }
+
+    pub fn with_policy(mut self, policy: KeepAliveSpec) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_fleet_cap(mut self, cap: usize) -> Self {
+        self.fleet_cap = Some(cap);
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn with_comparison(
+        mut self,
+        thresholds: Vec<f64>,
+        extra: Vec<KeepAliveSpec>,
+    ) -> Self {
+        self.compare_thresholds = thresholds;
+        self.compare_extra = extra;
+        self
+    }
+}
+
+/// The experiment axis: which engine consumes the other axes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExperimentSpec {
+    /// One steady-state run (paper Table 1).
+    Steady,
+    /// Transient analysis with replications and CI bands (Fig. 4).
+    Temporal {
+        replications: usize,
+        /// Cumulative-average sampling interval; None = horizon/100
+        /// (0.0 disables sampling entirely).
+        sample_interval: Option<f64>,
+        /// Initial warm pool of just-idle instances.
+        warm_pool: usize,
+    },
+    /// Multi-threaded replication ensemble, mean ± 95% CI per metric;
+    /// a non-empty `thresholds` grid sweeps expiration thresholds.
+    Ensemble { replications: usize, threads: usize, thresholds: Vec<f64> },
+    /// What-if sweep over rate × expiration threshold (Fig. 5).
+    Sweep { rates: Vec<f64>, thresholds: Vec<f64> },
+    /// Simulator vs the Markovian analytical baseline (both services
+    /// collapse to exp(`service_mean`), which the models require).
+    Compare { service_mean: f64, markovian_expiration: bool },
+    /// Multi-function fleet under a keep-alive policy.
+    Fleet(FleetScenario),
+}
+
+impl ExperimentSpec {
+    pub fn temporal(replications: usize) -> Self {
+        ExperimentSpec::Temporal { replications, sample_interval: None, warm_pool: 0 }
+    }
+
+    pub fn ensemble(replications: usize) -> Self {
+        ExperimentSpec::Ensemble { replications, threads: 0, thresholds: Vec::new() }
+    }
+
+    /// Tag used in JSON and progress/report headers.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ExperimentSpec::Steady => "steady",
+            ExperimentSpec::Temporal { .. } => "temporal",
+            ExperimentSpec::Ensemble { .. } => "ensemble",
+            ExperimentSpec::Sweep { .. } => "sweep",
+            ExperimentSpec::Compare { .. } => "compare",
+            ExperimentSpec::Fleet(_) => "fleet",
+        }
+    }
+}
+
+/// The cost axis: price the primary run through a provider table
+/// (paper §4.4). For fleet experiments only `provider` is consulted
+/// (each function bills at its own `FleetScenario::memory_mb`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostSpec {
+    pub provider: Provider,
+    /// Allocated memory (MB) for single-function billing.
+    pub memory_mb: f64,
+    /// Extra per-request charge from external services (USD).
+    pub external_per_request: f64,
+    /// Also report the estimate scaled to this window (s), e.g. 30 days.
+    pub scale_to_window: Option<f64>,
+}
+
+impl Default for CostSpec {
+    fn default() -> Self {
+        CostSpec {
+            provider: Provider::AwsLambda,
+            memory_mb: 128.0,
+            external_per_request: 0.0,
+            scale_to_window: None,
+        }
+    }
+}
+
+impl CostSpec {
+    /// The CLI `cost` subcommand's shape: provider + memory, scaled to a
+    /// 30-day month.
+    pub fn monthly(provider: Provider, memory_mb: f64) -> Self {
+        CostSpec {
+            provider,
+            memory_mb,
+            external_per_request: 0.0,
+            scale_to_window: Some(30.0 * 86_400.0),
+        }
+    }
+}
+
+/// How the report renders.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OutputFormat {
+    /// Human-readable tables/plots (the CLI's historical output).
+    #[default]
+    Table,
+    /// One-line JSON on stdout.
+    Json,
+}
+
+/// The output axis.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct OutputSpec {
+    pub format: OutputFormat,
+}
+
+/// One self-contained experiment description. See the module docs; build
+/// fluently from [`ScenarioSpec::new`] or deserialize with
+/// [`ScenarioSpec::from_json_str`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Free-form label (reports and file headers).
+    pub name: String,
+    pub workload: WorkloadSpec,
+    pub platform: PlatformSpec,
+    pub run: RunSpec,
+    pub experiment: ExperimentSpec,
+    pub cost: Option<CostSpec>,
+    pub output: OutputSpec,
+}
+
+impl ScenarioSpec {
+    /// The paper's Table 1 steady-state experiment, ready to customize.
+    pub fn new(name: impl Into<String>) -> Self {
+        ScenarioSpec {
+            name: name.into(),
+            workload: WorkloadSpec::default(),
+            platform: PlatformSpec::default(),
+            run: RunSpec::default(),
+            experiment: ExperimentSpec::Steady,
+            cost: None,
+            output: OutputSpec::default(),
+        }
+    }
+
+    pub fn with_arrival(mut self, arrival: ProcessSpec) -> Self {
+        self.workload.arrival = arrival;
+        self
+    }
+
+    /// Poisson arrivals at `rate` req/s.
+    pub fn with_arrival_rate(mut self, rate: f64) -> Self {
+        self.workload.arrival = ProcessSpec::ExpRate(rate);
+        self
+    }
+
+    pub fn with_batch_size(mut self, batch: ProcessSpec) -> Self {
+        self.workload.batch_size = Some(batch);
+        self
+    }
+
+    pub fn with_services(mut self, warm: ProcessSpec, cold: ProcessSpec) -> Self {
+        self.platform.warm_service = warm;
+        self.platform.cold_service = cold;
+        self
+    }
+
+    pub fn with_expiration_threshold(mut self, secs: f64) -> Self {
+        self.platform.expiration_threshold = secs;
+        self
+    }
+
+    pub fn with_expiration_process(mut self, process: ProcessSpec) -> Self {
+        self.platform.expiration_process = Some(process);
+        self
+    }
+
+    pub fn with_max_concurrency(mut self, max: usize) -> Self {
+        self.platform.max_concurrency = max;
+        self
+    }
+
+    pub fn with_horizon(mut self, horizon: f64) -> Self {
+        self.run.horizon = horizon;
+        self
+    }
+
+    pub fn with_skip_initial(mut self, skip: f64) -> Self {
+        self.run.skip_initial = skip;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.run.seed = seed;
+        self
+    }
+
+    pub fn with_experiment(mut self, experiment: ExperimentSpec) -> Self {
+        self.experiment = experiment;
+        self
+    }
+
+    pub fn with_cost(mut self, cost: CostSpec) -> Self {
+        self.cost = Some(cost);
+        self
+    }
+
+    pub fn with_output(mut self, format: OutputFormat) -> Self {
+        self.output.format = format;
+        self
+    }
+
+    /// Lower the workload/platform/run axes into the core simulator input.
+    /// Field-for-field the same construction the CLI subcommands used to
+    /// do by hand — the scenario↔CLI bit-identity contract rests on it.
+    pub fn sim_config(&self) -> SimConfig {
+        SimConfig {
+            arrival: self.workload.arrival.build(),
+            batch_size: self.workload.batch_size.as_ref().map(ProcessSpec::build),
+            warm_service: self.platform.warm_service.build(),
+            cold_service: self.platform.cold_service.build(),
+            expiration_threshold: self.platform.expiration_threshold,
+            expiration_process: self.platform.expiration_process.as_ref().map(ProcessSpec::build),
+            max_concurrency: self.platform.max_concurrency,
+            horizon: self.run.horizon,
+            skip_initial: self.run.skip_initial,
+            seed: self.run.seed,
+            capture_request_log: false,
+            sample_interval: 0.0,
+        }
+    }
+
+    /// Semantic validation — everything a well-formed JSON file can still
+    /// get wrong. `run_scenario` calls this first, so spec errors surface
+    /// as clean messages rather than engine panics.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.run.horizon.is_finite() && self.run.horizon > 0.0) {
+            bail!("run.horizon must be a positive number of seconds, got {}", self.run.horizon);
+        }
+        if !(self.run.skip_initial.is_finite() && self.run.skip_initial >= 0.0) {
+            bail!("run.skip_initial must be non-negative, got {}", self.run.skip_initial);
+        }
+        self.workload.arrival.validate("workload.arrival")?;
+        if self.workload.arrival.always_zero() {
+            bail!(
+                "workload.arrival: process always samples 0 s, which would stall \
+                 simulated time instead of reaching the horizon"
+            );
+        }
+        if let Some(b) = &self.workload.batch_size {
+            b.validate("workload.batch_size")?;
+        }
+        self.platform.warm_service.validate("platform.warm_service")?;
+        self.platform.cold_service.validate("platform.cold_service")?;
+        if let Some(p) = &self.platform.expiration_process {
+            p.validate("platform.expiration_process")?;
+        }
+        if self.platform.expiration_threshold < 0.0 {
+            bail!("platform.expiration_threshold must be non-negative");
+        }
+        if self.platform.max_concurrency == 0 {
+            bail!("platform.max_concurrency must be at least 1");
+        }
+        match &self.experiment {
+            ExperimentSpec::Steady => {}
+            ExperimentSpec::Temporal { replications, sample_interval, .. } => {
+                if *replications == 0 {
+                    bail!("temporal.replications must be at least 1");
+                }
+                if let Some(si) = sample_interval {
+                    if !(si.is_finite() && *si >= 0.0) {
+                        bail!("temporal.sample_interval must be non-negative seconds");
+                    }
+                }
+            }
+            ExperimentSpec::Ensemble { replications, thresholds, .. } => {
+                if *replications == 0 {
+                    bail!("ensemble.replications must be at least 1");
+                }
+                if thresholds.iter().any(|t| *t < 0.0 || !t.is_finite()) {
+                    bail!("ensemble.thresholds must be non-negative seconds");
+                }
+            }
+            ExperimentSpec::Sweep { rates, thresholds } => {
+                if rates.is_empty() || thresholds.is_empty() {
+                    bail!("sweep.rates and sweep.thresholds must be non-empty");
+                }
+                if rates.iter().any(|r| *r <= 0.0 || !r.is_finite()) {
+                    bail!("sweep.rates must be positive req/s");
+                }
+                if thresholds.iter().any(|t| *t < 0.0 || !t.is_finite()) {
+                    bail!("sweep.thresholds must be non-negative seconds");
+                }
+                // The grid itself drives these two axes: each point runs
+                // Poisson(rate) arrivals at a constant threshold. Reject
+                // spec combinations the sweep would silently ignore.
+                if !matches!(
+                    self.workload.arrival,
+                    ProcessSpec::ExpRate(_) | ProcessSpec::ExpMean(_)
+                ) {
+                    bail!(
+                        "sweep: the rate grid replaces workload.arrival with \
+                         Poisson(rate) at every point, so a custom arrival process \
+                         would be silently ignored — remove it"
+                    );
+                }
+                if self.platform.expiration_process.is_some() {
+                    bail!(
+                        "sweep: platform.expiration_process would override every \
+                         threshold in the grid — remove it (or use the ensemble \
+                         experiment instead)"
+                    );
+                }
+            }
+            ExperimentSpec::Compare { service_mean, .. } => {
+                if !(*service_mean > 0.0 && service_mean.is_finite()) {
+                    bail!("compare.service_mean must be positive seconds");
+                }
+            }
+            ExperimentSpec::Fleet(f) => {
+                if f.functions == 0 {
+                    bail!("fleet.functions must be at least 1");
+                }
+                if !(f.memory_mb.is_finite() && f.memory_mb > 0.0) {
+                    bail!("fleet.memory_mb must be positive");
+                }
+                if f.fleet_cap == Some(0) {
+                    bail!("fleet.fleet_cap must be at least 1 when set");
+                }
+                f.policy.validate()?;
+                for p in &f.compare_extra {
+                    p.validate()?;
+                }
+                if f.compare_thresholds.iter().any(|t| *t < 0.0 || !t.is_finite()) {
+                    bail!("fleet.compare_thresholds must be non-negative seconds");
+                }
+            }
+        }
+        if let Some(c) = &self.cost {
+            // Only steady and fleet runs are priced; silently ignoring the
+            // axis elsewhere would defeat the spec's typo protection.
+            if !matches!(
+                self.experiment,
+                ExperimentSpec::Steady | ExperimentSpec::Fleet(_)
+            ) {
+                bail!(
+                    "cost: the {} experiment does not price its results \
+                     (the cost axis applies to steady and fleet)",
+                    self.experiment.kind()
+                );
+            }
+            if !(c.memory_mb.is_finite() && c.memory_mb > 0.0) {
+                bail!("cost.memory_mb must be positive");
+            }
+            if c.external_per_request < 0.0 {
+                bail!("cost.external_per_request must be non-negative");
+            }
+            if let Some(w) = c.scale_to_window {
+                if !(w > 0.0 && w.is_finite()) {
+                    bail!("cost.scale_to_window must be positive seconds");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_table1() {
+        let cfg = ScenarioSpec::new("t").sim_config();
+        let t1 = SimConfig::table1();
+        assert_eq!(cfg.expiration_threshold, t1.expiration_threshold);
+        assert_eq!(cfg.max_concurrency, t1.max_concurrency);
+        assert_eq!(cfg.horizon, t1.horizon);
+        assert_eq!(cfg.skip_initial, t1.skip_initial);
+        assert_eq!(cfg.seed, t1.seed);
+        // The processes draw the same stream as Table 1's.
+        let mut a = crate::sim::Rng::new(1);
+        let mut b = crate::sim::Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(
+                cfg.arrival.sample(&mut a).to_bits(),
+                t1.arrival.sample(&mut b).to_bits()
+            );
+            assert_eq!(
+                cfg.warm_service.sample(&mut a).to_bits(),
+                t1.warm_service.sample(&mut b).to_bits()
+            );
+            assert_eq!(
+                cfg.cold_service.sample(&mut a).to_bits(),
+                t1.cold_service.sample(&mut b).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn process_specs_build_and_validate() {
+        let specs = [
+            ProcessSpec::ExpRate(0.9),
+            ProcessSpec::ExpMean(2.0),
+            ProcessSpec::Constant(1.0),
+            ProcessSpec::Gaussian { mean: 1.0, std: 0.1 },
+            ProcessSpec::LogNormal { mean: 2.0, cv: 0.5 },
+            ProcessSpec::Gamma { shape: 2.0, scale: 1.0 },
+            ProcessSpec::Weibull { shape: 2.0, scale: 1.0 },
+            ProcessSpec::Pareto { x_m: 1.0, alpha: 2.0 },
+            ProcessSpec::Empirical(vec![1.0, 2.0]),
+            ProcessSpec::Mmpp { rates: [1.0, 5.0], switch: [0.1, 0.2] },
+        ];
+        let mut rng = crate::sim::Rng::new(3);
+        for s in &specs {
+            s.validate("x").unwrap();
+            let x = s.build().sample(&mut rng);
+            assert!(x >= 0.0 && x.is_finite());
+        }
+        assert!(ProcessSpec::ExpRate(0.0).validate("x").is_err());
+        assert!(ProcessSpec::Empirical(vec![]).validate("x").is_err());
+        assert!(ProcessSpec::Mmpp { rates: [1.0, 0.0], switch: [0.1, 0.1] }
+            .validate("x")
+            .is_err());
+    }
+
+    #[test]
+    fn hybrid_defaults_match_policy_spec() {
+        // KeepAliveSpec::hybrid_histogram must stay in lockstep with
+        // PolicySpec::hybrid_histogram's default tuning.
+        let a = KeepAliveSpec::hybrid_histogram(3_600.0, 60.0).build().describe();
+        let b = PolicySpec::hybrid_histogram(3_600.0, 60.0).describe();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn validate_catches_semantic_errors() {
+        let bad = ScenarioSpec::new("x").with_horizon(-5.0);
+        assert!(bad.validate().unwrap_err().to_string().contains("horizon"));
+
+        let bad = ScenarioSpec::new("x").with_experiment(ExperimentSpec::ensemble(0));
+        assert!(bad.validate().unwrap_err().to_string().contains("replications"));
+
+        let bad = ScenarioSpec::new("x")
+            .with_experiment(ExperimentSpec::Fleet(FleetScenario::new(0)));
+        assert!(bad.validate().unwrap_err().to_string().contains("functions"));
+
+        let bad = ScenarioSpec::new("x").with_experiment(ExperimentSpec::Sweep {
+            rates: vec![],
+            thresholds: vec![600.0],
+        });
+        assert!(bad.validate().unwrap_err().to_string().contains("sweep"));
+
+        let c = CostSpec { memory_mb: 0.0, ..CostSpec::default() };
+        let bad = ScenarioSpec::new("x").with_cost(c);
+        assert!(bad.validate().unwrap_err().to_string().contains("memory_mb"));
+    }
+
+    #[test]
+    fn zero_interval_arrivals_are_rejected_not_hung() {
+        // A process that always draws 0 would freeze simulated time
+        // (arrivals reschedule at now+0 forever); validate must catch it.
+        for arrival in [
+            ProcessSpec::Constant(0.0),
+            ProcessSpec::Empirical(vec![0.0, 0.0]),
+            ProcessSpec::Gaussian { mean: -5.0, std: 0.0 },
+        ] {
+            let bad = ScenarioSpec::new("x").with_arrival(arrival.clone());
+            let err = bad.validate().unwrap_err().to_string();
+            assert!(err.contains("stall"), "{arrival:?}: {err}");
+        }
+        // Positive draws remain possible: these must stay valid.
+        ScenarioSpec::new("x")
+            .with_arrival(ProcessSpec::Empirical(vec![0.0, 1.0]))
+            .validate()
+            .unwrap();
+        ScenarioSpec::new("x")
+            .with_arrival(ProcessSpec::Gaussian { mean: -1.0, std: 2.0 })
+            .validate()
+            .unwrap();
+        // And a zero *service* time is fine — only the arrival clock stalls.
+        ScenarioSpec::new("x")
+            .with_services(ProcessSpec::Constant(0.0), ProcessSpec::Constant(0.0))
+            .validate()
+            .unwrap();
+    }
+
+    #[test]
+    fn sweep_rejects_axes_the_grid_would_silently_override() {
+        let sweep = ExperimentSpec::Sweep { rates: vec![0.5], thresholds: vec![600.0] };
+        // A custom arrival would be replaced by Poisson(rate) per point.
+        let bad = ScenarioSpec::new("x")
+            .with_arrival(ProcessSpec::Mmpp { rates: [1.0, 5.0], switch: [0.1, 0.1] })
+            .with_experiment(sweep.clone());
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("arrival"), "{err}");
+        // A stochastic expiration would defeat the whole threshold grid.
+        let bad = ScenarioSpec::new("x")
+            .with_expiration_process(ProcessSpec::ExpMean(600.0))
+            .with_experiment(sweep.clone());
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("expiration_process"), "{err}");
+        // Negative thresholds are as invalid as everywhere else.
+        let bad = ScenarioSpec::new("x").with_experiment(ExperimentSpec::Sweep {
+            rates: vec![0.5],
+            thresholds: vec![-100.0],
+        });
+        assert!(bad.validate().unwrap_err().to_string().contains("thresholds"));
+        // The CLI translator's shape stays valid.
+        ScenarioSpec::new("x").with_experiment(sweep).validate().unwrap();
+    }
+
+    #[test]
+    fn cost_axis_restricted_to_priced_experiments() {
+        // Steady and fleet price their results; everything else must
+        // reject the axis instead of silently ignoring it.
+        ScenarioSpec::new("x").with_cost(CostSpec::default()).validate().unwrap();
+        ScenarioSpec::new("x")
+            .with_experiment(ExperimentSpec::Fleet(FleetScenario::new(2)))
+            .with_cost(CostSpec::default())
+            .validate()
+            .unwrap();
+        for experiment in [
+            ExperimentSpec::temporal(2),
+            ExperimentSpec::ensemble(2),
+            ExperimentSpec::Sweep { rates: vec![0.5], thresholds: vec![600.0] },
+            ExperimentSpec::Compare { service_mean: 2.0, markovian_expiration: false },
+        ] {
+            let bad = ScenarioSpec::new("x")
+                .with_experiment(experiment.clone())
+                .with_cost(CostSpec::default());
+            let err = bad.validate().unwrap_err().to_string();
+            assert!(err.contains("cost"), "{experiment:?}: {err}");
+        }
+    }
+}

@@ -16,15 +16,30 @@ fn simfaas(args: &[&str]) -> (bool, String) {
     (out.status.success(), text)
 }
 
+/// Every subcommand the binary dispatches. `simfaas help` and the
+/// unknown-command error must list each one (both derive from the same
+/// command table in main.rs; this pins the table against rot).
+const ALL_COMMANDS: &[&str] = &[
+    "run", "steady", "temporal", "ensemble", "fleet", "sweep", "emulate", "validate",
+    "compare", "cost", "identify", "probe", "figures",
+];
+
 #[test]
-fn help_lists_commands() {
+fn help_lists_every_command() {
     let (ok, text) = simfaas(&["help"]);
     assert!(ok);
-    for cmd in [
-        "steady", "temporal", "ensemble", "fleet", "sweep", "emulate", "validate", "cost",
-        "figures",
-    ] {
+    for cmd in ALL_COMMANDS {
         assert!(text.contains(cmd), "help missing {cmd}: {text}");
+    }
+}
+
+#[test]
+fn unknown_command_enumerates_every_command() {
+    let (ok, text) = simfaas(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown command"), "{text}");
+    for cmd in ALL_COMMANDS {
+        assert!(text.contains(cmd), "unknown-command message missing {cmd}: {text}");
     }
 }
 
@@ -237,13 +252,105 @@ fn cost_reports_monthly() {
 }
 
 #[test]
-fn unknown_command_and_flag_fail() {
-    let (ok, text) = simfaas(&["frobnicate"]);
-    assert!(!ok);
-    assert!(text.contains("unknown command"));
+fn unknown_flag_fails_before_simulating() {
+    // A typo'd flag must error without first burning a full
+    // default-parameter run (steady's default horizon is 1e6 s).
     let (ok, text) = simfaas(&["steady", "--horizont", "1"]);
     assert!(!ok);
     assert!(text.contains("unknown flag"), "{text}");
+    assert!(!text.contains("Cold Start Probability"), "{text}");
+}
+
+#[test]
+fn stray_positional_fails_fast() {
+    // `steady 5` (typo for `--rate 5`) must fail before any simulation
+    // output, not after running a full default-parameter run.
+    let (ok, text) = simfaas(&["steady", "5"]);
+    assert!(!ok);
+    assert!(text.contains("unexpected positional"), "{text}");
+    assert!(!text.contains("Cold Start Probability"), "{text}");
+    // Same for an extra operand after `run`'s scenario file.
+    let (ok, text) = simfaas(&["run", "a.json", "b.json"]);
+    assert!(!ok);
+    assert!(text.contains("unexpected positional"), "{text}");
+}
+
+fn scenarios_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/scenarios")
+}
+
+/// The acceptance contract: `simfaas run` executes every bundled scenario
+/// end to end (the CI workflow repeats this against the release binary).
+#[test]
+fn run_executes_all_bundled_scenarios() {
+    let mut seen = 0;
+    for entry in std::fs::read_dir(scenarios_dir()).expect("examples/scenarios exists") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let (ok, text) = simfaas(&["run", path.to_str().unwrap()]);
+        assert!(ok, "{path:?} failed: {text}");
+        assert!(!text.trim().is_empty(), "{path:?} produced no output");
+        seen += 1;
+    }
+    assert!(seen >= 8, "expected the bundled scenario set, found {seen}");
+}
+
+/// `simfaas run` on a spec mirroring the `steady` translator defaults
+/// prints byte-identical JSON to `steady --json` — the CLI-level
+/// regression for the flags→spec rework.
+#[test]
+fn run_matches_steady_subcommand_output() {
+    let dir = std::env::temp_dir().join(format!("simfaas-run-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec = dir.join("steady_equiv.json");
+    std::fs::write(
+        &spec,
+        r#"{"name":"equiv","run":{"horizon":20000,"seed":1},"experiment":{"type":"steady"},"output":{"format":"json"}}"#,
+    )
+    .unwrap();
+    let (ok, via_run) = simfaas(&["run", spec.to_str().unwrap()]);
+    assert!(ok, "{via_run}");
+    let (ok, via_steady) = simfaas(&["steady", "--horizon", "20000", "--seed", "1", "--json"]);
+    assert!(ok, "{via_steady}");
+    assert_eq!(via_run, via_steady, "scenario file and flag path diverged");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_print_spec_echoes_canonical_json() {
+    let path = scenarios_dir().join("table1_steady.json");
+    let (ok, text) = simfaas(&["run", path.to_str().unwrap(), "--print-spec"]);
+    assert!(ok, "{text}");
+    let line = text.lines().find(|l| l.starts_with('{')).expect("json line");
+    assert!(line.contains("\"experiment\""), "{line}");
+    assert!(line.contains("\"table1-steady\""), "{line}");
+    // --print-spec must not run the simulation.
+    assert!(!text.contains("Cold Start Probability"), "{text}");
+}
+
+#[test]
+fn run_rejects_missing_and_malformed_specs() {
+    let (ok, text) = simfaas(&["run"]);
+    assert!(!ok);
+    assert!(text.contains("usage: simfaas run"), "{text}");
+
+    let (ok, text) = simfaas(&["run", "/nonexistent/scenario.json"]);
+    assert!(!ok);
+    assert!(text.contains("reading"), "{text}");
+
+    let dir = std::env::temp_dir().join(format!("simfaas-bad-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let bad = dir.join("bad.json");
+    std::fs::write(&bad, r#"{"name":"x","experiment":{"type":"warp"}}"#).unwrap();
+    let (ok, text) = simfaas(&["run", bad.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(
+        text.contains("steady|temporal|ensemble|sweep|compare|fleet"),
+        "{text}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

@@ -1,0 +1,204 @@
+//! Scenario-layer integration tests: bundled spec files parse (golden
+//! files), builder → JSON → parse → run is bit-identical to builder → run,
+//! and malformed files fail with errors that name the problem.
+
+use simfaas::scenario::{
+    run_scenario, run_scenario_to_string, ExperimentSpec, FleetScenario, KeepAliveSpec,
+    OutputFormat, ProcessSpec, ScenarioReport, ScenarioSpec,
+};
+use std::path::PathBuf;
+
+fn scenarios_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/scenarios")
+}
+
+#[test]
+fn every_bundled_scenario_parses_and_validates() {
+    let mut seen = 0;
+    for entry in std::fs::read_dir(scenarios_dir()).expect("examples/scenarios exists") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let spec = ScenarioSpec::from_json_str(&text)
+            .unwrap_or_else(|e| panic!("{path:?} failed to parse: {e:#}"));
+        spec.validate().unwrap_or_else(|e| panic!("{path:?} failed to validate: {e:#}"));
+        assert!(!spec.name.is_empty(), "{path:?} has an empty name");
+        // Canonical re-serialization still parses to the same spec.
+        let back = ScenarioSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(back, spec, "{path:?} is not canonical-stable");
+        seen += 1;
+    }
+    assert!(seen >= 8, "expected the bundled scenario set, found {seen}");
+}
+
+#[test]
+fn golden_table1_scenario_has_expected_fields() {
+    let text = std::fs::read_to_string(scenarios_dir().join("table1_steady.json")).unwrap();
+    let spec = ScenarioSpec::from_json_str(&text).unwrap();
+    assert_eq!(spec.name, "table1-steady");
+    assert_eq!(spec.experiment, ExperimentSpec::Steady);
+    assert_eq!(spec.workload.arrival, ProcessSpec::ExpRate(0.9));
+    assert_eq!(spec.platform.warm_service, ProcessSpec::ExpMean(1.991));
+    assert_eq!(spec.platform.cold_service, ProcessSpec::ExpMean(2.244));
+    assert_eq!(spec.platform.expiration_threshold, 600.0);
+    assert_eq!(spec.platform.max_concurrency, 1000);
+    assert_eq!(spec.run.horizon, 200_000.0);
+    assert_eq!(spec.run.skip_initial, 100.0);
+    assert_eq!(spec.run.seed, 0x5EED);
+    assert_eq!(spec.output.format, OutputFormat::Table);
+    assert!(spec.cost.is_none());
+}
+
+#[test]
+fn golden_fleet_comparison_scenario_has_expected_shape() {
+    let text =
+        std::fs::read_to_string(scenarios_dir().join("fleet_policy_comparison.json")).unwrap();
+    let spec = ScenarioSpec::from_json_str(&text).unwrap();
+    match &spec.experiment {
+        ExperimentSpec::Fleet(f) => {
+            assert_eq!(f.functions, 10);
+            assert_eq!(f.compare_thresholds, vec![60.0, 600.0]);
+            assert_eq!(f.compare_extra.len(), 1);
+            assert!(matches!(f.compare_extra[0], KeepAliveSpec::HybridHistogram { .. }));
+        }
+        other => panic!("expected fleet experiment, got {other:?}"),
+    }
+    assert_eq!(spec.run.seed, 0xCAFE);
+}
+
+/// The acceptance contract: builder → JSON → parse → run must be
+/// bit-identical to builder → run, for a spec exercising every axis.
+#[test]
+fn json_roundtrip_execution_is_bit_identical() {
+    let specs = vec![
+        ScenarioSpec::new("steady-rt")
+            .with_arrival(ProcessSpec::Mmpp { rates: [1.8, 0.2], switch: [0.03, 0.04] })
+            .with_batch_size(ProcessSpec::Constant(2.0))
+            .with_services(
+                ProcessSpec::LogNormal { mean: 1.4, cv: 0.5 },
+                ProcessSpec::Weibull { shape: 2.0, scale: 2.5 },
+            )
+            .with_expiration_process(ProcessSpec::Gaussian { mean: 500.0, std: 40.0 })
+            .with_horizon(5_000.0)
+            .with_seed(11),
+        ScenarioSpec::new("ensemble-rt")
+            .with_horizon(3_000.0)
+            .with_seed(13)
+            .with_experiment(ExperimentSpec::Ensemble {
+                replications: 4,
+                threads: 2,
+                thresholds: vec![120.0, 900.0],
+            }),
+        ScenarioSpec::new("fleet-rt")
+            .with_horizon(1_200.0)
+            .with_skip_initial(0.0)
+            .with_seed(17)
+            .with_experiment(ExperimentSpec::Fleet(
+                FleetScenario::new(6)
+                    .with_policy(KeepAliveSpec::hybrid_histogram(1_800.0, 30.0))
+                    .with_threads(2),
+            )),
+    ];
+    for spec in specs {
+        let reparsed = ScenarioSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(reparsed, spec, "{} changed across serialization", spec.name);
+        // Rendered text must match exactly, and — since rendering rounds —
+        // the underlying reports are also compared bit-for-bit below.
+        let a = run_scenario_to_string(&spec).unwrap();
+        let b = run_scenario_to_string(&reparsed).unwrap();
+        assert_eq!(a, b, "{} render diverged after round trip", spec.name);
+        let (ra, rb) = (run_scenario(&spec).unwrap(), run_scenario(&reparsed).unwrap());
+        match (ra, rb) {
+            (
+                ScenarioReport::Steady { results: x, .. },
+                ScenarioReport::Steady { results: y, .. },
+            ) => {
+                assert_eq!(x.total_requests, y.total_requests);
+                assert_eq!(x.cold_start_prob.to_bits(), y.cold_start_prob.to_bits());
+                assert_eq!(x.avg_server_count.to_bits(), y.avg_server_count.to_bits());
+            }
+            (
+                ScenarioReport::EnsembleGrid { grid: x, .. },
+                ScenarioReport::EnsembleGrid { grid: y, .. },
+            ) => {
+                for ((tha, ea), (thb, eb)) in x.iter().zip(&y) {
+                    assert_eq!(tha, thb);
+                    for (p, q) in ea.runs.iter().zip(&eb.runs) {
+                        assert_eq!(p.total_requests, q.total_requests);
+                        assert_eq!(
+                            p.avg_server_count.to_bits(),
+                            q.avg_server_count.to_bits()
+                        );
+                    }
+                }
+            }
+            (
+                ScenarioReport::Fleet { results: x, cost: cx, .. },
+                ScenarioReport::Fleet { results: y, cost: cy, .. },
+            ) => {
+                assert_eq!(x.names, y.names);
+                assert_eq!(x.aggregate.total_requests, y.aggregate.total_requests);
+                assert_eq!(
+                    x.aggregate.avg_server_count.to_bits(),
+                    y.aggregate.avg_server_count.to_bits()
+                );
+                assert_eq!(
+                    cx.total.developer_total().to_bits(),
+                    cy.total.developer_total().to_bits()
+                );
+            }
+            _ => panic!("report kinds diverged"),
+        }
+    }
+}
+
+#[test]
+fn malformed_scenarios_fail_with_named_errors() {
+    for (text, needle) in [
+        // Not JSON at all.
+        ("{ not json", "not valid JSON"),
+        // Wrong top-level shape.
+        ("[1,2,3]", "scenario must be a JSON object"),
+        // Missing required fields.
+        (r#"{"name":"x"}"#, "experiment"),
+        // Unknown experiment type lists the accepted set.
+        (
+            r#"{"name":"x","experiment":{"type":"autoscale"}}"#,
+            "steady|temporal|ensemble|sweep|compare|fleet",
+        ),
+        // Typo'd key (the scenario analogue of an unknown flag).
+        (
+            r#"{"name":"x","experiment":{"type":"steady"},"platform":{"warm_servce":{"type":"exp","rate":1}}}"#,
+            "unknown key",
+        ),
+        // Bad process parameterization.
+        (
+            r#"{"name":"x","experiment":{"type":"steady"},"workload":{"arrival":{"type":"exp"}}}"#,
+            "exactly one",
+        ),
+        // Type error with the field path.
+        (
+            r#"{"name":"x","experiment":{"type":"ensemble","replications":"ten"}}"#,
+            "experiment.replications",
+        ),
+        // Bad provider name lists the options.
+        (
+            r#"{"name":"x","experiment":{"type":"steady"},"cost":{"provider":"oraclecloud"}}"#,
+            "aws|gcf|google|azure|ibm",
+        ),
+    ] {
+        let err = format!("{:#}", ScenarioSpec::from_json_str(text).unwrap_err());
+        assert!(err.contains(needle), "input {text:?}: error {err:?} lacks {needle:?}");
+    }
+
+    // Semantically invalid (well-formed JSON) fails at run time with the
+    // field named.
+    let spec = ScenarioSpec::from_json_str(
+        r#"{"name":"x","experiment":{"type":"temporal","replications":0}}"#,
+    )
+    .unwrap();
+    let err = run_scenario(&spec).unwrap_err().to_string();
+    assert!(err.contains("temporal.replications"), "{err}");
+}
