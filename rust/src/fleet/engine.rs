@@ -1,32 +1,35 @@
 //! Fleet-internal discrete-event machinery: a function-tagged event queue
 //! and the per-function engine.
 //!
-//! [`FunctionEngine`] is the fleet counterpart of
-//! [`crate::sim::ServerlessSimulator`]: the same scale-per-request model
+//! [`FunctionEngine`] is the fleet configuration of the one shared
+//! lifecycle core ([`crate::sim::core::EngineCore`]) — the same
+//! scale-per-request model as [`crate::sim::ServerlessSimulator`]
 //! (newest-first routing, generation-guarded lazy expiration, lazy level
-//! sync, O(1) bookkeeping — see DESIGN.md §Perf), restructured as an event
-//! *handler* instead of a self-contained loop so that
+//! sync, O(1) bookkeeping — see DESIGN.md §Perf), differing only through
+//! its [`crate::sim::core::LifecycleHooks`]:
 //!
-//! * N engines can interleave on one [`FleetQueue`] when a fleet-wide
-//!   concurrency cap couples them through admission ([`FleetGate`]), and
 //! * expiration thresholds come from a pluggable
-//!   [`super::policy::KeepAlivePolicy`] instead of a fixed config field.
+//!   [`super::policy::KeepAlivePolicy`] instead of a config field,
+//! * cold starts are additionally admitted against the fleet-wide
+//!   [`FleetGate`] so N engines can couple through one shared capacity on
+//!   a single [`FleetQueue`], and
+//! * with a positive provisioning lead, the policy's head-percentile arm
+//!   drives prewarm ([`Event::Provision`]) events through the core.
 //!
 //! **Bit-identity contract**: with a [`super::policy::FixedExpiration`]
-//! policy and an unbounded gate, an engine consumes its RNG in exactly the
-//! same sequence as `ServerlessSimulator` (first-arrival draw, per-epoch
-//! batch/service draws, next-arrival draw) and schedules events in the same
-//! order, so a 1-function fleet reproduces the core simulator's
-//! [`SimResults`] bit-for-bit on the same seed. `fleet::simulator` pins
-//! this with a regression test; any change to the draw order here must keep
-//! it green.
+//! policy, an unbounded gate and prewarm disabled, an engine consumes its
+//! RNG in exactly the same sequence as `ServerlessSimulator`
+//! (first-arrival draw, per-epoch batch/service draws, next-arrival draw)
+//! and schedules events in the same order, so a 1-function fleet
+//! reproduces the core simulator's [`SimResults`] bit-for-bit on the same
+//! seed. Since the unification this is the same code path by
+//! construction; `fleet::simulator` and `tests/engine_unification.rs`
+//! still pin it.
 
 use super::policy::KeepAlivePolicy;
 use super::simulator::{ArrivalMode, FunctionSpec};
+use crate::sim::core::{CoreParams, EngineCore, LifecycleHooks, Scheduler};
 use crate::sim::event::Event;
-use crate::sim::hist::CountDistribution;
-use crate::sim::instance::{FunctionInstance, InstanceId, InstanceState};
-use crate::sim::metrics::{OnlineStats, P2Quantile, TimeWeighted};
 use crate::sim::process::Process;
 use crate::sim::results::SimResults;
 use crate::sim::rng::Rng;
@@ -65,20 +68,22 @@ impl PartialOrd for Scheduled {
     }
 }
 
-/// Future event list shared by every function in a fleet run.
+/// Future event list shared by every function in a fleet run. Private to
+/// the fleet module: external callers drive fleets through
+/// [`super::simulator::FleetConfig`].
 #[derive(Debug, Default)]
-pub(crate) struct FleetQueue {
+pub(super) struct FleetQueue {
     heap: BinaryHeap<Scheduled>,
     seq: u64,
 }
 
 impl FleetQueue {
-    pub(crate) fn with_capacity(cap: usize) -> Self {
+    pub(super) fn with_capacity(cap: usize) -> Self {
         FleetQueue { heap: BinaryHeap::with_capacity(cap), seq: 0 }
     }
 
     #[inline]
-    pub(crate) fn schedule(&mut self, at: SimTime, func: u32, event: Event) {
+    pub(super) fn schedule(&mut self, at: SimTime, func: u32, event: Event) {
         debug_assert!(at.is_finite(), "cannot schedule at infinity");
         let seq = self.seq;
         self.seq += 1;
@@ -86,35 +91,95 @@ impl FleetQueue {
     }
 
     #[inline]
-    pub(crate) fn pop(&mut self) -> Option<(SimTime, u32, Event)> {
+    pub(super) fn pop(&mut self) -> Option<(SimTime, u32, Event)> {
         self.heap.pop().map(|s| (s.at, s.func, s.event))
+    }
+}
+
+/// [`Scheduler`] adapter tagging every scheduled event with its function
+/// index — how N cores share one [`FleetQueue`].
+struct FuncScheduler<'a> {
+    queue: &'a mut FleetQueue,
+    func: u32,
+}
+
+impl Scheduler for FuncScheduler<'_> {
+    #[inline]
+    fn schedule(&mut self, at: SimTime, event: Event) {
+        self.queue.schedule(at, self.func, event);
     }
 }
 
 /// Fleet-wide admission state: the shared live-instance count checked (and
 /// charged) on every cold start. With `cap = usize::MAX` the gate never
 /// binds and functions evolve independently — the sharded runner's case.
+/// Private to the fleet module (coupling is an implementation detail of
+/// `FleetConfig::run`).
 #[derive(Debug, Clone)]
-pub(crate) struct FleetGate {
-    pub live: usize,
-    pub cap: usize,
+pub(super) struct FleetGate {
+    pub(super) live: usize,
+    pub(super) cap: usize,
     /// Rejections attributable to the fleet cap alone (the per-function
     /// concurrency limit would have admitted the request).
-    pub cap_rejections: u64,
+    pub(super) cap_rejections: u64,
 }
 
 impl FleetGate {
-    pub(crate) fn unbounded() -> Self {
+    pub(super) fn unbounded() -> Self {
         FleetGate { live: 0, cap: usize::MAX, cap_rejections: 0 }
     }
 
-    pub(crate) fn capped(cap: usize) -> Self {
+    pub(super) fn capped(cap: usize) -> Self {
         FleetGate { live: 0, cap, cap_rejections: 0 }
     }
 }
 
+/// The fleet hook set: policy-driven keep-alive (and its prewarm arm) plus
+/// gate-checked admission. Built per event-handler call from borrows of
+/// the engine's policy and the run's shared gate.
+struct FleetHooks<'a> {
+    policy: &'a mut dyn KeepAlivePolicy,
+    gate: &'a mut FleetGate,
+}
+
+impl LifecycleHooks for FleetHooks<'_> {
+    fn keep_alive(&mut self, now: f64, rng: &mut Rng) -> f64 {
+        self.policy.keep_alive(now, rng)
+    }
+
+    fn on_arrival_epoch(&mut self, now: f64) {
+        // Adaptive policies observe every arrival epoch (no RNG use, so
+        // the FixedExpiration bit-identity contract is unaffected).
+        self.policy.on_arrival(now);
+    }
+
+    fn admit_cold(&mut self) -> bool {
+        self.gate.live < self.gate.cap
+    }
+
+    fn on_cold_start(&mut self) {
+        self.gate.live += 1;
+    }
+
+    fn on_expire(&mut self) {
+        self.gate.live -= 1;
+    }
+
+    fn on_gate_only_rejection(&mut self) {
+        self.gate.cap_rejections += 1;
+    }
+
+    fn prewarm_ready_at(&mut self, now: f64) -> Option<f64> {
+        self.policy.predict_next_arrival(now)
+    }
+
+    fn prewarm_keep_alive(&mut self, now: f64, rng: &mut Rng) -> f64 {
+        self.policy.prewarm_keep_alive(now, rng)
+    }
+}
+
 /// Per-function arrival source.
-pub(crate) enum ArrivalRuntime {
+pub(super) enum ArrivalRuntime {
     /// Inter-arrival process (the core simulator's model).
     Process(Process),
     /// Replay of pre-materialized absolute arrival times (sorted), e.g. a
@@ -122,50 +187,22 @@ pub(crate) enum ArrivalRuntime {
     Trace { times: Arc<Vec<f64>>, next: usize },
 }
 
-/// One function's simulation state within a fleet run.
-pub(crate) struct FunctionEngine {
+/// One function's simulation state within a fleet run: an [`EngineCore`]
+/// plus the fleet-specific arrival source and keep-alive policy.
+pub(super) struct FunctionEngine {
     func: u32,
     arrival: ArrivalRuntime,
-    batch_size: Option<Process>,
-    warm_service: Process,
-    cold_service: Process,
-    max_concurrency: usize,
+    core: EngineCore,
     policy: Box<dyn KeepAlivePolicy>,
-    rng: Rng,
-    now: SimTime,
-
-    instances: Vec<FunctionInstance>,
-    idle_pool: Vec<InstanceId>,
-    live_count: usize,
-    busy_count: usize,
-
-    stats_started: bool,
-    stats_start: SimTime,
-    total_requests: u64,
-    cold_requests: u64,
-    warm_requests: u64,
-    rejected_requests: u64,
-    instances_created: u64,
-    instances_expired: u64,
-    server_count_tw: TimeWeighted,
-    running_tw: TimeWeighted,
-    count_dist: CountDistribution,
-    lifespan_stats: OnlineStats,
-    response_stats: OnlineStats,
-    warm_response_stats: OnlineStats,
-    cold_response_stats: OnlineStats,
-    response_p50: P2Quantile,
-    response_p95: P2Quantile,
-    response_p99: P2Quantile,
-    billed_seconds: f64,
 }
 
 impl FunctionEngine {
-    pub(crate) fn new(
+    pub(super) fn new(
         func: u32,
         spec: &FunctionSpec,
-        policy: Box<dyn KeepAlivePolicy>,
+        mut policy: Box<dyn KeepAlivePolicy>,
         skip_initial: f64,
+        prewarm_lead: f64,
     ) -> Self {
         let arrival = match &spec.arrival {
             // Fresh process state per engine (the fleet analogue of
@@ -174,50 +211,30 @@ impl FunctionEngine {
             ArrivalMode::Process(p) => ArrivalRuntime::Process(p.replica()),
             ArrivalMode::Trace(t) => ArrivalRuntime::Trace { times: Arc::clone(t), next: 0 },
         };
-        let start = SimTime::ZERO;
-        FunctionEngine {
-            func,
-            arrival,
-            batch_size: spec.batch_size.as_ref().map(Process::replica),
+        if prewarm_lead > 0.0 {
+            policy.enable_prewarm(prewarm_lead);
+        }
+        let core = EngineCore::new(CoreParams {
+            seed: spec.seed,
             warm_service: spec.warm_service.replica(),
             cold_service: spec.cold_service.replica(),
+            batch_size: spec.batch_size.as_ref().map(Process::replica),
             max_concurrency: spec.max_concurrency,
-            policy,
-            rng: Rng::new(spec.seed),
-            now: start,
-            instances: Vec::with_capacity(64),
-            idle_pool: Vec::with_capacity(16),
-            live_count: 0,
-            busy_count: 0,
-            stats_started: skip_initial <= 0.0,
-            stats_start: SimTime::from_secs(skip_initial.max(0.0)),
-            total_requests: 0,
-            cold_requests: 0,
-            warm_requests: 0,
-            rejected_requests: 0,
-            instances_created: 0,
-            instances_expired: 0,
-            server_count_tw: TimeWeighted::new(start, 0.0),
-            running_tw: TimeWeighted::new(start, 0.0),
-            count_dist: CountDistribution::new(start, 0),
-            lifespan_stats: OnlineStats::new(),
-            response_stats: OnlineStats::new(),
-            warm_response_stats: OnlineStats::new(),
-            cold_response_stats: OnlineStats::new(),
-            response_p50: P2Quantile::new(0.5),
-            response_p95: P2Quantile::new(0.95),
-            response_p99: P2Quantile::new(0.99),
-            billed_seconds: 0.0,
-        }
+            skip_initial,
+            concurrency_value: 1,
+            prewarm_lead,
+            instance_capacity: 64,
+        });
+        FunctionEngine { func, arrival, core, policy }
     }
 
     /// Schedule this function's first arrival. For process arrivals this
     /// consumes one draw — the same first draw `ServerlessSimulator::run`
     /// makes before entering its loop.
-    pub(crate) fn schedule_first_arrival(&mut self, queue: &mut FleetQueue) {
+    pub(super) fn schedule_first_arrival(&mut self, queue: &mut FleetQueue) {
         match &mut self.arrival {
             ArrivalRuntime::Process(p) => {
-                let first = p.sample(&mut self.rng);
+                let first = p.sample(&mut self.core.rng);
                 queue.schedule(SimTime::from_secs(first), self.func, Event::Arrival);
             }
             ArrivalRuntime::Trace { times, next } => {
@@ -230,220 +247,59 @@ impl FunctionEngine {
     }
 
     #[inline]
-    pub(crate) fn set_now(&mut self, t: SimTime) {
-        self.now = t;
+    pub(super) fn set_now(&mut self, t: SimTime) {
+        self.core.set_now(t);
     }
 
-    pub(crate) fn maybe_start_stats(&mut self, event_time: SimTime) {
-        if self.stats_started || event_time < self.stats_start {
-            return;
-        }
-        let boundary = self.stats_start;
-        self.server_count_tw.advance(boundary);
-        self.running_tw.advance(boundary);
-        self.count_dist.finish(boundary);
-        self.server_count_tw.reset_at(boundary);
-        self.running_tw.reset_at(boundary);
-        self.count_dist.reset_at(boundary);
-        self.stats_started = true;
+    pub(super) fn maybe_start_stats(&mut self, event_time: SimTime) {
+        self.core.maybe_start_stats(event_time);
     }
 
-    fn sync_levels(&mut self) {
-        self.server_count_tw.update(self.now, self.live_count as f64);
-        self.running_tw.update(self.now, self.busy_count as f64);
-        self.count_dist.update(self.now, self.live_count);
-    }
-
-    fn record_response(&mut self, rt: f64, cold: bool) {
-        if !self.stats_started {
-            return;
-        }
-        self.response_stats.push(rt);
-        if cold {
-            self.cold_response_stats.push(rt);
-        } else {
-            self.warm_response_stats.push(rt);
-        }
-        self.response_p50.push(rt);
-        self.response_p95.push(rt);
-        self.response_p99.push(rt);
-    }
-
-    fn alloc_instance(&mut self) -> InstanceId {
-        let id = InstanceId(self.instances.len() as u64);
-        self.instances.push(FunctionInstance::cold_start(id, self.now));
-        id
-    }
-
-    pub(crate) fn handle_arrival(&mut self, queue: &mut FleetQueue, gate: &mut FleetGate) {
-        // Adaptive policies observe every arrival epoch (no RNG use, so the
-        // FixedExpiration bit-identity contract is unaffected).
-        self.policy.on_arrival(self.now.as_secs());
-        let batch = match &self.batch_size {
-            None => 1,
-            Some(p) => {
-                let k = p.sample(&mut self.rng).round();
-                if k < 1.0 {
-                    1
-                } else {
-                    k as u64
-                }
-            }
-        };
-        let (live0, busy0) = (self.live_count, self.busy_count);
-        for _ in 0..batch {
-            self.route_one_request(queue, gate);
-        }
-        if self.live_count != live0 || self.busy_count != busy0 {
-            self.sync_levels();
-        }
-        // Schedule the next arrival epoch.
-        match &mut self.arrival {
-            ArrivalRuntime::Process(p) => {
-                let gap = p.sample(&mut self.rng);
-                queue.schedule(self.now.after(gap), self.func, Event::Arrival);
-            }
-            ArrivalRuntime::Trace { times, next } => {
-                if let Some(&t) = times.get(*next) {
-                    queue.schedule(SimTime::from_secs(t), self.func, Event::Arrival);
-                    *next += 1;
-                }
-            }
-        }
-    }
-
-    fn route_one_request(&mut self, queue: &mut FleetQueue, gate: &mut FleetGate) {
-        if self.stats_started {
-            self.total_requests += 1;
-        }
-        if let Some(id) = self.idle_pool.pop() {
-            // Warm start: newest idle instance.
-            let inst = &mut self.instances[id.0 as usize];
-            inst.start_warm(self.now);
-            self.busy_count += 1;
-            let service = self.warm_service.sample(&mut self.rng);
-            queue.schedule(self.now.after(service), self.func, Event::Departure(id));
-            if self.stats_started {
-                self.warm_requests += 1;
-                self.record_response(service, false);
-            }
-        } else if self.live_count < self.max_concurrency && gate.live < gate.cap {
-            // Cold start: admit against both the per-function concurrency
-            // limit and the fleet-wide cap.
-            gate.live += 1;
-            let id = self.alloc_instance();
-            self.live_count += 1;
-            self.busy_count += 1;
-            if self.stats_started {
-                self.instances_created += 1;
-            }
-            let service = self.cold_service.sample(&mut self.rng);
-            queue.schedule(self.now.after(service), self.func, Event::Departure(id));
-            if self.stats_started {
-                self.cold_requests += 1;
-                self.record_response(service, true);
-            }
-        } else if self.stats_started {
-            self.rejected_requests += 1;
-            if self.live_count < self.max_concurrency {
-                // Only the shared cap blocked this request — the coupling
-                // the fleet aggregate reports separately.
-                gate.cap_rejections += 1;
-            }
-        }
-    }
-
-    pub(crate) fn handle_departure(&mut self, queue: &mut FleetQueue, id: InstanceId) {
-        let gen;
+    /// Dispatch one event to this engine's core — the single entry point
+    /// both fleet run loops use, so a new core event variant is wired in
+    /// exactly one place. [`Event::Horizon`] terminates the loops and must
+    /// never reach here.
+    pub(super) fn handle_event(&mut self, queue: &mut FleetQueue, gate: &mut FleetGate, ev: Event) {
         {
-            let inst = &mut self.instances[id.0 as usize];
-            let busy = self.now.since(inst.busy_since).max(0.0);
-            gen = inst.finish_request(self.now, busy);
-            if self.stats_started {
-                self.billed_seconds += busy;
+            let mut sched = FuncScheduler { queue: &mut *queue, func: self.func };
+            let mut hooks = FleetHooks { policy: self.policy.as_mut(), gate };
+            match ev {
+                Event::Arrival => self.core.handle_arrival(&mut sched, &mut hooks),
+                Event::Departure(id) => self.core.handle_departure(&mut sched, &mut hooks, id),
+                Event::Expiration { id, gen } => {
+                    self.core.handle_expiration(&mut sched, &mut hooks, id, gen)
+                }
+                Event::Provision => self.core.handle_provision(&mut sched, &mut hooks),
+                Event::ProvisioningDone(id) => {
+                    self.core.handle_provisioning_done(&mut sched, &mut hooks, id)
+                }
+                Event::Horizon => unreachable!("the run loops terminate on Horizon"),
             }
         }
-        self.busy_count -= 1;
-        match self.idle_pool.binary_search(&id) {
-            Err(pos) => self.idle_pool.insert(pos, id),
-            Ok(_) => unreachable!("instance already idle"),
+        if matches!(ev, Event::Arrival) {
+            // Schedule the next arrival epoch (the arrival source is
+            // engine-specific: process draw or trace replay).
+            match &mut self.arrival {
+                ArrivalRuntime::Process(p) => {
+                    let gap = p.sample(&mut self.core.rng);
+                    let at = self.core.now().after(gap);
+                    queue.schedule(at, self.func, Event::Arrival);
+                }
+                ArrivalRuntime::Trace { times, next } => {
+                    if let Some(&t) = times.get(*next) {
+                        queue.schedule(SimTime::from_secs(t), self.func, Event::Arrival);
+                        *next += 1;
+                    }
+                }
+            }
         }
-        let threshold = self.policy.keep_alive(self.now.as_secs(), &mut self.rng);
-        queue.schedule(self.now.after(threshold), self.func, Event::Expiration { id, gen });
-        self.sync_levels();
-    }
-
-    pub(crate) fn handle_expiration(&mut self, id: InstanceId, gen: u64, gate: &mut FleetGate) {
-        let inst = &mut self.instances[id.0 as usize];
-        if inst.generation != gen || inst.state != InstanceState::Idle {
-            return; // stale event (instance reused or already busy)
-        }
-        inst.terminate(self.now);
-        let lifespan = inst.lifespan(self.now);
-        if let Ok(pos) = self.idle_pool.binary_search(&id) {
-            self.idle_pool.remove(pos);
-        }
-        self.live_count -= 1;
-        gate.live -= 1;
-        if self.stats_started {
-            self.instances_expired += 1;
-            self.lifespan_stats.push(lifespan);
-        }
-        self.sync_levels();
     }
 
     /// Close accumulators at the horizon and produce this function's
-    /// results (field-for-field the computation in
-    /// `ServerlessSimulator::finish`).
-    pub(crate) fn finish(&mut self, horizon: SimTime) -> SimResults {
-        self.now = horizon;
-        self.server_count_tw.advance(horizon);
-        self.running_tw.advance(horizon);
-        self.count_dist.finish(horizon);
-
-        let measured = horizon.since(self.stats_start).max(0.0);
-        let served = self.cold_requests + self.warm_requests;
-        let avg_server = self.server_count_tw.average();
-        let avg_running = self.running_tw.average();
-        let avg_idle = avg_server - avg_running;
-        SimResults {
-            measured_time: measured,
-            total_requests: self.total_requests,
-            cold_requests: self.cold_requests,
-            warm_requests: self.warm_requests,
-            rejected_requests: self.rejected_requests,
-            cold_start_prob: if served > 0 {
-                self.cold_requests as f64 / served as f64
-            } else {
-                0.0
-            },
-            rejection_prob: if self.total_requests > 0 {
-                self.rejected_requests as f64 / self.total_requests as f64
-            } else {
-                0.0
-            },
-            avg_lifespan: self.lifespan_stats.mean(),
-            instances_created: self.instances_created,
-            instances_expired: self.instances_expired,
-            avg_server_count: avg_server,
-            avg_running_count: avg_running,
-            avg_idle_count: avg_idle,
-            max_server_count: self.server_count_tw.max_level(),
-            wasted_capacity: if avg_server > 0.0 { avg_idle / avg_server } else { 0.0 },
-            avg_response_time: self.response_stats.mean(),
-            avg_warm_response_time: self.warm_response_stats.mean(),
-            avg_cold_response_time: self.cold_response_stats.mean(),
-            response_p50: self.response_p50.quantile(),
-            response_p95: self.response_p95.quantile(),
-            response_p99: self.response_p99.quantile(),
-            billed_instance_seconds: self.billed_seconds,
-            observed_arrival_rate: if measured > 0.0 {
-                self.total_requests as f64 / measured
-            } else {
-                0.0
-            },
-            instance_count_pmf: self.count_dist.pmf(),
-        }
+    /// results.
+    pub(super) fn finish(&mut self, horizon: SimTime) -> SimResults {
+        self.core.close(horizon);
+        self.core.results()
     }
 }
 
@@ -473,5 +329,22 @@ mod tests {
         let g = FleetGate::capped(5);
         assert_eq!(g.cap, 5);
         assert_eq!(g.live, 0);
+    }
+
+    #[test]
+    fn gate_hooks_charge_and_release() {
+        use crate::fleet::policy::FixedExpiration;
+        let mut gate = FleetGate::capped(2);
+        let mut policy: Box<dyn KeepAlivePolicy> = Box::new(FixedExpiration::new(600.0));
+        let mut hooks = FleetHooks { policy: policy.as_mut(), gate: &mut gate };
+        assert!(hooks.admit_cold());
+        hooks.on_cold_start();
+        hooks.on_cold_start();
+        assert!(!hooks.admit_cold());
+        hooks.on_gate_only_rejection();
+        hooks.on_expire();
+        assert!(hooks.admit_cold());
+        assert_eq!(gate.live, 1);
+        assert_eq!(gate.cap_rejections, 1);
     }
 }

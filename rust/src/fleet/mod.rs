@@ -11,11 +11,18 @@
 //!
 //! * [`policy`] — the [`KeepAlivePolicy`] trait, the paper's
 //!   [`FixedExpiration`] model, and the Azure-style
-//!   [`HybridHistogramPolicy`].
+//!   [`HybridHistogramPolicy`] with its head-percentile prewarm arm.
 //! * [`simulator`] — [`FleetConfig`] / [`FleetResults`]: sharded execution
 //!   for independent functions (bit-identical for any thread count),
 //!   single-queue coupled execution when the fleet cap binds, per-function
-//!   and aggregate metrics, and the [`fleet_cost`] pricing rollup.
+//!   and aggregate metrics (including prewarm starts / wasted-prewarm time
+//!   when `FleetConfig::prewarm_lead` is set), and the [`fleet_cost`]
+//!   pricing rollup.
+//!
+//! The per-function engine itself is a configuration of the unified
+//! lifecycle core ([`crate::sim::core`]): policy-driven keep-alive,
+//! gate-checked admission and prewarm events all plug in through
+//! [`crate::sim::core::LifecycleHooks`].
 //!
 //! `whatif::keepalive_policy_comparison` sweeps a fixed-threshold grid
 //! against adaptive policies on the same mix; the `fleet` CLI subcommand

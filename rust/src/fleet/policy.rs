@@ -38,6 +38,26 @@ pub trait KeepAlivePolicy: Send {
     /// from the inter-arrival sequence; the default ignores it).
     fn on_arrival(&mut self, _now: f64) {}
 
+    /// Opt the policy into prewarm (provisioning-lead) mode. Called once
+    /// at engine construction when the fleet runs with a positive
+    /// provisioning lead; policies without a prewarm arm ignore it (the
+    /// default), in which case the fleet behaves bit-identically to a
+    /// prewarm-disabled run.
+    fn enable_prewarm(&mut self, _lead: f64) {}
+
+    /// Predicted absolute time a warm instance should be ready (the
+    /// head-percentile prewarm arm). Consulted by the engine when the idle
+    /// pool drains; `None` (the default) schedules no prewarm.
+    fn predict_next_arrival(&mut self, _now: f64) -> Option<f64> {
+        None
+    }
+
+    /// Keep-alive window for a freshly prewarmed instance (covering the
+    /// predicted arrival). Defaults to the ordinary window.
+    fn prewarm_keep_alive(&mut self, now: f64, rng: &mut Rng) -> f64 {
+        self.keep_alive(now, rng)
+    }
+
     /// Human-readable description (used in policy-comparison reports).
     fn describe(&self) -> String;
 }
@@ -101,9 +121,24 @@ impl KeepAlivePolicy for StochasticExpiration {
 /// still cold (fewer than `min_samples` observations) or when the pattern
 /// escapes the histogram's range too often (`oob_threshold`) — the regimes
 /// where the production policy defers to a default window or ARIMA
-/// forecasting. The ARIMA arm and the head-percentile pre-warming arm are
-/// intentionally out of scope: the simulator models reactive cold starts
-/// only, and determinism is part of the fleet contract.
+/// forecasting. The ARIMA arm remains out of scope.
+///
+/// **Prewarm (head-percentile) arm.** When the fleet runs with a positive
+/// provisioning lead ([`KeepAlivePolicy::enable_prewarm`]), a confident
+/// histogram switches to the production policy's split window: instances
+/// unload immediately after serving (`keep_alive` returns 0) and the
+/// engine provisions a fresh instance so it is warm from the
+/// head-percentile predicted arrival
+/// ([`KeepAlivePolicy::predict_next_arrival`] =
+/// `last_arrival + head_bin·bin_len·(1 − margin)`) until the tail window
+/// ([`KeepAlivePolicy::prewarm_keep_alive`]). Gaps below the head
+/// percentile (≤ [`Self::DEFAULT_HEAD`] of traffic) pay a cold start —
+/// the trade the production policy accepts for reclaiming the idle tail.
+/// When the prediction cannot cover a future arrival (head percentile
+/// inside bin 0 on high-rate functions, or the head edge already elapsed
+/// by unload time), the policy keeps the ordinary tail window instead of
+/// unloading into uncoverable cold starts. Everything stays
+/// deterministic: no RNG draws in any arm.
 #[derive(Debug, Clone)]
 pub struct HybridHistogramPolicy {
     range: f64,
@@ -112,6 +147,7 @@ pub struct HybridHistogramPolicy {
     margin: f64,
     min_samples: u64,
     oob_threshold: f64,
+    prewarm: bool,
     bins: Vec<u64>,
     total: u64,
     oob: u64,
@@ -123,6 +159,11 @@ impl HybridHistogramPolicy {
     /// single source for [`Self::new`], [`PolicySpec::hybrid_histogram`]
     /// and the scenario layer's `KeepAliveSpec::hybrid_histogram`.
     pub const DEFAULT_TUNING: (f64, f64, u64, f64) = (0.99, 0.10, 8, 0.5);
+
+    /// Head percentile of the prewarm arm (Azure's hybrid policy uses the
+    /// 5th percentile of the inter-arrival histogram as the pre-warming
+    /// window).
+    pub const DEFAULT_HEAD: f64 = 0.05;
 
     /// `range` is both the histogram span and the fallback keep-alive
     /// window; `bin_len` the bin width (Azure uses 1-minute bins over a
@@ -151,6 +192,7 @@ impl HybridHistogramPolicy {
             margin,
             min_samples,
             oob_threshold,
+            prewarm: false,
             bins: vec![0; n_bins.max(1)],
             total: 0,
             oob: 0,
@@ -171,6 +213,48 @@ impl HybridHistogramPolicy {
         self.bins.len() - 1
     }
 
+    /// Index of the bin at the head percentile (the prewarm arm).
+    fn head_bin(&self) -> usize {
+        let target = ((self.total as f64 * Self::DEFAULT_HEAD).ceil() as u64).max(1);
+        let mut prefix = 0u64;
+        for (i, c) in self.bins.iter().enumerate() {
+            prefix += c;
+            if prefix >= target {
+                return i;
+            }
+        }
+        self.bins.len() - 1
+    }
+
+    /// Whether the histogram is warm and in-range enough to trust.
+    fn confident(&self) -> bool {
+        self.total >= self.min_samples && self.oob_rate() < self.oob_threshold
+    }
+
+    /// Lower edge of the head-percentile bin, shrunk by the safety margin
+    /// (the prewarmed instance is ready slightly *before* the predicted
+    /// arrival, mirroring the tail window's symmetric enlargement).
+    fn head_edge(&self) -> f64 {
+        self.head_bin() as f64 * self.bin_len * (1.0 - self.margin).max(0.0)
+    }
+
+    /// True when the head-arm prediction can still cover an arrival
+    /// strictly after `now` — the precondition for unloading an instance
+    /// instead of keeping the tail window. False whenever the head
+    /// percentile collapses into bin 0 (high-rate functions) or the
+    /// predicted time already passed (service longer than the head edge):
+    /// unloading there would guarantee a cold start the prewarm can never
+    /// cover.
+    fn prediction_usable(&self, now: f64) -> bool {
+        match self.last_arrival {
+            Some(last) => {
+                let edge = self.head_edge();
+                edge > 0.0 && last + edge > now
+            }
+            None => false,
+        }
+    }
+
     /// Fraction of observed inter-arrival times beyond the histogram range.
     pub fn oob_rate(&self) -> f64 {
         let seen = self.total + self.oob;
@@ -188,14 +272,44 @@ impl HybridHistogramPolicy {
 }
 
 impl KeepAlivePolicy for HybridHistogramPolicy {
-    fn keep_alive(&mut self, _now: f64, _rng: &mut Rng) -> f64 {
-        if self.total < self.min_samples || self.oob_rate() >= self.oob_threshold {
+    fn keep_alive(&mut self, now: f64, _rng: &mut Rng) -> f64 {
+        if !self.confident() {
             // Cold histogram or pattern escapes the range: conservative
             // default window (the production policy's fallback arm).
             return self.range;
         }
+        if self.prewarm && self.prediction_usable(now) {
+            // Head-arm active: unload immediately after serving; the
+            // engine's prewarm covers the predicted next arrival instead
+            // of an idle keep-alive tail. Without a usable prediction
+            // (gaps inside one bin, or the head edge already elapsed)
+            // fall through to the tail window — unloading would turn
+            // every subsequent request into an uncoverable cold start.
+            return 0.0;
+        }
         let window = (self.tail_bin() + 1) as f64 * self.bin_len * (1.0 + self.margin);
         window.min(self.range)
+    }
+
+    fn enable_prewarm(&mut self, lead: f64) {
+        self.prewarm = lead > 0.0;
+    }
+
+    fn predict_next_arrival(&mut self, now: f64) -> Option<f64> {
+        if !self.prewarm || !self.confident() || !self.prediction_usable(now) {
+            return None;
+        }
+        Some(self.last_arrival? + self.head_edge())
+    }
+
+    fn prewarm_keep_alive(&mut self, now: f64, rng: &mut Rng) -> f64 {
+        if !(self.prewarm && self.confident()) {
+            return self.keep_alive(now, rng);
+        }
+        // Stay warm from the head-percentile ready time to the tail
+        // window — the production policy's keep-alive half.
+        let tail_window = (self.tail_bin() + 1) as f64 * self.bin_len * (1.0 + self.margin);
+        (tail_window.min(self.range) - self.head_edge()).max(self.bin_len)
     }
 
     fn on_arrival(&mut self, now: f64) {
@@ -426,6 +540,77 @@ mod tests {
         let mut rng = Rng::new(7);
         assert_eq!(spec.build().keep_alive(0.0, &mut rng), 5.0);
         assert_eq!(spec.describe(), "always-5s");
+    }
+
+    #[test]
+    fn hybrid_prewarm_arm_splits_head_and_tail() {
+        let mut p = HybridHistogramPolicy::new(600.0, 10.0);
+        p.enable_prewarm(15.0);
+        let mut rng = Rng::new(8);
+        // While the histogram is cold the fallback window still applies
+        // and no prediction is made.
+        assert_eq!(p.keep_alive(0.0, &mut rng), 600.0);
+        assert_eq!(p.predict_next_arrival(0.0), None);
+        // Strictly periodic arrivals every 100 s -> head bin == tail bin
+        // == 10.
+        for k in 0..50 {
+            p.on_arrival(k as f64 * 100.0);
+        }
+        // Head arm: unload immediately...
+        assert_eq!(p.keep_alive(4_901.0, &mut rng), 0.0);
+        // ...be ready at last + 10*10*0.9 = 90 s after the last arrival...
+        assert_eq!(p.predict_next_arrival(4_901.0), Some(4_900.0 + 90.0));
+        // ...and stay warm from the head edge to the tail window:
+        // 11*10*1.1 - 90 = 31 s.
+        assert!((p.prewarm_keep_alive(4_990.0, &mut rng) - 31.0).abs() < 1e-9);
+        // A prediction in the past yields nothing (no prewarm loops after
+        // the workload goes quiet).
+        assert_eq!(p.predict_next_arrival(5_200.0), None);
+        // Disabling returns the tail keep-alive window.
+        p.enable_prewarm(0.0);
+        assert!((p.keep_alive(5_000.0, &mut rng) - 121.0).abs() < 1e-9);
+        assert_eq!(p.predict_next_arrival(4_901.0), None);
+    }
+
+    #[test]
+    fn hybrid_prewarm_falls_back_on_high_rate_workloads() {
+        // Gaps shorter than one bin: the head percentile collapses into
+        // bin 0, so no future arrival can ever be predicted. The prewarm
+        // arm must keep the tail window instead of unloading into
+        // guaranteed (uncoverable) cold starts.
+        let mut p = HybridHistogramPolicy::new(600.0, 10.0);
+        p.enable_prewarm(15.0);
+        for k in 0..50 {
+            p.on_arrival(k as f64 * 5.0);
+        }
+        let mut rng = Rng::new(10);
+        assert_eq!(p.predict_next_arrival(246.0), None);
+        // Tail bin is also bin 0 here: window = 1*10*1.1 = 11 s, not 0.
+        let w = p.keep_alive(246.0, &mut rng);
+        assert!((w - 11.0).abs() < 1e-9, "w={w}");
+        // Same fallback when the service time outlives the head edge:
+        // periodic 100 s arrivals (head edge 90) consulted 95 s after the
+        // last arrival.
+        let mut p = HybridHistogramPolicy::new(600.0, 10.0);
+        p.enable_prewarm(15.0);
+        for k in 0..50 {
+            p.on_arrival(k as f64 * 100.0);
+        }
+        assert_eq!(p.predict_next_arrival(4_995.0), None);
+        assert!((p.keep_alive(4_995.0, &mut rng) - 121.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_adaptive_policies_ignore_prewarm() {
+        let mut p = FixedExpiration::new(600.0);
+        p.enable_prewarm(30.0);
+        let mut rng = Rng::new(9);
+        assert_eq!(p.predict_next_arrival(10.0), None);
+        assert_eq!(p.keep_alive(10.0, &mut rng), 600.0);
+        assert_eq!(p.prewarm_keep_alive(10.0, &mut rng), 600.0);
+        let mut s = StochasticExpiration::new(Process::constant(5.0));
+        s.enable_prewarm(30.0);
+        assert_eq!(s.predict_next_arrival(10.0), None);
     }
 
     #[test]

@@ -97,6 +97,12 @@ pub struct FleetConfig {
     pub skip_initial: f64,
     /// Worker threads for the sharded path; 0 = one per available core.
     pub threads: usize,
+    /// Provisioning lead time for prewarm events in seconds. `0.0`
+    /// disables prewarming (bit-identical to the pre-prewarm engine); a
+    /// positive lead arms the policy's head-percentile prewarm arm (the
+    /// hybrid-histogram policy; fixed/stochastic policies predict nothing
+    /// and behave as if disabled).
+    pub prewarm_lead: f64,
 }
 
 impl FleetConfig {
@@ -116,6 +122,7 @@ impl FleetConfig {
             horizon: cfgs[0].horizon,
             skip_initial: cfgs[0].skip_initial,
             threads: 0,
+            prewarm_lead: 0.0,
         }
     }
 
@@ -161,6 +168,7 @@ impl FleetConfig {
             horizon,
             skip_initial,
             threads: 0,
+            prewarm_lead: 0.0,
         }
     }
 
@@ -179,8 +187,21 @@ impl FleetConfig {
         self
     }
 
+    /// Enable prewarm (provisioning-lead) events: instances provision
+    /// `lead` seconds before the policy's predicted arrivals. 0 disables.
+    pub fn with_prewarm_lead(mut self, lead: f64) -> Self {
+        self.prewarm_lead = lead;
+        self
+    }
+
     fn build_engine(&self, i: usize) -> FunctionEngine {
-        FunctionEngine::new(i as u32, &self.functions[i], self.policy.build(), self.skip_initial)
+        FunctionEngine::new(
+            i as u32,
+            &self.functions[i],
+            self.policy.build(),
+            self.skip_initial,
+            self.prewarm_lead,
+        )
     }
 
     /// Run the fleet to the horizon.
@@ -207,13 +228,10 @@ impl FleetConfig {
             while let Some((t, _f, ev)) = queue.pop() {
                 engine.maybe_start_stats(t);
                 engine.set_now(t);
-                match ev {
-                    Event::Arrival => engine.handle_arrival(&mut queue, &mut gate),
-                    Event::Departure(id) => engine.handle_departure(&mut queue, id),
-                    Event::Expiration { id, gen } => engine.handle_expiration(id, gen, &mut gate),
-                    Event::Horizon => break,
-                    Event::ProvisioningDone(_) => unreachable!("not used by the fleet engine"),
+                if matches!(ev, Event::Horizon) {
+                    break;
                 }
+                engine.handle_event(&mut queue, &mut gate, ev);
             }
             engine.finish(horizon)
         })
@@ -237,12 +255,7 @@ impl FleetConfig {
             let engine = &mut engines[f as usize];
             engine.maybe_start_stats(t);
             engine.set_now(t);
-            match ev {
-                Event::Arrival => engine.handle_arrival(&mut queue, &mut gate),
-                Event::Departure(id) => engine.handle_departure(&mut queue, id),
-                Event::Expiration { id, gen } => engine.handle_expiration(id, gen, &mut gate),
-                Event::Horizon | Event::ProvisioningDone(_) => unreachable!(),
-            }
+            engine.handle_event(&mut queue, &mut gate, ev);
         }
         let runs = engines.iter_mut().map(|e| e.finish(horizon)).collect();
         (runs, gate.cap_rejections)
@@ -284,6 +297,11 @@ pub struct FleetAggregate {
     pub response_p99: f64,
     pub billed_instance_seconds: f64,
     pub observed_arrival_rate: f64,
+    /// Prewarm (provisioning-lead) instances started across the fleet
+    /// (0 unless [`FleetConfig::prewarm_lead`] is positive).
+    pub prewarm_starts: u64,
+    /// Total lifespan of prewarmed instances that expired unused.
+    pub wasted_prewarm_seconds: f64,
 }
 
 impl FleetAggregate {
@@ -307,6 +325,8 @@ impl FleetAggregate {
         let mut p99 = 0.0;
         let mut life_w = 0.0;
         let mut life = 0.0;
+        let mut prewarms = 0u64;
+        let mut prewarm_waste = 0.0;
         for r in runs {
             total += r.total_requests;
             cold += r.cold_requests;
@@ -317,6 +337,8 @@ impl FleetAggregate {
             avg_server += r.avg_server_count;
             avg_running += r.avg_running_count;
             billed += r.billed_instance_seconds;
+            prewarms += r.prewarm_starts;
+            prewarm_waste += r.wasted_prewarm_seconds;
             let served = (r.cold_requests + r.warm_requests) as f64;
             if served > 0.0 {
                 resp_w += served;
@@ -359,6 +381,8 @@ impl FleetAggregate {
             } else {
                 0.0
             },
+            prewarm_starts: prewarms,
+            wasted_prewarm_seconds: prewarm_waste,
         }
     }
 
@@ -376,6 +400,8 @@ impl FleetAggregate {
             ("*Average Response Time", format!("{:.4} s", self.avg_response_time)),
             ("Response P95 (merged)", format!("{:.4} s", self.response_p95)),
             ("Billed instance-seconds", format!("{:.1}", self.billed_instance_seconds)),
+            ("Prewarm starts", format!("{}", self.prewarm_starts)),
+            ("Wasted prewarm time", format!("{:.1} s", self.wasted_prewarm_seconds)),
             ("Observed arrival rate", format!("{:.4} req/s", self.observed_arrival_rate)),
             ("Requests (total/cold/warm/rej)", format!(
                 "{}/{}/{}/{}",
@@ -581,6 +607,7 @@ mod tests {
                 horizon: 50_000.0,
                 skip_initial: 0.0,
                 threads: 1,
+                prewarm_lead: 0.0,
             }
             .run()
         };
@@ -668,10 +695,69 @@ mod tests {
             horizon: 100.0,
             skip_initial: 0.0,
             threads: 1,
+            prewarm_lead: 0.0,
         };
         let res = cfg.run();
         assert_eq!(res.aggregate.total_requests, 10);
         assert_eq!(res.aggregate.cold_requests, 1);
         assert_eq!(res.aggregate.warm_requests, 9);
+        assert_eq!(res.aggregate.prewarm_starts, 0);
+        assert_eq!(res.aggregate.wasted_prewarm_seconds, 0.0);
+    }
+
+    #[test]
+    fn prewarm_reclaims_idle_tail_on_periodic_load() {
+        // The cron workload from adaptive_policy_beats_fixed_thresholds,
+        // now with the provisioning-lead prewarm arm: after the histogram
+        // is confident the instance unloads right after each request and a
+        // fresh one provisions ahead of the predicted next arrival, so the
+        // cold-start count stays at 1 while the idle footprint collapses.
+        let times: Vec<f64> = (1..=100).map(|i| i as f64 * 100.0).collect();
+        let periodic = FunctionSpec {
+            name: "cron".into(),
+            arrival: ArrivalMode::Trace(Arc::new(times)),
+            batch_size: None,
+            warm_service: Process::constant(1.0),
+            cold_service: Process::constant(2.0),
+            max_concurrency: 1000,
+            memory_mb: 128.0,
+            seed: 11,
+        };
+        let base = FleetConfig {
+            functions: vec![periodic],
+            policy: PolicySpec::hybrid_histogram(600.0, 10.0),
+            fleet_max_concurrency: None,
+            horizon: 50_000.0,
+            skip_initial: 0.0,
+            threads: 1,
+            prewarm_lead: 15.0,
+        };
+        let plain = base.clone().with_prewarm_lead(0.0).run();
+        let prewarmed = base.run();
+        // Neither pays recurring cold starts...
+        assert_eq!(plain.aggregate.cold_requests, 1);
+        assert_eq!(prewarmed.aggregate.cold_requests, 1);
+        assert_eq!(prewarmed.aggregate.total_requests, 100);
+        // ...but the prewarm arm actually ran,
+        assert!(
+            prewarmed.aggregate.prewarm_starts > 50,
+            "prewarm_starts={}",
+            prewarmed.aggregate.prewarm_starts
+        );
+        // holds far fewer server-seconds (instance alive ~[90,101] of each
+        // 100 s period instead of continuously),
+        assert!(
+            prewarmed.aggregate.avg_server_count < plain.aggregate.avg_server_count * 0.5,
+            "prewarmed {} vs plain {}",
+            prewarmed.aggregate.avg_server_count,
+            plain.aggregate.avg_server_count
+        );
+        // and only the final speculative instance is wasted.
+        assert!(
+            prewarmed.aggregate.wasted_prewarm_seconds > 0.0
+                && prewarmed.aggregate.wasted_prewarm_seconds < 120.0,
+            "waste={}",
+            prewarmed.aggregate.wasted_prewarm_seconds
+        );
     }
 }

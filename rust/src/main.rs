@@ -83,7 +83,7 @@ const COMMANDS: &[Cmd] = &[
     Cmd {
         name: "fleet",
         summary: "multi-function fleet simulation (synthetic Azure-style mix)",
-        flags: "--functions N --horizon --skip --seed --threads\n--policy fixed|adaptive --threshold (fixed)\n--range --bin (adaptive) --fleet-cap (0 = none)\n--provider --memory --top K --json\n[--compare-thresholds a,b,c  fixed grid vs adaptive sweep]",
+        flags: "--functions N --horizon --skip --seed --threads\n--policy fixed|adaptive --threshold (fixed)\n--range --bin (adaptive) --fleet-cap (0 = none)\n--prewarm-lead S (adaptive head-arm prewarm; 0 = off)\n--provider --memory --top K --json\n[--compare-thresholds a,b,c  fixed grid vs adaptive sweep]",
         operands: 0,
         run: cmd_fleet,
     },
@@ -279,6 +279,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     };
     let cap = args.get_usize("fleet-cap", 0)?;
     fleet.fleet_cap = if cap > 0 { Some(cap) } else { None };
+    fleet.prewarm_lead = args.get_f64("prewarm-lead", 0.0)?;
     fleet.memory_mb = args.get_f64("memory", 128.0)?;
     fleet.top_k = args.get_usize("top", 5)?;
     fleet.compare_thresholds = args.get_f64_list("compare-thresholds", &[])?;

@@ -541,7 +541,9 @@ pub fn results_to_json(r: &crate::sim::SimResults) -> JsonValue {
         .set("response_p99", r.response_p99)
         .set("billed_instance_seconds", r.billed_instance_seconds)
         .set("observed_arrival_rate", r.observed_arrival_rate)
-        .set("instance_count_pmf", r.instance_count_pmf.clone());
+        .set("instance_count_pmf", r.instance_count_pmf.clone())
+        .set("prewarm_starts", r.prewarm_starts)
+        .set("wasted_prewarm_seconds", r.wasted_prewarm_seconds);
     o
 }
 
@@ -571,7 +573,9 @@ pub fn fleet_to_json(
         .set("response_p95", a.response_p95)
         .set("response_p99", a.response_p99)
         .set("billed_instance_seconds", a.billed_instance_seconds)
-        .set("observed_arrival_rate", a.observed_arrival_rate);
+        .set("observed_arrival_rate", a.observed_arrival_rate)
+        .set("prewarm_starts", a.prewarm_starts)
+        .set("wasted_prewarm_seconds", a.wasted_prewarm_seconds);
 
     let functions: Vec<JsonValue> = results
         .names

@@ -335,6 +335,9 @@ fn experiment_to_json(e: &ExperimentSpec) -> JsonValue {
             if let Some(cap) = f.fleet_cap {
                 o.set("fleet_cap", cap);
             }
+            if f.prewarm_lead > 0.0 {
+                o.set("prewarm_lead", f.prewarm_lead);
+            }
             if !f.compare_thresholds.is_empty() || !f.compare_extra.is_empty() {
                 o.set("compare_thresholds", f.compare_thresholds.clone()).set(
                     "compare_extra",
@@ -400,6 +403,7 @@ fn experiment_from_json(v: &JsonValue) -> Result<ExperimentSpec> {
                     "threads",
                     "policy",
                     "fleet_cap",
+                    "prewarm_lead",
                     "memory_mb",
                     "top_k",
                     "compare_thresholds",
@@ -416,6 +420,7 @@ fn experiment_from_json(v: &JsonValue) -> Result<ExperimentSpec> {
                 0 => None,
                 cap => Some(cap),
             };
+            f.prewarm_lead = f64_field(o, "prewarm_lead", what, 0.0)?;
             f.memory_mb = f64_field(o, "memory_mb", what, 128.0)?;
             f.top_k = usize_field(o, "top_k", what, 5)?;
             f.compare_thresholds = f64_list_field(o, "compare_thresholds", what)?;
@@ -706,6 +711,13 @@ mod tests {
                             process: ProcessSpec::ExpMean(600.0),
                         }],
                     ),
+            )),
+        );
+        roundtrip(
+            &ScenarioSpec::new("prewarm").with_experiment(ExperimentSpec::Fleet(
+                FleetScenario::new(6)
+                    .with_policy(KeepAliveSpec::hybrid_histogram(3_600.0, 60.0))
+                    .with_prewarm_lead(20.0),
             )),
         );
         roundtrip(

@@ -123,6 +123,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport> {
             );
             cfg.threads = f.threads;
             cfg.fleet_max_concurrency = f.fleet_cap;
+            cfg.prewarm_lead = f.prewarm_lead;
             for func in &mut cfg.functions {
                 func.memory_mb = f.memory_mb;
             }

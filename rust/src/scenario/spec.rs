@@ -274,6 +274,12 @@ pub struct FleetScenario {
     pub compare_thresholds: Vec<f64>,
     /// Extra policies appended to the comparison grid.
     pub compare_extra: Vec<KeepAliveSpec>,
+    /// Provisioning lead time for prewarm events in seconds; 0 disables.
+    /// With a positive lead the adaptive (hybrid-histogram) policy's
+    /// head-percentile arm schedules instances *ahead* of predicted
+    /// arrivals; fixed/stochastic policies predict nothing and run
+    /// unchanged.
+    pub prewarm_lead: f64,
 }
 
 impl FleetScenario {
@@ -287,6 +293,7 @@ impl FleetScenario {
             top_k: 5,
             compare_thresholds: Vec::new(),
             compare_extra: Vec::new(),
+            prewarm_lead: 0.0,
         }
     }
 
@@ -312,6 +319,12 @@ impl FleetScenario {
     ) -> Self {
         self.compare_thresholds = thresholds;
         self.compare_extra = extra;
+        self
+    }
+
+    /// Enable prewarm (provisioning-lead) events; 0 disables.
+    pub fn with_prewarm_lead(mut self, lead: f64) -> Self {
+        self.prewarm_lead = lead;
         self
     }
 }
@@ -638,6 +651,13 @@ impl ScenarioSpec {
                 if f.compare_thresholds.iter().any(|t| *t < 0.0 || !t.is_finite()) {
                     bail!("fleet.compare_thresholds must be non-negative seconds");
                 }
+                if !(f.prewarm_lead.is_finite() && f.prewarm_lead >= 0.0) {
+                    bail!(
+                        "fleet.prewarm_lead must be a non-negative number of seconds \
+                         (0 disables prewarming), got {}",
+                        f.prewarm_lead
+                    );
+                }
             }
         }
         if let Some(c) = &self.cost {
@@ -758,6 +778,17 @@ mod tests {
         let c = CostSpec { memory_mb: 0.0, ..CostSpec::default() };
         let bad = ScenarioSpec::new("x").with_cost(c);
         assert!(bad.validate().unwrap_err().to_string().contains("memory_mb"));
+
+        let bad = ScenarioSpec::new("x").with_experiment(ExperimentSpec::Fleet(
+            FleetScenario::new(2).with_prewarm_lead(-1.0),
+        ));
+        assert!(bad.validate().unwrap_err().to_string().contains("prewarm_lead"));
+        ScenarioSpec::new("x")
+            .with_experiment(ExperimentSpec::Fleet(
+                FleetScenario::new(2).with_prewarm_lead(30.0),
+            ))
+            .validate()
+            .unwrap();
     }
 
     #[test]

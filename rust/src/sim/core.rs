@@ -1,0 +1,1082 @@
+//! `sim::core` — the single lifecycle engine behind every simulator.
+//!
+//! Before this module existed the crate carried three hand-synchronized
+//! copies of the cold/warm/expire instance lifecycle —
+//! [`super::simulator::ServerlessSimulator`],
+//! [`super::par_simulator::ParServerlessSimulator`] and
+//! `fleet::FunctionEngine` each had their own
+//! `handle_arrival`/`handle_departure`/`handle_expiration`, kept
+//! RNG-sequence-identical only by regression tests. This module is the one
+//! shared implementation: an [`EngineCore`] holding the instance pool, the
+//! level accumulators and the event handlers, parameterized by
+//!
+//! * a [`Scheduler`] — where events land (a plain
+//!   [`super::event::EventQueue`], or the fleet's function-tagged queue),
+//! * a [`LifecycleHooks`] implementation — the three points where the
+//!   engines genuinely differ: the keep-alive (expiration-threshold) draw,
+//!   fleet-gate admission on cold starts, and per-request observation
+//!   (adaptive policies, request logs),
+//! * a concurrency value — 1 for scale-per-request routing (sorted idle
+//!   pool, newest-first pop), >1 for concurrency-valued routing (newest
+//!   instance with spare slots).
+//!
+//! **Bit-identity contract.** The handlers consume the RNG in exactly the
+//! sequence the three pre-refactor engines did (batch draw, per-request
+//! service draws, keep-alive draws) and push events in the same order, so
+//! every engine built on this core reproduces its pre-refactor outputs
+//! bit-for-bit on the same seed. `tests/engine_unification.rs` pins this
+//! with exactly-computable deterministic fixtures and cross-engine digest
+//! equality for all five pre-refactor configurations (steady, par,
+//! temporal, 1-function fleet, capped fleet).
+//!
+//! **Prewarm (provisioning-lead) events.** The core also implements the
+//! ROADMAP's prewarm model once, behind the same seam: when a configured
+//! provisioning lead time is positive and the idle pool drains, the hooks
+//! are asked for a predicted next arrival
+//! ([`LifecycleHooks::prewarm_ready_at`], the hybrid-histogram policy's
+//! head-percentile arm in the fleet) and the core schedules an
+//! [`Event::Provision`] one lead ahead of it; the instance becomes warm at
+//! [`Event::ProvisioningDone`]. A lead of `0.0` disables the feature
+//! entirely — no `Provision` event is ever scheduled, which is what makes
+//! prewarm-off runs bit-identical to the pre-prewarm engines. Provisioning
+//! instances count toward the live server level (provider footprint) but
+//! are neither running nor billed; a prewarmed instance that expires
+//! without serving a single request adds its whole lifespan to
+//! `wasted_prewarm_seconds`.
+#![warn(missing_docs)]
+
+use super::event::{Event, EventQueue};
+use super::hist::CountDistribution;
+use super::instance::{FunctionInstance, InstanceId, InstanceState};
+use super::metrics::{OnlineStats, P2Quantile, TimeWeighted};
+use super::process::Process;
+use super::results::SimResults;
+use super::rng::Rng;
+use super::time::SimTime;
+use std::collections::BTreeMap;
+
+/// Outcome of a single request, reported to [`LifecycleHooks::on_request`]
+/// (and recorded in the optional per-request trace).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestOutcome {
+    /// Served by a freshly cold-started instance.
+    Cold,
+    /// Served by a warm (idle or spare-slot) instance.
+    Warm,
+    /// Rejected at the maximum concurrency level (or the fleet gate).
+    Rejected,
+}
+
+/// Destination for scheduled events. The core never owns the future event
+/// list: the scale-per-request and concurrency-value simulators drive a
+/// plain [`EventQueue`], while the fleet interleaves many engines on one
+/// function-tagged queue behind a per-call adapter.
+pub trait Scheduler {
+    /// Schedule `event` at absolute simulation time `at`.
+    fn schedule(&mut self, at: SimTime, event: Event);
+}
+
+impl Scheduler for EventQueue {
+    #[inline]
+    fn schedule(&mut self, at: SimTime, event: Event) {
+        EventQueue::schedule(self, at, event);
+    }
+}
+
+/// The per-engine policy surface of the lifecycle core — everything the
+/// three pre-refactor engines did differently, as overridable hooks.
+///
+/// | Hook | `ServerlessSimulator` | `ParServerlessSimulator` | `fleet::FunctionEngine` |
+/// |---|---|---|---|
+/// | [`keep_alive`](Self::keep_alive) | config threshold / stochastic draw | config threshold | pluggable `KeepAlivePolicy` |
+/// | [`on_arrival_epoch`](Self::on_arrival_epoch) | — | — | policy observes arrivals |
+/// | [`admit_cold`](Self::admit_cold) + gate callbacks | always admit | always admit | fleet-wide concurrency gate |
+/// | [`on_request`](Self::on_request) | optional request log | — | — |
+/// | prewarm hooks | — | — | policy head-percentile arm |
+///
+/// Implementations must be deterministic given the same call sequence and
+/// RNG state; hooks that draw randomness must use the `rng` they are
+/// handed (the engine's own stream) so bit-reproducibility survives.
+pub trait LifecycleHooks {
+    /// Keep-alive window in seconds for an instance going idle at `now`
+    /// (one consultation — and at most one RNG draw — per idle period).
+    fn keep_alive(&mut self, now: f64, rng: &mut Rng) -> f64;
+
+    /// Observe a request-arrival epoch at `now`, before any routing.
+    /// Adaptive keep-alive policies learn inter-arrival histograms here.
+    fn on_arrival_epoch(&mut self, _now: f64) {}
+
+    /// Gate check for admitting a cold start beyond the engine's own
+    /// maximum-concurrency test (the fleet-wide cap). Must not mutate
+    /// shared state: the core calls [`on_cold_start`](Self::on_cold_start)
+    /// on actual admission.
+    fn admit_cold(&mut self) -> bool {
+        true
+    }
+
+    /// A cold start (or prewarm provisioning) was admitted; charge any
+    /// shared capacity gate.
+    fn on_cold_start(&mut self) {}
+
+    /// An instance expired; release any shared capacity gate.
+    fn on_expire(&mut self) {}
+
+    /// A request was rejected although the engine's own concurrency limit
+    /// had room — i.e. only the shared gate blocked it.
+    fn on_gate_only_rejection(&mut self) {}
+
+    /// A request finished routing (only invoked once statistics are being
+    /// collected). `rt` is the response time (0 for rejected requests);
+    /// `instance` is the serving instance (None for rejected).
+    fn on_request(
+        &mut self,
+        _now: f64,
+        _outcome: RequestOutcome,
+        _rt: f64,
+        _instance: Option<InstanceId>,
+    ) {
+    }
+
+    /// Predicted absolute time a warm instance should be ready (the
+    /// prewarm arm). Consulted only when the provisioning lead is positive
+    /// and the idle pool just drained; `None` (the default) means no
+    /// prediction, so no prewarm is scheduled.
+    fn prewarm_ready_at(&mut self, _now: f64) -> Option<f64> {
+        None
+    }
+
+    /// Keep-alive window for a freshly prewarmed (never-used) instance.
+    /// Defaults to the ordinary [`keep_alive`](Self::keep_alive) window.
+    fn prewarm_keep_alive(&mut self, now: f64, rng: &mut Rng) -> f64 {
+        self.keep_alive(now, rng)
+    }
+}
+
+/// The paper's configuration-driven expiration rule as a hook set: a fixed
+/// threshold, optionally overridden by a stochastic threshold process —
+/// exactly `SimConfig::{expiration_threshold, expiration_process}`. Used by
+/// both single-function simulators.
+#[derive(Clone)]
+pub struct ConfigExpiration {
+    /// Constant idle-expiration threshold in seconds.
+    pub threshold: f64,
+    /// Optional stochastic threshold (one draw per idle period), overriding
+    /// the constant.
+    pub process: Option<Process>,
+}
+
+impl LifecycleHooks for ConfigExpiration {
+    fn keep_alive(&mut self, _now: f64, rng: &mut Rng) -> f64 {
+        match &self.process {
+            Some(p) => p.sample(rng),
+            None => self.threshold,
+        }
+    }
+}
+
+/// Warm-routing structure: which instance absorbs the next request.
+///
+/// Scale-per-request keeps the idle pool as a Vec sorted ascending by id —
+/// the newest idle instance is an O(1) pop off the end (see DESIGN.md
+/// §Perf). The concurrency-value engine instead tracks spare slots per
+/// instance in a BTreeMap keyed by id, so "newest instance with spare
+/// capacity" is `next_back`.
+enum Router {
+    /// One request per instance (the paper's scale-per-request model).
+    PerRequest { idle: Vec<InstanceId> },
+    /// Up to `value` concurrent requests per instance (paper §3.1).
+    Concurrent {
+        available: BTreeMap<InstanceId, u32>,
+        value: u32,
+    },
+}
+
+impl Router {
+    fn new(concurrency_value: u32) -> Router {
+        if concurrency_value <= 1 {
+            Router::PerRequest { idle: Vec::with_capacity(64) }
+        } else {
+            Router::Concurrent { available: BTreeMap::new(), value: concurrency_value }
+        }
+    }
+
+    /// Take the newest instance that can absorb one request (consuming one
+    /// slot of its capacity).
+    fn take_newest(&mut self) -> Option<InstanceId> {
+        match self {
+            Router::PerRequest { idle } => idle.pop(),
+            Router::Concurrent { available, .. } => {
+                let (id, slots) = available.iter().next_back().map(|(&id, &s)| (id, s))?;
+                if slots <= 1 {
+                    available.remove(&id);
+                } else {
+                    available.insert(id, slots - 1);
+                }
+                Some(id)
+            }
+        }
+    }
+
+    /// A new instance was cold-started for a request: register any spare
+    /// capacity beyond that request.
+    fn on_cold_created(&mut self, id: InstanceId) {
+        match self {
+            Router::PerRequest { .. } => {}
+            Router::Concurrent { available, value } => {
+                if *value > 1 {
+                    available.insert(id, *value - 1);
+                }
+            }
+        }
+    }
+
+    /// A request departed from `id`; `became_idle` is true when the
+    /// instance now has no request in flight.
+    fn release(&mut self, id: InstanceId, became_idle: bool) {
+        match self {
+            Router::PerRequest { idle } => {
+                debug_assert!(became_idle, "scale-per-request departures always idle");
+                match idle.binary_search(&id) {
+                    Err(pos) => idle.insert(pos, id),
+                    Ok(_) => unreachable!("instance already idle"),
+                }
+            }
+            Router::Concurrent { available, value } => {
+                let slots = available.get(&id).copied().unwrap_or(0) + 1;
+                available.insert(id, slots.min(*value));
+            }
+        }
+    }
+
+    /// Insert a fully idle instance (initial warm pools, prewarm
+    /// completion).
+    fn insert_idle(&mut self, id: InstanceId) {
+        match self {
+            Router::PerRequest { idle } => match idle.binary_search(&id) {
+                Err(pos) => idle.insert(pos, id),
+                Ok(_) => unreachable!("instance already idle"),
+            },
+            Router::Concurrent { available, value } => {
+                available.insert(id, *value);
+            }
+        }
+    }
+
+    /// Drop an expired instance from the routing structure.
+    fn remove(&mut self, id: InstanceId) {
+        match self {
+            Router::PerRequest { idle } => {
+                if let Ok(pos) = idle.binary_search(&id) {
+                    idle.remove(pos);
+                }
+            }
+            Router::Concurrent { available, .. } => {
+                available.remove(&id);
+            }
+        }
+    }
+
+    /// Whether any instance can absorb a request without a cold start.
+    fn has_capacity(&self) -> bool {
+        match self {
+            Router::PerRequest { idle } => !idle.is_empty(),
+            Router::Concurrent { available, .. } => !available.is_empty(),
+        }
+    }
+
+    /// Number of entries in the warm-routing pool (idle instances for
+    /// scale-per-request; instances with any spare slot otherwise).
+    fn pool_len(&self) -> usize {
+        match self {
+            Router::PerRequest { idle } => idle.len(),
+            Router::Concurrent { available, .. } => available.len(),
+        }
+    }
+}
+
+/// Construction parameters for an [`EngineCore`].
+pub struct CoreParams {
+    /// RNG seed; equal seeds give bit-identical runs.
+    pub seed: u64,
+    /// Warm-start busy-period process (service time).
+    pub warm_service: Process,
+    /// Cold-start busy-period process (provisioning + service).
+    pub cold_service: Process,
+    /// Optional batch-size process: each arrival epoch brings
+    /// `max(1, round(sample))` simultaneous requests. `None` = single
+    /// arrivals (the concurrency-value engine never batches).
+    pub batch_size: Option<Process>,
+    /// Maximum concurrency level (live-instance cap of this engine).
+    pub max_concurrency: usize,
+    /// Warm-up window excluded from all statistics.
+    pub skip_initial: f64,
+    /// Per-instance concurrency value (1 = scale-per-request).
+    pub concurrency_value: u32,
+    /// Provisioning lead time for prewarm events in seconds; `0.0`
+    /// disables prewarming entirely (bit-identical to the pre-prewarm
+    /// engines).
+    pub prewarm_lead: f64,
+    /// Pre-reserved capacity of the instance table (profiling-driven; see
+    /// DESIGN.md §Perf).
+    pub instance_capacity: usize,
+}
+
+/// The shared lifecycle engine: instance pool, warm routing, level
+/// accumulators and the arrival/departure/expiration/prewarm event
+/// handlers. Engines own one core each, plus their event queue and their
+/// [`LifecycleHooks`] implementation; the run loop stays engine-side
+/// (arrival sources and horizon handling differ per engine).
+pub struct EngineCore {
+    /// The engine's RNG stream. Exposed because arrival-gap draws belong
+    /// to the engine (process arrivals draw here; trace replay does not)
+    /// and must interleave with the core's service draws in the historical
+    /// order.
+    pub rng: Rng,
+    now: SimTime,
+    instances: Vec<FunctionInstance>,
+    router: Router,
+    live_count: usize,
+    /// Total requests in flight across all instances.
+    in_flight: u64,
+    /// Instances currently busy (≥1 request in flight or provisioning a
+    /// cold-started request).
+    busy_instances: usize,
+    max_concurrency: usize,
+    warm_service: Process,
+    cold_service: Process,
+    batch_size: Option<Process>,
+    prewarm_lead: f64,
+    prewarm_pending: u32,
+    /// Whether the busy-instance level needs its own accumulator. Only at
+    /// concurrency values above 1 can the busy-instance count diverge from
+    /// the in-flight count; at 1 the two are equal at every instant
+    /// (provisioning instances count in neither), so the scale-per-request
+    /// hot path skips the third accumulator update — the optimization the
+    /// pre-unification engine documented in DESIGN.md §Perf.
+    track_busy_instances: bool,
+
+    // -------- statistics (reset at the end of the warm-up skip) ----------
+    stats_started: bool,
+    stats_start: SimTime,
+    total_requests: u64,
+    cold_requests: u64,
+    warm_requests: u64,
+    rejected_requests: u64,
+    instances_created: u64,
+    instances_expired: u64,
+    prewarm_starts: u64,
+    wasted_prewarm_seconds: f64,
+    server_count_tw: TimeWeighted,
+    /// Time-weighted in-flight request count (the billing-relevant
+    /// "running" level; equals the busy-instance count at concurrency 1).
+    running_tw: TimeWeighted,
+    /// Time-weighted busy-instance count; `idle = total - busy_instances`
+    /// derives the idle level exactly for every concurrency value.
+    busy_inst_tw: TimeWeighted,
+    count_dist: CountDistribution,
+    lifespan_stats: OnlineStats,
+    response_stats: OnlineStats,
+    warm_response_stats: OnlineStats,
+    cold_response_stats: OnlineStats,
+    response_p50: P2Quantile,
+    response_p95: P2Quantile,
+    response_p99: P2Quantile,
+    billed_seconds: f64,
+}
+
+impl EngineCore {
+    /// Build a core at simulation time zero.
+    pub fn new(p: CoreParams) -> EngineCore {
+        let start = SimTime::ZERO;
+        EngineCore {
+            rng: Rng::new(p.seed),
+            now: start,
+            instances: Vec::with_capacity(p.instance_capacity),
+            router: Router::new(p.concurrency_value),
+            live_count: 0,
+            in_flight: 0,
+            busy_instances: 0,
+            max_concurrency: p.max_concurrency,
+            warm_service: p.warm_service,
+            cold_service: p.cold_service,
+            batch_size: p.batch_size,
+            prewarm_lead: p.prewarm_lead,
+            prewarm_pending: 0,
+            track_busy_instances: p.concurrency_value > 1,
+            stats_started: p.skip_initial <= 0.0,
+            stats_start: SimTime::from_secs(p.skip_initial.max(0.0)),
+            total_requests: 0,
+            cold_requests: 0,
+            warm_requests: 0,
+            rejected_requests: 0,
+            instances_created: 0,
+            instances_expired: 0,
+            prewarm_starts: 0,
+            wasted_prewarm_seconds: 0.0,
+            server_count_tw: TimeWeighted::new(start, 0.0),
+            running_tw: TimeWeighted::new(start, 0.0),
+            busy_inst_tw: TimeWeighted::new(start, 0.0),
+            count_dist: CountDistribution::new(start, 0),
+            lifespan_stats: OnlineStats::new(),
+            response_stats: OnlineStats::new(),
+            warm_response_stats: OnlineStats::new(),
+            cold_response_stats: OnlineStats::new(),
+            response_p50: P2Quantile::new(0.5),
+            response_p95: P2Quantile::new(0.95),
+            response_p99: P2Quantile::new(0.99),
+            billed_seconds: 0.0,
+        }
+    }
+
+    // ------------------------------------------------------------ accessors
+
+    /// Current simulation time.
+    #[inline]
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Advance the clock to the time of the event being handled.
+    #[inline]
+    pub fn set_now(&mut self, t: SimTime) {
+        self.now = t;
+    }
+
+    /// Whether the warm-up skip has ended and statistics are collected.
+    #[inline]
+    pub fn stats_started(&self) -> bool {
+        self.stats_started
+    }
+
+    /// Start of the measured window (end of the warm-up skip).
+    #[inline]
+    pub fn stats_start(&self) -> SimTime {
+        self.stats_start
+    }
+
+    /// The total-instance-count accumulator (Fig. 4 sampling reads its
+    /// running integral).
+    #[inline]
+    pub fn server_tw(&self) -> &TimeWeighted {
+        &self.server_count_tw
+    }
+
+    /// All instances ever created, indexed by `InstanceId.0`.
+    #[inline]
+    pub fn instances(&self) -> &[FunctionInstance] {
+        &self.instances
+    }
+
+    /// Current (live, busy-instance, warm-pool) counts — for invariant
+    /// tests.
+    #[inline]
+    pub fn live_counts(&self) -> (usize, usize, usize) {
+        (self.live_count, self.busy_instances, self.router.pool_len())
+    }
+
+    // ------------------------------------------------------------ internals
+
+    fn alloc_instance(&mut self, prewarmed: bool) -> InstanceId {
+        let id = InstanceId(self.instances.len() as u64);
+        let mut inst = FunctionInstance::cold_start(id, self.now);
+        inst.prewarmed = prewarmed;
+        self.instances.push(inst);
+        id
+    }
+
+    /// Push the current levels into the time-weighted accumulators.
+    fn sync_levels(&mut self) {
+        self.server_count_tw.update(self.now, self.live_count as f64);
+        self.running_tw.update(self.now, self.in_flight as f64);
+        if self.track_busy_instances {
+            self.busy_inst_tw.update(self.now, self.busy_instances as f64);
+        }
+        self.count_dist.update(self.now, self.live_count);
+    }
+
+    fn record_response(&mut self, rt: f64, cold: bool) {
+        if !self.stats_started {
+            return;
+        }
+        self.response_stats.push(rt);
+        if cold {
+            self.cold_response_stats.push(rt);
+        } else {
+            self.warm_response_stats.push(rt);
+        }
+        self.response_p50.push(rt);
+        self.response_p95.push(rt);
+        self.response_p99.push(rt);
+    }
+
+    /// On the first event at or past the skip boundary: advance the level
+    /// accumulators to the boundary, then reset them so the measured
+    /// window starts clean.
+    pub fn maybe_start_stats(&mut self, event_time: SimTime) {
+        if self.stats_started || event_time < self.stats_start {
+            return;
+        }
+        let boundary = self.stats_start;
+        self.server_count_tw.advance(boundary);
+        self.running_tw.advance(boundary);
+        self.busy_inst_tw.advance(boundary);
+        self.count_dist.finish(boundary);
+        self.server_count_tw.reset_at(boundary);
+        self.running_tw.reset_at(boundary);
+        self.busy_inst_tw.reset_at(boundary);
+        self.count_dist.reset_at(boundary);
+        self.stats_started = true;
+    }
+
+    // --------------------------------------------------------- event logic
+
+    /// Handle one arrival epoch: draw the batch size (when configured),
+    /// route every request, and lazily sync the level accumulators. The
+    /// caller schedules the next arrival afterwards — arrival sources
+    /// (process vs trace replay) are engine-specific, and the historical
+    /// draw order is service draws first, next-arrival gap last.
+    pub fn handle_arrival<S: Scheduler, H: LifecycleHooks>(
+        &mut self,
+        sched: &mut S,
+        hooks: &mut H,
+    ) {
+        // Adaptive policies observe every arrival epoch (no RNG use, so
+        // fixed-policy bit-identity is unaffected).
+        hooks.on_arrival_epoch(self.now.as_secs());
+        let batch = match &self.batch_size {
+            None => 1,
+            Some(p) => {
+                let k = p.sample(&mut self.rng).round();
+                if k < 1.0 {
+                    1
+                } else {
+                    k as u64
+                }
+            }
+        };
+        let (live0, flight0) = (self.live_count, self.in_flight);
+        for _ in 0..batch {
+            self.route_one_request(sched, hooks);
+        }
+        // Lazy sync: a fully-rejected epoch changes no level, so skip the
+        // accumulator updates entirely (they stay correct because the
+        // level is unchanged since the last sync).
+        if self.live_count != live0 || self.in_flight != flight0 {
+            self.sync_levels();
+        }
+    }
+
+    /// Route a single request at the current instant.
+    fn route_one_request<S: Scheduler, H: LifecycleHooks>(&mut self, sched: &mut S, hooks: &mut H) {
+        if self.stats_started {
+            self.total_requests += 1;
+        }
+        let now_s = self.now.as_secs();
+        if let Some(id) = self.router.take_newest() {
+            // Warm start: newest instance with capacity.
+            {
+                let inst = &mut self.instances[id.0 as usize];
+                if inst.in_flight == 0 {
+                    inst.start_warm(self.now);
+                    self.busy_instances += 1;
+                }
+                inst.in_flight += 1;
+            }
+            self.in_flight += 1;
+            let service = self.warm_service.sample(&mut self.rng);
+            sched.schedule(self.now.after(service), Event::Departure(id));
+            if self.stats_started {
+                self.warm_requests += 1;
+                self.record_response(service, false);
+                hooks.on_request(now_s, RequestOutcome::Warm, service, Some(id));
+            }
+        } else if self.live_count < self.max_concurrency && hooks.admit_cold() {
+            // Cold start: admitted by both the engine's concurrency limit
+            // and the hooks' shared gate; its busy period is one draw of
+            // the cold service process (provisioning + service).
+            hooks.on_cold_start();
+            let id = self.alloc_instance(false);
+            self.instances[id.0 as usize].in_flight = 1;
+            self.live_count += 1;
+            self.in_flight += 1;
+            self.busy_instances += 1;
+            self.router.on_cold_created(id);
+            if self.stats_started {
+                self.instances_created += 1;
+            }
+            let service = self.cold_service.sample(&mut self.rng);
+            sched.schedule(self.now.after(service), Event::Departure(id));
+            if self.stats_started {
+                self.cold_requests += 1;
+                self.record_response(service, true);
+                hooks.on_request(now_s, RequestOutcome::Cold, service, Some(id));
+            }
+        } else if self.stats_started {
+            // Concurrency level reached and nothing warm: reject.
+            self.rejected_requests += 1;
+            if self.live_count < self.max_concurrency {
+                // Only the shared gate blocked this request.
+                hooks.on_gate_only_rejection();
+            }
+            hooks.on_request(now_s, RequestOutcome::Rejected, 0.0, None);
+        }
+    }
+
+    /// Handle a request departure from `id`: bill the busy period when the
+    /// instance drains, return it to the warm pool, and schedule its
+    /// idle-expiration via the hooks' keep-alive window.
+    pub fn handle_departure<S: Scheduler, H: LifecycleHooks>(
+        &mut self,
+        sched: &mut S,
+        hooks: &mut H,
+        id: InstanceId,
+    ) {
+        let became_idle;
+        let gen;
+        {
+            let inst = &mut self.instances[id.0 as usize];
+            debug_assert!(inst.in_flight > 0);
+            inst.in_flight -= 1;
+            became_idle = inst.in_flight == 0;
+            if became_idle {
+                // The whole busy period is billed (the paper notes app
+                // init — included in the cold busy period here — is
+                // billed; slots of a concurrency-valued instance share the
+                // one period).
+                let busy = self.now.since(inst.busy_since).max(0.0);
+                gen = inst.finish_request(self.now, busy);
+                if self.stats_started {
+                    self.billed_seconds += busy;
+                }
+                self.busy_instances -= 1;
+            } else {
+                gen = inst.generation;
+            }
+        }
+        self.in_flight -= 1;
+        self.router.release(id, became_idle);
+        if became_idle {
+            let threshold = hooks.keep_alive(self.now.as_secs(), &mut self.rng);
+            sched.schedule(self.now.after(threshold), Event::Expiration { id, gen });
+        }
+        self.sync_levels();
+    }
+
+    /// Handle an idle-expiration event (generation-guarded lazy
+    /// cancellation: stale events — the instance was reused — are dropped).
+    pub fn handle_expiration<S: Scheduler, H: LifecycleHooks>(
+        &mut self,
+        sched: &mut S,
+        hooks: &mut H,
+        id: InstanceId,
+        gen: u64,
+    ) {
+        let inst = &mut self.instances[id.0 as usize];
+        if inst.generation != gen || inst.state != InstanceState::Idle {
+            return; // stale event (instance reused or already busy)
+        }
+        inst.terminate(self.now);
+        let lifespan = inst.lifespan(self.now);
+        let wasted_prewarm = inst.prewarmed && inst.requests_served == 0;
+        self.router.remove(id);
+        self.live_count -= 1;
+        hooks.on_expire();
+        if self.stats_started {
+            self.instances_expired += 1;
+            self.lifespan_stats.push(lifespan);
+            if wasted_prewarm {
+                self.wasted_prewarm_seconds += lifespan;
+            }
+        }
+        self.sync_levels();
+        self.maybe_request_prewarm(sched, hooks);
+    }
+
+    /// If prewarming is enabled and the warm pool just drained, ask the
+    /// hooks for a predicted next arrival and schedule provisioning one
+    /// lead ahead of it. At most one prewarm is in flight at a time.
+    fn maybe_request_prewarm<S: Scheduler, H: LifecycleHooks>(
+        &mut self,
+        sched: &mut S,
+        hooks: &mut H,
+    ) {
+        if self.prewarm_lead <= 0.0 || self.prewarm_pending > 0 || self.router.has_capacity() {
+            return;
+        }
+        if let Some(ready_at) = hooks.prewarm_ready_at(self.now.as_secs()) {
+            if ready_at > self.now.as_secs() {
+                let start = (ready_at - self.prewarm_lead).max(self.now.as_secs());
+                sched.schedule(SimTime::from_secs(start), Event::Provision);
+                self.prewarm_pending += 1;
+            }
+        }
+    }
+
+    /// Handle a [`Event::Provision`] trigger: start provisioning a fresh
+    /// instance unless the pool recovered or admission fails. The instance
+    /// occupies a server — and a `max_concurrency` slot — for the whole
+    /// lead (speculation consumes real capacity, so at tight concurrency
+    /// caps prewarming can turn would-be cold starts into rejections; that
+    /// is the modeled cost of the speculation). It serves nothing until
+    /// [`Event::ProvisioningDone`] one lead later; provisioning time is
+    /// provider-initiated and not billed to the developer.
+    pub fn handle_provision<S: Scheduler, H: LifecycleHooks>(
+        &mut self,
+        sched: &mut S,
+        hooks: &mut H,
+    ) {
+        if self.router.has_capacity()
+            || self.live_count >= self.max_concurrency
+            || !hooks.admit_cold()
+        {
+            // Pool recovered, or no capacity for a speculative instance:
+            // this prewarm is abandoned and a later drain may request a
+            // fresh one.
+            self.prewarm_pending = self.prewarm_pending.saturating_sub(1);
+            return;
+        }
+        hooks.on_cold_start();
+        let id = self.alloc_instance(true);
+        self.live_count += 1;
+        if self.stats_started {
+            self.prewarm_starts += 1;
+        }
+        // `prewarm_pending` stays raised until ProvisioningDone: the
+        // provisioning instance *is* the one prewarm in flight, so pool
+        // drains during the lead window cannot spawn a second speculative
+        // instance for the same predicted arrival.
+        sched.schedule(self.now.after(self.prewarm_lead), Event::ProvisioningDone(id));
+        self.sync_levels();
+    }
+
+    /// Handle provisioning completion: the prewarmed instance joins the
+    /// warm pool and gets an idle-expiration window from the hooks.
+    pub fn handle_provisioning_done<S: Scheduler, H: LifecycleHooks>(
+        &mut self,
+        sched: &mut S,
+        hooks: &mut H,
+        id: InstanceId,
+    ) {
+        self.prewarm_pending = self.prewarm_pending.saturating_sub(1);
+        let gen;
+        {
+            let inst = &mut self.instances[id.0 as usize];
+            debug_assert_eq!(inst.state, InstanceState::Initializing);
+            debug_assert_eq!(inst.in_flight, 0);
+            inst.state = InstanceState::Idle;
+            inst.idle_since = self.now;
+            inst.generation += 1;
+            gen = inst.generation;
+        }
+        self.router.insert_idle(id);
+        let threshold = hooks.prewarm_keep_alive(self.now.as_secs(), &mut self.rng);
+        sched.schedule(self.now.after(threshold), Event::Expiration { id, gen });
+        // No level changed (the instance was already live); accumulators
+        // stay in sync without an update.
+    }
+
+    /// Seed a custom initial state before the run: `idle_ages[i]` idle
+    /// instances already idle that long, and running instances with
+    /// `running_remaining[i]` seconds of service left (the temporal
+    /// simulator's warm pools, paper §4.2).
+    pub fn seed_initial_state<S: Scheduler, H: LifecycleHooks>(
+        &mut self,
+        sched: &mut S,
+        hooks: &mut H,
+        idle_ages: &[f64],
+        running_remaining: &[f64],
+    ) {
+        assert_eq!(self.now, SimTime::ZERO, "initial state must be set before run()");
+        for &age in idle_ages {
+            let id = self.alloc_instance(false);
+            let gen;
+            {
+                let inst = &mut self.instances[id.0 as usize];
+                inst.state = InstanceState::Idle;
+                // Created in the past; approximate lifespan bookkeeping.
+                inst.created_at = SimTime::ZERO;
+                inst.idle_since = SimTime::ZERO;
+                gen = inst.generation;
+            }
+            let threshold = hooks.keep_alive(0.0, &mut self.rng);
+            let remaining = (threshold - age).max(0.0);
+            self.router.insert_idle(id);
+            self.live_count += 1;
+            sched.schedule(SimTime::from_secs(remaining), Event::Expiration { id, gen });
+        }
+        for &rem in running_remaining {
+            let id = self.alloc_instance(false);
+            {
+                let inst = &mut self.instances[id.0 as usize];
+                inst.state = InstanceState::Running;
+                inst.in_flight = 1;
+            }
+            self.live_count += 1;
+            self.in_flight += 1;
+            self.busy_instances += 1;
+            sched.schedule(SimTime::from_secs(rem.max(0.0)), Event::Departure(id));
+        }
+        self.sync_levels();
+    }
+
+    // ------------------------------------------------------------- results
+
+    /// Close every accumulator at the horizon. Call once, after the event
+    /// loop, before [`results`](Self::results).
+    pub fn close(&mut self, horizon: SimTime) {
+        self.now = horizon;
+        self.server_count_tw.advance(horizon);
+        self.running_tw.advance(horizon);
+        self.busy_inst_tw.advance(horizon);
+        self.count_dist.finish(horizon);
+    }
+
+    /// Produce the run's [`SimResults`] (after [`close`](Self::close)).
+    pub fn results(&self) -> SimResults {
+        let measured = self.now.since(self.stats_start).max(0.0);
+        let served = self.cold_requests + self.warm_requests;
+        let avg_server = self.server_count_tw.average();
+        let avg_running = self.running_tw.average();
+        // idle(t) = total(t) - busy_instances(t) at every instant, so the
+        // idle average derives exactly. At concurrency 1 the busy-instance
+        // level equals the in-flight level at all times, so the running
+        // accumulator stands in for it (no third accumulator on the
+        // scale-per-request hot path — bit-identical to the pre-core
+        // engine, which derived idle from the running level).
+        let avg_idle = avg_server
+            - if self.track_busy_instances {
+                self.busy_inst_tw.average()
+            } else {
+                avg_running
+            };
+        SimResults {
+            measured_time: measured,
+            total_requests: self.total_requests,
+            cold_requests: self.cold_requests,
+            warm_requests: self.warm_requests,
+            rejected_requests: self.rejected_requests,
+            cold_start_prob: if served > 0 {
+                self.cold_requests as f64 / served as f64
+            } else {
+                0.0
+            },
+            rejection_prob: if self.total_requests > 0 {
+                self.rejected_requests as f64 / self.total_requests as f64
+            } else {
+                0.0
+            },
+            avg_lifespan: self.lifespan_stats.mean(),
+            instances_created: self.instances_created,
+            instances_expired: self.instances_expired,
+            avg_server_count: avg_server,
+            avg_running_count: avg_running,
+            avg_idle_count: avg_idle,
+            max_server_count: self.server_count_tw.max_level(),
+            wasted_capacity: if avg_server > 0.0 { avg_idle / avg_server } else { 0.0 },
+            avg_response_time: self.response_stats.mean(),
+            avg_warm_response_time: self.warm_response_stats.mean(),
+            avg_cold_response_time: self.cold_response_stats.mean(),
+            response_p50: self.response_p50.quantile(),
+            response_p95: self.response_p95.quantile(),
+            response_p99: self.response_p99.quantile(),
+            billed_instance_seconds: self.billed_seconds,
+            observed_arrival_rate: if measured > 0.0 {
+                self.total_requests as f64 / measured
+            } else {
+                0.0
+            },
+            instance_count_pmf: self.count_dist.pmf(),
+            prewarm_starts: self.prewarm_starts,
+            wasted_prewarm_seconds: self.wasted_prewarm_seconds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_core(concurrency: u32, prewarm_lead: f64) -> EngineCore {
+        EngineCore::new(CoreParams {
+            seed: 1,
+            warm_service: Process::constant(1.0),
+            cold_service: Process::constant(2.0),
+            batch_size: None,
+            max_concurrency: 1000,
+            skip_initial: 0.0,
+            concurrency_value: concurrency,
+            prewarm_lead,
+            instance_capacity: 16,
+        })
+    }
+
+    struct Fixed(f64);
+    impl LifecycleHooks for Fixed {
+        fn keep_alive(&mut self, _now: f64, _rng: &mut Rng) -> f64 {
+            self.0
+        }
+    }
+
+    #[test]
+    fn per_request_router_pops_newest_and_reinserts_sorted() {
+        let mut r = Router::new(1);
+        r.insert_idle(InstanceId(0));
+        r.insert_idle(InstanceId(2));
+        r.insert_idle(InstanceId(1));
+        assert_eq!(r.take_newest(), Some(InstanceId(2)));
+        r.release(InstanceId(2), true);
+        assert_eq!(r.pool_len(), 3);
+        r.remove(InstanceId(1));
+        assert_eq!(r.take_newest(), Some(InstanceId(2)));
+        assert_eq!(r.take_newest(), Some(InstanceId(0)));
+        assert_eq!(r.take_newest(), None);
+        assert!(!r.has_capacity());
+    }
+
+    #[test]
+    fn concurrent_router_tracks_slots() {
+        let mut r = Router::new(3);
+        r.on_cold_created(InstanceId(0)); // 2 spare slots
+        assert_eq!(r.take_newest(), Some(InstanceId(0)));
+        assert_eq!(r.take_newest(), Some(InstanceId(0)));
+        assert_eq!(r.take_newest(), None);
+        r.release(InstanceId(0), false);
+        assert!(r.has_capacity());
+        assert_eq!(r.take_newest(), Some(InstanceId(0)));
+    }
+
+    #[test]
+    fn config_expiration_matches_simconfig_semantics() {
+        let mut rng = Rng::new(2);
+        let mut fixed = ConfigExpiration { threshold: 600.0, process: None };
+        let before = rng.clone().next_u64();
+        assert_eq!(fixed.keep_alive(0.0, &mut rng), 600.0);
+        // Constant thresholds draw nothing — the bit-identity contract.
+        assert_eq!(rng.next_u64(), before);
+        let mut stochastic =
+            ConfigExpiration { threshold: 600.0, process: Some(Process::exp_mean(100.0)) };
+        let draws: Vec<f64> = (0..1000).map(|_| stochastic.keep_alive(0.0, &mut rng)).collect();
+        let mean = draws.iter().sum::<f64>() / draws.len() as f64;
+        assert!((mean - 100.0).abs() < 15.0, "mean={mean}");
+    }
+
+    #[test]
+    fn cold_warm_expire_lifecycle_with_direct_core() {
+        let mut core = mk_core(1, 0.0);
+        let mut q = EventQueue::new();
+        let mut hooks = Fixed(10.0);
+        // Arrival at t=5: cold start (service 2 s), departs at 7, expires
+        // at 17.
+        core.set_now(SimTime::from_secs(5.0));
+        core.handle_arrival(&mut q, &mut hooks);
+        assert_eq!(core.live_counts(), (1, 1, 0));
+        let (t, ev) = q.pop().unwrap();
+        assert_eq!(t.as_secs(), 7.0);
+        let id = match ev {
+            Event::Departure(id) => id,
+            other => panic!("expected departure, got {other:?}"),
+        };
+        core.set_now(t);
+        core.handle_departure(&mut q, &mut hooks, id);
+        assert_eq!(core.live_counts(), (1, 0, 1));
+        let (t, ev) = q.pop().unwrap();
+        assert_eq!(t.as_secs(), 17.0);
+        match ev {
+            Event::Expiration { id, gen } => {
+                core.set_now(t);
+                core.handle_expiration(&mut q, &mut hooks, id, gen);
+            }
+            other => panic!("expected expiration, got {other:?}"),
+        }
+        assert_eq!(core.live_counts(), (0, 0, 0));
+        core.close(SimTime::from_secs(20.0));
+        let r = core.results();
+        assert_eq!((r.total_requests, r.cold_requests, r.instances_expired), (1, 1, 1));
+        assert!((r.billed_instance_seconds - 2.0).abs() < 1e-12);
+        assert!((r.avg_lifespan - 12.0).abs() < 1e-12);
+    }
+
+    struct PredictAt(f64);
+    impl LifecycleHooks for PredictAt {
+        fn keep_alive(&mut self, _now: f64, _rng: &mut Rng) -> f64 {
+            1.0
+        }
+        fn prewarm_ready_at(&mut self, now: f64) -> Option<f64> {
+            (self.0 > now).then_some(self.0)
+        }
+    }
+
+    #[test]
+    fn prewarm_provisions_ahead_of_prediction() {
+        let mut core = mk_core(1, 3.0);
+        let mut q = EventQueue::new();
+        let mut hooks = PredictAt(30.0);
+        // Cold start at t=5 -> departs 7 -> expires 8 (keep-alive 1 s) ->
+        // predicted arrival 30 -> Provision at 27 -> done at 30.
+        core.set_now(SimTime::from_secs(5.0));
+        core.handle_arrival(&mut q, &mut hooks);
+        let (t, ev) = q.pop().unwrap();
+        let id = match ev {
+            Event::Departure(id) => id,
+            other => panic!("{other:?}"),
+        };
+        core.set_now(t);
+        core.handle_departure(&mut q, &mut hooks, id);
+        let (t, ev) = q.pop().unwrap();
+        match ev {
+            Event::Expiration { id, gen } => {
+                core.set_now(t);
+                core.handle_expiration(&mut q, &mut hooks, id, gen);
+            }
+            other => panic!("{other:?}"),
+        }
+        let (t, ev) = q.pop().unwrap();
+        assert_eq!((t.as_secs(), ev), (27.0, Event::Provision));
+        core.set_now(t);
+        core.handle_provision(&mut q, &mut hooks);
+        assert_eq!(core.live_counts(), (1, 0, 0));
+        let (t, ev) = q.pop().unwrap();
+        assert_eq!(t.as_secs(), 30.0);
+        match ev {
+            Event::ProvisioningDone(id) => {
+                core.set_now(t);
+                core.handle_provisioning_done(&mut q, &mut hooks, id);
+            }
+            other => panic!("{other:?}"),
+        }
+        // The prewarmed instance is warm and idle now.
+        assert_eq!(core.live_counts(), (1, 0, 1));
+        // It expires unused at 31 (prewarm keep-alive defaults to
+        // keep_alive = 1 s): its whole lifespan is wasted prewarm time.
+        let (t, ev) = q.pop().unwrap();
+        match ev {
+            Event::Expiration { id, gen } => {
+                core.set_now(t);
+                core.handle_expiration(&mut q, &mut hooks, id, gen);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(t.as_secs(), 31.0);
+        core.close(SimTime::from_secs(40.0));
+        let r = core.results();
+        assert_eq!(r.prewarm_starts, 1);
+        assert!((r.wasted_prewarm_seconds - 4.0).abs() < 1e-12, "{}", r.wasted_prewarm_seconds);
+    }
+
+    #[test]
+    fn prewarm_disabled_at_zero_lead() {
+        let mut core = mk_core(1, 0.0);
+        let mut q = EventQueue::new();
+        let mut hooks = PredictAt(30.0);
+        core.set_now(SimTime::from_secs(5.0));
+        core.handle_arrival(&mut q, &mut hooks);
+        let (t, Event::Departure(id)) = q.pop().unwrap() else { panic!() };
+        core.set_now(t);
+        core.handle_departure(&mut q, &mut hooks, id);
+        let (t, Event::Expiration { id, gen }) = q.pop().unwrap() else { panic!() };
+        core.set_now(t);
+        core.handle_expiration(&mut q, &mut hooks, id, gen);
+        // Lead 0: no Provision event despite the hook predicting one.
+        assert!(q.pop().is_none());
+    }
+}

@@ -23,8 +23,13 @@ pub enum Event {
     Arrival,
     /// The request being processed on `InstanceId` completes.
     Departure(InstanceId),
-    /// Instance finished cold-start provisioning and begins serving
-    /// (only used by simulators that model provisioning separately).
+    /// Provider-initiated prewarm trigger: start provisioning an instance
+    /// ahead of a predicted arrival. Handled by [`crate::sim::core`] when a
+    /// provisioning lead time is configured; the instance becomes warm one
+    /// lead later via [`Event::ProvisioningDone`].
+    Provision,
+    /// Instance finished provisioning and joins the warm pool (scheduled by
+    /// the prewarm path; lifecycle core only).
     ProvisioningDone(InstanceId),
     /// Idle-expiration check for an instance; `gen` guards staleness.
     Expiration { id: InstanceId, gen: u64 },

@@ -72,6 +72,14 @@ pub struct FunctionInstance {
     pub requests_served: u64,
     /// True if this instance has only ever served its cold-start request.
     pub cold_only: bool,
+    /// Requests currently in flight on this instance. Scale-per-request
+    /// platforms hold this at 0/1; the concurrency-value engine
+    /// ([`crate::sim::ParServerlessSimulator`]) packs up to its
+    /// concurrency value.
+    pub in_flight: u32,
+    /// True if this instance was started by the prewarm (provisioning-lead)
+    /// path rather than by a cold-started request.
+    pub prewarmed: bool,
 }
 
 impl FunctionInstance {
@@ -88,6 +96,8 @@ impl FunctionInstance {
             busy_time: 0.0,
             requests_served: 0,
             cold_only: true,
+            in_flight: 0,
+            prewarmed: false,
         }
     }
 

@@ -5,9 +5,13 @@
 //! `ServerlessSimulator`, [`temporal`] is `ServerlessTemporalSimulator`,
 //! and [`metrics`]/[`hist`] are the `Utility` helpers. [`par_simulator`] is
 //! the `ParServerlessSimulator` extension (§3.1). Beyond the paper,
-//! [`ensemble`] is the deterministic multi-threaded replication engine and
-//! [`process::Process`] the monomorphic hot-path dispatch (DESIGN.md §Perf).
+//! [`self::core`] is the single lifecycle engine every simulator (including the
+//! fleet's per-function engines) is a configuration of, [`ensemble`] is
+//! the deterministic multi-threaded replication engine and
+//! [`process::Process`] the monomorphic hot-path dispatch (DESIGN.md
+//! §Perf).
 
+pub mod core;
 pub mod ensemble;
 pub mod event;
 pub mod hist;
@@ -21,6 +25,7 @@ pub mod simulator;
 pub mod temporal;
 pub mod time;
 
+pub use self::core::{ConfigExpiration, CoreParams, EngineCore, LifecycleHooks, Scheduler};
 pub use ensemble::{
     derive_seeds, run_ensemble, run_indexed, run_par_ensemble, EnsembleOpts, EnsembleResults,
     EnsembleSummary, MetricCi,

@@ -12,340 +12,99 @@
 //! unaffected up to `concurrency_value` (Cloud Run semantics — concurrent
 //! slots, not processor sharing), which reduces to scale-per-request when
 //! `concurrency_value == 1`.
+//!
+//! Since the engine unification this type is a thin configuration of
+//! [`super::core::EngineCore`]: the concurrency-value router replaces the
+//! idle pool, and everything else (billing at busy-period end, generation
+//! -guarded expiration, O(1) level accounting) is the shared lifecycle.
+//! Two historical quirks are preserved deliberately: batch arrivals and
+//! the stochastic `expiration_process` are **ignored** by this engine
+//! (`SimConfig` carries them for the scale-per-request simulator), exactly
+//! as before the refactor.
 
+use super::core::{ConfigExpiration, CoreParams, EngineCore};
 use super::event::{Event, EventQueue};
-use super::hist::CountDistribution;
-use super::instance::InstanceId;
-use super::metrics::{OnlineStats, P2Quantile, TimeWeighted};
+use super::instance::FunctionInstance;
 use super::results::SimResults;
-use super::rng::Rng;
 use super::simulator::SimConfig;
 use super::time::SimTime;
-use std::collections::BTreeMap;
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum ParState {
-    Busy,
-    Idle,
-    Terminated,
-}
-
-#[derive(Debug, Clone)]
-struct ParInstance {
-    state: ParState,
-    in_flight: u32,
-    generation: u64,
-    created_at: SimTime,
-    busy_accum: f64,
-    /// Start of the current "has in-flight work" period.
-    busy_since: SimTime,
-    terminated_at: SimTime,
-}
 
 /// Scale-per-request simulator generalized with a per-instance concurrency
 /// value (paper Fig. 1: one instance absorbs `c` concurrent requests).
 pub struct ParServerlessSimulator {
     cfg: SimConfig,
     pub concurrency_value: u32,
-    rng: Rng,
+    core: EngineCore,
     events: EventQueue,
-    now: SimTime,
-    instances: Vec<ParInstance>,
-    /// Instances with spare slots, keyed by id (newest = max).
-    available: BTreeMap<InstanceId, u32>,
-    live_count: usize,
-    /// Total in-flight requests.
-    in_flight: u64,
-    /// Count of instances in the `Busy` state, maintained incrementally on
-    /// the three state transitions (Idle→Busy, cold start, Busy→Idle)
-    /// instead of re-scanning every instance ever created on each event —
-    /// the seed's per-event O(all-instances) scan dominated high-load runs
-    /// (§Perf: the par/high_load_rate50 bench).
-    busy_instances: usize,
-
-    stats_started: bool,
-    stats_start: SimTime,
-    total_requests: u64,
-    cold_requests: u64,
-    warm_requests: u64,
-    rejected_requests: u64,
-    instances_created: u64,
-    instances_expired: u64,
-    server_tw: TimeWeighted,
-    running_tw: TimeWeighted,
-    busy_inst_tw: TimeWeighted,
-    count_dist: CountDistribution,
-    lifespan_stats: OnlineStats,
-    response_stats: OnlineStats,
-    warm_response_stats: OnlineStats,
-    cold_response_stats: OnlineStats,
-    response_p50: P2Quantile,
-    response_p95: P2Quantile,
-    response_p99: P2Quantile,
-    billed_seconds: f64,
+    hooks: ConfigExpiration,
 }
 
 impl ParServerlessSimulator {
     pub fn new(cfg: SimConfig, concurrency_value: u32) -> Self {
         assert!(concurrency_value >= 1);
-        let rng = Rng::new(cfg.seed);
-        let start = SimTime::ZERO;
+        let core = EngineCore::new(CoreParams {
+            seed: cfg.seed,
+            warm_service: cfg.warm_service.clone(),
+            cold_service: cfg.cold_service.clone(),
+            // Historical behaviour: this engine never batched arrivals.
+            batch_size: None,
+            max_concurrency: cfg.max_concurrency,
+            skip_initial: cfg.skip_initial,
+            concurrency_value,
+            prewarm_lead: 0.0,
+            instance_capacity: 1024,
+        });
+        // Historical behaviour: the constant threshold only (the
+        // stochastic expiration_process applies to ServerlessSimulator).
+        let hooks = ConfigExpiration { threshold: cfg.expiration_threshold, process: None };
         ParServerlessSimulator {
             concurrency_value,
-            rng,
+            core,
             events: EventQueue::with_capacity(4096),
-            now: start,
-            instances: Vec::with_capacity(1024),
-            available: BTreeMap::new(),
-            live_count: 0,
-            in_flight: 0,
-            busy_instances: 0,
-            stats_started: cfg.skip_initial <= 0.0,
-            stats_start: SimTime::from_secs(cfg.skip_initial.max(0.0)),
-            total_requests: 0,
-            cold_requests: 0,
-            warm_requests: 0,
-            rejected_requests: 0,
-            instances_created: 0,
-            instances_expired: 0,
-            server_tw: TimeWeighted::new(start, 0.0),
-            running_tw: TimeWeighted::new(start, 0.0),
-            busy_inst_tw: TimeWeighted::new(start, 0.0),
-            count_dist: CountDistribution::new(start, 0),
-            lifespan_stats: OnlineStats::new(),
-            response_stats: OnlineStats::new(),
-            warm_response_stats: OnlineStats::new(),
-            cold_response_stats: OnlineStats::new(),
-            response_p50: P2Quantile::new(0.5),
-            response_p95: P2Quantile::new(0.95),
-            response_p99: P2Quantile::new(0.99),
-            billed_seconds: 0.0,
+            hooks,
             cfg,
         }
     }
 
-    /// O(1): every level is an incrementally-maintained counter.
-    fn sync(&mut self) {
-        self.server_tw.update(self.now, self.live_count as f64);
-        self.running_tw.update(self.now, self.in_flight as f64);
-        self.busy_inst_tw.update(self.now, self.busy_instances as f64);
-        self.count_dist.update(self.now, self.live_count);
-    }
-
-    fn record_response(&mut self, rt: f64, cold: bool) {
-        if !self.stats_started {
-            return;
-        }
-        self.response_stats.push(rt);
-        if cold {
-            self.cold_response_stats.push(rt);
-        } else {
-            self.warm_response_stats.push(rt);
-        }
-        self.response_p50.push(rt);
-        self.response_p95.push(rt);
-        self.response_p99.push(rt);
-    }
-
-    fn maybe_start_stats(&mut self, t: SimTime) {
-        if self.stats_started || t < self.stats_start {
-            return;
-        }
-        let b = self.stats_start;
-        self.server_tw.advance(b);
-        self.running_tw.advance(b);
-        self.busy_inst_tw.advance(b);
-        self.count_dist.finish(b);
-        self.server_tw.reset_at(b);
-        self.running_tw.reset_at(b);
-        self.busy_inst_tw.reset_at(b);
-        self.count_dist.reset_at(b);
-        self.stats_started = true;
-    }
-
-    fn handle_arrival(&mut self) {
-        if self.stats_started {
-            self.total_requests += 1;
-        }
-        // Newest instance with spare capacity.
-        let target = self.available.iter().next_back().map(|(&id, &slots)| (id, slots));
-        if let Some((id, slots)) = target {
-            let inst = &mut self.instances[id.0 as usize];
-            if inst.state == ParState::Idle {
-                inst.state = ParState::Busy;
-                inst.busy_since = self.now;
-                inst.generation += 1; // cancel pending expiration
-                self.busy_instances += 1;
-            }
-            inst.in_flight += 1;
-            self.in_flight += 1;
-            if slots <= 1 {
-                self.available.remove(&id);
-            } else {
-                self.available.insert(id, slots - 1);
-            }
-            let service = self.cfg.warm_service.sample(&mut self.rng);
-            self.events.schedule(self.now.after(service), Event::Departure(id));
-            if self.stats_started {
-                self.warm_requests += 1;
-            }
-            self.record_response(service, false);
-            self.sync();
-        } else if self.live_count < self.cfg.max_concurrency {
-            let id = InstanceId(self.instances.len() as u64);
-            self.instances.push(ParInstance {
-                state: ParState::Busy,
-                in_flight: 1,
-                generation: 0,
-                created_at: self.now,
-                busy_accum: 0.0,
-                busy_since: self.now,
-                terminated_at: self.now,
-            });
-            self.live_count += 1;
-            self.in_flight += 1;
-            self.busy_instances += 1;
-            if self.concurrency_value > 1 {
-                self.available.insert(id, self.concurrency_value - 1);
-            }
-            let service = self.cfg.cold_service.sample(&mut self.rng);
-            self.events.schedule(self.now.after(service), Event::Departure(id));
-            if self.stats_started {
-                self.cold_requests += 1;
-                self.instances_created += 1;
-            }
-            self.record_response(service, true);
-            self.sync();
-        } else {
-            // Rejection changes no level: skip the accumulator sync.
-            if self.stats_started {
-                self.rejected_requests += 1;
-            }
-        }
-        let gap = self.cfg.arrival.sample(&mut self.rng);
-        self.events.schedule(self.now.after(gap), Event::Arrival);
-    }
-
-    fn handle_departure(&mut self, id: InstanceId) {
-        let schedule_expiration;
-        let gen;
-        {
-            let inst = &mut self.instances[id.0 as usize];
-            debug_assert!(inst.in_flight > 0);
-            inst.in_flight -= 1;
-            self.in_flight -= 1;
-            if inst.in_flight == 0 {
-                // Busy period ends; bill it once (slots share the instance).
-                let busy = self.now.since(inst.busy_since).max(0.0);
-                inst.busy_accum += busy;
-                if self.stats_started {
-                    self.billed_seconds += busy;
-                }
-                inst.state = ParState::Idle;
-                inst.generation += 1;
-                schedule_expiration = true;
-                gen = inst.generation;
-                self.busy_instances -= 1;
-            } else {
-                schedule_expiration = false;
-                gen = inst.generation;
-            }
-        }
-        // Free one slot.
-        let slots = self.available.get(&id).copied().unwrap_or(0) + 1;
-        self.available.insert(id, slots.min(self.concurrency_value));
-        if schedule_expiration {
-            let threshold = self.cfg.expiration_threshold;
-            self.events.schedule(self.now.after(threshold), Event::Expiration { id, gen });
-        }
-        self.sync();
-    }
-
-    fn handle_expiration(&mut self, id: InstanceId, gen: u64) {
-        let inst = &mut self.instances[id.0 as usize];
-        if inst.generation != gen || inst.state != ParState::Idle {
-            return;
-        }
-        inst.state = ParState::Terminated;
-        inst.terminated_at = self.now;
-        let lifespan = self.now.since(inst.created_at);
-        self.available.remove(&id);
-        self.live_count -= 1;
-        if self.stats_started {
-            self.instances_expired += 1;
-            self.lifespan_stats.push(lifespan);
-        }
-        self.sync();
-    }
-
     pub fn run(&mut self) -> SimResults {
         let horizon = SimTime::from_secs(self.cfg.horizon);
-        let first = self.cfg.arrival.sample(&mut self.rng);
+        let first = self.cfg.arrival.sample(&mut self.core.rng);
         self.events.schedule(SimTime::from_secs(first), Event::Arrival);
         self.events.schedule(horizon, Event::Horizon);
         while let Some((t, ev)) = self.events.pop() {
-            self.maybe_start_stats(t);
-            self.now = t;
+            self.core.maybe_start_stats(t);
+            self.core.set_now(t);
             match ev {
-                Event::Arrival => self.handle_arrival(),
-                Event::Departure(id) => self.handle_departure(id),
-                Event::Expiration { id, gen } => self.handle_expiration(id, gen),
-                Event::ProvisioningDone(_) => unreachable!(),
+                Event::Arrival => {
+                    self.core.handle_arrival(&mut self.events, &mut self.hooks);
+                    let gap = self.cfg.arrival.sample(&mut self.core.rng);
+                    self.events.schedule(t.after(gap), Event::Arrival);
+                }
+                Event::Departure(id) => {
+                    self.core.handle_departure(&mut self.events, &mut self.hooks, id)
+                }
+                Event::Expiration { id, gen } => {
+                    self.core.handle_expiration(&mut self.events, &mut self.hooks, id, gen)
+                }
+                Event::Provision => self.core.handle_provision(&mut self.events, &mut self.hooks),
+                Event::ProvisioningDone(id) => {
+                    self.core.handle_provisioning_done(&mut self.events, &mut self.hooks, id)
+                }
                 Event::Horizon => break,
             }
         }
-        self.now = horizon;
-        self.server_tw.advance(horizon);
-        self.running_tw.advance(horizon);
-        self.busy_inst_tw.advance(horizon);
-        self.count_dist.finish(horizon);
+        self.core.close(horizon);
+        self.core.results()
+    }
 
-        let measured = horizon.since(self.stats_start).max(0.0);
-        let served = self.cold_requests + self.warm_requests;
-        let avg_server = self.server_tw.average();
-        let avg_busy_inst = self.busy_inst_tw.average();
-        SimResults {
-            measured_time: measured,
-            total_requests: self.total_requests,
-            cold_requests: self.cold_requests,
-            warm_requests: self.warm_requests,
-            rejected_requests: self.rejected_requests,
-            cold_start_prob: if served > 0 {
-                self.cold_requests as f64 / served as f64
-            } else {
-                0.0
-            },
-            rejection_prob: if self.total_requests > 0 {
-                self.rejected_requests as f64 / self.total_requests as f64
-            } else {
-                0.0
-            },
-            avg_lifespan: self.lifespan_stats.mean(),
-            instances_created: self.instances_created,
-            instances_expired: self.instances_expired,
-            avg_server_count: avg_server,
-            avg_running_count: self.running_tw.average(),
-            avg_idle_count: avg_server - avg_busy_inst,
-            max_server_count: self.server_tw.max_level(),
-            wasted_capacity: if avg_server > 0.0 {
-                (avg_server - avg_busy_inst) / avg_server
-            } else {
-                0.0
-            },
-            avg_response_time: self.response_stats.mean(),
-            avg_warm_response_time: self.warm_response_stats.mean(),
-            avg_cold_response_time: self.cold_response_stats.mean(),
-            response_p50: self.response_p50.quantile(),
-            response_p95: self.response_p95.quantile(),
-            response_p99: self.response_p99.quantile(),
-            billed_instance_seconds: self.billed_seconds,
-            observed_arrival_rate: if measured > 0.0 {
-                self.total_requests as f64 / measured
-            } else {
-                0.0
-            },
-            instance_count_pmf: self.count_dist.pmf(),
-        }
+    /// All instances ever created (for capacity/lifecycle assertions).
+    pub fn instances(&self) -> &[FunctionInstance] {
+        self.core.instances()
+    }
+
+    /// Current live/busy-instance/warm-pool counts.
+    pub fn live_counts(&self) -> (usize, usize, usize) {
+        self.core.live_counts()
     }
 }
 
@@ -402,7 +161,7 @@ mod tests {
     fn in_flight_never_exceeds_capacity() {
         let mut sim = ParServerlessSimulator::new(cfg(5.0, 5_000.0, 3), 4);
         let _ = sim.run();
-        for inst in &sim.instances {
+        for inst in sim.instances() {
             assert!(inst.in_flight <= 4);
         }
     }
@@ -424,12 +183,9 @@ mod tests {
         for seed in [5u64, 6, 7] {
             let mut sim = ParServerlessSimulator::new(cfg(8.0, 10_000.0, seed), 3);
             let _ = sim.run();
-            let scan = sim
-                .instances
-                .iter()
-                .filter(|i| i.state == ParState::Busy)
-                .count();
-            assert_eq!(sim.busy_instances, scan, "seed {seed}");
+            let scan = sim.instances().iter().filter(|i| i.is_busy()).count();
+            let (_, busy, _) = sim.live_counts();
+            assert_eq!(busy, scan, "seed {seed}");
         }
     }
 
@@ -459,21 +215,30 @@ mod tests {
     }
 
     #[test]
-    fn percentiles_at_c1_match_scale_per_request_simulator() {
+    fn c1_is_bit_identical_to_scale_per_request_simulator() {
         // With c=1 and a deterministic expiration threshold the two
-        // simulators are the same stochastic system drawing the same RNG
-        // stream, so the P2 percentile estimators see identical response
-        // sequences.
+        // engines are the *same* core configuration drawing the same RNG
+        // stream — the unification makes the historical percentile-level
+        // agreement an exact bitwise identity.
         let c = cfg(0.9, 100_000.0, 11);
         let par = ParServerlessSimulator::new(c.clone(), 1).run();
         let spr = ServerlessSimulator::new(c).run();
         assert_eq!(par.total_requests, spr.total_requests);
         assert_eq!(par.cold_requests, spr.cold_requests);
-        assert!(par.response_p50.is_finite() && par.response_p50 > 0.0);
-        assert!((par.response_p50 - spr.response_p50).abs() < 1e-9);
-        assert!((par.response_p95 - spr.response_p95).abs() < 1e-9);
-        assert!((par.response_p99 - spr.response_p99).abs() < 1e-9);
+        assert_eq!(par.warm_requests, spr.warm_requests);
+        assert_eq!(par.instances_expired, spr.instances_expired);
+        assert_eq!(par.avg_server_count.to_bits(), spr.avg_server_count.to_bits());
+        assert_eq!(par.avg_running_count.to_bits(), spr.avg_running_count.to_bits());
+        assert_eq!(par.avg_idle_count.to_bits(), spr.avg_idle_count.to_bits());
+        assert_eq!(par.response_p50.to_bits(), spr.response_p50.to_bits());
+        assert_eq!(par.response_p95.to_bits(), spr.response_p95.to_bits());
+        assert_eq!(par.response_p99.to_bits(), spr.response_p99.to_bits());
+        assert_eq!(
+            par.billed_instance_seconds.to_bits(),
+            spr.billed_instance_seconds.to_bits()
+        );
         // Percentiles are ordered and bracket the mean sanely.
+        assert!(par.response_p50.is_finite() && par.response_p50 > 0.0);
         assert!(par.response_p50 <= par.response_p95);
         assert!(par.response_p95 <= par.response_p99);
     }

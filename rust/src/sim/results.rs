@@ -58,6 +58,13 @@ pub struct SimResults {
     /// (Fig. 3). `instance_count_pmf[k]` = fraction of time with k
     /// instances.
     pub instance_count_pmf: Vec<f64>,
+    /// Instances started by the prewarm (provisioning-lead) path in the
+    /// measured window. 0 unless the engine runs with a positive
+    /// provisioning lead (see `sim::core`).
+    pub prewarm_starts: u64,
+    /// Total lifespan of prewarmed instances that expired without serving
+    /// a single request — the prewarm arm's speculative waste.
+    pub wasted_prewarm_seconds: f64,
 }
 
 impl SimResults {
@@ -132,6 +139,8 @@ mod tests {
             billed_instance_seconds: 1.79e6,
             observed_arrival_rate: 0.9,
             instance_count_pmf: vec![0.0, 0.1, 0.2, 0.3, 0.4],
+            prewarm_starts: 0,
+            wasted_prewarm_seconds: 0.0,
         }
     }
 

@@ -16,23 +16,23 @@
 //! * A cold request's busy period is one draw of the *cold service process*
 //!   (provisioning + service, the paper's "cold response time"); a warm
 //!   request's busy period is a draw of the *warm service process*.
+//!
+//! The lifecycle itself (routing, billing, expiration, level accounting)
+//! lives in [`super::core`]; this type is the scale-per-request
+//! configuration of that core — concurrency value 1, config-driven
+//! expiration ([`super::core::ConfigExpiration`]), plus the two
+//! diagnostics only this engine offers: the per-request log and the
+//! Fig. 4 transient samples.
 
+use super::core::{ConfigExpiration, CoreParams, EngineCore, LifecycleHooks};
 use super::event::{Event, EventQueue};
-use super::hist::CountDistribution;
-use super::instance::{FunctionInstance, InstanceId, InstanceState};
-use super::metrics::{OnlineStats, P2Quantile, TimeWeighted};
+use super::instance::{FunctionInstance, InstanceId};
 use super::process::Process;
 use super::results::SimResults;
 use super::rng::Rng;
 use super::time::SimTime;
 
-/// Outcome of a single request, for the optional per-request trace.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum RequestOutcome {
-    Cold,
-    Warm,
-    Rejected,
-}
+pub use super::core::RequestOutcome;
 
 /// One per-request trace record (only collected when
 /// [`SimConfig::capture_request_log`] is set).
@@ -152,88 +152,76 @@ pub struct CountSample {
     pub cumulative_avg: f64,
 }
 
-/// The scale-per-request serverless platform simulator.
+/// The scale-per-request hook set: config-driven expiration plus the
+/// optional per-request log.
+struct SprHooks {
+    expiration: ConfigExpiration,
+    capture: bool,
+    log: Vec<RequestLogEntry>,
+}
+
+impl LifecycleHooks for SprHooks {
+    fn keep_alive(&mut self, now: f64, rng: &mut Rng) -> f64 {
+        self.expiration.keep_alive(now, rng)
+    }
+
+    fn on_request(
+        &mut self,
+        now: f64,
+        outcome: RequestOutcome,
+        rt: f64,
+        instance: Option<InstanceId>,
+    ) {
+        if self.capture {
+            self.log.push(RequestLogEntry {
+                arrived_at: now,
+                outcome,
+                response_time: rt,
+                instance,
+            });
+        }
+    }
+}
+
+/// The scale-per-request serverless platform simulator: the
+/// [`EngineCore`] lifecycle at concurrency value 1.
 pub struct ServerlessSimulator {
     cfg: SimConfig,
-    rng: Rng,
+    core: EngineCore,
     events: EventQueue,
-    now: SimTime,
-
-    /// All instances ever created, indexed by `InstanceId.0`.
-    instances: Vec<FunctionInstance>,
-    /// Idle pool, kept sorted ascending by id; the newest idle instance
-    /// (max id) sits at the end, so newest-first routing is an O(1) pop.
-    /// Pools are small (tens) and churn is dominated by reuse of the
-    /// newest instance, so a sorted Vec beats a BTreeSet by a wide margin
-    /// (§Perf: +20% end-to-end on the Table 1 workload).
-    idle_pool: Vec<InstanceId>,
-    /// Live (non-terminated) instance count.
-    live_count: usize,
-    busy_count: usize,
-
-    // -------- statistics (all reset at the end of the warm-up skip) -------
-    stats_started: bool,
-    stats_start: SimTime,
-    total_requests: u64,
-    cold_requests: u64,
-    warm_requests: u64,
-    rejected_requests: u64,
-    instances_created: u64,
-    instances_expired: u64,
-    server_count_tw: TimeWeighted,
-    // The idle level is total - busy at every instant, so its time-weighted
-    // average is derived exactly at finish() instead of paying a third
-    // accumulator update on every level change (§Perf).
-    running_tw: TimeWeighted,
-    count_dist: CountDistribution,
-    lifespan_stats: OnlineStats,
-    response_stats: OnlineStats,
-    warm_response_stats: OnlineStats,
-    cold_response_stats: OnlineStats,
-    response_p50: P2Quantile,
-    response_p95: P2Quantile,
-    response_p99: P2Quantile,
-    billed_seconds: f64,
-    request_log: Vec<RequestLogEntry>,
+    hooks: SprHooks,
     samples: Vec<CountSample>,
     next_sample_at: SimTime,
 }
 
 impl ServerlessSimulator {
     pub fn new(cfg: SimConfig) -> Self {
-        let rng = Rng::new(cfg.seed);
-        let start = SimTime::ZERO;
         // Pre-reserve hot storage: a Table-1-scale run allocates thousands
         // of instances and keeps a few thousand events in flight; growing
         // these Vecs inside the event loop shows up in profiles (§Perf).
+        let core = EngineCore::new(CoreParams {
+            seed: cfg.seed,
+            warm_service: cfg.warm_service.clone(),
+            cold_service: cfg.cold_service.clone(),
+            batch_size: cfg.batch_size.clone(),
+            max_concurrency: cfg.max_concurrency,
+            skip_initial: cfg.skip_initial,
+            concurrency_value: 1,
+            prewarm_lead: 0.0,
+            instance_capacity: 1024,
+        });
+        let hooks = SprHooks {
+            expiration: ConfigExpiration {
+                threshold: cfg.expiration_threshold,
+                process: cfg.expiration_process.clone(),
+            },
+            capture: cfg.capture_request_log,
+            log: Vec::new(),
+        };
         ServerlessSimulator {
-            rng,
+            core,
             events: EventQueue::with_capacity(4096),
-            now: start,
-            instances: Vec::with_capacity(1024),
-            idle_pool: Vec::with_capacity(64),
-            live_count: 0,
-            busy_count: 0,
-            stats_started: cfg.skip_initial <= 0.0,
-            stats_start: SimTime::from_secs(cfg.skip_initial.max(0.0)),
-            total_requests: 0,
-            cold_requests: 0,
-            warm_requests: 0,
-            rejected_requests: 0,
-            instances_created: 0,
-            instances_expired: 0,
-            server_count_tw: TimeWeighted::new(start, 0.0),
-            running_tw: TimeWeighted::new(start, 0.0),
-            count_dist: CountDistribution::new(start, 0),
-            lifespan_stats: OnlineStats::new(),
-            response_stats: OnlineStats::new(),
-            warm_response_stats: OnlineStats::new(),
-            cold_response_stats: OnlineStats::new(),
-            response_p50: P2Quantile::new(0.5),
-            response_p95: P2Quantile::new(0.95),
-            response_p99: P2Quantile::new(0.99),
-            billed_seconds: 0.0,
-            request_log: Vec::new(),
+            hooks,
             samples: Vec::new(),
             next_sample_at: SimTime::from_secs(cfg.skip_initial.max(0.0)),
             cfg,
@@ -245,329 +233,78 @@ impl ServerlessSimulator {
     /// `running_remaining[i]` seconds of service left. Used by the temporal
     /// simulator (paper's `ServerlessTemporalSimulator`).
     pub fn set_initial_state(&mut self, idle_ages: &[f64], running_remaining: &[f64]) {
-        assert_eq!(self.now, SimTime::ZERO, "initial state must be set before run()");
-        for &age in idle_ages {
-            let id = self.alloc_instance();
-            let inst = &mut self.instances[id.0 as usize];
-            inst.state = InstanceState::Idle;
-            // Created in the past; approximate lifespan bookkeeping.
-            inst.created_at = SimTime::ZERO;
-            inst.idle_since = SimTime::ZERO;
-            let gen = inst.generation;
-            let threshold = self.sample_expiration();
-            let remaining = (threshold - age).max(0.0);
-            debug_assert!(self.idle_pool.last().map(|&l| l < id).unwrap_or(true));
-            self.idle_pool.push(id);
-            self.live_count += 1;
-            self.events.schedule(SimTime::from_secs(remaining), Event::Expiration { id, gen });
-        }
-        for &rem in running_remaining {
-            let id = self.alloc_instance();
-            let inst = &mut self.instances[id.0 as usize];
-            inst.state = InstanceState::Running;
-            self.live_count += 1;
-            self.busy_count += 1;
-            self.events
-                .schedule(SimTime::from_secs(rem.max(0.0)), Event::Departure(id));
-        }
-        self.sync_levels();
-    }
-
-    fn alloc_instance(&mut self) -> InstanceId {
-        let id = InstanceId(self.instances.len() as u64);
-        self.instances.push(FunctionInstance::cold_start(id, self.now));
-        id
-    }
-
-    fn sample_expiration(&mut self) -> f64 {
-        match &self.cfg.expiration_process {
-            Some(p) => p.sample(&mut self.rng),
-            None => self.cfg.expiration_threshold,
-        }
-    }
-
-    /// Push the current levels into the time-weighted accumulators.
-    fn sync_levels(&mut self) {
-        let total = self.live_count as f64;
-        let busy = self.busy_count as f64;
-        self.server_count_tw.update(self.now, total);
-        self.running_tw.update(self.now, busy);
-        self.count_dist.update(self.now, self.live_count);
+        self.core
+            .seed_initial_state(&mut self.events, &mut self.hooks, idle_ages, running_remaining);
     }
 
     /// Emit Fig.4-style samples up to the current time.
     fn emit_samples(&mut self) {
-        if self.cfg.sample_interval <= 0.0 || !self.stats_started {
+        if self.cfg.sample_interval <= 0.0 || !self.core.stats_started() {
             return;
         }
-        while self.next_sample_at <= self.now {
+        while self.next_sample_at <= self.core.now() {
             // Cumulative average over [stats_start, next_sample_at]: the
             // accumulators are synced at every level change, so the
             // remainder since the last sync is at the current level.
             let t = self.next_sample_at;
-            let elapsed = t.since(self.stats_start);
+            let elapsed = t.since(self.core.stats_start());
+            let (live, _, _) = self.core.live_counts();
             let cum = if elapsed > 0.0 {
-                let tw = &self.server_count_tw;
+                let tw = self.core.server_tw();
                 let gap = t.since(tw.last_time()).max(0.0);
                 (tw.integral() + tw.current() * gap) / elapsed
             } else {
-                self.live_count as f64
+                live as f64
             };
             self.samples.push(CountSample {
                 t: t.as_secs(),
-                count: self.live_count as f64,
+                count: live as f64,
                 cumulative_avg: cum,
             });
             self.next_sample_at = t.after(self.cfg.sample_interval);
         }
     }
 
-    fn maybe_start_stats(&mut self, event_time: SimTime) {
-        if self.stats_started || event_time < self.stats_start {
-            return;
-        }
-        // Advance level accumulators to the skip boundary, then reset them.
-        let boundary = self.stats_start;
-        self.server_count_tw.advance(boundary);
-        self.running_tw.advance(boundary);
-        self.count_dist.finish(boundary);
-        self.server_count_tw.reset_at(boundary);
-        self.running_tw.reset_at(boundary);
-        self.count_dist.reset_at(boundary);
-        self.stats_started = true;
-    }
-
-    fn record_response(&mut self, rt: f64, cold: bool) {
-        if !self.stats_started {
-            return;
-        }
-        self.response_stats.push(rt);
-        if cold {
-            self.cold_response_stats.push(rt);
-        } else {
-            self.warm_response_stats.push(rt);
-        }
-        self.response_p50.push(rt);
-        self.response_p95.push(rt);
-        self.response_p99.push(rt);
-    }
-
-    fn handle_arrival(&mut self) {
-        // Batch epochs bring several simultaneous requests.
-        let batch = match &self.cfg.batch_size {
-            None => 1,
-            Some(p) => {
-                let k = p.sample(&mut self.rng).round();
-                if k < 1.0 {
-                    1
-                } else {
-                    k as u64
-                }
-            }
-        };
-        let (live0, busy0) = (self.live_count, self.busy_count);
-        for _ in 0..batch {
-            self.route_one_request();
-        }
-        // Lazy sync: a fully-rejected epoch changes no level, so skip the
-        // accumulator updates entirely (they stay correct because the level
-        // is unchanged since the last sync).
-        if self.live_count != live0 || self.busy_count != busy0 {
-            self.sync_levels();
-        }
-        // Schedule the next arrival epoch.
-        let gap = self.cfg.arrival.sample(&mut self.rng);
-        self.events.schedule(self.now.after(gap), Event::Arrival);
-    }
-
-    /// Route a single request at the current instant (scale-per-request).
-    fn route_one_request(&mut self) {
-        if self.stats_started {
-            self.total_requests += 1;
-        }
-        // Newest-first routing: take the youngest idle instance.
-        if let Some(id) = self.idle_pool.pop() {
-            let inst = &mut self.instances[id.0 as usize];
-            inst.start_warm(self.now);
-            self.busy_count += 1;
-            let service = self.cfg.warm_service.sample(&mut self.rng);
-            self.events.schedule(self.now.after(service), Event::Departure(id));
-            if self.stats_started {
-                self.warm_requests += 1;
-                self.record_response(service, false);
-                if self.cfg.capture_request_log {
-                    self.request_log.push(RequestLogEntry {
-                        arrived_at: self.now.as_secs(),
-                        outcome: RequestOutcome::Warm,
-                        response_time: service,
-                        instance: Some(id),
-                    });
-                }
-            }
-        } else if self.live_count < self.cfg.max_concurrency {
-            // Cold start: spin up a new instance; its busy period is one
-            // draw of the cold service process (provisioning + service).
-            let id = self.alloc_instance();
-            self.live_count += 1;
-            self.busy_count += 1;
-            if self.stats_started {
-                self.instances_created += 1;
-            }
-            let service = self.cfg.cold_service.sample(&mut self.rng);
-            self.events.schedule(self.now.after(service), Event::Departure(id));
-            if self.stats_started {
-                self.cold_requests += 1;
-                self.record_response(service, true);
-                if self.cfg.capture_request_log {
-                    self.request_log.push(RequestLogEntry {
-                        arrived_at: self.now.as_secs(),
-                        outcome: RequestOutcome::Cold,
-                        response_time: service,
-                        instance: Some(id),
-                    });
-                }
-            }
-        } else {
-            // Maximum concurrency reached and nothing idle: reject.
-            if self.stats_started {
-                self.rejected_requests += 1;
-                if self.cfg.capture_request_log {
-                    self.request_log.push(RequestLogEntry {
-                        arrived_at: self.now.as_secs(),
-                        outcome: RequestOutcome::Rejected,
-                        response_time: 0.0,
-                        instance: None,
-                    });
-                }
-            }
-        }
-    }
-
-    fn handle_departure(&mut self, id: InstanceId) {
-        let gen;
-        {
-            let inst = &mut self.instances[id.0 as usize];
-            // The whole busy period is billed (the paper notes app init —
-            // included in the cold busy period here — is billed; the
-            // platform-init part is a sub-second refinement configurable
-            // via the cost module's billed-fraction knob).
-            let busy = self.now.since(inst.busy_since).max(0.0);
-            gen = inst.finish_request(self.now, busy);
-            if self.stats_started {
-                self.billed_seconds += busy;
-            }
-        }
-        self.busy_count -= 1;
-        match self.idle_pool.binary_search(&id) {
-            Err(pos) => self.idle_pool.insert(pos, id),
-            Ok(_) => unreachable!("instance already idle"),
-        }
-        let threshold = self.sample_expiration();
-        self.events
-            .schedule(self.now.after(threshold), Event::Expiration { id, gen });
-        self.sync_levels();
-    }
-
-    fn handle_expiration(&mut self, id: InstanceId, gen: u64) {
-        let inst = &mut self.instances[id.0 as usize];
-        // Stale event: the instance was reused (generation advanced) or is
-        // no longer idle.
-        if inst.generation != gen || inst.state != InstanceState::Idle {
-            return;
-        }
-        inst.terminate(self.now);
-        let lifespan = inst.lifespan(self.now);
-        if let Ok(pos) = self.idle_pool.binary_search(&id) {
-            self.idle_pool.remove(pos);
-        }
-        self.live_count -= 1;
-        if self.stats_started {
-            self.instances_expired += 1;
-            self.lifespan_stats.push(lifespan);
-        }
-        self.sync_levels();
-    }
-
     /// Run to the horizon and produce results.
     pub fn run(&mut self) -> SimResults {
         let horizon = SimTime::from_secs(self.cfg.horizon);
         // First arrival.
-        let first = self.cfg.arrival.sample(&mut self.rng);
+        let first = self.cfg.arrival.sample(&mut self.core.rng);
         self.events.schedule(SimTime::from_secs(first), Event::Arrival);
         self.events.schedule(horizon, Event::Horizon);
 
         while let Some((t, ev)) = self.events.pop() {
-            self.maybe_start_stats(t);
-            self.now = t;
+            self.core.maybe_start_stats(t);
+            self.core.set_now(t);
             self.emit_samples();
             match ev {
-                Event::Arrival => self.handle_arrival(),
-                Event::Departure(id) => self.handle_departure(id),
-                Event::Expiration { id, gen } => self.handle_expiration(id, gen),
-                Event::ProvisioningDone(_) => unreachable!("not used by this simulator"),
+                Event::Arrival => {
+                    self.core.handle_arrival(&mut self.events, &mut self.hooks);
+                    // Schedule the next arrival epoch.
+                    let gap = self.cfg.arrival.sample(&mut self.core.rng);
+                    self.events.schedule(t.after(gap), Event::Arrival);
+                }
+                Event::Departure(id) => {
+                    self.core.handle_departure(&mut self.events, &mut self.hooks, id)
+                }
+                Event::Expiration { id, gen } => {
+                    self.core.handle_expiration(&mut self.events, &mut self.hooks, id, gen)
+                }
+                Event::Provision => self.core.handle_provision(&mut self.events, &mut self.hooks),
+                Event::ProvisioningDone(id) => {
+                    self.core.handle_provisioning_done(&mut self.events, &mut self.hooks, id)
+                }
                 Event::Horizon => break,
             }
         }
-        self.finish(horizon)
-    }
-
-    fn finish(&mut self, horizon: SimTime) -> SimResults {
-        self.now = horizon;
-        self.server_count_tw.advance(horizon);
-        self.running_tw.advance(horizon);
-        self.count_dist.finish(horizon);
+        self.core.close(horizon);
         self.emit_samples();
-
-        let measured = horizon.since(self.stats_start).max(0.0);
-        let served = self.cold_requests + self.warm_requests;
-        let avg_server = self.server_count_tw.average();
-        let avg_running = self.running_tw.average();
-        // idle(t) = total(t) - busy(t) at every instant, so the averages
-        // decompose exactly (no third accumulator needed on the hot path).
-        let avg_idle = avg_server - avg_running;
-        SimResults {
-            measured_time: measured,
-            total_requests: self.total_requests,
-            cold_requests: self.cold_requests,
-            warm_requests: self.warm_requests,
-            rejected_requests: self.rejected_requests,
-            cold_start_prob: if served > 0 {
-                self.cold_requests as f64 / served as f64
-            } else {
-                0.0
-            },
-            rejection_prob: if self.total_requests > 0 {
-                self.rejected_requests as f64 / self.total_requests as f64
-            } else {
-                0.0
-            },
-            avg_lifespan: self.lifespan_stats.mean(),
-            instances_created: self.instances_created,
-            instances_expired: self.instances_expired,
-            avg_server_count: avg_server,
-            avg_running_count: avg_running,
-            avg_idle_count: avg_idle,
-            max_server_count: self.server_count_tw.max_level(),
-            wasted_capacity: if avg_server > 0.0 { avg_idle / avg_server } else { 0.0 },
-            avg_response_time: self.response_stats.mean(),
-            avg_warm_response_time: self.warm_response_stats.mean(),
-            avg_cold_response_time: self.cold_response_stats.mean(),
-            response_p50: self.response_p50.quantile(),
-            response_p95: self.response_p95.quantile(),
-            response_p99: self.response_p99.quantile(),
-            billed_instance_seconds: self.billed_seconds,
-            observed_arrival_rate: if measured > 0.0 {
-                self.total_requests as f64 / measured
-            } else {
-                0.0
-            },
-            instance_count_pmf: self.count_dist.pmf(),
-        }
+        self.core.results()
     }
 
     /// The per-request log (empty unless `capture_request_log`).
     pub fn request_log(&self) -> &[RequestLogEntry] {
-        &self.request_log
+        &self.hooks.log
     }
 
     /// Fig.4-style transient samples (empty unless `sample_interval > 0`).
@@ -577,18 +314,19 @@ impl ServerlessSimulator {
 
     /// All instances ever created (for lifecycle analysis tooling).
     pub fn instances(&self) -> &[FunctionInstance] {
-        &self.instances
+        self.core.instances()
     }
 
     /// Current live/busy/idle counts — exposed for invariant tests.
     pub fn live_counts(&self) -> (usize, usize, usize) {
-        (self.live_count, self.busy_count, self.idle_pool.len())
+        self.core.live_counts()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::instance::InstanceState;
 
     fn quick_cfg(rate: f64, horizon: f64, seed: u64) -> SimConfig {
         SimConfig {
@@ -669,6 +407,9 @@ mod tests {
         assert_eq!(r.rejected_requests, 0);
         // total = running + idle (time-weighted means add up)
         assert!((r.avg_server_count - r.avg_running_count - r.avg_idle_count).abs() < 1e-9);
+        // No prewarm driver on this engine: the counters stay zero.
+        assert_eq!(r.prewarm_starts, 0);
+        assert_eq!(r.wasted_prewarm_seconds, 0.0);
     }
 
     #[test]

@@ -108,7 +108,11 @@ pub struct PolicyOutcome {
 ///
 /// Policies run sequentially; each fleet run parallelizes internally
 /// (sharded across `base.threads` workers), so the grid inherits the
-/// fleet's any-thread-count determinism.
+/// fleet's any-thread-count determinism. The base config's
+/// `prewarm_lead` rides along unchanged, so a prewarm-enabled mix
+/// compares its policies *with* the provisioning-lead arm active (only
+/// policies with a prediction arm — the hybrid histogram — actually
+/// prewarm).
 pub fn keepalive_policy_comparison(
     base: &FleetConfig,
     fixed_thresholds: &[f64],

@@ -1,0 +1,345 @@
+//! Golden regression fixtures for the engine unification (`sim::core`).
+//!
+//! The refactor folded three hand-synchronized lifecycle implementations
+//! (`ServerlessSimulator`, `ParServerlessSimulator`, `fleet::FunctionEngine`)
+//! into one core. These tests pin the five pre-refactor configurations —
+//! steady, concurrency-value, temporal, 1-function fleet, capped fleet —
+//! two ways:
+//!
+//! * **Deterministic goldens**: constant-process workloads whose every
+//!   output row is derivable by hand from the paper's model definition, so
+//!   the expected values below are exactly what the pre-refactor engines
+//!   provably produced (no recorded snapshots needed, and any lifecycle
+//!   regression shows up as a concrete wrong number).
+//! * **Cross-engine digests**: configurations where two engines are
+//!   specified to be the same stochastic system must agree bit-for-bit —
+//!   same RNG draw sequence, same event order, same accumulator updates.
+//!
+//! Plus the prewarm property: a provisioning lead of 0 (or a positive lead
+//! under a policy with no prediction arm) reproduces the no-prewarm engine
+//! bit-for-bit.
+
+use simfaas::fleet::{FleetConfig, PolicySpec};
+use simfaas::sim::{
+    InitialState, ParServerlessSimulator, Process, Rng, ServerlessSimulator,
+    ServerlessTemporalSimulator, SimConfig, SimResults,
+};
+use simfaas::workload::SyntheticTrace;
+
+/// Every scalar output of a run, exact-comparable (floats by bit pattern).
+fn digest(r: &SimResults) -> Vec<u64> {
+    vec![
+        r.total_requests,
+        r.cold_requests,
+        r.warm_requests,
+        r.rejected_requests,
+        r.instances_created,
+        r.instances_expired,
+        r.prewarm_starts,
+        r.cold_start_prob.to_bits(),
+        r.rejection_prob.to_bits(),
+        r.avg_lifespan.to_bits(),
+        r.avg_server_count.to_bits(),
+        r.avg_running_count.to_bits(),
+        r.avg_idle_count.to_bits(),
+        r.max_server_count.to_bits(),
+        r.wasted_capacity.to_bits(),
+        r.avg_response_time.to_bits(),
+        r.response_p50.to_bits(),
+        r.response_p95.to_bits(),
+        r.response_p99.to_bits(),
+        r.billed_instance_seconds.to_bits(),
+        r.wasted_prewarm_seconds.to_bits(),
+    ]
+}
+
+fn fleet_digest(res: &simfaas::FleetResults) -> Vec<u64> {
+    let mut d: Vec<u64> = res.per_function.iter().flat_map(digest).collect();
+    let a = &res.aggregate;
+    d.extend([
+        a.total_requests,
+        a.cold_requests,
+        a.rejected_requests,
+        a.cap_rejections,
+        a.prewarm_starts,
+        a.cold_start_prob.to_bits(),
+        a.avg_server_count.to_bits(),
+        a.response_p95.to_bits(),
+        a.billed_instance_seconds.to_bits(),
+        a.wasted_prewarm_seconds.to_bits(),
+    ]);
+    d
+}
+
+fn const_cfg(arrival: f64, warm: f64, cold: f64, threshold: f64, horizon: f64) -> SimConfig {
+    SimConfig {
+        arrival: Process::constant(arrival),
+        batch_size: None,
+        warm_service: Process::constant(warm),
+        cold_service: Process::constant(cold),
+        expiration_threshold: threshold,
+        expiration_process: None,
+        max_concurrency: 1000,
+        horizon,
+        skip_initial: 0.0,
+        seed: 7,
+        capture_request_log: false,
+        sample_interval: 0.0,
+    }
+}
+
+/// Steady fixture: arrivals every 5 s, warm 1 s, cold 2 s, threshold 600 s,
+/// horizon 10_000 s. One cold start at t=5, the instance then lives to the
+/// horizon serving every request warm (idle gaps of 3–4 s never expire).
+#[test]
+fn steady_deterministic_golden() {
+    let r = ServerlessSimulator::new(const_cfg(5.0, 1.0, 2.0, 600.0, 10_000.0)).run();
+    assert_eq!(r.total_requests, 1999); // arrivals at 5, 10, ..., 9995
+    assert_eq!(r.cold_requests, 1);
+    assert_eq!(r.warm_requests, 1998);
+    assert_eq!(r.rejected_requests, 0);
+    assert_eq!(r.instances_created, 1);
+    assert_eq!(r.instances_expired, 0);
+    // Busy seconds: 2 (cold) + 1998 * 1 (warm), all exact in f64.
+    assert_eq!(r.billed_instance_seconds, 2000.0);
+    // Alive from t=5 to the 10_000 s horizon.
+    assert!((r.avg_server_count - 0.9995).abs() < 1e-12);
+    assert!((r.avg_running_count - 0.2).abs() < 1e-12);
+    assert!((r.avg_idle_count - 0.7995).abs() < 1e-12);
+    assert_eq!(r.max_server_count, 1.0);
+    assert!((r.avg_response_time - 2000.0 / 1999.0).abs() < 1e-9);
+    assert!((r.observed_arrival_rate - 0.1999).abs() < 1e-12);
+    assert!((r.cold_start_prob - 1.0 / 1999.0).abs() < 1e-15);
+    assert_eq!(r.prewarm_starts, 0);
+    assert_eq!(r.wasted_prewarm_seconds, 0.0);
+}
+
+/// The same fixture must come out of all three engine surfaces
+/// bit-for-bit: the scale-per-request simulator, the concurrency-value
+/// simulator at c=1, and a 1-function fleet under the fixed policy.
+#[test]
+fn steady_fixture_identical_across_all_three_engines() {
+    let cfg = const_cfg(5.0, 1.0, 2.0, 600.0, 10_000.0);
+    let spr = ServerlessSimulator::new(cfg.clone()).run();
+    let par = ParServerlessSimulator::new(cfg.clone(), 1).run();
+    let fleet = FleetConfig::from_sim_configs(&[cfg], PolicySpec::fixed(600.0)).run();
+    assert_eq!(digest(&spr), digest(&par));
+    assert_eq!(digest(&spr), digest(&fleet.per_function[0]));
+}
+
+/// Stochastic cross-engine digests: with exponential processes the three
+/// surfaces are specified to draw the identical RNG stream.
+#[test]
+fn stochastic_cross_engine_digests_match() {
+    let cfg = SimConfig::table1().with_horizon(30_000.0).with_seed(0xD1CE);
+    let spr = ServerlessSimulator::new(cfg.clone()).run();
+    let par = ParServerlessSimulator::new(cfg.clone(), 1).run();
+    let fleet = FleetConfig::from_sim_configs(&[cfg], PolicySpec::fixed(600.0)).run();
+    assert_eq!(digest(&spr), digest(&par));
+    assert_eq!(digest(&spr), digest(&fleet.per_function[0]));
+}
+
+/// Concurrency-value fixture (c=2): arrivals every 1 s, service 1.5 s. One
+/// instance absorbs everything with 1–2 requests in flight at all times;
+/// the busy period never closes, so — per the historical billing rule
+/// (bill when the instance drains) — billed time stays 0.
+#[test]
+fn par_deterministic_golden() {
+    let r = ParServerlessSimulator::new(const_cfg(1.0, 1.5, 1.5, 10.0, 100.0), 2).run();
+    assert_eq!(r.total_requests, 99); // arrivals at 1, 2, ..., 99
+    assert_eq!(r.cold_requests, 1);
+    assert_eq!(r.warm_requests, 98);
+    assert_eq!(r.rejected_requests, 0);
+    assert_eq!(r.instances_created, 1);
+    assert_eq!(r.instances_expired, 0);
+    assert_eq!(r.billed_instance_seconds, 0.0);
+    assert!((r.avg_server_count - 0.99).abs() < 1e-12);
+    // In-flight integral: [1,2] at 1, then per period 0.5 s at 2 + 0.5 s
+    // at 1 -> 1 + 98 * 1.5 = 148 over 100 s.
+    assert!((r.avg_running_count - 1.48).abs() < 1e-12);
+    // The instance is busy the whole [1, 100] window: zero idle.
+    assert!(r.avg_idle_count.abs() < 1e-12);
+    assert_eq!(r.max_server_count, 1.0);
+    // Every response is exactly 1.5 s, so even the P² estimators are exact.
+    assert_eq!(r.avg_response_time, 1.5);
+    assert_eq!(r.response_p50, 1.5);
+    assert_eq!(r.response_p99, 1.5);
+}
+
+/// Temporal fixture: 3 just-idle instances at t=0, threshold 25 s,
+/// deterministic arrivals every 10 s, warm 1 s, horizon 200 s. Newest-first
+/// routing starves instances 0 and 1 (they expire at exactly t=25) while
+/// instance 2 serves all 19 arrivals warm.
+#[test]
+fn temporal_deterministic_golden() {
+    let cfg = const_cfg(10.0, 1.0, 1.2, 25.0, 200.0);
+    let sim = ServerlessTemporalSimulator::new(cfg, InitialState::warm_pool(3), 3);
+    let res = sim.run();
+    assert_eq!(res.runs.len(), 3);
+    for r in &res.runs {
+        assert_eq!(r.total_requests, 19); // arrivals at 10, 20, ..., 190
+        assert_eq!(r.cold_requests, 0);
+        assert_eq!(r.warm_requests, 19);
+        assert_eq!(r.instances_expired, 2);
+        assert_eq!(r.avg_lifespan, 25.0);
+        assert_eq!(r.billed_instance_seconds, 19.0);
+        // Level: 3 instances until t=25, then 1 until 200 -> 250/200.
+        assert!((r.avg_server_count - 1.25).abs() < 1e-12);
+        assert_eq!(r.max_server_count, 3.0);
+    }
+    // Identical deterministic replications -> zero CI half-width.
+    assert!((res.avg_server_count_ci.0 - 1.25).abs() < 1e-12);
+    assert!(res.avg_server_count_ci.1.abs() < 1e-12);
+}
+
+/// The temporal engine is replication-for-replication the plain simulator
+/// with `replica_with_seed(seed + i)` and the same initial state.
+#[test]
+fn temporal_replications_match_manual_core_runs() {
+    let mut cfg = SimConfig::table1().with_horizon(3_000.0).with_seed(0xBEE);
+    cfg.skip_initial = 0.0;
+    let res = ServerlessTemporalSimulator::new(cfg.clone(), InitialState::warm_pool(2), 4).run();
+    for (i, run) in res.runs.iter().enumerate() {
+        let mut solo = ServerlessSimulator::new(cfg.replica_with_seed(cfg.seed + i as u64));
+        solo.set_initial_state(&[0.0, 0.0], &[]);
+        assert_eq!(digest(run), digest(&solo.run()), "replication {i}");
+    }
+}
+
+/// Capped-fleet fixture: two deterministic functions, fleet cap 1. The
+/// first cold start (function A at t=4, busy 100 s) holds the only slot
+/// for the whole 50 s horizon; every other request in either function is a
+/// gate-only rejection.
+#[test]
+fn capped_fleet_deterministic_golden() {
+    let a = const_cfg(4.0, 1.0, 100.0, 600.0, 50.0);
+    let b = const_cfg(5.0, 1.0, 100.0, 600.0, 50.0);
+    let res = FleetConfig::from_sim_configs(&[a, b], PolicySpec::fixed(600.0))
+        .with_fleet_cap(1)
+        .run();
+    let (fa, fb) = (&res.per_function[0], &res.per_function[1]);
+    assert_eq!((fa.total_requests, fa.cold_requests, fa.rejected_requests), (12, 1, 11));
+    assert_eq!((fb.total_requests, fb.cold_requests, fb.rejected_requests), (9, 0, 9));
+    let agg = &res.aggregate;
+    assert_eq!(agg.total_requests, 21);
+    assert_eq!(agg.rejected_requests, 20);
+    assert_eq!(agg.cap_rejections, 20); // per-function limits never bind
+    // A's instance is alive (busy) from t=4 to the horizon; B never runs.
+    assert!((fa.avg_server_count - 0.92).abs() < 1e-12);
+    assert_eq!(fb.avg_server_count, 0.0);
+    // The busy period never closes before the horizon: nothing billed.
+    assert_eq!(agg.billed_instance_seconds, 0.0);
+}
+
+/// Prewarm property: a provisioning lead of 0 — or a positive lead under
+/// any policy without a prediction arm — reproduces the no-prewarm engine
+/// bit-for-bit, on stochastic synthetic tenant mixes.
+#[test]
+fn prewarm_lead_zero_is_bit_identical_to_no_prewarm() {
+    for seed in [3u64, 11, 42] {
+        let mut rng = Rng::new(seed);
+        let trace = SyntheticTrace::generate(6, &mut rng);
+        for policy in [
+            PolicySpec::fixed(300.0),
+            PolicySpec::stochastic(Process::exp_mean(300.0)),
+            PolicySpec::hybrid_histogram(600.0, 10.0),
+        ] {
+            let base = FleetConfig::from_trace(&trace, 3_000.0, 0.0, seed, policy.clone());
+            let plain = base.clone().run();
+            // Lead 0 is the disabled state.
+            let lead_zero = base.clone().with_prewarm_lead(0.0).run();
+            assert_eq!(fleet_digest(&plain), fleet_digest(&lead_zero), "seed {seed}");
+            // A positive lead under a predictionless policy schedules no
+            // Provision events, so it must also be bit-identical.
+            if !matches!(policy, PolicySpec::HybridHistogram { .. }) {
+                let lead_pos = base.clone().with_prewarm_lead(20.0).run();
+                assert_eq!(fleet_digest(&plain), fleet_digest(&lead_pos), "seed {seed}");
+            }
+        }
+    }
+}
+
+/// At most one prewarm is in flight at a time — including while an
+/// instance is still *provisioning*: pool drains during the lead window
+/// must not spawn a second speculative instance for the same predicted
+/// arrival.
+#[test]
+fn single_prewarm_in_flight_covers_the_whole_lead_window() {
+    use simfaas::fleet::{ArrivalMode, FunctionSpec, KeepAlivePolicy};
+    use std::sync::Arc;
+
+    /// Scripted policy: 0.5 s keep-alive, always predicts an arrival at
+    /// t=40 (until that time passes). No RNG use anywhere.
+    struct PredictForty;
+    impl KeepAlivePolicy for PredictForty {
+        fn keep_alive(&mut self, _now: f64, _rng: &mut simfaas::sim::Rng) -> f64 {
+            0.5
+        }
+        fn predict_next_arrival(&mut self, now: f64) -> Option<f64> {
+            (now < 40.0).then_some(40.0)
+        }
+        fn describe(&self) -> String {
+            "predict-forty".into()
+        }
+    }
+
+    let spec = FunctionSpec {
+        name: "scripted".into(),
+        arrival: ArrivalMode::Trace(Arc::new(vec![5.0, 6.0, 37.2])),
+        batch_size: None,
+        warm_service: Process::constant(1.0),
+        cold_service: Process::constant(2.0),
+        max_concurrency: 1000,
+        memory_mb: 128.0,
+        seed: 1,
+    };
+    let cfg = FleetConfig {
+        functions: vec![spec],
+        policy: PolicySpec::custom("predict-forty", || Box::new(PredictForty)),
+        fleet_max_concurrency: None,
+        horizon: 50.0,
+        skip_initial: 0.0,
+        threads: 1,
+        prewarm_lead: 3.0,
+    };
+    let results = cfg.run();
+    let r = &results.per_function[0];
+    // Timeline: cold starts at 5 and 6 expire by 8.5; the first drain (at
+    // 7.5) schedules one Provision for t=37 (= predicted 40 - lead 3).
+    // The second drain at 8.5 and — the regression — the drain at 39.7
+    // (the t=37.2 cold start expiring *while the prewarm instance is
+    // still provisioning*, Done at t=40) must both be absorbed by the
+    // pending prewarm: exactly one speculative instance ever starts.
+    assert_eq!(r.cold_requests, 3);
+    assert_eq!(r.warm_requests, 0);
+    assert_eq!(r.prewarm_starts, 1);
+    // That one instance provisions at 37, is ready at 40, and expires
+    // unused at 40.5: its whole 3.5 s lifespan is wasted prewarm time.
+    assert_eq!(r.instances_expired, 4);
+    assert!((r.wasted_prewarm_seconds - 3.5).abs() < 1e-9, "{}", r.wasted_prewarm_seconds);
+}
+
+/// Prewarm-enabled fleets keep the sharded determinism contract:
+/// bit-identical output for any thread count.
+#[test]
+fn prewarm_fleet_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(77);
+    let trace = SyntheticTrace::generate(10, &mut rng);
+    let base = FleetConfig::from_trace(
+        &trace,
+        4_000.0,
+        0.0,
+        0xF1EE7,
+        PolicySpec::hybrid_histogram(600.0, 10.0),
+    )
+    .with_prewarm_lead(15.0);
+    let reference = base.clone().with_threads(1).run();
+    for threads in [2, 8] {
+        let res = base.clone().with_threads(threads).run();
+        assert_eq!(fleet_digest(&res), fleet_digest(&reference), "threads={threads}");
+    }
+    // And the coupled path agrees with the sharded path when the cap
+    // never binds, prewarm instances included.
+    let coupled = base.clone().with_fleet_cap(1_000_000).run();
+    assert_eq!(fleet_digest(&coupled), fleet_digest(&reference));
+}

@@ -1,0 +1,71 @@
+#!/usr/bin/env python3
+"""Fail CI when the quick engine bench regresses against the committed
+baseline.
+
+Usage: check_bench_regression.py BASELINE.json FRESH.json [--tolerance 0.25]
+
+Both files are BENCH_engine.json records written by
+`benches/engine_throughput.rs` ({"events_per_sec": {case: rate, ...}}).
+Every case present in the baseline must exist in the fresh record and reach
+at least (1 - tolerance) x the baseline rate. Cases only present in the
+fresh record are reported but never fail (new bench cases land before their
+baseline does).
+"""
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.25,
+        help="allowed fractional regression vs the baseline (default 0.25)",
+    )
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f).get("events_per_sec", {})
+    with open(args.fresh) as f:
+        fresh = json.load(f).get("events_per_sec", {})
+
+    if not baseline:
+        print(f"error: {args.baseline} has no events_per_sec cases", file=sys.stderr)
+        return 2
+
+    failures = []
+    for case, base_rate in sorted(baseline.items()):
+        floor = base_rate * (1.0 - args.tolerance)
+        got = fresh.get(case)
+        if got is None:
+            failures.append(f"{case}: missing from fresh record (baseline {base_rate:.3g})")
+            continue
+        verdict = "ok" if got >= floor else "REGRESSED"
+        print(
+            f"{case}: {got:.3g} events/s vs baseline {base_rate:.3g} "
+            f"(floor {floor:.3g}) -> {verdict}"
+        )
+        if got < floor:
+            failures.append(
+                f"{case}: {got:.3g} < floor {floor:.3g} "
+                f"({args.tolerance:.0%} below baseline {base_rate:.3g})"
+            )
+    for case in sorted(set(fresh) - set(baseline)):
+        print(f"{case}: {fresh[case]:.3g} events/s (no baseline yet)")
+
+    if failures:
+        print("\nbench regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("\nbench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
