@@ -37,7 +37,7 @@ fn main() {
     let horizon = 2.0 * 86_400.0;
     for &idx in by_rate.iter().take(3) {
         let f = &trace.functions[idx];
-        let w = trace.arrivals_for(idx, horizon, &mut rng);
+        let w = trace.arrivals_for(idx, horizon, &mut rng).expect("index from the trace");
         let gaps = w.gaps();
         if gaps.len() < 100 {
             continue;

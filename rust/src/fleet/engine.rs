@@ -27,16 +27,16 @@
 //! still pin it.
 
 use super::policy::KeepAlivePolicy;
-use super::simulator::{ArrivalMode, FunctionSpec};
+use super::simulator::FunctionSpec;
 use crate::sim::core::{CoreParams, EngineCore, LifecycleHooks, Scheduler};
 use crate::sim::event::Event;
 use crate::sim::process::Process;
 use crate::sim::results::SimResults;
 use crate::sim::rng::Rng;
 use crate::sim::time::SimTime;
+use crate::workload::stream::ArrivalSource;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
-use std::sync::Arc;
 
 /// A scheduled fleet event: the core [`Event`] plus the index of the
 /// function it belongs to.
@@ -178,20 +178,11 @@ impl LifecycleHooks for FleetHooks<'_> {
     }
 }
 
-/// Per-function arrival source.
-pub(super) enum ArrivalRuntime {
-    /// Inter-arrival process (the core simulator's model).
-    Process(Process),
-    /// Replay of pre-materialized absolute arrival times (sorted), e.g. a
-    /// diurnal trace from `workload::azure`.
-    Trace { times: Arc<Vec<f64>>, next: usize },
-}
-
 /// One function's simulation state within a fleet run: an [`EngineCore`]
 /// plus the fleet-specific arrival source and keep-alive policy.
 pub(super) struct FunctionEngine {
     func: u32,
-    arrival: ArrivalRuntime,
+    arrival: ArrivalSource,
     core: EngineCore,
     policy: Box<dyn KeepAlivePolicy>,
 }
@@ -203,14 +194,13 @@ impl FunctionEngine {
         mut policy: Box<dyn KeepAlivePolicy>,
         skip_initial: f64,
         prewarm_lead: f64,
+        horizon: f64,
     ) -> Self {
-        let arrival = match &spec.arrival {
-            // Fresh process state per engine (the fleet analogue of
-            // `SimConfig::replica_with_seed`): shards never share mutable
-            // process state, which the determinism contract requires.
-            ArrivalMode::Process(p) => ArrivalRuntime::Process(p.replica()),
-            ArrivalMode::Trace(t) => ArrivalRuntime::Trace { times: Arc::clone(t), next: 0 },
-        };
+        // One fresh ArrivalSource per engine per run: process sources get
+        // replica state (the fleet analogue of `SimConfig::replica_with_seed`
+        // — shards never share mutable process state, which the determinism
+        // contract requires) and streaming sources reseed from their spec.
+        let arrival = spec.arrival.runtime(horizon);
         if prewarm_lead > 0.0 {
             policy.enable_prewarm(prewarm_lead);
         }
@@ -228,22 +218,13 @@ impl FunctionEngine {
         FunctionEngine { func, arrival, core, policy }
     }
 
-    /// Schedule this function's first arrival. For process arrivals this
-    /// consumes one draw — the same first draw `ServerlessSimulator::run`
-    /// makes before entering its loop.
+    /// Schedule this function's first arrival through the shared seam
+    /// ([`EngineCore::schedule_next_arrival`] at t = 0). For process
+    /// arrivals this consumes one draw — the same first draw
+    /// `ServerlessSimulator::run` makes before entering its loop.
     pub(super) fn schedule_first_arrival(&mut self, queue: &mut FleetQueue) {
-        match &mut self.arrival {
-            ArrivalRuntime::Process(p) => {
-                let first = p.sample(&mut self.core.rng);
-                queue.schedule(SimTime::from_secs(first), self.func, Event::Arrival);
-            }
-            ArrivalRuntime::Trace { times, next } => {
-                if let Some(&t) = times.first() {
-                    queue.schedule(SimTime::from_secs(t), self.func, Event::Arrival);
-                    *next = 1;
-                }
-            }
-        }
+        let mut sched = FuncScheduler { queue, func: self.func };
+        self.core.schedule_next_arrival(&mut sched, &mut self.arrival);
     }
 
     #[inline]
@@ -260,38 +241,25 @@ impl FunctionEngine {
     /// exactly one place. [`Event::Horizon`] terminates the loops and must
     /// never reach here.
     pub(super) fn handle_event(&mut self, queue: &mut FleetQueue, gate: &mut FleetGate, ev: Event) {
-        {
-            let mut sched = FuncScheduler { queue: &mut *queue, func: self.func };
-            let mut hooks = FleetHooks { policy: self.policy.as_mut(), gate };
-            match ev {
-                Event::Arrival => self.core.handle_arrival(&mut sched, &mut hooks),
-                Event::Departure(id) => self.core.handle_departure(&mut sched, &mut hooks, id),
-                Event::Expiration { id, gen } => {
-                    self.core.handle_expiration(&mut sched, &mut hooks, id, gen)
-                }
-                Event::Provision => self.core.handle_provision(&mut sched, &mut hooks),
-                Event::ProvisioningDone(id) => {
-                    self.core.handle_provisioning_done(&mut sched, &mut hooks, id)
-                }
-                Event::Horizon => unreachable!("the run loops terminate on Horizon"),
+        let mut sched = FuncScheduler { queue, func: self.func };
+        let mut hooks = FleetHooks { policy: self.policy.as_mut(), gate };
+        match ev {
+            Event::Arrival => {
+                self.core.handle_arrival(&mut sched, &mut hooks);
+                // Next arrival epoch through the one ArrivalSource seam
+                // (process draw, trace replay, or streaming generator) —
+                // after the service draws, the historical draw order.
+                self.core.schedule_next_arrival(&mut sched, &mut self.arrival);
             }
-        }
-        if matches!(ev, Event::Arrival) {
-            // Schedule the next arrival epoch (the arrival source is
-            // engine-specific: process draw or trace replay).
-            match &mut self.arrival {
-                ArrivalRuntime::Process(p) => {
-                    let gap = p.sample(&mut self.core.rng);
-                    let at = self.core.now().after(gap);
-                    queue.schedule(at, self.func, Event::Arrival);
-                }
-                ArrivalRuntime::Trace { times, next } => {
-                    if let Some(&t) = times.get(*next) {
-                        queue.schedule(SimTime::from_secs(t), self.func, Event::Arrival);
-                        *next += 1;
-                    }
-                }
+            Event::Departure(id) => self.core.handle_departure(&mut sched, &mut hooks, id),
+            Event::Expiration { id, gen } => {
+                self.core.handle_expiration(&mut sched, &mut hooks, id, gen)
             }
+            Event::Provision => self.core.handle_provision(&mut sched, &mut hooks),
+            Event::ProvisioningDone(id) => {
+                self.core.handle_provisioning_done(&mut sched, &mut hooks, id)
+            }
+            Event::Horizon => unreachable!("the run loops terminate on Horizon"),
         }
     }
 

@@ -3,11 +3,13 @@
 //! The paper's `ServerlessSimulator` models a single function; providers
 //! tune their platform against a *mix* of tenants (the paper's own framing:
 //! "tailor their platforms to be workload-aware"). This subsystem simulates
-//! N heterogeneous functions — from an Azure-style
-//! [`crate::workload::SyntheticTrace`] or explicit per-function
-//! [`crate::sim::SimConfig`]s — under a pluggable keep-alive policy
-//! ([`KeepAlivePolicy`]), with an optional fleet-wide concurrent-instance
-//! cap that couples functions through admission/rejection.
+//! N heterogeneous functions — from any [`crate::workload::TraceSource`]:
+//! an Azure-style [`crate::workload::SyntheticTrace`], a real ingested
+//! [`crate::workload::AzureDataset`], explicit per-function
+//! [`crate::sim::SimConfig`]s, or a recorded workload — under a pluggable
+//! keep-alive policy ([`KeepAlivePolicy`]), with an optional fleet-wide
+//! concurrent-instance cap that couples functions through
+//! admission/rejection.
 //!
 //! * [`policy`] — the [`KeepAlivePolicy`] trait, the paper's
 //!   [`FixedExpiration`] model, and the Azure-style

@@ -22,65 +22,18 @@
 use super::engine::{FleetGate, FleetQueue, FunctionEngine};
 use super::policy::PolicySpec;
 use crate::cost::{estimate, CostEstimate, FunctionConfig, PricingTable};
-use crate::sim::ensemble::{derive_seeds, run_indexed};
+use crate::sim::ensemble::run_indexed;
 use crate::sim::event::Event;
-use crate::sim::process::Process;
 use crate::sim::results::SimResults;
-use crate::sim::rng::Rng;
 use crate::sim::simulator::SimConfig;
 use crate::sim::time::SimTime;
 use crate::workload::azure::SyntheticTrace;
-use std::sync::Arc;
+use crate::workload::source::TraceSource;
 
-/// One function's arrival source.
-#[derive(Clone)]
-pub enum ArrivalMode {
-    /// Inter-arrival process (the core simulator's model).
-    Process(Process),
-    /// Replay of pre-materialized, sorted absolute arrival times (e.g. a
-    /// diurnal trace from [`SyntheticTrace::arrivals_for`]). `Arc` keeps
-    /// `FleetConfig::clone` cheap for what-if sweeps.
-    Trace(Arc<Vec<f64>>),
-}
-
-/// Per-function simulation parameters within a fleet.
-#[derive(Clone)]
-pub struct FunctionSpec {
-    pub name: String,
-    pub arrival: ArrivalMode,
-    /// Optional batch-size process (see [`SimConfig::batch_size`]).
-    pub batch_size: Option<Process>,
-    pub warm_service: Process,
-    pub cold_service: Process,
-    /// Per-function maximum concurrency (AWS Lambda default: 1000).
-    pub max_concurrency: usize,
-    /// Allocated memory in MB, for the fleet cost report.
-    pub memory_mb: f64,
-    /// RNG seed for this function's service (and process-arrival) draws.
-    pub seed: u64,
-}
-
-impl FunctionSpec {
-    /// Lift a core [`SimConfig`] into a fleet member. The config's own
-    /// expiration fields are superseded by the fleet's policy, and the
-    /// diagnostic-only knobs (`capture_request_log`, `sample_interval`)
-    /// are not carried over — the fleet engine keeps per-function
-    /// [`SimResults`] but no per-request log or transient samples. The
-    /// seed is kept so a 1-function fleet under [`PolicySpec::Fixed`]
-    /// reproduces `ServerlessSimulator::new(cfg).run()` bit-for-bit.
-    pub fn from_sim_config(name: impl Into<String>, cfg: &SimConfig) -> Self {
-        FunctionSpec {
-            name: name.into(),
-            arrival: ArrivalMode::Process(cfg.arrival.replica()),
-            batch_size: cfg.batch_size.as_ref().map(Process::replica),
-            warm_service: cfg.warm_service.replica(),
-            cold_service: cfg.cold_service.replica(),
-            max_concurrency: cfg.max_concurrency,
-            memory_mb: 128.0,
-            seed: cfg.seed,
-        }
-    }
-}
+// The per-function spec types live in the workload layer (the
+// `TraceSource` seam yields them); re-exported here because the fleet is
+// their primary consumer and the historical import path.
+pub use crate::workload::source::{ArrivalMode, FunctionSpec};
 
 /// Fleet simulation input: the tenant mix, the keep-alive policy, and the
 /// optional fleet-wide concurrency cap that couples functions.
@@ -126,41 +79,23 @@ impl FleetConfig {
         }
     }
 
-    /// Fleet from a synthetic Azure-style tenant mix: each function gets a
-    /// diurnal arrival trace materialized over the horizon plus exponential
-    /// warm/cold service at the profile's means. Per-function seeds derive
-    /// from `root_seed` via SplitMix64 (two streams per function: trace
-    /// materialization and service draws), so the whole fleet is described
-    /// by `(trace, horizon, root_seed)` and is shard-count-invariant.
-    pub fn from_trace(
-        trace: &SyntheticTrace,
+    /// Fleet from any [`TraceSource`]: synthetic mix, ingested Azure
+    /// dataset, explicit specs, or a recorded workload. Per-function seeds
+    /// derive from `root_seed` via SplitMix64 (two streams per function:
+    /// arrival generation and service draws), so the whole fleet is
+    /// described by `(source, horizon, root_seed)` and is
+    /// shard-count-invariant. Arrivals stream lazily — nothing is
+    /// materialized, so resident memory no longer grows with
+    /// horizon × fleet size.
+    pub fn from_source(
+        source: &TraceSource,
         horizon: f64,
         skip_initial: f64,
         root_seed: u64,
         policy: PolicySpec,
     ) -> Self {
-        let n = trace.functions.len();
-        assert!(n > 0, "trace has no functions");
-        let seeds = derive_seeds(root_seed, 2 * n);
-        let functions = trace
-            .functions
-            .iter()
-            .enumerate()
-            .map(|(i, f)| {
-                let mut arr_rng = Rng::new(seeds[2 * i]);
-                let arrivals = trace.arrivals_for(i, horizon, &mut arr_rng);
-                FunctionSpec {
-                    name: f.name.clone(),
-                    arrival: ArrivalMode::Trace(Arc::new(arrivals.arrivals)),
-                    batch_size: None,
-                    warm_service: Process::exp_mean(f.warm_service_mean),
-                    cold_service: Process::exp_mean(f.cold_service_mean),
-                    max_concurrency: 1000,
-                    memory_mb: 128.0,
-                    seed: seeds[2 * i + 1],
-                }
-            })
-            .collect();
+        let functions = source.function_specs(root_seed);
+        assert!(!functions.is_empty(), "trace source has no functions");
         FleetConfig {
             functions,
             policy,
@@ -170,6 +105,26 @@ impl FleetConfig {
             threads: 0,
             prewarm_lead: 0.0,
         }
+    }
+
+    /// Fleet from a synthetic Azure-style tenant mix — the
+    /// [`TraceSource::Synthetic`] case of [`from_source`](Self::from_source).
+    /// Bit-identical to the historical eager materialization: the
+    /// streaming generator draws the same RNG stream per function.
+    pub fn from_trace(
+        trace: &SyntheticTrace,
+        horizon: f64,
+        skip_initial: f64,
+        root_seed: u64,
+        policy: PolicySpec,
+    ) -> Self {
+        Self::from_source(
+            &TraceSource::Synthetic(trace.clone()),
+            horizon,
+            skip_initial,
+            root_seed,
+            policy,
+        )
     }
 
     pub fn with_policy(mut self, policy: PolicySpec) -> Self {
@@ -201,6 +156,7 @@ impl FleetConfig {
             self.policy.build(),
             self.skip_initial,
             self.prewarm_lead,
+            self.horizon,
         )
     }
 
@@ -458,7 +414,10 @@ pub fn fleet_cost(
 mod tests {
     use super::*;
     use crate::fleet::policy::PolicySpec;
+    use crate::sim::process::Process;
+    use crate::sim::rng::Rng;
     use crate::sim::ServerlessSimulator;
+    use std::sync::Arc;
 
     fn results_bits(r: &SimResults) -> Vec<u64> {
         vec![

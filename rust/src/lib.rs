@@ -18,8 +18,10 @@
 //!   PJRT.
 //! * [`runtime`] — the PJRT bridge: loads `artifacts/*.hlo.txt` produced by
 //!   `python/compile/aot.py` and executes them from Rust.
-//! * [`workload`] — open-loop workload generators (Poisson, deterministic,
-//!   batch, MMPP, Azure-style diurnal traces).
+//! * [`workload`] — the workload layer: open-loop generators (Poisson,
+//!   deterministic, batch, MMPP), synthetic Azure-style traces, real Azure
+//!   Functions 2019 dataset ingestion, and the `TraceSource` /
+//!   `ArrivalSource` seams every engine pulls arrivals through.
 //! * [`trace`] — request/instance trace records, CSV I/O, and parameter
 //!   identification (expiration-threshold probing, service-time fitting).
 //! * [`cost`] — provider pricing tables and developer/provider cost
@@ -56,8 +58,9 @@ pub mod workload;
 
 pub use fleet::{FleetConfig, FleetResults, KeepAlivePolicy, PolicySpec};
 pub use scenario::{
-    run_scenario, ExperimentSpec, ProcessSpec, ScenarioReport, ScenarioSpec,
+    run_scenario, ExperimentSpec, ProcessSpec, ScenarioReport, ScenarioSpec, SourceSpec,
 };
+pub use workload::{AzureDataset, SyntheticTrace, TraceSource};
 pub use sim::{
     run_ensemble, EnsembleOpts, EnsembleResults, Process, ServerlessSimulator,
     ServerlessTemporalSimulator, SimConfig, SimProcess, SimResults,

@@ -22,7 +22,7 @@ use simfaas::fleet::PolicyKind;
 use simfaas::output::{ascii_histogram, ascii_lines, Series, Table};
 use simfaas::scenario::{
     run_scenario_to_string, CostSpec, ExperimentSpec, FleetScenario, KeepAliveSpec,
-    OutputFormat, ProcessSpec, ScenarioSpec,
+    OutputFormat, ProcessSpec, ScenarioSpec, SourceSpec,
 };
 use simfaas::sim::SimConfig;
 use simfaas::workload;
@@ -82,8 +82,8 @@ const COMMANDS: &[Cmd] = &[
     },
     Cmd {
         name: "fleet",
-        summary: "multi-function fleet simulation (synthetic Azure-style mix)",
-        flags: "--functions N --horizon --skip --seed --threads\n--policy fixed|adaptive --threshold (fixed)\n--range --bin (adaptive) --fleet-cap (0 = none)\n--prewarm-lead S (adaptive head-arm prewarm; 0 = off)\n--provider --memory --top K --json\n[--compare-thresholds a,b,c  fixed grid vs adaptive sweep]",
+        summary: "multi-function fleet simulation (synthetic mix or real Azure trace)",
+        flags: "--functions N --horizon --skip --seed --threads\n--policy fixed|adaptive --threshold (fixed)\n--range --bin (adaptive) --fleet-cap (0 = none)\n--prewarm-lead S (adaptive head-arm prewarm; 0 = off)\n--trace-dir DIR (Azure Functions 2019 dataset CSVs)\n--trace-top-k K --trace-scale X (with --trace-dir)\n--provider --memory --top K --json\n[--compare-thresholds a,b,c  fixed grid vs adaptive sweep]",
         operands: 0,
         run: cmd_fleet,
     },
@@ -227,9 +227,15 @@ fn cmd_run(args: &Args) -> Result<()> {
         spec = spec.with_output(OutputFormat::Json);
     }
     if args.get_bool("print-spec") {
-        // Echo the canonical (defaults-resolved) form without running.
+        // Echo the canonical (defaults-resolved) form without running —
+        // before any path rewriting, so the printed spec matches the file.
         println!("{}", spec.to_json_string());
         return Ok(());
+    }
+    // Relative dataset directories in a scenario file resolve against the
+    // file's own location, so bundled specs run from any working dir.
+    if let Some(base) = std::path::Path::new(&path).parent() {
+        spec.resolve_source_paths(base);
     }
     execute(args, &spec)
 }
@@ -289,6 +295,22 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     }
     let provider: Provider = args.get_str("provider", "aws").parse()?;
     let memory_mb = fleet.memory_mb;
+    // Real-trace ingestion (the workload.source axis): --trace-dir swaps
+    // the synthetic mix for the Azure Functions 2019 dataset in DIR.
+    let trace_dir = args.get("trace-dir").map(str::to_string);
+    let trace_top_k = args.get_usize("trace-top-k", 0)?;
+    let trace_scale = args.get_f64("trace-scale", 1.0)?;
+    if trace_dir.is_none() && (trace_top_k > 0 || trace_scale != 1.0) {
+        bail!("--trace-top-k/--trace-scale require --trace-dir");
+    }
+    if trace_dir.is_some() && (args.get("functions").is_some() || args.get("memory").is_some()) {
+        // Fail fast instead of silently ignoring axes the dataset decides.
+        bail!(
+            "--functions/--memory apply to the synthetic mix; with --trace-dir the \
+             dataset sets the function count and per-app memory (narrow the mix \
+             with --trace-top-k instead)"
+        );
+    }
     // Consume --json up front: it is a no-op in the comparison branch
     // (which always rendered as a table) but must not read as unknown.
     let json_out = args.get_bool("json");
@@ -299,6 +321,14 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         .with_seed(args.get_u64("seed", 0x5EED)?)
         .with_experiment(ExperimentSpec::Fleet(fleet))
         .with_cost(CostSpec { provider, memory_mb, ..CostSpec::default() });
+    if let Some(dir) = trace_dir {
+        spec = spec.with_source(SourceSpec::AzureDataset {
+            dir,
+            top_k: if trace_top_k > 0 { Some(trace_top_k) } else { None },
+            slice: None,
+            scale_rate: trace_scale,
+        });
+    }
     if json_out && !comparison {
         spec = spec.with_output(OutputFormat::Json);
     }

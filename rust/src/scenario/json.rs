@@ -9,7 +9,7 @@
 
 use super::spec::{
     CostSpec, ExperimentSpec, FleetScenario, KeepAliveSpec, OutputFormat, OutputSpec,
-    PlatformSpec, ProcessSpec, RunSpec, ScenarioSpec, WorkloadSpec,
+    PlatformSpec, ProcessSpec, RunSpec, ScenarioSpec, SourceSpec, WorkloadSpec,
 };
 use crate::cost::Provider;
 use crate::fleet::PolicyKind;
@@ -229,6 +229,81 @@ fn process_from_json(v: &JsonValue, what: &str) -> Result<ProcessSpec> {
         ),
     };
     Ok(spec)
+}
+
+// ------------------------------------------------------------------ source
+
+fn source_to_json(s: &SourceSpec) -> JsonValue {
+    let mut o = JsonValue::object();
+    match s {
+        SourceSpec::Synthetic => {
+            o.set("type", "synthetic");
+        }
+        SourceSpec::AzureDataset { dir, top_k, slice, scale_rate } => {
+            o.set("type", "azure_dataset").set("dir", dir.as_str());
+            if let Some(k) = top_k {
+                o.set("top_k", *k);
+            }
+            if let Some((start, len)) = slice {
+                o.set("slice", JsonValue::Array(vec![(*start).into(), (*len).into()]));
+            }
+            if *scale_rate != 1.0 {
+                o.set("scale_rate", *scale_rate);
+            }
+        }
+    }
+    o
+}
+
+fn source_from_json(v: &JsonValue, what: &str) -> Result<SourceSpec> {
+    let o = as_obj(v, what)?;
+    let tag = str_field(o, "type", what)?;
+    Ok(match tag {
+        "synthetic" => {
+            check_keys(o, &["type"], what)?;
+            SourceSpec::Synthetic
+        }
+        "azure_dataset" => {
+            check_keys(o, &["type", "dir", "top_k", "slice", "scale_rate"], what)?;
+            let dir = str_field(o, "dir", what)?.to_string();
+            let top_k = match o.get("top_k") {
+                None => None,
+                Some(v) => Some(
+                    v.as_u64()
+                        .with_context(|| format!("{what}.top_k must be a non-negative integer"))?
+                        as usize,
+                ),
+            };
+            let slice = match o.get("slice") {
+                None => None,
+                Some(v) => {
+                    let xs = f64_list(v, &format!("{what}.slice"))?;
+                    match xs.as_slice() {
+                        [s, l]
+                            if s.fract() == 0.0
+                                && l.fract() == 0.0
+                                && *s >= 0.0
+                                && *l >= 0.0 =>
+                        {
+                            Some((*s as usize, *l as usize))
+                        }
+                        _ => bail!(
+                            "{what}.slice must be [start, len] with two non-negative integers"
+                        ),
+                    }
+                }
+            };
+            SourceSpec::AzureDataset {
+                dir,
+                top_k,
+                slice,
+                scale_rate: f64_field(o, "scale_rate", what, 1.0)?,
+            }
+        }
+        other => bail!(
+            "{what}.type: unknown workload source {other:?} (expected synthetic|azure_dataset)"
+        ),
+    })
 }
 
 // ------------------------------------------------------------------ policy
@@ -452,6 +527,9 @@ impl ScenarioSpec {
         if let Some(b) = &self.workload.batch_size {
             workload.set("batch_size", process_to_json(b));
         }
+        if let Some(s) = &self.workload.source {
+            workload.set("source", source_to_json(s));
+        }
 
         let mut platform = JsonValue::object();
         platform
@@ -520,7 +598,7 @@ impl ScenarioSpec {
             None => WorkloadSpec::default(),
             Some(wv) => {
                 let w = as_obj(wv, "workload")?;
-                check_keys(w, &["arrival", "batch_size"], "workload")?;
+                check_keys(w, &["arrival", "batch_size", "source"], "workload")?;
                 WorkloadSpec {
                     arrival: match w.get("arrival") {
                         None => WorkloadSpec::default().arrival,
@@ -529,6 +607,10 @@ impl ScenarioSpec {
                     batch_size: match w.get("batch_size") {
                         None => None,
                         Some(b) => Some(process_from_json(b, "workload.batch_size")?),
+                    },
+                    source: match w.get("source") {
+                        None => None,
+                        Some(s) => Some(source_from_json(s, "workload.source")?),
                     },
                 }
             }
@@ -735,6 +817,63 @@ mod tests {
             service_mean: 2.0,
             markovian_expiration: true,
         }));
+    }
+
+    #[test]
+    fn source_axis_roundtrips_and_rejects_unknowns() {
+        let fleet = ExperimentSpec::Fleet(FleetScenario::new(4));
+        roundtrip(
+            &ScenarioSpec::new("src-syn")
+                .with_experiment(fleet.clone())
+                .with_source(SourceSpec::Synthetic),
+        );
+        roundtrip(
+            &ScenarioSpec::new("src-azure").with_experiment(fleet.clone()).with_source(
+                SourceSpec::AzureDataset {
+                    dir: "examples/traces/azure_sample".into(),
+                    top_k: Some(10),
+                    slice: Some((2, 8)),
+                    scale_rate: 2.5,
+                },
+            ),
+        );
+        // Defaults (no top_k/slice, scale 1.0) stay implicit in the JSON.
+        let minimal = ScenarioSpec::new("src-min").with_experiment(fleet).with_source(
+            SourceSpec::AzureDataset {
+                dir: "d".into(),
+                top_k: None,
+                slice: None,
+                scale_rate: 1.0,
+            },
+        );
+        let text = minimal.to_json_string();
+        assert!(!text.contains("scale_rate"), "{text}");
+        roundtrip(&minimal);
+        // Reader errors: unknown source type, bad slice, unknown key.
+        let err = format!(
+            "{:#}",
+            ScenarioSpec::from_json_str(
+                r#"{"name":"x","workload":{"source":{"type":"s3"}},"experiment":{"type":"fleet"}}"#
+            )
+            .unwrap_err()
+        );
+        assert!(err.contains("synthetic|azure_dataset"), "{err}");
+        let err = format!(
+            "{:#}",
+            ScenarioSpec::from_json_str(
+                r#"{"name":"x","workload":{"source":{"type":"azure_dataset","dir":"d","slice":[1.5,2]}},"experiment":{"type":"fleet"}}"#
+            )
+            .unwrap_err()
+        );
+        assert!(err.contains("slice"), "{err}");
+        let err = format!(
+            "{:#}",
+            ScenarioSpec::from_json_str(
+                r#"{"name":"x","workload":{"source":{"type":"azure_dataset","dir":"d","topk":3}},"experiment":{"type":"fleet"}}"#
+            )
+            .unwrap_err()
+        );
+        assert!(err.contains("unknown key") && err.contains("topk"), "{err}");
     }
 
     #[test]

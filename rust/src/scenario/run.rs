@@ -8,7 +8,7 @@
 //! regression tests in this module pin scenario output against direct
 //! engine invocation).
 
-use super::spec::{CostSpec, ExperimentSpec, OutputFormat, ScenarioSpec};
+use super::spec::{CostSpec, ExperimentSpec, OutputFormat, ScenarioSpec, SourceSpec};
 use crate::analytical::{self, ComparisonReport};
 use crate::cost::{estimate, scale_to, CostEstimate, FunctionConfig, PricingTable};
 use crate::figures;
@@ -21,8 +21,8 @@ use crate::sim::{
     TemporalResults,
 };
 use crate::whatif::{self, PolicyOutcome};
-use crate::workload::SyntheticTrace;
-use anyhow::Result;
+use crate::workload::{AzureDataset, SyntheticTrace, TraceProvenance, TraceSource};
+use anyhow::{bail, Result};
 
 /// Priced view of a single-function run (the `cost` axis output).
 #[derive(Debug, Clone)]
@@ -42,8 +42,50 @@ pub enum ScenarioReport {
     EnsembleGrid { replications: usize, grid: Vec<(f64, EnsembleResults)> },
     Sweep { rates: Vec<f64>, series: Vec<(f64, Vec<(f64, f64)>)> },
     Compare { report: ComparisonReport },
-    Fleet { policy: String, results: FleetResults, cost: FleetCostReport, top_k: usize },
-    FleetComparison { functions: usize, outcomes: Vec<PolicyOutcome> },
+    Fleet {
+        policy: String,
+        results: FleetResults,
+        cost: FleetCostReport,
+        top_k: usize,
+        /// Where the tenant mix came from (synthetic seed vs ingested
+        /// trace) — rendered in the table and recorded in the JSON.
+        provenance: TraceProvenance,
+    },
+    FleetComparison {
+        functions: usize,
+        outcomes: Vec<PolicyOutcome>,
+        /// Workload provenance, as in [`ScenarioReport::Fleet`].
+        provenance: TraceProvenance,
+    },
+}
+
+/// Build the [`TraceSource`] a fleet spec asks for: the synthetic mix by
+/// default (generated from the run seed — the historical construction,
+/// bit-identical), or an ingested Azure dataset with its transform chain
+/// (`slice`, then `top_k`, then `scale_rate`).
+fn build_trace_source(spec: &ScenarioSpec, functions: usize) -> Result<TraceSource> {
+    match &spec.workload.source {
+        Some(SourceSpec::AzureDataset { dir, top_k, slice, scale_rate }) => {
+            let mut ds = AzureDataset::load(std::path::Path::new(dir))?;
+            if let Some((start, len)) = slice {
+                ds = ds.slice(*start, *len)?;
+            }
+            if let Some(k) = top_k {
+                ds = ds.top_k(*k);
+            }
+            if *scale_rate != 1.0 {
+                ds = ds.scale_rates(*scale_rate)?;
+            }
+            if ds.functions.is_empty() {
+                bail!("workload.source: no functions left after the transform chain");
+            }
+            Ok(TraceSource::AzureDataset(ds))
+        }
+        Some(SourceSpec::Synthetic) | None => {
+            let mut rng = Rng::new(spec.run.seed);
+            Ok(TraceSource::Synthetic(SyntheticTrace::generate(functions, &mut rng)))
+        }
+    }
 }
 
 /// Execute a scenario. Validates first, so malformed specs fail with a
@@ -108,14 +150,16 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport> {
             ScenarioReport::Compare { report }
         }
         ExperimentSpec::Fleet(f) => {
-            // Same construction sequence as the historical `fleet`
-            // subcommand: one RNG seeded from the run seed generates the
-            // mix, then the fleet derives per-function streams from the
-            // same root seed.
-            let mut rng = Rng::new(spec.run.seed);
-            let trace = SyntheticTrace::generate(f.functions, &mut rng);
-            let mut cfg = FleetConfig::from_trace(
-                &trace,
+            // The workload enters through the TraceSource seam: the
+            // synthetic mix reproduces the historical construction (one
+            // RNG seeded from the run seed generates the profiles, the
+            // fleet derives per-function streams from the same root seed,
+            // bit-identical through the streaming path), while an
+            // ingested Azure dataset replaces it wholesale.
+            let source = build_trace_source(spec, f.functions)?;
+            let provenance = source.provenance();
+            let mut cfg = FleetConfig::from_source(
+                &source,
                 spec.run.horizon,
                 spec.run.skip_initial,
                 spec.run.seed,
@@ -124,8 +168,12 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport> {
             cfg.threads = f.threads;
             cfg.fleet_max_concurrency = f.fleet_cap;
             cfg.prewarm_lead = f.prewarm_lead;
-            for func in &mut cfg.functions {
-                func.memory_mb = f.memory_mb;
+            if matches!(source, TraceSource::Synthetic(_)) {
+                // The synthetic mix bills every function at the spec's
+                // memory; ingested functions keep their dataset memory.
+                for func in &mut cfg.functions {
+                    func.memory_mb = f.memory_mb;
+                }
             }
             let provider = spec
                 .cost
@@ -143,7 +191,11 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport> {
                     &extra,
                     &pricing,
                 );
-                ScenarioReport::FleetComparison { functions: cfg.functions.len(), outcomes }
+                ScenarioReport::FleetComparison {
+                    functions: cfg.functions.len(),
+                    outcomes,
+                    provenance,
+                }
             } else {
                 let results = cfg.run();
                 let cost = fleet_cost(&cfg, &results, &pricing);
@@ -152,6 +204,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport> {
                     results,
                     cost,
                     top_k: f.top_k,
+                    provenance,
                 }
             }
         }
@@ -256,13 +309,14 @@ impl ScenarioReport {
             ScenarioReport::Compare { report } => {
                 s.push_str(&report.to_table());
             }
-            ScenarioReport::Fleet { policy, results, cost, top_k } => {
+            ScenarioReport::Fleet { policy, results, cost, top_k, provenance } => {
                 let horizon = spec.run.horizon;
                 let seed = spec.run.seed;
                 s.push_str(&format!(
                     "fleet: {} functions under {policy} (horizon {horizon} s, seed {seed})\n",
                     results.per_function.len()
                 ));
+                s.push_str(&format!("workload: {}\n", provenance.describe()));
                 s.push_str(&results.aggregate.to_table());
                 s.push_str(&format!(
                     "developer cost ${:.4} (requests ${:.4} + runtime ${:.4}) | provider infra ${:.4}\n",
@@ -300,12 +354,13 @@ impl ScenarioReport {
                     s.push_str(&t.render());
                 }
             }
-            ScenarioReport::FleetComparison { functions, outcomes } => {
+            ScenarioReport::FleetComparison { functions, outcomes, provenance } => {
                 let horizon = spec.run.horizon;
                 let seed = spec.run.seed;
                 s.push_str(&format!(
                     "{functions} functions, horizon {horizon} s, seed {seed}: keep-alive policy comparison\n"
                 ));
+                s.push_str(&format!("workload: {}\n", provenance.describe()));
                 let mut t = Table::new(vec![
                     "policy",
                     "p_cold %",
@@ -430,11 +485,14 @@ impl ScenarioReport {
                 );
                 o
             }
-            ScenarioReport::Fleet { results, cost, .. } => {
-                fleet_to_json(results, Some(cost))
+            ScenarioReport::Fleet { results, cost, provenance, .. } => {
+                let mut o = fleet_to_json(results, Some(cost));
+                o.set("trace", provenance_json(provenance));
+                o
             }
-            ScenarioReport::FleetComparison { outcomes, .. } => {
+            ScenarioReport::FleetComparison { outcomes, provenance, .. } => {
                 let mut o = JsonValue::object();
+                o.set("trace", provenance_json(provenance));
                 o.set("experiment", spec.experiment.kind()).set(
                     "policies",
                     JsonValue::Array(
@@ -462,6 +520,15 @@ impl ScenarioReport {
             }
         }
     }
+}
+
+/// Workload provenance as a JSON object (`{"source", "detail", "functions"}`).
+fn provenance_json(p: &TraceProvenance) -> JsonValue {
+    let mut o = JsonValue::object();
+    o.set("source", p.kind.as_str())
+        .set("detail", p.detail.as_str())
+        .set("functions", p.functions);
+    o
 }
 
 fn ci_json(mean: f64, ci_half: f64) -> JsonValue {
@@ -832,7 +899,7 @@ mod tests {
                 ),
             ));
         match run_scenario(&spec).unwrap() {
-            ScenarioReport::FleetComparison { outcomes, functions } => {
+            ScenarioReport::FleetComparison { outcomes, functions, .. } => {
                 assert_eq!(functions, 4);
                 assert_eq!(outcomes.len(), 3);
                 assert!(outcomes[0].label.contains("fixed(60s)"));

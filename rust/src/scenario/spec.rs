@@ -193,6 +193,32 @@ impl KeepAliveSpec {
     }
 }
 
+/// The workload-source axis for fleet experiments: where the tenant mix
+/// comes from. Single-function experiments always use the
+/// [`WorkloadSpec::arrival`] process; fleet experiments default to the
+/// synthetic mix and switch to a real ingested trace via
+/// [`SourceSpec::AzureDataset`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum SourceSpec {
+    /// Synthetic Azure-style mix generated from the run seed (the
+    /// default; `fleet.functions` sets the size).
+    Synthetic,
+    /// Real Azure Functions 2019 dataset read from a directory of the
+    /// three published CSVs (see `workload::azure_dataset`). Transforms
+    /// apply in order: `slice`, then `top_k`, then `scale_rate`.
+    AzureDataset {
+        /// Directory holding the three dataset CSVs. Relative paths in
+        /// scenario files resolve against the file's own directory.
+        dir: String,
+        /// Keep only the K most-invoked functions.
+        top_k: Option<usize>,
+        /// Keep `[start, start+len)` of the function list (file order).
+        slice: Option<(usize, usize)>,
+        /// Multiply every function's rate profile (1.0 = as recorded).
+        scale_rate: f64,
+    },
+}
+
 /// The workload axis: what drives requests at the platform.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkloadSpec {
@@ -201,11 +227,13 @@ pub struct WorkloadSpec {
     /// Optional batch-size process (each arrival epoch brings
     /// `max(1, round(sample))` simultaneous requests).
     pub batch_size: Option<ProcessSpec>,
+    /// Optional trace source for fleet experiments (None = synthetic).
+    pub source: Option<SourceSpec>,
 }
 
 impl Default for WorkloadSpec {
     fn default() -> Self {
-        WorkloadSpec { arrival: ProcessSpec::ExpRate(0.9), batch_size: None }
+        WorkloadSpec { arrival: ProcessSpec::ExpRate(0.9), batch_size: None, source: None }
     }
 }
 
@@ -476,6 +504,26 @@ impl ScenarioSpec {
         self
     }
 
+    /// Select the workload source for a fleet experiment (e.g. a real
+    /// Azure-trace directory).
+    pub fn with_source(mut self, source: SourceSpec) -> Self {
+        self.workload.source = Some(source);
+        self
+    }
+
+    /// Resolve a relative `workload.source` dataset directory against
+    /// `base` (typically the scenario file's parent directory), so bundled
+    /// scenario files can reference the checked-in sample trace regardless
+    /// of the working directory they are run from.
+    pub fn resolve_source_paths(&mut self, base: &std::path::Path) {
+        if let Some(SourceSpec::AzureDataset { dir, .. }) = &mut self.workload.source {
+            let p = std::path::Path::new(dir.as_str());
+            if p.is_relative() && !base.as_os_str().is_empty() {
+                *dir = base.join(p).to_string_lossy().into_owned();
+            }
+        }
+    }
+
     pub fn with_services(mut self, warm: ProcessSpec, cold: ProcessSpec) -> Self {
         self.platform.warm_service = warm;
         self.platform.cold_service = cold;
@@ -566,6 +614,35 @@ impl ScenarioSpec {
         }
         if let Some(b) = &self.workload.batch_size {
             b.validate("workload.batch_size")?;
+        }
+        if let Some(src) = &self.workload.source {
+            // The source axis feeds the fleet engine only; silently
+            // ignoring it elsewhere would defeat the typo protection.
+            if !matches!(self.experiment, ExperimentSpec::Fleet(_)) {
+                bail!(
+                    "workload.source: the {} experiment does not take a trace \
+                     source (the source axis applies to fleet)",
+                    self.experiment.kind()
+                );
+            }
+            if let SourceSpec::AzureDataset { dir, top_k, slice, scale_rate } = src {
+                if dir.is_empty() {
+                    bail!("workload.source.dir must be a non-empty directory path");
+                }
+                if *top_k == Some(0) {
+                    bail!("workload.source.top_k must be at least 1 when set");
+                }
+                if let Some((_, len)) = slice {
+                    if *len == 0 {
+                        bail!("workload.source.slice length must be at least 1");
+                    }
+                }
+                if !(scale_rate.is_finite() && *scale_rate > 0.0) {
+                    bail!(
+                        "workload.source.scale_rate must be a positive factor, got {scale_rate}"
+                    );
+                }
+            }
         }
         self.platform.warm_service.validate("platform.warm_service")?;
         self.platform.cold_service.validate("platform.cold_service")?;
@@ -843,6 +920,77 @@ mod tests {
         assert!(bad.validate().unwrap_err().to_string().contains("thresholds"));
         // The CLI translator's shape stays valid.
         ScenarioSpec::new("x").with_experiment(sweep).validate().unwrap();
+    }
+
+    #[test]
+    fn source_axis_restricted_to_fleet_and_validated() {
+        let azure = |top_k, slice, scale_rate| SourceSpec::AzureDataset {
+            dir: "traces/sample".into(),
+            top_k,
+            slice,
+            scale_rate,
+        };
+        let fleet = ExperimentSpec::Fleet(FleetScenario::new(2));
+        // Non-fleet experiments reject the axis instead of ignoring it.
+        let bad = ScenarioSpec::new("x").with_source(SourceSpec::Synthetic);
+        assert!(bad.validate().unwrap_err().to_string().contains("source"));
+        // Fleet accepts both variants.
+        ScenarioSpec::new("x")
+            .with_experiment(fleet.clone())
+            .with_source(SourceSpec::Synthetic)
+            .validate()
+            .unwrap();
+        ScenarioSpec::new("x")
+            .with_experiment(fleet.clone())
+            .with_source(azure(Some(5), Some((0, 5)), 2.0))
+            .validate()
+            .unwrap();
+        // Azure parameters are sanity-checked with the path named.
+        for (src, needle) in [
+            (azure(Some(0), None, 1.0), "top_k"),
+            (azure(None, Some((3, 0)), 1.0), "slice"),
+            (azure(None, None, 0.0), "scale_rate"),
+            (
+                SourceSpec::AzureDataset {
+                    dir: String::new(),
+                    top_k: None,
+                    slice: None,
+                    scale_rate: 1.0,
+                },
+                "dir",
+            ),
+        ] {
+            let err = ScenarioSpec::new("x")
+                .with_experiment(fleet.clone())
+                .with_source(src)
+                .validate()
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(needle), "{err}");
+        }
+        // Relative dataset dirs resolve against a base; absolute stay put.
+        let mut spec =
+            ScenarioSpec::new("x").with_experiment(fleet.clone()).with_source(azure(None, None, 1.0));
+        spec.resolve_source_paths(std::path::Path::new("/scenarios"));
+        match &spec.workload.source {
+            Some(SourceSpec::AzureDataset { dir, .. }) => {
+                assert_eq!(dir, "/scenarios/traces/sample")
+            }
+            _ => unreachable!(),
+        }
+        let mut abs = ScenarioSpec::new("x").with_experiment(fleet).with_source(
+            SourceSpec::AzureDataset {
+                dir: "/data/azure".into(),
+                top_k: None,
+                slice: None,
+                scale_rate: 1.0,
+            },
+        );
+        abs.resolve_source_paths(std::path::Path::new("/elsewhere"));
+        match &abs.workload.source {
+            Some(SourceSpec::AzureDataset { dir, .. }) => assert_eq!(dir, "/data/azure"),
+            _ => unreachable!(),
+        }
     }
 
     #[test]

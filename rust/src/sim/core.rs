@@ -53,6 +53,7 @@ use super::process::Process;
 use super::results::SimResults;
 use super::rng::Rng;
 use super::time::SimTime;
+use crate::workload::stream::ArrivalSource;
 use std::collections::BTreeMap;
 
 /// Outcome of a single request, reported to [`LifecycleHooks::on_request`]
@@ -563,6 +564,23 @@ impl EngineCore {
         // level is unchanged since the last sync).
         if self.live_count != live0 || self.in_flight != flight0 {
             self.sync_levels();
+        }
+    }
+
+    /// Pull the next arrival from `src` and schedule it — the one arrival
+    /// seam shared by every engine (scale-per-request, concurrency-value,
+    /// fleet). Process sources draw the inter-arrival gap from the
+    /// engine's RNG here, preserving the historical draw order (service
+    /// draws first, next-arrival gap last); replay and streaming sources
+    /// consume nothing from the engine stream. Exhausted sources schedule
+    /// nothing.
+    pub fn schedule_next_arrival<S: Scheduler>(
+        &mut self,
+        sched: &mut S,
+        src: &mut ArrivalSource,
+    ) {
+        if let Some(at) = src.next_after(self.now, &mut self.rng) {
+            sched.schedule(at, Event::Arrival);
         }
     }
 

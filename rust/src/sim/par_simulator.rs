@@ -28,6 +28,7 @@ use super::instance::FunctionInstance;
 use super::results::SimResults;
 use super::simulator::SimConfig;
 use super::time::SimTime;
+use crate::workload::stream::ArrivalSource;
 
 /// Scale-per-request simulator generalized with a per-instance concurrency
 /// value (paper Fig. 1: one instance absorbs `c` concurrent requests).
@@ -68,8 +69,10 @@ impl ParServerlessSimulator {
 
     pub fn run(&mut self) -> SimResults {
         let horizon = SimTime::from_secs(self.cfg.horizon);
-        let first = self.cfg.arrival.sample(&mut self.core.rng);
-        self.events.schedule(SimTime::from_secs(first), Event::Arrival);
+        // Arrivals pull lazily through the shared seam (first pull at
+        // t = 0 draws the same first gap as the historical code).
+        let mut arrival = ArrivalSource::process(self.cfg.arrival.clone());
+        self.core.schedule_next_arrival(&mut self.events, &mut arrival);
         self.events.schedule(horizon, Event::Horizon);
         while let Some((t, ev)) = self.events.pop() {
             self.core.maybe_start_stats(t);
@@ -77,8 +80,7 @@ impl ParServerlessSimulator {
             match ev {
                 Event::Arrival => {
                     self.core.handle_arrival(&mut self.events, &mut self.hooks);
-                    let gap = self.cfg.arrival.sample(&mut self.core.rng);
-                    self.events.schedule(t.after(gap), Event::Arrival);
+                    self.core.schedule_next_arrival(&mut self.events, &mut arrival);
                 }
                 Event::Departure(id) => {
                     self.core.handle_departure(&mut self.events, &mut self.hooks, id)

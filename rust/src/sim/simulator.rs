@@ -31,6 +31,7 @@ use super::process::Process;
 use super::results::SimResults;
 use super::rng::Rng;
 use super::time::SimTime;
+use crate::workload::stream::ArrivalSource;
 
 pub use super::core::RequestOutcome;
 
@@ -192,6 +193,9 @@ pub struct ServerlessSimulator {
     hooks: SprHooks,
     samples: Vec<CountSample>,
     next_sample_at: SimTime,
+    /// Optional replacement for the config's inter-arrival process (see
+    /// [`set_arrival_source`](Self::set_arrival_source)).
+    arrival_override: Option<ArrivalSource>,
 }
 
 impl ServerlessSimulator {
@@ -224,8 +228,18 @@ impl ServerlessSimulator {
             hooks,
             samples: Vec::new(),
             next_sample_at: SimTime::from_secs(cfg.skip_initial.max(0.0)),
+            arrival_override: None,
             cfg,
         }
+    }
+
+    /// Replace the arrival source for the next [`run`](Self::run): any
+    /// [`ArrivalSource`] — a recorded workload replay, a streaming diurnal
+    /// generator — instead of the config's inter-arrival process. The
+    /// single-function engine pulls arrivals through the same seam as the
+    /// fleet ([`EngineCore::schedule_next_arrival`]).
+    pub fn set_arrival_source(&mut self, src: ArrivalSource) {
+        self.arrival_override = Some(src);
     }
 
     /// Seed the simulator with a custom initial state: `idle` instances idle
@@ -268,9 +282,15 @@ impl ServerlessSimulator {
     /// Run to the horizon and produce results.
     pub fn run(&mut self) -> SimResults {
         let horizon = SimTime::from_secs(self.cfg.horizon);
-        // First arrival.
-        let first = self.cfg.arrival.sample(&mut self.core.rng);
-        self.events.schedule(SimTime::from_secs(first), Event::Arrival);
+        // Arrivals pull lazily through the shared seam: the config's
+        // process by default, or an injected override (trace replay,
+        // streaming generator). The first pull happens at t = 0, so a
+        // process source draws the same first gap as ever.
+        let mut arrival = self
+            .arrival_override
+            .take()
+            .unwrap_or_else(|| ArrivalSource::process(self.cfg.arrival.clone()));
+        self.core.schedule_next_arrival(&mut self.events, &mut arrival);
         self.events.schedule(horizon, Event::Horizon);
 
         while let Some((t, ev)) = self.events.pop() {
@@ -280,9 +300,8 @@ impl ServerlessSimulator {
             match ev {
                 Event::Arrival => {
                     self.core.handle_arrival(&mut self.events, &mut self.hooks);
-                    // Schedule the next arrival epoch.
-                    let gap = self.cfg.arrival.sample(&mut self.core.rng);
-                    self.events.schedule(t.after(gap), Event::Arrival);
+                    // Schedule the next arrival epoch through the seam.
+                    self.core.schedule_next_arrival(&mut self.events, &mut arrival);
                 }
                 Event::Departure(id) => {
                     self.core.handle_departure(&mut self.events, &mut self.hooks, id)
@@ -517,6 +536,21 @@ mod tests {
         // The instance idle for 599 s expires almost immediately unless a
         // request reaches it first; either way the run completes sanely.
         assert!(r.avg_server_count > 0.0);
+    }
+
+    #[test]
+    fn recorded_workload_replays_through_the_arrival_seam() {
+        use std::sync::Arc;
+        let mut cfg = quick_cfg(0.9, 100.0, 1);
+        cfg.skip_initial = 0.0;
+        cfg.warm_service = Process::constant(1.0);
+        cfg.cold_service = Process::constant(2.0);
+        let mut sim = ServerlessSimulator::new(cfg);
+        sim.set_arrival_source(ArrivalSource::replay(Arc::new(vec![10.0, 20.0, 30.0])));
+        let r = sim.run();
+        assert_eq!(r.total_requests, 3);
+        assert_eq!(r.cold_requests, 1);
+        assert_eq!(r.warm_requests, 2);
     }
 
     #[test]

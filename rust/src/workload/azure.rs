@@ -4,14 +4,17 @@
 //! platform behaviour; that work characterizes production Azure Functions
 //! invocation patterns: a heavy-tailed popularity distribution across
 //! functions, strong diurnal cycles, and a large mass of rarely-invoked
-//! functions. We have no access to the production trace (repro gate), so
-//! this module generates synthetic traces with those published
-//! characteristics — the substitution documented in DESIGN.md §3. They
-//! exercise the same code paths: per-function workloads, trace-driven
-//! simulation and what-if sweeps over heterogeneous functions.
+//! functions. This module generates synthetic traces with those published
+//! characteristics; real traces ingest through
+//! [`super::azure_dataset::AzureDataset`] and both feed the same
+//! [`super::source::TraceSource`] seam (the dual path documented in
+//! DESIGN.md §3, with [`super::source::TraceSource::rate_stats`] as the
+//! cross-validation yardstick).
 
 use super::generator::{nonhomogeneous, Workload};
+use super::stream::RateShape;
 use crate::sim::rng::Rng;
+use anyhow::{bail, Result};
 
 /// One synthetic function's workload profile.
 #[derive(Debug, Clone)]
@@ -29,6 +32,37 @@ pub struct FunctionProfile {
     pub cold_service_mean: f64,
 }
 
+/// Tuning constants of the synthetic generator — previously hard-coded in
+/// [`SyntheticTrace::generate`]. The defaults reproduce the historical
+/// generator draw-for-draw (regression-pinned below); deviate to explore
+/// other mixes, e.g. after comparing against an ingested dataset's
+/// [`super::source::TraceStats`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SynthesisOptions {
+    /// Pareto scale `x_m` of the popularity distribution — the minimum
+    /// per-function mean rate (req/s).
+    pub rate_floor: f64,
+    /// Pareto tail index `alpha` (~1.1 per Shahrad et al.'s heavy tail).
+    pub pareto_alpha: f64,
+    /// Upper clamp on a function's mean rate (req/s), keeping single
+    /// functions from dominating a whole fleet run.
+    pub rate_cap: f64,
+    /// Probability that a function is IO-bound (long, high-variance
+    /// service) rather than CPU-bound.
+    pub io_fraction: f64,
+}
+
+impl Default for SynthesisOptions {
+    fn default() -> Self {
+        SynthesisOptions {
+            rate_floor: 0.002,
+            pareto_alpha: 1.1,
+            rate_cap: 5.0,
+            io_fraction: 0.5,
+        }
+    }
+}
+
 /// A bundle of functions approximating an Azure-style tenant mix.
 #[derive(Debug, Clone)]
 pub struct SyntheticTrace {
@@ -36,18 +70,25 @@ pub struct SyntheticTrace {
 }
 
 impl SyntheticTrace {
-    /// Generate `n` functions whose mean rates follow a Pareto popularity
-    /// distribution (alpha ~ 1.1, per Shahrad et al.'s heavy tail), with
-    /// random diurnal depth and phase, and a CPU/IO service-time mix
-    /// (paper §5: "a combination of CPU intensive and I/O intensive
-    /// workloads").
+    /// Generate `n` functions with the default [`SynthesisOptions`]: mean
+    /// rates follow a Pareto popularity distribution (alpha ~ 1.1, per
+    /// Shahrad et al.'s heavy tail), with random diurnal depth and phase,
+    /// and a CPU/IO service-time mix (paper §5: "a combination of CPU
+    /// intensive and I/O intensive workloads").
     pub fn generate(n: usize, rng: &mut Rng) -> Self {
+        Self::generate_with(n, &SynthesisOptions::default(), rng)
+    }
+
+    /// Generate `n` functions under explicit tuning. With the default
+    /// options this draws the identical RNG sequence as the historical
+    /// `generate`, so existing seeds reproduce bit-for-bit.
+    pub fn generate_with(n: usize, opts: &SynthesisOptions, rng: &mut Rng) -> Self {
         let mut functions = Vec::with_capacity(n);
         for k in 0..n {
             // Popularity: heavy-tailed rates clamped to a sane band.
-            let raw = rng.pareto(0.002, 1.1);
-            let mean_rate = raw.min(5.0);
-            let io_bound = rng.uniform() < 0.5;
+            let raw = rng.pareto(opts.rate_floor, opts.pareto_alpha);
+            let mean_rate = raw.min(opts.rate_cap);
+            let io_bound = rng.uniform() < opts.io_fraction;
             let (warm, cold) = if io_bound {
                 // IO-intensive: longer, higher-variance service.
                 (rng.uniform_range(0.5, 3.0), rng.uniform_range(1.5, 5.0))
@@ -67,18 +108,31 @@ impl SyntheticTrace {
         SyntheticTrace { functions }
     }
 
-    /// Materialize one function's arrivals over `horizon` seconds.
-    pub fn arrivals_for(&self, idx: usize, horizon: f64, rng: &mut Rng) -> Workload {
-        let f = &self.functions[idx];
-        let day = 86_400.0;
-        let depth = f.diurnal_depth;
-        let mean = f.mean_rate;
-        let offset = f.peak_offset;
-        let rate = move |t: f64| {
-            mean * (1.0 + depth * (2.0 * std::f64::consts::PI * (t + offset) / day).sin())
+    /// Materialize one function's arrivals over `horizon` seconds. An
+    /// out-of-range index or a non-positive peak rate is an error (the
+    /// historical version panicked). Prefer the streaming path
+    /// ([`super::source::TraceSource::function_specs`]) for simulation —
+    /// it yields the identical arrivals without materializing them.
+    pub fn arrivals_for(&self, idx: usize, horizon: f64, rng: &mut Rng) -> Result<Workload> {
+        let Some(f) = self.functions.get(idx) else {
+            bail!(
+                "function index {idx} is out of range: the trace has {} functions",
+                self.functions.len()
+            );
         };
-        let rate_max = mean * (1.0 + depth);
-        nonhomogeneous(rate, rate_max, horizon, rng)
+        // One shared definition of the diurnal rate: the same RateShape the
+        // streaming path evaluates, so eager and lazy generation cannot
+        // drift apart.
+        let shape = RateShape::Sinusoid {
+            mean: f.mean_rate,
+            depth: f.diurnal_depth,
+            peak_offset: f.peak_offset,
+        };
+        let rate_max = shape.max_rate();
+        if rate_max <= 0.0 {
+            bail!("function {idx} ({}) has a non-positive peak rate {rate_max}", f.name);
+        }
+        Ok(nonhomogeneous(|t| shape.eval(t), rate_max, horizon, rng))
     }
 
     /// Aggregate mean rate across all functions.
@@ -107,15 +161,55 @@ mod tests {
     }
 
     #[test]
+    fn default_options_reproduce_the_historical_generator() {
+        // SynthesisOptions::default() must not drift: the documented
+        // defaults are the constants the generator always used.
+        let opts = SynthesisOptions::default();
+        assert_eq!(opts.rate_floor, 0.002);
+        assert_eq!(opts.pareto_alpha, 1.1);
+        assert_eq!(opts.rate_cap, 5.0);
+        assert_eq!(opts.io_fraction, 0.5);
+        let a = SyntheticTrace::generate(20, &mut Rng::new(3));
+        let b = SyntheticTrace::generate_with(20, &opts, &mut Rng::new(3));
+        for (x, y) in a.functions.iter().zip(&b.functions) {
+            assert_eq!(x.mean_rate.to_bits(), y.mean_rate.to_bits());
+            assert_eq!(x.peak_offset.to_bits(), y.peak_offset.to_bits());
+            assert_eq!(x.warm_service_mean.to_bits(), y.warm_service_mean.to_bits());
+        }
+    }
+
+    #[test]
+    fn synthesis_options_shape_the_mix() {
+        let opts = SynthesisOptions { rate_cap: 0.5, io_fraction: 1.0, ..Default::default() };
+        let trace = SyntheticTrace::generate_with(100, &opts, &mut Rng::new(4));
+        assert!(trace.functions.iter().all(|f| f.mean_rate <= 0.5));
+        // io_fraction = 1: every function draws the IO-bound service band.
+        assert!(trace.functions.iter().all(|f| f.warm_service_mean >= 0.5));
+    }
+
+    #[test]
     fn arrivals_follow_mean_rate() {
         let mut rng = Rng::new(10);
         let mut trace = SyntheticTrace::generate(3, &mut rng);
         trace.functions[0].mean_rate = 1.0;
         trace.functions[0].diurnal_depth = 0.5;
-        let w = trace.arrivals_for(0, 2.0 * 86_400.0, &mut rng);
+        let w = trace.arrivals_for(0, 2.0 * 86_400.0, &mut rng).unwrap();
         // Over whole days the diurnal modulation integrates out.
         let rate = w.rate_over(2.0 * 86_400.0);
         assert!((rate - 1.0).abs() < 0.05, "rate={rate}");
+    }
+
+    #[test]
+    fn arrivals_for_rejects_bad_indices_instead_of_panicking() {
+        let mut rng = Rng::new(12);
+        let trace = SyntheticTrace::generate(3, &mut rng);
+        let err = trace.arrivals_for(7, 100.0, &mut rng).unwrap_err().to_string();
+        assert!(err.contains("out of range") && err.contains('7'), "{err}");
+        // A zero-rate profile errors instead of tripping an assert.
+        let mut flat = trace.clone();
+        flat.functions[0].mean_rate = 0.0;
+        let err = flat.arrivals_for(0, 100.0, &mut rng).unwrap_err().to_string();
+        assert!(err.contains("peak rate"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,686 @@
+//! Reader for the public **Azure Functions 2019 dataset** (Shahrad et al.,
+//! "Serverless in the Wild", ATC'20) — the real-trace half of the dual
+//! synthetic/ingested workload path (DESIGN.md §3).
+//!
+//! The dataset ships per day as three CSVs, located in one directory by
+//! filename prefix (the published `.anon.d01.csv` suffixes — or any `.csv`
+//! suffix — are accepted):
+//!
+//! * `invocations_per_function*.csv` — `HashOwner,HashApp,HashFunction,
+//!   Trigger,1,2,…,1440`: invocation counts per minute of the day.
+//! * `function_durations_percentiles*.csv` — per-function execution-time
+//!   statistics in milliseconds (`Average` plus `percentile_Average_*`
+//!   columns).
+//! * `app_memory_percentiles*.csv` — per-app allocated memory
+//!   (`AverageAllocatedMb`).
+//!
+//! [`AzureDataset::load`] joins the three files into
+//! [`IngestedFunction`]s: a per-minute rate profile (replayed lazily by
+//! [`super::stream::StreamingArrivals`] — nothing is materialized), fitted
+//! warm/cold service means, and the app's memory allocation. Every parse
+//! or consistency failure is reported with the offending **file and line
+//! number**. A small transform layer ([`top_k`](AzureDataset::top_k),
+//! [`slice`](AzureDataset::slice),
+//! [`scale_rates`](AzureDataset::scale_rates)) narrows or rescales the mix
+//! before simulation, and each applied transform is recorded for
+//! provenance reporting.
+//!
+//! **Service-time fit.** The dataset does not split cold from warm
+//! executions, so the fit is a documented modeling choice: the warm mean is
+//! the function's `Average` duration (ms → s, floored at 1 ms), and the
+//! cold mean adds the `p99 − p50` duration spread (the tail of production
+//! durations absorbs cold invocations) floored at
+//! [`COLD_OVERHEAD_FLOOR`] — matching the paper's observation that cold
+//! responses dominate the tail. Compare an ingested mix against the
+//! synthetic generator with [`super::source::TraceSource::rate_stats`].
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Minutes per day — the column count of a full invocations row. Narrower
+/// files (useful in tests) are accepted; the rate profile's period is
+/// simply `columns * 60` seconds.
+pub const MINUTES_PER_DAY: usize = 1440;
+
+/// Minimum cold-start overhead (s) added to the fitted warm mean when the
+/// duration percentiles are too tight to expose a tail (see module docs).
+pub const COLD_OVERHEAD_FLOOR: f64 = 0.25;
+
+/// Memory (MB) assumed for functions whose app has no row in the memory
+/// file. The published dataset samples memory for a *subset* of apps, so
+/// a missing app row is expected on real data (unlike a missing durations
+/// row, which is a genuine identity inconsistency and errors).
+pub const DEFAULT_MEMORY_MB: f64 = 128.0;
+
+/// One function ingested from the dataset: identity, per-minute rate
+/// profile, fitted service means, and its app's memory allocation.
+#[derive(Debug, Clone)]
+pub struct IngestedFunction {
+    /// Short display name (leading 8 chars of the function hash).
+    pub name: String,
+    /// Invocation rate per minute-of-day bin, in req/s.
+    pub minute_rates: Arc<Vec<f64>>,
+    /// Total invocations over the traced day (sum of the minute counts).
+    pub total_invocations: u64,
+    /// Fitted warm service mean (s).
+    pub warm_service_mean: f64,
+    /// Fitted cold service mean (s); always above the warm mean.
+    pub cold_service_mean: f64,
+    /// Allocated memory (MB) inherited from the function's app row.
+    pub memory_mb: f64,
+}
+
+impl IngestedFunction {
+    /// Mean rate (req/s) averaged over the traced day.
+    pub fn mean_rate(&self) -> f64 {
+        if self.minute_rates.is_empty() {
+            0.0
+        } else {
+            self.minute_rates.iter().sum::<f64>() / self.minute_rates.len() as f64
+        }
+    }
+}
+
+/// An ingested Azure Functions 2019 trace: the joined function list plus
+/// provenance (source directory, pre-transform size, applied transforms).
+#[derive(Debug, Clone)]
+pub struct AzureDataset {
+    /// The ingested functions, in dataset file order (until transformed).
+    pub functions: Vec<IngestedFunction>,
+    /// The directory the three CSVs were read from.
+    pub source_dir: String,
+    /// Function count before any transform was applied.
+    pub raw_functions: usize,
+    /// Human-readable transform chain (`top_k(20)`, `scale_rates(2)`, …).
+    pub transforms: Vec<String>,
+}
+
+/// Column indices resolved from a CSV header by name.
+fn header_indices<'a>(
+    header: &'a str,
+    required: &[&str],
+    file: &str,
+) -> Result<BTreeMap<&'a str, usize>> {
+    let cols: Vec<&str> = header.split(',').map(str::trim).collect();
+    let mut map = BTreeMap::new();
+    for (i, c) in cols.iter().enumerate() {
+        map.insert(*c, i);
+    }
+    for name in required {
+        if !map.contains_key(name) {
+            bail!(
+                "{file}:1: missing required column {name:?} (header has: {})",
+                cols.join(", ")
+            );
+        }
+    }
+    Ok(map)
+}
+
+fn parse_field(cols: &[&str], idx: usize, file: &str, line: usize, what: &str) -> Result<f64> {
+    let raw = cols.get(idx).copied().unwrap_or("");
+    raw.trim()
+        .parse::<f64>()
+        .ok()
+        .filter(|v| v.is_finite())
+        .with_context(|| format!("{file}:{line}: {what} {raw:?} is not a finite number"))
+}
+
+/// Locate the single `prefix*.csv` file in `dir`.
+fn find_csv(dir: &Path, prefix: &str) -> Result<PathBuf> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("reading trace directory {}", dir.display()))?;
+    let mut hits: Vec<PathBuf> = Vec::new();
+    for entry in entries {
+        let entry = entry.with_context(|| format!("reading trace directory {}", dir.display()))?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if name.starts_with(prefix) && name.ends_with(".csv") {
+            hits.push(entry.path());
+        }
+    }
+    hits.sort();
+    match hits.len() {
+        0 => bail!(
+            "{}: no {prefix}*.csv file found (expected the Azure Functions 2019 dataset \
+             layout: invocations_per_function*.csv, function_durations_percentiles*.csv, \
+             app_memory_percentiles*.csv)",
+            dir.display()
+        ),
+        1 => Ok(hits.remove(0)),
+        _ => bail!(
+            "{}: multiple {prefix}*.csv files found ({}); keep exactly one per kind",
+            dir.display(),
+            hits.iter().map(|p| p.display().to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    }
+}
+
+/// (owner, app, function) identity key.
+type FnKey = (String, String, String);
+
+struct InvRow {
+    key: FnKey,
+    line: usize,
+    counts: Vec<f64>,
+}
+
+struct DurRow {
+    avg_ms: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+fn non_empty_lines(text: &str) -> impl Iterator<Item = (usize, &str)> {
+    text.lines().enumerate().filter_map(|(i, l)| {
+        let t = l.trim();
+        if t.is_empty() {
+            None
+        } else {
+            Some((i + 1, t))
+        }
+    })
+}
+
+/// Streaming parse of the invocations file — the big one (hundreds of MB
+/// for a real published day), read line by line so peak memory stays at
+/// the parsed rows, not the whole file text.
+fn parse_invocations(path: &Path) -> Result<Vec<InvRow>> {
+    use std::io::BufRead;
+    let file = path.display().to_string();
+    let handle = std::fs::File::open(path).with_context(|| format!("reading {file}"))?;
+    let reader = std::io::BufReader::new(handle);
+    let mut width = 0usize;
+    let mut rows: Vec<InvRow> = Vec::new();
+    let mut seen: BTreeMap<FnKey, usize> = BTreeMap::new();
+    for (i, line) in reader.lines().enumerate() {
+        let line = line.with_context(|| format!("reading {file}"))?;
+        let text_line = line.trim();
+        if text_line.is_empty() {
+            continue;
+        }
+        let line_no = i + 1;
+        let cols: Vec<&str> = text_line.split(',').map(str::trim).collect();
+        if width == 0 {
+            // First non-empty line is the header.
+            if cols.len() < 5
+                || cols[0] != "HashOwner"
+                || cols[1] != "HashApp"
+                || cols[2] != "HashFunction"
+                || cols[3] != "Trigger"
+            {
+                bail!(
+                    "{file}:{line_no}: header must start with \
+                     HashOwner,HashApp,HashFunction,Trigger followed by at least one \
+                     per-minute count column, got {text_line:?}"
+                );
+            }
+            width = cols.len();
+            continue;
+        }
+        if cols.len() != width {
+            bail!("{file}:{line_no}: expected {width} columns, got {}", cols.len());
+        }
+        let key: FnKey = (cols[0].to_string(), cols[1].to_string(), cols[2].to_string());
+        if let Some(prev) = seen.insert(key.clone(), line_no) {
+            bail!(
+                "{file}:{line_no}: duplicate function {} (first seen at line {prev})",
+                cols[2]
+            );
+        }
+        let mut counts = Vec::with_capacity(width - 4);
+        for (j, raw) in cols[4..].iter().enumerate() {
+            let v = parse_field(&cols, 4 + j, &file, line_no, "invocation count")?;
+            if v < 0.0 {
+                bail!("{file}:{line_no}: invocation count {raw:?} is negative");
+            }
+            counts.push(v);
+        }
+        rows.push(InvRow { key, line: line_no, counts });
+    }
+    if width == 0 {
+        bail!("{file}: file is empty");
+    }
+    if rows.is_empty() {
+        bail!("{file}: contains a header but no data rows");
+    }
+    Ok(rows)
+}
+
+fn parse_durations(path: &Path) -> Result<BTreeMap<FnKey, DurRow>> {
+    let file = path.display().to_string();
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {file}"))?;
+    let mut lines = non_empty_lines(&text);
+    let (_, header) = lines.next().with_context(|| format!("{file}: file is empty"))?;
+    let idx = header_indices(
+        header,
+        &[
+            "HashOwner",
+            "HashApp",
+            "HashFunction",
+            "Average",
+            "percentile_Average_50",
+            "percentile_Average_99",
+        ],
+        &file,
+    )?;
+    let width = header.split(',').count();
+    let mut out: BTreeMap<FnKey, DurRow> = BTreeMap::new();
+    let mut seen: BTreeMap<FnKey, usize> = BTreeMap::new();
+    for (line, text_line) in lines {
+        let cols: Vec<&str> = text_line.split(',').map(str::trim).collect();
+        if cols.len() != width {
+            bail!("{file}:{line}: expected {width} columns, got {}", cols.len());
+        }
+        let key: FnKey = (
+            cols[idx["HashOwner"]].to_string(),
+            cols[idx["HashApp"]].to_string(),
+            cols[idx["HashFunction"]].to_string(),
+        );
+        if let Some(prev) = seen.insert(key.clone(), line) {
+            bail!(
+                "{file}:{line}: duplicate function {} (first seen at line {prev})",
+                cols[idx["HashFunction"]]
+            );
+        }
+        let avg_ms = parse_field(&cols, idx["Average"], &file, line, "Average duration")?;
+        let p50_ms =
+            parse_field(&cols, idx["percentile_Average_50"], &file, line, "p50 duration")?;
+        let p99_ms =
+            parse_field(&cols, idx["percentile_Average_99"], &file, line, "p99 duration")?;
+        if avg_ms < 0.0 || p50_ms < 0.0 || p99_ms < 0.0 {
+            bail!("{file}:{line}: durations must be non-negative milliseconds");
+        }
+        out.insert(key, DurRow { avg_ms, p50_ms, p99_ms });
+    }
+    if out.is_empty() {
+        bail!("{file}: contains a header but no data rows");
+    }
+    Ok(out)
+}
+
+fn parse_memory(path: &Path) -> Result<BTreeMap<(String, String), f64>> {
+    let file = path.display().to_string();
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {file}"))?;
+    let mut lines = non_empty_lines(&text);
+    let (_, header) = lines.next().with_context(|| format!("{file}: file is empty"))?;
+    let idx = header_indices(header, &["HashOwner", "HashApp", "AverageAllocatedMb"], &file)?;
+    let width = header.split(',').count();
+    let mut out: BTreeMap<(String, String), f64> = BTreeMap::new();
+    let mut seen: BTreeMap<(String, String), usize> = BTreeMap::new();
+    for (line, text_line) in lines {
+        let cols: Vec<&str> = text_line.split(',').map(str::trim).collect();
+        if cols.len() != width {
+            bail!("{file}:{line}: expected {width} columns, got {}", cols.len());
+        }
+        let key = (cols[idx["HashOwner"]].to_string(), cols[idx["HashApp"]].to_string());
+        if let Some(prev) = seen.insert(key.clone(), line) {
+            bail!(
+                "{file}:{line}: duplicate app {} (first seen at line {prev})",
+                cols[idx["HashApp"]]
+            );
+        }
+        let mb = parse_field(&cols, idx["AverageAllocatedMb"], &file, line, "allocated MB")?;
+        if mb <= 0.0 {
+            bail!("{file}:{line}: AverageAllocatedMb must be positive, got {mb}");
+        }
+        out.insert(key, mb);
+    }
+    if out.is_empty() {
+        bail!("{file}: contains a header but no data rows");
+    }
+    Ok(out)
+}
+
+fn short_hash(s: &str) -> String {
+    s.chars().take(8).collect()
+}
+
+impl AzureDataset {
+    /// Load and join the three dataset CSVs from `dir`. Every function in
+    /// the invocations file must have a durations row — inconsistent
+    /// function identities across those files are line-numbered errors, as
+    /// are malformed rows, missing columns and empty files. Apps absent
+    /// from the (subset-sampled) memory file take [`DEFAULT_MEMORY_MB`].
+    pub fn load(dir: &Path) -> Result<AzureDataset> {
+        let inv_path = find_csv(dir, "invocations_per_function")?;
+        let dur_path = find_csv(dir, "function_durations_percentiles")?;
+        let mem_path = find_csv(dir, "app_memory_percentiles")?;
+        let inv_file = inv_path.display().to_string();
+        let rows = parse_invocations(&inv_path)?;
+        let durations = parse_durations(&dur_path)?;
+        let memory = parse_memory(&mem_path)?;
+
+        let mut functions = Vec::with_capacity(rows.len());
+        for row in &rows {
+            let (owner, app, func) = &row.key;
+            let d = durations.get(&row.key).with_context(|| {
+                format!(
+                    "{inv_file}:{}: function {} has no row in {} \
+                     (inconsistent function ids across the dataset files)",
+                    row.line,
+                    short_hash(func),
+                    dur_path.display()
+                )
+            })?;
+            // The memory file only covers a sampled subset of apps in the
+            // published dataset; absent apps take the documented default.
+            let mb = memory
+                .get(&(owner.clone(), app.clone()))
+                .copied()
+                .unwrap_or(DEFAULT_MEMORY_MB);
+            let total: f64 = row.counts.iter().sum();
+            let warm = (d.avg_ms / 1000.0).max(1e-3);
+            let cold = warm + ((d.p99_ms - d.p50_ms) / 1000.0).max(COLD_OVERHEAD_FLOOR);
+            functions.push(IngestedFunction {
+                name: short_hash(func),
+                minute_rates: Arc::new(row.counts.iter().map(|c| c / 60.0).collect()),
+                total_invocations: total.round() as u64,
+                warm_service_mean: warm,
+                cold_service_mean: cold,
+                memory_mb: mb,
+            });
+        }
+        let raw_functions = functions.len();
+        Ok(AzureDataset {
+            functions,
+            source_dir: dir.display().to_string(),
+            raw_functions,
+            transforms: Vec::new(),
+        })
+    }
+
+    /// Total mean rate (req/s) across all functions.
+    pub fn total_mean_rate(&self) -> f64 {
+        self.functions.iter().map(IngestedFunction::mean_rate).sum()
+    }
+
+    /// Keep the `k` most-invoked functions (descending by total
+    /// invocations, name-tiebroken for determinism).
+    pub fn top_k(mut self, k: usize) -> AzureDataset {
+        self.functions.sort_by(|a, b| {
+            b.total_invocations.cmp(&a.total_invocations).then_with(|| a.name.cmp(&b.name))
+        });
+        self.functions.truncate(k);
+        self.transforms.push(format!("top_k({k})"));
+        self
+    }
+
+    /// Keep `len` functions starting at index `start` (current order).
+    pub fn slice(mut self, start: usize, len: usize) -> Result<AzureDataset> {
+        if len == 0 {
+            bail!("slice length must be at least 1");
+        }
+        let end = start.checked_add(len).filter(|&e| e <= self.functions.len());
+        let Some(end) = end else {
+            bail!(
+                "slice [{start}, {start}+{len}) is out of range: the trace has {} functions",
+                self.functions.len()
+            );
+        };
+        self.functions = self.functions[start..end].to_vec();
+        self.transforms.push(format!("slice({start}, {len})"));
+        Ok(self)
+    }
+
+    /// Multiply every function's rate profile (and invocation total) by
+    /// `factor` — load scaling for what-if studies.
+    pub fn scale_rates(mut self, factor: f64) -> Result<AzureDataset> {
+        if !(factor > 0.0 && factor.is_finite()) {
+            bail!("scale factor must be a positive finite number, got {factor}");
+        }
+        for f in &mut self.functions {
+            f.minute_rates = Arc::new(f.minute_rates.iter().map(|r| r * factor).collect());
+            f.total_invocations = (f.total_invocations as f64 * factor).round() as u64;
+        }
+        self.transforms.push(format!("scale_rates({factor})"));
+        Ok(self)
+    }
+
+    /// One-line provenance summary (directory, selection, transforms).
+    pub fn describe(&self) -> String {
+        let transforms = if self.transforms.is_empty() {
+            String::new()
+        } else {
+            format!(" [{}]", self.transforms.join(", "))
+        };
+        format!(
+            "{} ({} of {} functions){transforms}",
+            self.source_dir,
+            self.functions.len(),
+            self.raw_functions
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_dataset(dir: &Path, inv: &str, dur: &str, mem: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("invocations_per_function.csv"), inv).unwrap();
+        std::fs::write(dir.join("function_durations_percentiles.csv"), dur).unwrap();
+        std::fs::write(dir.join("app_memory_percentiles.csv"), mem).unwrap();
+    }
+
+    const DUR_HEADER: &str = "HashOwner,HashApp,HashFunction,Average,Count,Minimum,Maximum,\
+percentile_Average_0,percentile_Average_1,percentile_Average_25,percentile_Average_50,\
+percentile_Average_75,percentile_Average_99,percentile_Average_100";
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("simfaas-azure-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn loads_and_joins_a_minimal_dataset() {
+        let dir = tmp_dir("ok");
+        write_dataset(
+            &dir,
+            "HashOwner,HashApp,HashFunction,Trigger,1,2,3\n\
+             o1,a1,f1aaaaaaaa,http,2,0,1\n\
+             o1,a1,f2bbbbbbbb,timer,0,6,0\n",
+            &format!(
+                "{DUR_HEADER}\n\
+                 o1,a1,f1aaaaaaaa,100,3,1,500,1,2,50,80,120,400,500\n\
+                 o1,a1,f2bbbbbbbb,2000,6,100,9000,100,200,1000,1800,2500,8000,9000\n"
+            ),
+            "HashOwner,HashApp,SampleCount,AverageAllocatedMb\no1,a1,10,170\n",
+        );
+        let ds = AzureDataset::load(&dir).unwrap();
+        assert_eq!(ds.functions.len(), 2);
+        assert_eq!(ds.raw_functions, 2);
+        let f1 = &ds.functions[0];
+        assert_eq!(f1.name, "f1aaaaaa");
+        assert_eq!(f1.total_invocations, 3);
+        assert_eq!(f1.minute_rates.as_slice(), &[2.0 / 60.0, 0.0, 1.0 / 60.0]);
+        // warm = 100 ms, cold = warm + (400 - 80) ms = 0.42 s.
+        assert!((f1.warm_service_mean - 0.1).abs() < 1e-12);
+        assert!((f1.cold_service_mean - 0.42).abs() < 1e-12);
+        assert_eq!(f1.memory_mb, 170.0);
+        // f2's spread (8000 - 1800 = 6200 ms) dominates the floor too.
+        let f2 = &ds.functions[1];
+        assert!((f2.cold_service_mean - (2.0 + 6.2)).abs() < 1e-12);
+        assert!((ds.total_mean_rate() - (3.0 + 6.0) / 180.0).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cold_overhead_floor_applies_on_tight_percentiles() {
+        let dir = tmp_dir("floor");
+        write_dataset(
+            &dir,
+            "HashOwner,HashApp,HashFunction,Trigger,1\no1,a1,f1,http,1\n",
+            &format!("{DUR_HEADER}\no1,a1,f1,100,1,90,110,90,91,95,100,105,110,110\n"),
+            "HashOwner,HashApp,SampleCount,AverageAllocatedMb\no1,a1,1,128\n",
+        );
+        let ds = AzureDataset::load(&dir).unwrap();
+        // Spread (110 - 100 = 10 ms) is below the floor.
+        assert!(
+            (ds.functions[0].cold_service_mean
+                - (ds.functions[0].warm_service_mean + COLD_OVERHEAD_FLOOR))
+                .abs()
+                < 1e-12
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn transforms_select_and_scale() {
+        let dir = tmp_dir("tf");
+        write_dataset(
+            &dir,
+            "HashOwner,HashApp,HashFunction,Trigger,1,2\n\
+             o1,a1,hot,http,30,30\n\
+             o1,a1,mid,http,5,5\n\
+             o1,a1,cold,http,1,0\n",
+            &format!(
+                "{DUR_HEADER}\n\
+                 o1,a1,hot,100,60,1,500,1,2,50,80,120,400,500\n\
+                 o1,a1,mid,100,10,1,500,1,2,50,80,120,400,500\n\
+                 o1,a1,cold,100,1,1,500,1,2,50,80,120,400,500\n"
+            ),
+            "HashOwner,HashApp,SampleCount,AverageAllocatedMb\no1,a1,10,128\n",
+        );
+        let ds = AzureDataset::load(&dir).unwrap();
+        let top = ds.clone().top_k(2);
+        assert_eq!(top.functions.len(), 2);
+        assert_eq!(top.functions[0].name, "hot");
+        assert_eq!(top.functions[1].name, "mid");
+        assert_eq!(top.raw_functions, 3);
+        assert!(top.describe().contains("top_k(2)"), "{}", top.describe());
+
+        let sliced = ds.clone().slice(1, 2).unwrap();
+        assert_eq!(sliced.functions[0].name, "mid");
+        assert_eq!(sliced.functions[1].name, "cold");
+        assert!(ds.clone().slice(2, 5).is_err());
+
+        let scaled = ds.clone().scale_rates(2.0).unwrap();
+        assert_eq!(scaled.functions[0].total_invocations, 120);
+        assert!((scaled.total_mean_rate() - 2.0 * ds.total_mean_rate()).abs() < 1e-12);
+        assert!(ds.clone().scale_rates(0.0).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_rows_report_file_and_line() {
+        let dir = tmp_dir("badrow");
+        write_dataset(
+            &dir,
+            "HashOwner,HashApp,HashFunction,Trigger,1,2\n\
+             o1,a1,f1,http,2,1\n\
+             o1,a1,f2,http,2,oops\n",
+            &format!("{DUR_HEADER}\no1,a1,f1,100,3,1,500,1,2,50,80,120,400,500\n"),
+            "HashOwner,HashApp,SampleCount,AverageAllocatedMb\no1,a1,10,170\n",
+        );
+        let err = format!("{:#}", AzureDataset::load(&dir).unwrap_err());
+        assert!(err.contains(":3:"), "{err}");
+        assert!(err.contains("oops"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_column_count_reports_line() {
+        let dir = tmp_dir("cols");
+        write_dataset(
+            &dir,
+            "HashOwner,HashApp,HashFunction,Trigger,1,2\no1,a1,f1,http,2\n",
+            &format!("{DUR_HEADER}\no1,a1,f1,100,3,1,500,1,2,50,80,120,400,500\n"),
+            "HashOwner,HashApp,SampleCount,AverageAllocatedMb\no1,a1,10,170\n",
+        );
+        let err = format!("{:#}", AzureDataset::load(&dir).unwrap_err());
+        assert!(err.contains(":2:") && err.contains("columns"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_percentile_column_is_a_header_error() {
+        let dir = tmp_dir("hdr");
+        write_dataset(
+            &dir,
+            "HashOwner,HashApp,HashFunction,Trigger,1\no1,a1,f1,http,1\n",
+            "HashOwner,HashApp,HashFunction,Average,percentile_Average_50\n\
+             o1,a1,f1,100,80\n",
+            "HashOwner,HashApp,SampleCount,AverageAllocatedMb\no1,a1,10,170\n",
+        );
+        let err = format!("{:#}", AzureDataset::load(&dir).unwrap_err());
+        assert!(err.contains("percentile_Average_99"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_files_are_errors() {
+        let dir = tmp_dir("empty");
+        write_dataset(
+            &dir,
+            "HashOwner,HashApp,HashFunction,Trigger,1\n",
+            &format!("{DUR_HEADER}\no1,a1,f1,100,3,1,500,1,2,50,80,120,400,500\n"),
+            "HashOwner,HashApp,SampleCount,AverageAllocatedMb\no1,a1,10,170\n",
+        );
+        let err = format!("{:#}", AzureDataset::load(&dir).unwrap_err());
+        assert!(err.contains("no data rows"), "{err}");
+
+        std::fs::write(dir.join("invocations_per_function.csv"), "").unwrap();
+        let err = format!("{:#}", AzureDataset::load(&dir).unwrap_err());
+        assert!(err.contains("empty"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn inconsistent_ids_across_files_are_line_numbered_errors() {
+        // f2 invoked but absent from the durations file.
+        let dir = tmp_dir("ids");
+        write_dataset(
+            &dir,
+            "HashOwner,HashApp,HashFunction,Trigger,1\n\
+             o1,a1,f1,http,1\n\
+             o1,a1,f2,http,1\n",
+            &format!("{DUR_HEADER}\no1,a1,f1,100,3,1,500,1,2,50,80,120,400,500\n"),
+            "HashOwner,HashApp,SampleCount,AverageAllocatedMb\no1,a1,10,170\n",
+        );
+        let err = format!("{:#}", AzureDataset::load(&dir).unwrap_err());
+        assert!(err.contains(":3:") && err.contains("f2"), "{err}");
+        assert!(err.contains("inconsistent"), "{err}");
+
+        // An app absent from the memory file is NOT an error — the real
+        // dataset samples memory for a subset of apps — it defaults.
+        write_dataset(
+            &dir,
+            "HashOwner,HashApp,HashFunction,Trigger,1\no1,a2,f1,http,1\n",
+            &format!("{DUR_HEADER}\no1,a2,f1,100,3,1,500,1,2,50,80,120,400,500\n"),
+            "HashOwner,HashApp,SampleCount,AverageAllocatedMb\no1,a1,10,170\n",
+        );
+        let ds = AzureDataset::load(&dir).unwrap();
+        assert_eq!(ds.functions[0].memory_mb, DEFAULT_MEMORY_MB);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn duplicate_keys_are_errors() {
+        let dir = tmp_dir("dup");
+        write_dataset(
+            &dir,
+            "HashOwner,HashApp,HashFunction,Trigger,1\n\
+             o1,a1,f1,http,1\n\
+             o1,a1,f1,timer,2\n",
+            &format!("{DUR_HEADER}\no1,a1,f1,100,3,1,500,1,2,50,80,120,400,500\n"),
+            "HashOwner,HashApp,SampleCount,AverageAllocatedMb\no1,a1,10,170\n",
+        );
+        let err = format!("{:#}", AzureDataset::load(&dir).unwrap_err());
+        assert!(err.contains("duplicate") && err.contains(":3:"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_files_name_the_expected_layout() {
+        let dir = tmp_dir("nofiles");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = format!("{:#}", AzureDataset::load(&dir).unwrap_err());
+        assert!(err.contains("invocations_per_function"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,9 +1,27 @@
-//! Workload generation substrate: open-loop arrival generators (the
-//! equivalent of the paper's `pacswg` Poisson load generator) and synthetic
-//! Azure-style multi-function traces.
+//! Workload substrate: every way requests enter the simulator.
+//!
+//! * [`generator`] — open-loop arrival generators (the equivalent of the
+//!   paper's `pacswg` Poisson load generator): Poisson, deterministic,
+//!   batch, MMPP, non-homogeneous thinning.
+//! * [`azure`] — synthetic Azure-style multi-function traces (Shahrad et
+//!   al. characteristics, tunable via [`SynthesisOptions`]).
+//! * [`azure_dataset`] — reader for the real Azure Functions 2019 dataset
+//!   (per-minute invocation counts + duration/memory percentiles), with
+//!   line-numbered errors and top-K/slice/scale transforms.
+//! * [`stream`] — the streaming arrival seam: [`ArrivalSource`] and the
+//!   lazy thinning generator replacing eager arrival materialization.
+//! * [`source`] — [`TraceSource`], the one typed seam (synthetic /
+//!   ingested / explicit / recorded) every trace-driven experiment
+//!   consumes, plus provenance and validation statistics.
 
 pub mod azure;
+pub mod azure_dataset;
 pub mod generator;
+pub mod source;
+pub mod stream;
 
-pub use azure::{FunctionProfile, SyntheticTrace};
+pub use azure::{FunctionProfile, SynthesisOptions, SyntheticTrace};
+pub use azure_dataset::{AzureDataset, IngestedFunction};
 pub use generator::{batch, deterministic, from_process, nonhomogeneous, poisson, Workload};
+pub use source::{ArrivalMode, FunctionSpec, TraceProvenance, TraceSource, TraceStats};
+pub use stream::{ArrivalSource, RateShape, StreamSpec, StreamingArrivals};

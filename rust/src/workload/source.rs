@@ -1,0 +1,385 @@
+//! `TraceSource` — the one typed seam every workload enters the simulator
+//! through.
+//!
+//! Engines consume per-function [`FunctionSpec`]s; this module defines
+//! where those specs come from: a [`SyntheticTrace`] (the generated
+//! Azure-style mix), a real ingested [`AzureDataset`], explicit
+//! caller-built specs, or a single recorded [`Workload`]. Every variant
+//! yields **streaming** arrival sources (see [`super::stream`]) — no
+//! arrival vector is materialized up front — plus provenance for reports
+//! and rate/popularity statistics for validating the synthetic generator
+//! against real data.
+//!
+//! `fleet::FleetConfig::from_source` builds a fleet from any variant;
+//! `scenario::WorkloadSpec`'s `source` axis and the CLI's
+//! `fleet --trace-dir` select one declaratively.
+
+use super::azure::SyntheticTrace;
+use super::azure_dataset::AzureDataset;
+use super::generator::Workload;
+use super::stream::{ArrivalSource, StreamSpec};
+use crate::sim::ensemble::derive_seeds;
+use crate::sim::process::Process;
+use crate::sim::simulator::SimConfig;
+use std::sync::Arc;
+
+/// One function's arrival source specification (the cloneable half of
+/// [`ArrivalSource`]).
+#[derive(Clone)]
+pub enum ArrivalMode {
+    /// Inter-arrival process (the core simulator's model), drawn from the
+    /// engine's RNG stream.
+    Process(Process),
+    /// Replay of pre-materialized, sorted absolute arrival times. `Arc`
+    /// keeps [`FunctionSpec`] clones cheap for what-if sweeps.
+    Trace(Arc<Vec<f64>>),
+    /// Streaming thinning generator with its own seeded RNG stream —
+    /// identical arrivals to materializing the generator eagerly, at O(1)
+    /// resident memory per function.
+    Streaming(StreamSpec),
+}
+
+impl ArrivalMode {
+    /// Build the runtime [`ArrivalSource`] for one run over
+    /// `[0, horizon)`. Stateful processes get fresh replica state so
+    /// parallel shards never share mutable state (the fleet determinism
+    /// contract); streaming sources reseed from their spec, so repeated
+    /// runs replay identical arrivals.
+    pub fn runtime(&self, horizon: f64) -> ArrivalSource {
+        match self {
+            ArrivalMode::Process(p) => ArrivalSource::process(p.replica()),
+            ArrivalMode::Trace(t) => ArrivalSource::replay(Arc::clone(t)),
+            ArrivalMode::Streaming(s) => ArrivalSource::Stream(s.build(horizon)),
+        }
+    }
+}
+
+/// Per-function simulation parameters within a fleet.
+#[derive(Clone)]
+pub struct FunctionSpec {
+    /// Display name (reports, top-K tables).
+    pub name: String,
+    /// Arrival source specification.
+    pub arrival: ArrivalMode,
+    /// Optional batch-size process (see [`SimConfig::batch_size`]).
+    pub batch_size: Option<Process>,
+    /// Warm-start busy-period process.
+    pub warm_service: Process,
+    /// Cold-start busy-period process.
+    pub cold_service: Process,
+    /// Per-function maximum concurrency (AWS Lambda default: 1000).
+    pub max_concurrency: usize,
+    /// Allocated memory in MB, for the fleet cost report.
+    pub memory_mb: f64,
+    /// RNG seed for this function's service (and process-arrival) draws.
+    pub seed: u64,
+}
+
+impl FunctionSpec {
+    /// Lift a core [`SimConfig`] into a fleet member. The config's own
+    /// expiration fields are superseded by the fleet's policy, and the
+    /// diagnostic-only knobs (`capture_request_log`, `sample_interval`)
+    /// are not carried over — the fleet engine keeps per-function
+    /// results but no per-request log or transient samples. The seed is
+    /// kept so a 1-function fleet under a fixed policy reproduces
+    /// `ServerlessSimulator::new(cfg).run()` bit-for-bit.
+    pub fn from_sim_config(name: impl Into<String>, cfg: &SimConfig) -> Self {
+        FunctionSpec {
+            name: name.into(),
+            arrival: ArrivalMode::Process(cfg.arrival.replica()),
+            batch_size: cfg.batch_size.as_ref().map(Process::replica),
+            warm_service: cfg.warm_service.replica(),
+            cold_service: cfg.cold_service.replica(),
+            max_concurrency: cfg.max_concurrency,
+            memory_mb: 128.0,
+            seed: cfg.seed,
+        }
+    }
+}
+
+/// Where a workload comes from: the typed source behind every trace-driven
+/// experiment.
+#[derive(Clone)]
+pub enum TraceSource {
+    /// Synthetic Azure-style tenant mix (Shahrad et al. characteristics).
+    Synthetic(SyntheticTrace),
+    /// Real ingested Azure Functions 2019 dataset.
+    AzureDataset(AzureDataset),
+    /// Explicit caller-built function specs.
+    Explicit(Vec<FunctionSpec>),
+    /// One recorded workload replayed as a single function (Table-1
+    /// exponential services).
+    Recorded(Workload),
+}
+
+impl TraceSource {
+    /// Number of functions this source yields.
+    pub fn len(&self) -> usize {
+        match self {
+            TraceSource::Synthetic(t) => t.functions.len(),
+            TraceSource::AzureDataset(d) => d.functions.len(),
+            TraceSource::Explicit(specs) => specs.len(),
+            TraceSource::Recorded(_) => 1,
+        }
+    }
+
+    /// Whether the source yields no functions.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Yield the per-function specs. Synthetic and ingested sources derive
+    /// two SplitMix64 streams per function from `root_seed` (arrival
+    /// generation and service draws) — the same derivation the historical
+    /// eager `FleetConfig::from_trace` used, so synthetic fleets stay
+    /// bit-identical through this seam.
+    pub fn function_specs(&self, root_seed: u64) -> Vec<FunctionSpec> {
+        match self {
+            TraceSource::Synthetic(trace) => {
+                let n = trace.functions.len();
+                let seeds = derive_seeds(root_seed, 2 * n);
+                trace
+                    .functions
+                    .iter()
+                    .enumerate()
+                    .map(|(i, f)| FunctionSpec {
+                        name: f.name.clone(),
+                        arrival: ArrivalMode::Streaming(StreamSpec::sinusoid(
+                            f.mean_rate,
+                            f.diurnal_depth,
+                            f.peak_offset,
+                            seeds[2 * i],
+                        )),
+                        batch_size: None,
+                        warm_service: Process::exp_mean(f.warm_service_mean),
+                        cold_service: Process::exp_mean(f.cold_service_mean),
+                        max_concurrency: 1000,
+                        memory_mb: 128.0,
+                        seed: seeds[2 * i + 1],
+                    })
+                    .collect()
+            }
+            TraceSource::AzureDataset(ds) => {
+                let n = ds.functions.len();
+                let seeds = derive_seeds(root_seed, 2 * n);
+                ds.functions
+                    .iter()
+                    .enumerate()
+                    .map(|(i, f)| FunctionSpec {
+                        name: f.name.clone(),
+                        arrival: ArrivalMode::Streaming(StreamSpec::piecewise_daily(
+                            Arc::clone(&f.minute_rates),
+                            60.0,
+                            seeds[2 * i],
+                        )),
+                        batch_size: None,
+                        warm_service: Process::exp_mean(f.warm_service_mean),
+                        cold_service: Process::exp_mean(f.cold_service_mean),
+                        max_concurrency: 1000,
+                        memory_mb: f.memory_mb,
+                        seed: seeds[2 * i + 1],
+                    })
+                    .collect()
+            }
+            TraceSource::Explicit(specs) => specs.clone(),
+            TraceSource::Recorded(w) => {
+                let seeds = derive_seeds(root_seed, 2);
+                vec![FunctionSpec {
+                    name: "recorded".into(),
+                    arrival: ArrivalMode::Trace(Arc::new(w.arrivals.clone())),
+                    batch_size: None,
+                    warm_service: Process::exp_mean(crate::figures::WARM_MEAN),
+                    cold_service: Process::exp_mean(crate::figures::COLD_MEAN),
+                    max_concurrency: 1000,
+                    memory_mb: 128.0,
+                    seed: seeds[1],
+                }]
+            }
+        }
+    }
+
+    /// Provenance record for table and JSON reports.
+    pub fn provenance(&self) -> TraceProvenance {
+        match self {
+            TraceSource::Synthetic(t) => TraceProvenance {
+                kind: "synthetic".into(),
+                detail: "Azure-style synthetic mix (Shahrad et al. characteristics)".into(),
+                functions: t.functions.len(),
+            },
+            TraceSource::AzureDataset(d) => TraceProvenance {
+                kind: "azure_dataset".into(),
+                detail: d.describe(),
+                functions: d.functions.len(),
+            },
+            TraceSource::Explicit(specs) => TraceProvenance {
+                kind: "explicit".into(),
+                detail: "caller-supplied function specs".into(),
+                functions: specs.len(),
+            },
+            TraceSource::Recorded(w) => TraceProvenance {
+                kind: "recorded".into(),
+                detail: format!("{} recorded arrivals", w.len()),
+                functions: 1,
+            },
+        }
+    }
+
+    /// Per-function mean-rate statistics, when the source carries rate
+    /// profiles (synthetic and ingested traces; `None` for explicit and
+    /// recorded sources). The validation seam: compare an ingested trace
+    /// against the synthetic generator with [`TraceStats::comparison_table`].
+    pub fn rate_stats(&self) -> Option<TraceStats> {
+        let rates: Vec<f64> = match self {
+            TraceSource::Synthetic(t) => t.functions.iter().map(|f| f.mean_rate).collect(),
+            TraceSource::AzureDataset(d) => {
+                d.functions.iter().map(|f| f.mean_rate()).collect()
+            }
+            _ => return None,
+        };
+        Some(TraceStats::from_rates(&rates))
+    }
+}
+
+/// Where a report's workload came from: source kind, human detail, size.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceProvenance {
+    /// Source kind tag: `synthetic` | `azure_dataset` | `explicit` |
+    /// `recorded`.
+    pub kind: String,
+    /// Human-readable detail (directory, transforms, …).
+    pub detail: String,
+    /// Number of functions the source yielded.
+    pub functions: usize,
+}
+
+impl TraceProvenance {
+    /// One-line rendering for table reports.
+    pub fn describe(&self) -> String {
+        format!("{} — {} functions, {}", self.kind, self.functions, self.detail)
+    }
+}
+
+/// Rate/popularity statistics of a multi-function trace — the common
+/// yardstick for comparing the synthetic generator against ingested data.
+#[derive(Debug, Clone)]
+pub struct TraceStats {
+    /// Number of functions.
+    pub functions: usize,
+    /// Sum of per-function mean rates (req/s).
+    pub total_rate: f64,
+    /// Mean of the per-function mean rates.
+    pub mean_rate: f64,
+    /// Hottest function's mean rate.
+    pub max_rate: f64,
+    /// Share of the total rate held by the busiest 10% of functions
+    /// (popularity skew; heavy-tailed mixes approach 1).
+    pub top_decile_share: f64,
+    /// Coefficient of variation of the per-function rates.
+    pub rate_cv: f64,
+}
+
+impl TraceStats {
+    /// Compute from per-function mean rates.
+    pub fn from_rates(rates: &[f64]) -> TraceStats {
+        let n = rates.len();
+        let total: f64 = rates.iter().sum();
+        let mean = if n > 0 { total / n as f64 } else { 0.0 };
+        let var = if n > 0 {
+            rates.iter().map(|r| (r - mean) * (r - mean)).sum::<f64>() / n as f64
+        } else {
+            0.0
+        };
+        let mut sorted = rates.to_vec();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let top = (n.div_ceil(10)).min(n);
+        let top_sum: f64 = sorted.iter().take(top).sum();
+        TraceStats {
+            functions: n,
+            total_rate: total,
+            mean_rate: mean,
+            max_rate: sorted.first().copied().unwrap_or(0.0),
+            top_decile_share: if total > 0.0 { top_sum / total } else { 0.0 },
+            rate_cv: if mean > 0.0 { var.sqrt() / mean } else { 0.0 },
+        }
+    }
+
+    /// Side-by-side comparison table of two labeled stat sets — the
+    /// DESIGN.md §3 validation report (ingested vs synthetic).
+    pub fn comparison_table(&self, label: &str, other: &TraceStats, other_label: &str) -> String {
+        let rows: [(&str, f64, f64); 6] = [
+            ("functions", self.functions as f64, other.functions as f64),
+            ("total rate (req/s)", self.total_rate, other.total_rate),
+            ("mean rate (req/s)", self.mean_rate, other.mean_rate),
+            ("max rate (req/s)", self.max_rate, other.max_rate),
+            ("top-decile share", self.top_decile_share, other.top_decile_share),
+            ("rate CV", self.rate_cv, other.rate_cv),
+        ];
+        let mut s = format!("{:<20}  {:>14}  {:>14}\n", "statistic", label, other_label);
+        for (name, a, b) in rows {
+            s.push_str(&format!("{name:<20}  {a:>14.4}  {b:>14.4}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::rng::Rng;
+
+    #[test]
+    fn synthetic_specs_mirror_the_trace_profiles() {
+        let mut rng = Rng::new(11);
+        let trace = SyntheticTrace::generate(8, &mut rng);
+        let src = TraceSource::Synthetic(trace.clone());
+        assert_eq!(src.len(), 8);
+        assert!(!src.is_empty());
+        let specs = src.function_specs(0xBEEF);
+        assert_eq!(specs.len(), 8);
+        let seeds = derive_seeds(0xBEEF, 16);
+        for (i, (spec, f)) in specs.iter().zip(&trace.functions).enumerate() {
+            assert_eq!(spec.name, f.name);
+            assert_eq!(spec.seed, seeds[2 * i + 1]);
+            match &spec.arrival {
+                ArrivalMode::Streaming(s) => {
+                    assert_eq!(s.seed, seeds[2 * i]);
+                    assert!((s.rate_max - f.mean_rate * (1.0 + f.diurnal_depth)).abs() < 1e-12);
+                }
+                _ => panic!("synthetic specs must stream"),
+            }
+        }
+        // Derivation is deterministic.
+        let again = src.function_specs(0xBEEF);
+        assert_eq!(again[3].seed, specs[3].seed);
+    }
+
+    #[test]
+    fn recorded_source_replays_the_workload() {
+        let w = Workload { arrivals: vec![1.0, 2.0, 3.0] };
+        let src = TraceSource::Recorded(w);
+        assert_eq!(src.len(), 1);
+        let specs = src.function_specs(1);
+        match &specs[0].arrival {
+            ArrivalMode::Trace(t) => assert_eq!(t.as_slice(), &[1.0, 2.0, 3.0]),
+            _ => panic!("recorded specs must replay"),
+        }
+        assert_eq!(src.provenance().kind, "recorded");
+        assert!(src.rate_stats().is_none());
+    }
+
+    #[test]
+    fn rate_stats_capture_popularity_skew() {
+        // 9 cold functions + 1 hot one: the top decile holds ~92% of the
+        // rate.
+        let rates: Vec<f64> = (0..9).map(|_| 0.1).chain([10.0]).collect();
+        let stats = TraceStats::from_rates(&rates);
+        assert_eq!(stats.functions, 10);
+        assert!((stats.total_rate - 10.9).abs() < 1e-12);
+        assert_eq!(stats.max_rate, 10.0);
+        assert!((stats.top_decile_share - 10.0 / 10.9).abs() < 1e-12);
+        assert!(stats.rate_cv > 2.0);
+        let table = stats.comparison_table("a", &stats, "b");
+        assert!(table.contains("top-decile share"));
+        assert!(table.contains("rate CV"));
+    }
+}

@@ -1,0 +1,336 @@
+//! Streaming (lazy) arrival generation — the `ArrivalSource` seam.
+//!
+//! Historically every trace-driven run materialized its full arrival
+//! vector up front (`Vec<f64>` per function), so a fleet run cost
+//! O(total-invocations) resident memory before the first event fired.
+//! This module replaces that with demand-driven generation:
+//!
+//! * [`StreamingArrivals`] is the lazy twin of
+//!   [`super::generator::nonhomogeneous`]: the identical Lewis & Shedler
+//!   thinning draws from the identical RNG stream, but one accepted
+//!   arrival per [`Iterator::next`] call and O(1) resident state — so a
+//!   run driven by a [`StreamSpec`] is **bit-identical** to one replaying
+//!   the eagerly materialized vector (regression-tested here and in
+//!   `tests/trace_ingestion.rs`).
+//! * [`ArrivalSource`] is the one runtime seam every engine pulls its next
+//!   arrival from — the scale-per-request simulator, the concurrency-value
+//!   simulator and the fleet engines all schedule arrivals through
+//!   [`crate::sim::core::EngineCore::schedule_next_arrival`], which takes
+//!   this type.
+
+use crate::sim::process::Process;
+use crate::sim::rng::Rng;
+use crate::sim::time::SimTime;
+use std::sync::Arc;
+
+/// Seconds per day (the period of every daily rate profile).
+pub const SECONDS_PER_DAY: f64 = 86_400.0;
+
+/// A time-varying arrival-rate profile `rate(t)` in req/s.
+#[derive(Debug, Clone)]
+pub enum RateShape {
+    /// Sinusoidal diurnal modulation:
+    /// `mean * (1 + depth * sin(2π (t + peak_offset) / day))` — the exact
+    /// expression [`super::azure::SyntheticTrace`] uses, kept verbatim so
+    /// streaming generation reproduces the eager path bit-for-bit.
+    Sinusoid {
+        /// Mean rate (req/s) averaged over a day.
+        mean: f64,
+        /// Modulation depth in `[0, 1)`.
+        depth: f64,
+        /// Phase offset of the daily peak, seconds.
+        peak_offset: f64,
+    },
+    /// Piecewise-constant per-bin rates repeating with period
+    /// `rates.len() * bin_secs` — the shape of an ingested Azure
+    /// invocations-per-minute row (`bin_secs = 60`).
+    PiecewiseDaily {
+        /// Rate (req/s) per bin.
+        rates: Arc<Vec<f64>>,
+        /// Bin width in seconds.
+        bin_secs: f64,
+    },
+}
+
+impl RateShape {
+    /// Instantaneous rate at absolute time `t` seconds.
+    pub fn eval(&self, t: f64) -> f64 {
+        match self {
+            RateShape::Sinusoid { mean, depth, peak_offset } => {
+                mean * (1.0
+                    + depth
+                        * (2.0 * std::f64::consts::PI * (t + peak_offset) / SECONDS_PER_DAY)
+                            .sin())
+            }
+            RateShape::PiecewiseDaily { rates, bin_secs } => {
+                if rates.is_empty() {
+                    return 0.0;
+                }
+                let period = rates.len() as f64 * bin_secs;
+                let tm = t % period;
+                let idx = ((tm / bin_secs) as usize).min(rates.len() - 1);
+                rates[idx]
+            }
+        }
+    }
+
+    /// A bound on `rate(t)` over all `t` (the thinning envelope).
+    pub fn max_rate(&self) -> f64 {
+        match self {
+            RateShape::Sinusoid { mean, depth, .. } => mean * (1.0 + depth),
+            RateShape::PiecewiseDaily { rates, .. } => {
+                rates.iter().copied().fold(0.0, f64::max)
+            }
+        }
+    }
+
+    /// Long-run mean rate (req/s), averaged over one period.
+    pub fn mean_rate(&self) -> f64 {
+        match self {
+            RateShape::Sinusoid { mean, .. } => *mean,
+            RateShape::PiecewiseDaily { rates, .. } => {
+                if rates.is_empty() {
+                    0.0
+                } else {
+                    rates.iter().sum::<f64>() / rates.len() as f64
+                }
+            }
+        }
+    }
+}
+
+/// Specification of a streaming arrival generator — the cloneable, RNG-free
+/// half of [`StreamingArrivals`]. Held by
+/// [`super::source::ArrivalMode::Streaming`]; the engine builds the runtime
+/// generator per run, so repeated runs (policy sweeps, what-if grids)
+/// replay identical arrivals without retaining any of them.
+#[derive(Debug, Clone)]
+pub struct StreamSpec {
+    /// The rate profile.
+    pub shape: RateShape,
+    /// Thinning envelope (must bound `shape` everywhere).
+    pub rate_max: f64,
+    /// Seed of the generator's dedicated RNG stream (one stream per
+    /// function, disjoint from the engine's service-draw stream).
+    pub seed: u64,
+}
+
+impl StreamSpec {
+    /// Sinusoidal diurnal profile (the synthetic-trace shape).
+    pub fn sinusoid(mean: f64, depth: f64, peak_offset: f64, seed: u64) -> StreamSpec {
+        let shape = RateShape::Sinusoid { mean, depth, peak_offset };
+        let rate_max = shape.max_rate();
+        StreamSpec { shape, rate_max, seed }
+    }
+
+    /// Piecewise-constant daily profile (the ingested-dataset shape).
+    pub fn piecewise_daily(rates: Arc<Vec<f64>>, bin_secs: f64, seed: u64) -> StreamSpec {
+        let shape = RateShape::PiecewiseDaily { rates, bin_secs };
+        let rate_max = shape.max_rate();
+        StreamSpec { shape, rate_max, seed }
+    }
+
+    /// Build the runtime generator, emitting arrivals in `[0, stop_at)`.
+    pub fn build(&self, stop_at: f64) -> StreamingArrivals {
+        StreamingArrivals::new(self.shape.clone(), self.rate_max, self.seed, stop_at)
+    }
+}
+
+/// Lazy non-homogeneous Poisson arrivals via thinning (Lewis & Shedler).
+///
+/// Draw-for-draw identical to [`super::generator::nonhomogeneous`] on the
+/// same seed — it performs the same `exponential(rate_max)` candidate and
+/// `uniform()` acceptance draws in the same order — but yields one accepted
+/// arrival per `next()` call instead of materializing the whole horizon.
+#[derive(Debug, Clone)]
+pub struct StreamingArrivals {
+    rng: Rng,
+    shape: RateShape,
+    rate_max: f64,
+    t: f64,
+    stop_at: f64,
+    done: bool,
+}
+
+impl StreamingArrivals {
+    /// Generator over `[0, stop_at)`. A non-positive `rate_max` yields an
+    /// empty stream (the eager generator asserted instead).
+    pub fn new(shape: RateShape, rate_max: f64, seed: u64, stop_at: f64) -> StreamingArrivals {
+        StreamingArrivals {
+            rng: Rng::new(seed),
+            shape,
+            rate_max,
+            t: 0.0,
+            stop_at,
+            done: rate_max <= 0.0,
+        }
+    }
+}
+
+impl Iterator for StreamingArrivals {
+    type Item = f64;
+
+    fn next(&mut self) -> Option<f64> {
+        if self.done {
+            return None;
+        }
+        loop {
+            self.t += self.rng.exponential(self.rate_max);
+            if self.t >= self.stop_at {
+                self.done = true;
+                return None;
+            }
+            let r = self.shape.eval(self.t);
+            debug_assert!(r <= self.rate_max * (1.0 + 1e-9), "rate(t) exceeds rate_max");
+            if self.rng.uniform() * self.rate_max < r {
+                return Some(self.t);
+            }
+        }
+    }
+}
+
+/// The runtime arrival seam: where an engine's next arrival comes from.
+///
+/// Every engine holds one of these and schedules arrivals through
+/// [`crate::sim::core::EngineCore::schedule_next_arrival`]; only the
+/// `Process` variant draws from the engine's RNG (preserving the
+/// historical draw order: service draws first, next-arrival gap last).
+pub enum ArrivalSource {
+    /// Inter-arrival process drawn from the engine's RNG stream.
+    Process(Process),
+    /// Replay of recorded absolute arrival times (sorted ascending).
+    Replay {
+        /// The recorded timestamps.
+        times: Arc<Vec<f64>>,
+        /// Index of the next timestamp to replay.
+        next: usize,
+    },
+    /// Streaming thinning generator with its own dedicated RNG stream.
+    Stream(StreamingArrivals),
+}
+
+impl ArrivalSource {
+    /// Arrivals from an inter-arrival process.
+    pub fn process(p: Process) -> ArrivalSource {
+        ArrivalSource::Process(p)
+    }
+
+    /// Replay of a recorded arrival vector. The times must be sorted
+    /// non-decreasing — a backwards clock would silently corrupt the
+    /// engines' time-weighted accumulators (checked in debug builds).
+    pub fn replay(times: Arc<Vec<f64>>) -> ArrivalSource {
+        debug_assert!(
+            times.windows(2).all(|w| w[0] <= w[1]),
+            "recorded arrival times must be sorted non-decreasing"
+        );
+        ArrivalSource::Replay { times, next: 0 }
+    }
+
+    /// The next absolute arrival time after `now`, or `None` when the
+    /// source is exhausted. `rng` is the engine's RNG, consumed only by the
+    /// `Process` variant (replay and streaming sources are self-contained).
+    #[inline]
+    pub fn next_after(&mut self, now: SimTime, rng: &mut Rng) -> Option<SimTime> {
+        match self {
+            ArrivalSource::Process(p) => Some(now.after(p.sample(rng))),
+            ArrivalSource::Replay { times, next } => {
+                let t = *times.get(*next)?;
+                *next += 1;
+                Some(SimTime::from_secs(t))
+            }
+            ArrivalSource::Stream(s) => s.next().map(SimTime::from_secs),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::generator::nonhomogeneous;
+
+    #[test]
+    fn streaming_sinusoid_is_bit_identical_to_eager_thinning() {
+        // The tentpole contract: the lazy generator consumes the identical
+        // RNG stream as generator::nonhomogeneous, so the accepted arrival
+        // times match bit for bit.
+        let (mean, depth, offset) = (1.3, 0.6, 20_000.0);
+        let horizon = 3.0 * SECONDS_PER_DAY;
+        for seed in [1u64, 99, 0xF1EE7] {
+            let mut rng = Rng::new(seed);
+            let rate = move |t: f64| {
+                mean * (1.0
+                    + depth * (2.0 * std::f64::consts::PI * (t + offset) / SECONDS_PER_DAY).sin())
+            };
+            let eager = nonhomogeneous(rate, mean * (1.0 + depth), horizon, &mut rng);
+            let lazy: Vec<f64> =
+                StreamSpec::sinusoid(mean, depth, offset, seed).build(horizon).collect();
+            assert_eq!(eager.arrivals.len(), lazy.len(), "seed {seed}");
+            for (a, b) in eager.arrivals.iter().zip(&lazy) {
+                assert_eq!(a.to_bits(), b.to_bits(), "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn piecewise_daily_rate_honors_bins_and_wraps() {
+        let shape = RateShape::PiecewiseDaily {
+            rates: Arc::new(vec![2.0, 0.0, 1.0]),
+            bin_secs: 60.0,
+        };
+        assert_eq!(shape.eval(0.0), 2.0);
+        assert_eq!(shape.eval(61.0), 0.0);
+        assert_eq!(shape.eval(179.0), 1.0);
+        // Wraps with period rates.len() * bin_secs = 180 s.
+        assert_eq!(shape.eval(180.0), 2.0);
+        assert_eq!(shape.eval(360.0 + 65.0), 0.0);
+        assert_eq!(shape.max_rate(), 2.0);
+        assert!((shape.mean_rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn piecewise_stream_hits_mean_rate() {
+        // 1440-bin daily profile averaging 0.5 req/s.
+        let rates: Vec<f64> = (0..1440).map(|i| if i % 2 == 0 { 1.0 } else { 0.0 }).collect();
+        let spec = StreamSpec::piecewise_daily(Arc::new(rates), 60.0, 7);
+        let horizon = 4.0 * SECONDS_PER_DAY;
+        let n = spec.build(horizon).count() as f64;
+        let expected = 0.5 * horizon;
+        assert!(
+            (n - expected).abs() < 4.0 * expected.sqrt(),
+            "n={n} expected~{expected}"
+        );
+    }
+
+    #[test]
+    fn zero_rate_stream_is_empty() {
+        let spec = StreamSpec::piecewise_daily(Arc::new(vec![0.0, 0.0]), 60.0, 1);
+        assert_eq!(spec.build(1e6).count(), 0);
+    }
+
+    #[test]
+    fn process_source_matches_direct_draws_bitwise() {
+        let mut rng_a = Rng::new(5);
+        let mut rng_b = Rng::new(5);
+        let mut src = ArrivalSource::process(Process::exp_rate(0.9));
+        let p = Process::exp_rate(0.9);
+        let mut now = SimTime::ZERO;
+        for _ in 0..100 {
+            let got = src.next_after(now, &mut rng_a).unwrap();
+            let want = now.after(p.sample(&mut rng_b));
+            assert_eq!(got.as_secs().to_bits(), want.as_secs().to_bits());
+            now = got;
+        }
+    }
+
+    #[test]
+    fn replay_source_yields_each_time_once_then_exhausts() {
+        let mut rng = Rng::new(1);
+        let mut src = ArrivalSource::replay(Arc::new(vec![1.0, 2.5, 9.0]));
+        let mut got = Vec::new();
+        while let Some(t) = src.next_after(SimTime::ZERO, &mut rng) {
+            got.push(t.as_secs());
+        }
+        assert_eq!(got, vec![1.0, 2.5, 9.0]);
+        assert!(src.next_after(SimTime::ZERO, &mut rng).is_none());
+    }
+}

@@ -163,6 +163,81 @@ fn fleet_json_and_policy_comparison() {
     assert!(text.contains("p_cold"), "{text}");
 }
 
+fn sample_trace_dir() -> String {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../examples/traces/azure_sample")
+        .display()
+        .to_string()
+}
+
+#[test]
+fn fleet_trace_dir_ingests_the_sample_dataset() {
+    let dir = sample_trace_dir();
+    let (ok, text) = simfaas(&[
+        "fleet",
+        "--trace-dir",
+        &dir,
+        "--trace-top-k",
+        "10",
+        "--horizon",
+        "7200",
+        "--skip",
+        "0",
+    ]);
+    assert!(ok, "{text}");
+    // Trace provenance in the table report.
+    assert!(text.contains("workload: azure_dataset"), "{text}");
+    assert!(text.contains("top_k(10)"), "{text}");
+    assert!(text.contains("Cold Start Probability"), "{text}");
+
+    // JSON output carries the provenance block.
+    let (ok, text) = simfaas(&[
+        "fleet",
+        "--trace-dir",
+        &dir,
+        "--horizon",
+        "3600",
+        "--skip",
+        "0",
+        "--json",
+    ]);
+    assert!(ok, "{text}");
+    let line = text.lines().find(|l| l.starts_with('{')).expect("json line");
+    assert!(line.contains("\"trace\":"), "{line}");
+    assert!(line.contains("azure_dataset"), "{line}");
+}
+
+#[test]
+fn fleet_trace_flags_fail_cleanly() {
+    // Trace transforms without a trace dir are rejected.
+    let (ok, text) = simfaas(&["fleet", "--trace-top-k", "5"]);
+    assert!(!ok);
+    assert!(text.contains("--trace-dir"), "{text}");
+    // A missing dataset directory is a clean error naming the path.
+    let (ok, text) = simfaas(&["fleet", "--trace-dir", "/nonexistent/azure"]);
+    assert!(!ok);
+    assert!(text.contains("/nonexistent/azure"), "{text}");
+    // Synthetic-mix axes are rejected (not silently ignored) with a trace.
+    let (ok, text) =
+        simfaas(&["fleet", "--trace-dir", &sample_trace_dir(), "--functions", "500"]);
+    assert!(!ok);
+    assert!(text.contains("--functions"), "{text}");
+}
+
+/// The acceptance criterion: `simfaas run` executes the checked-in sample
+/// trace end to end, with provenance in both output formats.
+#[test]
+fn run_executes_the_bundled_azure_trace_scenario() {
+    let path = scenarios_dir().join("fleet_azure_trace.json");
+    let (ok, text) = simfaas(&["run", path.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(text.contains("workload: azure_dataset"), "{text}");
+    let (ok, text) = simfaas(&["run", path.to_str().unwrap(), "--json"]);
+    assert!(ok, "{text}");
+    let line = text.lines().find(|l| l.starts_with('{')).expect("json line");
+    assert!(line.contains("\"trace\":"), "{line}");
+}
+
 #[test]
 fn fleet_rejects_bad_flags() {
     // Unknown flag is a clean error, not a panic.

@@ -301,3 +301,43 @@ fn batch_arrivals_spawn_parallel_instances() {
         assert!(chunk.iter().all(|e| e.arrived_at == chunk[0].arrived_at));
     }
 }
+
+/// Satellite property (trace ingestion PR): non-homogeneous thinning hits
+/// its target mean rate within a normal-approximation CI, eagerly and —
+/// bit-identically — through the streaming `ArrivalSource` seam.
+#[test]
+fn nonhomogeneous_thinning_hits_target_mean_rate_within_ci() {
+    use simfaas::workload::{nonhomogeneous, StreamSpec};
+    let day = 86_400.0;
+    let horizon = 4.0 * day;
+    for (case, (mean, depth)) in
+        [(0.3, 0.2), (0.8, 0.9), (1.5, 0.0), (2.5, 0.5), (0.05, 0.7)].into_iter().enumerate()
+    {
+        for seed_step in 0..4u64 {
+            let seed = 0xACE0 + case as u64 * 16 + seed_step;
+            let offset = 1_000.0 * case as f64;
+            let rate = move |t: f64| {
+                mean * (1.0 + depth * (2.0 * std::f64::consts::PI * (t + offset) / day).sin())
+            };
+            let mut rng = Rng::new(seed);
+            let w = nonhomogeneous(rate, mean * (1.0 + depth), horizon, &mut rng);
+            // Over whole days the sinusoid integrates out: expected count
+            // is mean * horizon; Poisson sd = sqrt(expected). 4.5 sigma
+            // keeps the 20-case sweep's false-failure odds negligible.
+            let expected = mean * horizon;
+            let sd = expected.sqrt();
+            let n = w.len() as f64;
+            assert!(
+                (n - expected).abs() < 4.5 * sd,
+                "case {case} seed {seed:#x}: n={n} expected={expected} sd={sd}"
+            );
+            // The streaming generator draws the identical sequence.
+            let lazy: Vec<f64> =
+                StreamSpec::sinusoid(mean, depth, offset, seed).build(horizon).collect();
+            assert_eq!(lazy.len(), w.len());
+            for (a, b) in w.arrivals.iter().zip(&lazy) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+}

@@ -1,0 +1,269 @@
+//! End-to-end tests for the `TraceSource` workload seam: real Azure-trace
+//! ingestion (the checked-in sample fixture), the streaming-vs-eager
+//! bit-identity contract behind `FleetConfig::from_source`, and the
+//! scenario/CLI surface (`fleet_azure_trace.json`).
+
+use simfaas::fleet::{ArrivalMode, FleetConfig, FleetResults, FunctionSpec, PolicySpec};
+use simfaas::scenario::{run_scenario, ScenarioReport, ScenarioSpec, SourceSpec};
+use simfaas::sim::ensemble::derive_seeds;
+use simfaas::sim::{Rng, SimResults};
+use simfaas::workload::{AzureDataset, SyntheticTrace, TraceSource};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn sample_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/traces/azure_sample")
+}
+
+fn digest(r: &SimResults) -> Vec<u64> {
+    vec![
+        r.total_requests,
+        r.cold_requests,
+        r.warm_requests,
+        r.rejected_requests,
+        r.instances_created,
+        r.instances_expired,
+        r.cold_start_prob.to_bits(),
+        r.avg_server_count.to_bits(),
+        r.avg_running_count.to_bits(),
+        r.avg_idle_count.to_bits(),
+        r.avg_response_time.to_bits(),
+        r.response_p95.to_bits(),
+        r.billed_instance_seconds.to_bits(),
+    ]
+}
+
+fn fleet_digest(res: &FleetResults) -> Vec<u64> {
+    let mut d: Vec<u64> = res.per_function.iter().flat_map(digest).collect();
+    d.push(res.aggregate.total_requests);
+    d.push(res.aggregate.cold_start_prob.to_bits());
+    d.push(res.aggregate.billed_instance_seconds.to_bits());
+    d
+}
+
+/// The headline tentpole regression: a synthetic fleet through the new
+/// streaming `TraceSource` seam is bit-identical to a fleet whose arrival
+/// vectors are materialized eagerly with the same derived seeds — the
+/// pre-redesign construction.
+#[test]
+fn streaming_fleet_is_bit_identical_to_eager_materialization() {
+    let mut rng = Rng::new(5);
+    let trace = SyntheticTrace::generate(8, &mut rng);
+    let (horizon, root_seed) = (4_000.0, 99u64);
+
+    let streamed = FleetConfig::from_source(
+        &TraceSource::Synthetic(trace.clone()),
+        horizon,
+        0.0,
+        root_seed,
+        PolicySpec::fixed(300.0),
+    )
+    .run();
+
+    // Hand-build the eager fleet exactly as the historical from_trace did:
+    // per-function arrival RNG seeded from the same SplitMix64 stream,
+    // arrivals materialized over the horizon, replayed from a Vec.
+    let seeds = derive_seeds(root_seed, 2 * trace.functions.len());
+    let functions: Vec<FunctionSpec> = trace
+        .functions
+        .iter()
+        .enumerate()
+        .map(|(i, f)| {
+            let mut arr_rng = Rng::new(seeds[2 * i]);
+            let w = trace.arrivals_for(i, horizon, &mut arr_rng).unwrap();
+            FunctionSpec {
+                name: f.name.clone(),
+                arrival: ArrivalMode::Trace(Arc::new(w.arrivals)),
+                batch_size: None,
+                warm_service: simfaas::Process::exp_mean(f.warm_service_mean),
+                cold_service: simfaas::Process::exp_mean(f.cold_service_mean),
+                max_concurrency: 1000,
+                memory_mb: 128.0,
+                seed: seeds[2 * i + 1],
+            }
+        })
+        .collect();
+    let eager = FleetConfig {
+        functions,
+        policy: PolicySpec::fixed(300.0),
+        fleet_max_concurrency: None,
+        horizon,
+        skip_initial: 0.0,
+        threads: 0,
+        prewarm_lead: 0.0,
+    }
+    .run();
+
+    assert_eq!(fleet_digest(&streamed), fleet_digest(&eager));
+    assert!(streamed.aggregate.total_requests > 0);
+}
+
+#[test]
+fn sample_fixture_ingests_with_sane_profiles() {
+    let ds = AzureDataset::load(&sample_dir()).expect("checked-in sample trace parses");
+    assert_eq!(ds.functions.len(), 20);
+    assert_eq!(ds.raw_functions, 20);
+    assert!(ds.transforms.is_empty());
+    for f in &ds.functions {
+        assert_eq!(f.minute_rates.len(), 1440, "{}", f.name);
+        assert!(f.warm_service_mean > 0.0, "{}", f.name);
+        assert!(f.cold_service_mean > f.warm_service_mean, "{}", f.name);
+        assert!(f.memory_mb >= 128.0, "{}", f.name);
+    }
+    // The mix totals ~2 req/s (the fixture generator's construction).
+    let total = ds.total_mean_rate();
+    assert!((1.5..3.0).contains(&total), "total rate {total}");
+    // Popularity stats exist and compare against a synthetic mix.
+    let src = TraceSource::AzureDataset(ds);
+    let ingested = src.rate_stats().expect("ingested traces have rate stats");
+    let mut rng = Rng::new(1);
+    let synthetic = TraceSource::Synthetic(SyntheticTrace::generate(20, &mut rng));
+    let syn_stats = synthetic.rate_stats().unwrap();
+    let table = ingested.comparison_table("ingested", &syn_stats, "synthetic");
+    assert!(table.contains("total rate"), "{table}");
+    assert_eq!(ingested.functions, 20);
+}
+
+#[test]
+fn ingested_fleet_runs_and_is_thread_count_invariant() {
+    let ds = AzureDataset::load(&sample_dir()).unwrap().top_k(10);
+    let src = TraceSource::AzureDataset(ds);
+    let base =
+        FleetConfig::from_source(&src, 7_200.0, 0.0, 0xA22E, PolicySpec::fixed(600.0));
+    let reference = base.clone().with_threads(1).run();
+    assert!(reference.aggregate.total_requests > 100);
+    for threads in [2, 8] {
+        let res = base.clone().with_threads(threads).run();
+        assert_eq!(fleet_digest(&res), fleet_digest(&reference), "threads={threads}");
+    }
+    // Repeated runs replay identical arrivals (streaming sources reseed).
+    let again = base.clone().run();
+    assert_eq!(fleet_digest(&again), fleet_digest(&reference));
+}
+
+#[test]
+fn scenario_with_azure_source_reports_provenance() {
+    let dir = sample_dir().display().to_string();
+    let spec = ScenarioSpec::new("azure-e2e")
+        .with_horizon(3_600.0)
+        .with_skip_initial(0.0)
+        .with_seed(7)
+        .with_experiment(simfaas::ExperimentSpec::Fleet(
+            simfaas::scenario::FleetScenario::new(1),
+        ))
+        .with_source(SourceSpec::AzureDataset {
+            dir,
+            top_k: Some(8),
+            slice: None,
+            scale_rate: 1.0,
+        });
+    let report = run_scenario(&spec).unwrap();
+    match &report {
+        ScenarioReport::Fleet { results, provenance, .. } => {
+            assert_eq!(results.per_function.len(), 8);
+            assert_eq!(provenance.kind, "azure_dataset");
+            assert!(provenance.detail.contains("top_k(8)"), "{}", provenance.detail);
+        }
+        _ => panic!("expected a fleet report"),
+    }
+    // Provenance lands in both the table and the JSON.
+    let table = report.render(&spec);
+    assert!(table.contains("workload: azure_dataset"), "{table}");
+    let json = report.to_json(&spec).to_string();
+    assert!(json.contains("\"trace\":"), "{json}");
+    assert!(json.contains("azure_dataset"), "{json}");
+}
+
+#[test]
+fn synthetic_scenario_reports_provenance_too() {
+    let spec = ScenarioSpec::new("syn")
+        .with_horizon(800.0)
+        .with_skip_initial(0.0)
+        .with_experiment(simfaas::ExperimentSpec::Fleet(
+            simfaas::scenario::FleetScenario::new(3),
+        ));
+    let report = run_scenario(&spec).unwrap();
+    let table = report.render(&spec);
+    assert!(table.contains("workload: synthetic"), "{table}");
+    let json = report.to_json(&spec).to_string();
+    assert!(json.contains("\"source\":\"synthetic\""), "{json}");
+}
+
+/// The bundled scenario file executes end to end after resolving its
+/// relative dataset path against the file's location — the in-process
+/// version of `simfaas run examples/scenarios/fleet_azure_trace.json`.
+#[test]
+fn bundled_azure_scenario_file_runs_end_to_end() {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../examples/scenarios/fleet_azure_trace.json");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut spec = ScenarioSpec::from_json_str(&text).unwrap();
+    spec.resolve_source_paths(path.parent().unwrap());
+    let report = run_scenario(&spec).unwrap();
+    match &report {
+        ScenarioReport::Fleet { results, provenance, .. } => {
+            assert_eq!(results.per_function.len(), 20);
+            assert_eq!(provenance.kind, "azure_dataset");
+            assert!(results.aggregate.total_requests > 10_000);
+        }
+        _ => panic!("expected a fleet report"),
+    }
+}
+
+#[test]
+fn missing_dataset_fails_with_named_dir() {
+    let spec = ScenarioSpec::new("bad")
+        .with_experiment(simfaas::ExperimentSpec::Fleet(
+            simfaas::scenario::FleetScenario::new(1),
+        ))
+        .with_source(SourceSpec::AzureDataset {
+            dir: "/nonexistent/azure".into(),
+            top_k: None,
+            slice: None,
+            scale_rate: 1.0,
+        });
+    let err = format!("{:#}", run_scenario(&spec).unwrap_err());
+    assert!(err.contains("/nonexistent/azure"), "{err}");
+}
+
+#[test]
+fn explicit_and_recorded_sources_drive_fleets() {
+    // Recorded: one function replaying a fixed workload.
+    let w = simfaas::workload::Workload { arrivals: (1..=50).map(|i| i as f64).collect() };
+    let res = FleetConfig::from_source(
+        &TraceSource::Recorded(w),
+        100.0,
+        0.0,
+        3,
+        PolicySpec::fixed(600.0),
+    )
+    .run();
+    assert_eq!(res.per_function.len(), 1);
+    assert_eq!(res.aggregate.total_requests, 50);
+    // Exponential Table-1 services: at least the first request is cold and
+    // the 600 s keep-alive guarantees nothing is rejected.
+    assert!(res.aggregate.cold_requests >= 1);
+    assert_eq!(res.aggregate.rejected_requests, 0);
+
+    // Explicit: specs pass through unchanged.
+    let spec = FunctionSpec {
+        name: "explicit".into(),
+        arrival: ArrivalMode::Trace(Arc::new(vec![5.0, 6.0])),
+        batch_size: None,
+        warm_service: simfaas::Process::constant(0.5),
+        cold_service: simfaas::Process::constant(1.0),
+        max_concurrency: 4,
+        memory_mb: 64.0,
+        seed: 9,
+    };
+    let res = FleetConfig::from_source(
+        &TraceSource::Explicit(vec![spec]),
+        50.0,
+        0.0,
+        1,
+        PolicySpec::fixed(600.0),
+    )
+    .run();
+    assert_eq!(res.aggregate.total_requests, 2);
+    assert_eq!(res.aggregate.warm_requests, 1);
+}

@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Regenerate the miniature Azure-trace fixture in examples/traces/azure_sample/.
+
+The fixture follows the Azure Functions 2019 dataset layout (Shahrad et
+al., "Serverless in the Wild"): per-function invocations-per-minute,
+per-function duration percentiles (ms), and per-app memory percentiles —
+20 functions across 5 apps, deterministic (no RNG), with a mix of diurnal,
+cron-style, bursty, rare and hot invocation patterns so the streaming
+ingestion path sees every shape. Run from the repo root:
+
+    python3 scripts/make_azure_sample.py
+"""
+
+import hashlib
+import math
+import os
+
+OUT = os.path.join("examples", "traces", "azure_sample")
+MINUTES = 1440
+
+
+def h(name: str) -> str:
+    return hashlib.sha256(name.encode()).hexdigest()[:16]
+
+
+def diurnal(peak_min, amplitude, base):
+    return [
+        max(0, round(base + amplitude * (1 + math.sin(2 * math.pi * (m - peak_min + 360) / MINUTES)) / 2))
+        for m in range(MINUTES)
+    ]
+
+
+def cron(period_min, count):
+    return [count if m % period_min == 0 else 0 for m in range(MINUTES)]
+
+
+def bursty(period_min, burst):
+    return [burst if (m // period_min) % 4 == 0 and m % period_min < 3 else 0 for m in range(MINUTES)]
+
+
+def rare(times):
+    row = [0] * MINUTES
+    for t in times:
+        row[t] = 1
+    return row
+
+
+def steady(per_min):
+    return [per_min] * MINUTES
+
+
+APPS = [
+    ("owner-a", "app-analytics", 128, 10),
+    ("owner-a", "app-webshop", 256, 12),
+    ("owner-b", "app-etl", 512, 30),
+    ("owner-b", "app-chat", 192, 8),
+    ("owner-c", "app-batch", 384, 25),
+]
+
+# (app index, short name, trigger, counts, avg_ms, p50_ms, p99_ms)
+FUNCTIONS = [
+    (0, "pageview", "http", steady(8), 45, 30, 220),
+    (0, "clickstream", "event", diurnal(780, 12, 2), 80, 60, 500),
+    (0, "report-daily", "timer", cron(1440, 1), 2600, 2400, 9000),
+    (0, "sessionize", "queue", diurnal(800, 6, 1), 150, 120, 800),
+    (1, "checkout", "http", diurnal(1140, 10, 3), 320, 250, 2400),
+    (1, "cart-sync", "http", steady(5), 60, 45, 260),
+    (1, "thumbnail", "blob", bursty(15, 10), 900, 700, 4200),
+    (1, "email-receipt", "queue", diurnal(1150, 4, 1), 210, 160, 1100),
+    (1, "restock-check", "timer", cron(60, 2), 140, 110, 620),
+    (2, "ingest", "event", steady(30), 520, 400, 3800),
+    (2, "transform", "queue", steady(28), 1400, 1100, 8800),
+    (2, "compact", "timer", cron(360, 4), 5200, 4800, 21000),
+    (2, "validate", "queue", bursty(30, 25), 240, 180, 1500),
+    (3, "message-post", "http", diurnal(840, 16, 2), 35, 25, 180),
+    (3, "presence-ping", "http", steady(12), 12, 8, 90),
+    (3, "notify-push", "queue", diurnal(860, 8, 1), 95, 70, 450),
+    (4, "train-nightly", "timer", cron(1440, 1), 45000, 42000, 160000),
+    (4, "score-batch", "queue", bursty(120, 40), 2800, 2200, 12000),
+    (4, "cleanup", "timer", cron(720, 1), 800, 650, 3100),
+    (4, "audit-rare", "event", rare([123, 700, 1339]), 400, 320, 1900),
+]
+
+
+def main() -> None:
+    os.makedirs(OUT, exist_ok=True)
+
+    inv_header = "HashOwner,HashApp,HashFunction,Trigger," + ",".join(
+        str(m) for m in range(1, MINUTES + 1)
+    )
+    inv_rows = [inv_header]
+    dur_rows = [
+        "HashOwner,HashApp,HashFunction,Average,Count,Minimum,Maximum,"
+        "percentile_Average_0,percentile_Average_1,percentile_Average_25,"
+        "percentile_Average_50,percentile_Average_75,percentile_Average_99,"
+        "percentile_Average_100"
+    ]
+    mem_rows = ["HashOwner,HashApp,SampleCount,AverageAllocatedMb"]
+
+    for owner, app, mb, samples in APPS:
+        mem_rows.append(f"{h(owner)},{h(app)},{samples},{mb}")
+
+    for app_idx, name, trigger, counts, avg, p50, p99 in FUNCTIONS:
+        owner, app, _, _ = APPS[app_idx]
+        total = sum(counts)
+        p25 = round(p50 * 0.8)
+        p75 = round((p50 + p99) / 2 * 0.7)
+        lo = round(p50 * 0.5)
+        hi = round(p99 * 1.1)
+        inv_rows.append(
+            f"{h(owner)},{h(app)},{h(name)},{trigger}," + ",".join(str(c) for c in counts)
+        )
+        dur_rows.append(
+            f"{h(owner)},{h(app)},{h(name)},{avg},{total},{lo},{hi},"
+            f"{lo},{round(p50 * 0.6)},{p25},{p50},{p75},{p99},{hi}"
+        )
+
+    for fname, rows in [
+        ("invocations_per_function.csv", inv_rows),
+        ("function_durations_percentiles.csv", dur_rows),
+        ("app_memory_percentiles.csv", mem_rows),
+    ]:
+        path = os.path.join(OUT, fname)
+        with open(path, "w") as f:
+            f.write("\n".join(rows) + "\n")
+        print(f"wrote {path} ({len(rows) - 1} data rows)")
+
+
+if __name__ == "__main__":
+    main()
