@@ -12,7 +12,10 @@ use simfaas::fleet::{FleetConfig, FleetResults, PolicySpec};
 use simfaas::output::JsonValue;
 use simfaas::runtime::{Engine, PayloadKind};
 use simfaas::sim::ensemble::{run_ensemble, EnsembleOpts};
-use simfaas::sim::{Histogram, ParServerlessSimulator, Rng, ServerlessSimulator, SimConfig};
+use simfaas::sim::{
+    FaultProfile, Histogram, ParServerlessSimulator, RetryPolicy, Rng, ServerlessSimulator,
+    SimConfig,
+};
 use simfaas::workload::{AzureDataset, SyntheticTrace, TraceSource};
 
 /// arrival + departure per served request, plus expirations (~#instances).
@@ -156,6 +159,31 @@ fn main() {
         trace_res.per_function.len()
     );
     rates.set("trace_ingest_events_per_sec", eps_trace);
+
+    // --- fault-injection + retry-storm overhead ---
+    // The reliability layer's hot path: the same 500-function mix where
+    // 20% of dispatches fail and every failure re-enters through the
+    // exponential-backoff retry queue. Guards the enabled-path overhead
+    // (fault-lane RNG draws + retry scheduling); the cases above all run
+    // with the disabled profile, so they pin the zero-overhead contract.
+    let fault_cfg = fleet_cfg
+        .clone()
+        .with_fault(FaultProfile::disabled().with_failure_prob(0.2).with_timeout(30.0))
+        .with_retry(RetryPolicy::exponential(0.1, 5.0, 4));
+    let (res_fault, fault_res) =
+        harness::bench("fleet/faults_retry_storm", 3, || fault_cfg.run());
+    let fault_events =
+        fault_res.aggregate.total_requests * 2 + fault_res.aggregate.instances_expired;
+    let eps_fault = fault_events as f64 / res_fault.mean_s;
+    println!(
+        "  -> {:.2} M events/s under faults+retries ({} failures, {} retries)",
+        eps_fault / 1e6,
+        fault_res.aggregate.failed_requests,
+        fault_res.aggregate.retry_attempts
+    );
+    assert!(fault_res.aggregate.failed_requests > 0, "fault profile did not fire");
+    assert!(fault_res.aggregate.retry_attempts > 0, "retry layer did not fire");
+    rates.set("fault_events_per_sec", eps_fault);
 
     json.set("events_per_sec", rates);
     let path = std::env::var("SIMFAAS_BENCH_JSON")

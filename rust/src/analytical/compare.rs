@@ -146,6 +146,8 @@ mod tests {
             seed: 77,
             capture_request_log: false,
             sample_interval: 0.0,
+            fault: crate::sim::fault::FaultProfile::disabled(),
+            retry: crate::sim::retry::RetryPolicy::none(),
         }
     }
 

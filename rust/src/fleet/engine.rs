@@ -30,6 +30,8 @@ use super::policy::KeepAlivePolicy;
 use super::simulator::FunctionSpec;
 use crate::sim::core::{CoreParams, EngineCore, LifecycleHooks, Scheduler};
 use crate::sim::event::Event;
+use crate::sim::fault::FaultProfile;
+use crate::sim::retry::RetryPolicy;
 use crate::sim::process::Process;
 use crate::sim::results::SimResults;
 use crate::sim::rng::Rng;
@@ -195,6 +197,8 @@ impl FunctionEngine {
         skip_initial: f64,
         prewarm_lead: f64,
         horizon: f64,
+        fault: FaultProfile,
+        retry: RetryPolicy,
     ) -> Self {
         // One fresh ArrivalSource per engine per run: process sources get
         // replica state (the fleet analogue of `SimConfig::replica_with_seed`
@@ -214,6 +218,8 @@ impl FunctionEngine {
             concurrency_value: 1,
             prewarm_lead,
             instance_capacity: 64,
+            fault,
+            retry,
         });
         FunctionEngine { func, arrival, core, policy }
     }
@@ -221,10 +227,13 @@ impl FunctionEngine {
     /// Schedule this function's first arrival through the shared seam
     /// ([`EngineCore::schedule_next_arrival`] at t = 0). For process
     /// arrivals this consumes one draw — the same first draw
-    /// `ServerlessSimulator::run` makes before entering its loop.
+    /// `ServerlessSimulator::run` makes before entering its loop. Also
+    /// plants the fault profile's degradation timeline (a no-op — and no
+    /// scheduled events — when no windows are configured).
     pub(super) fn schedule_first_arrival(&mut self, queue: &mut FleetQueue) {
         let mut sched = FuncScheduler { queue, func: self.func };
         self.core.schedule_next_arrival(&mut sched, &mut self.arrival);
+        self.core.schedule_fault_timeline(&mut sched);
     }
 
     #[inline]
@@ -259,6 +268,17 @@ impl FunctionEngine {
             Event::ProvisioningDone(id) => {
                 self.core.handle_provisioning_done(&mut sched, &mut hooks, id)
             }
+            Event::RequestTimeout(id) => {
+                self.core.handle_request_timeout(&mut sched, &mut hooks, id)
+            }
+            Event::RetryArrival { attempt, prev_delay_bits } => self.core.handle_retry_arrival(
+                &mut sched,
+                &mut hooks,
+                attempt,
+                f64::from_bits(prev_delay_bits),
+            ),
+            Event::DegradationStart { window } => self.core.handle_degradation_start(window),
+            Event::DegradationEnd { window } => self.core.handle_degradation_end(window),
             Event::Horizon => unreachable!("the run loops terminate on Horizon"),
         }
     }

@@ -24,6 +24,8 @@ use super::policy::PolicySpec;
 use crate::cost::{estimate, CostEstimate, FunctionConfig, PricingTable};
 use crate::sim::ensemble::run_indexed;
 use crate::sim::event::Event;
+use crate::sim::fault::FaultProfile;
+use crate::sim::retry::RetryPolicy;
 use crate::sim::results::SimResults;
 use crate::sim::simulator::SimConfig;
 use crate::sim::time::SimTime;
@@ -56,6 +58,13 @@ pub struct FleetConfig {
     /// hybrid-histogram policy; fixed/stochastic policies predict nothing
     /// and behave as if disabled).
     pub prewarm_lead: f64,
+    /// Fault profile applied to every function (each engine draws from its
+    /// own seed-derived fault RNG lane, so the sharded thread-count
+    /// invariance holds). [`FaultProfile::disabled`] is bit-identical to
+    /// the fault-free engines.
+    pub fault: FaultProfile,
+    /// Retry policy clients apply to failed/timed-out/rejected requests.
+    pub retry: RetryPolicy,
 }
 
 impl FleetConfig {
@@ -76,6 +85,8 @@ impl FleetConfig {
             skip_initial: cfgs[0].skip_initial,
             threads: 0,
             prewarm_lead: 0.0,
+            fault: FaultProfile::disabled(),
+            retry: RetryPolicy::none(),
         }
     }
 
@@ -104,6 +115,8 @@ impl FleetConfig {
             skip_initial,
             threads: 0,
             prewarm_lead: 0.0,
+            fault: FaultProfile::disabled(),
+            retry: RetryPolicy::none(),
         }
     }
 
@@ -149,6 +162,18 @@ impl FleetConfig {
         self
     }
 
+    /// Apply a fault profile to every function in the fleet.
+    pub fn with_fault(mut self, fault: FaultProfile) -> Self {
+        self.fault = fault;
+        self
+    }
+
+    /// Apply a client retry policy to every function in the fleet.
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
     fn build_engine(&self, i: usize) -> FunctionEngine {
         FunctionEngine::new(
             i as u32,
@@ -157,6 +182,8 @@ impl FleetConfig {
             self.skip_initial,
             self.prewarm_lead,
             self.horizon,
+            self.fault.clone(),
+            self.retry.clone(),
         )
     }
 
@@ -258,6 +285,20 @@ pub struct FleetAggregate {
     pub prewarm_starts: u64,
     /// Total lifespan of prewarmed instances that expired unused.
     pub wasted_prewarm_seconds: f64,
+    /// Transient execution failures summed across the fleet.
+    pub failed_requests: u64,
+    /// Executions cut off at the fault profile's timeout, fleet-wide.
+    pub timeout_requests: u64,
+    /// Admitted cold starts whose provisioning failed, fleet-wide.
+    pub coldstart_failures: u64,
+    /// Retry re-arrivals across the fleet (included in `total_requests`).
+    pub retry_attempts: u64,
+    /// Failures that exhausted max-attempts or the retry budget.
+    pub retry_exhausted: u64,
+    /// Billed busy-seconds spent on failed/timed-out executions.
+    pub wasted_work_seconds: f64,
+    /// Fleet-wide successful responses per second of measured time.
+    pub goodput: f64,
 }
 
 impl FleetAggregate {
@@ -283,6 +324,12 @@ impl FleetAggregate {
         let mut life = 0.0;
         let mut prewarms = 0u64;
         let mut prewarm_waste = 0.0;
+        let mut failed = 0u64;
+        let mut timeouts = 0u64;
+        let mut cs_failures = 0u64;
+        let mut retries = 0u64;
+        let mut exhausted = 0u64;
+        let mut wasted_work = 0.0;
         for r in runs {
             total += r.total_requests;
             cold += r.cold_requests;
@@ -295,6 +342,12 @@ impl FleetAggregate {
             billed += r.billed_instance_seconds;
             prewarms += r.prewarm_starts;
             prewarm_waste += r.wasted_prewarm_seconds;
+            failed += r.failed_requests;
+            timeouts += r.timeout_requests;
+            cs_failures += r.coldstart_failures;
+            retries += r.retry_attempts;
+            exhausted += r.retry_exhausted;
+            wasted_work += r.wasted_work_seconds;
             let served = (r.cold_requests + r.warm_requests) as f64;
             if served > 0.0 {
                 resp_w += served;
@@ -339,7 +392,29 @@ impl FleetAggregate {
             },
             prewarm_starts: prewarms,
             wasted_prewarm_seconds: prewarm_waste,
+            failed_requests: failed,
+            timeout_requests: timeouts,
+            coldstart_failures: cs_failures,
+            retry_attempts: retries,
+            retry_exhausted: exhausted,
+            wasted_work_seconds: wasted_work,
+            goodput: if measured_time > 0.0 {
+                served.saturating_sub(failed + timeouts) as f64 / measured_time
+            } else {
+                0.0
+            },
         }
+    }
+
+    /// Fraction of fleet arrivals that got a successful response
+    /// (1.0 when nothing arrived).
+    pub fn success_rate(&self) -> f64 {
+        if self.total_requests == 0 {
+            return 1.0;
+        }
+        let ok = (self.cold_requests + self.warm_requests)
+            .saturating_sub(self.failed_requests + self.timeout_requests);
+        ok as f64 / self.total_requests as f64
     }
 
     /// Two-column fleet report in the Table-1 style.
@@ -364,6 +439,17 @@ impl FleetAggregate {
                 self.total_requests, self.cold_requests, self.warm_requests,
                 self.rejected_requests
             )),
+            ("*Success Rate", format!("{:.4} %", self.success_rate() * 100.0)),
+            ("*Goodput", format!("{:.4} req/s", self.goodput)),
+            ("Failures (transient/timeout/coldstart)", format!(
+                "{}/{}/{}",
+                self.failed_requests, self.timeout_requests, self.coldstart_failures
+            )),
+            ("Retries (attempts/exhausted)", format!(
+                "{}/{}",
+                self.retry_attempts, self.retry_exhausted
+            )),
+            ("Wasted Work", format!("{:.4} s", self.wasted_work_seconds)),
         ];
         let w = rows.iter().map(|(k, _)| k.len()).max().unwrap_or(0);
         let mut s = String::new();
@@ -567,6 +653,8 @@ mod tests {
                 skip_initial: 0.0,
                 threads: 1,
                 prewarm_lead: 0.0,
+                fault: FaultProfile::disabled(),
+                retry: RetryPolicy::none(),
             }
             .run()
         };
@@ -655,6 +743,8 @@ mod tests {
             skip_initial: 0.0,
             threads: 1,
             prewarm_lead: 0.0,
+            fault: FaultProfile::disabled(),
+            retry: RetryPolicy::none(),
         };
         let res = cfg.run();
         assert_eq!(res.aggregate.total_requests, 10);
@@ -690,6 +780,8 @@ mod tests {
             skip_initial: 0.0,
             threads: 1,
             prewarm_lead: 15.0,
+            fault: FaultProfile::disabled(),
+            retry: RetryPolicy::none(),
         };
         let plain = base.clone().with_prewarm_lead(0.0).run();
         let prewarmed = base.run();

@@ -62,6 +62,6 @@ pub use scenario::{
 };
 pub use workload::{AzureDataset, SyntheticTrace, TraceSource};
 pub use sim::{
-    run_ensemble, EnsembleOpts, EnsembleResults, Process, ServerlessSimulator,
-    ServerlessTemporalSimulator, SimConfig, SimProcess, SimResults,
+    run_ensemble, EnsembleOpts, EnsembleResults, FaultProfile, Process, RetryPolicy,
+    ServerlessSimulator, ServerlessTemporalSimulator, SimConfig, SimProcess, SimResults,
 };

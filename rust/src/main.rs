@@ -22,7 +22,7 @@ use simfaas::fleet::PolicyKind;
 use simfaas::output::{ascii_histogram, ascii_lines, Series, Table};
 use simfaas::scenario::{
     run_scenario_to_string, CostSpec, ExperimentSpec, FleetScenario, KeepAliveSpec,
-    OutputFormat, ProcessSpec, ScenarioSpec, SourceSpec,
+    OutputFormat, ProcessSpec, ReliabilitySpec, ScenarioSpec, SourceSpec,
 };
 use simfaas::sim::SimConfig;
 use simfaas::workload;
@@ -62,7 +62,7 @@ const COMMANDS: &[Cmd] = &[
     Cmd {
         name: "steady",
         summary: "steady-state simulation (Table 1)",
-        flags: "--rate --warm --cold --threshold --max-concurrency\n--horizon --skip --seed --json",
+        flags: "--rate --warm --cold --threshold --max-concurrency\n--horizon --skip --seed --json\n--failure-rate P --coldstart-failure-rate P --timeout S [--timeout-kills]\n--retry none|fixed:D[,N]|exponential:BASE,CAP[,N]",
         operands: 0,
         run: cmd_steady,
     },
@@ -83,7 +83,7 @@ const COMMANDS: &[Cmd] = &[
     Cmd {
         name: "fleet",
         summary: "multi-function fleet simulation (synthetic mix or real Azure trace)",
-        flags: "--functions N --horizon --skip --seed --threads\n--policy fixed|adaptive --threshold (fixed)\n--range --bin (adaptive) --fleet-cap (0 = none)\n--prewarm-lead S (adaptive head-arm prewarm; 0 = off)\n--trace-dir DIR (Azure Functions 2019 dataset CSVs)\n--trace-top-k K --trace-scale X (with --trace-dir)\n--provider --memory --top K --json\n[--compare-thresholds a,b,c  fixed grid vs adaptive sweep]",
+        flags: "--functions N --horizon --skip --seed --threads\n--policy fixed|adaptive --threshold (fixed)\n--range --bin (adaptive) --fleet-cap (0 = none)\n--prewarm-lead S (adaptive head-arm prewarm; 0 = off)\n--trace-dir DIR (Azure Functions 2019 dataset CSVs)\n--trace-top-k K --trace-scale X (with --trace-dir)\n--provider --memory --top K --json\n[--compare-thresholds a,b,c  fixed grid vs adaptive sweep]\n--failure-rate P --coldstart-failure-rate P --timeout S [--timeout-kills]\n--retry none|fixed:D[,N]|exponential:BASE,CAP[,N]",
         operands: 0,
         run: cmd_fleet,
     },
@@ -214,6 +214,41 @@ fn core_spec(args: &Args, name: &str) -> Result<ScenarioSpec> {
         .with_seed(args.get_u64("seed", 0x5EED)?))
 }
 
+/// Flags → the optional reliability axis (fault injection + retries),
+/// shared by `steady` and `fleet`. Returns `None` when no fault flag is
+/// given, keeping the spec — and therefore the run — bit-identical to the
+/// pre-fault CLI.
+fn reliability_from_args(args: &Args) -> Result<Option<ReliabilitySpec>> {
+    use simfaas::sim::{FaultProfile, RetryPolicy, TimeoutAction};
+    let failure = args.get_f64("failure-rate", 0.0)?;
+    let cs_failure = args.get_f64("coldstart-failure-rate", 0.0)?;
+    let timeout = args.get_f64("timeout", 0.0)?;
+    let timeout_kills = args.get_bool("timeout-kills");
+    let retry_spec = args.get("retry").map(str::to_string);
+    if failure == 0.0
+        && cs_failure == 0.0
+        && timeout == 0.0
+        && !timeout_kills
+        && retry_spec.is_none()
+    {
+        return Ok(None);
+    }
+    let mut fault = FaultProfile::disabled()
+        .with_failure_prob(failure)
+        .with_coldstart_failure_prob(cs_failure);
+    if timeout > 0.0 {
+        fault = fault.with_timeout(timeout);
+    }
+    if timeout_kills {
+        fault = fault.with_timeout_action(TimeoutAction::KillInstance);
+    }
+    let retry = match retry_spec {
+        None => RetryPolicy::none(),
+        Some(s) => RetryPolicy::parse(&s).context("--retry")?,
+    };
+    Ok(Some(ReliabilitySpec::new(fault, retry)))
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let path = args
         .positional(0)
@@ -242,6 +277,9 @@ fn cmd_run(args: &Args) -> Result<()> {
 
 fn cmd_steady(args: &Args) -> Result<()> {
     let mut spec = core_spec(args, "steady")?;
+    if let Some(rel) = reliability_from_args(args)? {
+        spec = spec.with_reliability(rel);
+    }
     if args.get_bool("json") {
         spec = spec.with_output(OutputFormat::Json);
     }
@@ -328,6 +366,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             slice: None,
             scale_rate: trace_scale,
         });
+    }
+    if let Some(rel) = reliability_from_args(args)? {
+        spec = spec.with_reliability(rel);
     }
     if json_out && !comparison {
         spec = spec.with_output(OutputFormat::Json);

@@ -543,7 +543,15 @@ pub fn results_to_json(r: &crate::sim::SimResults) -> JsonValue {
         .set("observed_arrival_rate", r.observed_arrival_rate)
         .set("instance_count_pmf", r.instance_count_pmf.clone())
         .set("prewarm_starts", r.prewarm_starts)
-        .set("wasted_prewarm_seconds", r.wasted_prewarm_seconds);
+        .set("wasted_prewarm_seconds", r.wasted_prewarm_seconds)
+        .set("failed_requests", r.failed_requests)
+        .set("timeout_requests", r.timeout_requests)
+        .set("coldstart_failures", r.coldstart_failures)
+        .set("retry_attempts", r.retry_attempts)
+        .set("retry_exhausted", r.retry_exhausted)
+        .set("wasted_work_seconds", r.wasted_work_seconds)
+        .set("success_rate", r.success_rate())
+        .set("goodput", r.goodput);
     o
 }
 
@@ -575,7 +583,15 @@ pub fn fleet_to_json(
         .set("billed_instance_seconds", a.billed_instance_seconds)
         .set("observed_arrival_rate", a.observed_arrival_rate)
         .set("prewarm_starts", a.prewarm_starts)
-        .set("wasted_prewarm_seconds", a.wasted_prewarm_seconds);
+        .set("wasted_prewarm_seconds", a.wasted_prewarm_seconds)
+        .set("failed_requests", a.failed_requests)
+        .set("timeout_requests", a.timeout_requests)
+        .set("coldstart_failures", a.coldstart_failures)
+        .set("retry_attempts", a.retry_attempts)
+        .set("retry_exhausted", a.retry_exhausted)
+        .set("wasted_work_seconds", a.wasted_work_seconds)
+        .set("success_rate", a.success_rate())
+        .set("goodput", a.goodput);
 
     let functions: Vec<JsonValue> = results
         .names
@@ -646,6 +662,8 @@ mod tests {
         assert!(j.contains("\"cold_start_prob\""));
         assert!(j.contains("\"cost\":{"));
         assert!(j.contains("\"developer_total\""));
+        assert!(j.contains("\"retry_attempts\""));
+        assert!(j.contains("\"success_rate\""));
     }
 
     #[test]
@@ -781,5 +799,7 @@ mod tests {
         let j = results_to_json(&r).to_string();
         assert!(j.contains("\"cold_start_prob\""));
         assert!(j.contains("\"instance_count_pmf\":["));
+        assert!(j.contains("\"failed_requests\""));
+        assert!(j.contains("\"goodput\""));
     }
 }

@@ -9,10 +9,12 @@
 
 use super::spec::{
     CostSpec, ExperimentSpec, FleetScenario, KeepAliveSpec, OutputFormat, OutputSpec,
-    PlatformSpec, ProcessSpec, RunSpec, ScenarioSpec, SourceSpec, WorkloadSpec,
+    PlatformSpec, ProcessSpec, ReliabilitySpec, RunSpec, ScenarioSpec, SourceSpec, WorkloadSpec,
 };
 use crate::cost::Provider;
 use crate::fleet::PolicyKind;
+use crate::sim::fault::{DegradationWindow, FaultProfile, TimeoutAction};
+use crate::sim::retry::{Backoff, RetryPolicy};
 use crate::output::json::JsonValue;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -376,6 +378,163 @@ fn policy_from_json(v: &JsonValue, what: &str) -> Result<KeepAliveSpec> {
     })
 }
 
+// ------------------------------------------------------------- reliability
+
+fn fault_to_json(f: &FaultProfile) -> JsonValue {
+    let mut o = JsonValue::object();
+    if f.invocation_failure_prob != 0.0 {
+        o.set("failure_prob", f.invocation_failure_prob);
+    }
+    if f.coldstart_failure_prob != 0.0 {
+        o.set("coldstart_failure_prob", f.coldstart_failure_prob);
+    }
+    if let Some(t) = f.timeout {
+        o.set("timeout", t);
+    }
+    if f.timeout_action == TimeoutAction::KillInstance {
+        o.set("timeout_kills", true);
+    }
+    if !f.degradation.is_empty() {
+        o.set(
+            "degradation",
+            JsonValue::Array(
+                f.degradation
+                    .iter()
+                    .map(|w| {
+                        let mut wo = JsonValue::object();
+                        wo.set("start", w.start)
+                            .set("end", w.end)
+                            .set("capacity_factor", w.capacity_factor);
+                        wo
+                    })
+                    .collect(),
+            ),
+        );
+    }
+    o
+}
+
+fn fault_from_json(v: &JsonValue, what: &str) -> Result<FaultProfile> {
+    let o = as_obj(v, what)?;
+    check_keys(
+        o,
+        &["failure_prob", "coldstart_failure_prob", "timeout", "timeout_kills", "degradation"],
+        what,
+    )?;
+    let mut f = FaultProfile::disabled();
+    f.invocation_failure_prob = f64_field(o, "failure_prob", what, 0.0)?;
+    f.coldstart_failure_prob = f64_field(o, "coldstart_failure_prob", what, 0.0)?;
+    f.timeout = match o.get("timeout") {
+        None => None,
+        Some(t) => Some(t.as_f64().with_context(|| format!("{what}.timeout must be a number"))?),
+    };
+    f.timeout_action = if bool_field(o, "timeout_kills", what, false)? {
+        TimeoutAction::KillInstance
+    } else {
+        TimeoutAction::KeepInstance
+    };
+    if let Some(dv) = o.get("degradation") {
+        let windows = dv
+            .as_array()
+            .with_context(|| format!("{what}.degradation must be an array of windows"))?;
+        for (i, wv) in windows.iter().enumerate() {
+            let ww = format!("{what}.degradation[{i}]");
+            let w = as_obj(wv, &ww)?;
+            check_keys(w, &["start", "end", "capacity_factor"], &ww)?;
+            f.degradation.push(DegradationWindow {
+                start: req_f64(w, "start", &ww)?,
+                end: req_f64(w, "end", &ww)?,
+                capacity_factor: req_f64(w, "capacity_factor", &ww)?,
+            });
+        }
+    }
+    Ok(f)
+}
+
+fn retry_to_json(r: &RetryPolicy) -> JsonValue {
+    let mut o = JsonValue::object();
+    match &r.backoff {
+        Backoff::None => {
+            o.set("type", "none");
+        }
+        Backoff::Fixed { delay } => {
+            o.set("type", "fixed").set("delay", *delay);
+        }
+        Backoff::Exponential { base, cap } => {
+            o.set("type", "exponential").set("base", *base).set("cap", *cap);
+        }
+    }
+    o.set("max_attempts", r.max_attempts as u64);
+    if let Some(b) = r.budget {
+        o.set("budget", b);
+    }
+    o
+}
+
+/// Reader: either the structured object the writer emits, or the CLI's
+/// compact string form (`"exponential:0.1,5,4"`) via [`RetryPolicy::parse`].
+fn retry_from_json(v: &JsonValue, what: &str) -> Result<RetryPolicy> {
+    if let Some(s) = v.as_str() {
+        return RetryPolicy::parse(s).with_context(|| what.to_string());
+    }
+    let o = as_obj(v, what)?;
+    let tag = str_field(o, "type", what)?;
+    let backoff = match tag {
+        "none" => {
+            check_keys(o, &["type", "max_attempts", "budget"], what)?;
+            Backoff::None
+        }
+        "fixed" => {
+            check_keys(o, &["type", "delay", "max_attempts", "budget"], what)?;
+            Backoff::Fixed { delay: req_f64(o, "delay", what)? }
+        }
+        "exponential" | "exp" => {
+            check_keys(o, &["type", "base", "cap", "max_attempts", "budget"], what)?;
+            Backoff::Exponential { base: req_f64(o, "base", what)?, cap: req_f64(o, "cap", what)? }
+        }
+        other => bail!("{what}.type: unknown retry backoff {other:?} (expected none|fixed|exponential)"),
+    };
+    let default_attempts = if tag == "none" { 1 } else { 3 };
+    Ok(RetryPolicy {
+        backoff,
+        max_attempts: u64_field(o, "max_attempts", what, default_attempts)? as u32,
+        budget: match o.get("budget") {
+            None => None,
+            Some(b) => Some(
+                b.as_u64()
+                    .with_context(|| format!("{what}.budget must be a non-negative integer"))?,
+            ),
+        },
+    })
+}
+
+fn reliability_to_json(r: &ReliabilitySpec) -> JsonValue {
+    let mut o = JsonValue::object();
+    if r.fault != FaultProfile::disabled() {
+        o.set("fault", fault_to_json(&r.fault));
+    }
+    if r.retry != RetryPolicy::none() {
+        o.set("retry", retry_to_json(&r.retry));
+    }
+    o
+}
+
+fn reliability_from_json(v: &JsonValue) -> Result<ReliabilitySpec> {
+    let what = "reliability";
+    let o = as_obj(v, what)?;
+    check_keys(o, &["fault", "retry"], what)?;
+    Ok(ReliabilitySpec {
+        fault: match o.get("fault") {
+            None => FaultProfile::disabled(),
+            Some(fv) => fault_from_json(fv, "reliability.fault")?,
+        },
+        retry: match o.get("retry") {
+            None => RetryPolicy::none(),
+            Some(rv) => retry_from_json(rv, "reliability.retry")?,
+        },
+    })
+}
+
 // -------------------------------------------------------------- experiment
 
 fn experiment_to_json(e: &ExperimentSpec) -> JsonValue {
@@ -565,6 +724,9 @@ impl ScenarioSpec {
             }
             o.set("cost", cj);
         }
+        if let Some(r) = &self.reliability {
+            o.set("reliability", reliability_to_json(r));
+        }
         let mut out = JsonValue::object();
         out.set(
             "format",
@@ -589,7 +751,7 @@ impl ScenarioSpec {
         let o = as_obj(v, "scenario")?;
         check_keys(
             o,
-            &["name", "workload", "platform", "run", "experiment", "cost", "output"],
+            &["name", "workload", "platform", "run", "experiment", "cost", "reliability", "output"],
             "scenario",
         )?;
         let name = str_field(o, "name", "scenario")?.to_string();
@@ -719,6 +881,11 @@ impl ScenarioSpec {
             }
         };
 
+        let reliability = match o.get("reliability") {
+            None => None,
+            Some(rv) => Some(reliability_from_json(rv)?),
+        };
+
         let output = match o.get("output") {
             None => OutputSpec::default(),
             Some(ov) => {
@@ -738,7 +905,7 @@ impl ScenarioSpec {
             }
         };
 
-        Ok(ScenarioSpec { name, workload, platform, run, experiment, cost, output })
+        Ok(ScenarioSpec { name, workload, platform, run, experiment, cost, reliability, output })
     }
 
     /// Parse JSON text into a spec (reader for `simfaas run` files).
@@ -874,6 +1041,57 @@ mod tests {
             .unwrap_err()
         );
         assert!(err.contains("unknown key") && err.contains("topk"), "{err}");
+    }
+
+    #[test]
+    fn reliability_axis_roundtrips_and_rejects_unknowns() {
+        // Rich profile: every fault knob plus budgeted exponential retry.
+        roundtrip(&ScenarioSpec::new("faults").with_reliability(ReliabilitySpec::new(
+            FaultProfile::disabled()
+                .with_failure_prob(0.05)
+                .with_coldstart_failure_prob(0.01)
+                .with_timeout(30.0)
+                .with_timeout_action(TimeoutAction::KillInstance)
+                .with_degradation(100.0, 200.0, 0.5),
+            RetryPolicy::exponential(0.1, 5.0, 4).with_budget(100),
+        )));
+        roundtrip(
+            &ScenarioSpec::new("fleet-faults")
+                .with_experiment(ExperimentSpec::Fleet(FleetScenario::new(4)))
+                .with_reliability(ReliabilitySpec::new(
+                    FaultProfile::disabled().with_failure_prob(0.02),
+                    RetryPolicy::fixed(1.0, 3),
+                )),
+        );
+        // A disabled axis stays implicit field-by-field: empty object.
+        let spec = ScenarioSpec::new("noop").with_reliability(ReliabilitySpec::default());
+        let text = spec.to_json_string();
+        assert!(text.contains("\"reliability\":{}"), "{text}");
+        roundtrip(&spec);
+        // The CLI's compact string form is accepted for retry.
+        let spec = ScenarioSpec::from_json_str(
+            r#"{"name":"s","experiment":{"type":"steady"},"reliability":{"retry":"exponential:0.1,5,4"}}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.reliability.unwrap().retry, RetryPolicy::exponential(0.1, 5.0, 4));
+        // Unknown keys are errors with the path named.
+        let err = format!(
+            "{:#}",
+            ScenarioSpec::from_json_str(
+                r#"{"name":"x","experiment":{"type":"steady"},"reliability":{"fault":{"failure_rate":0.1}}}"#,
+            )
+            .unwrap_err()
+        );
+        assert!(err.contains("unknown key") && err.contains("failure_rate"), "{err}");
+        // Unknown retry backoff lists the accepted set.
+        let err = format!(
+            "{:#}",
+            ScenarioSpec::from_json_str(
+                r#"{"name":"x","experiment":{"type":"steady"},"reliability":{"retry":{"type":"cubic"}}}"#,
+            )
+            .unwrap_err()
+        );
+        assert!(err.contains("none|fixed|exponential"), "{err}");
     }
 
     #[test]

@@ -44,5 +44,6 @@ pub mod spec;
 pub use run::{run_scenario, run_scenario_to_string, CostBlock, ScenarioReport};
 pub use spec::{
     CostSpec, ExperimentSpec, FleetScenario, KeepAliveSpec, OutputFormat, OutputSpec,
-    PlatformSpec, ProcessSpec, RunSpec, ScenarioSpec, SourceSpec, WorkloadSpec, DEFAULT_SEED,
+    PlatformSpec, ProcessSpec, ReliabilitySpec, RunSpec, ScenarioSpec, SourceSpec, WorkloadSpec,
+    DEFAULT_SEED,
 };

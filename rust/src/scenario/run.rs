@@ -168,6 +168,10 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport> {
             cfg.threads = f.threads;
             cfg.fleet_max_concurrency = f.fleet_cap;
             cfg.prewarm_lead = f.prewarm_lead;
+            if let Some(r) = &spec.reliability {
+                cfg.fault = r.fault.clone();
+                cfg.retry = r.retry.clone();
+            }
             if matches!(source, TraceSource::Synthetic(_)) {
                 // The synthetic mix bills every function at the spec's
                 // memory; ingested functions keep their dataset memory.
@@ -1035,6 +1039,56 @@ mod tests {
             )
             .unwrap();
             assert!(line.starts_with('{') && line.ends_with("}\n"), "{line}");
+        }
+    }
+
+    /// The reliability axis reaches both engines: faults surface in the
+    /// steady results and the fleet aggregate, and a disabled axis is
+    /// bit-identical to no axis at all.
+    #[test]
+    fn reliability_axis_reaches_steady_and_fleet_engines() {
+        use crate::scenario::spec::ReliabilitySpec;
+        use crate::sim::fault::FaultProfile;
+        use crate::sim::retry::RetryPolicy;
+        let rel = ReliabilitySpec::new(
+            FaultProfile::disabled().with_failure_prob(0.2),
+            RetryPolicy::exponential(0.05, 2.0, 3),
+        );
+        let steady = ScenarioSpec::new("s")
+            .with_horizon(5_000.0)
+            .with_seed(11)
+            .with_reliability(rel.clone());
+        match run_scenario(&steady).unwrap() {
+            ScenarioReport::Steady { results, .. } => {
+                assert!(results.failed_requests > 0);
+                assert!(results.retry_attempts > 0);
+            }
+            _ => panic!("wrong report kind"),
+        }
+        let fleet = ScenarioSpec::new("f")
+            .with_horizon(1_500.0)
+            .with_skip_initial(0.0)
+            .with_seed(3)
+            .with_experiment(ExperimentSpec::Fleet(FleetScenario::new(4)))
+            .with_reliability(rel);
+        match run_scenario(&fleet).unwrap() {
+            ScenarioReport::Fleet { results, .. } => {
+                assert!(results.aggregate.failed_requests > 0);
+                assert!(results.aggregate.retry_attempts > 0);
+            }
+            _ => panic!("wrong report kind"),
+        }
+        let plain = ScenarioSpec::new("p").with_horizon(5_000.0).with_seed(11);
+        let noop = plain.clone().with_reliability(ReliabilitySpec::default());
+        match (run_scenario(&plain).unwrap(), run_scenario(&noop).unwrap()) {
+            (
+                ScenarioReport::Steady { results: a, .. },
+                ScenarioReport::Steady { results: b, .. },
+            ) => {
+                assert_results_bit_identical(&a, &b);
+                assert_eq!(a.failed_requests, 0);
+            }
+            _ => panic!("wrong report kinds"),
         }
     }
 

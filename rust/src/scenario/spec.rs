@@ -16,9 +16,11 @@
 use crate::cost::Provider;
 use crate::fleet::PolicySpec;
 use crate::figures::{COLD_MEAN, WARM_MEAN};
+use crate::sim::fault::FaultProfile;
 use crate::sim::process::{
     GammaProcess, LogNormalProcess, ParetoProcess, Process, WeibullProcess,
 };
+use crate::sim::retry::RetryPolicy;
 use crate::sim::simulator::SimConfig;
 use anyhow::{bail, Result};
 
@@ -443,6 +445,34 @@ impl CostSpec {
     }
 }
 
+/// The reliability axis: fault injection plus the client retry policy
+/// (see [`crate::sim::fault`] and [`crate::sim::retry`]). Consumed by the
+/// steady and fleet experiments; the default is fully disabled and
+/// bit-identical to a spec without the axis.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ReliabilitySpec {
+    /// Failure probabilities, execution timeout, degradation windows.
+    pub fault: FaultProfile,
+    /// How clients re-submit failed / timed-out / rejected requests.
+    pub retry: RetryPolicy,
+}
+
+impl ReliabilitySpec {
+    pub fn new(fault: FaultProfile, retry: RetryPolicy) -> Self {
+        ReliabilitySpec { fault, retry }
+    }
+
+    /// True when both halves are inert (the bit-identity default).
+    pub fn is_disabled(&self) -> bool {
+        self.fault.is_disabled() && self.retry.is_none()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.fault.validate("reliability.fault")?;
+        self.retry.validate("reliability.retry")
+    }
+}
+
 /// How the report renders.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum OutputFormat {
@@ -471,6 +501,8 @@ pub struct ScenarioSpec {
     pub run: RunSpec,
     pub experiment: ExperimentSpec,
     pub cost: Option<CostSpec>,
+    /// Optional fault-injection + retry axis (steady and fleet runs).
+    pub reliability: Option<ReliabilitySpec>,
     pub output: OutputSpec,
 }
 
@@ -484,6 +516,7 @@ impl ScenarioSpec {
             run: RunSpec::default(),
             experiment: ExperimentSpec::Steady,
             cost: None,
+            reliability: None,
             output: OutputSpec::default(),
         }
     }
@@ -570,6 +603,12 @@ impl ScenarioSpec {
         self
     }
 
+    /// Attach the fault-injection + retry axis.
+    pub fn with_reliability(mut self, reliability: ReliabilitySpec) -> Self {
+        self.reliability = Some(reliability);
+        self
+    }
+
     pub fn with_output(mut self, format: OutputFormat) -> Self {
         self.output.format = format;
         self
@@ -592,6 +631,16 @@ impl ScenarioSpec {
             seed: self.run.seed,
             capture_request_log: false,
             sample_interval: 0.0,
+            fault: self
+                .reliability
+                .as_ref()
+                .map(|r| r.fault.clone())
+                .unwrap_or_default(),
+            retry: self
+                .reliability
+                .as_ref()
+                .map(|r| r.retry.clone())
+                .unwrap_or_default(),
         }
     }
 
@@ -736,6 +785,22 @@ impl ScenarioSpec {
                     );
                 }
             }
+        }
+        if let Some(r) = &self.reliability {
+            // The reliability axis feeds the steady and fleet engines;
+            // silently ignoring it elsewhere would defeat the typo
+            // protection the spec promises.
+            if !matches!(
+                self.experiment,
+                ExperimentSpec::Steady | ExperimentSpec::Fleet(_)
+            ) {
+                bail!(
+                    "reliability: the {} experiment does not inject faults \
+                     (the reliability axis applies to steady and fleet)",
+                    self.experiment.kind()
+                );
+            }
+            r.validate()?;
         }
         if let Some(c) = &self.cost {
             // Only steady and fleet runs are priced; silently ignoring the
@@ -991,6 +1056,52 @@ mod tests {
             Some(SourceSpec::AzureDataset { dir, .. }) => assert_eq!(dir, "/data/azure"),
             _ => unreachable!(),
         }
+    }
+
+    #[test]
+    fn reliability_axis_restricted_and_validated() {
+        let armed = ReliabilitySpec::new(
+            FaultProfile::disabled().with_failure_prob(0.05).with_timeout(30.0),
+            RetryPolicy::exponential(0.1, 5.0, 3),
+        );
+        assert!(!armed.is_disabled());
+        assert!(ReliabilitySpec::default().is_disabled());
+        // Steady and fleet accept the axis...
+        ScenarioSpec::new("x").with_reliability(armed.clone()).validate().unwrap();
+        ScenarioSpec::new("x")
+            .with_experiment(ExperimentSpec::Fleet(FleetScenario::new(2)))
+            .with_reliability(armed.clone())
+            .validate()
+            .unwrap();
+        // ...everything else rejects it instead of silently ignoring it.
+        for experiment in [
+            ExperimentSpec::temporal(2),
+            ExperimentSpec::ensemble(2),
+            ExperimentSpec::Sweep { rates: vec![0.5], thresholds: vec![600.0] },
+            ExperimentSpec::Compare { service_mean: 2.0, markovian_expiration: false },
+        ] {
+            let bad = ScenarioSpec::new("x")
+                .with_experiment(experiment.clone())
+                .with_reliability(armed.clone());
+            let err = bad.validate().unwrap_err().to_string();
+            assert!(err.contains("reliability"), "{experiment:?}: {err}");
+        }
+        // Bad parameters surface with the axis path named: a timeout <= 0
+        // and a zero-attempt retry are both spec errors, not panics.
+        let bad = ScenarioSpec::new("x").with_reliability(ReliabilitySpec::new(
+            FaultProfile::disabled().with_timeout(0.0),
+            RetryPolicy::none(),
+        ));
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("reliability.fault") && err.contains("timeout"), "{err}");
+        let zero_attempts =
+            RetryPolicy { max_attempts: 0, ..RetryPolicy::fixed(1.0, 3) };
+        let bad = ScenarioSpec::new("x").with_reliability(ReliabilitySpec::new(
+            FaultProfile::disabled(),
+            zero_attempts,
+        ));
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("reliability.retry"), "{err}");
     }
 
     #[test]

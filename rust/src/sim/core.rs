@@ -43,15 +43,32 @@
 //! are neither running nor billed; a prewarmed instance that expires
 //! without serving a single request adds its whole lifespan to
 //! `wasted_prewarm_seconds`.
+//!
+//! **Reliability layer (fault injection + retries).** The core also
+//! interprets a [`FaultProfile`] and [`RetryPolicy`] pair behind the same
+//! seams (DESIGN.md §Reliability): fault outcomes are resolved at dispatch
+//! time (the busy period is known then), timed-out executions become
+//! [`Event::RequestTimeout`] / truncated departures, failed requests
+//! re-enter as [`Event::RetryArrival`] after a backoff delay, and
+//! scheduled degradation windows shrink the effective concurrency cap via
+//! [`Event::DegradationStart`]/[`Event::DegradationEnd`]. Every fault and
+//! jitter decision draws from a **dedicated RNG lane** (the engine seed
+//! run through one extra SplitMix64 scramble with a fixed salt), and only
+//! when the specific mechanism can fire — so a
+//! [`FaultProfile::disabled`]+[`RetryPolicy::none`] core draws nothing and
+//! is bit-identical to the pre-fault engines (pinned in
+//! `tests/engine_unification.rs`).
 #![warn(missing_docs)]
 
 use super::event::{Event, EventQueue};
+use super::fault::{FaultProfile, TimeoutAction};
 use super::hist::CountDistribution;
 use super::instance::{FunctionInstance, InstanceId, InstanceState};
 use super::metrics::{OnlineStats, P2Quantile, TimeWeighted};
 use super::process::Process;
 use super::results::SimResults;
-use super::rng::Rng;
+use super::retry::RetryPolicy;
+use super::rng::{Rng, SplitMix64};
 use super::time::SimTime;
 use crate::workload::stream::ArrivalSource;
 use std::collections::BTreeMap;
@@ -66,6 +83,19 @@ pub enum RequestOutcome {
     Warm,
     /// Rejected at the maximum concurrency level (or the fleet gate).
     Rejected,
+}
+
+/// Fault outcome of one dispatched request, resolved at dispatch time
+/// (the busy period is known then, so the whole completion — including a
+/// truncation at the timeout — can be scheduled immediately).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Verdict {
+    /// The execution completes normally.
+    Success,
+    /// The execution runs to completion but returns a transient error.
+    Fail,
+    /// The execution exceeds the profile's timeout and is cut off.
+    Timeout,
 }
 
 /// Destination for scheduled events. The core never owns the future event
@@ -320,6 +350,12 @@ pub struct CoreParams {
     /// Pre-reserved capacity of the instance table (profiling-driven; see
     /// DESIGN.md §Perf).
     pub instance_capacity: usize,
+    /// Fault-injection profile ([`FaultProfile::disabled`] = the
+    /// pre-fault engines, bit-identical).
+    pub fault: FaultProfile,
+    /// Retry policy for failed / timed-out requests
+    /// ([`RetryPolicy::none`] = every failure is final).
+    pub retry: RetryPolicy,
 }
 
 /// The shared lifecycle engine: instance pool, warm routing, level
@@ -356,6 +392,25 @@ pub struct EngineCore {
     /// pre-unification engine documented in DESIGN.md §Perf.
     track_busy_instances: bool,
 
+    // ------------------------ reliability layer (DESIGN.md §Reliability)
+    fault: FaultProfile,
+    retry: RetryPolicy,
+    /// Dedicated RNG lane for fault and backoff-jitter draws; never
+    /// touched on the legacy paths, so the arrival/service streams are
+    /// bit-identical with faults disabled.
+    fault_rng: Rng,
+    /// Cached `!fault.is_disabled()` — one branch on the dispatch hot
+    /// path.
+    faults_enabled: bool,
+    /// Remaining run-wide retry budget (`None` = unbounded).
+    retry_budget_left: Option<u64>,
+    /// Active flags per degradation window (index-aligned with
+    /// `fault.degradation`).
+    degradation_active: Vec<bool>,
+    /// Concurrency cap after degradation: `floor(max * min active
+    /// factor)`; equals `max_concurrency` outside every window.
+    effective_max_concurrency: usize,
+
     // -------- statistics (reset at the end of the warm-up skip) ----------
     stats_started: bool,
     stats_start: SimTime,
@@ -367,6 +422,12 @@ pub struct EngineCore {
     instances_expired: u64,
     prewarm_starts: u64,
     wasted_prewarm_seconds: f64,
+    failed_requests: u64,
+    timeout_requests: u64,
+    coldstart_failures: u64,
+    retry_attempts: u64,
+    retry_exhausted: u64,
+    wasted_work_seconds: f64,
     server_count_tw: TimeWeighted,
     /// Time-weighted in-flight request count (the billing-relevant
     /// "running" level; equals the busy-instance count at concurrency 1).
@@ -385,12 +446,26 @@ pub struct EngineCore {
     billed_seconds: f64,
 }
 
+/// Salt XORed into the engine seed before the extra SplitMix64 scramble
+/// that seeds the fault RNG lane, decorrelating it from the main stream
+/// (which is seeded from the raw seed).
+const FAULT_LANE_SALT: u64 = 0x5EED_FA17_0B5E_55ED;
+
 impl EngineCore {
     /// Build a core at simulation time zero.
     pub fn new(p: CoreParams) -> EngineCore {
         let start = SimTime::ZERO;
+        let degradation_active = vec![false; p.fault.degradation.len()];
+        let retry_budget_left = p.retry.budget;
         EngineCore {
             rng: Rng::new(p.seed),
+            fault_rng: Rng::new(SplitMix64::new(p.seed ^ FAULT_LANE_SALT).next_u64()),
+            faults_enabled: !p.fault.is_disabled(),
+            effective_max_concurrency: p.max_concurrency,
+            degradation_active,
+            retry_budget_left,
+            fault: p.fault,
+            retry: p.retry,
             now: start,
             instances: Vec::with_capacity(p.instance_capacity),
             router: Router::new(p.concurrency_value),
@@ -414,6 +489,12 @@ impl EngineCore {
             instances_expired: 0,
             prewarm_starts: 0,
             wasted_prewarm_seconds: 0.0,
+            failed_requests: 0,
+            timeout_requests: 0,
+            coldstart_failures: 0,
+            retry_attempts: 0,
+            retry_exhausted: 0,
+            wasted_work_seconds: 0.0,
             server_count_tw: TimeWeighted::new(start, 0.0),
             running_tw: TimeWeighted::new(start, 0.0),
             busy_inst_tw: TimeWeighted::new(start, 0.0),
@@ -557,7 +638,7 @@ impl EngineCore {
         };
         let (live0, flight0) = (self.live_count, self.in_flight);
         for _ in 0..batch {
-            self.route_one_request(sched, hooks);
+            self.route_one_request(sched, hooks, 1, 0.0);
         }
         // Lazy sync: a fully-rejected epoch changes no level, so skip the
         // accumulator updates entirely (they stay correct because the
@@ -584,8 +665,17 @@ impl EngineCore {
         }
     }
 
-    /// Route a single request at the current instant.
-    fn route_one_request<S: Scheduler, H: LifecycleHooks>(&mut self, sched: &mut S, hooks: &mut H) {
+    /// Route a single request at the current instant. `attempt` is the
+    /// dispatch attempt number (1 for fresh arrivals) and `prev_delay` the
+    /// previous backoff delay (the decorrelated-jitter state) — both are
+    /// only consulted when the fault layer is active.
+    fn route_one_request<S: Scheduler, H: LifecycleHooks>(
+        &mut self,
+        sched: &mut S,
+        hooks: &mut H,
+        attempt: u32,
+        prev_delay: f64,
+    ) {
         if self.stats_started {
             self.total_requests += 1;
         }
@@ -602,13 +692,32 @@ impl EngineCore {
             }
             self.in_flight += 1;
             let service = self.warm_service.sample(&mut self.rng);
-            sched.schedule(self.now.after(service), Event::Departure(id));
+            let (busy, verdict) = self.fault_verdict(service);
+            self.schedule_completion(sched, id, busy, verdict);
             if self.stats_started {
                 self.warm_requests += 1;
-                self.record_response(service, false);
-                hooks.on_request(now_s, RequestOutcome::Warm, service, Some(id));
+                self.count_verdict(verdict, busy);
+                self.record_response(busy, false);
+                hooks.on_request(now_s, RequestOutcome::Warm, busy, Some(id));
             }
-        } else if self.live_count < self.max_concurrency && hooks.admit_cold() {
+            if verdict != Verdict::Success {
+                self.schedule_retry(sched, attempt, prev_delay, self.now.after(busy));
+            }
+        } else if self.live_count < self.effective_max_concurrency && hooks.admit_cold() {
+            // Provisioning (cold-start) failures resolve before any
+            // instance materializes — and before the main-RNG cold service
+            // draw, so the legacy stream stays untouched for the requests
+            // that do dispatch.
+            if self.faults_enabled
+                && self.fault.coldstart_failure_prob > 0.0
+                && self.fault_rng.uniform() < self.fault.coldstart_failure_prob
+            {
+                if self.stats_started {
+                    self.coldstart_failures += 1;
+                }
+                self.schedule_retry(sched, attempt, prev_delay, self.now);
+                return;
+            }
             // Cold start: admitted by both the engine's concurrency limit
             // and the hooks' shared gate; its busy period is one draw of
             // the cold service process (provisioning + service).
@@ -623,21 +732,240 @@ impl EngineCore {
                 self.instances_created += 1;
             }
             let service = self.cold_service.sample(&mut self.rng);
-            sched.schedule(self.now.after(service), Event::Departure(id));
+            let (busy, verdict) = self.fault_verdict(service);
+            self.schedule_completion(sched, id, busy, verdict);
             if self.stats_started {
                 self.cold_requests += 1;
-                self.record_response(service, true);
-                hooks.on_request(now_s, RequestOutcome::Cold, service, Some(id));
+                self.count_verdict(verdict, busy);
+                self.record_response(busy, true);
+                hooks.on_request(now_s, RequestOutcome::Cold, busy, Some(id));
             }
-        } else if self.stats_started {
-            // Concurrency level reached and nothing warm: reject.
-            self.rejected_requests += 1;
-            if self.live_count < self.max_concurrency {
-                // Only the shared gate blocked this request.
-                hooks.on_gate_only_rejection();
+            if verdict != Verdict::Success {
+                self.schedule_retry(sched, attempt, prev_delay, self.now.after(busy));
             }
-            hooks.on_request(now_s, RequestOutcome::Rejected, 0.0, None);
+        } else {
+            if self.stats_started {
+                // Concurrency level reached and nothing warm: reject.
+                self.rejected_requests += 1;
+                if self.live_count < self.effective_max_concurrency {
+                    // Only the shared gate blocked this request.
+                    hooks.on_gate_only_rejection();
+                }
+                hooks.on_request(now_s, RequestOutcome::Rejected, 0.0, None);
+            }
+            // Degradation-window rejections retry like any other failure
+            // (rejections at full capacity do too, if a policy is set:
+            // client-side retries don't know why the platform said no).
+            if self.faults_enabled {
+                self.schedule_retry(sched, attempt, prev_delay, self.now);
+            }
         }
+    }
+
+    /// Resolve the fault outcome of a dispatched request whose drawn busy
+    /// period is `service`; returns the actual busy period (truncated at
+    /// the timeout) and the verdict. Timed-out requests are resolved
+    /// before — and never consume — the transient-failure draw, so each
+    /// mechanism's fault-lane stream is stable under changes to the other.
+    fn fault_verdict(&mut self, service: f64) -> (f64, Verdict) {
+        if !self.faults_enabled {
+            return (service, Verdict::Success);
+        }
+        if let Some(t) = self.fault.timeout {
+            if service > t {
+                return (t, Verdict::Timeout);
+            }
+        }
+        let p = self.fault.invocation_failure_prob;
+        if p > 0.0 && self.fault_rng.uniform() < p {
+            return (service, Verdict::Fail);
+        }
+        (service, Verdict::Success)
+    }
+
+    /// Schedule the completion event for a dispatched request: a normal
+    /// departure, or a [`Event::RequestTimeout`] when the timeout fired
+    /// with kill semantics (scheduled *instead of* the departure).
+    fn schedule_completion<S: Scheduler>(
+        &mut self,
+        sched: &mut S,
+        id: InstanceId,
+        busy: f64,
+        verdict: Verdict,
+    ) {
+        let ev = if verdict == Verdict::Timeout
+            && self.fault.timeout_action == TimeoutAction::KillInstance
+        {
+            Event::RequestTimeout(id)
+        } else {
+            Event::Departure(id)
+        };
+        sched.schedule(self.now.after(busy), ev);
+    }
+
+    /// Update the failure counters for a dispatched request's verdict
+    /// (call only once statistics are collected). A failed or timed-out
+    /// execution's whole busy period is wasted work — it was billed but
+    /// produced no successful response.
+    fn count_verdict(&mut self, verdict: Verdict, busy: f64) {
+        match verdict {
+            Verdict::Success => {}
+            Verdict::Fail => {
+                self.failed_requests += 1;
+                self.wasted_work_seconds += busy;
+            }
+            Verdict::Timeout => {
+                self.timeout_requests += 1;
+                self.wasted_work_seconds += busy;
+            }
+        }
+    }
+
+    /// Re-enqueue a failed request as a [`Event::RetryArrival`] after its
+    /// backoff delay, respecting max-attempts and the run-wide retry
+    /// budget. `fail_at` is when the client observes the failure (the end
+    /// of the failed busy period; the rejection instant for drops).
+    fn schedule_retry<S: Scheduler>(
+        &mut self,
+        sched: &mut S,
+        attempt: u32,
+        prev_delay: f64,
+        fail_at: SimTime,
+    ) {
+        if self.retry.is_none() {
+            return;
+        }
+        if attempt >= self.retry.max_attempts {
+            if self.stats_started {
+                self.retry_exhausted += 1;
+            }
+            return;
+        }
+        if let Some(left) = &mut self.retry_budget_left {
+            if *left == 0 {
+                if self.stats_started {
+                    self.retry_exhausted += 1;
+                }
+                return;
+            }
+            *left -= 1;
+        }
+        let delay = self.retry.next_delay(prev_delay, &mut self.fault_rng);
+        sched.schedule(
+            fail_at.after(delay),
+            Event::RetryArrival { attempt: attempt + 1, prev_delay_bits: delay.to_bits() },
+        );
+    }
+
+    /// Handle a [`Event::RetryArrival`]: one failed request re-enters the
+    /// platform. It counts as a fresh request (`total_requests` — and thus
+    /// the observed arrival rate — includes retry amplification), adaptive
+    /// policies observe the epoch like any arrival, and no batch draw is
+    /// made (a retry is always a single request).
+    pub fn handle_retry_arrival<S: Scheduler, H: LifecycleHooks>(
+        &mut self,
+        sched: &mut S,
+        hooks: &mut H,
+        attempt: u32,
+        prev_delay: f64,
+    ) {
+        if self.stats_started {
+            self.retry_attempts += 1;
+        }
+        hooks.on_arrival_epoch(self.now.as_secs());
+        let (live0, flight0) = (self.live_count, self.in_flight);
+        self.route_one_request(sched, hooks, attempt, prev_delay);
+        if self.live_count != live0 || self.in_flight != flight0 {
+            self.sync_levels();
+        }
+    }
+
+    /// Handle a [`Event::RequestTimeout`] with kill semantics: the
+    /// execution is cut off at the deadline and its instance torn down
+    /// with it — no return to the warm pool, no keep-alive draw. The
+    /// truncated busy period is billed (the provider ran the sandbox that
+    /// long). On a concurrency-valued instance with other requests still
+    /// in flight the slot is released but the teardown is skipped — the
+    /// survivors drain first (documented simplification: their departures
+    /// stay scheduled, so the instance dies via its normal idle path).
+    pub fn handle_request_timeout<S: Scheduler, H: LifecycleHooks>(
+        &mut self,
+        sched: &mut S,
+        hooks: &mut H,
+        id: InstanceId,
+    ) {
+        let became_idle;
+        {
+            let inst = &mut self.instances[id.0 as usize];
+            debug_assert!(inst.in_flight > 0);
+            inst.in_flight -= 1;
+            became_idle = inst.in_flight == 0;
+            if became_idle {
+                let busy = self.now.since(inst.busy_since).max(0.0);
+                inst.finish_request(self.now, busy);
+                if self.stats_started {
+                    self.billed_seconds += busy;
+                }
+                self.busy_instances -= 1;
+            }
+        }
+        self.in_flight -= 1;
+        if became_idle {
+            let inst = &mut self.instances[id.0 as usize];
+            inst.terminate(self.now);
+            let lifespan = inst.lifespan(self.now);
+            self.router.remove(id);
+            self.live_count -= 1;
+            hooks.on_expire();
+            if self.stats_started {
+                self.instances_expired += 1;
+                self.lifespan_stats.push(lifespan);
+            }
+        } else {
+            self.router.release(id, false);
+        }
+        self.sync_levels();
+        self.maybe_request_prewarm(sched, hooks);
+    }
+
+    /// Schedule the fault profile's degradation timeline. Engines call
+    /// this once at run start; a profile with no windows schedules nothing,
+    /// so the event sequence of fault-free runs is untouched.
+    pub fn schedule_fault_timeline<S: Scheduler>(&mut self, sched: &mut S) {
+        for (i, w) in self.fault.degradation.iter().enumerate() {
+            sched
+                .schedule(SimTime::from_secs(w.start), Event::DegradationStart { window: i as u32 });
+            sched.schedule(SimTime::from_secs(w.end), Event::DegradationEnd { window: i as u32 });
+        }
+    }
+
+    /// Handle a [`Event::DegradationStart`]: the window's capacity factor
+    /// applies (overlapping windows compose by minimum).
+    pub fn handle_degradation_start(&mut self, window: u32) {
+        self.degradation_active[window as usize] = true;
+        self.recompute_effective_cap();
+    }
+
+    /// Handle a [`Event::DegradationEnd`]: the window's factor lifts.
+    pub fn handle_degradation_end(&mut self, window: u32) {
+        self.degradation_active[window as usize] = false;
+        self.recompute_effective_cap();
+    }
+
+    fn recompute_effective_cap(&mut self) {
+        let mut factor: f64 = 1.0;
+        for (w, active) in self.fault.degradation.iter().zip(&self.degradation_active) {
+            if *active {
+                factor = factor.min(w.capacity_factor);
+            }
+        }
+        // Degradation only ever shrinks the cap; live instances above the
+        // shrunken cap are not evicted — they drain and are not replaced.
+        self.effective_max_concurrency = if factor >= 1.0 {
+            self.max_concurrency
+        } else {
+            ((self.max_concurrency as f64) * factor).floor() as usize
+        };
     }
 
     /// Handle a request departure from `id`: bill the busy period when the
@@ -744,7 +1072,7 @@ impl EngineCore {
         hooks: &mut H,
     ) {
         if self.router.has_capacity()
-            || self.live_count >= self.max_concurrency
+            || self.live_count >= self.effective_max_concurrency
             || !hooks.admit_cold()
         {
             // Pool recovered, or no capacity for a speculative instance:
@@ -906,6 +1234,18 @@ impl EngineCore {
             instance_count_pmf: self.count_dist.pmf(),
             prewarm_starts: self.prewarm_starts,
             wasted_prewarm_seconds: self.wasted_prewarm_seconds,
+            failed_requests: self.failed_requests,
+            timeout_requests: self.timeout_requests,
+            coldstart_failures: self.coldstart_failures,
+            retry_attempts: self.retry_attempts,
+            retry_exhausted: self.retry_exhausted,
+            wasted_work_seconds: self.wasted_work_seconds,
+            goodput: if measured > 0.0 {
+                served.saturating_sub(self.failed_requests + self.timeout_requests) as f64
+                    / measured
+            } else {
+                0.0
+            },
         }
     }
 }
@@ -925,6 +1265,8 @@ mod tests {
             concurrency_value: concurrency,
             prewarm_lead,
             instance_capacity: 16,
+            fault: FaultProfile::disabled(),
+            retry: RetryPolicy::none(),
         })
     }
 

@@ -33,6 +33,34 @@ pub enum Event {
     ProvisioningDone(InstanceId),
     /// Idle-expiration check for an instance; `gen` guards staleness.
     Expiration { id: InstanceId, gen: u64 },
+    /// The request running on `InstanceId` hit the fault profile's
+    /// execution timeout with kill semantics: the execution is cut off and
+    /// the instance torn down with it. Scheduled *instead of* the
+    /// request's [`Event::Departure`] (never alongside it), so no
+    /// generation guard is needed.
+    RequestTimeout(InstanceId),
+    /// A failed or timed-out request re-enters the platform after its
+    /// backoff delay. `attempt` is the dispatch attempt this arrival makes
+    /// (2 = first retry); `prev_delay_bits` carries the previous backoff
+    /// delay as raw `f64` bits — the decorrelated-jitter state — so
+    /// `Event` stays `Copy + Eq`.
+    RetryArrival {
+        /// Dispatch attempt number for this re-arrival (first attempt = 1).
+        attempt: u32,
+        /// Previous backoff delay, as `f64::to_bits`.
+        prev_delay_bits: u64,
+    },
+    /// Degradation window `window` of the fault profile begins: effective
+    /// capacity shrinks by its factor.
+    DegradationStart {
+        /// Index into [`crate::sim::FaultProfile::degradation`].
+        window: u32,
+    },
+    /// Degradation window `window` of the fault profile ends.
+    DegradationEnd {
+        /// Index into [`crate::sim::FaultProfile::degradation`].
+        window: u32,
+    },
     /// End of simulation horizon.
     Horizon,
 }

@@ -1,0 +1,213 @@
+//! Fault-injection profiles: the "what can go wrong" half of the
+//! reliability layer (see DESIGN.md §Reliability).
+//!
+//! A [`FaultProfile`] is plain data describing how a platform fails:
+//! transient invocation failures, provisioning (cold-start) failures, a
+//! hard per-request execution timeout with configurable
+//! timeout-vs-instance semantics, and scheduled degradation windows during
+//! which effective capacity shrinks (the precursor to full host-failure
+//! modeling). The profile is interpreted by
+//! [`crate::sim::core::EngineCore`], which draws every fault decision from
+//! a **dedicated SplitMix64-derived RNG lane** so the arrival and service
+//! streams are untouched: a [`FaultProfile::disabled`] run is bit-identical
+//! to the pre-fault engines (pinned in `tests/engine_unification.rs`).
+//!
+//! Retry behaviour lives separately in [`crate::sim::retry`]; the two are
+//! combined by the engines (`SimConfig`/`FleetConfig` carry one of each).
+
+use anyhow::{bail, Result};
+
+/// What happens to the serving instance when a request hits the execution
+/// timeout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TimeoutAction {
+    /// The execution is killed at the deadline but the instance survives
+    /// and returns to the warm pool (AWS Lambda semantics: the sandbox
+    /// outlives the timed-out invocation).
+    #[default]
+    KeepInstance,
+    /// The instance is torn down with the execution (crash-on-timeout
+    /// semantics; frees the concurrency slot immediately). On a
+    /// concurrency-valued instance the teardown waits until the last
+    /// in-flight request drains.
+    KillInstance,
+}
+
+/// One scheduled degradation window: between `start` and `end` the
+/// engine's effective maximum concurrency is scaled by `capacity_factor`
+/// (overlapping windows compose by taking the minimum factor).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DegradationWindow {
+    /// Window start, absolute simulation seconds.
+    pub start: f64,
+    /// Window end, absolute simulation seconds (must exceed `start`).
+    pub end: f64,
+    /// Fraction of the concurrency cap still usable while the window is
+    /// active, in `[0, 1]` (0 = full outage: every cold start rejected).
+    pub capacity_factor: f64,
+}
+
+/// Deterministic fault-injection profile for one engine run.
+///
+/// All fault decisions draw from the engine's dedicated fault RNG lane,
+/// and each mechanism draws **only when it can fire** (probability > 0,
+/// timeout set, windows present) so enabling one mechanism never perturbs
+/// another's stream more than necessary — and a disabled profile draws
+/// nothing at all.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultProfile {
+    /// Probability that a dispatched request fails transiently at the end
+    /// of its busy period (the execution runs — and is billed — but
+    /// returns an error).
+    pub invocation_failure_prob: f64,
+    /// Probability that an admitted cold start fails before the instance
+    /// materializes (provisioning failure: no instance, no service draw,
+    /// the request errors immediately).
+    pub coldstart_failure_prob: f64,
+    /// Hard per-request execution timeout in seconds (`None` = no
+    /// timeout). A request whose drawn busy period exceeds it is cut off
+    /// at the deadline; the truncated busy time is billed and counted as
+    /// wasted work.
+    pub timeout: Option<f64>,
+    /// What the timeout does to the serving instance.
+    pub timeout_action: TimeoutAction,
+    /// Scheduled capacity-degradation windows.
+    pub degradation: Vec<DegradationWindow>,
+}
+
+impl FaultProfile {
+    /// The no-fault profile: nothing fires, nothing draws — engines run
+    /// bit-identical to the pre-fault code.
+    pub fn disabled() -> Self {
+        FaultProfile {
+            invocation_failure_prob: 0.0,
+            coldstart_failure_prob: 0.0,
+            timeout: None,
+            timeout_action: TimeoutAction::KeepInstance,
+            degradation: Vec::new(),
+        }
+    }
+
+    /// True when no fault mechanism can ever fire.
+    pub fn is_disabled(&self) -> bool {
+        self.invocation_failure_prob <= 0.0
+            && self.coldstart_failure_prob <= 0.0
+            && self.timeout.is_none()
+            && self.degradation.is_empty()
+    }
+
+    /// Set the transient invocation-failure probability.
+    pub fn with_failure_prob(mut self, p: f64) -> Self {
+        self.invocation_failure_prob = p;
+        self
+    }
+
+    /// Set the provisioning (cold-start) failure probability.
+    pub fn with_coldstart_failure_prob(mut self, p: f64) -> Self {
+        self.coldstart_failure_prob = p;
+        self
+    }
+
+    /// Set the per-request execution timeout.
+    pub fn with_timeout(mut self, secs: f64) -> Self {
+        self.timeout = Some(secs);
+        self
+    }
+
+    /// Set the timeout-vs-instance semantics.
+    pub fn with_timeout_action(mut self, action: TimeoutAction) -> Self {
+        self.timeout_action = action;
+        self
+    }
+
+    /// Append a degradation window.
+    pub fn with_degradation(mut self, start: f64, end: f64, capacity_factor: f64) -> Self {
+        self.degradation.push(DegradationWindow { start, end, capacity_factor });
+        self
+    }
+
+    /// Check parameters; scenario files and CLI flags must fail with an
+    /// error, not an engine panic. `what` prefixes messages (e.g.
+    /// `"reliability"`).
+    pub fn validate(&self, what: &str) -> Result<()> {
+        for (name, p) in [
+            ("failure_prob", self.invocation_failure_prob),
+            ("coldstart_failure_prob", self.coldstart_failure_prob),
+        ] {
+            if !(p.is_finite() && (0.0..=1.0).contains(&p)) {
+                bail!("{what}.{name} must be a probability in [0, 1], got {p}");
+            }
+        }
+        if let Some(t) = self.timeout {
+            if !(t.is_finite() && t > 0.0) {
+                bail!("{what}.timeout must be a positive number of seconds, got {t}");
+            }
+        }
+        for (i, w) in self.degradation.iter().enumerate() {
+            if !(w.start.is_finite() && w.start >= 0.0 && w.end.is_finite() && w.end > w.start) {
+                bail!(
+                    "{what}.degradation[{i}] needs finite 0 <= start < end, \
+                     got [{}, {}]",
+                    w.start,
+                    w.end
+                );
+            }
+            if !(w.capacity_factor.is_finite() && (0.0..=1.0).contains(&w.capacity_factor)) {
+                bail!(
+                    "{what}.degradation[{i}].capacity_factor must be in [0, 1], got {}",
+                    w.capacity_factor
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for FaultProfile {
+    fn default() -> Self {
+        FaultProfile::disabled()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_profile_is_default_and_inert() {
+        let p = FaultProfile::default();
+        assert!(p.is_disabled());
+        assert_eq!(p, FaultProfile::disabled());
+        p.validate("reliability").unwrap();
+    }
+
+    #[test]
+    fn builders_enable_mechanisms() {
+        let p = FaultProfile::disabled().with_failure_prob(0.1);
+        assert!(!p.is_disabled());
+        let p = FaultProfile::disabled().with_timeout(30.0);
+        assert!(!p.is_disabled());
+        let p = FaultProfile::disabled().with_degradation(10.0, 20.0, 0.5);
+        assert!(!p.is_disabled());
+        p.validate("x").unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_parameters() {
+        for (p, needle) in [
+            (FaultProfile::disabled().with_failure_prob(1.5), "failure_prob"),
+            (FaultProfile::disabled().with_failure_prob(-0.1), "failure_prob"),
+            (
+                FaultProfile::disabled().with_coldstart_failure_prob(f64::NAN),
+                "coldstart_failure_prob",
+            ),
+            (FaultProfile::disabled().with_timeout(0.0), "timeout"),
+            (FaultProfile::disabled().with_timeout(-5.0), "timeout"),
+            (FaultProfile::disabled().with_degradation(20.0, 10.0, 0.5), "degradation[0]"),
+            (FaultProfile::disabled().with_degradation(0.0, 10.0, 2.0), "capacity_factor"),
+        ] {
+            let err = p.validate("reliability").unwrap_err().to_string();
+            assert!(err.contains(needle), "{err}");
+        }
+    }
+}

@@ -14,12 +14,14 @@
 pub mod core;
 pub mod ensemble;
 pub mod event;
+pub mod fault;
 pub mod hist;
 pub mod instance;
 pub mod metrics;
 pub mod par_simulator;
 pub mod process;
 pub mod results;
+pub mod retry;
 pub mod rng;
 pub mod simulator;
 pub mod temporal;
@@ -31,6 +33,7 @@ pub use ensemble::{
     EnsembleSummary, MetricCi,
 };
 pub use event::{Event, EventQueue};
+pub use fault::{DegradationWindow, FaultProfile, TimeoutAction};
 pub use hist::{CountDistribution, Histogram};
 pub use instance::{FunctionInstance, InstanceId, InstanceState};
 pub use metrics::{confidence_interval_95, ks_distance, mape, OnlineStats, P2Quantile, TimeWeighted};
@@ -40,6 +43,7 @@ pub use process::{
     LogNormalProcess, MmppProcess, ParetoProcess, Process, SimProcess, WeibullProcess,
 };
 pub use results::SimResults;
+pub use retry::{Backoff, RetryPolicy};
 pub use rng::Rng;
 pub use simulator::{
     CountSample, RequestLogEntry, RequestOutcome, ServerlessSimulator, SimConfig,

@@ -54,6 +54,8 @@ impl ParServerlessSimulator {
             concurrency_value,
             prewarm_lead: 0.0,
             instance_capacity: 1024,
+            fault: cfg.fault.clone(),
+            retry: cfg.retry.clone(),
         });
         // Historical behaviour: the constant threshold only (the
         // stochastic expiration_process applies to ServerlessSimulator).
@@ -73,6 +75,7 @@ impl ParServerlessSimulator {
         // t = 0 draws the same first gap as the historical code).
         let mut arrival = ArrivalSource::process(self.cfg.arrival.clone());
         self.core.schedule_next_arrival(&mut self.events, &mut arrival);
+        self.core.schedule_fault_timeline(&mut self.events);
         self.events.schedule(horizon, Event::Horizon);
         while let Some((t, ev)) = self.events.pop() {
             self.core.maybe_start_stats(t);
@@ -92,6 +95,17 @@ impl ParServerlessSimulator {
                 Event::ProvisioningDone(id) => {
                     self.core.handle_provisioning_done(&mut self.events, &mut self.hooks, id)
                 }
+                Event::RequestTimeout(id) => {
+                    self.core.handle_request_timeout(&mut self.events, &mut self.hooks, id)
+                }
+                Event::RetryArrival { attempt, prev_delay_bits } => self.core.handle_retry_arrival(
+                    &mut self.events,
+                    &mut self.hooks,
+                    attempt,
+                    f64::from_bits(prev_delay_bits),
+                ),
+                Event::DegradationStart { window } => self.core.handle_degradation_start(window),
+                Event::DegradationEnd { window } => self.core.handle_degradation_end(window),
                 Event::Horizon => break,
             }
         }
@@ -130,7 +144,23 @@ mod tests {
             seed,
             capture_request_log: false,
             sample_interval: 0.0,
+            fault: crate::sim::fault::FaultProfile::disabled(),
+            retry: crate::sim::retry::RetryPolicy::none(),
         }
+    }
+
+    #[test]
+    fn faults_flow_through_the_concurrency_value_engine() {
+        let mut c = cfg(5.0, 20_000.0, 21);
+        c.fault = crate::sim::fault::FaultProfile::disabled().with_failure_prob(0.2);
+        c.retry = crate::sim::retry::RetryPolicy::fixed(1.0, 2);
+        let r = ParServerlessSimulator::new(c, 3).run();
+        assert!(r.failed_requests > 0);
+        assert!(r.retry_attempts > 0);
+        let served = (r.cold_requests + r.warm_requests) as f64;
+        let observed = r.failed_requests as f64 / served;
+        assert!((observed - 0.2).abs() < 0.02, "observed failure rate {observed}");
+        assert!(r.goodput > 0.0);
     }
 
     #[test]

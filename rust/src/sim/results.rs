@@ -65,6 +65,29 @@ pub struct SimResults {
     /// Total lifespan of prewarmed instances that expired without serving
     /// a single request — the prewarm arm's speculative waste.
     pub wasted_prewarm_seconds: f64,
+    /// Dispatched requests that failed transiently (fault injection; they
+    /// are a subset of cold+warm, ran their whole busy period and were
+    /// billed, but returned an error).
+    pub failed_requests: u64,
+    /// Dispatched requests cut off at the fault profile's execution
+    /// timeout (also a subset of cold+warm; billed up to the deadline).
+    pub timeout_requests: u64,
+    /// Admitted cold starts whose provisioning failed before any instance
+    /// materialized (counted in `total_requests` but in none of
+    /// cold/warm/rejected).
+    pub coldstart_failures: u64,
+    /// Retry re-arrivals in the measured window (already included in
+    /// `total_requests` — the retry-amplified load).
+    pub retry_attempts: u64,
+    /// Failures that were final because max-attempts or the run-wide retry
+    /// budget was exhausted.
+    pub retry_exhausted: u64,
+    /// Billed busy-seconds spent on executions that failed or timed out —
+    /// work the developer paid for with no successful response.
+    pub wasted_work_seconds: f64,
+    /// Successful responses per second of measured time:
+    /// `(cold + warm - failed - timeout) / measured_time`.
+    pub goodput: f64,
 }
 
 impl SimResults {
@@ -75,6 +98,18 @@ impl SimResults {
         } else {
             self.avg_running_count / self.avg_server_count
         }
+    }
+
+    /// Fraction of arrivals that got a successful response:
+    /// `(cold + warm - failed - timeout) / total`. 1.0 when nothing
+    /// arrived.
+    pub fn success_rate(&self) -> f64 {
+        if self.total_requests == 0 {
+            return 1.0;
+        }
+        let ok = (self.cold_requests + self.warm_requests)
+            .saturating_sub(self.failed_requests + self.timeout_requests);
+        ok as f64 / self.total_requests as f64
     }
 
     /// Render the Table-1-style two-column report.
@@ -93,6 +128,17 @@ impl SimResults {
                 "{}/{}/{}/{}",
                 self.total_requests, self.cold_requests, self.warm_requests, self.rejected_requests
             )),
+            ("*Success Rate", format!("{:.4} %", self.success_rate() * 100.0)),
+            ("*Goodput", format!("{:.4} req/s", self.goodput)),
+            ("Failures (transient/timeout/coldstart)", format!(
+                "{}/{}/{}",
+                self.failed_requests, self.timeout_requests, self.coldstart_failures
+            )),
+            ("Retries (attempts/exhausted)", format!(
+                "{}/{}",
+                self.retry_attempts, self.retry_exhausted
+            )),
+            ("Wasted Work", format!("{:.4} s", self.wasted_work_seconds)),
         ];
         let w = rows.iter().map(|(k, _)| k.len()).max().unwrap_or(0);
         let mut s = String::new();
@@ -141,6 +187,13 @@ mod tests {
             instance_count_pmf: vec![0.0, 0.1, 0.2, 0.3, 0.4],
             prewarm_starts: 0,
             wasted_prewarm_seconds: 0.0,
+            failed_requests: 0,
+            timeout_requests: 0,
+            coldstart_failures: 0,
+            retry_attempts: 0,
+            retry_exhausted: 0,
+            wasted_work_seconds: 0.0,
+            goodput: 0.9,
         }
     }
 
@@ -157,6 +210,25 @@ mod tests {
     fn utilized_plus_wasted_is_one() {
         let r = dummy();
         assert!((r.utilized_capacity() + r.wasted_capacity - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_contains_reliability_rows() {
+        let t = dummy().to_table();
+        assert!(t.contains("Success Rate"));
+        assert!(t.contains("Goodput"));
+        assert!(t.contains("Failures (transient/timeout/coldstart)"));
+        assert!(t.contains("Retries (attempts/exhausted)"));
+        assert!(t.contains("Wasted Work"));
+    }
+
+    #[test]
+    fn success_rate_counts_failures_against_served() {
+        let mut r = dummy();
+        assert!((r.success_rate() - (900_000.0 / 900_000.0)).abs() < 1e-12);
+        r.failed_requests = 90_000;
+        r.timeout_requests = 10_000;
+        assert!((r.success_rate() - (800_000.0 / 900_000.0)).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,241 @@
+//! Retry policies: the "what the client does about it" half of the
+//! reliability layer (see DESIGN.md §Reliability).
+//!
+//! A [`RetryPolicy`] describes how failed / timed-out requests re-enter
+//! the platform: no retry, fixed-delay, or exponential backoff with
+//! decorrelated jitter (the AWS-architecture-blog variant: each delay is
+//! drawn uniformly from `[base, 3 * previous_delay]` and capped), plus a
+//! max-attempts ceiling and an optional run-wide retry budget. Jitter
+//! draws come from the engine's dedicated fault RNG lane, never from the
+//! arrival/service streams; `Backoff::None` and `Backoff::Fixed` draw
+//! nothing at all.
+//!
+//! Re-enqueued retries flow through the engines as
+//! [`crate::sim::Event::RetryArrival`] events, carrying the attempt number
+//! and the previous delay (the decorrelated-jitter state) in the event
+//! payload so the policy itself stays stateless.
+
+use crate::sim::rng::Rng;
+use anyhow::{bail, Context, Result};
+
+/// Backoff shape for retry delays.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Backoff {
+    /// Immediate re-dispatch (delay 0, no RNG draw).
+    None,
+    /// Constant delay between attempts (no RNG draw).
+    Fixed {
+        /// Delay in seconds before each retry.
+        delay: f64,
+    },
+    /// Exponential backoff with decorrelated jitter:
+    /// `delay_k = min(cap, U(base, 3 * delay_{k-1}))`, `delay_0 = base`.
+    Exponential {
+        /// First-retry delay and the lower bound of every jitter draw.
+        base: f64,
+        /// Hard ceiling on any single delay, seconds.
+        cap: f64,
+    },
+}
+
+/// Client-side retry behaviour for failed and timed-out requests.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryPolicy {
+    /// How long to wait between attempts.
+    pub backoff: Backoff,
+    /// Total dispatch attempts per request, including the first
+    /// (1 = never retry). Must be >= 1.
+    pub max_attempts: u32,
+    /// Optional run-wide cap on the total number of retries the platform
+    /// will re-enqueue (the retry budget); once spent, further failures
+    /// are final.
+    pub budget: Option<u64>,
+}
+
+impl RetryPolicy {
+    /// The no-retry policy (every failure is final).
+    pub fn none() -> Self {
+        RetryPolicy { backoff: Backoff::None, max_attempts: 1, budget: None }
+    }
+
+    /// True when this policy never re-enqueues anything.
+    pub fn is_none(&self) -> bool {
+        self.max_attempts <= 1
+    }
+
+    /// Fixed-delay retry: `attempts` total dispatches, `delay` seconds
+    /// apart.
+    pub fn fixed(delay: f64, attempts: u32) -> Self {
+        RetryPolicy { backoff: Backoff::Fixed { delay }, max_attempts: attempts, budget: None }
+    }
+
+    /// Exponential backoff with decorrelated jitter.
+    pub fn exponential(base: f64, cap: f64, attempts: u32) -> Self {
+        RetryPolicy { backoff: Backoff::Exponential { base, cap }, max_attempts: attempts, budget: None }
+    }
+
+    /// Cap the total number of retries across the whole run.
+    pub fn with_budget(mut self, budget: u64) -> Self {
+        self.budget = Some(budget);
+        self
+    }
+
+    /// Draw the delay before the next attempt. `prev_delay` is the delay
+    /// used before the previous attempt (0 on the first retry); only the
+    /// exponential variant consumes randomness.
+    pub fn next_delay(&self, prev_delay: f64, rng: &mut Rng) -> f64 {
+        match self.backoff {
+            Backoff::None => 0.0,
+            Backoff::Fixed { delay } => delay,
+            Backoff::Exponential { base, cap } => {
+                let prev = prev_delay.max(base);
+                rng.uniform_range(base, 3.0 * prev).min(cap)
+            }
+        }
+    }
+
+    /// Parse a CLI-style policy string:
+    /// `none` | `fixed:DELAY[,ATTEMPTS]` |
+    /// `exponential:BASE,CAP[,ATTEMPTS]` (alias `exp:`).
+    /// ATTEMPTS defaults to 3 when omitted.
+    pub fn parse(s: &str) -> Result<RetryPolicy> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("none") || s.is_empty() {
+            return Ok(RetryPolicy::none());
+        }
+        let (kind, rest) = s
+            .split_once(':')
+            .with_context(|| format!("retry policy '{s}': expected none, fixed:..., or exponential:..."))?;
+        let nums: Vec<f64> = rest
+            .split(',')
+            .map(|p| {
+                p.trim()
+                    .parse::<f64>()
+                    .with_context(|| format!("retry policy '{s}': '{p}' is not a number"))
+            })
+            .collect::<Result<_>>()?;
+        let policy = match kind.trim().to_ascii_lowercase().as_str() {
+            "fixed" => match nums.as_slice() {
+                [delay] => RetryPolicy::fixed(*delay, 3),
+                [delay, attempts] => RetryPolicy::fixed(*delay, *attempts as u32),
+                _ => bail!("retry policy '{s}': fixed takes DELAY[,ATTEMPTS]"),
+            },
+            "exponential" | "exp" => match nums.as_slice() {
+                [base, cap] => RetryPolicy::exponential(*base, *cap, 3),
+                [base, cap, attempts] => RetryPolicy::exponential(*base, *cap, *attempts as u32),
+                _ => bail!("retry policy '{s}': exponential takes BASE,CAP[,ATTEMPTS]"),
+            },
+            other => bail!("retry policy '{s}': unknown kind '{other}' (none|fixed|exponential)"),
+        };
+        policy.validate("retry")?;
+        Ok(policy)
+    }
+
+    /// Short human label for tables and sweep output.
+    pub fn describe(&self) -> String {
+        let head = match self.backoff {
+            Backoff::None if self.is_none() => return "none".to_string(),
+            Backoff::None => format!("immediate x{}", self.max_attempts),
+            Backoff::Fixed { delay } => format!("fixed {delay}s x{}", self.max_attempts),
+            Backoff::Exponential { base, cap } => {
+                format!("exp {base}s..{cap}s x{}", self.max_attempts)
+            }
+        };
+        match self.budget {
+            Some(b) => format!("{head} (budget {b})"),
+            None => head,
+        }
+    }
+
+    /// Check parameters; `what` prefixes error messages.
+    pub fn validate(&self, what: &str) -> Result<()> {
+        if self.max_attempts == 0 {
+            bail!("{what}.max_attempts must be >= 1 (1 = no retries), got 0");
+        }
+        match self.backoff {
+            Backoff::None => {}
+            Backoff::Fixed { delay } => {
+                if !(delay.is_finite() && delay >= 0.0) {
+                    bail!("{what}: fixed backoff delay must be finite and >= 0, got {delay}");
+                }
+            }
+            Backoff::Exponential { base, cap } => {
+                if !(base.is_finite() && base > 0.0) {
+                    bail!("{what}: exponential backoff base must be positive, got {base}");
+                }
+                if !(cap.is_finite() && cap >= base) {
+                    bail!("{what}: exponential backoff cap must be >= base ({base}), got {cap}");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy::none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_policy_is_default_and_drawless() {
+        let p = RetryPolicy::default();
+        assert!(p.is_none());
+        assert_eq!(p.describe(), "none");
+        let mut rng = Rng::new(1);
+        let before = rng.next_u64();
+        let mut rng2 = Rng::new(1);
+        assert_eq!(p.next_delay(0.0, &mut rng2), 0.0);
+        // None draws nothing: the stream is exactly one u64 behind.
+        assert_eq!(rng2.next_u64(), before);
+    }
+
+    #[test]
+    fn fixed_delay_is_constant_without_draws() {
+        let p = RetryPolicy::fixed(2.5, 4);
+        let mut rng = Rng::new(7);
+        assert_eq!(p.next_delay(0.0, &mut rng), 2.5);
+        assert_eq!(p.next_delay(2.5, &mut rng), 2.5);
+        assert_eq!(rng.next_u64(), Rng::new(7).next_u64());
+    }
+
+    #[test]
+    fn decorrelated_jitter_stays_in_band_and_caps() {
+        let p = RetryPolicy::exponential(1.0, 20.0, 5);
+        let mut rng = Rng::new(42);
+        let mut prev = 0.0;
+        for _ in 0..200 {
+            let d = p.next_delay(prev, &mut rng);
+            assert!(d >= 1.0 && d <= 20.0, "delay {d} out of [base, cap]");
+            assert!(d <= (3.0 * prev.max(1.0)).min(20.0) + 1e-12);
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_the_cli_grammar() {
+        assert!(RetryPolicy::parse("none").unwrap().is_none());
+        assert_eq!(RetryPolicy::parse("fixed:2.0").unwrap(), RetryPolicy::fixed(2.0, 3));
+        assert_eq!(RetryPolicy::parse("fixed:0.5,5").unwrap(), RetryPolicy::fixed(0.5, 5));
+        assert_eq!(
+            RetryPolicy::parse("exponential:1,60,4").unwrap(),
+            RetryPolicy::exponential(1.0, 60.0, 4)
+        );
+        assert_eq!(RetryPolicy::parse("exp:1,60").unwrap(), RetryPolicy::exponential(1.0, 60.0, 3));
+        for bad in ["bogus", "fixed:", "fixed:1,2,3", "exponential:5,1", "exp:0,10", "fixed:-1"] {
+            assert!(RetryPolicy::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_zero_attempts() {
+        let p = RetryPolicy { backoff: Backoff::None, max_attempts: 0, budget: None };
+        let err = p.validate("reliability.retry").unwrap_err().to_string();
+        assert!(err.contains("max_attempts"), "{err}");
+    }
+}

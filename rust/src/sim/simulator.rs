@@ -26,9 +26,11 @@
 
 use super::core::{ConfigExpiration, CoreParams, EngineCore, LifecycleHooks};
 use super::event::{Event, EventQueue};
+use super::fault::FaultProfile;
 use super::instance::{FunctionInstance, InstanceId};
 use super::process::Process;
 use super::results::SimResults;
+use super::retry::RetryPolicy;
 use super::rng::Rng;
 use super::time::SimTime;
 use crate::workload::stream::ArrivalSource;
@@ -83,6 +85,11 @@ pub struct SimConfig {
     /// Sample the cumulative-average instance count every this many seconds
     /// (for Fig. 4 style transient plots). 0 disables sampling.
     pub sample_interval: f64,
+    /// Fault-injection profile (disabled by default — bit-identical to the
+    /// pre-fault engine; see `sim::fault`).
+    pub fault: FaultProfile,
+    /// Retry policy for failed / timed-out requests (none by default).
+    pub retry: RetryPolicy,
 }
 
 impl SimConfig {
@@ -103,6 +110,8 @@ impl SimConfig {
             seed: 0x5EED,
             capture_request_log: false,
             sample_interval: 0.0,
+            fault: FaultProfile::disabled(),
+            retry: RetryPolicy::none(),
         }
     }
 
@@ -123,6 +132,18 @@ impl SimConfig {
 
     pub fn with_expiration_threshold(mut self, secs: f64) -> Self {
         self.expiration_threshold = secs;
+        self
+    }
+
+    /// Enable fault injection for this run.
+    pub fn with_fault(mut self, fault: FaultProfile) -> Self {
+        self.fault = fault;
+        self
+    }
+
+    /// Set the retry policy for failed / timed-out requests.
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
         self
     }
 
@@ -213,6 +234,8 @@ impl ServerlessSimulator {
             concurrency_value: 1,
             prewarm_lead: 0.0,
             instance_capacity: 1024,
+            fault: cfg.fault.clone(),
+            retry: cfg.retry.clone(),
         });
         let hooks = SprHooks {
             expiration: ConfigExpiration {
@@ -291,6 +314,9 @@ impl ServerlessSimulator {
             .take()
             .unwrap_or_else(|| ArrivalSource::process(self.cfg.arrival.clone()));
         self.core.schedule_next_arrival(&mut self.events, &mut arrival);
+        // Degradation windows (if any) are part of the run's timeline; a
+        // fault-free profile schedules nothing here.
+        self.core.schedule_fault_timeline(&mut self.events);
         self.events.schedule(horizon, Event::Horizon);
 
         while let Some((t, ev)) = self.events.pop() {
@@ -313,6 +339,17 @@ impl ServerlessSimulator {
                 Event::ProvisioningDone(id) => {
                     self.core.handle_provisioning_done(&mut self.events, &mut self.hooks, id)
                 }
+                Event::RequestTimeout(id) => {
+                    self.core.handle_request_timeout(&mut self.events, &mut self.hooks, id)
+                }
+                Event::RetryArrival { attempt, prev_delay_bits } => self.core.handle_retry_arrival(
+                    &mut self.events,
+                    &mut self.hooks,
+                    attempt,
+                    f64::from_bits(prev_delay_bits),
+                ),
+                Event::DegradationStart { window } => self.core.handle_degradation_start(window),
+                Event::DegradationEnd { window } => self.core.handle_degradation_end(window),
                 Event::Horizon => break,
             }
         }
@@ -361,6 +398,8 @@ mod tests {
             seed,
             capture_request_log: false,
             sample_interval: 0.0,
+            fault: FaultProfile::disabled(),
+            retry: RetryPolicy::none(),
         }
     }
 
@@ -459,6 +498,8 @@ mod tests {
             seed: 5,
             capture_request_log: false,
             sample_interval: 0.0,
+            fault: FaultProfile::disabled(),
+            retry: RetryPolicy::none(),
         };
         let r = ServerlessSimulator::new(cfg).run();
         assert_eq!(r.cold_requests, 1);
@@ -482,6 +523,8 @@ mod tests {
             seed: 6,
             capture_request_log: false,
             sample_interval: 0.0,
+            fault: FaultProfile::disabled(),
+            retry: RetryPolicy::none(),
         };
         let r = ServerlessSimulator::new(cfg).run();
         assert_eq!(r.warm_requests, 0);
@@ -546,7 +589,7 @@ mod tests {
         cfg.warm_service = Process::constant(1.0);
         cfg.cold_service = Process::constant(2.0);
         let mut sim = ServerlessSimulator::new(cfg);
-        sim.set_arrival_source(ArrivalSource::replay(Arc::new(vec![10.0, 20.0, 30.0])));
+        sim.set_arrival_source(ArrivalSource::replay(Arc::new(vec![10.0, 20.0, 30.0])).unwrap());
         let r = sim.run();
         assert_eq!(r.total_requests, 3);
         assert_eq!(r.cold_requests, 1);
@@ -562,5 +605,163 @@ mod tests {
         let samples = sim.samples();
         assert!(samples.len() >= 95, "samples={}", samples.len());
         assert!(samples.windows(2).all(|w| w[1].t > w[0].t));
+    }
+
+    // ---------------------------------------------- reliability layer
+
+    /// Deterministic base for fault tests: arrivals every 5 s, warm 1 s,
+    /// cold 2 s, no warm-up skip.
+    fn fault_cfg(horizon: f64) -> SimConfig {
+        let mut cfg = quick_cfg(0.9, horizon, 11);
+        cfg.arrival = Process::constant(5.0);
+        cfg.warm_service = Process::constant(1.0);
+        cfg.cold_service = Process::constant(2.0);
+        cfg.skip_initial = 0.0;
+        cfg
+    }
+
+    #[test]
+    fn certain_transient_failures_fail_everything_and_retry() {
+        let mut cfg = fault_cfg(1000.0);
+        cfg.fault = FaultProfile::disabled().with_failure_prob(1.0);
+        cfg.retry = RetryPolicy::fixed(0.5, 2);
+        let r = ServerlessSimulator::new(cfg).run();
+        // Every dispatched attempt fails; each original request retries
+        // once (max_attempts 2) and then gives up.
+        assert_eq!(r.failed_requests, r.cold_requests + r.warm_requests);
+        assert!(r.retry_attempts > 0);
+        assert_eq!(r.retry_exhausted, r.retry_attempts);
+        assert_eq!(r.goodput, 0.0);
+        assert_eq!(r.success_rate(), 0.0);
+        assert!(r.wasted_work_seconds > 0.0);
+        // Retry amplification shows in the observed load: total includes
+        // the re-arrivals.
+        assert_eq!(r.total_requests, (r.total_requests - r.retry_attempts) * 2);
+    }
+
+    #[test]
+    fn retry_budget_caps_reenqueues() {
+        let mut cfg = fault_cfg(1000.0);
+        cfg.fault = FaultProfile::disabled().with_failure_prob(1.0);
+        cfg.retry = RetryPolicy::fixed(0.5, 5).with_budget(3);
+        let r = ServerlessSimulator::new(cfg).run();
+        assert_eq!(r.retry_attempts, 3);
+        assert!(r.retry_exhausted > 0);
+    }
+
+    #[test]
+    fn timeout_truncates_response_and_counts_wasted_work() {
+        let mut cfg = fault_cfg(1000.0);
+        // Service longer than the timeout: every request is cut at 3 s.
+        cfg.warm_service = Process::constant(10.0);
+        cfg.cold_service = Process::constant(10.0);
+        cfg.fault = FaultProfile::disabled().with_timeout(3.0);
+        let r = ServerlessSimulator::new(cfg).run();
+        assert_eq!(r.timeout_requests, r.cold_requests + r.warm_requests);
+        assert!((r.avg_response_time - 3.0).abs() < 1e-9, "rt={}", r.avg_response_time);
+        assert!((r.response_p99 - 3.0).abs() < 1e-9);
+        assert!(
+            (r.wasted_work_seconds - 3.0 * r.timeout_requests as f64).abs() < 1e-6,
+            "wasted={}",
+            r.wasted_work_seconds
+        );
+        assert_eq!(r.goodput, 0.0);
+        // KeepInstance semantics: the sandbox survives its timed-out
+        // execution, so after the first cold start everything is warm.
+        assert_eq!(r.cold_requests, 1);
+    }
+
+    #[test]
+    fn timeout_kill_semantics_tear_down_the_instance() {
+        let mut cfg = fault_cfg(1000.0);
+        cfg.warm_service = Process::constant(10.0);
+        cfg.cold_service = Process::constant(10.0);
+        cfg.fault = FaultProfile::disabled()
+            .with_timeout(3.0)
+            .with_timeout_action(crate::sim::fault::TimeoutAction::KillInstance);
+        let r = ServerlessSimulator::new(cfg).run();
+        // Each timeout kills its instance, so every request cold-starts.
+        assert_eq!(r.warm_requests, 0);
+        assert_eq!(r.cold_requests, r.timeout_requests);
+        assert!(r.instances_expired >= r.cold_requests - 1);
+        // Billed for the truncated busy periods only.
+        assert!(
+            (r.billed_instance_seconds - 3.0 * r.timeout_requests as f64).abs() < 1e-6,
+            "billed={}",
+            r.billed_instance_seconds
+        );
+    }
+
+    #[test]
+    fn certain_coldstart_failures_black_hole_the_run() {
+        let mut cfg = fault_cfg(1000.0);
+        cfg.fault = FaultProfile::disabled().with_coldstart_failure_prob(1.0);
+        let r = ServerlessSimulator::new(cfg).run();
+        // No instance ever materializes: every arrival is a provisioning
+        // failure, and the counter taxonomy still adds up.
+        assert_eq!(r.cold_requests + r.warm_requests + r.rejected_requests, 0);
+        assert_eq!(r.coldstart_failures, r.total_requests);
+        assert_eq!(
+            r.total_requests,
+            r.cold_requests + r.warm_requests + r.rejected_requests + r.coldstart_failures
+        );
+    }
+
+    #[test]
+    fn full_outage_degradation_window_rejects_requests() {
+        let mut cfg = fault_cfg(1000.0);
+        cfg.fault = FaultProfile::disabled().with_degradation(0.0, 1000.0, 0.0);
+        let r = ServerlessSimulator::new(cfg).run();
+        assert_eq!(r.cold_requests + r.warm_requests, 0);
+        assert_eq!(r.rejected_requests, r.total_requests);
+        assert!(r.total_requests > 100);
+    }
+
+    #[test]
+    fn degradation_window_is_scoped_in_time() {
+        let mut cfg = fault_cfg(1000.0);
+        // Keep-alive shorter than the inter-arrival gap: every request
+        // needs a cold start, so the outage window (degradation blocks new
+        // instances, it does not evict warm ones) turns its arrivals into
+        // rejections while the rest of the run is unaffected.
+        cfg.expiration_threshold = 1.0;
+        cfg.fault = FaultProfile::disabled().with_degradation(400.0, 600.0, 0.0);
+        let r = ServerlessSimulator::new(cfg).run();
+        assert!(r.rejected_requests > 0);
+        assert!(r.cold_requests > 0);
+        // ~40 of ~200 arrivals land in the window.
+        assert!(r.rejected_requests < r.total_requests / 2);
+    }
+
+    #[test]
+    fn fault_run_is_reproducible_and_seed_sensitive() {
+        let mk = |seed: u64| {
+            let mut cfg = quick_cfg(0.9, 20_000.0, seed);
+            cfg.fault = FaultProfile::disabled().with_failure_prob(0.2);
+            cfg.retry = RetryPolicy::exponential(1.0, 60.0, 3);
+            ServerlessSimulator::new(cfg).run()
+        };
+        let a = mk(42);
+        let b = mk(42);
+        assert_eq!(a.total_requests, b.total_requests);
+        assert_eq!(a.failed_requests, b.failed_requests);
+        assert_eq!(a.retry_attempts, b.retry_attempts);
+        assert_eq!(a.avg_response_time.to_bits(), b.avg_response_time.to_bits());
+        let c = mk(43);
+        assert_ne!(a.failed_requests, c.failed_requests);
+    }
+
+    #[test]
+    fn failure_rate_matches_configured_probability() {
+        let mut cfg = quick_cfg(0.9, 100_000.0, 12);
+        cfg.fault = FaultProfile::disabled().with_failure_prob(0.1);
+        let r = ServerlessSimulator::new(cfg).run();
+        let served = (r.cold_requests + r.warm_requests) as f64;
+        let observed = r.failed_requests as f64 / served;
+        assert!((observed - 0.1).abs() < 0.01, "observed failure rate {observed}");
+        // Goodput + failure throughput = served throughput.
+        let served_rate = served / r.measured_time;
+        let fail_rate = (r.failed_requests + r.timeout_requests) as f64 / r.measured_time;
+        assert!((r.goodput + fail_rate - served_rate).abs() < 1e-9);
     }
 }

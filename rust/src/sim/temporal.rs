@@ -154,6 +154,8 @@ mod tests {
             seed: 123,
             capture_request_log: false,
             sample_interval: 50.0,
+            fault: crate::sim::fault::FaultProfile::disabled(),
+            retry: crate::sim::retry::RetryPolicy::none(),
         }
     }
 

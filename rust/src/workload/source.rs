@@ -48,7 +48,11 @@ impl ArrivalMode {
     pub fn runtime(&self, horizon: f64) -> ArrivalSource {
         match self {
             ArrivalMode::Process(p) => ArrivalSource::process(p.replica()),
-            ArrivalMode::Trace(t) => ArrivalSource::replay(Arc::clone(t)),
+            // Trace modes are built from ingestion paths that sort (or
+            // validate) timestamps up front, so an unsorted vector here is
+            // construction-order corruption, not user input.
+            ArrivalMode::Trace(t) => ArrivalSource::replay(Arc::clone(t))
+                .expect("ArrivalMode::Trace timestamps must be sorted non-decreasing"),
             ArrivalMode::Streaming(s) => ArrivalSource::Stream(s.build(horizon)),
         }
     }

@@ -217,13 +217,20 @@ impl ArrivalSource {
 
     /// Replay of a recorded arrival vector. The times must be sorted
     /// non-decreasing — a backwards clock would silently corrupt the
-    /// engines' time-weighted accumulators (checked in debug builds).
-    pub fn replay(times: Arc<Vec<f64>>) -> ArrivalSource {
-        debug_assert!(
-            times.windows(2).all(|w| w[0] <= w[1]),
-            "recorded arrival times must be sorted non-decreasing"
-        );
-        ArrivalSource::Replay { times, next: 0 }
+    /// engines' time-weighted accumulators, so unsorted input is rejected
+    /// here, in release builds too.
+    pub fn replay(times: Arc<Vec<f64>>) -> anyhow::Result<ArrivalSource> {
+        if let Some(i) = times.windows(2).position(|w| w[0] > w[1]) {
+            anyhow::bail!(
+                "recorded arrival times must be sorted non-decreasing: \
+                 times[{}] = {} > times[{}] = {}",
+                i,
+                times[i],
+                i + 1,
+                times[i + 1]
+            );
+        }
+        Ok(ArrivalSource::Replay { times, next: 0 })
     }
 
     /// The next absolute arrival time after `now`, or `None` when the
@@ -325,12 +332,22 @@ mod tests {
     #[test]
     fn replay_source_yields_each_time_once_then_exhausts() {
         let mut rng = Rng::new(1);
-        let mut src = ArrivalSource::replay(Arc::new(vec![1.0, 2.5, 9.0]));
+        let mut src = ArrivalSource::replay(Arc::new(vec![1.0, 2.5, 9.0])).unwrap();
         let mut got = Vec::new();
         while let Some(t) = src.next_after(SimTime::ZERO, &mut rng) {
             got.push(t.as_secs());
         }
         assert_eq!(got, vec![1.0, 2.5, 9.0]);
         assert!(src.next_after(SimTime::ZERO, &mut rng).is_none());
+    }
+
+    #[test]
+    fn replay_rejects_unsorted_timestamps() {
+        let err = ArrivalSource::replay(Arc::new(vec![1.0, 3.0, 2.0])).unwrap_err().to_string();
+        assert!(err.contains("sorted non-decreasing"), "{err}");
+        assert!(err.contains("times[1] = 3 > times[2] = 2"), "{err}");
+        // Equal timestamps (simultaneous arrivals) stay legal.
+        assert!(ArrivalSource::replay(Arc::new(vec![1.0, 1.0, 2.0])).is_ok());
+        assert!(ArrivalSource::replay(Arc::new(vec![])).is_ok());
     }
 }

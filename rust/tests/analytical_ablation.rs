@@ -27,6 +27,8 @@ fn base_cfg(threshold: f64, horizon: f64) -> SimConfig {
         seed: 1234,
         capture_request_log: false,
         sample_interval: 0.0,
+        fault: simfaas::sim::FaultProfile::disabled(),
+        retry: simfaas::sim::RetryPolicy::none(),
     }
 }
 

@@ -100,6 +100,59 @@ fn steady_json_is_parsable_shape() {
     assert!(line.ends_with('}'));
 }
 
+/// The fault-injection flags flow through to both engines and both output
+/// formats, and a malformed retry spec is a clean error naming the flag.
+#[test]
+fn fault_flags_surface_reliability_metrics() {
+    let (ok, text) = simfaas(&[
+        "steady",
+        "--horizon",
+        "10000",
+        "--seed",
+        "3",
+        "--failure-rate",
+        "0.1",
+        "--timeout",
+        "30",
+        "--retry",
+        "exponential:0.1,5,4",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("Success Rate"), "{text}");
+    assert!(text.contains("Failures (transient/timeout/coldstart)"), "{text}");
+    assert!(text.contains("Retries (attempts/exhausted)"), "{text}");
+
+    let (ok, text) =
+        simfaas(&["steady", "--horizon", "10000", "--failure-rate", "0.1", "--json"]);
+    assert!(ok, "{text}");
+    let line = text.lines().find(|l| l.starts_with('{')).expect("json line");
+    assert!(line.contains("\"failed_requests\":"), "{line}");
+    assert!(line.contains("\"goodput\":"), "{line}");
+
+    let (ok, text) = simfaas(&[
+        "fleet",
+        "--functions",
+        "4",
+        "--horizon",
+        "2000",
+        "--skip",
+        "0",
+        "--failure-rate",
+        "0.1",
+        "--retry",
+        "fixed:0.5,3",
+        "--json",
+    ]);
+    assert!(ok, "{text}");
+    let line = text.lines().find(|l| l.starts_with('{')).expect("json line");
+    assert!(line.contains("\"retry_attempts\":"), "{line}");
+    assert!(line.contains("\"success_rate\":"), "{line}");
+
+    let (ok, text) = simfaas(&["steady", "--horizon", "1000", "--retry", "cubic:1"]);
+    assert!(!ok);
+    assert!(text.contains("--retry"), "{text}");
+}
+
 #[test]
 fn temporal_prints_ci() {
     let (ok, text) =

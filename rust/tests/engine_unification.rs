@@ -21,8 +21,8 @@
 
 use simfaas::fleet::{FleetConfig, PolicySpec};
 use simfaas::sim::{
-    InitialState, ParServerlessSimulator, Process, Rng, ServerlessSimulator,
-    ServerlessTemporalSimulator, SimConfig, SimResults,
+    FaultProfile, InitialState, ParServerlessSimulator, Process, RetryPolicy, Rng,
+    ServerlessSimulator, ServerlessTemporalSimulator, SimConfig, SimResults,
 };
 use simfaas::workload::SyntheticTrace;
 
@@ -50,6 +50,13 @@ fn digest(r: &SimResults) -> Vec<u64> {
         r.response_p99.to_bits(),
         r.billed_instance_seconds.to_bits(),
         r.wasted_prewarm_seconds.to_bits(),
+        r.failed_requests,
+        r.timeout_requests,
+        r.coldstart_failures,
+        r.retry_attempts,
+        r.retry_exhausted,
+        r.wasted_work_seconds.to_bits(),
+        r.goodput.to_bits(),
     ]
 }
 
@@ -67,6 +74,13 @@ fn fleet_digest(res: &simfaas::FleetResults) -> Vec<u64> {
         a.response_p95.to_bits(),
         a.billed_instance_seconds.to_bits(),
         a.wasted_prewarm_seconds.to_bits(),
+        a.failed_requests,
+        a.timeout_requests,
+        a.coldstart_failures,
+        a.retry_attempts,
+        a.retry_exhausted,
+        a.wasted_work_seconds.to_bits(),
+        a.goodput.to_bits(),
     ]);
     d
 }
@@ -85,6 +99,8 @@ fn const_cfg(arrival: f64, warm: f64, cold: f64, threshold: f64, horizon: f64) -
         seed: 7,
         capture_request_log: false,
         sample_interval: 0.0,
+        fault: FaultProfile::disabled(),
+        retry: RetryPolicy::none(),
     }
 }
 
@@ -301,6 +317,8 @@ fn single_prewarm_in_flight_covers_the_whole_lead_window() {
         skip_initial: 0.0,
         threads: 1,
         prewarm_lead: 3.0,
+        fault: FaultProfile::disabled(),
+        retry: RetryPolicy::none(),
     };
     let results = cfg.run();
     let r = &results.per_function[0];
@@ -340,6 +358,65 @@ fn prewarm_fleet_bit_identical_across_thread_counts() {
     }
     // And the coupled path agrees with the sharded path when the cap
     // never binds, prewarm instances included.
+    let coupled = base.clone().with_fleet_cap(1_000_000).run();
+    assert_eq!(fleet_digest(&coupled), fleet_digest(&reference));
+}
+
+/// Reliability-layer bit-identity contract: a disabled [`FaultProfile`] —
+/// even alongside an armed [`RetryPolicy`] — never touches the fault RNG
+/// lane or schedules a reliability event, so every engine's output digest
+/// (reliability counters included) equals the fault-free run's, bit for
+/// bit.
+#[test]
+fn disabled_fault_profile_is_bit_identical_on_every_engine() {
+    let cfg = SimConfig::table1().with_horizon(30_000.0).with_seed(0xFA17);
+    let faulted = cfg
+        .clone()
+        .with_fault(FaultProfile::disabled())
+        .with_retry(RetryPolicy::exponential(0.1, 5.0, 4));
+
+    let steady = ServerlessSimulator::new(cfg.clone()).run();
+    let steady_f = ServerlessSimulator::new(faulted.clone()).run();
+    assert_eq!(digest(&steady), digest(&steady_f));
+    assert_eq!(steady_f.failed_requests, 0);
+    assert_eq!(steady_f.retry_attempts, 0);
+
+    let par = ParServerlessSimulator::new(cfg.clone(), 3).run();
+    let par_f = ParServerlessSimulator::new(faulted.clone(), 3).run();
+    assert_eq!(digest(&par), digest(&par_f));
+
+    let fleet = FleetConfig::from_sim_configs(&[cfg], PolicySpec::fixed(600.0)).run();
+    let fleet_f = FleetConfig::from_sim_configs(&[faulted], PolicySpec::fixed(600.0))
+        .with_fault(FaultProfile::disabled())
+        .with_retry(RetryPolicy::exponential(0.1, 5.0, 4))
+        .run();
+    assert_eq!(fleet_digest(&fleet), fleet_digest(&fleet_f));
+}
+
+/// Retry storms keep the sharded determinism contract: each engine draws
+/// retries and fault verdicts from its own seed-derived fault lane, so a
+/// faulted fleet is bit-identical for any thread count (and the coupled
+/// path agrees while the cap never binds).
+#[test]
+fn faulted_fleet_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(91);
+    let trace = SyntheticTrace::generate(10, &mut rng);
+    let base = FleetConfig::from_trace(&trace, 4_000.0, 0.0, 0xFA57, PolicySpec::fixed(300.0))
+        .with_fault(
+            FaultProfile::disabled()
+                .with_failure_prob(0.1)
+                .with_coldstart_failure_prob(0.02)
+                .with_timeout(8.0),
+        )
+        .with_retry(RetryPolicy::exponential(0.05, 2.0, 4));
+    let reference = base.clone().with_threads(1).run();
+    // The faults actually fired — this is not a vacuous pin.
+    assert!(reference.aggregate.failed_requests > 0);
+    assert!(reference.aggregate.retry_attempts > 0);
+    for threads in [2, 8] {
+        let res = base.clone().with_threads(threads).run();
+        assert_eq!(fleet_digest(&res), fleet_digest(&reference), "threads={threads}");
+    }
     let coupled = base.clone().with_fleet_cap(1_000_000).run();
     assert_eq!(fleet_digest(&coupled), fleet_digest(&reference));
 }

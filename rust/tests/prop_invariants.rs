@@ -82,6 +82,8 @@ fn gen_config(seed: u64) -> SimConfig {
         seed: g.next_u64(),
         capture_request_log: true,
         sample_interval: 0.0,
+        fault: simfaas::sim::FaultProfile::disabled(),
+        retry: simfaas::sim::RetryPolicy::none(),
     }
 }
 
@@ -253,6 +255,8 @@ fn newest_first_routing_targets_youngest_idle_instance() {
         seed: 42,
         capture_request_log: true,
         sample_interval: 0.0,
+        fault: simfaas::sim::FaultProfile::disabled(),
+        retry: simfaas::sim::RetryPolicy::none(),
     };
     let mut sim = ServerlessSimulator::new(cfg);
     sim.set_initial_state(&[0.0, 0.0, 0.0], &[]);
@@ -288,6 +292,8 @@ fn batch_arrivals_spawn_parallel_instances() {
         seed: 9,
         capture_request_log: true,
         sample_interval: 0.0,
+        fault: simfaas::sim::FaultProfile::disabled(),
+        retry: simfaas::sim::RetryPolicy::none(),
     };
     let mut sim = ServerlessSimulator::new(cfg);
     let r = sim.run();

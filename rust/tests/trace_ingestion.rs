@@ -91,6 +91,8 @@ fn streaming_fleet_is_bit_identical_to_eager_materialization() {
         skip_initial: 0.0,
         threads: 0,
         prewarm_lead: 0.0,
+        fault: simfaas::sim::FaultProfile::disabled(),
+        retry: simfaas::sim::RetryPolicy::none(),
     }
     .run();
 

@@ -17,6 +17,25 @@ import json
 import sys
 
 
+def load_metrics(path: str) -> dict:
+    """Load a bench record and return its events_per_sec map.
+
+    A record without the key fails with a message naming the key and the
+    file (a renamed or half-written record must not silently pass the
+    gate as "no cases to compare").
+    """
+    with open(path) as f:
+        record = json.load(f)
+    if "events_per_sec" not in record:
+        print(
+            f"error: {path} is missing the 'events_per_sec' key "
+            f"(top-level keys: {', '.join(sorted(record)) or 'none'})",
+            file=sys.stderr,
+        )
+        sys.exit(2)
+    return record["events_per_sec"]
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline")
@@ -29,10 +48,8 @@ def main() -> int:
     )
     args = ap.parse_args()
 
-    with open(args.baseline) as f:
-        baseline = json.load(f).get("events_per_sec", {})
-    with open(args.fresh) as f:
-        fresh = json.load(f).get("events_per_sec", {})
+    baseline = load_metrics(args.baseline)
+    fresh = load_metrics(args.fresh)
 
     if not baseline:
         print(f"error: {args.baseline} has no events_per_sec cases", file=sys.stderr)
@@ -43,7 +60,10 @@ def main() -> int:
         floor = base_rate * (1.0 - args.tolerance)
         got = fresh.get(case)
         if got is None:
-            failures.append(f"{case}: missing from fresh record (baseline {base_rate:.3g})")
+            failures.append(
+                f"{case}: missing key in {args.fresh} "
+                f"(baseline has {base_rate:.3g} events/s for it)"
+            )
             continue
         verdict = "ok" if got >= floor else "REGRESSED"
         print(
