@@ -185,6 +185,30 @@ fn main() {
     assert!(fault_res.aggregate.retry_attempts > 0, "retry layer did not fire");
     rates.set("fault_events_per_sec", eps_fault);
 
+    // --- telemetry recording overhead ---
+    // Same 500-function mix with the observer enabled: every request
+    // appends a span and every 60 sim-seconds each function appends a
+    // state sample. Telemetry draws no RNG and schedules no events, so
+    // this isolates the pure buffer-append cost against fleet/500 above.
+    let telem_cfg = fleet_cfg.clone().with_telemetry(60.0);
+    let (res_telem, telem_res) =
+        harness::bench("telemetry/record_overhead", 3, || telem_cfg.run());
+    assert_eq!(fleet_digest(&telem_res), ref_digest, "recording changed the simulation");
+    let recorders = telem_res.telemetry.as_ref().expect("telemetry enabled");
+    let span_total: u64 = recorders.iter().map(|r| r.spans.len() as u64).sum();
+    assert_eq!(span_total, telem_res.aggregate.total_requests, "span stream incomplete");
+    let telem_events =
+        telem_res.aggregate.total_requests * 2 + telem_res.aggregate.instances_expired;
+    let eps_telem = telem_events as f64 / res_telem.mean_s;
+    let sample_total: usize = recorders.iter().map(|r| r.samples.len()).sum();
+    println!(
+        "  -> {:.2} M events/s while recording ({} spans, {} samples)",
+        eps_telem / 1e6,
+        span_total,
+        sample_total
+    );
+    rates.set("telemetry_events_per_sec", eps_telem);
+
     json.set("events_per_sec", rates);
     let path = std::env::var("SIMFAAS_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_engine.json".to_string());

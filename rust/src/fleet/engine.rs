@@ -241,6 +241,26 @@ impl FunctionEngine {
         self.core.set_now(t);
     }
 
+    /// Attach a telemetry observer to this function's core
+    /// (DESIGN.md §Observability). Capture draws no RNG and schedules no
+    /// events, so the bit-identity contract above is unaffected.
+    pub(super) fn set_observer(&mut self, observer: crate::telemetry::Observer) {
+        self.core.set_observer(observer);
+    }
+
+    /// Detach the observer (if any) and return its in-memory recording.
+    pub(super) fn take_recorder(&mut self) -> Option<crate::telemetry::TelemetryRecorder> {
+        self.core.take_observer().and_then(crate::telemetry::Observer::into_recorder)
+    }
+
+    /// Emit any internal-state samples due at the engine's current clock
+    /// (no-op without an observer). `cap_headroom` is the fleet gate's
+    /// remaining capacity for the coupled runner, `None` when uncapped.
+    #[inline]
+    pub(super) fn sample_tick(&mut self, cap_headroom: Option<u64>) {
+        self.core.sample_tick(cap_headroom);
+    }
+
     pub(super) fn maybe_start_stats(&mut self, event_time: SimTime) {
         self.core.maybe_start_stats(event_time);
     }

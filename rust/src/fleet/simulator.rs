@@ -29,6 +29,7 @@ use crate::sim::retry::RetryPolicy;
 use crate::sim::results::SimResults;
 use crate::sim::simulator::SimConfig;
 use crate::sim::time::SimTime;
+use crate::telemetry::{Observer, TelemetryRecorder};
 use crate::workload::azure::SyntheticTrace;
 use crate::workload::source::TraceSource;
 
@@ -65,6 +66,12 @@ pub struct FleetConfig {
     pub fault: FaultProfile,
     /// Retry policy clients apply to failed/timed-out/rejected requests.
     pub retry: RetryPolicy,
+    /// Telemetry sampling interval in seconds: `Some(interval)` attaches a
+    /// recording [`Observer`] to every function (spans always; an interval
+    /// `<= 0` records spans only) and fills [`FleetResults::telemetry`].
+    /// `None` disables capture entirely — results stay bit-identical
+    /// either way (capture draws no RNG and schedules no events).
+    pub telemetry: Option<f64>,
 }
 
 impl FleetConfig {
@@ -87,6 +94,7 @@ impl FleetConfig {
             prewarm_lead: 0.0,
             fault: FaultProfile::disabled(),
             retry: RetryPolicy::none(),
+            telemetry: None,
         }
     }
 
@@ -117,6 +125,7 @@ impl FleetConfig {
             prewarm_lead: 0.0,
             fault: FaultProfile::disabled(),
             retry: RetryPolicy::none(),
+            telemetry: None,
         }
     }
 
@@ -174,8 +183,15 @@ impl FleetConfig {
         self
     }
 
+    /// Enable telemetry capture with the given internal-state sampling
+    /// interval in seconds (an interval `<= 0` records spans only).
+    pub fn with_telemetry(mut self, interval: f64) -> Self {
+        self.telemetry = Some(interval);
+        self
+    }
+
     fn build_engine(&self, i: usize) -> FunctionEngine {
-        FunctionEngine::new(
+        let mut engine = FunctionEngine::new(
             i as u32,
             &self.functions[i],
             self.policy.build(),
@@ -184,25 +200,38 @@ impl FleetConfig {
             self.horizon,
             self.fault.clone(),
             self.retry.clone(),
-        )
+        );
+        if let Some(interval) = self.telemetry {
+            engine.set_observer(Observer::recording(i as u32, interval));
+        }
+        engine
     }
 
     /// Run the fleet to the horizon.
     pub fn run(&self) -> FleetResults {
         assert!(!self.functions.is_empty(), "fleet has no functions");
-        let (per_function, cap_rejections) = match self.fleet_max_concurrency {
-            None => (self.run_sharded(), 0),
+        let (per_function, recorders, cap_rejections) = match self.fleet_max_concurrency {
+            None => {
+                let (runs, recs) = self.run_sharded();
+                (runs, recs, 0)
+            }
             Some(cap) => self.run_coupled(cap),
         };
         let names = self.functions.iter().map(|f| f.name.clone()).collect();
         let aggregate = FleetAggregate::from_runs(&per_function, cap_rejections);
-        FleetResults { names, per_function, aggregate }
+        // Recorders come back in function-index order regardless of the
+        // shard/thread count, so the recorded bytes are deterministic.
+        let telemetry = self
+            .telemetry
+            .is_some()
+            .then(|| recorders.into_iter().map(Option::unwrap_or_default).collect());
+        FleetResults { names, per_function, aggregate, telemetry }
     }
 
     /// Independent functions, one engine per shard job.
-    fn run_sharded(&self) -> Vec<SimResults> {
+    fn run_sharded(&self) -> (Vec<SimResults>, Vec<Option<TelemetryRecorder>>) {
         let horizon = SimTime::from_secs(self.horizon);
-        run_indexed(self.functions.len(), self.threads, |i| {
+        let runs = run_indexed(self.functions.len(), self.threads, |i| {
             let mut engine = self.build_engine(i);
             let mut queue = FleetQueue::with_capacity(1024);
             let mut gate = FleetGate::unbounded();
@@ -211,17 +240,20 @@ impl FleetConfig {
             while let Some((t, _f, ev)) = queue.pop() {
                 engine.maybe_start_stats(t);
                 engine.set_now(t);
+                engine.sample_tick(None);
                 if matches!(ev, Event::Horizon) {
                     break;
                 }
                 engine.handle_event(&mut queue, &mut gate, ev);
             }
-            engine.finish(horizon)
-        })
+            let results = engine.finish(horizon);
+            (results, engine.take_recorder())
+        });
+        runs.into_iter().unzip()
     }
 
     /// Cap-coupled functions interleaved on one queue (single-threaded).
-    fn run_coupled(&self, cap: usize) -> (Vec<SimResults>, u64) {
+    fn run_coupled(&self, cap: usize) -> (Vec<SimResults>, Vec<Option<TelemetryRecorder>>, u64) {
         let horizon = SimTime::from_secs(self.horizon);
         let mut engines: Vec<FunctionEngine> =
             (0..self.functions.len()).map(|i| self.build_engine(i)).collect();
@@ -238,10 +270,19 @@ impl FleetConfig {
             let engine = &mut engines[f as usize];
             engine.maybe_start_stats(t);
             engine.set_now(t);
+            engine.sample_tick(Some((cap - gate.live) as u64));
             engine.handle_event(&mut queue, &mut gate, ev);
         }
-        let runs = engines.iter_mut().map(|e| e.finish(horizon)).collect();
-        (runs, gate.cap_rejections)
+        let mut runs = Vec::with_capacity(engines.len());
+        let mut recorders = Vec::with_capacity(engines.len());
+        for engine in engines.iter_mut() {
+            runs.push(engine.finish(horizon));
+            // Flush samples due in the final (last event, horizon] window
+            // — `finish` advanced the engine clock to the horizon.
+            engine.sample_tick(Some((cap - gate.live) as u64));
+            recorders.push(engine.take_recorder());
+        }
+        (runs, recorders, gate.cap_rejections)
     }
 }
 
@@ -467,6 +508,9 @@ pub struct FleetResults {
     pub names: Vec<String>,
     pub per_function: Vec<SimResults>,
     pub aggregate: FleetAggregate,
+    /// Per-function telemetry recordings, index-aligned with `names`.
+    /// `Some` exactly when [`FleetConfig::telemetry`] was set.
+    pub telemetry: Option<Vec<TelemetryRecorder>>,
 }
 
 /// Fleet cost rollup: per-function estimates plus the exact sum.
@@ -655,6 +699,7 @@ mod tests {
                 prewarm_lead: 0.0,
                 fault: FaultProfile::disabled(),
                 retry: RetryPolicy::none(),
+                telemetry: None,
             }
             .run()
         };
@@ -745,6 +790,7 @@ mod tests {
             prewarm_lead: 0.0,
             fault: FaultProfile::disabled(),
             retry: RetryPolicy::none(),
+            telemetry: None,
         };
         let res = cfg.run();
         assert_eq!(res.aggregate.total_requests, 10);
@@ -782,6 +828,7 @@ mod tests {
             prewarm_lead: 15.0,
             fault: FaultProfile::disabled(),
             retry: RetryPolicy::none(),
+            telemetry: None,
         };
         let plain = base.clone().with_prewarm_lead(0.0).run();
         let prewarmed = base.run();

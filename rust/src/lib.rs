@@ -36,6 +36,9 @@
 //!   cost × output) executed by one [`run_scenario`] entry point. The CLI
 //!   subcommands are thin translators over it, and `simfaas run
 //!   <scenario.json>` executes spec files directly.
+//! * [`telemetry`] — the observability layer: per-request span records and
+//!   periodic internal-state samples captured through the `sim::core`
+//!   seam, with JSONL/CSV/Chrome-trace (Perfetto) exporters.
 //! * [`output`] — ASCII tables/plots and CSV/JSON writers used by the CLI,
 //!   examples and benches.
 //!
@@ -52,6 +55,7 @@ pub mod output;
 pub mod runtime;
 pub mod scenario;
 pub mod sim;
+pub mod telemetry;
 pub mod trace;
 pub mod whatif;
 pub mod workload;
@@ -65,3 +69,4 @@ pub use sim::{
     run_ensemble, EnsembleOpts, EnsembleResults, FaultProfile, Process, RetryPolicy,
     ServerlessSimulator, ServerlessTemporalSimulator, SimConfig, SimProcess, SimResults,
 };
+pub use telemetry::{Observer, TelemetryRecorder, TelemetrySink};

@@ -22,7 +22,7 @@ use simfaas::fleet::PolicyKind;
 use simfaas::output::{ascii_histogram, ascii_lines, Series, Table};
 use simfaas::scenario::{
     run_scenario_to_string, CostSpec, ExperimentSpec, FleetScenario, KeepAliveSpec,
-    OutputFormat, ProcessSpec, ReliabilitySpec, ScenarioSpec, SourceSpec,
+    ObservabilitySpec, OutputFormat, ProcessSpec, ReliabilitySpec, ScenarioSpec, SourceSpec,
 };
 use simfaas::sim::SimConfig;
 use simfaas::workload;
@@ -62,7 +62,7 @@ const COMMANDS: &[Cmd] = &[
     Cmd {
         name: "steady",
         summary: "steady-state simulation (Table 1)",
-        flags: "--rate --warm --cold --threshold --max-concurrency\n--horizon --skip --seed --json\n--failure-rate P --coldstart-failure-rate P --timeout S [--timeout-kills]\n--retry none|fixed:D[,N]|exponential:BASE,CAP[,N]",
+        flags: "--rate --warm --cold --threshold --max-concurrency\n--horizon --skip --seed --json\n--failure-rate P --coldstart-failure-rate P --timeout S [--timeout-kills]\n--retry none|fixed:D[,N]|exponential:BASE,CAP[,N]\n--record-trace out.jsonl (also writes .perfetto.json/.metrics.csv)\n--metrics-interval S (state samples every S sim-seconds)",
         operands: 0,
         run: cmd_steady,
     },
@@ -83,7 +83,7 @@ const COMMANDS: &[Cmd] = &[
     Cmd {
         name: "fleet",
         summary: "multi-function fleet simulation (synthetic mix or real Azure trace)",
-        flags: "--functions N --horizon --skip --seed --threads\n--policy fixed|adaptive --threshold (fixed)\n--range --bin (adaptive) --fleet-cap (0 = none)\n--prewarm-lead S (adaptive head-arm prewarm; 0 = off)\n--trace-dir DIR (Azure Functions 2019 dataset CSVs)\n--trace-top-k K --trace-scale X (with --trace-dir)\n--provider --memory --top K --json\n[--compare-thresholds a,b,c  fixed grid vs adaptive sweep]\n--failure-rate P --coldstart-failure-rate P --timeout S [--timeout-kills]\n--retry none|fixed:D[,N]|exponential:BASE,CAP[,N]",
+        flags: "--functions N --horizon --skip --seed --threads\n--policy fixed|adaptive --threshold (fixed)\n--range --bin (adaptive) --fleet-cap (0 = none)\n--prewarm-lead S (adaptive head-arm prewarm; 0 = off)\n--trace-dir DIR (Azure Functions 2019 dataset CSVs)\n--trace-top-k K --trace-scale X (with --trace-dir)\n--provider --memory --top K --json\n[--compare-thresholds a,b,c  fixed grid vs adaptive sweep]\n--failure-rate P --coldstart-failure-rate P --timeout S [--timeout-kills]\n--retry none|fixed:D[,N]|exponential:BASE,CAP[,N]\n--record-trace out.jsonl (also writes .perfetto.json/.metrics.csv)\n--metrics-interval S (state samples every S sim-seconds)",
         operands: 0,
         run: cmd_fleet,
     },
@@ -128,6 +128,13 @@ const COMMANDS: &[Cmd] = &[
         flags: "--trace file.csv",
         operands: 0,
         run: cmd_identify,
+    },
+    Cmd {
+        name: "inspect",
+        summary: "recompute warm-pool/cold-start estimates from a recorded span trace",
+        flags: "simfaas inspect <trace.jsonl> [--window S] [--skip S] [--json]",
+        operands: 1,
+        run: cmd_inspect,
     },
     Cmd {
         name: "probe",
@@ -249,6 +256,19 @@ fn reliability_from_args(args: &Args) -> Result<Option<ReliabilitySpec>> {
     Ok(Some(ReliabilitySpec::new(fault, retry)))
 }
 
+/// Flags → the optional observability axis (span capture + state
+/// sampling), shared by `steady` and `fleet`. Returns `None` when neither
+/// flag is given, keeping the spec — and the run — bit-identical to the
+/// pre-telemetry CLI.
+fn observability_from_args(args: &Args) -> Result<Option<ObservabilitySpec>> {
+    let record_trace = args.get("record-trace").map(str::to_string);
+    let metrics_interval = args.get_f64("metrics-interval", 0.0)?;
+    if record_trace.is_none() && metrics_interval == 0.0 {
+        return Ok(None);
+    }
+    Ok(Some(ObservabilitySpec::new(record_trace, metrics_interval)))
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let path = args
         .positional(0)
@@ -279,6 +299,9 @@ fn cmd_steady(args: &Args) -> Result<()> {
     let mut spec = core_spec(args, "steady")?;
     if let Some(rel) = reliability_from_args(args)? {
         spec = spec.with_reliability(rel);
+    }
+    if let Some(obs) = observability_from_args(args)? {
+        spec = spec.with_observability(obs);
     }
     if args.get_bool("json") {
         spec = spec.with_output(OutputFormat::Json);
@@ -369,6 +392,15 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     }
     if let Some(rel) = reliability_from_args(args)? {
         spec = spec.with_reliability(rel);
+    }
+    if let Some(obs) = observability_from_args(args)? {
+        if comparison {
+            bail!(
+                "--record-trace/--metrics-interval apply to a single fleet run, \
+                 not a policy comparison"
+            );
+        }
+        spec = spec.with_observability(obs);
     }
     if json_out && !comparison {
         spec = spec.with_output(OutputFormat::Json);
@@ -533,6 +565,85 @@ fn cmd_identify(args: &Args) -> Result<()> {
     t.row(vec!["cold start prob".to_string(), format!("{:.4} %", p.cold_start_prob * 100.0)]);
     t.row(vec!["rejection prob".to_string(), format!("{:.4} %", p.rejection_prob * 100.0)]);
     t.row(vec!["warm pool (10 min window)".to_string(), format!("{pool:.3}")]);
+    print!("{t}");
+    Ok(())
+}
+
+/// `simfaas inspect <trace.jsonl>` — close the loop between the telemetry
+/// layer and the paper's §5.2/§5.3 identification: map recorded spans back
+/// into the shared trace schema, then run the same estimators `identify`
+/// applies to emulator/AWS logs (arrival rate, service moments, cold-start
+/// probability, sliding-window warm-pool size).
+fn cmd_inspect(args: &Args) -> Result<()> {
+    use simfaas::telemetry::{SpanOutcome, SpanVerdict};
+    use simfaas::trace::{identify, mean_warm_pool, Outcome, RequestRecord};
+    let path = args
+        .positional(0)
+        .context("usage: simfaas inspect <trace.jsonl> [--window S] [--skip S] [--json]")?
+        .to_string();
+    let window = args.get_f64("window", 600.0)?;
+    let skip = args.get_f64("skip", 0.0)?;
+    let json_out = args.get_bool("json");
+    args.check_unknown()?;
+    let f = std::fs::File::open(&path).with_context(|| format!("opening {path}"))?;
+    let spans = simfaas::telemetry::read_spans_jsonl(std::io::BufReader::new(f))?;
+    if spans.is_empty() {
+        bail!("{path}: no spans recorded");
+    }
+    let mut records: Vec<RequestRecord> = spans
+        .iter()
+        .map(|s| RequestRecord {
+            arrived_at: s.queued_at,
+            outcome: match (s.outcome, s.verdict) {
+                (SpanOutcome::Rejected, _) => Outcome::Rejected,
+                (SpanOutcome::ColdStartFailed, _) => Outcome::Failed,
+                (_, SpanVerdict::Timeout) => Outcome::Timeout,
+                (_, SpanVerdict::Failed) => Outcome::Failed,
+                (o, SpanVerdict::Ok) if s.attempt > 1 => {
+                    debug_assert!(matches!(o, SpanOutcome::Cold | SpanOutcome::Warm));
+                    Outcome::Retried
+                }
+                (SpanOutcome::Cold, SpanVerdict::Ok) => Outcome::Cold,
+                (SpanOutcome::Warm, SpanVerdict::Ok) => Outcome::Warm,
+            },
+            response_time: s.response_time,
+            // Instance ids are per-function in a fleet trace; qualify them
+            // so the warm-pool window never conflates two functions.
+            instance_id: s
+                .instance
+                .map(|i| format!("f{}-i{}", s.function, i))
+                .unwrap_or_default(),
+        })
+        .collect();
+    // Fleet traces concatenate per-function span streams; the estimators
+    // expect one time-ordered trace.
+    records.sort_by(|a, b| a.arrived_at.total_cmp(&b.arrived_at));
+    let p = identify(&records);
+    let pool = mean_warm_pool(&records, window, skip);
+    if json_out {
+        use simfaas::output::json::JsonValue;
+        let mut o = JsonValue::object();
+        o.set("spans", records.len())
+            .set("arrival_rate", p.arrival_rate)
+            .set("warm_mean", p.warm_mean)
+            .set("warm_std", p.warm_std)
+            .set("cold_mean", p.cold_mean)
+            .set("cold_std", p.cold_std)
+            .set("cold_start_prob", p.cold_start_prob)
+            .set("rejection_prob", p.rejection_prob)
+            .set("mean_warm_pool", pool)
+            .set("window", window);
+        println!("{o}");
+        return Ok(());
+    }
+    let mut t = Table::new(vec!["parameter", "estimate"]);
+    t.row(vec!["spans".to_string(), format!("{}", records.len())]);
+    t.row(vec!["arrival rate".to_string(), format!("{:.4} req/s", p.arrival_rate)]);
+    t.row(vec!["warm mean".to_string(), format!("{:.4} s (std {:.4})", p.warm_mean, p.warm_std)]);
+    t.row(vec!["cold mean".to_string(), format!("{:.4} s (std {:.4})", p.cold_mean, p.cold_std)]);
+    t.row(vec!["cold start prob".to_string(), format!("{:.4} %", p.cold_start_prob * 100.0)]);
+    t.row(vec!["rejection prob".to_string(), format!("{:.4} %", p.rejection_prob * 100.0)]);
+    t.row(vec![format!("warm pool ({window:.0} s window)"), format!("{pool:.3}")]);
     print!("{t}");
     Ok(())
 }

@@ -8,8 +8,9 @@
 //! error messages name the offending path.
 
 use super::spec::{
-    CostSpec, ExperimentSpec, FleetScenario, KeepAliveSpec, OutputFormat, OutputSpec,
-    PlatformSpec, ProcessSpec, ReliabilitySpec, RunSpec, ScenarioSpec, SourceSpec, WorkloadSpec,
+    CostSpec, ExperimentSpec, FleetScenario, KeepAliveSpec, ObservabilitySpec, OutputFormat,
+    OutputSpec, PlatformSpec, ProcessSpec, ReliabilitySpec, RunSpec, ScenarioSpec, SourceSpec,
+    WorkloadSpec,
 };
 use crate::cost::Provider;
 use crate::fleet::PolicyKind;
@@ -535,6 +536,36 @@ fn reliability_from_json(v: &JsonValue) -> Result<ReliabilitySpec> {
     })
 }
 
+// ----------------------------------------------------------- observability
+
+fn observability_to_json(o: &ObservabilitySpec) -> JsonValue {
+    let mut j = JsonValue::object();
+    if let Some(path) = &o.record_trace {
+        j.set("record_trace", path.as_str());
+    }
+    if o.metrics_interval != 0.0 {
+        j.set("metrics_interval", o.metrics_interval);
+    }
+    j
+}
+
+fn observability_from_json(v: &JsonValue) -> Result<ObservabilitySpec> {
+    let what = "observability";
+    let o = as_obj(v, what)?;
+    check_keys(o, &["record_trace", "metrics_interval"], what)?;
+    Ok(ObservabilitySpec {
+        record_trace: match o.get("record_trace") {
+            None => None,
+            Some(p) => Some(
+                p.as_str()
+                    .context("observability.record_trace must be a file-path string")?
+                    .to_string(),
+            ),
+        },
+        metrics_interval: f64_field(o, "metrics_interval", what, 0.0)?,
+    })
+}
+
 // -------------------------------------------------------------- experiment
 
 fn experiment_to_json(e: &ExperimentSpec) -> JsonValue {
@@ -727,6 +758,9 @@ impl ScenarioSpec {
         if let Some(r) = &self.reliability {
             o.set("reliability", reliability_to_json(r));
         }
+        if let Some(obs) = &self.observability {
+            o.set("observability", observability_to_json(obs));
+        }
         let mut out = JsonValue::object();
         out.set(
             "format",
@@ -751,7 +785,17 @@ impl ScenarioSpec {
         let o = as_obj(v, "scenario")?;
         check_keys(
             o,
-            &["name", "workload", "platform", "run", "experiment", "cost", "reliability", "output"],
+            &[
+                "name",
+                "workload",
+                "platform",
+                "run",
+                "experiment",
+                "cost",
+                "reliability",
+                "observability",
+                "output",
+            ],
             "scenario",
         )?;
         let name = str_field(o, "name", "scenario")?.to_string();
@@ -886,6 +930,11 @@ impl ScenarioSpec {
             Some(rv) => Some(reliability_from_json(rv)?),
         };
 
+        let observability = match o.get("observability") {
+            None => None,
+            Some(ov) => Some(observability_from_json(ov)?),
+        };
+
         let output = match o.get("output") {
             None => OutputSpec::default(),
             Some(ov) => {
@@ -905,7 +954,17 @@ impl ScenarioSpec {
             }
         };
 
-        Ok(ScenarioSpec { name, workload, platform, run, experiment, cost, reliability, output })
+        Ok(ScenarioSpec {
+            name,
+            workload,
+            platform,
+            run,
+            experiment,
+            cost,
+            reliability,
+            observability,
+            output,
+        })
     }
 
     /// Parse JSON text into a spec (reader for `simfaas run` files).
@@ -1092,6 +1151,42 @@ mod tests {
             .unwrap_err()
         );
         assert!(err.contains("none|fixed|exponential"), "{err}");
+    }
+
+    #[test]
+    fn observability_axis_roundtrips_and_rejects_unknowns() {
+        roundtrip(&ScenarioSpec::new("obs").with_observability(ObservabilitySpec::new(
+            Some("/tmp/spans.jsonl".into()),
+            60.0,
+        )));
+        roundtrip(
+            &ScenarioSpec::new("obs-fleet")
+                .with_experiment(ExperimentSpec::Fleet(FleetScenario::new(4)))
+                .with_observability(ObservabilitySpec::new(None, 30.0)),
+        );
+        // A default axis stays implicit field-by-field: empty object.
+        let spec = ScenarioSpec::new("noop").with_observability(ObservabilitySpec::default());
+        let text = spec.to_json_string();
+        assert!(text.contains("\"observability\":{}"), "{text}");
+        roundtrip(&spec);
+        // Unknown keys are errors with the path named.
+        let err = format!(
+            "{:#}",
+            ScenarioSpec::from_json_str(
+                r#"{"name":"x","experiment":{"type":"steady"},"observability":{"trace_path":"t"}}"#,
+            )
+            .unwrap_err()
+        );
+        assert!(err.contains("unknown key") && err.contains("trace_path"), "{err}");
+        // Type errors name the path.
+        let err = format!(
+            "{:#}",
+            ScenarioSpec::from_json_str(
+                r#"{"name":"x","experiment":{"type":"steady"},"observability":{"record_trace":3}}"#,
+            )
+            .unwrap_err()
+        );
+        assert!(err.contains("record_trace"), "{err}");
     }
 
     #[test]

@@ -41,9 +41,9 @@ pub mod json;
 pub mod run;
 pub mod spec;
 
-pub use run::{run_scenario, run_scenario_to_string, CostBlock, ScenarioReport};
+pub use run::{run_scenario, run_scenario_to_string, CostBlock, ScenarioReport, TelemetrySummary};
 pub use spec::{
-    CostSpec, ExperimentSpec, FleetScenario, KeepAliveSpec, OutputFormat, OutputSpec,
-    PlatformSpec, ProcessSpec, ReliabilitySpec, RunSpec, ScenarioSpec, SourceSpec, WorkloadSpec,
-    DEFAULT_SEED,
+    CostSpec, ExperimentSpec, FleetScenario, KeepAliveSpec, ObservabilitySpec, OutputFormat,
+    OutputSpec, PlatformSpec, ProcessSpec, ReliabilitySpec, RunSpec, ScenarioSpec, SourceSpec,
+    WorkloadSpec, DEFAULT_SEED,
 };

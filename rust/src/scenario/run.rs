@@ -8,7 +8,9 @@
 //! regression tests in this module pin scenario output against direct
 //! engine invocation).
 
-use super::spec::{CostSpec, ExperimentSpec, OutputFormat, ScenarioSpec, SourceSpec};
+use super::spec::{
+    CostSpec, ExperimentSpec, ObservabilitySpec, OutputFormat, ScenarioSpec, SourceSpec,
+};
 use crate::analytical::{self, ComparisonReport};
 use crate::cost::{estimate, scale_to, CostEstimate, FunctionConfig, PricingTable};
 use crate::figures;
@@ -20,9 +22,12 @@ use crate::sim::{
     InitialState, Process, Rng, ServerlessSimulator, ServerlessTemporalSimulator, SimResults,
     TemporalResults,
 };
+use crate::telemetry::{
+    chrome_trace, write_samples_csv, write_spans_jsonl, Observer, StateSample, TelemetryRecorder,
+};
 use crate::whatif::{self, PolicyOutcome};
 use crate::workload::{AzureDataset, SyntheticTrace, TraceProvenance, TraceSource};
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 /// Priced view of a single-function run (the `cost` axis output).
 #[derive(Debug, Clone)]
@@ -32,11 +37,32 @@ pub struct CostBlock {
     pub scaled: Option<CostEstimate>,
 }
 
+/// What the observability axis captured: record counts plus where the
+/// export files went (all `None` when no `record_trace` path was set).
+#[derive(Debug, Clone)]
+pub struct TelemetrySummary {
+    /// Captured span records across every function.
+    pub spans: usize,
+    /// Captured internal-state samples across every function.
+    pub samples: usize,
+    /// The span JSONL destination (`record_trace` verbatim), when written.
+    pub span_path: Option<String>,
+    /// The Chrome trace-event JSON destination, when written.
+    pub perfetto_path: Option<String>,
+    /// The time-series CSV destination, when written.
+    pub metrics_path: Option<String>,
+}
+
 /// What [`run_scenario`] hands back: the engine results for the spec's
 /// experiment, renderable as the CLI's tables ([`ScenarioReport::render`])
 /// or as JSON ([`ScenarioReport::to_json`]).
 pub enum ScenarioReport {
-    Steady { results: SimResults, cost: Option<CostBlock> },
+    Steady {
+        results: SimResults,
+        cost: Option<CostBlock>,
+        /// Set when the spec carries an observability axis.
+        telemetry: Option<TelemetrySummary>,
+    },
     Temporal { replications: usize, results: TemporalResults },
     EnsembleSingle { results: EnsembleResults },
     EnsembleGrid { replications: usize, grid: Vec<(f64, EnsembleResults)> },
@@ -50,6 +76,8 @@ pub enum ScenarioReport {
         /// Where the tenant mix came from (synthetic seed vs ingested
         /// trace) — rendered in the table and recorded in the JSON.
         provenance: TraceProvenance,
+        /// Set when the spec carries an observability axis.
+        telemetry: Option<TelemetrySummary>,
     },
     FleetComparison {
         functions: usize,
@@ -95,9 +123,20 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport> {
     spec.validate()?;
     Ok(match &spec.experiment {
         ExperimentSpec::Steady => {
-            let results = ServerlessSimulator::new(spec.sim_config()).run();
+            let mut sim = ServerlessSimulator::new(spec.sim_config());
+            if let Some(obs) = &spec.observability {
+                sim.set_observer(Observer::recording(0, obs.metrics_interval));
+            }
+            let results = sim.run();
+            let telemetry = match &spec.observability {
+                Some(obs) => {
+                    let recorder = sim.take_recorder().unwrap_or_default();
+                    Some(export_telemetry(&[recorder], &[spec.name.clone()], obs)?)
+                }
+                None => None,
+            };
             let cost = spec.cost.as_ref().map(|c| price(&results, c));
-            ScenarioReport::Steady { results, cost }
+            ScenarioReport::Steady { results, cost, telemetry }
         }
         ExperimentSpec::Temporal { replications, sample_interval, warm_pool } => {
             let mut cfg = spec.sim_config();
@@ -201,7 +240,16 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport> {
                     provenance,
                 }
             } else {
+                if let Some(obs) = &spec.observability {
+                    cfg.telemetry = Some(obs.metrics_interval);
+                }
                 let results = cfg.run();
+                let telemetry = match (&spec.observability, &results.telemetry) {
+                    (Some(obs), Some(recs)) => {
+                        Some(export_telemetry(recs, &results.names, obs)?)
+                    }
+                    _ => None,
+                };
                 let cost = fleet_cost(&cfg, &results, &pricing);
                 ScenarioReport::Fleet {
                     policy: cfg.policy.describe(),
@@ -209,6 +257,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport> {
                     cost,
                     top_k: f.top_k,
                     provenance,
+                    telemetry,
                 }
             }
         }
@@ -234,17 +283,95 @@ fn price(results: &SimResults, c: &CostSpec) -> CostBlock {
     CostBlock { estimate: est, scaled: c.scale_to_window.map(|w| scale_to(&est, w)) }
 }
 
+/// Summarize captured telemetry and, when `record_trace` is set, write the
+/// three export files: the span JSONL at the given path verbatim, the
+/// Chrome trace-event JSON at `<stem>.perfetto.json`, and the time-series
+/// CSV at `<stem>.metrics.csv` (stem = the path minus a `.jsonl` suffix).
+/// Recorders arrive in function order, so every export is byte-identical
+/// across thread counts.
+fn export_telemetry(
+    recorders: &[TelemetryRecorder],
+    names: &[String],
+    obs: &ObservabilitySpec,
+) -> Result<TelemetrySummary> {
+    let spans = recorders.iter().map(|r| r.spans.len()).sum();
+    let samples = recorders.iter().map(|r| r.samples.len()).sum();
+    let mut summary = TelemetrySummary {
+        spans,
+        samples,
+        span_path: None,
+        perfetto_path: None,
+        metrics_path: None,
+    };
+    if let Some(path) = &obs.record_trace {
+        let stem = path.strip_suffix(".jsonl").unwrap_or(path);
+        let mut jsonl = Vec::new();
+        for rec in recorders {
+            write_spans_jsonl(&mut jsonl, &rec.spans)?;
+        }
+        std::fs::write(path, &jsonl)
+            .with_context(|| format!("writing span trace {path}"))?;
+        summary.span_path = Some(path.clone());
+        let perfetto_path = format!("{stem}.perfetto.json");
+        let doc = chrome_trace(recorders, names);
+        std::fs::write(&perfetto_path, format!("{doc}\n"))
+            .with_context(|| format!("writing perfetto trace {perfetto_path}"))?;
+        summary.perfetto_path = Some(perfetto_path);
+        let metrics_path = format!("{stem}.metrics.csv");
+        let all: Vec<StateSample> =
+            recorders.iter().flat_map(|r| r.samples.iter().cloned()).collect();
+        let mut csv = Vec::new();
+        write_samples_csv(&mut csv, &all)?;
+        std::fs::write(&metrics_path, &csv)
+            .with_context(|| format!("writing metrics csv {metrics_path}"))?;
+        summary.metrics_path = Some(metrics_path);
+    }
+    Ok(summary)
+}
+
+/// The telemetry footer rendered under steady/fleet tables: counts plus
+/// where the exports went.
+fn render_telemetry(t: &TelemetrySummary) -> String {
+    let mut s = format!("telemetry: {} spans, {} samples\n", t.spans, t.samples);
+    if let (Some(spans), Some(perfetto), Some(metrics)) =
+        (&t.span_path, &t.perfetto_path, &t.metrics_path)
+    {
+        s.push_str(&format!("telemetry files: {spans} | {perfetto} | {metrics}\n"));
+    }
+    s
+}
+
+fn telemetry_json(t: &TelemetrySummary) -> JsonValue {
+    let mut o = JsonValue::object();
+    o.set("spans", t.spans).set("samples", t.samples);
+    if let Some(p) = &t.span_path {
+        o.set("span_path", p.as_str());
+    }
+    if let Some(p) = &t.perfetto_path {
+        o.set("perfetto_path", p.as_str());
+    }
+    if let Some(p) = &t.metrics_path {
+        o.set("metrics_path", p.as_str());
+    }
+    o
+}
+
 impl ScenarioReport {
     /// Render the human-readable report — character-identical to what the
     /// pre-scenario CLI subcommands printed.
     pub fn render(&self, spec: &ScenarioSpec) -> String {
         let mut s = String::new();
         match self {
-            ScenarioReport::Steady { results, cost } => match cost {
-                // The `cost` subcommand's report: pricing table + summary.
-                Some(block) => s.push_str(&render_cost(results, block)),
-                None => s.push_str(&results.to_string()),
-            },
+            ScenarioReport::Steady { results, cost, telemetry } => {
+                match cost {
+                    // The `cost` subcommand's report: pricing table + summary.
+                    Some(block) => s.push_str(&render_cost(results, block)),
+                    None => s.push_str(&results.to_string()),
+                }
+                if let Some(t) = telemetry {
+                    s.push_str(&render_telemetry(t));
+                }
+            }
             ScenarioReport::Temporal { replications, results } => {
                 let band = results.average_count_band();
                 let series = vec![
@@ -313,7 +440,7 @@ impl ScenarioReport {
             ScenarioReport::Compare { report } => {
                 s.push_str(&report.to_table());
             }
-            ScenarioReport::Fleet { policy, results, cost, top_k, provenance } => {
+            ScenarioReport::Fleet { policy, results, cost, top_k, provenance, telemetry } => {
                 let horizon = spec.run.horizon;
                 let seed = spec.run.seed;
                 s.push_str(&format!(
@@ -357,6 +484,9 @@ impl ScenarioReport {
                     s.push_str(&format!("top {top} functions by request volume:\n"));
                     s.push_str(&t.render());
                 }
+                if let Some(t) = telemetry {
+                    s.push_str(&render_telemetry(t));
+                }
             }
             ScenarioReport::FleetComparison { functions, outcomes, provenance } => {
                 let horizon = spec.run.horizon;
@@ -397,10 +527,13 @@ impl ScenarioReport {
     /// gained JSON with the scenario layer.
     pub fn to_json(&self, spec: &ScenarioSpec) -> JsonValue {
         match self {
-            ScenarioReport::Steady { results, cost } => {
+            ScenarioReport::Steady { results, cost, telemetry } => {
                 let mut o = results_to_json(results);
                 if let Some(block) = cost {
                     o.set("cost", cost_block_json(block));
+                }
+                if let Some(t) = telemetry {
+                    o.set("telemetry", telemetry_json(t));
                 }
                 o
             }
@@ -489,9 +622,12 @@ impl ScenarioReport {
                 );
                 o
             }
-            ScenarioReport::Fleet { results, cost, provenance, .. } => {
+            ScenarioReport::Fleet { results, cost, provenance, telemetry, .. } => {
                 let mut o = fleet_to_json(results, Some(cost));
                 o.set("trace", provenance_json(provenance));
+                if let Some(t) = telemetry {
+                    o.set("telemetry", telemetry_json(t));
+                }
                 o
             }
             ScenarioReport::FleetComparison { outcomes, provenance, .. } => {
@@ -671,8 +807,9 @@ mod tests {
             ServerlessSimulator::new(cfg).run()
         };
         match report {
-            ScenarioReport::Steady { results, cost } => {
+            ScenarioReport::Steady { results, cost, telemetry } => {
                 assert!(cost.is_none());
+                assert!(telemetry.is_none());
                 assert_results_bit_identical(&results, &direct);
             }
             _ => panic!("wrong report kind"),
@@ -1090,6 +1227,66 @@ mod tests {
             }
             _ => panic!("wrong report kinds"),
         }
+    }
+
+    /// The observability axis records spans/samples on both engines,
+    /// writes the three export files, and never perturbs the simulation
+    /// results (telemetry draws no RNG and schedules no events).
+    #[test]
+    fn observability_axis_records_and_exports() {
+        let dir =
+            std::env::temp_dir().join(format!("simfaas_run_telemetry_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace_path = dir.join("steady.jsonl").display().to_string();
+        let plain = ScenarioSpec::new("p").with_horizon(3_000.0).with_seed(5);
+        let observed = plain
+            .clone()
+            .with_observability(ObservabilitySpec::new(Some(trace_path.clone()), 60.0));
+        let (a, b) = (run_scenario(&plain).unwrap(), run_scenario(&observed).unwrap());
+        match (&a, &b) {
+            (
+                ScenarioReport::Steady { results: ra, telemetry: None, .. },
+                ScenarioReport::Steady { results: rb, telemetry: Some(t), .. },
+            ) => {
+                assert_results_bit_identical(ra, rb);
+                assert_eq!(t.spans as u64, rb.total_requests);
+                assert!(t.samples > 0);
+                let doc = JsonValue::parse(
+                    &std::fs::read_to_string(t.perfetto_path.as_ref().unwrap()).unwrap(),
+                )
+                .unwrap();
+                assert!(doc.get("traceEvents").is_some());
+                let metrics =
+                    std::fs::read_to_string(t.metrics_path.as_ref().unwrap()).unwrap();
+                assert!(metrics.starts_with("function,t,"), "{metrics}");
+                let spans = crate::telemetry::read_spans_jsonl(
+                    std::fs::read_to_string(&trace_path).unwrap().as_bytes(),
+                )
+                .unwrap();
+                assert_eq!(spans.len(), t.spans);
+            }
+            _ => panic!("wrong report kinds"),
+        }
+        // The summary reaches both output formats.
+        let text = b.render(&observed);
+        assert!(text.contains("telemetry:"), "{text}");
+        let json = b.to_json(&observed).to_string();
+        assert!(json.contains("\"telemetry\":"), "{json}");
+        // Fleet, interval-only: counts flow through FleetResults, no files.
+        let fleet = ScenarioSpec::new("f")
+            .with_horizon(800.0)
+            .with_skip_initial(0.0)
+            .with_experiment(ExperimentSpec::Fleet(FleetScenario::new(3)))
+            .with_observability(ObservabilitySpec::new(None, 120.0));
+        match run_scenario(&fleet).unwrap() {
+            ScenarioReport::Fleet { results, telemetry: Some(t), .. } => {
+                assert_eq!(t.spans as u64, results.aggregate.total_requests);
+                assert!(t.samples > 0);
+                assert!(t.span_path.is_none());
+            }
+            _ => panic!("wrong report kind"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

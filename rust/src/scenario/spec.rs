@@ -473,6 +473,44 @@ impl ReliabilitySpec {
     }
 }
 
+/// The observability axis: telemetry capture and export (see
+/// [`crate::telemetry`]). Consumed by the steady and fleet experiments;
+/// capture draws no RNG and schedules no events, so attaching the axis
+/// never changes simulation results.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ObservabilitySpec {
+    /// Write per-request spans to this JSONL path; derived sibling files
+    /// (`<stem>.perfetto.json`, `<stem>.metrics.csv`) carry the Chrome
+    /// trace-event timeline and the internal-state time-series. `None`
+    /// keeps recordings in memory (summary counts only).
+    pub record_trace: Option<String>,
+    /// Internal-state sampling interval in seconds; `<= 0` disables
+    /// time-series sampling (spans are always recorded).
+    pub metrics_interval: f64,
+}
+
+impl ObservabilitySpec {
+    pub fn new(record_trace: Option<String>, metrics_interval: f64) -> Self {
+        ObservabilitySpec { record_trace, metrics_interval }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(self.metrics_interval.is_finite() && self.metrics_interval >= 0.0) {
+            bail!(
+                "observability.metrics_interval must be a non-negative number of \
+                 seconds (0 disables sampling), got {}",
+                self.metrics_interval
+            );
+        }
+        if let Some(path) = &self.record_trace {
+            if path.is_empty() {
+                bail!("observability.record_trace must be a non-empty file path");
+            }
+        }
+        Ok(())
+    }
+}
+
 /// How the report renders.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum OutputFormat {
@@ -503,6 +541,8 @@ pub struct ScenarioSpec {
     pub cost: Option<CostSpec>,
     /// Optional fault-injection + retry axis (steady and fleet runs).
     pub reliability: Option<ReliabilitySpec>,
+    /// Optional telemetry capture/export axis (steady and fleet runs).
+    pub observability: Option<ObservabilitySpec>,
     pub output: OutputSpec,
 }
 
@@ -517,6 +557,7 @@ impl ScenarioSpec {
             experiment: ExperimentSpec::Steady,
             cost: None,
             reliability: None,
+            observability: None,
             output: OutputSpec::default(),
         }
     }
@@ -606,6 +647,12 @@ impl ScenarioSpec {
     /// Attach the fault-injection + retry axis.
     pub fn with_reliability(mut self, reliability: ReliabilitySpec) -> Self {
         self.reliability = Some(reliability);
+        self
+    }
+
+    /// Attach the telemetry capture/export axis.
+    pub fn with_observability(mut self, observability: ObservabilitySpec) -> Self {
+        self.observability = Some(observability);
         self
     }
 
@@ -801,6 +848,22 @@ impl ScenarioSpec {
                 );
             }
             r.validate()?;
+        }
+        if let Some(o) = &self.observability {
+            // Telemetry capture is wired through the steady and fleet
+            // engines; silently ignoring the axis elsewhere would defeat
+            // the spec's typo protection.
+            if !matches!(
+                self.experiment,
+                ExperimentSpec::Steady | ExperimentSpec::Fleet(_)
+            ) {
+                bail!(
+                    "observability: the {} experiment does not record telemetry \
+                     (the observability axis applies to steady and fleet)",
+                    self.experiment.kind()
+                );
+            }
+            o.validate()?;
         }
         if let Some(c) = &self.cost {
             // Only steady and fleet runs are priced; silently ignoring the
@@ -1102,6 +1165,40 @@ mod tests {
         ));
         let err = bad.validate().unwrap_err().to_string();
         assert!(err.contains("reliability.retry"), "{err}");
+    }
+
+    #[test]
+    fn observability_axis_restricted_and_validated() {
+        let obs = ObservabilitySpec::new(Some("/tmp/spans.jsonl".into()), 60.0);
+        // Steady and fleet accept the axis...
+        ScenarioSpec::new("x").with_observability(obs.clone()).validate().unwrap();
+        ScenarioSpec::new("x")
+            .with_experiment(ExperimentSpec::Fleet(FleetScenario::new(2)))
+            .with_observability(obs.clone())
+            .validate()
+            .unwrap();
+        // ...everything else rejects it instead of silently ignoring it.
+        for experiment in [
+            ExperimentSpec::temporal(2),
+            ExperimentSpec::ensemble(2),
+            ExperimentSpec::Sweep { rates: vec![0.5], thresholds: vec![600.0] },
+            ExperimentSpec::Compare { service_mean: 2.0, markovian_expiration: false },
+        ] {
+            let bad = ScenarioSpec::new("x")
+                .with_experiment(experiment.clone())
+                .with_observability(obs.clone());
+            let err = bad.validate().unwrap_err().to_string();
+            assert!(err.contains("observability"), "{experiment:?}: {err}");
+        }
+        // Bad parameters surface with the axis path named.
+        let bad = ScenarioSpec::new("x")
+            .with_observability(ObservabilitySpec::new(None, f64::NAN));
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("metrics_interval"), "{err}");
+        let bad = ScenarioSpec::new("x")
+            .with_observability(ObservabilitySpec::new(Some(String::new()), 0.0));
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("record_trace"), "{err}");
     }
 
     #[test]

@@ -70,6 +70,7 @@ use super::results::SimResults;
 use super::retry::RetryPolicy;
 use super::rng::{Rng, SplitMix64};
 use super::time::SimTime;
+use crate::telemetry::{Observer, SpanOutcome, SpanRecord, SpanVerdict, StateSample};
 use crate::workload::stream::ArrivalSource;
 use std::collections::BTreeMap;
 
@@ -96,6 +97,17 @@ enum Verdict {
     Fail,
     /// The execution exceeds the profile's timeout and is cut off.
     Timeout,
+}
+
+impl Verdict {
+    /// Public telemetry form of this verdict.
+    fn as_span(self) -> SpanVerdict {
+        match self {
+            Verdict::Success => SpanVerdict::Ok,
+            Verdict::Fail => SpanVerdict::Failed,
+            Verdict::Timeout => SpanVerdict::Timeout,
+        }
+    }
 }
 
 /// Destination for scheduled events. The core never owns the future event
@@ -411,6 +423,12 @@ pub struct EngineCore {
     /// factor)`; equals `max_concurrency` outside every window.
     effective_max_concurrency: usize,
 
+    // ------------------- telemetry layer (DESIGN.md §Observability)
+    /// Optional telemetry hook. Capture draws no RNG and schedules no
+    /// events, so an attached observer never changes simulation results;
+    /// `None` (the default) costs one branch per dispatch.
+    observer: Option<Box<Observer>>,
+
     // -------- statistics (reset at the end of the warm-up skip) ----------
     stats_started: bool,
     stats_start: SimTime,
@@ -464,6 +482,7 @@ impl EngineCore {
             effective_max_concurrency: p.max_concurrency,
             degradation_active,
             retry_budget_left,
+            observer: None,
             fault: p.fault,
             retry: p.retry,
             now: start,
@@ -554,6 +573,90 @@ impl EngineCore {
     #[inline]
     pub fn live_counts(&self) -> (usize, usize, usize) {
         (self.live_count, self.busy_instances, self.router.pool_len())
+    }
+
+    // ----------------------------------------------------------- telemetry
+
+    /// Attach a telemetry observer (DESIGN.md §Observability). Capture
+    /// never perturbs the simulation: it draws no RNG and schedules no
+    /// events, so results are bit-identical with or without one.
+    pub fn set_observer(&mut self, observer: Observer) {
+        self.observer = Some(Box::new(observer));
+    }
+
+    /// Detach the observer (call after the run to recover its records).
+    pub fn take_observer(&mut self) -> Option<Observer> {
+        self.observer.take().map(|b| *b)
+    }
+
+    /// Emit every due internal-state sample up to the current clock.
+    /// Engines call this once per event (after advancing the clock, before
+    /// handling the event — state only changes at events, so the current
+    /// levels are exactly the levels at every due tick) and once after
+    /// [`close`](Self::close). `cap_headroom` is the remaining shared-gate
+    /// capacity (capped fleets); `None` when the engine runs uncapped.
+    pub fn sample_tick(&mut self, cap_headroom: Option<u64>) {
+        if self.observer.is_none() || !self.stats_started {
+            return;
+        }
+        let now = self.now.as_secs();
+        let stats_start = self.stats_start.as_secs();
+        let (live, busy) = (self.live_count, self.busy_instances);
+        let in_flight = self.in_flight;
+        let (total, cold, warm) = (self.total_requests, self.cold_requests, self.warm_requests);
+        let degradation = self.degradation_active.iter().filter(|a| **a).count() as u32;
+        let obs = self.observer.as_mut().expect("checked above");
+        let interval = obs.sample_interval();
+        if interval <= 0.0 {
+            return;
+        }
+        let function = obs.function();
+        let mut next = obs.next_sample_at().unwrap_or(stats_start);
+        while next <= now {
+            obs.record_sample(StateSample {
+                function,
+                t: next,
+                live_instances: live,
+                busy_instances: busy,
+                idle_instances: live.saturating_sub(busy),
+                in_flight,
+                total_requests: total,
+                cold_requests: cold,
+                warm_requests: warm,
+                degradation_active: degradation,
+                cap_headroom,
+            });
+            next += interval;
+        }
+        obs.set_next_sample_at(next);
+    }
+
+    /// Record one dispatch span (no-op without an observer; spans start at
+    /// the end of the warm-up skip, like every other statistic).
+    #[inline]
+    fn emit_span(
+        &mut self,
+        prev_delay: f64,
+        rt: f64,
+        outcome: SpanOutcome,
+        verdict: SpanVerdict,
+        instance: Option<InstanceId>,
+        attempt: u32,
+    ) {
+        if let Some(obs) = self.observer.as_mut() {
+            let started_at = self.now.as_secs();
+            let function = obs.function();
+            obs.record_span(SpanRecord {
+                function,
+                queued_at: started_at - prev_delay,
+                started_at,
+                response_time: rt,
+                outcome,
+                verdict,
+                instance: instance.map(|id| id.0),
+                attempt,
+            });
+        }
     }
 
     // ------------------------------------------------------------ internals
@@ -699,6 +802,14 @@ impl EngineCore {
                 self.count_verdict(verdict, busy);
                 self.record_response(busy, false);
                 hooks.on_request(now_s, RequestOutcome::Warm, busy, Some(id));
+                self.emit_span(
+                    prev_delay,
+                    busy,
+                    SpanOutcome::Warm,
+                    verdict.as_span(),
+                    Some(id),
+                    attempt,
+                );
             }
             if verdict != Verdict::Success {
                 self.schedule_retry(sched, attempt, prev_delay, self.now.after(busy));
@@ -714,6 +825,14 @@ impl EngineCore {
             {
                 if self.stats_started {
                     self.coldstart_failures += 1;
+                    self.emit_span(
+                        prev_delay,
+                        0.0,
+                        SpanOutcome::ColdStartFailed,
+                        SpanVerdict::Failed,
+                        None,
+                        attempt,
+                    );
                 }
                 self.schedule_retry(sched, attempt, prev_delay, self.now);
                 return;
@@ -739,6 +858,14 @@ impl EngineCore {
                 self.count_verdict(verdict, busy);
                 self.record_response(busy, true);
                 hooks.on_request(now_s, RequestOutcome::Cold, busy, Some(id));
+                self.emit_span(
+                    prev_delay,
+                    busy,
+                    SpanOutcome::Cold,
+                    verdict.as_span(),
+                    Some(id),
+                    attempt,
+                );
             }
             if verdict != Verdict::Success {
                 self.schedule_retry(sched, attempt, prev_delay, self.now.after(busy));
@@ -752,6 +879,14 @@ impl EngineCore {
                     hooks.on_gate_only_rejection();
                 }
                 hooks.on_request(now_s, RequestOutcome::Rejected, 0.0, None);
+                self.emit_span(
+                    prev_delay,
+                    0.0,
+                    SpanOutcome::Rejected,
+                    SpanVerdict::Ok,
+                    None,
+                    attempt,
+                );
             }
             // Degradation-window rejections retry like any other failure
             // (rejections at full capacity do too, if a policy is set:
@@ -1421,6 +1556,54 @@ mod tests {
         let r = core.results();
         assert_eq!(r.prewarm_starts, 1);
         assert!((r.wasted_prewarm_seconds - 4.0).abs() < 1e-12, "{}", r.wasted_prewarm_seconds);
+    }
+
+    #[test]
+    fn observer_records_spans_and_samples_without_perturbing_results() {
+        use crate::telemetry::{Observer, SpanOutcome};
+        let run = |observe: bool| {
+            let mut core = mk_core(1, 0.0);
+            if observe {
+                core.set_observer(Observer::recording(0, 5.0));
+            }
+            let mut q = EventQueue::new();
+            let mut hooks = Fixed(10.0);
+            core.set_now(SimTime::from_secs(5.0));
+            core.sample_tick(None);
+            core.handle_arrival(&mut q, &mut hooks);
+            while let Some((t, ev)) = q.pop() {
+                core.set_now(t);
+                core.sample_tick(None);
+                match ev {
+                    Event::Departure(id) => core.handle_departure(&mut q, &mut hooks, id),
+                    Event::Expiration { id, gen } => {
+                        core.handle_expiration(&mut q, &mut hooks, id, gen)
+                    }
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            core.close(SimTime::from_secs(20.0));
+            core.sample_tick(None);
+            let rec = core.take_observer().and_then(Observer::into_recorder);
+            (core.results(), rec)
+        };
+        let (base, no_rec) = run(false);
+        let (observed, rec) = run(true);
+        assert!(no_rec.is_none());
+        // Attaching the observer changes nothing in the results.
+        assert_eq!(format!("{base:?}"), format!("{observed:?}"));
+        let rec = rec.unwrap();
+        assert_eq!(rec.spans.len(), 1);
+        assert_eq!(rec.spans[0].outcome, SpanOutcome::Cold);
+        assert_eq!(rec.spans[0].instance, Some(0));
+        assert_eq!((rec.spans[0].started_at, rec.spans[0].queued_at), (5.0, 5.0));
+        // Ticks 0 and 5 fire at the first sampled event (t=5); 10 and 15
+        // at the expiration (t=17); the close at 20 flushes the last one.
+        let ticks: Vec<f64> = rec.samples.iter().map(|s| s.t).collect();
+        assert_eq!(ticks, [0.0, 5.0, 10.0, 15.0, 20.0]);
+        assert_eq!(rec.samples[2].live_instances, 1);
+        assert_eq!(rec.samples[2].in_flight, 0);
+        assert_eq!(rec.samples.last().unwrap().total_requests, 1);
     }
 
     #[test]

@@ -80,6 +80,7 @@ impl ParServerlessSimulator {
         while let Some((t, ev)) = self.events.pop() {
             self.core.maybe_start_stats(t);
             self.core.set_now(t);
+            self.core.sample_tick(None);
             match ev {
                 Event::Arrival => {
                     self.core.handle_arrival(&mut self.events, &mut self.hooks);
@@ -110,7 +111,19 @@ impl ParServerlessSimulator {
             }
         }
         self.core.close(horizon);
+        self.core.sample_tick(None);
         self.core.results()
+    }
+
+    /// Attach a telemetry observer (DESIGN.md §Observability). Capture
+    /// draws no RNG and schedules no events, so results are unchanged.
+    pub fn set_observer(&mut self, observer: crate::telemetry::Observer) {
+        self.core.set_observer(observer);
+    }
+
+    /// Detach the observer (if any) and return its in-memory recording.
+    pub fn take_recorder(&mut self) -> Option<crate::telemetry::TelemetryRecorder> {
+        self.core.take_observer().and_then(crate::telemetry::Observer::into_recorder)
     }
 
     /// All instances ever created (for capacity/lifecycle assertions).

@@ -274,6 +274,19 @@ impl ServerlessSimulator {
             .seed_initial_state(&mut self.events, &mut self.hooks, idle_ages, running_remaining);
     }
 
+    /// Attach a telemetry observer for the next [`run`](Self::run)
+    /// (DESIGN.md §Observability). Capture never changes results: it draws
+    /// no RNG and schedules no events.
+    pub fn set_observer(&mut self, observer: crate::telemetry::Observer) {
+        self.core.set_observer(observer);
+    }
+
+    /// Recover the recorded telemetry after [`run`](Self::run) (`None`
+    /// without an observer, or with a custom sink).
+    pub fn take_recorder(&mut self) -> Option<crate::telemetry::TelemetryRecorder> {
+        self.core.take_observer().and_then(crate::telemetry::Observer::into_recorder)
+    }
+
     /// Emit Fig.4-style samples up to the current time.
     fn emit_samples(&mut self) {
         if self.cfg.sample_interval <= 0.0 || !self.core.stats_started() {
@@ -323,6 +336,7 @@ impl ServerlessSimulator {
             self.core.maybe_start_stats(t);
             self.core.set_now(t);
             self.emit_samples();
+            self.core.sample_tick(None);
             match ev {
                 Event::Arrival => {
                     self.core.handle_arrival(&mut self.events, &mut self.hooks);
@@ -355,6 +369,7 @@ impl ServerlessSimulator {
         }
         self.core.close(horizon);
         self.emit_samples();
+        self.core.sample_tick(None);
         self.core.results()
     }
 
@@ -605,6 +620,37 @@ mod tests {
         let samples = sim.samples();
         assert!(samples.len() >= 95, "samples={}", samples.len());
         assert!(samples.windows(2).all(|w| w[1].t > w[0].t));
+    }
+
+    #[test]
+    fn observer_capture_matches_request_log_and_leaves_results_bit_identical() {
+        use crate::telemetry::Observer;
+        let mut cfg = quick_cfg(0.9, 5_000.0, 7);
+        cfg.capture_request_log = true;
+        let base = ServerlessSimulator::new(cfg.clone()).run();
+        let mut sim = ServerlessSimulator::new(cfg);
+        sim.set_observer(Observer::recording(0, 50.0));
+        let r = sim.run();
+        let rec = sim.take_recorder().unwrap();
+        // Enabled telemetry leaves every metric bit-identical.
+        assert_eq!(r.total_requests, base.total_requests);
+        assert_eq!(r.avg_server_count.to_bits(), base.avg_server_count.to_bits());
+        assert_eq!(r.response_p99.to_bits(), base.response_p99.to_bits());
+        // One span per measured request, aligned with the request log.
+        let log = sim.request_log();
+        assert_eq!(rec.spans.len() as u64, r.total_requests);
+        assert_eq!(rec.spans.len(), log.len());
+        for (s, e) in rec.spans.iter().zip(log) {
+            assert_eq!(s.started_at, e.arrived_at);
+            assert_eq!(s.response_time, e.response_time);
+            assert_eq!(s.instance, e.instance.map(|id| id.0));
+            assert_eq!(s.attempt, 1);
+        }
+        // Sample ticks step by the interval from the skip boundary.
+        assert!(!rec.samples.is_empty());
+        assert_eq!(rec.samples[0].t, 100.0);
+        assert!(rec.samples.windows(2).all(|w| w[1].t - w[0].t == 50.0));
+        assert_eq!(rec.samples.last().unwrap().total_requests, r.total_requests);
     }
 
     // ---------------------------------------------- reliability layer

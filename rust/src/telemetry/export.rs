@@ -1,0 +1,299 @@
+//! Exporters: JSONL span streams, CSV time-series, and Chrome
+//! trace-event JSON (the format `ui.perfetto.dev` and `chrome://tracing`
+//! open directly).
+//!
+//! All three are deterministic byte-for-byte: JSON objects serialize with
+//! sorted keys through [`JsonValue`], floats use Rust's shortest
+//! round-trip formatting, and records are written in per-function emission
+//! order (the fleet merges per-function buffers in function order, so the
+//! bytes are independent of the shard/thread count).
+
+use super::recorder::TelemetryRecorder;
+use super::span::{SpanOutcome, SpanRecord, SpanVerdict, StateSample};
+use crate::output::json::JsonValue;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, Write};
+
+/// Header of the internal-state time-series CSV.
+pub const SAMPLES_CSV_HEADER: &str = "function,t,live,busy,idle,in_flight,total_requests,\
+cold_requests,warm_requests,cold_start_rate,degradation_active,cap_headroom";
+
+/// Serialize one span as a JSON object (sorted keys, compact).
+pub fn span_to_json(s: &SpanRecord) -> JsonValue {
+    let mut o = JsonValue::object();
+    o.set("attempt", u64::from(s.attempt))
+        .set("function", u64::from(s.function))
+        .set("instance", s.instance.map(JsonValue::from).unwrap_or(JsonValue::Null))
+        .set("outcome", s.outcome.as_str())
+        .set("queued_at", s.queued_at)
+        .set("response_time", s.response_time)
+        .set("started_at", s.started_at)
+        .set("verdict", s.verdict.as_str());
+    o
+}
+
+/// Parse one span back from its JSON object form.
+pub fn span_from_json(v: &JsonValue) -> Result<SpanRecord> {
+    let u32_field = |key: &str| -> Result<u32> {
+        let n = v.get(key).and_then(JsonValue::as_u64).with_context(|| {
+            format!("span record needs an unsigned integer {key:?} field")
+        })?;
+        u32::try_from(n).with_context(|| format!("span {key:?} field out of range"))
+    };
+    let f64_field = |key: &str| -> Result<f64> {
+        v.get(key)
+            .and_then(JsonValue::as_f64)
+            .with_context(|| format!("span record needs a numeric {key:?} field"))
+    };
+    let outcome_text = v
+        .get("outcome")
+        .and_then(JsonValue::as_str)
+        .context("span record needs a string \"outcome\" field")?;
+    let outcome =
+        SpanOutcome::parse(outcome_text).with_context(|| format!("unknown outcome {outcome_text:?}"))?;
+    let verdict_text = v
+        .get("verdict")
+        .and_then(JsonValue::as_str)
+        .context("span record needs a string \"verdict\" field")?;
+    let verdict =
+        SpanVerdict::parse(verdict_text).with_context(|| format!("unknown verdict {verdict_text:?}"))?;
+    let instance = match v.get("instance") {
+        None | Some(JsonValue::Null) => None,
+        Some(other) => {
+            Some(other.as_u64().context("span \"instance\" field must be an integer or null")?)
+        }
+    };
+    Ok(SpanRecord {
+        function: u32_field("function")?,
+        queued_at: f64_field("queued_at")?,
+        started_at: f64_field("started_at")?,
+        response_time: f64_field("response_time")?,
+        outcome,
+        verdict,
+        instance,
+        attempt: u32_field("attempt")?,
+    })
+}
+
+/// Write spans as JSONL (one sorted-key JSON object per line).
+pub fn write_spans_jsonl<W: Write>(w: &mut W, spans: &[SpanRecord]) -> std::io::Result<()> {
+    for s in spans {
+        writeln!(w, "{}", span_to_json(s))?;
+    }
+    Ok(())
+}
+
+/// Read a span JSONL stream back (inverse of [`write_spans_jsonl`];
+/// blank lines are skipped, errors carry the line number).
+pub fn read_spans_jsonl<R: BufRead>(r: R) -> Result<Vec<SpanRecord>> {
+    let mut spans = Vec::new();
+    for (i, line) in r.lines().enumerate() {
+        let line = line.with_context(|| format!("line {}: read error", i + 1))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = JsonValue::parse(&line).with_context(|| format!("line {}: bad JSON", i + 1))?;
+        spans.push(span_from_json(&v).with_context(|| format!("line {}: bad span", i + 1))?);
+    }
+    Ok(spans)
+}
+
+/// Write the internal-state time-series as CSV (header +
+/// `{:.6}`-formatted floats; `cap_headroom` is empty when uncapped).
+pub fn write_samples_csv<W: Write>(w: &mut W, samples: &[StateSample]) -> std::io::Result<()> {
+    writeln!(w, "{SAMPLES_CSV_HEADER}")?;
+    for s in samples {
+        let headroom = match s.cap_headroom {
+            Some(h) => h.to_string(),
+            None => String::new(),
+        };
+        writeln!(
+            w,
+            "{},{:.6},{},{},{},{},{},{},{},{:.6},{},{}",
+            s.function,
+            s.t,
+            s.live_instances,
+            s.busy_instances,
+            s.idle_instances,
+            s.in_flight,
+            s.total_requests,
+            s.cold_requests,
+            s.warm_requests,
+            s.cold_start_rate(),
+            s.degradation_active,
+            headroom,
+        )?;
+    }
+    Ok(())
+}
+
+/// Build a Chrome trace-event document (the JSON Perfetto opens directly):
+/// one process per function (named via metadata events), one track per
+/// instance, an `"X"` complete event per span, and `"C"` counter tracks
+/// for the sampled instance/in-flight levels. Timestamps are simulation
+/// microseconds; within each `(pid, phase)` pair they are nondecreasing by
+/// construction (records are emitted in event order).
+pub fn chrome_trace(recorders: &[TelemetryRecorder], names: &[String]) -> JsonValue {
+    let mut events: Vec<JsonValue> = Vec::new();
+    for (i, rec) in recorders.iter().enumerate() {
+        let name = names.get(i).map(String::as_str).unwrap_or("function");
+        let mut meta = JsonValue::object();
+        let mut margs = JsonValue::object();
+        margs.set("name", name);
+        meta.set("args", margs)
+            .set("name", "process_name")
+            .set("ph", "M")
+            .set("pid", i)
+            .set("tid", 0u64);
+        events.push(meta);
+        for s in &rec.spans {
+            let mut args = JsonValue::object();
+            args.set("attempt", u64::from(s.attempt))
+                .set("queued_at", s.queued_at)
+                .set("verdict", s.verdict.as_str());
+            let mut e = JsonValue::object();
+            e.set("args", args)
+                .set("cat", "request")
+                .set("dur", s.response_time * 1e6)
+                .set("name", s.outcome.as_str())
+                .set("ph", "X")
+                .set("pid", u64::from(s.function))
+                // Track 0 carries requests that never reached an instance.
+                .set("tid", s.instance.map(|id| id + 1).unwrap_or(0))
+                .set("ts", s.started_at * 1e6);
+            events.push(e);
+        }
+        for s in &rec.samples {
+            let mut args = JsonValue::object();
+            args.set("busy", s.busy_instances).set("idle", s.idle_instances);
+            let mut e = JsonValue::object();
+            e.set("args", args)
+                .set("name", "instances")
+                .set("ph", "C")
+                .set("pid", u64::from(s.function))
+                .set("tid", 0u64)
+                .set("ts", s.t * 1e6);
+            events.push(e);
+            let mut args = JsonValue::object();
+            args.set("in_flight", s.in_flight);
+            let mut e = JsonValue::object();
+            e.set("args", args)
+                .set("name", "in_flight")
+                .set("ph", "C")
+                .set("pid", u64::from(s.function))
+                .set("tid", 0u64)
+                .set("ts", s.t * 1e6);
+            events.push(e);
+        }
+    }
+    let mut doc = JsonValue::object();
+    doc.set("displayTimeUnit", "ms").set("traceEvents", JsonValue::Array(events));
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_span(attempt: u32) -> SpanRecord {
+        SpanRecord {
+            function: 2,
+            queued_at: 9.5,
+            started_at: 10.0,
+            response_time: 0.25,
+            outcome: SpanOutcome::Warm,
+            verdict: SpanVerdict::Ok,
+            instance: Some(7),
+            attempt,
+        }
+    }
+
+    fn sample_state() -> StateSample {
+        StateSample {
+            function: 2,
+            t: 60.0,
+            live_instances: 4,
+            busy_instances: 1,
+            idle_instances: 3,
+            in_flight: 1,
+            total_requests: 100,
+            cold_requests: 5,
+            warm_requests: 90,
+            degradation_active: 0,
+            cap_headroom: Some(996),
+        }
+    }
+
+    #[test]
+    fn span_jsonl_roundtrips_every_variant() {
+        let spans = vec![
+            sample_span(1),
+            SpanRecord {
+                outcome: SpanOutcome::Rejected,
+                verdict: SpanVerdict::Ok,
+                instance: None,
+                response_time: 0.0,
+                ..sample_span(2)
+            },
+            SpanRecord {
+                outcome: SpanOutcome::ColdStartFailed,
+                verdict: SpanVerdict::Failed,
+                instance: None,
+                response_time: 0.0,
+                ..sample_span(3)
+            },
+            SpanRecord {
+                outcome: SpanOutcome::Cold,
+                verdict: SpanVerdict::Timeout,
+                ..sample_span(1)
+            },
+        ];
+        let mut bytes = Vec::new();
+        write_spans_jsonl(&mut bytes, &spans).unwrap();
+        let text = String::from_utf8(bytes).unwrap();
+        assert_eq!(text.lines().count(), spans.len());
+        let back = read_spans_jsonl(text.as_bytes()).unwrap();
+        assert_eq!(back, spans);
+    }
+
+    #[test]
+    fn jsonl_reader_rejects_bad_lines() {
+        assert!(read_spans_jsonl("not json\n".as_bytes()).is_err());
+        assert!(read_spans_jsonl("{\"attempt\":1}\n".as_bytes()).is_err());
+        let bad_outcome = span_to_json(&sample_span(1)).to_string().replace("warm", "tepid");
+        assert!(read_spans_jsonl(bad_outcome.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn samples_csv_has_header_and_rates() {
+        let mut bytes = Vec::new();
+        write_samples_csv(&mut bytes, &[sample_state()]).unwrap();
+        let text = String::from_utf8(bytes).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(lines.next(), Some(SAMPLES_CSV_HEADER));
+        let row = lines.next().unwrap();
+        // cold_start_rate = 5 / 95.
+        assert_eq!(row, "2,60.000000,4,1,3,1,100,5,90,0.052632,0,996");
+        assert_eq!(lines.next(), None);
+    }
+
+    #[test]
+    fn chrome_trace_emits_metadata_spans_and_counters() {
+        let rec = TelemetryRecorder {
+            spans: vec![sample_span(1)],
+            samples: vec![sample_state()],
+        };
+        let doc = chrome_trace(&[rec], &["fn-a".to_string()]);
+        let events = doc.get("traceEvents").and_then(JsonValue::as_array).unwrap();
+        // 1 metadata + 1 span + 2 counters.
+        assert_eq!(events.len(), 4);
+        let phases: Vec<&str> =
+            events.iter().map(|e| e.get("ph").and_then(JsonValue::as_str).unwrap()).collect();
+        assert_eq!(phases, ["M", "X", "C", "C"]);
+        let span = &events[1];
+        assert_eq!(span.get("ts").and_then(JsonValue::as_f64), Some(10.0 * 1e6));
+        assert_eq!(span.get("dur").and_then(JsonValue::as_f64), Some(0.25 * 1e6));
+        assert_eq!(span.get("tid").and_then(JsonValue::as_u64), Some(8));
+        assert_eq!(span.get("name").and_then(JsonValue::as_str), Some("warm"));
+    }
+}

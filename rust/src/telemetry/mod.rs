@@ -1,0 +1,38 @@
+//! Observability layer: per-request span records, periodic internal-state
+//! samples, and timeline exporters (DESIGN.md §Observability).
+//!
+//! The paper's pitch is that a simulator can expose platform internal
+//! states that are "otherwise hard (mostly impossible) to extract from
+//! real platforms" — this module turns those states into artifacts.
+//! Capture is injected through the unified `sim::core` seam: an
+//! [`Observer`] attached to an `EngineCore` receives
+//!
+//! * one [`SpanRecord`] per dispatch attempt (outcome, verdict, phase
+//!   timestamps, instance id, retry attempt number), and
+//! * one [`StateSample`] per sampling interval (instance levels, in-flight
+//!   requests, cumulative cold-start counters, degradation windows, fleet
+//!   cap headroom),
+//!
+//! so every engine built on the core (steady, par, temporal, fleet) records
+//! through the same code. Capture draws **no RNG and schedules no
+//! events**: attaching an observer never changes simulation results, and a
+//! detached core pays one `Option` branch per dispatch (the zero-overhead
+//! contract, pinned with the engine-unification goldens). Fleet recording
+//! buffers per function and merges in function order, so recorded bytes
+//! are identical at any shard count.
+//!
+//! Exporters ([`export`]): JSONL span streams (`read_spans_jsonl` is the
+//! inverse, closing the loop with `trace::ident` via `simfaas inspect`),
+//! CSV time-series, and Chrome trace-event JSON that `ui.perfetto.dev`
+//! opens as a per-instance timeline.
+#![warn(missing_docs)]
+
+pub mod export;
+pub mod recorder;
+pub mod span;
+
+pub use export::{
+    chrome_trace, read_spans_jsonl, write_samples_csv, write_spans_jsonl, SAMPLES_CSV_HEADER,
+};
+pub use recorder::{Observer, TelemetryRecorder, TelemetrySink};
+pub use span::{SpanOutcome, SpanRecord, SpanVerdict, StateSample};

@@ -1,0 +1,133 @@
+//! The sink trait, the default in-memory recorder, and the [`Observer`]
+//! handle an engine core carries while telemetry is enabled.
+
+use super::span::{SpanRecord, StateSample};
+
+/// Destination for telemetry records. The engines call this through an
+/// [`Observer`]; the default sink is the in-memory [`TelemetryRecorder`],
+/// but embedders can supply their own (streaming, filtering, counting)
+/// via [`Observer::with_sink`].
+///
+/// Implementations must not depend on wall-clock time or randomness:
+/// telemetry capture sits inside the deterministic event loop and the
+/// recorded stream must be a pure function of the run.
+pub trait TelemetrySink {
+    /// Record one request-dispatch span.
+    fn record_span(&mut self, span: SpanRecord);
+    /// Record one periodic internal-state sample.
+    fn record_sample(&mut self, sample: StateSample);
+}
+
+/// The default sink: buffers every record in memory, in emission order
+/// (spans by dispatch time, samples by sample time — both nondecreasing
+/// within one engine).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TelemetryRecorder {
+    /// Captured spans in dispatch order.
+    pub spans: Vec<SpanRecord>,
+    /// Captured samples in time order.
+    pub samples: Vec<StateSample>,
+}
+
+impl TelemetryRecorder {
+    /// An empty recorder.
+    pub fn new() -> TelemetryRecorder {
+        TelemetryRecorder::default()
+    }
+}
+
+impl TelemetrySink for TelemetryRecorder {
+    fn record_span(&mut self, span: SpanRecord) {
+        self.spans.push(span);
+    }
+
+    fn record_sample(&mut self, sample: StateSample) {
+        self.samples.push(sample);
+    }
+}
+
+enum SinkKind {
+    Recorder(TelemetryRecorder),
+    Custom(Box<dyn TelemetrySink + Send>),
+}
+
+/// The telemetry hook an [`crate::sim::EngineCore`] owns while recording:
+/// a sink plus the sampling cursor. Attaching one never changes simulation
+/// results — capture draws no RNG and schedules no events — and a core
+/// without one pays a single `Option` branch per dispatch (the
+/// zero-overhead contract, same as the fault lane).
+pub struct Observer {
+    function: u32,
+    sample_interval: f64,
+    /// Next sample instant; lazily initialized by the core to the start of
+    /// the measured window (the engine's `skip_initial` boundary).
+    next_sample_at: Option<f64>,
+    sink: SinkKind,
+}
+
+impl Observer {
+    /// An observer buffering into a fresh [`TelemetryRecorder`].
+    /// `sample_interval <= 0` records spans only.
+    pub fn recording(function: u32, sample_interval: f64) -> Observer {
+        Observer {
+            function,
+            sample_interval,
+            next_sample_at: None,
+            sink: SinkKind::Recorder(TelemetryRecorder::new()),
+        }
+    }
+
+    /// An observer forwarding to a caller-supplied sink.
+    pub fn with_sink(
+        function: u32,
+        sample_interval: f64,
+        sink: Box<dyn TelemetrySink + Send>,
+    ) -> Observer {
+        Observer { function, sample_interval, next_sample_at: None, sink: SinkKind::Custom(sink) }
+    }
+
+    /// Fleet function index stamped on every record (0 outside fleets).
+    pub fn function(&self) -> u32 {
+        self.function
+    }
+
+    /// Sampling interval in simulation seconds (`<= 0` = spans only).
+    pub fn sample_interval(&self) -> f64 {
+        self.sample_interval
+    }
+
+    /// Current sampling cursor (`None` until the first tick).
+    pub fn next_sample_at(&self) -> Option<f64> {
+        self.next_sample_at
+    }
+
+    /// Advance the sampling cursor.
+    pub fn set_next_sample_at(&mut self, t: f64) {
+        self.next_sample_at = Some(t);
+    }
+
+    /// Forward one span to the sink.
+    pub fn record_span(&mut self, span: SpanRecord) {
+        match &mut self.sink {
+            SinkKind::Recorder(r) => r.record_span(span),
+            SinkKind::Custom(s) => s.record_span(span),
+        }
+    }
+
+    /// Forward one sample to the sink.
+    pub fn record_sample(&mut self, sample: StateSample) {
+        match &mut self.sink {
+            SinkKind::Recorder(r) => r.record_sample(sample),
+            SinkKind::Custom(s) => s.record_sample(sample),
+        }
+    }
+
+    /// Recover the buffered records (`None` for custom sinks, which own
+    /// their output).
+    pub fn into_recorder(self) -> Option<TelemetryRecorder> {
+        match self.sink {
+            SinkKind::Recorder(r) => Some(r),
+            SinkKind::Custom(_) => None,
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Telemetry record types: per-request spans and periodic internal-state
+//! samples. Both are plain data — capture happens in `sim::core`, export in
+//! [`super::export`].
+
+/// How a dispatched request was (or was not) served — the routing outcome
+/// of one attempt, including the reliability layer's cold-start failures
+/// (which `sim::RequestOutcome` cannot express: no instance ever served
+/// the request, but it was not a concurrency rejection either).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanOutcome {
+    /// Served by a freshly cold-started instance.
+    Cold,
+    /// Served by a warm (idle or spare-slot) instance.
+    Warm,
+    /// Rejected at the concurrency limit (or the fleet gate).
+    Rejected,
+    /// The cold-start provisioning itself failed (reliability layer);
+    /// no instance materialized.
+    ColdStartFailed,
+}
+
+impl SpanOutcome {
+    /// Stable wire name (JSONL / Chrome-trace event name).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SpanOutcome::Cold => "cold",
+            SpanOutcome::Warm => "warm",
+            SpanOutcome::Rejected => "rejected",
+            SpanOutcome::ColdStartFailed => "coldstart_failed",
+        }
+    }
+
+    /// Inverse of [`as_str`](Self::as_str).
+    pub fn parse(s: &str) -> Option<SpanOutcome> {
+        match s {
+            "cold" => Some(SpanOutcome::Cold),
+            "warm" => Some(SpanOutcome::Warm),
+            "rejected" => Some(SpanOutcome::Rejected),
+            "coldstart_failed" => Some(SpanOutcome::ColdStartFailed),
+            _ => None,
+        }
+    }
+}
+
+/// Execution verdict of a served request (reliability layer; always
+/// [`SpanVerdict::Ok`] with faults disabled).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanVerdict {
+    /// The execution completed successfully.
+    Ok,
+    /// The execution completed but returned a transient failure (or the
+    /// cold-start provisioning failed).
+    Failed,
+    /// The execution exceeded the fault profile's timeout.
+    Timeout,
+}
+
+impl SpanVerdict {
+    /// Stable wire name (JSONL `verdict` field).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SpanVerdict::Ok => "ok",
+            SpanVerdict::Failed => "failed",
+            SpanVerdict::Timeout => "timeout",
+        }
+    }
+
+    /// Inverse of [`as_str`](Self::as_str).
+    pub fn parse(s: &str) -> Option<SpanVerdict> {
+        match s {
+            "ok" => Some(SpanVerdict::Ok),
+            "failed" => Some(SpanVerdict::Failed),
+            "timeout" => Some(SpanVerdict::Timeout),
+            _ => None,
+        }
+    }
+}
+
+/// One request-dispatch span: everything the engine knew about a single
+/// routing attempt at the instant it resolved. Retried requests produce
+/// one span per attempt, linked by increasing `attempt` numbers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRecord {
+    /// Fleet function index (0 for single-function engines).
+    pub function: u32,
+    /// When this attempt entered the arrival stream: the arrival epoch for
+    /// first attempts, the previous failure instant for retries
+    /// (`started_at - backoff delay`), so `started_at - queued_at` is the
+    /// backoff the request waited.
+    pub queued_at: f64,
+    /// Dispatch instant (simulation seconds).
+    pub started_at: f64,
+    /// Busy period observed by the client: service (plus provisioning for
+    /// cold starts), truncated at the timeout; 0 for rejected requests and
+    /// cold-start failures.
+    pub response_time: f64,
+    /// Routing outcome of this attempt.
+    pub outcome: SpanOutcome,
+    /// Execution verdict of this attempt.
+    pub verdict: SpanVerdict,
+    /// Serving instance id (`None` for rejected / cold-start-failed).
+    pub instance: Option<u64>,
+    /// Dispatch attempt number (1 = fresh arrival, >1 = retry).
+    pub attempt: u32,
+}
+
+/// One periodic snapshot of an engine's internal state — the platform
+/// quantities the paper calls "otherwise hard (mostly impossible) to
+/// extract from real platforms", as a time-series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StateSample {
+    /// Fleet function index (0 for single-function engines).
+    pub function: u32,
+    /// Sample instant (simulation seconds; multiples of the sampling
+    /// interval from the end of the warm-up skip).
+    pub t: f64,
+    /// Live instances (idle + busy + provisioning).
+    pub live_instances: usize,
+    /// Instances with at least one request in flight.
+    pub busy_instances: usize,
+    /// Live instances with nothing in flight (includes provisioning).
+    pub idle_instances: usize,
+    /// Requests currently in flight across all instances.
+    pub in_flight: u64,
+    /// Cumulative requests since the measured window started.
+    pub total_requests: u64,
+    /// Cumulative cold starts since the measured window started.
+    pub cold_requests: u64,
+    /// Cumulative warm starts since the measured window started.
+    pub warm_requests: u64,
+    /// Number of currently active degradation windows.
+    pub degradation_active: u32,
+    /// Remaining fleet-cap headroom at the shared gate (`None` when the
+    /// engine runs uncapped).
+    pub cap_headroom: Option<u64>,
+}
+
+impl StateSample {
+    /// Cumulative cold-start rate at this sample: cold / (cold + warm),
+    /// 0 before any request was served.
+    pub fn cold_start_rate(&self) -> f64 {
+        let served = self.cold_requests + self.warm_requests;
+        if served > 0 {
+            self.cold_requests as f64 / served as f64
+        } else {
+            0.0
+        }
+    }
+}

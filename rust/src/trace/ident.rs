@@ -39,6 +39,12 @@ pub fn identify(records: &[RequestRecord]) -> IdentifiedParams {
             Outcome::Warm => warm.push(r.response_time),
             Outcome::Cold => cold.push(r.response_time),
             Outcome::Rejected => rejected += 1,
+            // Retried requests were served warm/cold on a later attempt;
+            // their response time still measures a successful service.
+            Outcome::Retried => warm.push(r.response_time),
+            // Failed/timed-out executions measure the fault process, not
+            // the service distribution — excluded from the estimators.
+            Outcome::Failed | Outcome::Timeout => {}
         }
     }
     let stats = |xs: &[f64]| -> (f64, f64) {

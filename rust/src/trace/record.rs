@@ -9,7 +9,9 @@
 //! here against emulator logs.
 //!
 //! Schema (`request` CSV): `arrived_at,outcome,response_time,instance_id`
-//! with outcome ∈ {cold, warm, rejected}.
+//! with outcome ∈ {cold, warm, rejected, failed, timeout, retried} (the
+//! last three are the reliability-layer outcomes; pre-reliability traces
+//! simply never contain them).
 
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, Write};
@@ -32,6 +34,12 @@ pub enum Outcome {
     Cold,
     Warm,
     Rejected,
+    /// Served but the execution failed transiently (reliability layer).
+    Failed,
+    /// Served but cut off at the platform's execution timeout.
+    Timeout,
+    /// Served successfully on a retry attempt (attempt > 1).
+    Retried,
 }
 
 impl Outcome {
@@ -40,6 +48,9 @@ impl Outcome {
             Outcome::Cold => "cold",
             Outcome::Warm => "warm",
             Outcome::Rejected => "rejected",
+            Outcome::Failed => "failed",
+            Outcome::Timeout => "timeout",
+            Outcome::Retried => "retried",
         }
     }
 
@@ -48,6 +59,9 @@ impl Outcome {
             "cold" => Ok(Outcome::Cold),
             "warm" => Ok(Outcome::Warm),
             "rejected" => Ok(Outcome::Rejected),
+            "failed" => Ok(Outcome::Failed),
+            "timeout" => Ok(Outcome::Timeout),
+            "retried" => Ok(Outcome::Retried),
             other => bail!("unknown outcome {other:?}"),
         }
     }
@@ -160,6 +174,28 @@ mod tests {
         assert_eq!(parsed[2].outcome, Outcome::Rejected);
         assert!((parsed[1].response_time - 1.99).abs() < 1e-9);
         assert_eq!(parsed[1].instance_id, "i-00000000");
+    }
+
+    #[test]
+    fn reliability_outcomes_roundtrip() {
+        let records: Vec<RequestRecord> = [Outcome::Failed, Outcome::Timeout, Outcome::Retried]
+            .iter()
+            .enumerate()
+            .map(|(i, &outcome)| RequestRecord {
+                arrived_at: i as f64,
+                outcome,
+                response_time: 0.5,
+                instance_id: "i-00000001".into(),
+            })
+            .collect();
+        let mut buf = Vec::new();
+        write_csv(&mut buf, &records).unwrap();
+        let text = String::from_utf8(buf.clone()).unwrap();
+        assert!(text.contains(",failed,"));
+        assert!(text.contains(",timeout,"));
+        assert!(text.contains(",retried,"));
+        let parsed = read_csv(&buf[..]).unwrap();
+        assert_eq!(parsed, records);
     }
 
     #[test]

@@ -21,7 +21,7 @@ fn simfaas(args: &[&str]) -> (bool, String) {
 /// command table in main.rs; this pins the table against rot).
 const ALL_COMMANDS: &[&str] = &[
     "run", "steady", "temporal", "ensemble", "fleet", "sweep", "emulate", "validate",
-    "compare", "cost", "identify", "probe", "figures",
+    "compare", "cost", "identify", "inspect", "probe", "figures",
 ];
 
 #[test]
@@ -350,6 +350,100 @@ fn emulate_writes_csv_trace() {
     assert!(ok, "{text}");
     assert!(text.contains("arrival rate"));
     assert!(text.contains("warm mean"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The telemetry loop: `steady --record-trace` emits the three export
+/// files, and `inspect` recomputes §5.2-style estimates from the span
+/// JSONL alone.
+#[test]
+fn record_trace_then_inspect_closes_the_loop() {
+    let dir = std::env::temp_dir().join(format!("simfaas-telemetry-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("steady.jsonl");
+    let (ok, text) = simfaas(&[
+        "steady",
+        "--horizon",
+        "10000",
+        "--seed",
+        "2",
+        "--record-trace",
+        trace.to_str().unwrap(),
+        "--metrics-interval",
+        "60",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("telemetry:"), "{text}");
+    assert!(trace.exists());
+    assert!(dir.join("steady.perfetto.json").exists());
+    assert!(dir.join("steady.metrics.csv").exists());
+    let perfetto = std::fs::read_to_string(dir.join("steady.perfetto.json")).unwrap();
+    assert!(perfetto.contains("\"traceEvents\":"), "{perfetto}");
+    let metrics = std::fs::read_to_string(dir.join("steady.metrics.csv")).unwrap();
+    assert!(metrics.starts_with("function,t,live,busy,idle"), "{metrics}");
+
+    let (ok, text) = simfaas(&["inspect", trace.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(text.contains("arrival rate"), "{text}");
+    assert!(text.contains("cold start prob"), "{text}");
+    assert!(text.contains("warm pool"), "{text}");
+
+    let (ok, text) = simfaas(&["inspect", trace.to_str().unwrap(), "--json"]);
+    assert!(ok, "{text}");
+    let line = text.lines().find(|l| l.starts_with('{')).expect("json line");
+    assert!(line.contains("\"mean_warm_pool\":"), "{line}");
+    assert!(line.contains("\"cold_start_prob\":"), "{line}");
+
+    // A missing trace is a clean error naming the path.
+    let (ok, text) = simfaas(&["inspect", "/nonexistent/trace.jsonl"]);
+    assert!(!ok);
+    assert!(text.contains("/nonexistent/trace.jsonl"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Telemetry flags flow through the fleet translator too, and are
+/// rejected in comparison mode instead of being silently dropped.
+#[test]
+fn fleet_record_trace_exports_and_comparison_rejects_it() {
+    let dir = std::env::temp_dir().join(format!("simfaas-fleet-tel-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("fleet.jsonl");
+    let (ok, text) = simfaas(&[
+        "fleet",
+        "--functions",
+        "3",
+        "--horizon",
+        "1500",
+        "--skip",
+        "0",
+        "--threads",
+        "2",
+        "--record-trace",
+        trace.to_str().unwrap(),
+        "--metrics-interval",
+        "120",
+        "--json",
+    ]);
+    assert!(ok, "{text}");
+    let line = text.lines().find(|l| l.starts_with('{')).expect("json line");
+    assert!(line.contains("\"telemetry\":"), "{line}");
+    assert!(line.contains("\"perfetto_path\":"), "{line}");
+    assert!(trace.exists());
+    assert!(dir.join("fleet.perfetto.json").exists());
+
+    let (ok, text) = simfaas(&[
+        "fleet",
+        "--functions",
+        "2",
+        "--horizon",
+        "500",
+        "--compare-thresholds",
+        "60,600",
+        "--record-trace",
+        trace.to_str().unwrap(),
+    ]);
+    assert!(!ok);
+    assert!(text.contains("--record-trace"), "{text}");
     std::fs::remove_dir_all(&dir).ok();
 }
 

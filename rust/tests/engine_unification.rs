@@ -319,6 +319,7 @@ fn single_prewarm_in_flight_covers_the_whole_lead_window() {
         prewarm_lead: 3.0,
         fault: FaultProfile::disabled(),
         retry: RetryPolicy::none(),
+        telemetry: None,
     };
     let results = cfg.run();
     let r = &results.per_function[0];
@@ -419,4 +420,42 @@ fn faulted_fleet_bit_identical_across_thread_counts() {
     }
     let coupled = base.clone().with_fleet_cap(1_000_000).run();
     assert_eq!(fleet_digest(&coupled), fleet_digest(&reference));
+}
+
+/// Telemetry zero-overhead contract: an *enabled* observer draws no RNG
+/// and schedules no events, so every engine's output digest is
+/// bit-identical to the unobserved run (and with telemetry off the fleet
+/// carries no recorder buffers at all).
+#[test]
+fn telemetry_enabled_is_bit_identical_on_every_engine() {
+    use simfaas::telemetry::Observer;
+    let cfg = SimConfig::table1().with_horizon(30_000.0).with_seed(0x0B5);
+
+    let plain = ServerlessSimulator::new(cfg.clone()).run();
+    let mut observed = ServerlessSimulator::new(cfg.clone());
+    observed.set_observer(Observer::recording(0, 60.0));
+    let observed_res = observed.run();
+    assert_eq!(digest(&plain), digest(&observed_res));
+    let rec = observed.take_recorder().expect("recording observer");
+    assert_eq!(rec.spans.len() as u64, plain.total_requests);
+    assert!(!rec.samples.is_empty());
+
+    let par_plain = ParServerlessSimulator::new(cfg.clone(), 3).run();
+    let mut par_obs = ParServerlessSimulator::new(cfg.clone(), 3);
+    par_obs.set_observer(Observer::recording(0, 60.0));
+    let par_res = par_obs.run();
+    assert_eq!(digest(&par_plain), digest(&par_res));
+    assert!(par_obs.take_recorder().is_some());
+
+    let fleet_plain =
+        FleetConfig::from_sim_configs(&[cfg.clone()], PolicySpec::fixed(600.0)).run();
+    let fleet_obs = FleetConfig::from_sim_configs(&[cfg], PolicySpec::fixed(600.0))
+        .with_telemetry(60.0)
+        .run();
+    assert_eq!(fleet_digest(&fleet_plain), fleet_digest(&fleet_obs));
+    assert!(fleet_plain.telemetry.is_none());
+    let recs = fleet_obs.telemetry.as_ref().expect("telemetry enabled");
+    assert_eq!(recs.len(), 1);
+    assert_eq!(recs[0].spans.len() as u64, fleet_plain.aggregate.total_requests);
+    assert!(!recs[0].samples.is_empty());
 }

@@ -1,0 +1,110 @@
+//! Telemetry determinism contract: recorded bytes are a pure function of
+//! the run. Sharded fleets buffer per function and merge in function
+//! order, so the JSONL span stream, the time-series CSV and the Chrome
+//! trace-event JSON must come out byte-identical at any thread count —
+//! and identical again on a re-run.
+
+use simfaas::fleet::{FleetConfig, FleetResults, PolicySpec};
+use simfaas::sim::Rng;
+use simfaas::telemetry::{chrome_trace, write_samples_csv, write_spans_jsonl};
+use simfaas::workload::SyntheticTrace;
+
+/// Serialize every exporter's output for a fleet run into one byte blob.
+fn export_bytes(res: &FleetResults) -> Vec<u8> {
+    let recorders = res.telemetry.as_ref().expect("telemetry enabled");
+    let mut bytes = Vec::new();
+    for rec in recorders {
+        write_spans_jsonl(&mut bytes, &rec.spans).unwrap();
+    }
+    let samples: Vec<_> =
+        recorders.iter().flat_map(|r| r.samples.iter().cloned()).collect();
+    write_samples_csv(&mut bytes, &samples).unwrap();
+    bytes.extend(chrome_trace(recorders, &res.names).to_string().into_bytes());
+    bytes
+}
+
+#[test]
+fn sharded_fleet_exports_identical_bytes_at_any_thread_count() {
+    let mut rng = Rng::new(21);
+    let trace = SyntheticTrace::generate(8, &mut rng);
+    let base = FleetConfig::from_trace(&trace, 3_000.0, 0.0, 0x7E1E, PolicySpec::fixed(300.0))
+        .with_telemetry(60.0);
+    let reference = base.clone().with_threads(1).run();
+    let ref_bytes = export_bytes(&reference);
+    assert!(reference.aggregate.total_requests > 0);
+    assert!(!ref_bytes.is_empty());
+    for threads in [2, 8] {
+        let res = base.clone().with_threads(threads).run();
+        assert_eq!(export_bytes(&res), ref_bytes, "threads={threads}");
+    }
+    // Re-running the same config replays the identical byte stream.
+    let again = base.clone().run();
+    assert_eq!(export_bytes(&again), ref_bytes);
+}
+
+/// Recorder invariants the exporters rely on: spans arrive per function in
+/// nondecreasing start order, samples in nondecreasing tick order, every
+/// span carries the owning function index, and the span count equals the
+/// measured request count.
+#[test]
+fn recorded_streams_are_ordered_and_complete() {
+    let mut rng = Rng::new(4);
+    let trace = SyntheticTrace::generate(5, &mut rng);
+    let res = FleetConfig::from_trace(&trace, 2_000.0, 0.0, 9, PolicySpec::fixed(300.0))
+        .with_telemetry(50.0)
+        .run();
+    let recorders = res.telemetry.as_ref().unwrap();
+    assert_eq!(recorders.len(), res.per_function.len());
+    let mut span_total = 0u64;
+    for (i, rec) in recorders.iter().enumerate() {
+        for pair in rec.spans.windows(2) {
+            assert!(pair[0].started_at <= pair[1].started_at, "function {i}");
+        }
+        for pair in rec.samples.windows(2) {
+            assert!(pair[0].t < pair[1].t, "function {i}");
+        }
+        for s in &rec.spans {
+            assert_eq!(s.function, i as u32);
+        }
+        for s in &rec.samples {
+            assert_eq!(s.function, i as u32);
+            // Sharded fleets run uncapped: no headroom column.
+            assert!(s.cap_headroom.is_none());
+        }
+        span_total += rec.spans.len() as u64;
+    }
+    assert_eq!(span_total, res.aggregate.total_requests);
+}
+
+/// The coupled (capped) path records too, stamping the shared-gate
+/// headroom on every sample; with a never-binding cap its spans match the
+/// sharded run's bytes.
+#[test]
+fn capped_fleet_records_headroom_and_matches_sharded_spans() {
+    let mut rng = Rng::new(13);
+    let trace = SyntheticTrace::generate(4, &mut rng);
+    let base = FleetConfig::from_trace(&trace, 2_000.0, 0.0, 0xCAB, PolicySpec::fixed(300.0))
+        .with_telemetry(100.0);
+    let sharded = base.clone().run();
+    let capped = base.clone().with_fleet_cap(1_000_000).run();
+    let (srec, crec) =
+        (sharded.telemetry.as_ref().unwrap(), capped.telemetry.as_ref().unwrap());
+    let mut sharded_spans = Vec::new();
+    let mut capped_spans = Vec::new();
+    for rec in srec {
+        write_spans_jsonl(&mut sharded_spans, &rec.spans).unwrap();
+    }
+    for rec in crec {
+        write_spans_jsonl(&mut capped_spans, &rec.spans).unwrap();
+    }
+    assert_eq!(sharded_spans, capped_spans);
+    let mut saw_sample = false;
+    for rec in crec {
+        for s in &rec.samples {
+            saw_sample = true;
+            assert!(s.cap_headroom.is_some());
+            assert!(s.cap_headroom.unwrap() <= 1_000_000);
+        }
+    }
+    assert!(saw_sample);
+}

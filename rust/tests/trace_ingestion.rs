@@ -93,6 +93,7 @@ fn streaming_fleet_is_bit_identical_to_eager_materialization() {
         prewarm_lead: 0.0,
         fault: simfaas::sim::FaultProfile::disabled(),
         retry: simfaas::sim::RetryPolicy::none(),
+        telemetry: None,
     }
     .run();
 

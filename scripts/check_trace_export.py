@@ -1,0 +1,132 @@
+#!/usr/bin/env python3
+"""Fail CI when a recorded telemetry export is malformed.
+
+Usage: check_trace_export.py PERFETTO.json [--spans TRACE.jsonl]
+                             [--metrics METRICS.csv]
+
+PERFETTO.json is the Chrome trace-event document `simfaas --record-trace`
+derives next to the span stream ({"displayTimeUnit": ..., "traceEvents":
+[...]}). The gate checks that it parses, that it contains at least one
+complete ("X") span event and one counter ("C") sample event, and that
+timestamps are nondecreasing within every (pid, phase) track — the order
+the exporter guarantees by emitting records in per-function event order.
+
+With --spans / --metrics the side files are checked too: every JSONL line
+must parse as a span object with the schema's keys, and the CSV must carry
+the samples header plus at least one row.
+"""
+
+import argparse
+import json
+import sys
+
+SPAN_KEYS = {
+    "attempt",
+    "function",
+    "instance",
+    "outcome",
+    "queued_at",
+    "response_time",
+    "started_at",
+    "verdict",
+}
+
+METRICS_HEADER = (
+    "function,t,live,busy,idle,in_flight,total_requests,"
+    "cold_requests,warm_requests,cold_start_rate,degradation_active,cap_headroom"
+)
+
+
+def check_perfetto(path: str) -> list:
+    errors = []
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return [f"{path}: no traceEvents array (keys: {sorted(doc)})"]
+    counts = {}
+    last_ts = {}
+    for i, e in enumerate(events):
+        ph = e.get("ph")
+        counts[ph] = counts.get(ph, 0) + 1
+        if ph == "M":
+            continue
+        ts = e.get("ts")
+        if not isinstance(ts, (int, float)):
+            errors.append(f"{path}: event {i} ({ph}) has no numeric ts")
+            continue
+        key = (e.get("pid"), ph)
+        if key in last_ts and ts < last_ts[key]:
+            errors.append(
+                f"{path}: event {i} ts {ts} goes backwards on pid={key[0]} "
+                f"ph={ph} (prev {last_ts[key]})"
+            )
+        last_ts[key] = ts
+    if counts.get("X", 0) == 0:
+        errors.append(f"{path}: no complete ('X') span events")
+    if counts.get("C", 0) == 0:
+        errors.append(f"{path}: no counter ('C') sample events")
+    summary = ", ".join(f"{ph}={n}" for ph, n in sorted(counts.items()))
+    print(f"{path}: {len(events)} events ({summary})")
+    return errors
+
+
+def check_spans(path: str) -> list:
+    errors = []
+    n = 0
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            if not line.strip():
+                continue
+            try:
+                span = json.loads(line)
+            except json.JSONDecodeError as e:
+                errors.append(f"{path}:{lineno}: bad JSON ({e})")
+                continue
+            missing = SPAN_KEYS - set(span)
+            if missing:
+                errors.append(f"{path}:{lineno}: missing keys {sorted(missing)}")
+            n += 1
+    if n == 0:
+        errors.append(f"{path}: no span records")
+    print(f"{path}: {n} spans")
+    return errors
+
+
+def check_metrics(path: str) -> list:
+    errors = []
+    with open(path) as f:
+        lines = f.read().splitlines()
+    if not lines or lines[0] != METRICS_HEADER:
+        errors.append(f"{path}: bad or missing header")
+    rows = [l for l in lines[1:] if l.strip()]
+    if not rows:
+        errors.append(f"{path}: no sample rows")
+    print(f"{path}: {len(rows)} sample rows")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("perfetto")
+    ap.add_argument("--spans", help="span JSONL stream to validate too")
+    ap.add_argument("--metrics", help="time-series CSV to validate too")
+    args = ap.parse_args()
+
+    errors = check_perfetto(args.perfetto)
+    if args.spans:
+        errors += check_spans(args.spans)
+    if args.metrics:
+        errors += check_metrics(args.metrics)
+
+    if errors:
+        print("\ntrace export gate FAILED:", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print("\ntrace export gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
