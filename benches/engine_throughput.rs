@@ -8,6 +8,7 @@
 #[path = "harness.rs"]
 mod harness;
 
+use simfaas::cluster::{ClusterConfig, SchedulerSpec};
 use simfaas::fleet::{FleetConfig, FleetResults, PolicySpec};
 use simfaas::output::JsonValue;
 use simfaas::runtime::{Engine, PayloadKind};
@@ -208,6 +209,33 @@ fn main() {
         sample_total
     );
     rates.set("telemetry_events_per_sec", eps_telem);
+
+    // --- cluster placement + eviction overhead ---
+    // The same 500-function mix packed onto 32 finite hosts under the
+    // least-loaded scheduler: every cold start routes through host
+    // selection and accounting, and memory pressure exercises the
+    // eviction path. The clustered runner is single-queue (threads are
+    // ignored), so this also bounds the worst-case serial throughput.
+    let cluster_cfg = fleet_cfg.clone().with_cluster(
+        ClusterConfig::new(32, 4_096.0, 32.0).with_scheduler(SchedulerSpec::LeastLoaded),
+    );
+    let (res_cluster, cluster_res) =
+        harness::bench("cluster/bin_packing_500fn", 3, || cluster_cfg.run());
+    assert_eq!(
+        cluster_res.aggregate.host_utilization.len(),
+        32,
+        "cluster metrics missing from the aggregate"
+    );
+    let cluster_events =
+        cluster_res.aggregate.total_requests * 2 + cluster_res.aggregate.instances_expired;
+    let eps_cluster = cluster_events as f64 / res_cluster.mean_s;
+    println!(
+        "  -> {:.2} M events/s on 32 hosts ({} placement failures, {} evictions)",
+        eps_cluster / 1e6,
+        cluster_res.aggregate.placement_failures,
+        cluster_res.aggregate.evictions
+    );
+    rates.set("cluster_events_per_sec", eps_cluster);
 
     json.set("events_per_sec", rates);
     let path = std::env::var("SIMFAAS_BENCH_JSON")

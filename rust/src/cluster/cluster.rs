@@ -1,0 +1,496 @@
+//! Cluster configuration and runtime state: the cluster-gate that
+//! replaces the flat fleet counter when hosts are configured.
+//!
+//! [`ClusterConfig`] is the declarative shape (scenario/CLI);
+//! [`ClusterState`] is the runtime bookkeeping the fleet's
+//! `LifecycleHooks` drive. The protocol mirrors `sim::core`'s cold-start
+//! sequence exactly:
+//!
+//! 1. `admit_cold` → [`ClusterState::admit`] asks the scheduler for a
+//!    host with room and parks it as *pending* (a failure counts as a
+//!    placement failure and raises memory pressure);
+//! 2. `on_cold_start` → [`ClusterState::commit`] charges the pending
+//!    host and records the placement on the function's stack;
+//! 3. `on_expire` → [`ClusterState::release`] frees the newest placement
+//!    (or a pinned host's placement during forced eviction).
+//!
+//! Containers are fungible per function: hooks carry no instance
+//! identity, so placements are tracked as per-function LIFO stacks of
+//! host indices. Forced eviction (memory pressure, host drains) pins the
+//! host to release so resources come off the right machine; which
+//! *physical* idle container dies is decided by the engine's oldest-idle
+//! order. This approximation keeps the hooks seam unchanged and the
+//! no-cluster path bit-identical.
+
+use super::host::Host;
+use super::placement::{Scheduler, SchedulerSpec};
+
+/// CPU cores charged per container. The paper's model is
+/// memory-centric; a flat per-container core cost lets `host_cpus` act
+/// as a per-host container cap without a second footprint column.
+pub const CONTAINER_CPUS: f64 = 1.0;
+
+/// A maintenance/failure window during which one host accepts no new
+/// placements and its idle containers are evicted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostDrain {
+    /// Index of the host to drain.
+    pub host: usize,
+    /// Window start (seconds).
+    pub start: f64,
+    /// Window end (seconds, exclusive).
+    pub end: f64,
+}
+
+/// Declarative cluster shape: homogeneous hosts plus a scheduler.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of invoker hosts.
+    pub hosts: usize,
+    /// Memory capacity per host (MB).
+    pub host_memory_mb: f64,
+    /// CPU capacity per host (cores); each container costs
+    /// [`CONTAINER_CPUS`].
+    pub host_cpus: f64,
+    /// Invoker-selection strategy.
+    pub scheduler: SchedulerSpec,
+    /// Evict idle containers under memory pressure and on host drains
+    /// (on by default; off leaves capacity emergent from expiry alone).
+    pub eviction: bool,
+    /// Host drain windows (maintenance / failure).
+    pub drains: Vec<HostDrain>,
+}
+
+impl ClusterConfig {
+    /// A cluster of `hosts` identical hosts with the default
+    /// (first-fit) scheduler and eviction enabled.
+    pub fn new(hosts: usize, host_memory_mb: f64, host_cpus: f64) -> ClusterConfig {
+        ClusterConfig {
+            hosts,
+            host_memory_mb,
+            host_cpus,
+            scheduler: SchedulerSpec::default(),
+            eviction: true,
+            drains: Vec::new(),
+        }
+    }
+
+    /// A cluster whose hosts have unbounded memory and CPU — placement
+    /// always succeeds, so results must match the uncapped fleet.
+    pub fn unbounded(hosts: usize) -> ClusterConfig {
+        ClusterConfig::new(hosts, f64::INFINITY, f64::INFINITY)
+    }
+
+    /// Set the placement scheduler.
+    pub fn with_scheduler(mut self, scheduler: SchedulerSpec) -> ClusterConfig {
+        self.scheduler = scheduler;
+        self
+    }
+
+    /// Enable/disable pressure + drain eviction.
+    pub fn with_eviction(mut self, eviction: bool) -> ClusterConfig {
+        self.eviction = eviction;
+        self
+    }
+
+    /// Add a host drain window.
+    pub fn with_drain(mut self, host: usize, start: f64, end: f64) -> ClusterConfig {
+        self.drains.push(HostDrain { host, start, end });
+        self
+    }
+
+    /// Check structural validity. Unbounded (infinite) capacities are
+    /// allowed; zero or negative capacities are not — a zero-memory host
+    /// could never place a container.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.hosts == 0 {
+            return Err("hosts must be at least 1".into());
+        }
+        if !(self.host_memory_mb > 0.0) {
+            return Err(format!(
+                "host_memory_mb must be positive (a zero-memory host cannot place any container), got {}",
+                self.host_memory_mb
+            ));
+        }
+        if !(self.host_cpus > 0.0) {
+            return Err(format!("host_cpus must be positive, got {}", self.host_cpus));
+        }
+        for (i, d) in self.drains.iter().enumerate() {
+            if d.host >= self.hosts {
+                return Err(format!(
+                    "drains[{i}].host {} out of range for {} hosts",
+                    d.host, self.hosts
+                ));
+            }
+            if !d.start.is_finite() || d.start < 0.0 {
+                return Err(format!("drains[{i}].start must be finite and non-negative"));
+            }
+            if !d.end.is_finite() || d.end <= d.start {
+                return Err(format!("drains[{i}].end must be finite and after start"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-run cluster report: placement failures, forced evictions, and
+/// per-host time-averaged memory utilization.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClusterUsage {
+    /// Placement attempts (cold starts and prewarms) no host could fit.
+    pub placement_failures: u64,
+    /// Idle containers force-evicted by pressure or drains.
+    pub evictions: u64,
+    /// Time-averaged memory utilization per host over the run.
+    pub host_utilization: Vec<f64>,
+}
+
+/// Runtime cluster bookkeeping driven from the fleet's lifecycle hooks.
+pub struct ClusterState {
+    config: ClusterConfig,
+    hosts: Vec<Host>,
+    scheduler: Box<dyn Scheduler>,
+    /// Per-function LIFO stacks of host indices (one entry per live
+    /// container of that function).
+    allocations: Vec<Vec<usize>>,
+    /// Host chosen by the last successful [`admit`](Self::admit),
+    /// consumed by [`commit`](Self::commit).
+    pending: Option<usize>,
+    /// During forced eviction: release placements from this host.
+    pinned_release: Option<usize>,
+    /// Memory footprint (MB) of the most recent failed placement;
+    /// taken by the pressure-relief sweep.
+    pressure: Option<f64>,
+    now: f64,
+    placement_failures: u64,
+    gate_rejections: u64,
+    evictions: u64,
+}
+
+impl ClusterState {
+    /// Build the runtime state for `functions` functions.
+    pub fn new(config: &ClusterConfig, functions: usize) -> ClusterState {
+        ClusterState {
+            hosts: (0..config.hosts)
+                .map(|_| Host::new(config.host_memory_mb, config.host_cpus))
+                .collect(),
+            scheduler: config.scheduler.build(),
+            allocations: vec![Vec::new(); functions],
+            pending: None,
+            pinned_release: None,
+            pressure: None,
+            now: 0.0,
+            placement_failures: 0,
+            gate_rejections: 0,
+            evictions: 0,
+            config: config.clone(),
+        }
+    }
+
+    /// The configuration this state was built from.
+    pub fn config(&self) -> &ClusterConfig {
+        &self.config
+    }
+
+    /// The hosts (for reporting).
+    pub fn hosts(&self) -> &[Host] {
+        &self.hosts
+    }
+
+    /// Placement attempts no host could fit.
+    pub fn placement_failures(&self) -> u64 {
+        self.placement_failures
+    }
+
+    /// Requests rejected solely by cluster capacity (feeds the fleet's
+    /// `cap_rejections` aggregate).
+    pub fn gate_rejections(&self) -> u64 {
+        self.gate_rejections
+    }
+
+    /// Containers force-evicted so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Advance simulation time and recompute drain cordons. Returns the
+    /// hosts that just became cordoned (their idle containers should be
+    /// evicted). Windows that fall entirely between two events are
+    /// never observed — deterministic, since event times are.
+    pub fn advance_to(&mut self, now: f64) -> Vec<usize> {
+        self.now = now;
+        if self.config.drains.is_empty() {
+            return Vec::new();
+        }
+        let mut newly = Vec::new();
+        for host in 0..self.hosts.len() {
+            let cordon = self
+                .config
+                .drains
+                .iter()
+                .any(|d| d.host == host && d.start <= now && now < d.end);
+            if cordon && !self.hosts[host].is_cordoned() {
+                newly.push(host);
+            }
+            self.hosts[host].set_cordoned(cordon);
+        }
+        newly
+    }
+
+    /// Ask the scheduler for a host with room for one container of
+    /// `memory_mb`. On success the host is parked as pending for
+    /// [`commit`](Self::commit); on failure the placement failure is
+    /// counted and memory pressure is raised.
+    pub fn admit(&mut self, memory_mb: f64) -> bool {
+        match self
+            .scheduler
+            .select(&self.hosts, memory_mb, CONTAINER_CPUS)
+        {
+            Some(host) => {
+                self.pending = Some(host);
+                true
+            }
+            None => {
+                self.pending = None;
+                self.placement_failures += 1;
+                self.pressure = Some(memory_mb);
+                false
+            }
+        }
+    }
+
+    /// Charge the pending host for `func`'s new container. Must follow
+    /// a successful [`admit`](Self::admit) (the core calls `admit_cold`
+    /// immediately before every `on_cold_start`).
+    pub fn commit(&mut self, func: u32, memory_mb: f64) {
+        let host = self
+            .pending
+            .take()
+            .expect("cluster commit without a prior successful admit");
+        self.hosts[host].allocate(memory_mb, CONTAINER_CPUS, self.now);
+        self.allocations[func as usize].push(host);
+    }
+
+    /// Release one of `func`'s containers: the newest placement, or —
+    /// during forced eviction — the newest placement on the pinned host.
+    pub fn release(&mut self, func: u32, memory_mb: f64) {
+        let stack = &mut self.allocations[func as usize];
+        let host = match self.pinned_release {
+            Some(pin) => match stack.iter().rposition(|&h| h == pin) {
+                Some(pos) => {
+                    self.evictions += 1;
+                    Some(stack.remove(pos))
+                }
+                None => stack.pop(),
+            },
+            None => stack.pop(),
+        };
+        if let Some(host) = host {
+            self.hosts[host].release(memory_mb, CONTAINER_CPUS, self.now);
+        }
+    }
+
+    /// Count a request rejected solely by cluster capacity.
+    pub fn gate_reject(&mut self) {
+        self.gate_rejections += 1;
+    }
+
+    /// Pin forced releases to `host` (drain / pressure eviction).
+    pub fn pin_release(&mut self, host: usize) {
+        self.pinned_release = Some(host);
+    }
+
+    /// Clear the forced-release pin.
+    pub fn clear_pin(&mut self) {
+        self.pinned_release = None;
+    }
+
+    /// Take the pending memory-pressure signal, if any.
+    pub fn take_pressure(&mut self) -> Option<f64> {
+        self.pressure.take()
+    }
+
+    /// Functions with at least one container on `host`, ascending.
+    pub fn functions_on(&self, host: usize) -> Vec<u32> {
+        self.allocations
+            .iter()
+            .enumerate()
+            .filter(|(_, stack)| stack.contains(&host))
+            .map(|(f, _)| f as u32)
+            .collect()
+    }
+
+    /// Whether `host` currently fits one container of `memory_mb`.
+    pub fn host_fits(&self, host: usize, memory_mb: f64) -> bool {
+        self.hosts[host].fits(memory_mb, CONTAINER_CPUS)
+    }
+
+    /// Whether any host currently fits one container of `memory_mb`.
+    pub fn any_host_fits(&self, memory_mb: f64) -> bool {
+        self.hosts.iter().any(|h| h.fits(memory_mb, CONTAINER_CPUS))
+    }
+
+    /// Eviction target for pressure relief: the non-cordoned host with
+    /// containers to evict and the most free memory (ties → lowest
+    /// index), i.e. the host closest to fitting the failed placement.
+    pub fn pressure_target(&self) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, h) in self.hosts.iter().enumerate() {
+            if h.is_cordoned() || h.containers() == 0 {
+                continue;
+            }
+            let free = h.free_memory_mb();
+            match best {
+                Some((_, best_free)) if free <= best_free => {}
+                _ => best = Some((i, free)),
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Total free memory across hosts, saturated to `u64::MAX` for
+    /// unbounded hosts — exported through the telemetry `cap_headroom`
+    /// channel.
+    pub fn headroom(&self) -> u64 {
+        let free: f64 = self.hosts.iter().map(Host::free_memory_mb).sum();
+        if free.is_finite() {
+            free.max(0.0) as u64
+        } else {
+            u64::MAX
+        }
+    }
+
+    /// Finalize host accounting at `horizon` and report usage.
+    pub fn usage(&mut self, horizon: f64) -> ClusterUsage {
+        for h in &mut self.hosts {
+            h.advance(horizon);
+        }
+        ClusterUsage {
+            placement_failures: self.placement_failures,
+            evictions: self.evictions,
+            host_utilization: self
+                .hosts
+                .iter()
+                .map(|h| h.time_avg_memory_utilization(horizon))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validate_rejects_bad_shapes() {
+        assert!(ClusterConfig::new(0, 1024.0, 4.0).validate().is_err());
+        let zero_mem = ClusterConfig::new(2, 0.0, 4.0).validate().unwrap_err();
+        assert!(zero_mem.contains("zero-memory"), "{zero_mem}");
+        assert!(ClusterConfig::new(2, 1024.0, 0.0).validate().is_err());
+        assert!(ClusterConfig::new(2, 1024.0, 4.0)
+            .with_drain(5, 0.0, 10.0)
+            .validate()
+            .is_err());
+        assert!(ClusterConfig::new(2, 1024.0, 4.0)
+            .with_drain(1, 10.0, 10.0)
+            .validate()
+            .is_err());
+        assert!(ClusterConfig::new(2, 1024.0, 4.0)
+            .with_drain(1, 10.0, 20.0)
+            .validate()
+            .is_ok());
+        assert!(ClusterConfig::unbounded(1).validate().is_ok());
+    }
+
+    #[test]
+    fn admit_commit_release_cycle_tracks_capacity() {
+        let cfg = ClusterConfig::new(1, 256.0, 32.0);
+        let mut st = ClusterState::new(&cfg, 1);
+        assert!(st.admit(128.0));
+        st.commit(0, 128.0);
+        assert!(st.admit(128.0));
+        st.commit(0, 128.0);
+        assert!(!st.admit(64.0), "host full");
+        assert_eq!(st.placement_failures(), 1);
+        assert_eq!(st.take_pressure(), Some(64.0));
+        assert_eq!(st.take_pressure(), None, "pressure is taken once");
+        st.release(0, 128.0);
+        assert!(st.admit(64.0));
+        st.commit(0, 64.0);
+        assert_eq!(st.headroom(), 64);
+    }
+
+    #[test]
+    fn pinned_release_frees_the_pinned_host() {
+        // Two containers of func 0: one on each host (first-fit packs
+        // host 0 first, so size them to force the spill).
+        let cfg = ClusterConfig::new(2, 128.0, 32.0);
+        let mut st = ClusterState::new(&cfg, 1);
+        assert!(st.admit(128.0));
+        st.commit(0, 128.0); // host 0
+        assert!(st.admit(128.0));
+        st.commit(0, 128.0); // host 1
+        assert_eq!(st.functions_on(0), vec![0]);
+        assert_eq!(st.functions_on(1), vec![0]);
+
+        st.pin_release(0);
+        st.release(0, 128.0);
+        st.clear_pin();
+        assert_eq!(st.evictions(), 1);
+        assert!(st.host_fits(0, 128.0), "pinned host 0 was freed");
+        assert!(!st.host_fits(1, 128.0), "host 1 untouched");
+    }
+
+    #[test]
+    fn unpinned_release_pops_newest_placement() {
+        let cfg = ClusterConfig::new(2, 128.0, 32.0);
+        let mut st = ClusterState::new(&cfg, 1);
+        assert!(st.admit(128.0));
+        st.commit(0, 128.0); // host 0
+        assert!(st.admit(128.0));
+        st.commit(0, 128.0); // host 1 (newest)
+        st.release(0, 128.0);
+        assert!(st.host_fits(1, 128.0), "newest placement (host 1) freed");
+        assert!(!st.host_fits(0, 128.0));
+    }
+
+    #[test]
+    fn drain_windows_cordon_and_uncordon() {
+        let cfg = ClusterConfig::new(2, 1024.0, 32.0).with_drain(0, 10.0, 20.0);
+        let mut st = ClusterState::new(&cfg, 1);
+        assert!(st.advance_to(5.0).is_empty());
+        assert_eq!(st.advance_to(10.0), vec![0], "window opens");
+        assert!(st.hosts()[0].is_cordoned());
+        assert!(st.advance_to(15.0).is_empty(), "already cordoned");
+        assert!(st.advance_to(25.0).is_empty(), "window closed");
+        assert!(!st.hosts()[0].is_cordoned());
+    }
+
+    #[test]
+    fn pressure_target_prefers_freest_busy_host() {
+        let cfg = ClusterConfig::new(3, 1024.0, 32.0);
+        let mut st = ClusterState::new(&cfg, 2);
+        // host 0: two containers (first-fit), host 1: none, host 2: none.
+        assert!(st.admit(512.0));
+        st.commit(0, 512.0);
+        assert!(st.admit(256.0));
+        st.commit(1, 256.0);
+        // Only host 0 has containers, so it is the only candidate.
+        assert_eq!(st.pressure_target(), Some(0));
+        assert_eq!(st.functions_on(0), vec![0, 1]);
+    }
+
+    #[test]
+    fn unbounded_cluster_always_admits() {
+        let cfg = ClusterConfig::unbounded(1);
+        let mut st = ClusterState::new(&cfg, 1);
+        for _ in 0..1000 {
+            assert!(st.admit(512.0));
+            st.commit(0, 512.0);
+        }
+        assert_eq!(st.placement_failures(), 0);
+        assert_eq!(st.headroom(), u64::MAX);
+        let usage = st.usage(100.0);
+        assert_eq!(usage.host_utilization, vec![0.0]);
+    }
+}

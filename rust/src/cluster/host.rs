@@ -1,0 +1,206 @@
+//! One invoker host: finite memory/CPU capacity with per-container
+//! resource accounting and time-weighted utilization counters.
+//!
+//! A [`Host`] is pure bookkeeping — it draws no RNG and schedules no
+//! events, so the cluster layer composes with the engines' bit-identity
+//! contracts (DESIGN.md §Cluster). Capacities are `f64` so a host can be
+//! unbounded (`f64::INFINITY`) for equivalence tests; allocation uses a
+//! small epsilon so long add/release chains cannot reject a container
+//! that nominally fits.
+
+/// Slack for floating-point capacity comparisons (MB / cores).
+const EPS: f64 = 1e-9;
+
+/// One invoker host with finite memory and CPU capacity.
+#[derive(Debug, Clone)]
+pub struct Host {
+    memory_mb: f64,
+    cpus: f64,
+    used_memory_mb: f64,
+    used_cpus: f64,
+    containers: u32,
+    /// Cordoned hosts (an active drain window) accept no new placements;
+    /// existing containers keep running and drain naturally.
+    cordoned: bool,
+    /// Containers ever placed on this host.
+    placements: u64,
+    /// Time integral of `used_memory_mb` (MB·s), advanced lazily on every
+    /// allocation/release so idle events cost nothing.
+    mem_mb_seconds: f64,
+    last_advance: f64,
+}
+
+impl Host {
+    /// A fresh, empty host with the given capacities.
+    pub fn new(memory_mb: f64, cpus: f64) -> Host {
+        Host {
+            memory_mb,
+            cpus,
+            used_memory_mb: 0.0,
+            used_cpus: 0.0,
+            containers: 0,
+            cordoned: false,
+            placements: 0,
+            mem_mb_seconds: 0.0,
+            last_advance: 0.0,
+        }
+    }
+
+    /// Memory capacity in MB.
+    #[inline]
+    pub fn memory_mb(&self) -> f64 {
+        self.memory_mb
+    }
+
+    /// CPU capacity in cores.
+    #[inline]
+    pub fn cpus(&self) -> f64 {
+        self.cpus
+    }
+
+    /// Remaining memory in MB.
+    #[inline]
+    pub fn free_memory_mb(&self) -> f64 {
+        self.memory_mb - self.used_memory_mb
+    }
+
+    /// Remaining CPU capacity in cores.
+    #[inline]
+    pub fn free_cpus(&self) -> f64 {
+        self.cpus - self.used_cpus
+    }
+
+    /// Containers currently resident.
+    #[inline]
+    pub fn containers(&self) -> u32 {
+        self.containers
+    }
+
+    /// Containers ever placed here.
+    #[inline]
+    pub fn placements(&self) -> u64 {
+        self.placements
+    }
+
+    /// Whether the host is cordoned (active drain window).
+    #[inline]
+    pub fn is_cordoned(&self) -> bool {
+        self.cordoned
+    }
+
+    /// Cordon or uncordon the host (drain-window boundaries).
+    pub fn set_cordoned(&mut self, cordoned: bool) {
+        self.cordoned = cordoned;
+    }
+
+    /// Whether a container of the given footprint can be placed now.
+    /// Cordoned hosts accept nothing.
+    #[inline]
+    pub fn fits(&self, memory_mb: f64, cpus: f64) -> bool {
+        !self.cordoned
+            && self.used_memory_mb + memory_mb <= self.memory_mb + EPS
+            && self.used_cpus + cpus <= self.cpus + EPS
+    }
+
+    /// Charge one container's footprint (caller checked [`fits`](Self::fits)).
+    pub fn allocate(&mut self, memory_mb: f64, cpus: f64, now: f64) {
+        self.advance(now);
+        self.used_memory_mb += memory_mb;
+        self.used_cpus += cpus;
+        self.containers += 1;
+        self.placements += 1;
+    }
+
+    /// Release one container's footprint (clamped at zero so accounting
+    /// drift can never go negative).
+    pub fn release(&mut self, memory_mb: f64, cpus: f64, now: f64) {
+        self.advance(now);
+        self.used_memory_mb = (self.used_memory_mb - memory_mb).max(0.0);
+        self.used_cpus = (self.used_cpus - cpus).max(0.0);
+        self.containers = self.containers.saturating_sub(1);
+    }
+
+    /// Instantaneous memory utilization in `[0, 1]` (0 for unbounded hosts).
+    pub fn memory_utilization(&self) -> f64 {
+        if self.memory_mb.is_finite() && self.memory_mb > 0.0 {
+            self.used_memory_mb / self.memory_mb
+        } else {
+            0.0
+        }
+    }
+
+    /// Advance the time-weighted accumulator to `now` (idempotent; called
+    /// from every allocate/release and once at the horizon).
+    pub fn advance(&mut self, now: f64) {
+        if now > self.last_advance {
+            self.mem_mb_seconds += self.used_memory_mb * (now - self.last_advance);
+            self.last_advance = now;
+        }
+    }
+
+    /// Time-averaged memory utilization over `[0, elapsed]` in `[0, 1]`
+    /// (0 for unbounded hosts or a zero-length window). Call
+    /// [`advance`](Self::advance) to the window end first.
+    pub fn time_avg_memory_utilization(&self, elapsed: f64) -> f64 {
+        if self.memory_mb.is_finite() && self.memory_mb > 0.0 && elapsed > 0.0 {
+            self.mem_mb_seconds / (self.memory_mb * elapsed)
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_release_round_trip() {
+        let mut h = Host::new(1024.0, 4.0);
+        assert!(h.fits(512.0, 1.0));
+        h.allocate(512.0, 1.0, 10.0);
+        h.allocate(512.0, 1.0, 10.0);
+        assert_eq!(h.containers(), 2);
+        assert_eq!(h.placements(), 2);
+        assert!(!h.fits(1.0, 1.0), "memory exhausted");
+        h.release(512.0, 1.0, 20.0);
+        assert!(h.fits(512.0, 1.0));
+        assert_eq!(h.containers(), 1);
+        assert!((h.free_memory_mb() - 512.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cpu_capacity_binds_independently() {
+        let mut h = Host::new(1e9, 2.0);
+        h.allocate(1.0, 1.0, 0.0);
+        h.allocate(1.0, 1.0, 0.0);
+        assert!(!h.fits(1.0, 1.0), "cpus exhausted before memory");
+    }
+
+    #[test]
+    fn cordoned_host_rejects_everything() {
+        let mut h = Host::new(1024.0, 4.0);
+        h.set_cordoned(true);
+        assert!(!h.fits(1.0, 0.0));
+        h.set_cordoned(false);
+        assert!(h.fits(1.0, 0.0));
+    }
+
+    #[test]
+    fn unbounded_host_always_fits() {
+        let h = Host::new(f64::INFINITY, f64::INFINITY);
+        assert!(h.fits(1e12, 1e12));
+        assert_eq!(h.memory_utilization(), 0.0);
+        assert_eq!(h.time_avg_memory_utilization(100.0), 0.0);
+    }
+
+    #[test]
+    fn time_weighted_utilization() {
+        // 512 of 1024 MB held for 50 of 100 s -> 25% average.
+        let mut h = Host::new(1024.0, 4.0);
+        h.allocate(512.0, 1.0, 0.0);
+        h.release(512.0, 1.0, 50.0);
+        h.advance(100.0);
+        assert!((h.time_avg_memory_utilization(100.0) - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,34 @@
+//! Cluster host & placement layer: finite-resource hosts, pluggable
+//! schedulers, emergent capacity.
+//!
+//! SimFaaS models platform capacity as one abstract instance counter;
+//! real platforms schedule containers onto a cluster of invoker hosts
+//! with finite memory and CPU, where admission, eviction, and rejection
+//! *emerge* from bin-packing. This module supplies that provider-side
+//! layer:
+//!
+//! - [`Host`] — one invoker: memory/CPU capacity, per-container
+//!   accounting, time-weighted utilization counters.
+//! - [`Scheduler`] — the invoker-selection trait, with
+//!   [`FirstFit`], [`LeastLoaded`], [`RoundRobin`], and [`PackingAware`]
+//!   implementations selected via the serializable [`SchedulerSpec`].
+//! - [`ClusterConfig`] / [`ClusterState`] — the declarative shape and
+//!   the runtime cluster-gate that replaces the flat `FleetGate`
+//!   counter when a cluster is configured, including memory-pressure
+//!   eviction and [`HostDrain`] maintenance windows.
+//!
+//! Placement is routed through the `LifecycleHooks` seam in
+//! [`crate::sim::core`]: `admit_cold` consults the scheduler for a host
+//! with room, `on_cold_start` charges it, `on_expire` releases it. With
+//! no cluster configured none of this code runs and every engine's
+//! output is bit-identical to the flat-counter path. Per-function
+//! memory footprints come from each `FunctionSpec` (for Azure-dataset
+//! workloads, the per-app memory join in `workload::azure_dataset`).
+
+mod cluster;
+mod host;
+mod placement;
+
+pub use cluster::{ClusterConfig, ClusterState, ClusterUsage, HostDrain, CONTAINER_CPUS};
+pub use host::Host;
+pub use placement::{FirstFit, LeastLoaded, PackingAware, RoundRobin, Scheduler, SchedulerSpec};

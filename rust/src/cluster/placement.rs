@@ -1,0 +1,249 @@
+//! Pluggable invoker-selection schedulers.
+//!
+//! A [`Scheduler`] picks which [`Host`] receives a new container. All
+//! implementations are deterministic (no RNG) and break ties toward the
+//! lowest host index so cluster runs stay bit-reproducible. The
+//! [`SchedulerSpec`] enum is the serializable handle used by scenarios
+//! and the CLI; [`SchedulerSpec::build`] instantiates the boxed trait
+//! object.
+
+use super::host::Host;
+
+/// Invoker-selection strategy: pick the host for a new container.
+pub trait Scheduler {
+    /// Index of a host where a container with the given footprint fits,
+    /// or `None` when no host has room (a placement failure).
+    fn select(&mut self, hosts: &[Host], memory_mb: f64, cpus: f64) -> Option<usize>;
+
+    /// Stable human-readable name (used as the sweep label).
+    fn name(&self) -> &'static str;
+}
+
+/// First host (lowest index) with room.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FirstFit;
+
+impl Scheduler for FirstFit {
+    fn select(&mut self, hosts: &[Host], memory_mb: f64, cpus: f64) -> Option<usize> {
+        hosts.iter().position(|h| h.fits(memory_mb, cpus))
+    }
+
+    fn name(&self) -> &'static str {
+        "first-fit"
+    }
+}
+
+/// Fitting host with the most free memory (ties → lowest index).
+/// Spreads load; the opposite of [`PackingAware`].
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LeastLoaded;
+
+impl Scheduler for LeastLoaded {
+    fn select(&mut self, hosts: &[Host], memory_mb: f64, cpus: f64) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, h) in hosts.iter().enumerate() {
+            if !h.fits(memory_mb, cpus) {
+                continue;
+            }
+            let free = h.free_memory_mb();
+            match best {
+                Some((_, best_free)) if free <= best_free => {}
+                _ => best = Some((i, free)),
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+}
+
+/// Rotate through hosts, starting the scan after the previous pick.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RoundRobin {
+    cursor: usize,
+}
+
+impl Scheduler for RoundRobin {
+    fn select(&mut self, hosts: &[Host], memory_mb: f64, cpus: f64) -> Option<usize> {
+        if hosts.is_empty() {
+            return None;
+        }
+        for step in 0..hosts.len() {
+            let i = (self.cursor + step) % hosts.len();
+            if hosts[i].fits(memory_mb, cpus) {
+                self.cursor = (i + 1) % hosts.len();
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+}
+
+/// Best-fit bin packing: the fitting host that would be left with the
+/// least free memory (ties → lowest index). Consolidates containers onto
+/// few hosts, keeping the rest drained for locality/power.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PackingAware;
+
+impl Scheduler for PackingAware {
+    fn select(&mut self, hosts: &[Host], memory_mb: f64, cpus: f64) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, h) in hosts.iter().enumerate() {
+            if !h.fits(memory_mb, cpus) {
+                continue;
+            }
+            let left = h.free_memory_mb() - memory_mb;
+            match best {
+                Some((_, best_left)) if left >= best_left => {}
+                _ => best = Some((i, left)),
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    fn name(&self) -> &'static str {
+        "packing"
+    }
+}
+
+/// Serializable scheduler selector for scenarios and the CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedulerSpec {
+    /// First host with room ([`FirstFit`]).
+    #[default]
+    FirstFit,
+    /// Most free memory ([`LeastLoaded`]).
+    LeastLoaded,
+    /// Rotating cursor ([`RoundRobin`]).
+    RoundRobin,
+    /// Best-fit bin packing ([`PackingAware`]).
+    PackingAware,
+}
+
+impl SchedulerSpec {
+    /// Every variant, in a stable sweep order.
+    pub fn all() -> [SchedulerSpec; 4] {
+        [
+            SchedulerSpec::FirstFit,
+            SchedulerSpec::LeastLoaded,
+            SchedulerSpec::RoundRobin,
+            SchedulerSpec::PackingAware,
+        ]
+    }
+
+    /// Parse the CLI/JSON spelling (`first-fit`, `least-loaded`,
+    /// `round-robin`, `packing`).
+    pub fn parse(s: &str) -> Option<SchedulerSpec> {
+        match s {
+            "first-fit" => Some(SchedulerSpec::FirstFit),
+            "least-loaded" => Some(SchedulerSpec::LeastLoaded),
+            "round-robin" => Some(SchedulerSpec::RoundRobin),
+            "packing" | "packing-aware" => Some(SchedulerSpec::PackingAware),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling (round-trips through [`parse`](Self::parse)).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SchedulerSpec::FirstFit => "first-fit",
+            SchedulerSpec::LeastLoaded => "least-loaded",
+            SchedulerSpec::RoundRobin => "round-robin",
+            SchedulerSpec::PackingAware => "packing",
+        }
+    }
+
+    /// Instantiate the scheduler this spec names.
+    pub fn build(&self) -> Box<dyn Scheduler> {
+        match self {
+            SchedulerSpec::FirstFit => Box::new(FirstFit),
+            SchedulerSpec::LeastLoaded => Box::new(LeastLoaded),
+            SchedulerSpec::RoundRobin => Box::new(RoundRobin::default()),
+            SchedulerSpec::PackingAware => Box::new(PackingAware),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hosts_with_free(free: &[f64]) -> Vec<Host> {
+        // Each host has 1000 MB capacity; pre-fill so `free[i]` remains.
+        free.iter()
+            .map(|&f| {
+                let mut h = Host::new(1000.0, 1000.0);
+                h.allocate(1000.0 - f, 0.0, 0.0);
+                h
+            })
+            .collect()
+    }
+
+    #[test]
+    fn first_fit_picks_lowest_fitting_index() {
+        let hosts = hosts_with_free(&[10.0, 500.0, 900.0]);
+        let mut s = FirstFit;
+        assert_eq!(s.select(&hosts, 100.0, 1.0), Some(1));
+        assert_eq!(s.select(&hosts, 5.0, 1.0), Some(0));
+        assert_eq!(s.select(&hosts, 2000.0, 1.0), None);
+    }
+
+    #[test]
+    fn least_loaded_picks_most_free_memory() {
+        let hosts = hosts_with_free(&[10.0, 500.0, 900.0]);
+        let mut s = LeastLoaded;
+        assert_eq!(s.select(&hosts, 100.0, 1.0), Some(2));
+    }
+
+    #[test]
+    fn least_loaded_tie_breaks_to_lowest_index() {
+        let hosts = hosts_with_free(&[400.0, 400.0]);
+        let mut s = LeastLoaded;
+        assert_eq!(s.select(&hosts, 100.0, 1.0), Some(0));
+    }
+
+    #[test]
+    fn round_robin_rotates_and_skips_full_hosts() {
+        let hosts = hosts_with_free(&[500.0, 10.0, 500.0]);
+        let mut s = RoundRobin::default();
+        assert_eq!(s.select(&hosts, 100.0, 1.0), Some(0));
+        assert_eq!(s.select(&hosts, 100.0, 1.0), Some(2), "skips full host 1");
+        assert_eq!(s.select(&hosts, 100.0, 1.0), Some(0), "wraps around");
+        assert_eq!(s.select(&hosts, 2000.0, 1.0), None);
+    }
+
+    #[test]
+    fn packing_aware_picks_tightest_fit() {
+        let hosts = hosts_with_free(&[900.0, 150.0, 500.0]);
+        let mut s = PackingAware;
+        assert_eq!(s.select(&hosts, 100.0, 1.0), Some(1));
+    }
+
+    #[test]
+    fn spec_parse_round_trips() {
+        for spec in SchedulerSpec::all() {
+            assert_eq!(SchedulerSpec::parse(spec.as_str()), Some(spec));
+            assert_eq!(spec.build().name(), spec.as_str());
+        }
+        assert_eq!(
+            SchedulerSpec::parse("packing-aware"),
+            Some(SchedulerSpec::PackingAware)
+        );
+        assert_eq!(SchedulerSpec::parse("random"), None);
+    }
+
+    #[test]
+    fn schedulers_ignore_cordoned_hosts() {
+        let mut hosts = hosts_with_free(&[900.0, 500.0]);
+        hosts[0].set_cordoned(true);
+        assert_eq!(FirstFit.select(&hosts, 100.0, 1.0), Some(1));
+        assert_eq!(LeastLoaded.select(&hosts, 100.0, 1.0), Some(1));
+        assert_eq!(PackingAware.select(&hosts, 100.0, 1.0), Some(1));
+    }
+}

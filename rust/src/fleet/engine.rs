@@ -10,9 +10,10 @@
 //!
 //! * expiration thresholds come from a pluggable
 //!   [`super::policy::KeepAlivePolicy`] instead of a config field,
-//! * cold starts are additionally admitted against the fleet-wide
-//!   [`FleetGate`] so N engines can couple through one shared capacity on
-//!   a single [`FleetQueue`], and
+//! * cold starts are additionally admitted against the shared
+//!   [`FleetCapacity`] — the flat [`FleetGate`] counter or a
+//!   finite-resource [`crate::cluster::ClusterState`] — so N engines can
+//!   couple through one shared capacity on a single [`FleetQueue`], and
 //! * with a positive provisioning lead, the policy's head-percentile arm
 //!   drives prewarm ([`Event::Provision`]) events through the core.
 //!
@@ -28,6 +29,7 @@
 
 use super::policy::KeepAlivePolicy;
 use super::simulator::FunctionSpec;
+use crate::cluster::ClusterState;
 use crate::sim::core::{CoreParams, EngineCore, LifecycleHooks, Scheduler};
 use crate::sim::event::Event;
 use crate::sim::fault::FaultProfile;
@@ -136,15 +138,61 @@ impl FleetGate {
     }
 }
 
-/// The fleet hook set: policy-driven keep-alive (and its prewarm arm) plus
-/// gate-checked admission. Built per event-handler call from borrows of
-/// the engine's policy and the run's shared gate.
-struct FleetHooks<'a> {
-    policy: &'a mut dyn KeepAlivePolicy,
-    gate: &'a mut FleetGate,
+/// The fleet-wide capacity model cold starts are admitted against:
+/// either the flat live-instance counter ([`FleetGate`]) or the
+/// finite-resource cluster ([`ClusterState`]), whose capacity is
+/// emergent from host bin-packing. The `Gate` arm performs exactly the
+/// pre-cluster arithmetic, so runs without a cluster stay bit-identical.
+pub(super) enum FleetCapacity<'a> {
+    /// Flat counter vs. a fleet-wide cap.
+    Gate(&'a mut FleetGate),
+    /// Host-level placement through the cluster scheduler.
+    Cluster(&'a mut ClusterState),
 }
 
-impl LifecycleHooks for FleetHooks<'_> {
+impl FleetCapacity<'_> {
+    fn admit(&mut self, memory_mb: f64) -> bool {
+        match self {
+            FleetCapacity::Gate(g) => g.live < g.cap,
+            FleetCapacity::Cluster(c) => c.admit(memory_mb),
+        }
+    }
+
+    fn on_cold_start(&mut self, func: u32, memory_mb: f64) {
+        match self {
+            FleetCapacity::Gate(g) => g.live += 1,
+            FleetCapacity::Cluster(c) => c.commit(func, memory_mb),
+        }
+    }
+
+    fn on_expire(&mut self, func: u32, memory_mb: f64) {
+        match self {
+            FleetCapacity::Gate(g) => g.live -= 1,
+            FleetCapacity::Cluster(c) => c.release(func, memory_mb),
+        }
+    }
+
+    fn on_gate_only_rejection(&mut self) {
+        match self {
+            FleetCapacity::Gate(g) => g.cap_rejections += 1,
+            FleetCapacity::Cluster(c) => c.gate_reject(),
+        }
+    }
+}
+
+/// The fleet hook set: policy-driven keep-alive (and its prewarm arm) plus
+/// capacity-checked admission. Built per event-handler call from borrows
+/// of the engine's policy and the run's shared capacity model; `func` and
+/// `memory_mb` give the capacity model the container footprint the core's
+/// identity-free hooks don't carry.
+struct FleetHooks<'a, 'b> {
+    policy: &'a mut dyn KeepAlivePolicy,
+    cap: &'a mut FleetCapacity<'b>,
+    func: u32,
+    memory_mb: f64,
+}
+
+impl LifecycleHooks for FleetHooks<'_, '_> {
     fn keep_alive(&mut self, now: f64, rng: &mut Rng) -> f64 {
         self.policy.keep_alive(now, rng)
     }
@@ -156,19 +204,19 @@ impl LifecycleHooks for FleetHooks<'_> {
     }
 
     fn admit_cold(&mut self) -> bool {
-        self.gate.live < self.gate.cap
+        self.cap.admit(self.memory_mb)
     }
 
     fn on_cold_start(&mut self) {
-        self.gate.live += 1;
+        self.cap.on_cold_start(self.func, self.memory_mb);
     }
 
     fn on_expire(&mut self) {
-        self.gate.live -= 1;
+        self.cap.on_expire(self.func, self.memory_mb);
     }
 
     fn on_gate_only_rejection(&mut self) {
-        self.gate.cap_rejections += 1;
+        self.cap.on_gate_only_rejection();
     }
 
     fn prewarm_ready_at(&mut self, now: f64) -> Option<f64> {
@@ -187,6 +235,8 @@ pub(super) struct FunctionEngine {
     arrival: ArrivalSource,
     core: EngineCore,
     policy: Box<dyn KeepAlivePolicy>,
+    /// Container memory footprint (MB) charged against cluster hosts.
+    memory_mb: f64,
 }
 
 impl FunctionEngine {
@@ -221,7 +271,7 @@ impl FunctionEngine {
             fault,
             retry,
         });
-        FunctionEngine { func, arrival, core, policy }
+        FunctionEngine { func, arrival, core, policy, memory_mb: spec.memory_mb }
     }
 
     /// Schedule this function's first arrival through the shared seam
@@ -255,7 +305,8 @@ impl FunctionEngine {
 
     /// Emit any internal-state samples due at the engine's current clock
     /// (no-op without an observer). `cap_headroom` is the fleet gate's
-    /// remaining capacity for the coupled runner, `None` when uncapped.
+    /// remaining capacity for the coupled runner, the cluster's free
+    /// memory (MB) for the clustered runner, `None` when uncapped.
     #[inline]
     pub(super) fn sample_tick(&mut self, cap_headroom: Option<u64>) {
         self.core.sample_tick(cap_headroom);
@@ -265,13 +316,47 @@ impl FunctionEngine {
         self.core.maybe_start_stats(event_time);
     }
 
+    /// Number of fully idle instances (candidates for forced eviction).
+    #[inline]
+    pub(super) fn idle_count(&self) -> usize {
+        self.core.live_counts().2
+    }
+
+    /// This function's container memory footprint (MB).
+    #[inline]
+    pub(super) fn memory_mb(&self) -> f64 {
+        self.memory_mb
+    }
+
+    /// Force-evict up to `n` idle instances (oldest first), releasing
+    /// their capacity through the hooks. Returns how many were evicted.
+    pub(super) fn evict_idle(&mut self, cap: &mut FleetCapacity<'_>, n: usize) -> usize {
+        let mut hooks = FleetHooks {
+            policy: self.policy.as_mut(),
+            cap,
+            func: self.func,
+            memory_mb: self.memory_mb,
+        };
+        self.core.evict_idle(&mut hooks, n)
+    }
+
     /// Dispatch one event to this engine's core — the single entry point
-    /// both fleet run loops use, so a new core event variant is wired in
+    /// all fleet run loops use, so a new core event variant is wired in
     /// exactly one place. [`Event::Horizon`] terminates the loops and must
     /// never reach here.
-    pub(super) fn handle_event(&mut self, queue: &mut FleetQueue, gate: &mut FleetGate, ev: Event) {
+    pub(super) fn handle_event(
+        &mut self,
+        queue: &mut FleetQueue,
+        cap: &mut FleetCapacity<'_>,
+        ev: Event,
+    ) {
         let mut sched = FuncScheduler { queue, func: self.func };
-        let mut hooks = FleetHooks { policy: self.policy.as_mut(), gate };
+        let mut hooks = FleetHooks {
+            policy: self.policy.as_mut(),
+            cap,
+            func: self.func,
+            memory_mb: self.memory_mb,
+        };
         match ev {
             Event::Arrival => {
                 self.core.handle_arrival(&mut sched, &mut hooks);
@@ -344,7 +429,9 @@ mod tests {
         use crate::fleet::policy::FixedExpiration;
         let mut gate = FleetGate::capped(2);
         let mut policy: Box<dyn KeepAlivePolicy> = Box::new(FixedExpiration::new(600.0));
-        let mut hooks = FleetHooks { policy: policy.as_mut(), gate: &mut gate };
+        let mut cap = FleetCapacity::Gate(&mut gate);
+        let mut hooks =
+            FleetHooks { policy: policy.as_mut(), cap: &mut cap, func: 0, memory_mb: 128.0 };
         assert!(hooks.admit_cold());
         hooks.on_cold_start();
         hooks.on_cold_start();
@@ -354,5 +441,27 @@ mod tests {
         assert!(hooks.admit_cold());
         assert_eq!(gate.live, 1);
         assert_eq!(gate.cap_rejections, 1);
+    }
+
+    #[test]
+    fn cluster_hooks_place_and_release_host_memory() {
+        use crate::cluster::ClusterConfig;
+        use crate::fleet::policy::FixedExpiration;
+        let cfg = ClusterConfig::new(1, 256.0, 32.0);
+        let mut cluster = ClusterState::new(&cfg, 1);
+        let mut policy: Box<dyn KeepAlivePolicy> = Box::new(FixedExpiration::new(600.0));
+        let mut cap = FleetCapacity::Cluster(&mut cluster);
+        let mut hooks =
+            FleetHooks { policy: policy.as_mut(), cap: &mut cap, func: 0, memory_mb: 128.0 };
+        assert!(hooks.admit_cold());
+        hooks.on_cold_start();
+        assert!(hooks.admit_cold());
+        hooks.on_cold_start();
+        assert!(!hooks.admit_cold(), "host memory exhausted");
+        hooks.on_gate_only_rejection();
+        hooks.on_expire();
+        assert!(hooks.admit_cold());
+        assert_eq!(cluster.gate_rejections(), 1);
+        assert_eq!(cluster.placement_failures(), 1);
     }
 }

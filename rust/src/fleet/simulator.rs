@@ -1,26 +1,36 @@
 //! The fleet simulator: N heterogeneous functions under one keep-alive
-//! policy, with an optional fleet-wide concurrency cap.
+//! policy, with an optional fleet-wide concurrency cap or a
+//! finite-resource cluster.
 //!
-//! Two execution strategies, chosen automatically:
+//! Three execution strategies, chosen automatically:
 //!
-//! * **Sharded** (no fleet cap): functions are independent, so each one
-//!   runs on its own event queue and the fleet fans them across scoped
-//!   threads with [`crate::sim::ensemble::run_indexed`]. Function `i`'s
-//!   evolution depends only on its spec and seed, so fleet output is
-//!   **bit-identical for any thread count** — the same contract (and the
-//!   same scheduling primitive) as the replication ensemble.
+//! * **Sharded** (no fleet cap, no cluster): functions are independent,
+//!   so each one runs on its own event queue and the fleet fans them
+//!   across scoped threads with [`crate::sim::ensemble::run_indexed`].
+//!   Function `i`'s evolution depends only on its spec and seed, so fleet
+//!   output is **bit-identical for any thread count** — the same contract
+//!   (and the same scheduling primitive) as the replication ensemble.
 //! * **Coupled** (fleet cap set): the cap couples functions through
 //!   admission — a cold start anywhere consumes shared capacity — so all
 //!   functions interleave on one queue, single-threaded, with the shared
 //!   [`super::engine::FleetGate`] deciding admission. Deterministic by
 //!   construction (one thread, seq-tie-broken queue).
+//! * **Clustered** (cluster configured): same single-queue interleaving
+//!   as the coupled path, but admission asks the cluster's placement
+//!   scheduler for a host with room — capacity is emergent from
+//!   bin-packing over finite host memory/CPU, with memory-pressure
+//!   eviction and host-drain windows on top. Deterministic by
+//!   construction for any configured thread count (one thread,
+//!   seq-tie-broken queue; `threads` is ignored).
 //!
-//! With the cap absent the two strategies produce identical per-function
+//! With the cap absent the strategies produce identical per-function
 //! results (functions never interact), which `coupled_matches_sharded_*`
-//! pins below.
+//! pins below; a single-host unbounded cluster reproduces the uncapped
+//! fleet bit-for-bit (pinned in `tests/engine_unification.rs`).
 
-use super::engine::{FleetGate, FleetQueue, FunctionEngine};
+use super::engine::{FleetCapacity, FleetGate, FleetQueue, FunctionEngine};
 use super::policy::PolicySpec;
+use crate::cluster::{ClusterConfig, ClusterState, ClusterUsage};
 use crate::cost::{estimate, CostEstimate, FunctionConfig, PricingTable};
 use crate::sim::ensemble::run_indexed;
 use crate::sim::event::Event;
@@ -47,6 +57,13 @@ pub struct FleetConfig {
     /// Fleet-wide cap on concurrently live instances across *all*
     /// functions. `None` = uncoupled (sharded execution).
     pub fleet_max_concurrency: Option<usize>,
+    /// Finite-resource cluster replacing the flat capacity counter: cold
+    /// starts are placed onto hosts by the configured scheduler, each
+    /// container charging its function's `memory_mb` (plus one core), so
+    /// capacity is emergent from bin-packing. Mutually exclusive with
+    /// `fleet_max_concurrency`; runs single-threaded like the coupled
+    /// path (`threads` is ignored).
+    pub cluster: Option<ClusterConfig>,
     /// Simulation horizon in seconds.
     pub horizon: f64,
     /// Warm-up window excluded from statistics.
@@ -88,6 +105,7 @@ impl FleetConfig {
             functions,
             policy,
             fleet_max_concurrency: None,
+            cluster: None,
             horizon: cfgs[0].horizon,
             skip_initial: cfgs[0].skip_initial,
             threads: 0,
@@ -119,6 +137,7 @@ impl FleetConfig {
             functions,
             policy,
             fleet_max_concurrency: None,
+            cluster: None,
             horizon,
             skip_initial,
             threads: 0,
@@ -156,6 +175,13 @@ impl FleetConfig {
 
     pub fn with_fleet_cap(mut self, cap: usize) -> Self {
         self.fleet_max_concurrency = Some(cap);
+        self
+    }
+
+    /// Replace the flat capacity counter with a finite-resource cluster:
+    /// cold starts are bin-packed onto hosts by the cluster's scheduler.
+    pub fn with_cluster(mut self, cluster: ClusterConfig) -> Self {
+        self.cluster = Some(cluster);
         self
     }
 
@@ -210,15 +236,27 @@ impl FleetConfig {
     /// Run the fleet to the horizon.
     pub fn run(&self) -> FleetResults {
         assert!(!self.functions.is_empty(), "fleet has no functions");
-        let (per_function, recorders, cap_rejections) = match self.fleet_max_concurrency {
-            None => {
-                let (runs, recs) = self.run_sharded();
-                (runs, recs, 0)
-            }
-            Some(cap) => self.run_coupled(cap),
-        };
+        assert!(
+            self.cluster.is_none() || self.fleet_max_concurrency.is_none(),
+            "cluster and fleet_max_concurrency are mutually exclusive capacity models"
+        );
+        let (per_function, recorders, cap_rejections, cluster_usage) =
+            match (&self.cluster, self.fleet_max_concurrency) {
+                (Some(cl), _) => {
+                    let (runs, recs, rejections, usage) = self.run_clustered(cl);
+                    (runs, recs, rejections, Some(usage))
+                }
+                (None, Some(cap)) => {
+                    let (runs, recs, rejections) = self.run_coupled(cap);
+                    (runs, recs, rejections, None)
+                }
+                (None, None) => {
+                    let (runs, recs) = self.run_sharded();
+                    (runs, recs, 0, None)
+                }
+            };
         let names = self.functions.iter().map(|f| f.name.clone()).collect();
-        let aggregate = FleetAggregate::from_runs(&per_function, cap_rejections);
+        let aggregate = FleetAggregate::from_runs(&per_function, cap_rejections, cluster_usage);
         // Recorders come back in function-index order regardless of the
         // shard/thread count, so the recorded bytes are deterministic.
         let telemetry = self
@@ -244,7 +282,7 @@ impl FleetConfig {
                 if matches!(ev, Event::Horizon) {
                     break;
                 }
-                engine.handle_event(&mut queue, &mut gate, ev);
+                engine.handle_event(&mut queue, &mut FleetCapacity::Gate(&mut gate), ev);
             }
             let results = engine.finish(horizon);
             (results, engine.take_recorder())
@@ -271,7 +309,7 @@ impl FleetConfig {
             engine.maybe_start_stats(t);
             engine.set_now(t);
             engine.sample_tick(Some((cap - gate.live) as u64));
-            engine.handle_event(&mut queue, &mut gate, ev);
+            engine.handle_event(&mut queue, &mut FleetCapacity::Gate(&mut gate), ev);
         }
         let mut runs = Vec::with_capacity(engines.len());
         let mut recorders = Vec::with_capacity(engines.len());
@@ -283,6 +321,143 @@ impl FleetConfig {
             recorders.push(engine.take_recorder());
         }
         (runs, recorders, gate.cap_rejections)
+    }
+
+    /// Cluster-coupled functions: the coupled path's single-queue
+    /// interleaving, with admission decided by the cluster's placement
+    /// scheduler over finite hosts instead of a flat counter.
+    fn run_clustered(
+        &self,
+        cl: &ClusterConfig,
+    ) -> (Vec<SimResults>, Vec<Option<TelemetryRecorder>>, u64, ClusterUsage) {
+        let horizon = SimTime::from_secs(self.horizon);
+        let mut engines: Vec<FunctionEngine> =
+            (0..self.functions.len()).map(|i| self.build_engine(i)).collect();
+        let mut queue = FleetQueue::with_capacity(1024 * engines.len().min(64));
+        for engine in engines.iter_mut() {
+            engine.schedule_first_arrival(&mut queue);
+        }
+        queue.schedule(horizon, 0, Event::Horizon);
+        let mut cluster = ClusterState::new(cl, engines.len());
+        while let Some((t, f, ev)) = queue.pop() {
+            if matches!(ev, Event::Horizon) {
+                break;
+            }
+            // Drain windows opening at or before this event cordon their
+            // host and (with eviction on) reclaim its idle containers.
+            for host in cluster.advance_to(t.as_secs()) {
+                if cl.eviction {
+                    Self::drain_host(&mut engines, &mut cluster, host, t);
+                }
+            }
+            // Evict-on-demand: if this event may need a cold placement
+            // and no host currently has room for the function's
+            // footprint, reclaim idle containers first — real platforms
+            // evict idle containers to make room rather than reject.
+            if cl.eviction
+                && matches!(ev, Event::Arrival | Event::RetryArrival { .. } | Event::Provision)
+                && engines[f as usize].idle_count() == 0
+            {
+                let need = engines[f as usize].memory_mb();
+                if !cluster.any_host_fits(need) {
+                    Self::relieve_pressure(&mut engines, &mut cluster, need, t);
+                }
+            }
+            let engine = &mut engines[f as usize];
+            engine.maybe_start_stats(t);
+            engine.set_now(t);
+            engine.sample_tick(Some(cluster.headroom()));
+            engine.handle_event(&mut queue, &mut FleetCapacity::Cluster(&mut cluster), ev);
+            // A placement failure inside the event (e.g. the second
+            // request of a batch) raises pressure; relieve it so the
+            // *next* placement finds room.
+            if let Some(need) = cluster.take_pressure() {
+                if cl.eviction {
+                    Self::relieve_pressure(&mut engines, &mut cluster, need, t);
+                }
+            }
+        }
+        let mut runs = Vec::with_capacity(engines.len());
+        let mut recorders = Vec::with_capacity(engines.len());
+        for engine in engines.iter_mut() {
+            runs.push(engine.finish(horizon));
+            // Flush samples due in the final (last event, horizon] window
+            // — `finish` advanced the engine clock to the horizon.
+            engine.sample_tick(Some(cluster.headroom()));
+            recorders.push(engine.take_recorder());
+        }
+        let rejections = cluster.gate_rejections();
+        let usage = cluster.usage(self.horizon);
+        (runs, recorders, rejections, usage)
+    }
+
+    /// Evict every idle container from a newly cordoned host. Busy
+    /// containers keep running and drain naturally — the same
+    /// shrink-don't-kill semantics as capacity degradation.
+    fn drain_host(
+        engines: &mut [FunctionEngine],
+        cluster: &mut ClusterState,
+        host: usize,
+        t: SimTime,
+    ) {
+        loop {
+            let mut progressed = false;
+            for func in cluster.functions_on(host) {
+                let engine = &mut engines[func as usize];
+                if engine.idle_count() == 0 {
+                    continue;
+                }
+                engine.maybe_start_stats(t);
+                engine.set_now(t);
+                cluster.pin_release(host);
+                let evicted = engine.evict_idle(&mut FleetCapacity::Cluster(&mut *cluster), 1);
+                cluster.clear_pin();
+                if evicted > 0 {
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+    }
+
+    /// Memory-pressure relief: evict idle containers (oldest first, in
+    /// ascending function order) from the host closest to fitting the
+    /// failed `need` footprint until it fits or no evictable container
+    /// remains there. Containers are fungible per function, so the
+    /// placement stack decides *whose* resources come off the host while
+    /// each engine decides *which* physical instance dies.
+    fn relieve_pressure(
+        engines: &mut [FunctionEngine],
+        cluster: &mut ClusterState,
+        need: f64,
+        t: SimTime,
+    ) {
+        let Some(target) = cluster.pressure_target() else {
+            return;
+        };
+        while !cluster.host_fits(target, need) {
+            let mut progressed = false;
+            for func in cluster.functions_on(target) {
+                let engine = &mut engines[func as usize];
+                if engine.idle_count() == 0 {
+                    continue;
+                }
+                engine.maybe_start_stats(t);
+                engine.set_now(t);
+                cluster.pin_release(target);
+                let evicted = engine.evict_idle(&mut FleetCapacity::Cluster(&mut *cluster), 1);
+                cluster.clear_pin();
+                if evicted > 0 {
+                    progressed = true;
+                    break;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
     }
 }
 
@@ -303,7 +478,8 @@ pub struct FleetAggregate {
     pub cold_requests: u64,
     pub warm_requests: u64,
     pub rejected_requests: u64,
-    /// Rejections attributable to the fleet-wide cap alone (0 when uncapped).
+    /// Rejections attributable to fleet-wide capacity alone (the fleet
+    /// cap, or failed cluster placement; 0 when uncapped).
     pub cap_rejections: u64,
     pub cold_start_prob: f64,
     pub rejection_prob: f64,
@@ -340,10 +516,24 @@ pub struct FleetAggregate {
     pub wasted_work_seconds: f64,
     /// Fleet-wide successful responses per second of measured time.
     pub goodput: f64,
+    /// Cluster placement attempts (cold starts and prewarms) no host
+    /// could fit (0 without a cluster).
+    pub placement_failures: u64,
+    /// Idle containers force-evicted by cluster memory pressure or host
+    /// drains (0 without a cluster).
+    pub evictions: u64,
+    /// Per-host time-averaged memory utilization over the run (empty
+    /// without a cluster).
+    pub host_utilization: Vec<f64>,
 }
 
 impl FleetAggregate {
-    fn from_runs(runs: &[SimResults], cap_rejections: u64) -> FleetAggregate {
+    fn from_runs(
+        runs: &[SimResults],
+        cap_rejections: u64,
+        cluster: Option<ClusterUsage>,
+    ) -> FleetAggregate {
+        let cluster = cluster.unwrap_or_default();
         let measured_time = runs.first().map(|r| r.measured_time).unwrap_or(0.0);
         let mut total = 0u64;
         let mut cold = 0u64;
@@ -444,6 +634,9 @@ impl FleetAggregate {
             } else {
                 0.0
             },
+            placement_failures: cluster.placement_failures,
+            evictions: cluster.evictions,
+            host_utilization: cluster.host_utilization,
         }
     }
 
@@ -460,7 +653,7 @@ impl FleetAggregate {
 
     /// Two-column fleet report in the Table-1 style.
     pub fn to_table(&self) -> String {
-        let rows = [
+        let mut rows: Vec<(&str, String)> = vec![
             ("Functions", format!("{}", self.functions)),
             ("*Cold Start Probability", format!("{:.4} %", self.cold_start_prob * 100.0)),
             ("*Rejection Probability", format!("{:.4} %", self.rejection_prob * 100.0)),
@@ -492,6 +685,14 @@ impl FleetAggregate {
             )),
             ("Wasted Work", format!("{:.4} s", self.wasted_work_seconds)),
         ];
+        if !self.host_utilization.is_empty() {
+            let hosts = self.host_utilization.len();
+            let avg_util = self.host_utilization.iter().sum::<f64>() / hosts as f64;
+            rows.push(("Cluster hosts", format!("{hosts}")));
+            rows.push(("Cluster avg memory utilization", format!("{:.4} %", avg_util * 100.0)));
+            rows.push(("Cluster placement failures", format!("{}", self.placement_failures)));
+            rows.push(("Cluster evictions", format!("{}", self.evictions)));
+        }
         let w = rows.iter().map(|(k, _)| k.len()).max().unwrap_or(0);
         let mut s = String::new();
         for (k, v) in rows {
@@ -693,6 +894,7 @@ mod tests {
                 functions: vec![periodic()],
                 policy,
                 fleet_max_concurrency: None,
+                cluster: None,
                 horizon: 50_000.0,
                 skip_initial: 0.0,
                 threads: 1,
@@ -729,6 +931,122 @@ mod tests {
             long.aggregate.avg_server_count,
             adaptive.aggregate.avg_server_count
         );
+    }
+
+    fn trace_fn(name: &str, times: Vec<f64>, seed: u64) -> FunctionSpec {
+        FunctionSpec {
+            name: name.into(),
+            arrival: ArrivalMode::Trace(Arc::new(times)),
+            batch_size: None,
+            warm_service: Process::constant(5.0),
+            cold_service: Process::constant(5.0),
+            max_concurrency: 10,
+            memory_mb: 128.0,
+            seed,
+        }
+    }
+
+    fn trace_fleet(functions: Vec<FunctionSpec>, horizon: f64) -> FleetConfig {
+        FleetConfig {
+            functions,
+            policy: PolicySpec::fixed(600.0),
+            fleet_max_concurrency: None,
+            cluster: None,
+            horizon,
+            skip_initial: 0.0,
+            threads: 1,
+            prewarm_lead: 0.0,
+            fault: FaultProfile::disabled(),
+            retry: RetryPolicy::none(),
+            telemetry: None,
+        }
+    }
+
+    #[test]
+    fn cluster_capacity_emerges_from_host_memory() {
+        use crate::cluster::ClusterConfig;
+        // Two overlapping requests need two 128 MB containers; a single
+        // 128 MB host can place only one, so the second arrival is
+        // rejected by placement (the container serving the first is
+        // busy, so there is nothing idle to evict). By t=30 the first
+        // container is idle again and serves the third arrival warm.
+        let base = trace_fleet(vec![trace_fn("t", vec![10.0, 10.5, 30.0], 3)], 100.0);
+        let uncapped = base.clone().run();
+        assert_eq!(uncapped.aggregate.rejected_requests, 0);
+        assert!(uncapped.aggregate.host_utilization.is_empty());
+
+        let clustered = base.with_cluster(ClusterConfig::new(1, 128.0, 32.0)).run();
+        let a = &clustered.aggregate;
+        assert_eq!(a.total_requests, 3);
+        assert_eq!(a.cold_requests, 1);
+        assert_eq!(a.warm_requests, 1);
+        assert_eq!(a.rejected_requests, 1);
+        assert_eq!(a.cap_rejections, 1, "the rejection is the cluster's");
+        assert!(a.placement_failures >= 1);
+        assert_eq!(a.evictions, 0, "a busy container is never evicted");
+        assert_eq!(a.host_utilization.len(), 1);
+        assert!(a.host_utilization[0] > 0.0);
+        let table = a.to_table();
+        assert!(table.contains("Cluster placement failures"));
+    }
+
+    #[test]
+    fn pressure_eviction_reclaims_idle_containers() {
+        use crate::cluster::ClusterConfig;
+        // Function a's container idles after t=15; b's arrival at t=20
+        // finds the single host full. With eviction on, the idle
+        // container is reclaimed and b cold-starts; with eviction off,
+        // b is rejected.
+        let functions =
+            || vec![trace_fn("a", vec![10.0], 1), trace_fn("b", vec![20.0], 2)];
+        let evicting = trace_fleet(functions(), 100.0)
+            .with_cluster(ClusterConfig::new(1, 128.0, 32.0))
+            .run();
+        assert_eq!(evicting.aggregate.rejected_requests, 0);
+        assert_eq!(evicting.aggregate.evictions, 1);
+        assert_eq!(evicting.aggregate.cold_requests, 2);
+
+        let frozen = trace_fleet(functions(), 100.0)
+            .with_cluster(ClusterConfig::new(1, 128.0, 32.0).with_eviction(false))
+            .run();
+        assert_eq!(frozen.aggregate.rejected_requests, 1);
+        assert_eq!(frozen.aggregate.evictions, 0);
+    }
+
+    #[test]
+    fn host_drain_evicts_idle_and_blocks_placement() {
+        use crate::cluster::ClusterConfig;
+        // A drain window [20, 40) on the only host: the idle container
+        // left by the t=10 request is evicted when the window opens, the
+        // t=25 arrival has nowhere to go, and the t=50 arrival placed
+        // normally after the window closes.
+        let cluster = ClusterConfig::new(1, 1024.0, 32.0).with_drain(0, 20.0, 40.0);
+        let res = trace_fleet(vec![trace_fn("t", vec![10.0, 25.0, 50.0], 3)], 100.0)
+            .with_cluster(cluster)
+            .run();
+        let a = &res.aggregate;
+        assert_eq!(a.evictions, 1, "idle container evicted at window open");
+        assert_eq!(a.rejected_requests, 1, "t=25 lands in the window");
+        assert_eq!(a.cold_requests, 2, "t=10 and t=50 both cold-start");
+        assert_eq!(a.warm_requests, 0);
+    }
+
+    #[test]
+    fn unbounded_cluster_matches_uncapped_fleet() {
+        use crate::cluster::ClusterConfig;
+        // Placement that always succeeds must not perturb the engines:
+        // the clustered runner reproduces the sharded fleet bit-for-bit
+        // (the cluster draws no RNG and schedules no events).
+        let mut rng = Rng::new(22);
+        let trace = SyntheticTrace::generate(8, &mut rng);
+        let base = FleetConfig::from_trace(&trace, 3_000.0, 0.0, 5, PolicySpec::fixed(120.0));
+        let sharded = base.clone().run();
+        let clustered = base.with_cluster(ClusterConfig::unbounded(1)).run();
+        assert_eq!(fleet_digest(&sharded), fleet_digest(&clustered));
+        assert_eq!(clustered.aggregate.cap_rejections, 0);
+        assert_eq!(clustered.aggregate.placement_failures, 0);
+        assert_eq!(clustered.aggregate.evictions, 0);
+        assert_eq!(clustered.aggregate.host_utilization, vec![0.0]);
     }
 
     #[test]
@@ -784,6 +1102,7 @@ mod tests {
             functions: vec![spec],
             policy: PolicySpec::fixed(600.0),
             fleet_max_concurrency: None,
+            cluster: None,
             horizon: 100.0,
             skip_initial: 0.0,
             threads: 1,
@@ -822,6 +1141,7 @@ mod tests {
             functions: vec![periodic],
             policy: PolicySpec::hybrid_histogram(600.0, 10.0),
             fleet_max_concurrency: None,
+            cluster: None,
             horizon: 50_000.0,
             skip_initial: 0.0,
             threads: 1,

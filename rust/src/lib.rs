@@ -26,9 +26,15 @@
 //!   identification (expiration-threshold probing, service-time fitting).
 //! * [`cost`] — provider pricing tables and developer/provider cost
 //!   estimation.
+//! * [`cluster`] — the provider-side host & placement layer: finite
+//!   memory/CPU invoker hosts, a pluggable placement `Scheduler`
+//!   (first-fit, least-loaded, round-robin, packing-aware), memory-pressure
+//!   eviction and host-drain windows; replaces the flat fleet counter when
+//!   configured.
 //! * [`fleet`] — multi-function fleet simulation: N heterogeneous functions
 //!   under a pluggable keep-alive policy, with an optional fleet-wide
-//!   concurrency cap and a fleet cost rollup.
+//!   concurrency cap or a finite-resource [`cluster`], and a fleet cost
+//!   rollup.
 //! * [`whatif`] — parameter sweeps, configuration optimization and
 //!   keep-alive policy comparison.
 //! * [`scenario`] — **the documented programmatic surface**: a typed,
@@ -47,6 +53,7 @@
 
 pub mod analytical;
 pub mod cli;
+pub mod cluster;
 pub mod cost;
 pub mod emulator;
 pub mod figures;
@@ -60,6 +67,7 @@ pub mod trace;
 pub mod whatif;
 pub mod workload;
 
+pub use cluster::{ClusterConfig, SchedulerSpec};
 pub use fleet::{FleetConfig, FleetResults, KeepAlivePolicy, PolicySpec};
 pub use scenario::{
     run_scenario, ExperimentSpec, ProcessSpec, ScenarioReport, ScenarioSpec, SourceSpec,

@@ -15,6 +15,7 @@
 
 use anyhow::{bail, Context, Result};
 use simfaas::cli::Args;
+use simfaas::cluster::{ClusterConfig, SchedulerSpec};
 use simfaas::cost::Provider;
 use simfaas::emulator::{EmulatorConfig, Platform};
 use simfaas::figures;
@@ -83,7 +84,7 @@ const COMMANDS: &[Cmd] = &[
     Cmd {
         name: "fleet",
         summary: "multi-function fleet simulation (synthetic mix or real Azure trace)",
-        flags: "--functions N --horizon --skip --seed --threads\n--policy fixed|adaptive --threshold (fixed)\n--range --bin (adaptive) --fleet-cap (0 = none)\n--prewarm-lead S (adaptive head-arm prewarm; 0 = off)\n--trace-dir DIR (Azure Functions 2019 dataset CSVs)\n--trace-top-k K --trace-scale X (with --trace-dir)\n--provider --memory --top K --json\n[--compare-thresholds a,b,c  fixed grid vs adaptive sweep]\n--failure-rate P --coldstart-failure-rate P --timeout S [--timeout-kills]\n--retry none|fixed:D[,N]|exponential:BASE,CAP[,N]\n--record-trace out.jsonl (also writes .perfetto.json/.metrics.csv)\n--metrics-interval S (state samples every S sim-seconds)",
+        flags: "--functions N --horizon --skip --seed --threads\n--policy fixed|adaptive --threshold (fixed)\n--range --bin (adaptive) --fleet-cap (0 = none)\n--hosts N (0 = no cluster) --host-memory MB --host-cpus C\n--scheduler first-fit|least-loaded|round-robin|packing\n--prewarm-lead S (adaptive head-arm prewarm; 0 = off)\n--trace-dir DIR (Azure Functions 2019 dataset CSVs)\n--trace-top-k K --trace-scale X (with --trace-dir)\n--provider --memory --top K --json\n[--compare-thresholds a,b,c  fixed grid vs adaptive sweep]\n--failure-rate P --coldstart-failure-rate P --timeout S [--timeout-kills]\n--retry none|fixed:D[,N]|exponential:BASE,CAP[,N]\n--record-trace out.jsonl (also writes .perfetto.json/.metrics.csv)\n--metrics-interval S (state samples every S sim-seconds)",
         operands: 0,
         run: cmd_fleet,
     },
@@ -346,6 +347,30 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     };
     let cap = args.get_usize("fleet-cap", 0)?;
     fleet.fleet_cap = if cap > 0 { Some(cap) } else { None };
+    // Cluster axis: --hosts switches the capacity model from the flat
+    // --fleet-cap counter to finite-resource hosts with a scheduler.
+    let hosts = args.get_usize("hosts", 0)?;
+    let host_memory = args.get_f64("host-memory", 2_048.0)?;
+    let host_cpus = args.get_f64("host-cpus", 32.0)?;
+    let scheduler_str = args.get_str("scheduler", "first-fit");
+    if hosts == 0
+        && (args.get("host-memory").is_some()
+            || args.get("host-cpus").is_some()
+            || args.get("scheduler").is_some())
+    {
+        bail!("--host-memory/--host-cpus/--scheduler require --hosts");
+    }
+    if hosts > 0 {
+        let scheduler = SchedulerSpec::parse(scheduler_str).with_context(|| {
+            format!(
+                "--scheduler: unknown scheduler {scheduler_str:?} \
+                 (expected first-fit|least-loaded|round-robin|packing)"
+            )
+        })?;
+        fleet.cluster = Some(
+            ClusterConfig::new(hosts, host_memory, host_cpus).with_scheduler(scheduler),
+        );
+    }
     fleet.prewarm_lead = args.get_f64("prewarm-lead", 0.0)?;
     fleet.memory_mb = args.get_f64("memory", 128.0)?;
     fleet.top_k = args.get_usize("top", 5)?;

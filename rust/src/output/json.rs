@@ -592,6 +592,13 @@ pub fn fleet_to_json(
         .set("wasted_work_seconds", a.wasted_work_seconds)
         .set("success_rate", a.success_rate())
         .set("goodput", a.goodput);
+    // Cluster keys appear only for cluster-configured runs, keeping flat
+    // fleet output byte-identical to the pre-cluster schema.
+    if !a.host_utilization.is_empty() {
+        agg.set("placement_failures", a.placement_failures)
+            .set("evictions", a.evictions)
+            .set("host_utilization", a.host_utilization.clone());
+    }
 
     let functions: Vec<JsonValue> = results
         .names

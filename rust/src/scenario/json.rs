@@ -12,6 +12,7 @@ use super::spec::{
     OutputSpec, PlatformSpec, ProcessSpec, ReliabilitySpec, RunSpec, ScenarioSpec, SourceSpec,
     WorkloadSpec,
 };
+use crate::cluster::{ClusterConfig, SchedulerSpec};
 use crate::cost::Provider;
 use crate::fleet::PolicyKind;
 use crate::sim::fault::{DegradationWindow, FaultProfile, TimeoutAction};
@@ -609,9 +610,84 @@ fn experiment_to_json(e: &ExperimentSpec) -> JsonValue {
                     JsonValue::Array(f.compare_extra.iter().map(policy_to_json).collect()),
                 );
             }
+            if let Some(cl) = &f.cluster {
+                o.set("cluster", cluster_to_json(cl));
+            }
         }
     }
     o
+}
+
+fn cluster_to_json(cl: &ClusterConfig) -> JsonValue {
+    let mut o = JsonValue::object();
+    o.set("hosts", cl.hosts)
+        .set("host_memory_mb", cl.host_memory_mb)
+        .set("host_cpus", cl.host_cpus)
+        .set("scheduler", cl.scheduler.as_str());
+    if !cl.eviction {
+        o.set("eviction", false);
+    }
+    if !cl.drains.is_empty() {
+        o.set(
+            "drains",
+            JsonValue::Array(
+                cl.drains
+                    .iter()
+                    .map(|d| {
+                        let mut w = JsonValue::object();
+                        w.set("host", d.host).set("start", d.start).set("end", d.end);
+                        w
+                    })
+                    .collect(),
+            ),
+        );
+    }
+    o
+}
+
+fn cluster_from_json(v: &JsonValue) -> Result<ClusterConfig> {
+    let what = "experiment.cluster";
+    let o = as_obj(v, what)?;
+    check_keys(
+        o,
+        &["hosts", "host_memory_mb", "host_cpus", "scheduler", "eviction", "drains"],
+        what,
+    )?;
+    let mut cl = ClusterConfig::new(
+        usize_field(o, "hosts", what, 1)?,
+        f64_field(o, "host_memory_mb", what, 2048.0)?,
+        f64_field(o, "host_cpus", what, 32.0)?,
+    );
+    if let Some(sv) = o.get("scheduler") {
+        let s = sv
+            .as_str()
+            .context("experiment.cluster.scheduler must be a string")?;
+        cl.scheduler = SchedulerSpec::parse(s).with_context(|| {
+            format!(
+                "experiment.cluster.scheduler: unknown scheduler {s:?} \
+                 (expected first-fit|least-loaded|round-robin|packing)"
+            )
+        })?;
+    }
+    cl.eviction = bool_field(o, "eviction", what, true)?;
+    if let Some(dv) = o.get("drains") {
+        for (i, d) in dv
+            .as_array()
+            .context("experiment.cluster.drains must be an array")?
+            .iter()
+            .enumerate()
+        {
+            let dwhat = format!("experiment.cluster.drains[{i}]");
+            let dobj = as_obj(d, &dwhat)?;
+            check_keys(dobj, &["host", "start", "end"], &dwhat)?;
+            cl = cl.with_drain(
+                usize_field(dobj, "host", &dwhat, 0)?,
+                req_f64(dobj, "start", &dwhat)?,
+                req_f64(dobj, "end", &dwhat)?,
+            );
+        }
+    }
+    Ok(cl)
 }
 
 fn experiment_from_json(v: &JsonValue) -> Result<ExperimentSpec> {
@@ -673,6 +749,7 @@ fn experiment_from_json(v: &JsonValue) -> Result<ExperimentSpec> {
                     "top_k",
                     "compare_thresholds",
                     "compare_extra",
+                    "cluster",
                 ],
                 what,
             )?;
@@ -696,6 +773,9 @@ fn experiment_from_json(v: &JsonValue) -> Result<ExperimentSpec> {
                     .iter()
                     .map(|p| policy_from_json(p, "experiment.compare_extra[..]"))
                     .collect::<Result<Vec<_>>>()?;
+            }
+            if let Some(cv) = o.get("cluster") {
+                f.cluster = Some(cluster_from_json(cv)?);
             }
             ExperimentSpec::Fleet(f)
         }
@@ -1029,6 +1109,16 @@ mod tests {
             )),
         );
         roundtrip(
+            &ScenarioSpec::new("cluster").with_experiment(ExperimentSpec::Fleet(
+                FleetScenario::new(8).with_cluster(
+                    ClusterConfig::new(4, 2_048.0, 16.0)
+                        .with_scheduler(SchedulerSpec::LeastLoaded)
+                        .with_eviction(false)
+                        .with_drain(1, 100.0, 250.0),
+                ),
+            )),
+        );
+        roundtrip(
             &ScenarioSpec::new("temporal").with_experiment(ExperimentSpec::Temporal {
                 replications: 4,
                 sample_interval: Some(50.0),
@@ -1242,6 +1332,14 @@ mod tests {
                 r#"{"name":"x","experiment":{"type":"fleet","policy":{"type":"fixed","range":9}}}"#,
                 "range",
             ),
+            (
+                r#"{"name":"x","experiment":{"type":"fleet","cluster":{"hots":4}}}"#,
+                "hots",
+            ),
+            (
+                r#"{"name":"x","experiment":{"type":"fleet","cluster":{"drains":[{"host":0,"begin":5}]}}}"#,
+                "begin",
+            ),
         ] {
             let err = format!("{:#}", ScenarioSpec::from_json_str(text).unwrap_err());
             assert!(err.contains("unknown key"), "{text} -> {err}");
@@ -1276,6 +1374,14 @@ mod tests {
             .unwrap_err()
         );
         assert!(err.contains("aws|gcf|google|azure|ibm"), "{err}");
+        let err = format!(
+            "{:#}",
+            ScenarioSpec::from_json_str(
+                r#"{"name":"x","experiment":{"type":"fleet","cluster":{"scheduler":"best-fit"}}}"#
+            )
+            .unwrap_err()
+        );
+        assert!(err.contains("first-fit|least-loaded|round-robin|packing"), "{err}");
         let err = format!(
             "{:#}",
             ScenarioSpec::from_json_str(

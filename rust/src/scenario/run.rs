@@ -206,6 +206,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport> {
             );
             cfg.threads = f.threads;
             cfg.fleet_max_concurrency = f.fleet_cap;
+            cfg.cluster = f.cluster.clone();
             cfg.prewarm_lead = f.prewarm_lead;
             if let Some(r) = &spec.reliability {
                 cfg.fault = r.fault.clone();
@@ -448,6 +449,17 @@ impl ScenarioReport {
                     results.per_function.len()
                 ));
                 s.push_str(&format!("workload: {}\n", provenance.describe()));
+                if let ExperimentSpec::Fleet(f) = &spec.experiment {
+                    if let Some(cl) = &f.cluster {
+                        s.push_str(&format!(
+                            "cluster: {} hosts x {} MB / {} cpus, scheduler {}\n",
+                            cl.hosts,
+                            cl.host_memory_mb,
+                            cl.host_cpus,
+                            cl.scheduler.as_str()
+                        ));
+                    }
+                }
                 s.push_str(&results.aggregate.to_table());
                 s.push_str(&format!(
                     "developer cost ${:.4} (requests ${:.4} + runtime ${:.4}) | provider infra ${:.4}\n",

@@ -13,6 +13,7 @@
 //! CLI's historical flag defaults), so `ScenarioSpec::new("x")` is exactly
 //! the `simfaas steady` experiment.
 
+use crate::cluster::ClusterConfig;
 use crate::cost::Provider;
 use crate::fleet::PolicySpec;
 use crate::figures::{COLD_MEAN, WARM_MEAN};
@@ -310,6 +311,10 @@ pub struct FleetScenario {
     /// arrivals; fixed/stochastic policies predict nothing and run
     /// unchanged.
     pub prewarm_lead: f64,
+    /// Finite-resource cluster replacing the flat capacity counter:
+    /// hosts × memory × cpus × scheduler, with optional drain windows.
+    /// Mutually exclusive with `fleet_cap`.
+    pub cluster: Option<ClusterConfig>,
 }
 
 impl FleetScenario {
@@ -324,6 +329,7 @@ impl FleetScenario {
             compare_thresholds: Vec::new(),
             compare_extra: Vec::new(),
             prewarm_lead: 0.0,
+            cluster: None,
         }
     }
 
@@ -355,6 +361,12 @@ impl FleetScenario {
     /// Enable prewarm (provisioning-lead) events; 0 disables.
     pub fn with_prewarm_lead(mut self, lead: f64) -> Self {
         self.prewarm_lead = lead;
+        self
+    }
+
+    /// Replace the flat capacity counter with a finite-resource cluster.
+    pub fn with_cluster(mut self, cluster: ClusterConfig) -> Self {
+        self.cluster = Some(cluster);
         self
     }
 }
@@ -830,6 +842,19 @@ impl ScenarioSpec {
                          (0 disables prewarming), got {}",
                         f.prewarm_lead
                     );
+                }
+                if let Some(cl) = &f.cluster {
+                    if f.fleet_cap.is_some() {
+                        bail!(
+                            "fleet.cluster and fleet.fleet_cap are mutually exclusive \
+                             capacity models — a cluster's capacity is emergent from \
+                             host bin-packing, a fleet_cap is a flat counter; remove \
+                             one of the two fields"
+                        );
+                    }
+                    if let Err(e) = cl.validate() {
+                        bail!("fleet.cluster: {e}");
+                    }
                 }
             }
         }

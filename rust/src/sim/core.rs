@@ -305,6 +305,23 @@ impl Router {
         }
     }
 
+    /// Pop the oldest fully idle instance (lowest id) for forced
+    /// eviction. Only supported for scale-per-request routing, where the
+    /// idle pool holds exactly the fully idle instances; a `Concurrent`
+    /// pool can contain busy instances, so eviction declines there.
+    fn pop_oldest_idle(&mut self) -> Option<InstanceId> {
+        match self {
+            Router::PerRequest { idle } => {
+                if idle.is_empty() {
+                    None
+                } else {
+                    Some(idle.remove(0))
+                }
+            }
+            Router::Concurrent { .. } => None,
+        }
+    }
+
     /// Drop an expired instance from the routing structure.
     fn remove(&mut self, id: InstanceId) {
         match self {
@@ -1171,6 +1188,43 @@ impl EngineCore {
         }
         self.sync_levels();
         self.maybe_request_prewarm(sched, hooks);
+    }
+
+    /// Force-evict up to `n` idle instances, oldest first, returning how
+    /// many were evicted. Used by the cluster layer for memory-pressure
+    /// and host-drain eviction; busy instances are never touched (they
+    /// drain naturally, mirroring degradation semantics). Each victim is
+    /// terminated exactly as an idle expiration would terminate it —
+    /// its pending [`Event::Expiration`] becomes stale and is dropped by
+    /// the generation/state guard — except that no replacement prewarm
+    /// is requested (eviction means resources are scarce). Only
+    /// scale-per-request engines evict; concurrent-routing pools decline
+    /// and return 0.
+    pub fn evict_idle<H: LifecycleHooks>(&mut self, hooks: &mut H, n: usize) -> usize {
+        let mut evicted = 0;
+        while evicted < n {
+            let Some(id) = self.router.pop_oldest_idle() else {
+                break;
+            };
+            let inst = &mut self.instances[id.0 as usize];
+            inst.terminate(self.now);
+            let lifespan = inst.lifespan(self.now);
+            let wasted_prewarm = inst.prewarmed && inst.requests_served == 0;
+            self.live_count -= 1;
+            hooks.on_expire();
+            if self.stats_started {
+                self.instances_expired += 1;
+                self.lifespan_stats.push(lifespan);
+                if wasted_prewarm {
+                    self.wasted_prewarm_seconds += lifespan;
+                }
+            }
+            evicted += 1;
+        }
+        if evicted > 0 {
+            self.sync_levels();
+        }
+        evicted
     }
 
     /// If prewarming is enabled and the warm pool just drained, ask the

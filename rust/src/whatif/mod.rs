@@ -7,6 +7,7 @@ pub mod sweep;
 
 pub use sweep::{sweep, sweep_grid, GridPoint, SweepOutcome};
 
+use crate::cluster::SchedulerSpec;
 use crate::cost::PricingTable;
 use crate::fleet::{fleet_cost, FleetConfig, FleetCostReport, FleetResults, PolicySpec};
 use crate::sim::ensemble::{derive_seeds, run_indexed, EnsembleOpts, EnsembleResults};
@@ -167,6 +168,36 @@ pub fn retry_policy_comparison(
         .collect()
 }
 
+/// Provider-side placement what-if: the same tenant mix on the same
+/// cluster hardware, swept across invoker-selection schedulers. Requires
+/// `base.cluster` to be set — the sweep varies only the scheduler, so
+/// every difference in cold starts, rejections, evictions, and per-host
+/// utilization is attributable to the placement strategy alone. This is
+/// the question the host layer exists to answer: what does changing the
+/// placement algorithm do on fixed hardware?
+pub fn scheduler_comparison(
+    base: &FleetConfig,
+    schedulers: &[SchedulerSpec],
+    pricing: &PricingTable,
+) -> Vec<PolicyOutcome> {
+    let cluster = base
+        .cluster
+        .clone()
+        .expect("scheduler_comparison requires a cluster-configured fleet");
+    assert!(!schedulers.is_empty(), "no schedulers to compare");
+    schedulers
+        .iter()
+        .map(|&scheduler| {
+            let mut cl = cluster.clone();
+            cl.scheduler = scheduler;
+            let cfg = base.clone().with_cluster(cl);
+            let results = cfg.run();
+            let cost = fleet_cost(&cfg, &results, pricing);
+            PolicyOutcome { label: scheduler.as_str().to_string(), results, cost }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -242,6 +273,54 @@ mod tests {
         assert!(long.cold_start_prob < short.cold_start_prob);
         assert!(long.avg_server_count > short.avg_server_count);
         // Cost report rides along for every policy.
+        assert!(out.iter().all(|o| o.cost.total.requests > 0.0));
+    }
+
+    #[test]
+    fn scheduler_comparison_diverges_on_azure_sample() {
+        use crate::cluster::ClusterConfig;
+        use crate::workload::{AzureDataset, TraceSource};
+        use std::path::PathBuf;
+        let dir =
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/traces/azure_sample");
+        let ds = AzureDataset::load(&dir).expect("bundled sample trace parses");
+        let src = TraceSource::AzureDataset(ds);
+        // A deliberately tight cluster: 2 hosts x 640 MB x 4 cores for a
+        // 20-function mix with 128-512 MB footprints, so the placement
+        // strategy is the binding constraint.
+        let base = FleetConfig::from_source(&src, 7_200.0, 0.0, 0xC1A5, PolicySpec::fixed(600.0))
+            .with_cluster(ClusterConfig::new(2, 640.0, 4.0));
+        let out = scheduler_comparison(&base, &SchedulerSpec::all(), &PricingTable::aws_lambda());
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].label, "first-fit");
+        // Same trace everywhere: total arrivals are scheduler-invariant.
+        let totals: Vec<u64> =
+            out.iter().map(|o| o.results.aggregate.total_requests).collect();
+        assert!(totals.iter().all(|&t| t == totals[0] && t > 0), "{totals:?}");
+        // Every run reports the cluster's shape, and the tight hardware
+        // pushes back somewhere under every scheduler.
+        for o in &out {
+            let a = &o.results.aggregate;
+            assert_eq!(a.host_utilization.len(), 2, "{}", o.label);
+            assert!(
+                a.placement_failures > 0 || a.evictions > 0 || a.rejected_requests > 0,
+                "{}: the tight cluster should bind",
+                o.label
+            );
+        }
+        // The acceptance criterion: cold-start / rejection / utilization
+        // outcomes actually diverge across >= 3 schedulers.
+        let digests: std::collections::BTreeSet<Vec<u64>> = out
+            .iter()
+            .map(|o| {
+                let a = &o.results.aggregate;
+                let mut d = vec![a.cold_requests, a.rejected_requests, a.evictions];
+                d.extend(a.host_utilization.iter().map(|u| u.to_bits()));
+                d
+            })
+            .collect();
+        assert!(digests.len() >= 3, "schedulers too similar: {} distinct", digests.len());
+        // Cost reports ride along.
         assert!(out.iter().all(|o| o.cost.total.requests > 0.0));
     }
 

@@ -313,6 +313,7 @@ fn single_prewarm_in_flight_covers_the_whole_lead_window() {
         functions: vec![spec],
         policy: PolicySpec::custom("predict-forty", || Box::new(PredictForty)),
         fleet_max_concurrency: None,
+        cluster: None,
         horizon: 50.0,
         skip_initial: 0.0,
         threads: 1,
@@ -361,6 +362,49 @@ fn prewarm_fleet_bit_identical_across_thread_counts() {
     // never binds, prewarm instances included.
     let coupled = base.clone().with_fleet_cap(1_000_000).run();
     assert_eq!(fleet_digest(&coupled), fleet_digest(&reference));
+}
+
+/// Cluster-layer bit-identity contract: a single host with unbounded
+/// memory and cpus admits everything, evicts nothing, and perturbs no
+/// engine (no RNG draws, no extra events) — so the clustered runner must
+/// reproduce the uncapped sharded fleet bit-for-bit, per function and in
+/// aggregate, and the cluster counters must all stay zero.
+#[test]
+fn unbounded_single_host_cluster_matches_uncapped_fleet() {
+    use simfaas::ClusterConfig;
+    for seed in [9u64, 0xC1A5] {
+        let mut rng = Rng::new(seed);
+        let trace = SyntheticTrace::generate(8, &mut rng);
+        let base = FleetConfig::from_trace(&trace, 3_000.0, 0.0, seed, PolicySpec::fixed(120.0));
+        let reference = base.clone().run();
+        let clustered = base.clone().with_cluster(ClusterConfig::unbounded(1)).run();
+        assert_eq!(fleet_digest(&clustered), fleet_digest(&reference), "seed {seed}");
+        let a = &clustered.aggregate;
+        assert_eq!((a.cap_rejections, a.placement_failures, a.evictions), (0, 0, 0));
+        assert_eq!(a.host_utilization, vec![0.0]);
+    }
+}
+
+/// The clustered runner is a single-queue engine: `threads` is ignored, so
+/// a finite cluster — placements, failures, and evictions actually firing —
+/// produces bit-identical output for any thread count.
+#[test]
+fn clustered_fleet_bit_identical_across_thread_counts() {
+    use simfaas::{ClusterConfig, SchedulerSpec};
+    let mut rng = Rng::new(55);
+    let trace = SyntheticTrace::generate(10, &mut rng);
+    let base = FleetConfig::from_trace(&trace, 4_000.0, 0.0, 0xC1A5, PolicySpec::fixed(300.0))
+        .with_cluster(
+            ClusterConfig::new(2, 512.0, 4.0).with_scheduler(SchedulerSpec::LeastLoaded),
+        );
+    let reference = base.clone().with_threads(1).run();
+    // The hosts actually bind — this is not a vacuous pin.
+    let a = &reference.aggregate;
+    assert!(a.placement_failures > 0 || a.evictions > 0 || a.rejected_requests > 0);
+    for threads in [2, 8] {
+        let res = base.clone().with_threads(threads).run();
+        assert_eq!(fleet_digest(&res), fleet_digest(&reference), "threads={threads}");
+    }
 }
 
 /// Reliability-layer bit-identity contract: a disabled [`FaultProfile`] —

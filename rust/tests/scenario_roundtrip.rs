@@ -202,3 +202,40 @@ fn malformed_scenarios_fail_with_named_errors() {
     let err = run_scenario(&spec).unwrap_err().to_string();
     assert!(err.contains("temporal.replications"), "{err}");
 }
+
+/// The cluster axis round-trips through JSON, executes identically after
+/// the round trip, and its validation rejections name the fields.
+#[test]
+fn cluster_axis_roundtrips_and_validates() {
+    use simfaas::{ClusterConfig, SchedulerSpec};
+
+    let spec = ScenarioSpec::new("cluster-rt")
+        .with_horizon(1_200.0)
+        .with_skip_initial(0.0)
+        .with_seed(23)
+        .with_experiment(ExperimentSpec::Fleet(FleetScenario::new(6).with_cluster(
+            ClusterConfig::new(2, 512.0, 4.0).with_scheduler(SchedulerSpec::PackingAware),
+        )));
+    let reparsed = ScenarioSpec::from_json_str(&spec.to_json_string()).unwrap();
+    assert_eq!(reparsed, spec);
+    let a = run_scenario_to_string(&spec).unwrap();
+    let b = run_scenario_to_string(&reparsed).unwrap();
+    assert_eq!(a, b);
+    assert!(a.contains("scheduler packing"), "{a}");
+
+    // cluster + fleet_cap is rejected with both fields named.
+    let both = ScenarioSpec::new("both").with_experiment(ExperimentSpec::Fleet(
+        FleetScenario::new(2)
+            .with_fleet_cap(8)
+            .with_cluster(ClusterConfig::new(1, 512.0, 4.0)),
+    ));
+    let err = both.validate().unwrap_err().to_string();
+    assert!(err.contains("fleet.cluster") && err.contains("fleet.fleet_cap"), "{err}");
+
+    // A zero-memory host is rejected before any simulation runs.
+    let zero = ScenarioSpec::new("zero").with_experiment(ExperimentSpec::Fleet(
+        FleetScenario::new(2).with_cluster(ClusterConfig::new(1, 0.0, 4.0)),
+    ));
+    let err = zero.validate().unwrap_err().to_string();
+    assert!(err.contains("fleet.cluster") && err.contains("zero-memory"), "{err}");
+}

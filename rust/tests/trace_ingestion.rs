@@ -87,6 +87,7 @@ fn streaming_fleet_is_bit_identical_to_eager_materialization() {
         functions,
         policy: PolicySpec::fixed(300.0),
         fleet_max_concurrency: None,
+        cluster: None,
         horizon,
         skip_initial: 0.0,
         threads: 0,
