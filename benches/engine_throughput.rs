@@ -1,7 +1,9 @@
 //! Bench: core engine performance (the §Perf hot path in DESIGN.md) —
 //! simulator event throughput (scale-per-request and concurrency-value
-//! simulators), multi-threaded ensemble throughput, the PJRT payload
-//! latency, and the PJRT histogram vs the pure-Rust histogram.
+//! simulators), multi-threaded ensemble throughput, the calendar event
+//! queue vs the binary-heap reference, the capacity-domain-sharded capped
+//! fleet at 10k functions, the PJRT payload latency, and the PJRT
+//! histogram vs the pure-Rust histogram.
 //!
 //! Emits a machine-readable `BENCH_engine.json` (path overridable via
 //! `SIMFAAS_BENCH_JSON`) so CI can archive the events/s trajectory.
@@ -14,14 +16,36 @@ use simfaas::output::JsonValue;
 use simfaas::runtime::{Engine, PayloadKind};
 use simfaas::sim::ensemble::{run_ensemble, EnsembleOpts};
 use simfaas::sim::{
-    FaultProfile, Histogram, ParServerlessSimulator, RetryPolicy, Rng, ServerlessSimulator,
-    SimConfig,
+    CalendarEventQueue, Event, EventQueue, FaultProfile, HeapEventQueue, Histogram, InstanceId,
+    ParServerlessSimulator, RetryPolicy, Rng, ServerlessSimulator, SimConfig, SimTime,
 };
 use simfaas::workload::{AzureDataset, SyntheticTrace, TraceSource};
 
 /// arrival + departure per served request, plus expirations (~#instances).
 fn event_count(r: &simfaas::sim::SimResults) -> u64 {
     r.total_requests * 2 + r.instances_expired
+}
+
+/// Replay a schedule/pop script against any `EventQueue`, logging the pop
+/// sequence as `(time bits, payload)` pairs for exact cross-impl comparison.
+/// Each op schedules one tagged departure, then pops 0..=2 events, so the
+/// queue stays near a steady-state size; the tail drain empties it.
+fn drive_queue<Q: EventQueue>(q: &mut Q, ops: &[(f64, u32)]) -> Vec<(u64, u64)> {
+    let mut log = Vec::with_capacity(ops.len());
+    for (k, &(at, pops)) in ops.iter().enumerate() {
+        q.schedule(SimTime::from_secs(at), Event::Departure(InstanceId(k as u64)));
+        for _ in 0..pops {
+            match q.pop() {
+                Some((t, Event::Departure(id))) => log.push((t.as_secs().to_bits(), id.0)),
+                Some(_) => unreachable!("only departures are scheduled"),
+                None => break,
+            }
+        }
+    }
+    while let Some((t, Event::Departure(id))) = q.pop() {
+        log.push((t.as_secs().to_bits(), id.0));
+    }
+    log
 }
 
 fn main() {
@@ -236,6 +260,80 @@ fn main() {
         cluster_res.aggregate.evictions
     );
     rates.set("cluster_events_per_sec", eps_cluster);
+
+    // --- event-queue microbench: calendar vs binary heap ---
+    // One randomized schedule/pop interleaving (mostly near-future inserts
+    // with an occasional far-future outlier, as simulations produce) drives
+    // both EventQueue impls. Their pop logs must be bit-identical — the
+    // calendar's bucket layout may not leak into ordering — and the timed
+    // loops then measure each impl on the same op stream.
+    let queue_n = if harness::quick() { 200_000 } else { 2_000_000 };
+    let mut qrng = Rng::new(0xCA7);
+    let mut qt = 0.0f64;
+    let mut qops: Vec<(f64, u32)> = Vec::with_capacity(queue_n);
+    for _ in 0..queue_n {
+        qt += qrng.exponential(4.0);
+        let at = if qrng.uniform() < 0.03 {
+            qt + qrng.uniform_range(1.0e3, 1.0e5)
+        } else {
+            qt + qrng.uniform_range(0.0, 2.0)
+        };
+        qops.push((at, qrng.below(3) as u32));
+    }
+    let cal_log = drive_queue(&mut CalendarEventQueue::with_capacity(1024), &qops);
+    let heap_log = drive_queue(&mut HeapEventQueue::with_capacity(1024), &qops);
+    assert!(cal_log == heap_log, "calendar and heap pop sequences diverged");
+    let (res_q, cal_pops) = harness::bench("queue/calendar_vs_heap", 3, || {
+        drive_queue(&mut CalendarEventQueue::with_capacity(1024), &qops).len() as u64
+    });
+    // One schedule + one pop per scripted op = 2 queue events each.
+    let eps_q = cal_pops as f64 * 2.0 / res_q.mean_s;
+    let (res_qh, _) = harness::bench("queue/heap_reference", 3, || {
+        drive_queue(&mut HeapEventQueue::with_capacity(1024), &qops).len() as u64
+    });
+    println!(
+        "  -> {:.2} M queue events/s (heap reference {:.2} M; identical pop order)",
+        eps_q / 1e6,
+        cal_pops as f64 * 2.0 / res_qh.mean_s / 1e6
+    );
+    rates.set("queue_events_per_sec", eps_q);
+
+    // --- capped fleet at 10k functions: capacity-domain sharding ---
+    // The extreme-scale stress case: a 10k-function synthetic mix under a
+    // binding fleet cap. K=1 is the exactly-pinned serial admission path;
+    // K=8 shards cap and functions into 8 independently deterministic
+    // domains, so the output must be invariant to the worker thread count
+    // (each domain is a sequential simulation wherever it runs). K=8 and
+    // K=1 legitimately differ: sharding partitions the cap itself.
+    let stress_n = if harness::quick() { 2_000 } else { 10_000 };
+    let stress_horizon = if harness::quick() { 1_500.0 } else { 6_000.0 };
+    let mut stress_rng = Rng::new(0xD0A1);
+    let stress = SyntheticTrace::generate(stress_n, &mut stress_rng);
+    let capped =
+        FleetConfig::from_trace(&stress, stress_horizon, 0.0, 0xD0A1, PolicySpec::fixed(300.0))
+            .with_fleet_cap(stress_n / 5);
+    let sharded = capped.clone().with_capacity_domains(8);
+    let ref_shard = fleet_digest(&sharded.clone().with_threads(1).run());
+    for threads in [2, 8] {
+        let d = fleet_digest(&sharded.clone().with_threads(threads).run());
+        assert_eq!(d, ref_shard, "sharded fleet output depends on thread count ({threads})");
+    }
+    let (res_serial, _) = harness::bench("fleet/capped_10k_fn_k1", 3, || {
+        capped.clone().with_threads(1).run()
+    });
+    let (res_shard, shard_res) =
+        harness::bench("fleet/capped_sharded_10k_fn", 3, || sharded.run());
+    assert_eq!(fleet_digest(&shard_res), ref_shard, "all-cores sharded run diverged");
+    let shard_events =
+        shard_res.aggregate.total_requests * 2 + shard_res.aggregate.instances_expired;
+    let eps_shard = shard_events as f64 / res_shard.mean_s;
+    println!(
+        "  -> {:.2} M events/s sharded x8 ({:.2}x vs K=1 serial; {} rejected under cap)",
+        eps_shard / 1e6,
+        res_serial.mean_s / res_shard.mean_s,
+        shard_res.aggregate.rejected_requests
+    );
+    rates.set("capped_fleet_events_per_sec", eps_shard);
 
     json.set("events_per_sec", rates);
     let path = std::env::var("SIMFAAS_BENCH_JSON")

@@ -30,6 +30,7 @@
 use super::policy::KeepAlivePolicy;
 use super::simulator::FunctionSpec;
 use crate::cluster::ClusterState;
+use crate::sim::calendar::CalendarQueue;
 use crate::sim::core::{CoreParams, EngineCore, LifecycleHooks, Scheduler};
 use crate::sim::event::Event;
 use crate::sim::fault::FaultProfile;
@@ -39,64 +40,31 @@ use crate::sim::results::SimResults;
 use crate::sim::rng::Rng;
 use crate::sim::time::SimTime;
 use crate::workload::stream::ArrivalSource;
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
 
-/// A scheduled fleet event: the core [`Event`] plus the index of the
-/// function it belongs to.
-#[derive(Debug, Clone)]
-struct Scheduled {
-    at: SimTime,
-    seq: u64,
-    func: u32,
-    event: Event,
-}
-
-impl PartialEq for Scheduled {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-impl Eq for Scheduled {}
-
-impl Ord for Scheduled {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Max-heap: reverse for earliest-first, then insertion order among
-        // equal times — the same deterministic tie-break as sim::event.
-        other.at.cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-impl PartialOrd for Scheduled {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-/// Future event list shared by every function in a fleet run. Private to
-/// the fleet module: external callers drive fleets through
+/// Future event list shared by every function in a fleet run, built on
+/// the same [`CalendarQueue`] as the single-function simulators with a
+/// `(func, event)` payload: pops are ordered by `(time, insertion seq)`,
+/// the same deterministic tie-break as `sim::event`. Private to the fleet
+/// module: external callers drive fleets through
 /// [`super::simulator::FleetConfig`].
 #[derive(Debug, Default)]
 pub(super) struct FleetQueue {
-    heap: BinaryHeap<Scheduled>,
-    seq: u64,
+    cal: CalendarQueue<(u32, Event)>,
 }
 
 impl FleetQueue {
     pub(super) fn with_capacity(cap: usize) -> Self {
-        FleetQueue { heap: BinaryHeap::with_capacity(cap), seq: 0 }
+        FleetQueue { cal: CalendarQueue::with_capacity(cap) }
     }
 
     #[inline]
     pub(super) fn schedule(&mut self, at: SimTime, func: u32, event: Event) {
-        debug_assert!(at.is_finite(), "cannot schedule at infinity");
-        let seq = self.seq;
-        self.seq += 1;
-        self.heap.push(Scheduled { at, seq, func, event });
+        self.cal.push(at, (func, event));
     }
 
     #[inline]
     pub(super) fn pop(&mut self) -> Option<(SimTime, u32, Event)> {
-        self.heap.pop().map(|s| (s.at, s.func, s.event))
+        self.cal.pop().map(|(at, _, (func, event))| (at, func, event))
     }
 }
 
@@ -268,6 +236,10 @@ impl FunctionEngine {
             concurrency_value: 1,
             prewarm_lead,
             instance_capacity: 64,
+            // Fleet runs never read per-instance history (results come
+            // from core accumulators), so recycle terminated slots and
+            // keep per-function memory bounded at 10k+ functions.
+            retain_instances: false,
             fault,
             retry,
         });

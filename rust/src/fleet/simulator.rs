@@ -22,6 +22,16 @@
 //!   eviction and host-drain windows on top. Deterministic by
 //!   construction for any configured thread count (one thread,
 //!   seq-tie-broken queue; `threads` is ignored).
+//! * **Capacity domains** ([`FleetConfig::capacity_domains`] > 1): the
+//!   capped/clustered paths shard into K independent domains — function
+//!   `i` goes to domain `i % K`, each domain holding a proportional
+//!   share of the fleet cap (or a contiguous block of cluster hosts)
+//!   and running the single-queue coupled loop over its own functions
+//!   on a scoped thread. Admission couples functions *within* a domain
+//!   only (an explicit accuracy/scale trade, documented in DESIGN.md
+//!   §Perf); each domain is itself single-threaded and seq-tie-broken,
+//!   so the output is **bit-identical for any thread count**. `K = 1`
+//!   is exactly the legacy coupled/clustered computation.
 //!
 //! With the cap absent the strategies produce identical per-function
 //! results (functions never interact), which `coupled_matches_sharded_*`
@@ -30,7 +40,7 @@
 
 use super::engine::{FleetCapacity, FleetGate, FleetQueue, FunctionEngine};
 use super::policy::PolicySpec;
-use crate::cluster::{ClusterConfig, ClusterState, ClusterUsage};
+use crate::cluster::{ClusterConfig, ClusterState, ClusterUsage, HostDrain};
 use crate::cost::{estimate, CostEstimate, FunctionConfig, PricingTable};
 use crate::sim::ensemble::run_indexed;
 use crate::sim::event::Event;
@@ -64,6 +74,15 @@ pub struct FleetConfig {
     /// `fleet_max_concurrency`; runs single-threaded like the coupled
     /// path (`threads` is ignored).
     pub cluster: Option<ClusterConfig>,
+    /// Capacity domains for the capped/clustered paths: `K > 1` shards
+    /// the fleet into K independent admission domains (function `i` →
+    /// domain `i % K`, each with `cap/K` of the fleet cap or a
+    /// contiguous `hosts/K` block of cluster hosts) that run on scoped
+    /// threads. Trades global-cap fidelity for parallelism at extreme
+    /// fleet sizes; `1` (the default) is the exact single-queue legacy
+    /// path. Ignored by the uncapped (sharded) strategy, which is
+    /// already embarrassingly parallel.
+    pub capacity_domains: usize,
     /// Simulation horizon in seconds.
     pub horizon: f64,
     /// Warm-up window excluded from statistics.
@@ -106,6 +125,7 @@ impl FleetConfig {
             policy,
             fleet_max_concurrency: None,
             cluster: None,
+            capacity_domains: 1,
             horizon: cfgs[0].horizon,
             skip_initial: cfgs[0].skip_initial,
             threads: 0,
@@ -138,6 +158,7 @@ impl FleetConfig {
             policy,
             fleet_max_concurrency: None,
             cluster: None,
+            capacity_domains: 1,
             horizon,
             skip_initial,
             threads: 0,
@@ -187,6 +208,14 @@ impl FleetConfig {
 
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
+        self
+    }
+
+    /// Shard the capped/clustered paths into `k` independent capacity
+    /// domains (see [`FleetConfig::capacity_domains`]). `1` restores the
+    /// exact single-queue legacy path.
+    pub fn with_capacity_domains(mut self, k: usize) -> Self {
+        self.capacity_domains = k;
         self
     }
 
@@ -266,12 +295,22 @@ impl FleetConfig {
         FleetResults { names, per_function, aggregate, telemetry }
     }
 
+    /// Domains actually used for a shared resource of `resources` units
+    /// (the fleet cap or the host count): the configured count clamped so
+    /// every domain owns at least one function and one unit of capacity.
+    fn effective_domains(&self, resources: usize) -> usize {
+        self.capacity_domains.max(1).min(self.functions.len()).min(resources.max(1))
+    }
+
     /// Independent functions, one engine per shard job.
     fn run_sharded(&self) -> (Vec<SimResults>, Vec<Option<TelemetryRecorder>>) {
         let horizon = SimTime::from_secs(self.horizon);
         let runs = run_indexed(self.functions.len(), self.threads, |i| {
             let mut engine = self.build_engine(i);
-            let mut queue = FleetQueue::with_capacity(1024);
+            let mut queue = FleetQueue::with_capacity(expected_fleet_events(
+                std::iter::once(&self.functions[i]),
+                self.horizon,
+            ));
             let mut gate = FleetGate::unbounded();
             engine.schedule_first_arrival(&mut queue);
             queue.schedule(horizon, 0, Event::Horizon);
@@ -290,12 +329,54 @@ impl FleetConfig {
         runs.into_iter().unzip()
     }
 
-    /// Cap-coupled functions interleaved on one queue (single-threaded).
+    /// Cap-coupled functions interleaved on one queue. With
+    /// `capacity_domains` > 1 the fleet splits into K domains, each
+    /// coupling its stride of functions through a proportional cap share
+    /// (`cap/K`, remainder to the lowest domains) on its own queue and
+    /// scoped thread; results come back in global function order and cap
+    /// rejections sum across domains.
     fn run_coupled(&self, cap: usize) -> (Vec<SimResults>, Vec<Option<TelemetryRecorder>>, u64) {
+        let k = self.effective_domains(cap);
+        if k <= 1 {
+            return self.run_coupled_domain(0, 1, cap);
+        }
+        let domains = run_indexed(k, self.threads, |d| {
+            let share = cap / k + usize::from(d < cap % k);
+            self.run_coupled_domain(d, k, share)
+        });
+        let n = self.functions.len();
+        let mut runs: Vec<Option<SimResults>> = (0..n).map(|_| None).collect();
+        let mut recorders: Vec<Option<TelemetryRecorder>> = (0..n).map(|_| None).collect();
+        let mut rejections = 0u64;
+        for (d, (druns, drecs, drej)) in domains.into_iter().enumerate() {
+            for (j, (r, rec)) in druns.into_iter().zip(drecs).enumerate() {
+                runs[d + j * k] = Some(r);
+                recorders[d + j * k] = rec;
+            }
+            rejections += drej;
+        }
+        let runs = runs.into_iter().map(|r| r.expect("stride covers every function")).collect();
+        (runs, recorders, rejections)
+    }
+
+    /// One capacity domain of the coupled path: the single-queue,
+    /// single-threaded loop over the global function stride
+    /// `{domain, domain + k, ...}` with its own admission gate. `k = 1`
+    /// is the entire fleet — the exact legacy coupled computation.
+    fn run_coupled_domain(
+        &self,
+        domain: usize,
+        k: usize,
+        cap: usize,
+    ) -> (Vec<SimResults>, Vec<Option<TelemetryRecorder>>, u64) {
         let horizon = SimTime::from_secs(self.horizon);
+        let indices: Vec<usize> = (domain..self.functions.len()).step_by(k).collect();
         let mut engines: Vec<FunctionEngine> =
-            (0..self.functions.len()).map(|i| self.build_engine(i)).collect();
-        let mut queue = FleetQueue::with_capacity(1024 * engines.len().min(64));
+            indices.iter().map(|&i| self.build_engine(i)).collect();
+        let mut queue = FleetQueue::with_capacity(expected_fleet_events(
+            indices.iter().map(|&i| &self.functions[i]),
+            self.horizon,
+        ));
         for engine in engines.iter_mut() {
             engine.schedule_first_arrival(&mut queue);
         }
@@ -305,7 +386,10 @@ impl FleetConfig {
             if matches!(ev, Event::Horizon) {
                 break;
             }
-            let engine = &mut engines[f as usize];
+            // Queue tags are *global* function indices; this domain owns
+            // the stride f ≡ domain (mod k), so the local slot is f / k.
+            debug_assert_eq!(f as usize % k, domain);
+            let engine = &mut engines[f as usize / k];
             engine.maybe_start_stats(t);
             engine.set_now(t);
             engine.sample_tick(Some((cap - gate.live) as u64));
@@ -325,29 +409,95 @@ impl FleetConfig {
 
     /// Cluster-coupled functions: the coupled path's single-queue
     /// interleaving, with admission decided by the cluster's placement
-    /// scheduler over finite hosts instead of a flat counter.
+    /// scheduler over finite hosts instead of a flat counter. With
+    /// `capacity_domains` > 1 the fleet splits into K domains, each
+    /// bin-packing its stride of functions onto a contiguous block of
+    /// `hosts/K` hosts (remainder to the lowest domains); per-domain
+    /// utilization reports concatenate back into global host order.
     fn run_clustered(
         &self,
         cl: &ClusterConfig,
     ) -> (Vec<SimResults>, Vec<Option<TelemetryRecorder>>, u64, ClusterUsage) {
+        let k = self.effective_domains(cl.hosts);
+        if k <= 1 {
+            return self.run_clustered_domain(0, 1, cl.clone());
+        }
+        let domains = run_indexed(k, self.threads, |d| {
+            // Contiguous host blocks: domain d owns global hosts
+            // [offset, offset + share). Drain windows inside the block
+            // remap to block-local indices; windows on other domains'
+            // hosts apply in their own domain.
+            let share = cl.hosts / k + usize::from(d < cl.hosts % k);
+            let offset: usize =
+                (0..d).map(|p| cl.hosts / k + usize::from(p < cl.hosts % k)).sum();
+            let mut sub = cl.clone();
+            sub.hosts = share;
+            sub.drains = cl
+                .drains
+                .iter()
+                .filter(|w| w.host >= offset && w.host < offset + share)
+                .map(|w| HostDrain { host: w.host - offset, start: w.start, end: w.end })
+                .collect();
+            self.run_clustered_domain(d, k, sub)
+        });
+        let n = self.functions.len();
+        let mut runs: Vec<Option<SimResults>> = (0..n).map(|_| None).collect();
+        let mut recorders: Vec<Option<TelemetryRecorder>> = (0..n).map(|_| None).collect();
+        let mut rejections = 0u64;
+        let mut usage = ClusterUsage::default();
+        for (d, (druns, drecs, drej, du)) in domains.into_iter().enumerate() {
+            for (j, (r, rec)) in druns.into_iter().zip(drecs).enumerate() {
+                runs[d + j * k] = Some(r);
+                recorders[d + j * k] = rec;
+            }
+            rejections += drej;
+            usage.placement_failures += du.placement_failures;
+            usage.evictions += du.evictions;
+            // Domain blocks are contiguous, so domain-order concatenation
+            // is global host order.
+            usage.host_utilization.extend(du.host_utilization);
+        }
+        let runs = runs.into_iter().map(|r| r.expect("stride covers every function")).collect();
+        (runs, recorders, rejections, usage)
+    }
+
+    /// One capacity domain of the clustered path: the single-queue loop
+    /// over the global function stride `{domain, domain + k, ...}`
+    /// against its own (already host-subsetted) cluster. `k = 1` is the
+    /// entire fleet on the full cluster — the exact legacy computation.
+    fn run_clustered_domain(
+        &self,
+        domain: usize,
+        k: usize,
+        cl: ClusterConfig,
+    ) -> (Vec<SimResults>, Vec<Option<TelemetryRecorder>>, u64, ClusterUsage) {
         let horizon = SimTime::from_secs(self.horizon);
+        let indices: Vec<usize> = (domain..self.functions.len()).step_by(k).collect();
         let mut engines: Vec<FunctionEngine> =
-            (0..self.functions.len()).map(|i| self.build_engine(i)).collect();
-        let mut queue = FleetQueue::with_capacity(1024 * engines.len().min(64));
+            indices.iter().map(|&i| self.build_engine(i)).collect();
+        let mut queue = FleetQueue::with_capacity(expected_fleet_events(
+            indices.iter().map(|&i| &self.functions[i]),
+            self.horizon,
+        ));
         for engine in engines.iter_mut() {
             engine.schedule_first_arrival(&mut queue);
         }
         queue.schedule(horizon, 0, Event::Horizon);
-        let mut cluster = ClusterState::new(cl, engines.len());
+        // Allocation stacks are indexed by *global* function id (the
+        // engines tag placements with their global index), so size the
+        // state for the whole fleet even when the domain owns a stride.
+        let mut cluster = ClusterState::new(&cl, self.functions.len());
         while let Some((t, f, ev)) = queue.pop() {
             if matches!(ev, Event::Horizon) {
                 break;
             }
+            debug_assert_eq!(f as usize % k, domain);
+            let local = f as usize / k;
             // Drain windows opening at or before this event cordon their
             // host and (with eviction on) reclaim its idle containers.
             for host in cluster.advance_to(t.as_secs()) {
                 if cl.eviction {
-                    Self::drain_host(&mut engines, &mut cluster, host, t);
+                    Self::drain_host(&mut engines, &mut cluster, k, host, t);
                 }
             }
             // Evict-on-demand: if this event may need a cold placement
@@ -356,14 +506,14 @@ impl FleetConfig {
             // evict idle containers to make room rather than reject.
             if cl.eviction
                 && matches!(ev, Event::Arrival | Event::RetryArrival { .. } | Event::Provision)
-                && engines[f as usize].idle_count() == 0
+                && engines[local].idle_count() == 0
             {
-                let need = engines[f as usize].memory_mb();
+                let need = engines[local].memory_mb();
                 if !cluster.any_host_fits(need) {
-                    Self::relieve_pressure(&mut engines, &mut cluster, need, t);
+                    Self::relieve_pressure(&mut engines, &mut cluster, k, need, t);
                 }
             }
-            let engine = &mut engines[f as usize];
+            let engine = &mut engines[local];
             engine.maybe_start_stats(t);
             engine.set_now(t);
             engine.sample_tick(Some(cluster.headroom()));
@@ -373,7 +523,7 @@ impl FleetConfig {
             // *next* placement finds room.
             if let Some(need) = cluster.take_pressure() {
                 if cl.eviction {
-                    Self::relieve_pressure(&mut engines, &mut cluster, need, t);
+                    Self::relieve_pressure(&mut engines, &mut cluster, k, need, t);
                 }
             }
         }
@@ -397,13 +547,14 @@ impl FleetConfig {
     fn drain_host(
         engines: &mut [FunctionEngine],
         cluster: &mut ClusterState,
+        k: usize,
         host: usize,
         t: SimTime,
     ) {
         loop {
             let mut progressed = false;
             for func in cluster.functions_on(host) {
-                let engine = &mut engines[func as usize];
+                let engine = &mut engines[func as usize / k];
                 if engine.idle_count() == 0 {
                     continue;
                 }
@@ -431,6 +582,7 @@ impl FleetConfig {
     fn relieve_pressure(
         engines: &mut [FunctionEngine],
         cluster: &mut ClusterState,
+        k: usize,
         need: f64,
         t: SimTime,
     ) {
@@ -440,7 +592,7 @@ impl FleetConfig {
         while !cluster.host_fits(target, need) {
             let mut progressed = false;
             for func in cluster.functions_on(target) {
-                let engine = &mut engines[func as usize];
+                let engine = &mut engines[func as usize / k];
                 if engine.idle_count() == 0 {
                     continue;
                 }
@@ -458,6 +610,52 @@ impl FleetConfig {
                 break;
             }
         }
+    }
+}
+
+/// Expected concurrently pending events for the given functions: one
+/// arrival chain per function plus, for each, its mean arrival rate ×
+/// the typical event residency (mean warm service + the canonical 600 s
+/// keep-alive window, which bounds how long Departure/Expiration events
+/// sit in the queue). Sizes the calendar queue's bucket array so steady
+/// state starts near one event per bucket instead of resizing up from
+/// the floor — the fleet analogue of
+/// `sim::simulator::expected_pending_events`, derived from the workload
+/// instead of a fixed constant.
+fn expected_fleet_events<'a>(
+    specs: impl Iterator<Item = &'a FunctionSpec>,
+    horizon: f64,
+) -> usize {
+    let mut est = 0.0f64;
+    for f in specs {
+        let rate = match &f.arrival {
+            ArrivalMode::Process(p) => {
+                let gap = p.mean().unwrap_or(0.0);
+                if gap > 0.0 {
+                    1.0 / gap
+                } else {
+                    0.0
+                }
+            }
+            ArrivalMode::Trace(times) => {
+                if horizon > 0.0 {
+                    times.len() as f64 / horizon
+                } else {
+                    0.0
+                }
+            }
+            ArrivalMode::Streaming(spec) => spec.shape.mean_rate(),
+        };
+        let window = f.warm_service.mean().unwrap_or(1.0).max(0.0) + 600.0;
+        est += 1.0;
+        if rate.is_finite() && rate > 0.0 {
+            est += rate * window;
+        }
+    }
+    if est.is_finite() && est > 0.0 {
+        (est as usize).clamp(64, 1 << 20)
+    } else {
+        64
     }
 }
 
@@ -836,6 +1034,82 @@ mod tests {
     }
 
     #[test]
+    fn capped_domains_bit_identical_across_thread_counts() {
+        // The ISSUE's capacity-domain determinism contract: each domain
+        // is single-threaded and seq-tie-broken, so a K-domain capped run
+        // must be bit-identical for any thread count.
+        let mut rng = Rng::new(31);
+        let trace = SyntheticTrace::generate(16, &mut rng);
+        let base = FleetConfig::from_trace(&trace, 4_000.0, 0.0, 0xD0A1, PolicySpec::fixed(300.0))
+            .with_fleet_cap(12)
+            .with_capacity_domains(4);
+        let reference = base.clone().with_threads(1).run();
+        assert!(reference.aggregate.total_requests > 0);
+        for threads in [2, 8] {
+            let res = base.clone().with_threads(threads).run();
+            assert_eq!(fleet_digest(&res), fleet_digest(&reference), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn capped_domains_match_sharded_when_cap_never_binds() {
+        // With a cap so large no domain's share ever binds, admission
+        // never couples anything and every function evolves exactly as in
+        // the uncapped sharded path — for any K.
+        let mut rng = Rng::new(32);
+        let trace = SyntheticTrace::generate(8, &mut rng);
+        let base = FleetConfig::from_trace(&trace, 3_000.0, 0.0, 5, PolicySpec::fixed(120.0));
+        let sharded = base.clone().run();
+        for k in [2, 4, 8] {
+            let domains = base.clone().with_fleet_cap(1_000_000).with_capacity_domains(k).run();
+            assert_eq!(fleet_digest(&sharded), fleet_digest(&domains), "k={k}");
+            assert_eq!(domains.aggregate.cap_rejections, 0);
+        }
+    }
+
+    #[test]
+    fn domain_count_clamps_to_functions_and_capacity() {
+        // K beyond the function count or the cap silently clamps (every
+        // domain must own at least one function and one capacity unit);
+        // the clamped-to-1 case routes through the legacy coupled path.
+        let mut rng = Rng::new(33);
+        let trace = SyntheticTrace::generate(3, &mut rng);
+        let base = FleetConfig::from_trace(&trace, 2_000.0, 0.0, 7, PolicySpec::fixed(120.0))
+            .with_fleet_cap(2);
+        let legacy = base.clone().run();
+        // cap=2 clamps any K to at most 2 domains; K=64 → 2.
+        let clamped = base.clone().with_capacity_domains(64).run();
+        let two = base.clone().with_capacity_domains(2).run();
+        assert_eq!(fleet_digest(&clamped), fleet_digest(&two));
+        // K=1 explicitly is the legacy path.
+        let one = base.with_capacity_domains(1).run();
+        assert_eq!(fleet_digest(&one), fleet_digest(&legacy));
+    }
+
+    #[test]
+    fn clustered_domains_partition_hosts_and_stay_deterministic() {
+        use crate::cluster::ClusterConfig;
+        let mut rng = Rng::new(34);
+        let trace = SyntheticTrace::generate(12, &mut rng);
+        let base = FleetConfig::from_trace(&trace, 3_000.0, 0.0, 9, PolicySpec::fixed(120.0))
+            .with_cluster(ClusterConfig::new(8, 4096.0, 32.0))
+            .with_capacity_domains(4);
+        let reference = base.clone().with_threads(1).run();
+        // Contiguous 2-host blocks concatenate back to all 8 hosts.
+        assert_eq!(reference.aggregate.host_utilization.len(), 8);
+        assert!(reference.aggregate.total_requests > 0);
+        for threads in [2, 8] {
+            let res = base.clone().with_threads(threads).run();
+            assert_eq!(fleet_digest(&res), fleet_digest(&reference), "threads={threads}");
+            assert_eq!(
+                res.aggregate.host_utilization,
+                reference.aggregate.host_utilization,
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
     fn coupled_matches_sharded_when_cap_never_binds() {
         let mut rng = Rng::new(22);
         let trace = SyntheticTrace::generate(8, &mut rng);
@@ -895,6 +1169,7 @@ mod tests {
                 policy,
                 fleet_max_concurrency: None,
                 cluster: None,
+                capacity_domains: 1,
                 horizon: 50_000.0,
                 skip_initial: 0.0,
                 threads: 1,
@@ -952,6 +1227,7 @@ mod tests {
             policy: PolicySpec::fixed(600.0),
             fleet_max_concurrency: None,
             cluster: None,
+            capacity_domains: 1,
             horizon,
             skip_initial: 0.0,
             threads: 1,
@@ -1103,6 +1379,7 @@ mod tests {
             policy: PolicySpec::fixed(600.0),
             fleet_max_concurrency: None,
             cluster: None,
+            capacity_domains: 1,
             horizon: 100.0,
             skip_initial: 0.0,
             threads: 1,
@@ -1142,6 +1419,7 @@ mod tests {
             policy: PolicySpec::hybrid_histogram(600.0, 10.0),
             fleet_max_concurrency: None,
             cluster: None,
+            capacity_domains: 1,
             horizon: 50_000.0,
             skip_initial: 0.0,
             threads: 1,

@@ -84,7 +84,7 @@ const COMMANDS: &[Cmd] = &[
     Cmd {
         name: "fleet",
         summary: "multi-function fleet simulation (synthetic mix or real Azure trace)",
-        flags: "--functions N --horizon --skip --seed --threads\n--policy fixed|adaptive --threshold (fixed)\n--range --bin (adaptive) --fleet-cap (0 = none)\n--hosts N (0 = no cluster) --host-memory MB --host-cpus C\n--scheduler first-fit|least-loaded|round-robin|packing\n--prewarm-lead S (adaptive head-arm prewarm; 0 = off)\n--trace-dir DIR (Azure Functions 2019 dataset CSVs)\n--trace-top-k K --trace-scale X (with --trace-dir)\n--provider --memory --top K --json\n[--compare-thresholds a,b,c  fixed grid vs adaptive sweep]\n--failure-rate P --coldstart-failure-rate P --timeout S [--timeout-kills]\n--retry none|fixed:D[,N]|exponential:BASE,CAP[,N]\n--record-trace out.jsonl (also writes .perfetto.json/.metrics.csv)\n--metrics-interval S (state samples every S sim-seconds)",
+        flags: "--functions N --horizon --skip --seed --threads\n--policy fixed|adaptive --threshold (fixed)\n--range --bin (adaptive) --fleet-cap (0 = none)\n--capacity-domains K (shard the capped/clustered paths; 1 = off)\n--hosts N (0 = no cluster) --host-memory MB --host-cpus C\n--scheduler first-fit|least-loaded|round-robin|packing\n--prewarm-lead S (adaptive head-arm prewarm; 0 = off)\n--trace-dir DIR (Azure Functions 2019 dataset CSVs)\n--trace-top-k K --trace-scale X (with --trace-dir)\n--provider --memory --top K --json\n[--compare-thresholds a,b,c  fixed grid vs adaptive sweep]\n--failure-rate P --coldstart-failure-rate P --timeout S [--timeout-kills]\n--retry none|fixed:D[,N]|exponential:BASE,CAP[,N]\n--record-trace out.jsonl (also writes .perfetto.json/.metrics.csv)\n--metrics-interval S (state samples every S sim-seconds)",
         operands: 0,
         run: cmd_fleet,
     },
@@ -371,6 +371,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             ClusterConfig::new(hosts, host_memory, host_cpus).with_scheduler(scheduler),
         );
     }
+    // Capacity-domain sharding of the capped/clustered paths (validated
+    // against the cap / host count by ScenarioSpec::validate below).
+    fleet.capacity_domains = args.get_usize("capacity-domains", 1)?;
     fleet.prewarm_lead = args.get_f64("prewarm-lead", 0.0)?;
     fleet.memory_mb = args.get_f64("memory", 128.0)?;
     fleet.top_k = args.get_usize("top", 5)?;

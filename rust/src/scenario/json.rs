@@ -613,6 +613,11 @@ fn experiment_to_json(e: &ExperimentSpec) -> JsonValue {
             if let Some(cl) = &f.cluster {
                 o.set("cluster", cluster_to_json(cl));
             }
+            // Emitted only when sharding is on, so pre-domain scenario
+            // files round-trip byte-identically.
+            if f.capacity_domains != 1 {
+                o.set("capacity_domains", f.capacity_domains);
+            }
         }
     }
     o
@@ -750,6 +755,7 @@ fn experiment_from_json(v: &JsonValue) -> Result<ExperimentSpec> {
                     "compare_thresholds",
                     "compare_extra",
                     "cluster",
+                    "capacity_domains",
                 ],
                 what,
             )?;
@@ -777,6 +783,7 @@ fn experiment_from_json(v: &JsonValue) -> Result<ExperimentSpec> {
             if let Some(cv) = o.get("cluster") {
                 f.cluster = Some(cluster_from_json(cv)?);
             }
+            f.capacity_domains = usize_field(o, "capacity_domains", what, 1)?;
             ExperimentSpec::Fleet(f)
         }
         other => bail!(
@@ -1093,6 +1100,7 @@ mod tests {
                 FleetScenario::new(12)
                     .with_policy(KeepAliveSpec::hybrid_histogram(1_800.0, 30.0))
                     .with_fleet_cap(64)
+                    .with_capacity_domains(4)
                     .with_comparison(
                         vec![120.0, 600.0],
                         vec![KeepAliveSpec::Stochastic {

@@ -207,6 +207,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport> {
             cfg.threads = f.threads;
             cfg.fleet_max_concurrency = f.fleet_cap;
             cfg.cluster = f.cluster.clone();
+            cfg.capacity_domains = f.capacity_domains;
             cfg.prewarm_lead = f.prewarm_lead;
             if let Some(r) = &spec.reliability {
                 cfg.fault = r.fault.clone();
@@ -457,6 +458,12 @@ impl ScenarioReport {
                             cl.host_memory_mb,
                             cl.host_cpus,
                             cl.scheduler.as_str()
+                        ));
+                    }
+                    if f.capacity_domains > 1 {
+                        s.push_str(&format!(
+                            "capacity domains: {} (cap and hosts sharded; per-domain deterministic)\n",
+                            f.capacity_domains
                         ));
                     }
                 }

@@ -315,6 +315,13 @@ pub struct FleetScenario {
     /// hosts × memory × cpus × scheduler, with optional drain windows.
     /// Mutually exclusive with `fleet_cap`.
     pub cluster: Option<ClusterConfig>,
+    /// Capacity domains for the capped/clustered paths: `> 1` shards
+    /// the fleet into independent admission domains that run on scoped
+    /// threads (function `i` → domain `i mod K`, proportional cap/host
+    /// shares). `1` is the exact single-queue legacy path. Requires a
+    /// `fleet_cap` or `cluster` when `> 1` (the uncapped path is
+    /// already parallel).
+    pub capacity_domains: usize,
 }
 
 impl FleetScenario {
@@ -330,6 +337,7 @@ impl FleetScenario {
             compare_extra: Vec::new(),
             prewarm_lead: 0.0,
             cluster: None,
+            capacity_domains: 1,
         }
     }
 
@@ -367,6 +375,12 @@ impl FleetScenario {
     /// Replace the flat capacity counter with a finite-resource cluster.
     pub fn with_cluster(mut self, cluster: ClusterConfig) -> Self {
         self.cluster = Some(cluster);
+        self
+    }
+
+    /// Shard the capped/clustered paths into `k` capacity domains.
+    pub fn with_capacity_domains(mut self, k: usize) -> Self {
+        self.capacity_domains = k;
         self
     }
 }
@@ -856,6 +870,39 @@ impl ScenarioSpec {
                         bail!("fleet.cluster: {e}");
                     }
                 }
+                if f.capacity_domains == 0 {
+                    bail!("fleet.capacity_domains must be at least 1 (1 = no sharding)");
+                }
+                if f.capacity_domains > 1 {
+                    if f.fleet_cap.is_none() && f.cluster.is_none() {
+                        bail!(
+                            "fleet.capacity_domains > 1 requires a fleet_cap or a \
+                             cluster — the uncapped path is already parallel \
+                             (set threads instead)"
+                        );
+                    }
+                    if let Some(cap) = f.fleet_cap {
+                        if f.capacity_domains > cap {
+                            bail!(
+                                "fleet.capacity_domains ({}) cannot exceed fleet_cap \
+                                 ({cap}) — every domain needs at least one unit of \
+                                 capacity",
+                                f.capacity_domains
+                            );
+                        }
+                    }
+                    if let Some(cl) = &f.cluster {
+                        if f.capacity_domains > cl.hosts {
+                            bail!(
+                                "fleet.capacity_domains ({}) cannot exceed \
+                                 cluster.hosts ({}) — every domain needs at least \
+                                 one host",
+                                f.capacity_domains,
+                                cl.hosts
+                            );
+                        }
+                    }
+                }
             }
         }
         if let Some(r) = &self.reliability {
@@ -1019,6 +1066,34 @@ mod tests {
             ))
             .validate()
             .unwrap();
+    }
+
+    #[test]
+    fn validate_constrains_capacity_domains() {
+        use crate::cluster::ClusterConfig;
+        let fleet = |f: FleetScenario| {
+            ScenarioSpec::new("x").with_experiment(ExperimentSpec::Fleet(f)).validate()
+        };
+        let err = |f| fleet(f).unwrap_err().to_string();
+        // 0 is never valid; > 1 needs a capacity model to shard.
+        let zero = FleetScenario::new(2).with_capacity_domains(0);
+        assert!(err(zero).contains("at least 1"));
+        let uncapped = FleetScenario::new(8).with_capacity_domains(2);
+        assert!(err(uncapped).contains("fleet_cap"));
+        // Each domain needs at least one unit of shared capacity.
+        let thin_cap = FleetScenario::new(8).with_fleet_cap(2).with_capacity_domains(4);
+        assert!(err(thin_cap).contains("cannot exceed fleet_cap"));
+        let thin_cluster = FleetScenario::new(8)
+            .with_cluster(ClusterConfig::new(2, 1024.0, 8.0))
+            .with_capacity_domains(4);
+        assert!(err(thin_cluster).contains("cluster.hosts"));
+        // Well-formed capped and clustered shardings pass.
+        let capped = FleetScenario::new(8).with_fleet_cap(16).with_capacity_domains(4);
+        fleet(capped).unwrap();
+        let clustered = FleetScenario::new(8)
+            .with_cluster(ClusterConfig::new(4, 1024.0, 8.0))
+            .with_capacity_domains(4);
+        fleet(clustered).unwrap();
     }
 
     #[test]

@@ -1,0 +1,413 @@
+//! Struct-of-arrays instance storage for the lifecycle core.
+//!
+//! The pre-arena [`super::core::EngineCore`] kept a
+//! `Vec<FunctionInstance>` that only ever grew: every cold start pushed a
+//! new struct and terminated instances stayed behind as tombstones, so a
+//! multi-day fleet run accumulated millions of dead 100-byte rows and the
+//! hot handlers (arrival/departure/expiration) chased pointers through a
+//! cold, ever-growing allocation. [`InstanceArena`] replaces it with:
+//!
+//! * **Struct-of-arrays columns** — each lifecycle field lives in its own
+//!   dense `Vec`, so a handler touches only the cache lines of the two or
+//!   three fields it actually reads (`in_flight`, `busy_since`,
+//!   `generation`), not a whole row.
+//! * **Free-list slot reuse** — when `retain` is off (the fleet's
+//!   per-function engines), a terminated instance's *slot* is recycled for
+//!   the next cold start, bounding resident memory by the engine's peak
+//!   live count instead of its total churn.
+//! * **Stable ordinal ids with generation indices** — [`InstanceId`]s stay
+//!   the monotone creation ordinals the routers and telemetry rely on
+//!   (newest = highest id, ids never reused). `slot_of` maps ordinal →
+//!   current slot and tombstones freed ordinals, which doubles as the
+//!   staleness guard: a late [`super::event::Event::Expiration`] aimed at
+//!   a freed ordinal resolves to no slot and is dropped, exactly like the
+//!   old terminated-state check. Per-slot `generation` counters guard
+//!   lazy-cancelled expirations on *live* instances, unchanged.
+//!
+//! With `retain` on (the single-function simulators, whose
+//! `instances()` accessor and tests inspect the full history) nothing is
+//! ever freed, so slot == ordinal and the arena is a column-major view of
+//! the old vector — bit-identical results either way, since id
+//! assignment, state transitions and assertion semantics are exactly
+//! [`FunctionInstance`]'s.
+
+use super::instance::{FunctionInstance, InstanceId, InstanceState};
+use super::time::SimTime;
+
+/// Tombstone in `slot_of`: this ordinal's instance was terminated and its
+/// slot recycled.
+const FREED: u32 = u32::MAX;
+
+/// Struct-of-arrays instance pool with free-list reuse. See the module
+/// docs for the design; the mutation methods mirror
+/// [`FunctionInstance`]'s transitions one-for-one (including the
+/// debug assertions), which is what keeps the arena engines bit-identical
+/// to the historical `Vec<FunctionInstance>` engines.
+#[derive(Debug)]
+pub struct InstanceArena {
+    state: Vec<InstanceState>,
+    created_at: Vec<SimTime>,
+    idle_since: Vec<SimTime>,
+    busy_since: Vec<SimTime>,
+    terminated_at: Vec<SimTime>,
+    generation: Vec<u64>,
+    busy_time: Vec<f64>,
+    requests_served: Vec<u64>,
+    cold_only: Vec<bool>,
+    in_flight: Vec<u32>,
+    prewarmed: Vec<bool>,
+    /// slot → the ordinal id currently occupying it.
+    id_of: Vec<u64>,
+    /// ordinal id → slot ([`FREED`] once recycled).
+    slot_of: Vec<u32>,
+    /// Recycled slots (LIFO — the hottest cache lines are reused first).
+    free: Vec<u32>,
+    /// When true, terminated instances keep their slots forever (the
+    /// single-function simulators expose the full history).
+    retain: bool,
+}
+
+impl InstanceArena {
+    /// Empty arena with `cap` pre-reserved slots. `retain` keeps
+    /// terminated instances resident (see the module docs).
+    pub fn with_capacity(cap: usize, retain: bool) -> InstanceArena {
+        InstanceArena {
+            state: Vec::with_capacity(cap),
+            created_at: Vec::with_capacity(cap),
+            idle_since: Vec::with_capacity(cap),
+            busy_since: Vec::with_capacity(cap),
+            terminated_at: Vec::with_capacity(cap),
+            generation: Vec::with_capacity(cap),
+            busy_time: Vec::with_capacity(cap),
+            requests_served: Vec::with_capacity(cap),
+            cold_only: Vec::with_capacity(cap),
+            in_flight: Vec::with_capacity(cap),
+            prewarmed: Vec::with_capacity(cap),
+            id_of: Vec::with_capacity(cap),
+            slot_of: Vec::with_capacity(cap),
+            free: Vec::new(),
+            retain,
+        }
+    }
+
+    /// Total instances ever created (the next ordinal id).
+    #[inline]
+    pub fn created(&self) -> usize {
+        self.slot_of.len()
+    }
+
+    /// Resolve an ordinal id to its slot; `None` once the slot was
+    /// recycled (the instance is long terminated).
+    #[inline]
+    fn slot(&self, id: InstanceId) -> Option<usize> {
+        let s = self.slot_of[id.0 as usize];
+        (s != FREED).then_some(s as usize)
+    }
+
+    /// Whether `id` still occupies a slot (not yet recycled).
+    #[inline]
+    pub fn is_resident(&self, id: InstanceId) -> bool {
+        self.slot_of[id.0 as usize] != FREED
+    }
+
+    /// Allocate a cold-starting instance at `now`
+    /// ([`FunctionInstance::cold_start`] semantics): state Initializing,
+    /// all timestamps `now`, generation 0. Returns the new monotone
+    /// ordinal id — identical to the id sequence of the historical
+    /// grow-only vector.
+    pub fn alloc(&mut self, now: SimTime, prewarmed: bool) -> InstanceId {
+        let id = InstanceId(self.slot_of.len() as u64);
+        match self.free.pop() {
+            Some(slot) => {
+                let s = slot as usize;
+                self.state[s] = InstanceState::Initializing;
+                self.created_at[s] = now;
+                self.idle_since[s] = now;
+                self.busy_since[s] = now;
+                self.terminated_at[s] = now;
+                self.generation[s] = 0;
+                self.busy_time[s] = 0.0;
+                self.requests_served[s] = 0;
+                self.cold_only[s] = true;
+                self.in_flight[s] = 0;
+                self.prewarmed[s] = prewarmed;
+                self.id_of[s] = id.0;
+                self.slot_of.push(slot);
+            }
+            None => {
+                debug_assert!(self.state.len() < FREED as usize, "slot index overflow");
+                self.state.push(InstanceState::Initializing);
+                self.created_at.push(now);
+                self.idle_since.push(now);
+                self.busy_since.push(now);
+                self.terminated_at.push(now);
+                self.generation.push(0);
+                self.busy_time.push(0.0);
+                self.requests_served.push(0);
+                self.cold_only.push(true);
+                self.in_flight.push(0);
+                self.prewarmed.push(prewarmed);
+                self.id_of.push(id.0);
+                self.slot_of.push((self.state.len() - 1) as u32);
+            }
+        }
+        id
+    }
+
+    /// Recycle a terminated instance's slot. No-op in retain mode. Must
+    /// only be called after the instance was terminated and removed from
+    /// the router — its ordinal becomes a tombstone, which is what drops
+    /// any still-pending expiration events aimed at it.
+    #[inline]
+    pub fn release_slot(&mut self, id: InstanceId) {
+        if self.retain {
+            return;
+        }
+        let slot = self.slot_of[id.0 as usize];
+        debug_assert_ne!(slot, FREED, "double release of {id}");
+        debug_assert_eq!(self.state[slot as usize], InstanceState::Terminated);
+        self.slot_of[id.0 as usize] = FREED;
+        self.free.push(slot);
+    }
+
+    // ------------------------------------------------- lifecycle mutations
+
+    /// [`FunctionInstance::finish_request`]: the busy period ends, the
+    /// instance goes idle; returns the bumped generation.
+    #[inline]
+    pub fn finish_request(&mut self, id: InstanceId, now: SimTime, busy: f64) -> u64 {
+        let s = self.slot_of[id.0 as usize] as usize;
+        debug_assert!(matches!(
+            self.state[s],
+            InstanceState::Initializing | InstanceState::Running
+        ));
+        self.state[s] = InstanceState::Idle;
+        self.idle_since[s] = now;
+        self.busy_time[s] += busy;
+        self.requests_served[s] += 1;
+        self.generation[s] += 1;
+        self.generation[s]
+    }
+
+    /// [`FunctionInstance::start_warm`]: an idle instance absorbs a
+    /// request.
+    #[inline]
+    pub fn start_warm(&mut self, id: InstanceId, now: SimTime) {
+        let s = self.slot_of[id.0 as usize] as usize;
+        debug_assert_eq!(self.state[s], InstanceState::Idle);
+        debug_assert!(now >= self.idle_since[s]);
+        self.state[s] = InstanceState::Running;
+        self.cold_only[s] = false;
+        self.busy_since[s] = now;
+        self.generation[s] += 1;
+    }
+
+    /// [`FunctionInstance::terminate`]: an idle instance expires.
+    #[inline]
+    pub fn terminate(&mut self, id: InstanceId, now: SimTime) {
+        let s = self.slot_of[id.0 as usize] as usize;
+        debug_assert_eq!(self.state[s], InstanceState::Idle);
+        self.state[s] = InstanceState::Terminated;
+        self.terminated_at[s] = now;
+    }
+
+    /// [`FunctionInstance::lifespan`] at `now`.
+    #[inline]
+    pub fn lifespan(&self, id: InstanceId, now: SimTime) -> f64 {
+        let s = self.slot_of[id.0 as usize] as usize;
+        if self.state[s] == InstanceState::Terminated {
+            self.terminated_at[s].since(self.created_at[s])
+        } else {
+            now.since(self.created_at[s])
+        }
+    }
+
+    // ------------------------------------------------------ field access
+
+    /// Current lifecycle state of `id`.
+    #[inline]
+    pub fn state(&self, id: InstanceId) -> InstanceState {
+        self.state[self.slot_of[id.0 as usize] as usize]
+    }
+
+    /// Requests in flight on `id`.
+    #[inline]
+    pub fn in_flight(&self, id: InstanceId) -> u32 {
+        self.in_flight[self.slot_of[id.0 as usize] as usize]
+    }
+
+    /// Overwrite the in-flight count of `id`.
+    #[inline]
+    pub fn set_in_flight(&mut self, id: InstanceId, v: u32) {
+        self.in_flight[self.slot_of[id.0 as usize] as usize] = v;
+    }
+
+    /// Busy-period start of `id`.
+    #[inline]
+    pub fn busy_since(&self, id: InstanceId) -> SimTime {
+        self.busy_since[self.slot_of[id.0 as usize] as usize]
+    }
+
+    /// Generation counter of `id` (lazy-cancellation guard).
+    #[inline]
+    pub fn generation(&self, id: InstanceId) -> u64 {
+        self.generation[self.slot_of[id.0 as usize] as usize]
+    }
+
+    /// Whether `id` was created by the prewarm path.
+    #[inline]
+    pub fn prewarmed(&self, id: InstanceId) -> bool {
+        self.prewarmed[self.slot_of[id.0 as usize] as usize]
+    }
+
+    /// Requests served by `id` so far.
+    #[inline]
+    pub fn requests_served(&self, id: InstanceId) -> u64 {
+        self.requests_served[self.slot_of[id.0 as usize] as usize]
+    }
+
+    /// Seed-state setup (the temporal simulator's warm pools): force `id`
+    /// idle as of `at` with its creation time rewritten.
+    #[inline]
+    pub fn seed_idle(&mut self, id: InstanceId, at: SimTime) {
+        let s = self.slot_of[id.0 as usize] as usize;
+        self.state[s] = InstanceState::Idle;
+        self.created_at[s] = at;
+        self.idle_since[s] = at;
+    }
+
+    /// Seed-state setup: force `id` running with one request in flight.
+    #[inline]
+    pub fn seed_running(&mut self, id: InstanceId) {
+        let s = self.slot_of[id.0 as usize] as usize;
+        self.state[s] = InstanceState::Running;
+        self.in_flight[s] = 1;
+    }
+
+    /// Prewarm completion ([`super::core::EngineCore`]'s ProvisioningDone):
+    /// Initializing → Idle with a generation bump; returns the new
+    /// generation.
+    #[inline]
+    pub fn provisioning_done(&mut self, id: InstanceId, now: SimTime) -> u64 {
+        let s = self.slot_of[id.0 as usize] as usize;
+        debug_assert_eq!(self.state[s], InstanceState::Initializing);
+        debug_assert_eq!(self.in_flight[s], 0);
+        self.state[s] = InstanceState::Idle;
+        self.idle_since[s] = now;
+        self.generation[s] += 1;
+        self.generation[s]
+    }
+
+    /// Materialize the resident instances as [`FunctionInstance`] rows in
+    /// ordinal order (diagnostic / test surface, not the hot path). With
+    /// `retain` on this is the complete creation history, exactly the old
+    /// grow-only vector.
+    pub fn materialize(&self) -> Vec<FunctionInstance> {
+        let mut out = Vec::with_capacity(self.slot_of.len() - self.free.len());
+        for (ord, &slot) in self.slot_of.iter().enumerate() {
+            if slot == FREED {
+                continue;
+            }
+            let s = slot as usize;
+            out.push(FunctionInstance {
+                id: InstanceId(ord as u64),
+                state: self.state[s],
+                created_at: self.created_at[s],
+                idle_since: self.idle_since[s],
+                busy_since: self.busy_since[s],
+                terminated_at: self.terminated_at[s],
+                generation: self.generation[s],
+                busy_time: self.busy_time[s],
+                requests_served: self.requests_served[s],
+                cold_only: self.cold_only[s],
+                in_flight: self.in_flight[s],
+                prewarmed: self.prewarmed[s],
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retain_mode_keeps_full_history_with_ordinal_slots() {
+        let mut a = InstanceArena::with_capacity(4, true);
+        let t0 = SimTime::from_secs(1.0);
+        let i0 = a.alloc(t0, false);
+        let i1 = a.alloc(t0, true);
+        assert_eq!((i0, i1), (InstanceId(0), InstanceId(1)));
+        a.finish_request(i0, SimTime::from_secs(3.0), 2.0);
+        a.terminate(i0, SimTime::from_secs(9.0));
+        a.release_slot(i0); // no-op in retain mode
+        assert!(a.is_resident(i0));
+        let rows = a.materialize();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].state, InstanceState::Terminated);
+        assert_eq!(rows[0].requests_served, 1);
+        assert!((rows[0].busy_time - 2.0).abs() < 1e-12);
+        assert_eq!(rows[1].state, InstanceState::Initializing);
+        assert!(rows[1].prewarmed);
+        // Lifespan matches FunctionInstance: terminated_at - created_at.
+        assert!((a.lifespan(i0, SimTime::from_secs(99.0)) - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn free_list_recycles_slots_but_never_ids() {
+        let mut a = InstanceArena::with_capacity(2, false);
+        let t = SimTime::from_secs(0.0);
+        let i0 = a.alloc(t, false);
+        a.finish_request(i0, SimTime::from_secs(1.0), 1.0);
+        a.terminate(i0, SimTime::from_secs(2.0));
+        a.release_slot(i0);
+        assert!(!a.is_resident(i0), "freed ordinal is a tombstone");
+        // The next allocation reuses slot 0 under a brand-new ordinal,
+        // with all columns reset to cold-start values.
+        let i1 = a.alloc(SimTime::from_secs(5.0), false);
+        assert_eq!(i1, InstanceId(1), "ids stay monotone across reuse");
+        assert_eq!(a.state(i1), InstanceState::Initializing);
+        assert_eq!(a.generation(i1), 0);
+        assert_eq!(a.requests_served(i1), 0);
+        assert_eq!(a.created(), 2);
+        // Materialize skips the tombstoned ordinal.
+        let rows = a.materialize();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].id, InstanceId(1));
+    }
+
+    #[test]
+    fn transition_sequence_matches_function_instance() {
+        // Drive the same lifecycle through FunctionInstance and the arena
+        // and compare every observable.
+        let mut inst = FunctionInstance::cold_start(InstanceId(0), SimTime::from_secs(5.0));
+        let mut a = InstanceArena::with_capacity(1, true);
+        let id = a.alloc(SimTime::from_secs(5.0), false);
+
+        let g1 = inst.finish_request(SimTime::from_secs(7.0), 2.0);
+        let g2 = a.finish_request(id, SimTime::from_secs(7.0), 2.0);
+        assert_eq!(g1, g2);
+
+        inst.start_warm(SimTime::from_secs(8.0));
+        a.start_warm(id, SimTime::from_secs(8.0));
+        assert_eq!(a.generation(id), inst.generation);
+
+        let g1 = inst.finish_request(SimTime::from_secs(9.5), 1.5);
+        let g2 = a.finish_request(id, SimTime::from_secs(9.5), 1.5);
+        assert_eq!(g1, g2);
+
+        inst.terminate(SimTime::from_secs(20.0));
+        a.terminate(id, SimTime::from_secs(20.0));
+        let row = &a.materialize()[0];
+        assert_eq!(row.state, inst.state);
+        assert_eq!(row.generation, inst.generation);
+        assert_eq!(row.requests_served, inst.requests_served);
+        assert!((row.busy_time - inst.busy_time).abs() < 1e-12);
+        assert_eq!(
+            a.lifespan(id, SimTime::from_secs(30.0)),
+            inst.lifespan(SimTime::from_secs(30.0))
+        );
+        assert_eq!(row.cold_only, inst.cold_only);
+    }
+}

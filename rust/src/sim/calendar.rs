@@ -1,0 +1,378 @@
+//! Calendar queue: an O(1)-amortized future event list.
+//!
+//! A classic Brown calendar queue [R. Brown, CACM 1988] adapted for
+//! bit-reproducible discrete-event simulation. Time is divided into
+//! fixed-width *days*; each day hashes onto one of `nbuckets` *bucket*
+//! lists (`day % nbuckets`), so one "year" spans `nbuckets × width`
+//! seconds. A cursor walks forward day by day; popping scans only the
+//! current day's bucket for the earliest `(time, seq)` entry, which is
+//! O(bucket occupancy) — O(1) when the queue is sized right — instead of
+//! the `O(log n)` sift of a binary heap.
+//!
+//! Design points that keep it exactly equivalent to the heap queue:
+//!
+//! * **Total order.** Entries carry a monotone sequence number; pops are
+//!   ordered by `(time, seq)`, the same deterministic tie-break as
+//!   [`super::event::HeapEventQueue`]. Bucket-internal order (perturbed
+//!   by `swap_remove`) is never observable.
+//! * **Integer day indices.** Each entry precomputes its absolute day
+//!   `abs = floor(time / width)` as a `u64` *once, at insertion*; the
+//!   cursor compares days with integer equality, so there are no
+//!   float-boundary disagreements between insert and pop.
+//! * **Past-insert rewind.** Inserting before the cursor's day rewinds
+//!   the cursor, so interleaved schedule/pop patterns (retries, prewarm
+//!   leads) stay correct.
+//! * **Sparse fallback.** If a full cycle of days turns up nothing (all
+//!   entries live far in the future), a direct min-scan pops the global
+//!   earliest entry and teleports the cursor to its day, bounding the
+//!   worst case at O(n) instead of O(future gap / width).
+//! * **Deterministic resize.** Bucket count doubles above 2× occupancy
+//!   and halves below ¼ (hysteresis), and the day width is refit to the
+//!   observed event spread. Resizing depends only on queue contents, so
+//!   identical schedules resize identically.
+
+use super::time::SimTime;
+
+/// Smallest bucket count; also the floor the queue shrinks back to.
+const MIN_BUCKETS: usize = 16;
+/// Cap on the initial bucket allocation from [`CalendarQueue::with_capacity`].
+const MAX_INITIAL_BUCKETS: usize = 1 << 18;
+/// Clamp for `time / width` so the `as u64` conversion can never wrap:
+/// beyond this the queue degrades to one shared day (still correct, the
+/// direct-scan fallback finds the minimum).
+const MAX_ABS: f64 = 9.0e18;
+/// Floor on the day width so a pathological refit cannot divide by ~0.
+const MIN_WIDTH: f64 = 1e-9;
+
+#[derive(Debug, Clone)]
+struct Entry<T> {
+    at: SimTime,
+    seq: u64,
+    /// Absolute day index: `floor(at / width)` at insertion time.
+    abs: u64,
+    item: T,
+}
+
+/// A generic calendar queue over payload `T`, ordered by
+/// `(time, insertion seq)`.
+#[derive(Debug, Clone)]
+pub struct CalendarQueue<T> {
+    buckets: Vec<Vec<Entry<T>>>,
+    /// Day width in seconds.
+    width: f64,
+    /// The cursor's absolute day; invariant: no entry has `abs < cur_abs`.
+    cur_abs: u64,
+    len: usize,
+    seq: u64,
+}
+
+impl<T> Default for CalendarQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> CalendarQueue<T> {
+    /// Empty queue with the minimum bucket count.
+    pub fn new() -> Self {
+        Self::with_capacity(0)
+    }
+
+    /// Empty queue sized for roughly `cap` concurrently pending entries
+    /// (about one entry per bucket at that occupancy).
+    pub fn with_capacity(cap: usize) -> Self {
+        let nbuckets = cap.clamp(MIN_BUCKETS, MAX_INITIAL_BUCKETS);
+        CalendarQueue {
+            buckets: (0..nbuckets).map(|_| Vec::new()).collect(),
+            width: 1.0,
+            cur_abs: 0,
+            len: 0,
+            seq: 0,
+        }
+    }
+
+    #[inline]
+    fn abs_of(&self, at: SimTime) -> u64 {
+        let x = at.as_secs() / self.width;
+        if x >= MAX_ABS {
+            MAX_ABS as u64
+        } else if x > 0.0 {
+            x as u64
+        } else {
+            0
+        }
+    }
+
+    /// Insert `item` at absolute time `at`; returns the sequence number
+    /// assigned (monotone per queue, the `(time, seq)` tie-break).
+    #[inline]
+    pub fn push(&mut self, at: SimTime, item: T) -> u64 {
+        debug_assert!(at.is_finite(), "cannot schedule at infinity");
+        let seq = self.seq;
+        self.seq += 1;
+        let abs = self.abs_of(at);
+        self.insert_entry(Entry { at, seq, abs, item });
+        if self.len > 2 * self.buckets.len() {
+            self.resize(self.buckets.len() * 2);
+        }
+        seq
+    }
+
+    #[inline]
+    fn insert_entry(&mut self, e: Entry<T>) {
+        if self.len == 0 || e.abs < self.cur_abs {
+            self.cur_abs = e.abs;
+        }
+        let n = self.buckets.len() as u64;
+        self.buckets[(e.abs % n) as usize].push(e);
+        self.len += 1;
+    }
+
+    /// Pop the earliest entry as `(time, seq, item)`.
+    pub fn pop(&mut self) -> Option<(SimTime, u64, T)> {
+        if self.len == 0 {
+            return None;
+        }
+        let n = self.buckets.len() as u64;
+        let mut misses = 0usize;
+        loop {
+            let idx = (self.cur_abs % n) as usize;
+            let bucket = &self.buckets[idx];
+            let mut best: Option<usize> = None;
+            for (i, e) in bucket.iter().enumerate() {
+                // Same hash slot, later year: not due in this day.
+                if e.abs > self.cur_abs {
+                    continue;
+                }
+                best = Some(match best {
+                    None => i,
+                    Some(b) => {
+                        let cur = &bucket[b];
+                        if e.at < cur.at || (e.at == cur.at && e.seq < cur.seq) {
+                            i
+                        } else {
+                            b
+                        }
+                    }
+                });
+            }
+            if let Some(i) = best {
+                let e = self.buckets[idx].swap_remove(i);
+                self.len -= 1;
+                self.maybe_shrink();
+                return Some((e.at, e.seq, e.item));
+            }
+            self.cur_abs += 1;
+            misses += 1;
+            if misses >= self.buckets.len() {
+                return Some(self.pop_direct());
+            }
+        }
+    }
+
+    /// O(n) fallback for sparse queues: pop the global `(time, seq)`
+    /// minimum and jump the cursor to its day.
+    fn pop_direct(&mut self) -> (SimTime, u64, T) {
+        debug_assert!(self.len > 0, "pop_direct on an empty queue");
+        let mut best: Option<(SimTime, u64, usize, usize)> = None;
+        for (bi, bucket) in self.buckets.iter().enumerate() {
+            for (ei, e) in bucket.iter().enumerate() {
+                let better = match &best {
+                    None => true,
+                    Some((bat, bseq, _, _)) => {
+                        e.at < *bat || (e.at == *bat && e.seq < *bseq)
+                    }
+                };
+                if better {
+                    best = Some((e.at, e.seq, bi, ei));
+                }
+            }
+        }
+        let (_, _, bi, ei) = best.expect("len > 0 but no entry found");
+        let e = self.buckets[bi].swap_remove(ei);
+        // Entries left behind all order after `e`, and day indices are
+        // monotone in time, so `e.abs` is a valid new cursor lower bound.
+        self.cur_abs = e.abs;
+        self.len -= 1;
+        self.maybe_shrink();
+        (e.at, e.seq, e.item)
+    }
+
+    #[inline]
+    fn maybe_shrink(&mut self) {
+        if self.buckets.len() > MIN_BUCKETS && self.len < self.buckets.len() / 4 {
+            self.resize(self.buckets.len() / 2);
+        }
+    }
+
+    /// Re-bucket everything into `new_n` buckets, refitting the day width
+    /// to the observed spread (~one entry per day at current occupancy).
+    fn resize(&mut self, new_n: usize) {
+        let new_n = new_n.max(MIN_BUCKETS);
+        let mut entries: Vec<Entry<T>> = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            entries.append(b);
+        }
+        let mut tmin = f64::INFINITY;
+        let mut tmax = f64::NEG_INFINITY;
+        for e in &entries {
+            let t = e.at.as_secs();
+            tmin = tmin.min(t);
+            tmax = tmax.max(t);
+        }
+        if entries.len() >= 2 && tmax > tmin {
+            let w = (tmax - tmin) / entries.len() as f64;
+            if w.is_finite() {
+                self.width = w.max(MIN_WIDTH);
+            }
+        }
+        if self.buckets.len() != new_n {
+            self.buckets = (0..new_n).map(|_| Vec::new()).collect();
+        }
+        self.len = 0;
+        for e in entries {
+            let abs = self.abs_of(e.at);
+            self.insert_entry(Entry { abs, ..e });
+        }
+    }
+
+    /// Time of the earliest entry without popping (O(n) scan; diagnostic
+    /// use, not the hot path).
+    pub fn peek_time(&self) -> Option<SimTime> {
+        let mut best: Option<(SimTime, u64)> = None;
+        for bucket in &self.buckets {
+            for e in bucket {
+                let better = match &best {
+                    None => true,
+                    Some((bat, bseq)) => {
+                        e.at < *bat || (e.at == *bat && e.seq < *bseq)
+                    }
+                };
+                if better {
+                    best = Some((e.at, e.seq));
+                }
+            }
+        }
+        best.map(|(at, _)| at)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Drop all pending entries. The sequence counter is preserved
+    /// (matching the heap queue's `clear`), so tie-break order across a
+    /// clear stays monotone.
+    pub fn clear(&mut self) {
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        self.len = 0;
+        self.cur_abs = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = CalendarQueue::new();
+        q.push(SimTime::from_secs(3.0), 'c');
+        q.push(SimTime::from_secs(1.0), 'a');
+        q.push(SimTime::from_secs(2.0), 'b');
+        let order: Vec<char> = std::iter::from_fn(|| q.pop().map(|(_, _, c)| c)).collect();
+        assert_eq!(order, vec!['a', 'b', 'c']);
+    }
+
+    #[test]
+    fn equal_times_pop_in_insertion_order() {
+        let mut q = CalendarQueue::new();
+        let t = SimTime::from_secs(5.0);
+        for i in 0..100u32 {
+            q.push(t, i);
+        }
+        for i in 0..100u32 {
+            let (_, _, v) = q.pop().unwrap();
+            assert_eq!(v, i);
+        }
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn insert_before_cursor_rewinds() {
+        let mut q = CalendarQueue::new();
+        q.push(SimTime::from_secs(100.0), 1u32);
+        // Advance the cursor far forward.
+        let (t, _, _) = q.pop().unwrap();
+        assert_eq!(t.as_secs(), 100.0);
+        // Now insert in the "past" relative to the cursor.
+        q.push(SimTime::from_secs(3.0), 2u32);
+        q.push(SimTime::from_secs(200.0), 3u32);
+        let (t, _, v) = q.pop().unwrap();
+        assert_eq!((t.as_secs(), v), (3.0, 2));
+        let (t, _, v) = q.pop().unwrap();
+        assert_eq!((t.as_secs(), v), (200.0, 3));
+    }
+
+    #[test]
+    fn grows_and_shrinks_through_resize() {
+        let mut q = CalendarQueue::with_capacity(16);
+        for i in 0..5000u32 {
+            q.push(SimTime::from_secs(i as f64 * 0.13), i);
+        }
+        assert!(q.buckets.len() > MIN_BUCKETS, "expected growth");
+        let mut prev = f64::NEG_INFINITY;
+        for i in 0..5000u32 {
+            let (t, _, v) = q.pop().unwrap();
+            assert!(t.as_secs() >= prev);
+            prev = t.as_secs();
+            assert_eq!(v, i, "FIFO within the sorted insert order");
+        }
+        assert!(q.is_empty());
+        assert_eq!(q.buckets.len(), MIN_BUCKETS, "expected shrink to floor");
+    }
+
+    #[test]
+    fn sparse_far_future_uses_direct_fallback() {
+        let mut q = CalendarQueue::new();
+        // One entry ~10^9 days past the cursor at the default width.
+        q.push(SimTime::from_secs(0.5), 'x');
+        let (_, _, v) = q.pop().unwrap();
+        assert_eq!(v, 'x');
+        q.push(SimTime::from_secs(1.0e9), 'y');
+        let (t, _, v) = q.pop().unwrap();
+        assert_eq!((t.as_secs(), v), (1.0e9, 'y'));
+    }
+
+    #[test]
+    fn clear_preserves_seq_monotonicity() {
+        let mut q = CalendarQueue::new();
+        let s0 = q.push(SimTime::from_secs(1.0), 0u8);
+        q.clear();
+        assert!(q.is_empty());
+        let s1 = q.push(SimTime::from_secs(1.0), 1u8);
+        assert!(s1 > s0);
+        let (_, _, v) = q.pop().unwrap();
+        assert_eq!(v, 1);
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        let mut q = CalendarQueue::new();
+        for &t in &[9.0, 4.0, 6.5, 4.0] {
+            q.push(SimTime::from_secs(t), ());
+        }
+        while let Some(peek) = q.peek_time() {
+            let (t, _, _) = q.pop().unwrap();
+            assert_eq!(peek, t);
+        }
+    }
+}

@@ -10,8 +10,9 @@
 //! shared implementation: an [`EngineCore`] holding the instance pool, the
 //! level accumulators and the event handlers, parameterized by
 //!
-//! * a [`Scheduler`] — where events land (a plain
-//!   [`super::event::EventQueue`], or the fleet's function-tagged queue),
+//! * a [`Scheduler`] — where events land (one of the
+//!   [`super::event::EventQueue`] implementations, or the fleet's
+//!   function-tagged queue),
 //! * a [`LifecycleHooks`] implementation — the three points where the
 //!   engines genuinely differ: the keep-alive (expiration-threshold) draw,
 //!   fleet-gate admission on cold starts, and per-request observation
@@ -60,7 +61,8 @@
 //! `tests/engine_unification.rs`).
 #![warn(missing_docs)]
 
-use super::event::{Event, EventQueue};
+use super::arena::InstanceArena;
+use super::event::{CalendarEventQueue, Event, HeapEventQueue};
 use super::fault::{FaultProfile, TimeoutAction};
 use super::hist::CountDistribution;
 use super::instance::{FunctionInstance, InstanceId, InstanceState};
@@ -112,17 +114,25 @@ impl Verdict {
 
 /// Destination for scheduled events. The core never owns the future event
 /// list: the scale-per-request and concurrency-value simulators drive a
-/// plain [`EventQueue`], while the fleet interleaves many engines on one
-/// function-tagged queue behind a per-call adapter.
+/// [`CalendarEventQueue`] (or the reference [`HeapEventQueue`]), while the
+/// fleet interleaves many engines on one function-tagged queue behind a
+/// per-call adapter.
 pub trait Scheduler {
     /// Schedule `event` at absolute simulation time `at`.
     fn schedule(&mut self, at: SimTime, event: Event);
 }
 
-impl Scheduler for EventQueue {
+impl Scheduler for HeapEventQueue {
     #[inline]
     fn schedule(&mut self, at: SimTime, event: Event) {
-        EventQueue::schedule(self, at, event);
+        HeapEventQueue::schedule(self, at, event);
+    }
+}
+
+impl Scheduler for CalendarEventQueue {
+    #[inline]
+    fn schedule(&mut self, at: SimTime, event: Event) {
+        CalendarEventQueue::schedule(self, at, event);
     }
 }
 
@@ -379,6 +389,12 @@ pub struct CoreParams {
     /// Pre-reserved capacity of the instance table (profiling-driven; see
     /// DESIGN.md §Perf).
     pub instance_capacity: usize,
+    /// Keep terminated instances resident in the arena. The
+    /// single-function simulators set this (their [`EngineCore::instances`]
+    /// accessor and tests inspect the full creation history); the fleet's
+    /// per-function engines clear it, so terminated slots are recycled and
+    /// resident memory is bounded by the peak live count, not total churn.
+    pub retain_instances: bool,
     /// Fault-injection profile ([`FaultProfile::disabled`] = the
     /// pre-fault engines, bit-identical).
     pub fault: FaultProfile,
@@ -399,7 +415,7 @@ pub struct EngineCore {
     /// order.
     pub rng: Rng,
     now: SimTime,
-    instances: Vec<FunctionInstance>,
+    instances: InstanceArena,
     router: Router,
     live_count: usize,
     /// Total requests in flight across all instances.
@@ -503,7 +519,7 @@ impl EngineCore {
             fault: p.fault,
             retry: p.retry,
             now: start,
-            instances: Vec::with_capacity(p.instance_capacity),
+            instances: InstanceArena::with_capacity(p.instance_capacity, p.retain_instances),
             router: Router::new(p.concurrency_value),
             live_count: 0,
             in_flight: 0,
@@ -579,10 +595,14 @@ impl EngineCore {
         &self.server_count_tw
     }
 
-    /// All instances ever created, indexed by `InstanceId.0`.
+    /// Materialized view of the resident instances, in creation order.
+    /// With retained storage (the single-function simulators) this is the
+    /// complete creation history, indexed by `InstanceId.0`; fleet engines
+    /// recycle terminated slots, so only live instances appear there.
+    /// Diagnostic / test surface — not the hot path.
     #[inline]
-    pub fn instances(&self) -> &[FunctionInstance] {
-        &self.instances
+    pub fn instances(&self) -> Vec<FunctionInstance> {
+        self.instances.materialize()
     }
 
     /// Current (live, busy-instance, warm-pool) counts — for invariant
@@ -679,11 +699,7 @@ impl EngineCore {
     // ------------------------------------------------------------ internals
 
     fn alloc_instance(&mut self, prewarmed: bool) -> InstanceId {
-        let id = InstanceId(self.instances.len() as u64);
-        let mut inst = FunctionInstance::cold_start(id, self.now);
-        inst.prewarmed = prewarmed;
-        self.instances.push(inst);
-        id
+        self.instances.alloc(self.now, prewarmed)
     }
 
     /// Push the current levels into the time-weighted accumulators.
@@ -803,12 +819,12 @@ impl EngineCore {
         if let Some(id) = self.router.take_newest() {
             // Warm start: newest instance with capacity.
             {
-                let inst = &mut self.instances[id.0 as usize];
-                if inst.in_flight == 0 {
-                    inst.start_warm(self.now);
+                let in_flight = self.instances.in_flight(id);
+                if in_flight == 0 {
+                    self.instances.start_warm(id, self.now);
                     self.busy_instances += 1;
                 }
-                inst.in_flight += 1;
+                self.instances.set_in_flight(id, in_flight + 1);
             }
             self.in_flight += 1;
             let service = self.warm_service.sample(&mut self.rng);
@@ -859,7 +875,7 @@ impl EngineCore {
             // the cold service process (provisioning + service).
             hooks.on_cold_start();
             let id = self.alloc_instance(false);
-            self.instances[id.0 as usize].in_flight = 1;
+            self.instances.set_in_flight(id, 1);
             self.live_count += 1;
             self.in_flight += 1;
             self.busy_instances += 1;
@@ -1048,13 +1064,13 @@ impl EngineCore {
     ) {
         let became_idle;
         {
-            let inst = &mut self.instances[id.0 as usize];
-            debug_assert!(inst.in_flight > 0);
-            inst.in_flight -= 1;
-            became_idle = inst.in_flight == 0;
+            let in_flight = self.instances.in_flight(id);
+            debug_assert!(in_flight > 0);
+            self.instances.set_in_flight(id, in_flight - 1);
+            became_idle = in_flight == 1;
             if became_idle {
-                let busy = self.now.since(inst.busy_since).max(0.0);
-                inst.finish_request(self.now, busy);
+                let busy = self.now.since(self.instances.busy_since(id)).max(0.0);
+                self.instances.finish_request(id, self.now, busy);
                 if self.stats_started {
                     self.billed_seconds += busy;
                 }
@@ -1063,9 +1079,8 @@ impl EngineCore {
         }
         self.in_flight -= 1;
         if became_idle {
-            let inst = &mut self.instances[id.0 as usize];
-            inst.terminate(self.now);
-            let lifespan = inst.lifespan(self.now);
+            self.instances.terminate(id, self.now);
+            let lifespan = self.instances.lifespan(id, self.now);
             self.router.remove(id);
             self.live_count -= 1;
             hooks.on_expire();
@@ -1073,6 +1088,7 @@ impl EngineCore {
                 self.instances_expired += 1;
                 self.lifespan_stats.push(lifespan);
             }
+            self.instances.release_slot(id);
         } else {
             self.router.release(id, false);
         }
@@ -1132,23 +1148,23 @@ impl EngineCore {
         let became_idle;
         let gen;
         {
-            let inst = &mut self.instances[id.0 as usize];
-            debug_assert!(inst.in_flight > 0);
-            inst.in_flight -= 1;
-            became_idle = inst.in_flight == 0;
+            let in_flight = self.instances.in_flight(id);
+            debug_assert!(in_flight > 0);
+            self.instances.set_in_flight(id, in_flight - 1);
+            became_idle = in_flight == 1;
             if became_idle {
                 // The whole busy period is billed (the paper notes app
                 // init — included in the cold busy period here — is
                 // billed; slots of a concurrency-valued instance share the
                 // one period).
-                let busy = self.now.since(inst.busy_since).max(0.0);
-                gen = inst.finish_request(self.now, busy);
+                let busy = self.now.since(self.instances.busy_since(id)).max(0.0);
+                gen = self.instances.finish_request(id, self.now, busy);
                 if self.stats_started {
                     self.billed_seconds += busy;
                 }
                 self.busy_instances -= 1;
             } else {
-                gen = inst.generation;
+                gen = self.instances.generation(id);
             }
         }
         self.in_flight -= 1;
@@ -1169,13 +1185,18 @@ impl EngineCore {
         id: InstanceId,
         gen: u64,
     ) {
-        let inst = &mut self.instances[id.0 as usize];
-        if inst.generation != gen || inst.state != InstanceState::Idle {
+        // A recycled slot means the instance terminated long ago — the
+        // same verdict the old terminated-state check delivered.
+        if !self.instances.is_resident(id)
+            || self.instances.generation(id) != gen
+            || self.instances.state(id) != InstanceState::Idle
+        {
             return; // stale event (instance reused or already busy)
         }
-        inst.terminate(self.now);
-        let lifespan = inst.lifespan(self.now);
-        let wasted_prewarm = inst.prewarmed && inst.requests_served == 0;
+        self.instances.terminate(id, self.now);
+        let lifespan = self.instances.lifespan(id, self.now);
+        let wasted_prewarm =
+            self.instances.prewarmed(id) && self.instances.requests_served(id) == 0;
         self.router.remove(id);
         self.live_count -= 1;
         hooks.on_expire();
@@ -1186,6 +1207,7 @@ impl EngineCore {
                 self.wasted_prewarm_seconds += lifespan;
             }
         }
+        self.instances.release_slot(id);
         self.sync_levels();
         self.maybe_request_prewarm(sched, hooks);
     }
@@ -1206,10 +1228,10 @@ impl EngineCore {
             let Some(id) = self.router.pop_oldest_idle() else {
                 break;
             };
-            let inst = &mut self.instances[id.0 as usize];
-            inst.terminate(self.now);
-            let lifespan = inst.lifespan(self.now);
-            let wasted_prewarm = inst.prewarmed && inst.requests_served == 0;
+            self.instances.terminate(id, self.now);
+            let lifespan = self.instances.lifespan(id, self.now);
+            let wasted_prewarm =
+                self.instances.prewarmed(id) && self.instances.requests_served(id) == 0;
             self.live_count -= 1;
             hooks.on_expire();
             if self.stats_started {
@@ -1219,6 +1241,7 @@ impl EngineCore {
                     self.wasted_prewarm_seconds += lifespan;
                 }
             }
+            self.instances.release_slot(id);
             evicted += 1;
         }
         if evicted > 0 {
@@ -1293,16 +1316,7 @@ impl EngineCore {
         id: InstanceId,
     ) {
         self.prewarm_pending = self.prewarm_pending.saturating_sub(1);
-        let gen;
-        {
-            let inst = &mut self.instances[id.0 as usize];
-            debug_assert_eq!(inst.state, InstanceState::Initializing);
-            debug_assert_eq!(inst.in_flight, 0);
-            inst.state = InstanceState::Idle;
-            inst.idle_since = self.now;
-            inst.generation += 1;
-            gen = inst.generation;
-        }
+        let gen = self.instances.provisioning_done(id, self.now);
         self.router.insert_idle(id);
         let threshold = hooks.prewarm_keep_alive(self.now.as_secs(), &mut self.rng);
         sched.schedule(self.now.after(threshold), Event::Expiration { id, gen });
@@ -1324,15 +1338,9 @@ impl EngineCore {
         assert_eq!(self.now, SimTime::ZERO, "initial state must be set before run()");
         for &age in idle_ages {
             let id = self.alloc_instance(false);
-            let gen;
-            {
-                let inst = &mut self.instances[id.0 as usize];
-                inst.state = InstanceState::Idle;
-                // Created in the past; approximate lifespan bookkeeping.
-                inst.created_at = SimTime::ZERO;
-                inst.idle_since = SimTime::ZERO;
-                gen = inst.generation;
-            }
+            // Created in the past; approximate lifespan bookkeeping.
+            self.instances.seed_idle(id, SimTime::ZERO);
+            let gen = self.instances.generation(id);
             let threshold = hooks.keep_alive(0.0, &mut self.rng);
             let remaining = (threshold - age).max(0.0);
             self.router.insert_idle(id);
@@ -1341,11 +1349,7 @@ impl EngineCore {
         }
         for &rem in running_remaining {
             let id = self.alloc_instance(false);
-            {
-                let inst = &mut self.instances[id.0 as usize];
-                inst.state = InstanceState::Running;
-                inst.in_flight = 1;
-            }
+            self.instances.seed_running(id);
             self.live_count += 1;
             self.in_flight += 1;
             self.busy_instances += 1;
@@ -1454,6 +1458,7 @@ mod tests {
             concurrency_value: concurrency,
             prewarm_lead,
             instance_capacity: 16,
+            retain_instances: true,
             fault: FaultProfile::disabled(),
             retry: RetryPolicy::none(),
         })
@@ -1512,7 +1517,7 @@ mod tests {
     #[test]
     fn cold_warm_expire_lifecycle_with_direct_core() {
         let mut core = mk_core(1, 0.0);
-        let mut q = EventQueue::new();
+        let mut q = CalendarEventQueue::new();
         let mut hooks = Fixed(10.0);
         // Arrival at t=5: cold start (service 2 s), departs at 7, expires
         // at 17.
@@ -1558,7 +1563,7 @@ mod tests {
     #[test]
     fn prewarm_provisions_ahead_of_prediction() {
         let mut core = mk_core(1, 3.0);
-        let mut q = EventQueue::new();
+        let mut q = CalendarEventQueue::new();
         let mut hooks = PredictAt(30.0);
         // Cold start at t=5 -> departs 7 -> expires 8 (keep-alive 1 s) ->
         // predicted arrival 30 -> Provision at 27 -> done at 30.
@@ -1620,7 +1625,7 @@ mod tests {
             if observe {
                 core.set_observer(Observer::recording(0, 5.0));
             }
-            let mut q = EventQueue::new();
+            let mut q = CalendarEventQueue::new();
             let mut hooks = Fixed(10.0);
             core.set_now(SimTime::from_secs(5.0));
             core.sample_tick(None);
@@ -1663,7 +1668,7 @@ mod tests {
     #[test]
     fn prewarm_disabled_at_zero_lead() {
         let mut core = mk_core(1, 0.0);
-        let mut q = EventQueue::new();
+        let mut q = CalendarEventQueue::new();
         let mut hooks = PredictAt(30.0);
         core.set_now(SimTime::from_secs(5.0));
         core.handle_arrival(&mut q, &mut hooks);

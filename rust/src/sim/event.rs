@@ -1,7 +1,7 @@
 //! Discrete-event engine: the future event list.
 //!
-//! A classic binary-heap future-event list with two SimFaaS-specific
-//! features:
+//! Two interchangeable future-event lists live behind the [`EventQueue`]
+//! trait, with two SimFaaS-specific features shared by both:
 //!
 //! * **Deterministic tie-breaking** — events at equal times pop in insertion
 //!   order (a monotone sequence number), so runs are bit-reproducible.
@@ -10,7 +10,14 @@
 //!   Reusing the instance must cancel its pending expiration; instead of an
 //!   O(n) heap removal we tag expiration events with the instance's
 //!   *generation* counter and drop stale ones on pop (lazy cancellation).
+//!
+//! [`HeapEventQueue`] is the classic binary heap (O(log n) per op);
+//! [`CalendarEventQueue`] wraps [`super::calendar::CalendarQueue`] for
+//! O(1) amortized scheduling on the hot path. Their pop sequences are
+//! identical by construction — the property tests below drive both under
+//! randomized interleavings and assert it.
 
+use super::calendar::CalendarQueue;
 use super::instance::InstanceId;
 use super::time::SimTime;
 use std::cmp::Ordering;
@@ -65,6 +72,26 @@ pub enum Event {
     Horizon,
 }
 
+/// The future-event-list contract shared by the heap and calendar
+/// implementations: schedule at absolute times, pop in `(time,
+/// insertion-order)` order, bit-identically across implementations.
+pub trait EventQueue {
+    /// Schedule `event` at absolute time `at`.
+    fn schedule(&mut self, at: SimTime, event: Event);
+    /// Pop the earliest event (ties in insertion order).
+    fn pop(&mut self) -> Option<(SimTime, Event)>;
+    /// Time of the next event without popping.
+    fn peek_time(&self) -> Option<SimTime>;
+    /// Number of pending events.
+    fn len(&self) -> usize;
+    /// Whether no events are pending.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Drop all pending events (the tie-break counter survives).
+    fn clear(&mut self);
+}
+
 #[derive(Debug, Clone)]
 struct Scheduled {
     at: SimTime,
@@ -95,20 +122,20 @@ impl PartialOrd for Scheduled {
     }
 }
 
-/// Future event list.
+/// Binary-heap future event list (the reference implementation).
 #[derive(Debug, Default)]
-pub struct EventQueue {
+pub struct HeapEventQueue {
     heap: BinaryHeap<Scheduled>,
     seq: u64,
 }
 
-impl EventQueue {
+impl HeapEventQueue {
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+        HeapEventQueue { heap: BinaryHeap::new(), seq: 0 }
     }
 
     pub fn with_capacity(cap: usize) -> Self {
-        EventQueue { heap: BinaryHeap::with_capacity(cap), seq: 0 }
+        HeapEventQueue { heap: BinaryHeap::with_capacity(cap), seq: 0 }
     }
 
     /// Schedule `event` at absolute time `at`.
@@ -147,57 +174,235 @@ impl EventQueue {
     }
 }
 
+impl EventQueue for HeapEventQueue {
+    #[inline]
+    fn schedule(&mut self, at: SimTime, event: Event) {
+        HeapEventQueue::schedule(self, at, event);
+    }
+    #[inline]
+    fn pop(&mut self) -> Option<(SimTime, Event)> {
+        HeapEventQueue::pop(self)
+    }
+    #[inline]
+    fn peek_time(&self) -> Option<SimTime> {
+        HeapEventQueue::peek_time(self)
+    }
+    #[inline]
+    fn len(&self) -> usize {
+        HeapEventQueue::len(self)
+    }
+    #[inline]
+    fn is_empty(&self) -> bool {
+        HeapEventQueue::is_empty(self)
+    }
+    fn clear(&mut self) {
+        HeapEventQueue::clear(self);
+    }
+}
+
+/// Calendar-queue future event list: the hot-path implementation used by
+/// the engines (O(1) amortized schedule/pop; see [`super::calendar`]).
+#[derive(Debug, Default)]
+pub struct CalendarEventQueue {
+    cal: CalendarQueue<Event>,
+}
+
+impl CalendarEventQueue {
+    pub fn new() -> Self {
+        CalendarEventQueue { cal: CalendarQueue::new() }
+    }
+
+    /// Queue sized for roughly `cap` concurrently pending events.
+    pub fn with_capacity(cap: usize) -> Self {
+        CalendarEventQueue { cal: CalendarQueue::with_capacity(cap) }
+    }
+
+    /// Schedule `event` at absolute time `at`.
+    #[inline]
+    pub fn schedule(&mut self, at: SimTime, event: Event) {
+        self.cal.push(at, event);
+    }
+
+    /// Pop the earliest event.
+    #[inline]
+    pub fn pop(&mut self) -> Option<(SimTime, Event)> {
+        self.cal.pop().map(|(at, _, ev)| (at, ev))
+    }
+
+    /// Time of the next event without popping (O(n); diagnostic use).
+    #[inline]
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.cal.peek_time()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.cal.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.cal.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.cal.clear();
+    }
+}
+
+impl EventQueue for CalendarEventQueue {
+    #[inline]
+    fn schedule(&mut self, at: SimTime, event: Event) {
+        CalendarEventQueue::schedule(self, at, event);
+    }
+    #[inline]
+    fn pop(&mut self) -> Option<(SimTime, Event)> {
+        CalendarEventQueue::pop(self)
+    }
+    #[inline]
+    fn peek_time(&self) -> Option<SimTime> {
+        CalendarEventQueue::peek_time(self)
+    }
+    #[inline]
+    fn len(&self) -> usize {
+        CalendarEventQueue::len(self)
+    }
+    #[inline]
+    fn is_empty(&self) -> bool {
+        CalendarEventQueue::is_empty(self)
+    }
+    fn clear(&mut self) {
+        CalendarEventQueue::clear(self);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::rng::{Rng, SplitMix64};
+
+    /// Run a contract check against both implementations.
+    fn on_both(check: impl Fn(&mut dyn EventQueue)) {
+        let mut heap = HeapEventQueue::new();
+        check(&mut heap);
+        let mut cal = CalendarEventQueue::new();
+        check(&mut cal);
+    }
 
     #[test]
     fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.schedule(SimTime::from_secs(3.0), Event::Arrival);
-        q.schedule(SimTime::from_secs(1.0), Event::Horizon);
-        q.schedule(SimTime::from_secs(2.0), Event::Departure(InstanceId(7)));
-        let (t1, e1) = q.pop().unwrap();
-        let (t2, e2) = q.pop().unwrap();
-        let (t3, e3) = q.pop().unwrap();
-        assert_eq!((t1.as_secs(), e1), (1.0, Event::Horizon));
-        assert_eq!((t2.as_secs(), e2), (2.0, Event::Departure(InstanceId(7))));
-        assert_eq!((t3.as_secs(), e3), (3.0, Event::Arrival));
-        assert!(q.pop().is_none());
+        on_both(|q| {
+            q.schedule(SimTime::from_secs(3.0), Event::Arrival);
+            q.schedule(SimTime::from_secs(1.0), Event::Horizon);
+            q.schedule(SimTime::from_secs(2.0), Event::Departure(InstanceId(7)));
+            let (t1, e1) = q.pop().unwrap();
+            let (t2, e2) = q.pop().unwrap();
+            let (t3, e3) = q.pop().unwrap();
+            assert_eq!((t1.as_secs(), e1), (1.0, Event::Horizon));
+            assert_eq!(
+                (t2.as_secs(), e2),
+                (2.0, Event::Departure(InstanceId(7)))
+            );
+            assert_eq!((t3.as_secs(), e3), (3.0, Event::Arrival));
+            assert!(q.pop().is_none());
+        });
     }
 
     #[test]
     fn equal_times_pop_in_insertion_order() {
-        let mut q = EventQueue::new();
-        let t = SimTime::from_secs(5.0);
-        for i in 0..100 {
-            q.schedule(t, Event::Departure(InstanceId(i)));
-        }
-        for i in 0..100 {
-            let (_, e) = q.pop().unwrap();
-            assert_eq!(e, Event::Departure(InstanceId(i)));
-        }
+        on_both(|q| {
+            let t = SimTime::from_secs(5.0);
+            for i in 0..100 {
+                q.schedule(t, Event::Departure(InstanceId(i)));
+            }
+            for i in 0..100 {
+                let (_, e) = q.pop().unwrap();
+                assert_eq!(e, Event::Departure(InstanceId(i)));
+            }
+        });
     }
 
     #[test]
     fn peek_does_not_remove() {
-        let mut q = EventQueue::new();
-        q.schedule(SimTime::from_secs(1.5), Event::Arrival);
-        assert_eq!(q.peek_time().unwrap().as_secs(), 1.5);
-        assert_eq!(q.len(), 1);
+        on_both(|q| {
+            q.schedule(SimTime::from_secs(1.5), Event::Arrival);
+            assert_eq!(q.peek_time().unwrap().as_secs(), 1.5);
+            assert_eq!(q.len(), 1);
+        });
     }
 
     #[test]
     fn interleaved_schedule_pop() {
-        let mut q = EventQueue::new();
-        q.schedule(SimTime::from_secs(10.0), Event::Arrival);
-        q.schedule(SimTime::from_secs(5.0), Event::Arrival);
-        let (t, _) = q.pop().unwrap();
-        assert_eq!(t.as_secs(), 5.0);
-        q.schedule(SimTime::from_secs(7.0), Event::Horizon);
-        let (t, e) = q.pop().unwrap();
-        assert_eq!((t.as_secs(), e), (7.0, Event::Horizon));
-        let (t, _) = q.pop().unwrap();
-        assert_eq!(t.as_secs(), 10.0);
+        on_both(|q| {
+            q.schedule(SimTime::from_secs(10.0), Event::Arrival);
+            q.schedule(SimTime::from_secs(5.0), Event::Arrival);
+            let (t, _) = q.pop().unwrap();
+            assert_eq!(t.as_secs(), 5.0);
+            q.schedule(SimTime::from_secs(7.0), Event::Horizon);
+            let (t, e) = q.pop().unwrap();
+            assert_eq!((t.as_secs(), e), (7.0, Event::Horizon));
+            let (t, _) = q.pop().unwrap();
+            assert_eq!(t.as_secs(), 10.0);
+        });
+    }
+
+    /// Property test (satellite): under randomized insert/pop
+    /// interleavings — including inserts into the past, dense ties, and
+    /// sparse far-future gaps — the calendar queue pops the exact
+    /// `(time, event)` sequence the binary heap does. Sequence numbers
+    /// advance in lockstep because both queues see the same schedule
+    /// calls in the same order.
+    #[test]
+    fn calendar_matches_heap_under_randomized_interleavings() {
+        for trial in 0..20u64 {
+            let mut rng = Rng::new(SplitMix64::new(0xCA1E_0DA8 ^ trial).next_u64());
+            let mut heap = HeapEventQueue::new();
+            let mut cal = CalendarEventQueue::new();
+            let mut clock = 0.0f64;
+            let mut next_id = 0u64;
+            for _ in 0..4000 {
+                let r = rng.uniform();
+                if r < 0.55 || heap.is_empty() {
+                    // Schedule: mostly near the clock, sometimes a dense
+                    // tie, sometimes far future, sometimes in the past.
+                    let u = rng.uniform();
+                    let at = if u < 0.2 {
+                        clock // exact tie pile-up
+                    } else if u < 0.8 {
+                        clock + rng.uniform() * 10.0
+                    } else if u < 0.9 {
+                        clock + rng.uniform() * 5000.0 // sparse far future
+                    } else {
+                        (clock - rng.uniform() * 3.0).max(0.0) // the past
+                    };
+                    let ev = match next_id % 3 {
+                        0 => Event::Arrival,
+                        1 => Event::Departure(InstanceId(next_id)),
+                        _ => Event::Expiration { id: InstanceId(next_id), gen: next_id },
+                    };
+                    next_id += 1;
+                    let t = SimTime::from_secs(at);
+                    heap.schedule(t, ev);
+                    cal.schedule(t, ev);
+                } else {
+                    let h = heap.pop();
+                    let c = cal.pop();
+                    assert_eq!(h, c, "trial {trial}: pop diverged");
+                    if let Some((t, _)) = h {
+                        clock = t.as_secs();
+                    }
+                }
+                assert_eq!(heap.len(), cal.len());
+            }
+            // Drain: the full remaining sequence must match too.
+            loop {
+                let h = heap.pop();
+                let c = cal.pop();
+                assert_eq!(h, c, "trial {trial}: drain diverged");
+                if h.is_none() {
+                    break;
+                }
+            }
+        }
     }
 }

@@ -11,6 +11,8 @@
 //! [`process::Process`] the monomorphic hot-path dispatch (DESIGN.md
 //! §Perf).
 
+pub mod arena;
+pub mod calendar;
 pub mod core;
 pub mod ensemble;
 pub mod event;
@@ -32,7 +34,9 @@ pub use ensemble::{
     derive_seeds, run_ensemble, run_indexed, run_par_ensemble, EnsembleOpts, EnsembleResults,
     EnsembleSummary, MetricCi,
 };
-pub use event::{Event, EventQueue};
+pub use arena::InstanceArena;
+pub use calendar::CalendarQueue;
+pub use event::{CalendarEventQueue, Event, EventQueue, HeapEventQueue};
 pub use fault::{DegradationWindow, FaultProfile, TimeoutAction};
 pub use hist::{CountDistribution, Histogram};
 pub use instance::{FunctionInstance, InstanceId, InstanceState};

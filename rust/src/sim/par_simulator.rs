@@ -23,10 +23,10 @@
 //! as before the refactor.
 
 use super::core::{ConfigExpiration, CoreParams, EngineCore};
-use super::event::{Event, EventQueue};
+use super::event::{CalendarEventQueue, Event};
 use super::instance::FunctionInstance;
 use super::results::SimResults;
-use super::simulator::SimConfig;
+use super::simulator::{expected_pending_events, SimConfig};
 use super::time::SimTime;
 use crate::workload::stream::ArrivalSource;
 
@@ -36,7 +36,7 @@ pub struct ParServerlessSimulator {
     cfg: SimConfig,
     pub concurrency_value: u32,
     core: EngineCore,
-    events: EventQueue,
+    events: CalendarEventQueue,
     hooks: ConfigExpiration,
 }
 
@@ -54,6 +54,7 @@ impl ParServerlessSimulator {
             concurrency_value,
             prewarm_lead: 0.0,
             instance_capacity: 1024,
+            retain_instances: true,
             fault: cfg.fault.clone(),
             retry: cfg.retry.clone(),
         });
@@ -63,7 +64,7 @@ impl ParServerlessSimulator {
         ParServerlessSimulator {
             concurrency_value,
             core,
-            events: EventQueue::with_capacity(4096),
+            events: CalendarEventQueue::with_capacity(expected_pending_events(&cfg)),
             hooks,
             cfg,
         }
@@ -126,8 +127,9 @@ impl ParServerlessSimulator {
         self.core.take_observer().and_then(crate::telemetry::Observer::into_recorder)
     }
 
-    /// All instances ever created (for capacity/lifecycle assertions).
-    pub fn instances(&self) -> &[FunctionInstance] {
+    /// All instances ever created (for capacity/lifecycle assertions),
+    /// materialized from the core's struct-of-arrays arena.
+    pub fn instances(&self) -> Vec<FunctionInstance> {
         self.core.instances()
     }
 

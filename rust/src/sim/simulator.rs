@@ -25,7 +25,7 @@
 //! Fig. 4 transient samples.
 
 use super::core::{ConfigExpiration, CoreParams, EngineCore, LifecycleHooks};
-use super::event::{Event, EventQueue};
+use super::event::{CalendarEventQueue, Event};
 use super::fault::FaultProfile;
 use super::instance::{FunctionInstance, InstanceId};
 use super::process::Process;
@@ -164,6 +164,31 @@ impl SimConfig {
     }
 }
 
+/// Expected number of concurrently *pending* events for a config: the
+/// queue's steady-state occupancy is roughly one completion per request
+/// in service plus one expiration per keep-alive window, i.e.
+/// `arrival_rate × (mean service + expiration threshold)`, plus the next
+/// arrival. Sizes [`CalendarEventQueue::with_capacity`] from the actual
+/// workload instead of a fixed constant; clamped so degenerate configs
+/// (unknown means, extreme rates) stay sane.
+pub(crate) fn expected_pending_events(cfg: &SimConfig) -> usize {
+    let gap = cfg.arrival.mean().unwrap_or(0.0);
+    let rate = if gap > 0.0 { 1.0 / gap } else { 0.0 };
+    let window = cfg.warm_service.mean().unwrap_or(1.0).max(0.0)
+        + cfg
+            .expiration_process
+            .as_ref()
+            .and_then(Process::mean)
+            .unwrap_or(cfg.expiration_threshold)
+            .max(0.0);
+    let est = rate * window;
+    if est.is_finite() && est > 0.0 {
+        (est as usize).clamp(1024, 1 << 20)
+    } else {
+        1024
+    }
+}
+
 /// A sampled point of the transient instance-count estimate.
 #[derive(Debug, Clone, Copy)]
 pub struct CountSample {
@@ -210,7 +235,7 @@ impl LifecycleHooks for SprHooks {
 pub struct ServerlessSimulator {
     cfg: SimConfig,
     core: EngineCore,
-    events: EventQueue,
+    events: CalendarEventQueue,
     hooks: SprHooks,
     samples: Vec<CountSample>,
     next_sample_at: SimTime,
@@ -224,6 +249,9 @@ impl ServerlessSimulator {
         // Pre-reserve hot storage: a Table-1-scale run allocates thousands
         // of instances and keeps a few thousand events in flight; growing
         // these Vecs inside the event loop shows up in profiles (§Perf).
+        // The event queue is sized from the config's own expected pending
+        // count (arrivals in flight + one expiration per live instance)
+        // rather than a fixed constant.
         let core = EngineCore::new(CoreParams {
             seed: cfg.seed,
             warm_service: cfg.warm_service.clone(),
@@ -234,6 +262,7 @@ impl ServerlessSimulator {
             concurrency_value: 1,
             prewarm_lead: 0.0,
             instance_capacity: 1024,
+            retain_instances: true,
             fault: cfg.fault.clone(),
             retry: cfg.retry.clone(),
         });
@@ -247,7 +276,7 @@ impl ServerlessSimulator {
         };
         ServerlessSimulator {
             core,
-            events: EventQueue::with_capacity(4096),
+            events: CalendarEventQueue::with_capacity(expected_pending_events(&cfg)),
             hooks,
             samples: Vec::new(),
             next_sample_at: SimTime::from_secs(cfg.skip_initial.max(0.0)),
@@ -383,8 +412,9 @@ impl ServerlessSimulator {
         &self.samples
     }
 
-    /// All instances ever created (for lifecycle analysis tooling).
-    pub fn instances(&self) -> &[FunctionInstance] {
+    /// All instances ever created (for lifecycle analysis tooling),
+    /// materialized from the core's struct-of-arrays arena.
+    pub fn instances(&self) -> Vec<FunctionInstance> {
         self.core.instances()
     }
 

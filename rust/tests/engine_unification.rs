@@ -314,6 +314,7 @@ fn single_prewarm_in_flight_covers_the_whole_lead_window() {
         policy: PolicySpec::custom("predict-forty", || Box::new(PredictForty)),
         fleet_max_concurrency: None,
         cluster: None,
+        capacity_domains: 1,
         horizon: 50.0,
         skip_initial: 0.0,
         threads: 1,

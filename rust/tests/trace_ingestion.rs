@@ -88,6 +88,7 @@ fn streaming_fleet_is_bit_identical_to_eager_materialization() {
         policy: PolicySpec::fixed(300.0),
         fleet_max_concurrency: None,
         cluster: None,
+        capacity_domains: 1,
         horizon,
         skip_initial: 0.0,
         threads: 0,

@@ -3,6 +3,7 @@
 baseline.
 
 Usage: check_bench_regression.py BASELINE.json FRESH.json [--tolerance 0.25]
+       [--require CASE ...]
 
 Both files are BENCH_engine.json records written by
 `benches/engine_throughput.rs` ({"events_per_sec": {case: rate, ...}}).
@@ -10,6 +11,11 @@ Every case present in the baseline must exist in the fresh record and reach
 at least (1 - tolerance) x the baseline rate. Cases only present in the
 fresh record are reported but never fail (new bench cases land before their
 baseline does).
+
+--require CASE (repeatable) additionally fails the gate when CASE is absent
+from the fresh record even if the baseline no longer lists it — use it to
+pin cases that must keep being measured (a bench refactor that silently
+drops a case would otherwise pass once its baseline entry is pruned).
 """
 
 import argparse
@@ -46,6 +52,13 @@ def main() -> int:
         default=0.25,
         help="allowed fractional regression vs the baseline (default 0.25)",
     )
+    ap.add_argument(
+        "--require",
+        action="append",
+        default=[],
+        metavar="CASE",
+        help="fail if CASE is missing from the fresh record (repeatable)",
+    )
     args = ap.parse_args()
 
     baseline = load_metrics(args.baseline)
@@ -77,6 +90,8 @@ def main() -> int:
             )
     for case in sorted(set(fresh) - set(baseline)):
         print(f"{case}: {fresh[case]:.3g} events/s (no baseline yet)")
+    for case in sorted(set(args.require) - set(fresh)):
+        failures.append(f"{case}: required case missing from {args.fresh}")
 
     if failures:
         print("\nbench regression gate FAILED:", file=sys.stderr)
