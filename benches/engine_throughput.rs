@@ -11,6 +11,7 @@
 mod harness;
 
 use simfaas::cluster::{ClusterConfig, SchedulerSpec};
+use simfaas::control::ControllerSpec;
 use simfaas::fleet::{FleetConfig, FleetResults, PolicySpec};
 use simfaas::output::JsonValue;
 use simfaas::runtime::{Engine, PayloadKind};
@@ -334,6 +335,41 @@ fn main() {
         shard_res.aggregate.rejected_requests
     );
     rates.set("capped_fleet_events_per_sec", eps_shard);
+
+    // --- autoscaling control overhead: target-tracking on the 500-fn mix ---
+    // The control loop's hot path: the same 500-function mix behind a
+    // tight gate cap with a target-tracking controller ticking every 10
+    // simulated seconds. Thread invariance is asserted untimed first (the
+    // controller lives with the domain's single-queue loop), then the
+    // timed runs measure the per-tick observe/actuate overhead on top of
+    // the coupled capped path.
+    let control_spec = ControllerSpec::target_tracking(0.7).with_tick(10.0).with_bounds(20, 400);
+    let control_cfg = fleet_cfg.clone().with_fleet_cap(100).with_controller(control_spec);
+    let ref_ctl = fleet_digest(&control_cfg.clone().with_threads(1).run());
+    for threads in [2, 8] {
+        let d = fleet_digest(&control_cfg.clone().with_threads(threads).run());
+        assert_eq!(d, ref_ctl, "controlled fleet output depends on thread count ({threads})");
+    }
+    let (res_ctl, ctl_res) =
+        harness::bench("control/target_tracking_500fn", 3, || control_cfg.run());
+    assert_eq!(fleet_digest(&ctl_res), ref_ctl, "all-cores controlled run diverged");
+    let report = ctl_res.control.as_ref().expect("control report");
+    assert!(report.ticks > 0, "controller never ticked");
+    assert!(report.scale_up_events + report.scale_down_events > 0, "controller never actuated");
+    let ctl_events = ctl_res.aggregate.total_requests * 2
+        + ctl_res.aggregate.instances_expired
+        + report.ticks as u64;
+    let eps_ctl = ctl_events as f64 / res_ctl.mean_s;
+    println!(
+        "  -> {:.2} M events/s under control ({} ticks, +{}/-{} scale events, cap {} -> {})",
+        eps_ctl / 1e6,
+        report.ticks,
+        report.scale_up_events,
+        report.scale_down_events,
+        100,
+        report.final_capacity
+    );
+    rates.set("control_events_per_sec", eps_ctl);
 
     json.set("events_per_sec", rates);
     let path = std::env::var("SIMFAAS_BENCH_JSON")

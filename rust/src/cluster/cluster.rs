@@ -131,6 +131,25 @@ impl ClusterConfig {
         }
         Ok(())
     }
+
+    /// Report-line warnings for drain windows that cannot complete within
+    /// the run horizon: a window still open at the horizon cordons its
+    /// host for the rest of the run, silently leaking capacity. Not a
+    /// [`validate`](Self::validate) error — such specs were always legal
+    /// — but worth a line in the report.
+    pub fn drain_horizon_warnings(&self, horizon: f64) -> Vec<String> {
+        self.drains
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.start < horizon && d.end > horizon)
+            .map(|(i, d)| {
+                format!(
+                    "warning: drains[{i}] on host {} ([{:.0}, {:.0}) s) never completes within the {:.0} s horizon; the cordoned host leaks capacity for the rest of the run",
+                    d.host, d.start, d.end, horizon
+                )
+            })
+            .collect()
+    }
 }
 
 /// Per-run cluster report: placement failures, forced evictions, and
@@ -158,6 +177,9 @@ pub struct ClusterState {
     pending: Option<usize>,
     /// During forced eviction: release placements from this host.
     pinned_release: Option<usize>,
+    /// Hosts retired by an autoscaling controller: a permanent cordon
+    /// that survives drain-window recomputation (parallel to `hosts`).
+    retired: Vec<bool>,
     /// Memory footprint (MB) of the most recent failed placement;
     /// taken by the pressure-relief sweep.
     pressure: Option<f64>,
@@ -178,6 +200,7 @@ impl ClusterState {
             allocations: vec![Vec::new(); functions],
             pending: None,
             pinned_release: None,
+            retired: vec![false; config.hosts],
             pressure: None,
             now: 0.0,
             placement_failures: 0,
@@ -224,17 +247,91 @@ impl ClusterState {
         }
         let mut newly = Vec::new();
         for host in 0..self.hosts.len() {
-            let cordon = self
-                .config
-                .drains
-                .iter()
-                .any(|d| d.host == host && d.start <= now && now < d.end);
+            // Controller retirement is a permanent cordon: OR it in so the
+            // per-window recomputation cannot silently uncordon the host.
+            let cordon = self.retired[host]
+                || self
+                    .config
+                    .drains
+                    .iter()
+                    .any(|d| d.host == host && d.start <= now && now < d.end);
             if cordon && !self.hosts[host].is_cordoned() {
                 newly.push(host);
             }
             self.hosts[host].set_cordoned(cordon);
         }
         newly
+    }
+
+    /// Advance the accounting clock without recomputing drain cordons.
+    /// Control ticks use this: recomputing windows at tick times would
+    /// move cordon boundaries off the event timeline and break the
+    /// inert-controller bit-identity contract.
+    pub fn set_now(&mut self, now: f64) {
+        self.now = now;
+    }
+
+    /// Add one freshly provisioned host (controller scale-out). It joins
+    /// warm and uncordoned; its time-averaged utilization integrates from
+    /// zero over the pre-provisioning span, which slightly under-reports
+    /// late-added hosts in [`usage`](Self::usage) — deterministic, and
+    /// consistent with "the host did not exist yet".
+    pub fn add_host(&mut self) {
+        self.hosts
+            .push(Host::new(self.config.host_memory_mb, self.config.host_cpus));
+        self.retired.push(false);
+    }
+
+    /// Retire `host` (controller scale-in): a permanent cordon — no new
+    /// placements; busy containers drain naturally through the same
+    /// cordon/evict machinery as drain windows. Never un-retired.
+    pub fn retire_host(&mut self, host: usize) {
+        self.retired[host] = true;
+        self.hosts[host].set_cordoned(true);
+    }
+
+    /// Retirement target for controller scale-in: the non-retired,
+    /// non-cordoned host with the fewest containers (ties → highest
+    /// index, so late-added hosts retire first). `None` when every host
+    /// is already retired or cordoned.
+    pub fn retire_target(&self) -> Option<usize> {
+        let mut best: Option<(usize, u32)> = None;
+        for (i, h) in self.hosts.iter().enumerate() {
+            if self.retired[i] || h.is_cordoned() {
+                continue;
+            }
+            match best {
+                Some((_, count)) if count < h.containers() => {}
+                _ => best = Some((i, h.containers())),
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Hosts not retired by the controller (the controller's capacity
+    /// unit; drain-window cordons are temporary and still count).
+    pub fn active_hosts(&self) -> u64 {
+        self.retired.iter().filter(|&&r| !r).count() as u64
+    }
+
+    /// Instantaneous memory utilization across non-retired hosts — the
+    /// cluster backend's observed control signal. 0 for an empty or
+    /// unbounded cluster.
+    pub fn memory_utilization(&self) -> f64 {
+        let mut used = 0.0;
+        let mut total = 0.0;
+        for (host, &retired) in self.hosts.iter().zip(&self.retired) {
+            if retired || !host.memory_mb().is_finite() {
+                continue;
+            }
+            used += host.memory_mb() - host.free_memory_mb();
+            total += host.memory_mb();
+        }
+        if total > 0.0 {
+            (used / total).max(0.0)
+        } else {
+            0.0
+        }
     }
 
     /// Ask the scheduler for a host with room for one container of
@@ -478,6 +575,71 @@ mod tests {
         // Only host 0 has containers, so it is the only candidate.
         assert_eq!(st.pressure_target(), Some(0));
         assert_eq!(st.functions_on(0), vec![0, 1]);
+    }
+
+    #[test]
+    fn drain_horizon_warnings_flag_unfinished_windows() {
+        let cfg = ClusterConfig::new(2, 1024.0, 32.0)
+            .with_drain(0, 10.0, 20.0)
+            .with_drain(1, 50.0, 500.0);
+        assert!(cfg.drain_horizon_warnings(1000.0).is_empty());
+        let warns = cfg.drain_horizon_warnings(100.0);
+        assert_eq!(warns.len(), 1);
+        assert!(warns[0].contains("drains[1]") && warns[0].contains("host 1"), "{}", warns[0]);
+        // A window entirely after the horizon never opens, so it cannot
+        // leak a cordon — no warning.
+        assert!(cfg.drain_horizon_warnings(40.0).is_empty());
+    }
+
+    #[test]
+    fn retirement_is_a_permanent_cordon() {
+        let cfg = ClusterConfig::new(2, 1024.0, 32.0).with_drain(0, 10.0, 20.0);
+        let mut st = ClusterState::new(&cfg, 1);
+        st.retire_host(1);
+        assert!(st.hosts()[1].is_cordoned());
+        assert_eq!(st.active_hosts(), 1);
+        // The drain-window recomputation must not uncordon host 1.
+        st.advance_to(15.0);
+        assert!(st.hosts()[1].is_cordoned());
+        st.advance_to(25.0);
+        assert!(st.hosts()[1].is_cordoned(), "retired survives window close");
+        assert!(!st.hosts()[0].is_cordoned(), "drain window did close");
+    }
+
+    #[test]
+    fn added_hosts_accept_placements_and_retire_targets_prefer_idle() {
+        let cfg = ClusterConfig::new(1, 128.0, 32.0);
+        let mut st = ClusterState::new(&cfg, 1);
+        assert!(st.admit(128.0));
+        st.commit(0, 128.0);
+        assert!(!st.admit(64.0), "single host is full");
+        st.take_pressure();
+        st.add_host();
+        assert_eq!(st.active_hosts(), 2);
+        assert!(st.admit(64.0), "new host has room");
+        st.commit(0, 64.0);
+        // Fewest containers wins; ties go to the highest index.
+        assert_eq!(st.retire_target(), Some(1));
+        st.add_host();
+        assert_eq!(st.retire_target(), Some(2), "empty late host preferred");
+        st.retire_host(2);
+        assert_eq!(st.retire_target(), Some(1));
+        st.retire_host(1);
+        st.retire_host(0);
+        assert_eq!(st.retire_target(), None);
+        assert_eq!(st.active_hosts(), 0);
+    }
+
+    #[test]
+    fn memory_utilization_skips_retired_hosts() {
+        let cfg = ClusterConfig::new(2, 128.0, 32.0);
+        let mut st = ClusterState::new(&cfg, 1);
+        assert!(st.admit(128.0));
+        st.commit(0, 128.0); // host 0 full
+        assert!((st.memory_utilization() - 0.5).abs() < 1e-12);
+        st.retire_host(1);
+        assert!((st.memory_utilization() - 1.0).abs() < 1e-12);
+        assert_eq!(ClusterState::new(&ClusterConfig::unbounded(2), 1).memory_utilization(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! The `Controller` trait and its three shipped implementations.
+//!
+//! A controller is a pure function of its own state and the per-tick
+//! observation — it draws no RNG and sees no wall-clock, so a controlled
+//! run is reproducible from `(spec, workload, seed)` alone.
+
+/// A feedback controller over one capacity domain. Called once per
+/// `Event::ControlTick` with the observed utilization signal and the
+/// current capacity; returns the requested capacity delta (positive =
+/// scale out). The caller clamps the result into the domain's
+/// `[min, max]` bounds — cooldown/step bookkeeping inside the controller
+/// is based on the *requested* move, not the clamped one.
+pub trait Controller: Send {
+    /// The signal value the controller steers toward (used for error
+    /// reporting and settling-band analysis).
+    fn setpoint(&self) -> f64;
+
+    /// Observe `observed` (utilization signal) at simulated time `now`
+    /// with `capacity` units currently provisioned; return the requested
+    /// capacity delta.
+    fn actuate(&mut self, now: f64, observed: f64, capacity: u64) -> i64;
+}
+
+/// Hold a target utilization ratio: each tick computes the capacity that
+/// would bring the observed signal back to `target`
+/// (`ceil(capacity * observed / target)`), moves at most `max_step` units,
+/// and gates scale-in behind a cooldown since the last scale activity so
+/// transient dips don't flap the fleet. `max_step == 0` is inert.
+pub struct TargetTracking {
+    target: f64,
+    cooldown: f64,
+    max_step: u32,
+    last_scale: f64,
+}
+
+impl TargetTracking {
+    /// Build a target-tracking controller steering toward `target`
+    /// utilization, with `cooldown` simulated seconds between scale-ins
+    /// and at most `max_step` capacity units moved per tick.
+    pub fn new(target: f64, cooldown: f64, max_step: u32) -> TargetTracking {
+        TargetTracking { target, cooldown, max_step, last_scale: f64::NEG_INFINITY }
+    }
+}
+
+impl Controller for TargetTracking {
+    fn setpoint(&self) -> f64 {
+        self.target
+    }
+
+    fn actuate(&mut self, now: f64, observed: f64, capacity: u64) -> i64 {
+        let cap = capacity.max(1) as f64;
+        let desired = (cap * observed / self.target).ceil();
+        let step = i64::from(self.max_step);
+        let mut delta = (desired as i64 - capacity as i64).clamp(-step, step);
+        if delta < 0 && now - self.last_scale < self.cooldown {
+            delta = 0; // scale-in cooldown: hold until the fleet settles
+        }
+        if delta != 0 {
+            self.last_scale = now;
+        }
+        delta
+    }
+}
+
+/// Classic PID over the utilization error (`observed - target`): the
+/// normalized output `kp*e + ki*∫e + kd*de/dt` is clamped to `[-1, 1]`
+/// and scaled by the current capacity, so a saturated controller at most
+/// doubles or halves the fleet per tick. Anti-windup clamps the integral
+/// so the I-term alone cannot exceed the output clamp. All gains 0 is
+/// inert.
+pub struct Pid {
+    kp: f64,
+    ki: f64,
+    kd: f64,
+    target: f64,
+    integral: f64,
+    prev_error: Option<f64>,
+    prev_t: f64,
+}
+
+impl Pid {
+    /// Build a PID controller with the given gains steering toward
+    /// `target` utilization.
+    pub fn new(kp: f64, ki: f64, kd: f64, target: f64) -> Pid {
+        Pid { kp, ki, kd, target, integral: 0.0, prev_error: None, prev_t: 0.0 }
+    }
+
+    fn windup_limit(&self) -> f64 {
+        // Keep |ki * integral| <= 1 (the output clamp); with ki == 0 the
+        // integral is pinned at 0 so it cannot accumulate unobserved.
+        if self.ki > 0.0 { 1.0 / self.ki } else { 0.0 }
+    }
+}
+
+impl Controller for Pid {
+    fn setpoint(&self) -> f64 {
+        self.target
+    }
+
+    fn actuate(&mut self, now: f64, observed: f64, capacity: u64) -> i64 {
+        let error = observed - self.target;
+        let dt = (now - self.prev_t).max(0.0);
+        let limit = self.windup_limit();
+        self.integral = (self.integral + error * dt).clamp(-limit, limit);
+        let derivative = match self.prev_error {
+            Some(prev) if dt > 0.0 => (error - prev) / dt,
+            _ => 0.0,
+        };
+        self.prev_error = Some(error);
+        self.prev_t = now;
+        let output = (self.kp * error + self.ki * self.integral + self.kd * derivative)
+            .clamp(-1.0, 1.0);
+        (output * capacity.max(1) as f64).round() as i64
+    }
+}
+
+/// Threshold ladder (the AWS-style baseline): above `high` add `step`
+/// units, below `low` remove `step`, otherwise hold. No memory, no
+/// cooldown — deliberately the simplest (and most oscillation-prone)
+/// policy, which is exactly what makes it a useful comparison baseline.
+pub struct StepPolicy {
+    low: f64,
+    high: f64,
+    step: u32,
+}
+
+impl StepPolicy {
+    /// Build a step policy holding the signal inside `[low, high]`,
+    /// moving `step` capacity units per breach.
+    pub fn new(low: f64, high: f64, step: u32) -> StepPolicy {
+        StepPolicy { low, high, step }
+    }
+}
+
+impl Controller for StepPolicy {
+    fn setpoint(&self) -> f64 {
+        (self.low + self.high) / 2.0
+    }
+
+    fn actuate(&mut self, _now: f64, observed: f64, _capacity: u64) -> i64 {
+        if observed > self.high {
+            i64::from(self.step)
+        } else if observed < self.low {
+            -i64::from(self.step)
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn target_tracking_steps_toward_target_with_limits() {
+        let mut c = TargetTracking::new(0.5, 60.0, 2);
+        // observed 1.0 at cap 10 -> desired 20, clamped to +2.
+        assert_eq!(c.actuate(10.0, 1.0, 10), 2);
+        // observed 0.1 at cap 10 -> desired 2, clamped to -2, but the
+        // scale at t=10 started the cooldown: held at t=20...
+        assert_eq!(c.actuate(20.0, 0.1, 12), 0);
+        // ...and released once the cooldown has elapsed.
+        assert_eq!(c.actuate(80.0, 0.1, 12), -2);
+        // On target: hold (desired == capacity).
+        assert_eq!(c.actuate(200.0, 0.5, 10), 0);
+    }
+
+    #[test]
+    fn target_tracking_recovers_from_zero_capacity() {
+        let mut c = TargetTracking::new(0.7, 0.0, 4);
+        // capacity clamps to >=1 in the desired computation, so a fully
+        // loaded signal still requests scale-out instead of sticking at 0.
+        assert!(c.actuate(10.0, 3.0, 0) > 0);
+    }
+
+    #[test]
+    fn pid_output_is_clamped_and_anti_windup_bounds_integral() {
+        let mut c = Pid::new(10.0, 0.5, 0.0, 0.5);
+        // Huge proportional error: output clamps to +1.0 * capacity.
+        assert_eq!(c.actuate(10.0, 10.0, 8), 8);
+        // Long saturation cannot wind the integral past 1/ki.
+        for i in 1..100 {
+            c.actuate(10.0 + i as f64 * 10.0, 10.0, 8);
+        }
+        assert!(c.integral <= 1.0 / 0.5 + 1e-9);
+        // Error flips sign: the bounded integral lets the output follow.
+        assert!(c.actuate(2000.0, 0.0, 8) < 0);
+    }
+
+    #[test]
+    fn pid_zero_gains_is_inert() {
+        let mut c = Pid::new(0.0, 0.0, 0.0, 0.7);
+        for i in 1..50 {
+            assert_eq!(c.actuate(i as f64 * 5.0, (i % 3) as f64, 16), 0);
+        }
+    }
+
+    #[test]
+    fn step_policy_ladder() {
+        let mut c = StepPolicy::new(0.3, 0.8, 3);
+        assert_eq!(c.actuate(10.0, 0.9, 5), 3);
+        assert_eq!(c.actuate(20.0, 0.1, 5), -3);
+        assert_eq!(c.actuate(30.0, 0.5, 5), 0);
+        assert!((c.setpoint() - 0.55).abs() < 1e-12);
+    }
+}

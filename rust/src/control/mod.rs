@@ -1,0 +1,158 @@
+//! Autoscaling control subsystem: feedback controllers that move fleet
+//! capacity at simulated time (DESIGN.md §Control).
+//!
+//! Every capacity knob elsewhere in the repo is static for the whole run;
+//! this module closes the loop. A [`Controller`] is observed and actuated
+//! on a fixed simulated-time tick (`Event::ControlTick` through
+//! `sim::core`'s event queue): each tick it sees the backend's utilization
+//! signal and current capacity and returns a capacity delta, which the
+//! fleet applies to one of two backends through the `ScalableCapacity`
+//! seam in `fleet`:
+//!
+//! * the flat `FleetGate` cap — raised/lowered instantly (lowering never
+//!   kills busy instances, it just stops admitting), or
+//! * the cluster host set — scale-out adds warm hosts after the spec's
+//!   provisioning delay; scale-in retires hosts through the existing
+//!   drain-window cordon/evict machinery.
+//!
+//! Three implementations ship behind the serializable [`ControllerSpec`]
+//! (`parse`/`as_str`/JSON round-trip like `cluster::SchedulerSpec`):
+//! [`TargetTracking`], [`Pid`], and [`StepPolicy`].
+//!
+//! **Determinism contract** (the same shape as every prior layer): with no
+//! controller configured, no tick is ever scheduled and the engines are
+//! bit-identical to the uncontrolled run. A configured controller lives
+//! with its capacity domain's single-queue loop — ticks are intercepted
+//! before any engine sees them — so controlled runs are thread-count- and
+//! (for fixed K) domain-count-invariant, and *inert* controllers
+//! ([`TargetTracking`] with step limit 0, [`Pid`] with all gains 0) never
+//! actuate and reproduce the uncontrolled engines bit-for-bit
+//! (`tests/engine_unification.rs`). With K > 1 capacity domains each
+//! domain runs its own controller instance over a proportional share of
+//! the min/max capacity bounds, exactly like cap striping.
+
+pub mod controller;
+pub mod report;
+pub mod spec;
+
+pub use controller::{Controller, Pid, StepPolicy, TargetTracking};
+pub use report::{ControlReport, ControlSample};
+pub use spec::{ControllerKind, ControllerSpec};
+
+/// Per-domain runtime control state: the controller instance, its striped
+/// capacity bounds, and the samples it records. Lives inside the domain's
+/// single-queue run loop (one per capacity domain), which is what makes
+/// controlled runs thread-count-invariant.
+pub struct ControlLoop {
+    controller: Box<dyn Controller>,
+    domain: u32,
+    /// Simulated seconds between control ticks.
+    pub tick_interval: f64,
+    /// Host provisioning delay for the cluster backend (gate actuation is
+    /// instant — see DESIGN.md §Control's actuation-delay model).
+    pub provision_delay: f64,
+    min_capacity: u64,
+    max_capacity: u64,
+    /// One record per tick, in tick order (per-domain; the fleet
+    /// concatenates domains in domain order).
+    pub samples: Vec<ControlSample>,
+}
+
+impl ControlLoop {
+    /// Build domain `domain` of `domains`' control state. Capacity bounds
+    /// stripe proportionally (`x / K`, remainder to the lowest domains) —
+    /// the same split as the fleet cap itself.
+    pub fn new(spec: &ControllerSpec, domain: usize, domains: usize) -> ControlLoop {
+        let k = domains.max(1) as u64;
+        let d = domain as u64;
+        let stripe = |x: u64| x / k + u64::from(d < x % k);
+        let min = stripe(spec.min_capacity);
+        let max = if spec.max_capacity == 0 { u64::MAX } else { stripe(spec.max_capacity) };
+        ControlLoop {
+            controller: spec.kind.build(),
+            domain: domain as u32,
+            tick_interval: spec.tick_interval,
+            provision_delay: spec.provision_delay,
+            min_capacity: min,
+            max_capacity: max.max(min),
+            samples: Vec::new(),
+        }
+    }
+
+    /// Simulated time of the first tick (one interval in — nothing has
+    /// happened at t = 0).
+    pub fn first_tick(&self) -> f64 {
+        self.tick_interval
+    }
+
+    /// Run one control tick: feed the controller the observed utilization
+    /// and current capacity, clamp its requested move into the domain's
+    /// `[min, max]` bounds, record a [`ControlSample`], and return the new
+    /// capacity target (equal to `capacity` when the controller holds).
+    pub fn tick(&mut self, now: f64, observed: f64, capacity: u64) -> u64 {
+        let delta = self.controller.actuate(now, observed, capacity);
+        let moved = if delta >= 0 {
+            capacity.saturating_add(delta as u64)
+        } else {
+            capacity.saturating_sub(delta.unsigned_abs())
+        };
+        let desired = moved.clamp(self.min_capacity, self.max_capacity);
+        self.samples.push(ControlSample {
+            domain: self.domain,
+            t: now,
+            observed,
+            error: observed - self.controller.setpoint(),
+            actuation: desired as i64 - capacity as i64,
+            capacity: desired,
+        });
+        desired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_stripe_proportionally_across_domains() {
+        let spec = ControllerSpec::parse("target:0.7;min=3;max=10").unwrap();
+        let mins: Vec<u64> = (0..4).map(|d| ControlLoop::new(&spec, d, 4).min_capacity).collect();
+        let maxs: Vec<u64> = (0..4).map(|d| ControlLoop::new(&spec, d, 4).max_capacity).collect();
+        assert_eq!(mins, vec![1, 1, 1, 0]);
+        assert_eq!(maxs, vec![3, 3, 2, 2]);
+        // Unbounded max stays unbounded in every domain.
+        let spec = ControllerSpec::parse("target:0.7").unwrap();
+        assert_eq!(ControlLoop::new(&spec, 2, 4).max_capacity, u64::MAX);
+    }
+
+    #[test]
+    fn tick_clamps_into_bounds_and_records_samples() {
+        let spec = ControllerSpec::parse("step:0.2,0.8,5;min=2;max=6").unwrap();
+        let mut ctl = ControlLoop::new(&spec, 0, 1);
+        // Over the high threshold: +5 requested, clamped to max 6.
+        assert_eq!(ctl.tick(10.0, 0.95, 4), 6);
+        // Under the low threshold: -5 requested, clamped to min 2.
+        assert_eq!(ctl.tick(20.0, 0.05, 6), 2);
+        // In band: hold.
+        assert_eq!(ctl.tick(30.0, 0.5, 2), 2);
+        assert_eq!(ctl.samples.len(), 3);
+        assert_eq!(ctl.samples[0].actuation, 2);
+        assert_eq!(ctl.samples[1].actuation, -4);
+        assert_eq!(ctl.samples[2].actuation, 0);
+        assert_eq!(ctl.samples[2].capacity, 2);
+        assert!((ctl.samples[0].error - 0.45).abs() < 1e-12, "setpoint is the band midpoint");
+    }
+
+    #[test]
+    fn inert_controllers_never_actuate() {
+        for s in ["target:0.7,60,0", "pid:0,0,0,0.7"] {
+            let spec = ControllerSpec::parse(s).unwrap();
+            let mut ctl = ControlLoop::new(&spec, 0, 1);
+            for i in 1..=50u64 {
+                let observed = (i % 7) as f64 / 3.0; // wildly out of band
+                assert_eq!(ctl.tick(i as f64 * 10.0, observed, 8), 8, "{s}");
+            }
+            assert!(ctl.samples.iter().all(|s| s.actuation == 0));
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! Per-tick control records and the end-of-run control report.
+
+use std::collections::BTreeMap;
+
+use super::spec::{ControllerKind, ControllerSpec};
+
+/// One control-tick record: what the controller saw and what it did.
+/// Flows out through the telemetry seam into `<stem>.control.csv` and the
+/// report's §Control section.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ControlSample {
+    /// Capacity domain that took this tick.
+    pub domain: u32,
+    /// Simulated time of the tick.
+    pub t: f64,
+    /// Observed utilization signal (gate: live/cap; cluster: memory
+    /// used/capacity over non-retired hosts).
+    pub observed: f64,
+    /// `observed - setpoint`.
+    pub error: f64,
+    /// Applied capacity delta after bound clamping (0 = held).
+    pub actuation: i64,
+    /// Effective capacity after actuation (domain-local units).
+    pub capacity: u64,
+}
+
+/// Width of the settling band around the setpoint (for `target`/`pid`;
+/// `step` uses its own `[low, high]` band).
+pub const SETTLING_BAND: f64 = 0.1;
+
+/// Signal level treated as "at capacity" when no upper bound is set.
+const AT_CAP_SIGNAL: f64 = 0.999;
+
+/// End-of-run summary of a controlled fleet: the raw per-tick samples
+/// plus the classic control-theory digest (settling time, overshoot, %
+/// time at cap, scale events). Multi-domain runs are aggregated per tick
+/// time — capacities sum, observed signals average capacity-weighted.
+#[derive(Debug, Clone)]
+pub struct ControlReport {
+    /// Canonical spec string (`ControllerSpec::as_str`).
+    pub spec: String,
+    /// The signal value the controller steered toward.
+    pub setpoint: f64,
+    /// Settling band `[low, high]` used for `settling_time`.
+    pub band: (f64, f64),
+    /// Number of capacity domains that ran a controller share.
+    pub domains: usize,
+    /// Distinct control-tick times.
+    pub ticks: usize,
+    /// Per-domain scale-out actuations (positive deltas).
+    pub scale_up_events: u64,
+    /// Per-domain scale-in actuations (negative deltas).
+    pub scale_down_events: u64,
+    /// Smallest fleet-wide capacity reached after any tick.
+    pub min_capacity: u64,
+    /// Largest fleet-wide capacity reached after any tick.
+    pub max_capacity: u64,
+    /// Fleet-wide capacity after the final tick.
+    pub final_capacity: u64,
+    /// Fraction of ticks pinned at the configured max capacity or with
+    /// the observed signal saturated (>= 0.999).
+    pub pct_ticks_at_cap: f64,
+    /// Max positive excursion of the observed signal above the setpoint.
+    pub overshoot: f64,
+    /// Simulated time after which the observed signal stayed inside the
+    /// settling band until the end of the run; `None` if it never did.
+    pub settling_time: Option<f64>,
+    /// All per-domain tick records, in (domain, tick) order.
+    pub samples: Vec<ControlSample>,
+}
+
+impl ControlReport {
+    /// Digest `samples` (per-domain tick records, domains concatenated in
+    /// domain order) for the controller described by `spec`.
+    pub fn from_samples(samples: Vec<ControlSample>, spec: &ControllerSpec) -> ControlReport {
+        let setpoint = spec.kind.setpoint();
+        let band = match spec.kind {
+            ControllerKind::Step { low, high, .. } => (low, high),
+            _ => (setpoint - SETTLING_BAND, setpoint + SETTLING_BAND),
+        };
+        let domains = samples.iter().map(|s| s.domain as usize + 1).max().unwrap_or(0);
+        let scale_up_events = samples.iter().filter(|s| s.actuation > 0).count() as u64;
+        let scale_down_events = samples.iter().filter(|s| s.actuation < 0).count() as u64;
+
+        // Aggregate domains per tick time: capacities sum, observed
+        // signals average capacity-weighted. Tick times are positive, so
+        // ordering by bits is ordering by value.
+        let mut per_tick: BTreeMap<u64, (f64, f64, f64, u64)> = BTreeMap::new();
+        for s in &samples {
+            let e = per_tick.entry(s.t.to_bits()).or_insert((0.0, 0.0, 0.0, 0));
+            e.0 += s.observed * s.capacity as f64;
+            e.1 += s.capacity as f64;
+            e.2 += s.observed;
+            e.3 += s.capacity;
+        }
+        let agg: Vec<(f64, f64, u64)> = per_tick
+            .iter()
+            .map(|(&bits, &(wsum, w, osum, cap))| {
+                let t = f64::from_bits(bits);
+                let n = samples.iter().filter(|s| s.t.to_bits() == bits).count().max(1);
+                // Capacity-weighted mean; plain mean when every domain
+                // scaled to zero capacity.
+                let observed = if w > 0.0 { wsum / w } else { osum / n as f64 };
+                (t, observed, cap)
+            })
+            .collect();
+
+        let ticks = agg.len();
+        let min_capacity = agg.iter().map(|&(_, _, c)| c).min().unwrap_or(0);
+        let max_capacity = agg.iter().map(|&(_, _, c)| c).max().unwrap_or(0);
+        let final_capacity = agg.last().map(|&(_, _, c)| c).unwrap_or(0);
+        let at_cap = agg
+            .iter()
+            .filter(|&&(_, observed, cap)| {
+                (spec.max_capacity != 0 && cap >= spec.max_capacity) || observed >= AT_CAP_SIGNAL
+            })
+            .count();
+        let pct_ticks_at_cap = if ticks > 0 { at_cap as f64 / ticks as f64 } else { 0.0 };
+        let overshoot =
+            agg.iter().map(|&(_, observed, _)| observed - setpoint).fold(0.0, f64::max);
+        // Settling time: the start of the longest suffix of ticks whose
+        // observed signal stays inside the band through the end of the run.
+        let mut settling_time = None;
+        for &(t, observed, _) in agg.iter().rev() {
+            if observed >= band.0 && observed <= band.1 {
+                settling_time = Some(t);
+            } else {
+                break;
+            }
+        }
+
+        ControlReport {
+            spec: spec.as_str(),
+            setpoint,
+            band,
+            domains,
+            ticks,
+            scale_up_events,
+            scale_down_events,
+            min_capacity,
+            max_capacity,
+            final_capacity,
+            pct_ticks_at_cap,
+            overshoot,
+            settling_time,
+            samples,
+        }
+    }
+
+    /// Human-readable report lines for the §Control section.
+    pub fn to_lines(&self) -> Vec<String> {
+        let mut lines = vec![
+            format!("Controller {} (setpoint {:.3}, {} domain(s))", self.spec, self.setpoint, self.domains),
+            format!(
+                "  ticks {} | scale events +{} / -{} | capacity min {} max {} final {}",
+                self.ticks,
+                self.scale_up_events,
+                self.scale_down_events,
+                self.min_capacity,
+                self.max_capacity,
+                self.final_capacity
+            ),
+            format!(
+                "  at cap {:.1}% of ticks | overshoot {:.3} | settling {}",
+                self.pct_ticks_at_cap * 100.0,
+                self.overshoot,
+                match self.settling_time {
+                    Some(t) => format!("{t:.0} s"),
+                    None => "never".to_string(),
+                }
+            ),
+        ];
+        if self.ticks == 0 {
+            lines.push("  (no control ticks fired within the horizon)".to_string());
+        }
+        lines
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(domain: u32, t: f64, observed: f64, actuation: i64, capacity: u64) -> ControlSample {
+        ControlSample { domain, t, observed, error: observed - 0.7, actuation, capacity }
+    }
+
+    #[test]
+    fn aggregates_domains_per_tick() {
+        let spec = ControllerSpec::parse("target:0.7;max=20").unwrap();
+        let samples = vec![
+            // domain 0: two ticks
+            sample(0, 10.0, 1.0, 2, 6),
+            sample(0, 20.0, 0.7, 0, 6),
+            // domain 1: same tick times
+            sample(1, 10.0, 0.5, -1, 2),
+            sample(1, 20.0, 0.7, 0, 2),
+        ];
+        let r = ControlReport::from_samples(samples, &spec);
+        assert_eq!(r.domains, 2);
+        assert_eq!(r.ticks, 2);
+        assert_eq!(r.scale_up_events, 1);
+        assert_eq!(r.scale_down_events, 1);
+        assert_eq!((r.min_capacity, r.max_capacity, r.final_capacity), (8, 8, 8));
+        // Tick 1 weighted observed: (1.0*6 + 0.5*2) / 8 = 0.875.
+        assert!((r.overshoot - 0.175).abs() < 1e-12);
+        // Tick 2 is in band, tick 1 is not: settles at t = 20.
+        assert_eq!(r.settling_time, Some(20.0));
+    }
+
+    #[test]
+    fn at_cap_and_never_settling() {
+        let spec = ControllerSpec::parse("target:0.7;max=4").unwrap();
+        let samples = vec![
+            sample(0, 10.0, 1.0, 1, 4), // pinned at max
+            sample(0, 20.0, 1.2, 0, 4), // saturated signal
+            sample(0, 30.0, 0.2, -1, 3), // below band at the end
+        ];
+        let r = ControlReport::from_samples(samples, &spec);
+        assert!((r.pct_ticks_at_cap - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(r.settling_time, None);
+        assert!((r.overshoot - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_samples_are_harmless() {
+        let spec = ControllerSpec::parse("step:0.3,0.8").unwrap();
+        let r = ControlReport::from_samples(Vec::new(), &spec);
+        assert_eq!(r.ticks, 0);
+        assert_eq!(r.settling_time, None);
+        assert_eq!(r.band, (0.3, 0.8));
+        assert!(!r.to_lines().is_empty());
+    }
+}

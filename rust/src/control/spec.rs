@@ -1,0 +1,381 @@
+//! Serializable controller specs, mirroring `cluster::SchedulerSpec`:
+//! a compact string grammar with `parse`/`as_str` round-tripping, used by
+//! the CLI flag, the scenario JSON schema, and the what-if harness.
+//!
+//! Grammar (`;key=value` options apply to any kind):
+//!
+//! ```text
+//! target:UTIL[,COOLDOWN,STEP]     # target tracking (cooldown s, step units)
+//! pid:KP,KI,KD[,TARGET]           # PID over utilization error
+//! step:LOW,HIGH[,STEP]            # threshold ladder
+//!   [;tick=SECS][;min=N][;max=N][;delay=SECS]
+//! ```
+//!
+//! Defaults: cooldown 60 s, step 4 (target) / 1 (step), PID target 0.7,
+//! tick 10 s, min 1, max 0 (unbounded), provisioning delay 60 s.
+
+use super::controller::{Controller, Pid, StepPolicy, TargetTracking};
+
+/// Default simulated seconds between control ticks.
+pub const DEFAULT_TICK_INTERVAL: f64 = 10.0;
+/// Default lower capacity bound (never scale to zero).
+pub const DEFAULT_MIN_CAPACITY: u64 = 1;
+/// Default upper capacity bound (0 = unbounded).
+pub const DEFAULT_MAX_CAPACITY: u64 = 0;
+/// Default host provisioning delay in simulated seconds (cluster backend;
+/// gate actuation is always instant).
+pub const DEFAULT_PROVISION_DELAY: f64 = 60.0;
+/// Default target-tracking scale-in cooldown in simulated seconds.
+pub const DEFAULT_COOLDOWN: f64 = 60.0;
+/// Default target-tracking per-tick step limit.
+pub const DEFAULT_TARGET_STEP: u32 = 4;
+/// Default PID utilization setpoint.
+pub const DEFAULT_PID_TARGET: f64 = 0.7;
+/// Default step-policy ladder rung.
+pub const DEFAULT_LADDER_STEP: u32 = 1;
+
+/// Which controller to run (the positional part of the spec grammar).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ControllerKind {
+    /// `target:UTIL,COOLDOWN,STEP` — hold a target utilization.
+    TargetTracking {
+        /// Utilization setpoint.
+        target: f64,
+        /// Simulated seconds between scale-ins.
+        cooldown: f64,
+        /// Max capacity units moved per tick (0 = inert).
+        max_step: u32,
+    },
+    /// `pid:KP,KI,KD,TARGET` — PID over the utilization error.
+    Pid {
+        /// Proportional gain.
+        kp: f64,
+        /// Integral gain.
+        ki: f64,
+        /// Derivative gain.
+        kd: f64,
+        /// Utilization setpoint.
+        target: f64,
+    },
+    /// `step:LOW,HIGH,STEP` — threshold ladder.
+    Step {
+        /// Scale-in threshold.
+        low: f64,
+        /// Scale-out threshold.
+        high: f64,
+        /// Capacity units moved per breach.
+        step: u32,
+    },
+}
+
+impl ControllerKind {
+    /// Instantiate the runtime controller for one capacity domain.
+    pub fn build(&self) -> Box<dyn Controller> {
+        match *self {
+            ControllerKind::TargetTracking { target, cooldown, max_step } => {
+                Box::new(TargetTracking::new(target, cooldown, max_step))
+            }
+            ControllerKind::Pid { kp, ki, kd, target } => Box::new(Pid::new(kp, ki, kd, target)),
+            ControllerKind::Step { low, high, step } => Box::new(StepPolicy::new(low, high, step)),
+        }
+    }
+
+    /// The signal value the controller steers toward.
+    pub fn setpoint(&self) -> f64 {
+        match *self {
+            ControllerKind::TargetTracking { target, .. } => target,
+            ControllerKind::Pid { target, .. } => target,
+            ControllerKind::Step { low, high, .. } => (low + high) / 2.0,
+        }
+    }
+
+    /// Short kind name (`target`, `pid`, `step`) for labels and tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ControllerKind::TargetTracking { .. } => "target",
+            ControllerKind::Pid { .. } => "pid",
+            ControllerKind::Step { .. } => "step",
+        }
+    }
+}
+
+/// A complete, serializable controller configuration: the kind plus the
+/// tick interval, capacity bounds, and provisioning delay shared by all
+/// kinds. `parse(&s.as_str()) == Some(s)` for every valid spec.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ControllerSpec {
+    /// Which controller to run.
+    pub kind: ControllerKind,
+    /// Simulated seconds between control ticks.
+    pub tick_interval: f64,
+    /// Lower capacity bound (fleet-wide; striped across domains).
+    pub min_capacity: u64,
+    /// Upper capacity bound, 0 = unbounded (fleet-wide; striped).
+    pub max_capacity: u64,
+    /// Host provisioning delay in simulated seconds (cluster backend).
+    pub provision_delay: f64,
+}
+
+impl ControllerSpec {
+    fn with_kind(kind: ControllerKind) -> ControllerSpec {
+        ControllerSpec {
+            kind,
+            tick_interval: DEFAULT_TICK_INTERVAL,
+            min_capacity: DEFAULT_MIN_CAPACITY,
+            max_capacity: DEFAULT_MAX_CAPACITY,
+            provision_delay: DEFAULT_PROVISION_DELAY,
+        }
+    }
+
+    /// Target-tracking spec with default cooldown/step/options.
+    pub fn target_tracking(target: f64) -> ControllerSpec {
+        ControllerSpec::with_kind(ControllerKind::TargetTracking {
+            target,
+            cooldown: DEFAULT_COOLDOWN,
+            max_step: DEFAULT_TARGET_STEP,
+        })
+    }
+
+    /// PID spec with the default setpoint and options.
+    pub fn pid(kp: f64, ki: f64, kd: f64) -> ControllerSpec {
+        ControllerSpec::with_kind(ControllerKind::Pid { kp, ki, kd, target: DEFAULT_PID_TARGET })
+    }
+
+    /// Step-ladder spec with the default rung and options.
+    pub fn step(low: f64, high: f64) -> ControllerSpec {
+        ControllerSpec::with_kind(ControllerKind::Step { low, high, step: DEFAULT_LADDER_STEP })
+    }
+
+    /// Override the tick interval (simulated seconds).
+    pub fn with_tick(mut self, tick_interval: f64) -> ControllerSpec {
+        self.tick_interval = tick_interval;
+        self
+    }
+
+    /// Override the fleet-wide capacity bounds (`max` 0 = unbounded).
+    pub fn with_bounds(mut self, min: u64, max: u64) -> ControllerSpec {
+        self.min_capacity = min;
+        self.max_capacity = max;
+        self
+    }
+
+    /// Override the host provisioning delay (simulated seconds).
+    pub fn with_provision_delay(mut self, delay: f64) -> ControllerSpec {
+        self.provision_delay = delay;
+        self
+    }
+
+    /// Parse the spec grammar (see the module docs); `None` on anything
+    /// malformed — unknown kind or option key, wrong arity, non-numeric
+    /// fields.
+    pub fn parse(s: &str) -> Option<ControllerSpec> {
+        let mut parts = s.split(';');
+        let head = parts.next()?.trim();
+        let (kind_name, params) = head.split_once(':')?;
+        let nums: Vec<&str> = params.split(',').map(str::trim).collect();
+        let f = |i: usize| nums.get(i).and_then(|v| v.parse::<f64>().ok());
+        let u = |i: usize| nums.get(i).and_then(|v| v.parse::<u32>().ok());
+        let kind = match kind_name.trim() {
+            "target" if (1..=3).contains(&nums.len()) => ControllerKind::TargetTracking {
+                target: f(0)?,
+                cooldown: if nums.len() > 1 { f(1)? } else { DEFAULT_COOLDOWN },
+                max_step: if nums.len() > 2 { u(2)? } else { DEFAULT_TARGET_STEP },
+            },
+            "pid" if (3..=4).contains(&nums.len()) => ControllerKind::Pid {
+                kp: f(0)?,
+                ki: f(1)?,
+                kd: f(2)?,
+                target: if nums.len() > 3 { f(3)? } else { DEFAULT_PID_TARGET },
+            },
+            "step" if (2..=3).contains(&nums.len()) => ControllerKind::Step {
+                low: f(0)?,
+                high: f(1)?,
+                step: if nums.len() > 2 { u(2)? } else { DEFAULT_LADDER_STEP },
+            },
+            _ => return None,
+        };
+        let mut spec = ControllerSpec::with_kind(kind);
+        for opt in parts {
+            let (key, value) = opt.trim().split_once('=')?;
+            match key.trim() {
+                "tick" => spec.tick_interval = value.trim().parse().ok()?,
+                "min" => spec.min_capacity = value.trim().parse().ok()?,
+                "max" => spec.max_capacity = value.trim().parse().ok()?,
+                "delay" => spec.provision_delay = value.trim().parse().ok()?,
+                _ => return None,
+            }
+        }
+        Some(spec)
+    }
+
+    /// Canonical string form: full positional parameters, plus only the
+    /// non-default `;key=value` options. Round-trips through [`parse`].
+    ///
+    /// [`parse`]: ControllerSpec::parse
+    pub fn as_str(&self) -> String {
+        let mut s = match self.kind {
+            ControllerKind::TargetTracking { target, cooldown, max_step } => {
+                format!("target:{target},{cooldown},{max_step}")
+            }
+            ControllerKind::Pid { kp, ki, kd, target } => format!("pid:{kp},{ki},{kd},{target}"),
+            ControllerKind::Step { low, high, step } => format!("step:{low},{high},{step}"),
+        };
+        if self.tick_interval != DEFAULT_TICK_INTERVAL {
+            s.push_str(&format!(";tick={}", self.tick_interval));
+        }
+        if self.min_capacity != DEFAULT_MIN_CAPACITY {
+            s.push_str(&format!(";min={}", self.min_capacity));
+        }
+        if self.max_capacity != DEFAULT_MAX_CAPACITY {
+            s.push_str(&format!(";max={}", self.max_capacity));
+        }
+        if self.provision_delay != DEFAULT_PROVISION_DELAY {
+            s.push_str(&format!(";delay={}", self.provision_delay));
+        }
+        s
+    }
+
+    /// Validate the numeric ranges a successful parse can still get
+    /// wrong; returns a human-readable complaint for scenario validation.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.tick_interval.is_finite() && self.tick_interval > 0.0) {
+            return Err(format!("controller tick interval must be positive, got {}", self.tick_interval));
+        }
+        if !(self.provision_delay.is_finite() && self.provision_delay >= 0.0) {
+            return Err(format!("controller provisioning delay must be >= 0, got {}", self.provision_delay));
+        }
+        if self.max_capacity != 0 && self.max_capacity < self.min_capacity {
+            return Err(format!(
+                "controller max capacity {} is below min capacity {}",
+                self.max_capacity, self.min_capacity
+            ));
+        }
+        match self.kind {
+            ControllerKind::TargetTracking { target, cooldown, .. } => {
+                if !(target.is_finite() && target > 0.0) {
+                    return Err(format!("target-tracking setpoint must be positive, got {target}"));
+                }
+                if !(cooldown.is_finite() && cooldown >= 0.0) {
+                    return Err(format!("target-tracking cooldown must be >= 0, got {cooldown}"));
+                }
+            }
+            ControllerKind::Pid { kp, ki, kd, target } => {
+                for (name, g) in [("kp", kp), ("ki", ki), ("kd", kd)] {
+                    if !(g.is_finite() && g >= 0.0) {
+                        return Err(format!("PID gain {name} must be a finite value >= 0, got {g}"));
+                    }
+                }
+                if !(target.is_finite() && target > 0.0) {
+                    return Err(format!("PID setpoint must be positive, got {target}"));
+                }
+            }
+            ControllerKind::Step { low, high, .. } => {
+                if !(low.is_finite() && high.is_finite() && low < high) {
+                    return Err(format!(
+                        "step thresholds must satisfy low < high, got low {low} high {high}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_fills_defaults() {
+        let spec = ControllerSpec::parse("target:0.7").unwrap();
+        assert_eq!(
+            spec.kind,
+            ControllerKind::TargetTracking {
+                target: 0.7,
+                cooldown: DEFAULT_COOLDOWN,
+                max_step: DEFAULT_TARGET_STEP
+            }
+        );
+        assert_eq!(spec.tick_interval, DEFAULT_TICK_INTERVAL);
+        assert_eq!(spec.min_capacity, 1);
+        assert_eq!(spec.max_capacity, 0);
+        let spec = ControllerSpec::parse("pid:0.5,0.1,0").unwrap();
+        assert_eq!(spec.kind, ControllerKind::Pid { kp: 0.5, ki: 0.1, kd: 0.0, target: 0.7 });
+        let spec = ControllerSpec::parse("step:0.3,0.9").unwrap();
+        assert_eq!(spec.kind, ControllerKind::Step { low: 0.3, high: 0.9, step: 1 });
+    }
+
+    #[test]
+    fn parse_options_and_whitespace() {
+        let spec = ControllerSpec::parse(" target:0.6,30,2 ; tick=5 ; min=2 ; max=12 ; delay=90 ").unwrap();
+        assert_eq!(spec.tick_interval, 5.0);
+        assert_eq!(spec.min_capacity, 2);
+        assert_eq!(spec.max_capacity, 12);
+        assert_eq!(spec.provision_delay, 90.0);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for s in [
+            "",
+            "target",
+            "target:",
+            "target:x",
+            "target:0.7,1,2,3",
+            "pid:1,2",
+            "step:0.5",
+            "warp:0.7",
+            "target:0.7;bogus=1",
+            "target:0.7;tick=abc",
+            "target:0.7;tick",
+        ] {
+            assert!(ControllerSpec::parse(s).is_none(), "{s:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn as_str_round_trips() {
+        for s in [
+            "target:0.7",
+            "target:0.55,120,1",
+            "pid:0.8,0.05,0.2",
+            "pid:1,0,0,0.5",
+            "step:0.3,0.85,2",
+            "target:0.7;tick=30;max=6",
+            "step:0.2,0.8;min=2;delay=15",
+        ] {
+            let spec = ControllerSpec::parse(s).unwrap();
+            let canon = spec.as_str();
+            assert_eq!(ControllerSpec::parse(&canon), Some(spec), "{s} -> {canon}");
+        }
+        // Canonical form is stable: re-serializing the reparse is a no-op.
+        let spec = ControllerSpec::parse("target:0.7;tick=30").unwrap();
+        assert_eq!(ControllerSpec::parse(&spec.as_str()).unwrap().as_str(), spec.as_str());
+    }
+
+    #[test]
+    fn builders_match_grammar() {
+        assert_eq!(
+            ControllerSpec::target_tracking(0.7).with_tick(30.0).with_bounds(1, 6),
+            ControllerSpec::parse("target:0.7;tick=30;max=6").unwrap()
+        );
+        assert_eq!(
+            ControllerSpec::pid(0.8, 0.05, 0.2),
+            ControllerSpec::parse("pid:0.8,0.05,0.2").unwrap()
+        );
+        assert_eq!(
+            ControllerSpec::step(0.3, 0.85).with_provision_delay(5.0),
+            ControllerSpec::parse("step:0.3,0.85;delay=5").unwrap()
+        );
+    }
+
+    #[test]
+    fn validate_catches_bad_ranges() {
+        assert!(ControllerSpec::parse("target:0.7;tick=0").unwrap().validate().is_err());
+        assert!(ControllerSpec::parse("target:-0.5").unwrap().validate().is_err());
+        assert!(ControllerSpec::parse("step:0.9,0.3").unwrap().validate().is_err());
+        assert!(ControllerSpec::parse("pid:-1,0,0").unwrap().validate().is_err());
+        assert!(ControllerSpec::parse("target:0.7;min=5;max=2").unwrap().validate().is_err());
+        assert!(ControllerSpec::parse("target:0.7,60,4;min=1;max=8").unwrap().validate().is_ok());
+    }
+}

@@ -104,6 +104,41 @@ impl FleetGate {
     pub(super) fn capped(cap: usize) -> Self {
         FleetGate { live: 0, cap, cap_rejections: 0 }
     }
+
+    /// Remaining admission slots, saturating at 0 when a controller has
+    /// lowered the cap below the live count (busy instances are never
+    /// killed, so `live > cap` is a legal transient).
+    pub(super) fn headroom(&self) -> u64 {
+        self.cap.saturating_sub(self.live) as u64
+    }
+}
+
+/// The capacity dimension an autoscaling controller actuates, decoupled
+/// from per-event admission: observe `(utilization signal, capacity
+/// units)`, then move the capacity toward a target. Implemented by the
+/// flat gate (the cap is a pure admission counter, so actuation is
+/// instant) and by the clustered runner's host set (scale-out waits out
+/// a provisioning delay; scale-in retires hosts through the cordon/evict
+/// machinery) — see `crate::control` and DESIGN.md §Control.
+pub(super) trait ScalableCapacity {
+    /// `(observed utilization, current capacity units)`.
+    fn observe(&self) -> (f64, u64);
+
+    /// Move toward `desired` capacity units at simulated time `now`.
+    fn scale_to(&mut self, desired: u64, now: SimTime);
+}
+
+impl ScalableCapacity for FleetGate {
+    fn observe(&self) -> (f64, u64) {
+        let cap = self.cap as u64;
+        (self.live as f64 / cap.max(1) as f64, cap)
+    }
+
+    fn scale_to(&mut self, desired: u64, _now: SimTime) {
+        // Raising admits on the next cold start; lowering never kills
+        // busy instances — it just stops admitting until they drain.
+        self.cap = desired as usize;
+    }
 }
 
 /// The fleet-wide capacity model cold starts are admitted against:
@@ -356,6 +391,9 @@ impl FunctionEngine {
             ),
             Event::DegradationStart { window } => self.core.handle_degradation_start(window),
             Event::DegradationEnd { window } => self.core.handle_degradation_end(window),
+            Event::ControlTick => {
+                unreachable!("the run loops intercept control ticks before dispatch")
+            }
             Event::Horizon => unreachable!("the run loops terminate on Horizon"),
         }
     }

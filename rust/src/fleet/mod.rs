@@ -19,7 +19,10 @@
 //!   single-queue coupled execution when the fleet cap binds, per-function
 //!   and aggregate metrics (including prewarm starts / wasted-prewarm time
 //!   when `FleetConfig::prewarm_lead` is set), and the [`fleet_cost`]
-//!   pricing rollup.
+//!   pricing rollup. With `FleetConfig::controller` set, an autoscaling
+//!   controller ([`crate::control`]) moves the fleet cap or the cluster
+//!   host set on a fixed simulated-time tick through the engine's
+//!   `ScalableCapacity` seam.
 //!
 //! The per-function engine itself is a configuration of the unified
 //! lifecycle core ([`crate::sim::core`]): policy-driven keep-alive,

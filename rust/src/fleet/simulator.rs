@@ -38,9 +38,10 @@
 //! pins below; a single-host unbounded cluster reproduces the uncapped
 //! fleet bit-for-bit (pinned in `tests/engine_unification.rs`).
 
-use super::engine::{FleetCapacity, FleetGate, FleetQueue, FunctionEngine};
+use super::engine::{FleetCapacity, FleetGate, FleetQueue, FunctionEngine, ScalableCapacity};
 use super::policy::PolicySpec;
 use crate::cluster::{ClusterConfig, ClusterState, ClusterUsage, HostDrain};
+use crate::control::{ControlLoop, ControlReport, ControlSample, ControllerSpec};
 use crate::cost::{estimate, CostEstimate, FunctionConfig, PricingTable};
 use crate::sim::ensemble::run_indexed;
 use crate::sim::event::Event;
@@ -57,6 +58,15 @@ use crate::workload::source::TraceSource;
 // `TraceSource` seam yields them); re-exported here because the fleet is
 // their primary consumer and the historical import path.
 pub use crate::workload::source::{ArrivalMode, FunctionSpec};
+
+/// One coupled capacity domain's output: per-function results, telemetry
+/// recorders, cap rejections, and the domain's control-tick samples.
+type CoupledDomainOut = (Vec<SimResults>, Vec<Option<TelemetryRecorder>>, u64, Vec<ControlSample>);
+
+/// One clustered capacity domain's output: the coupled shape plus the
+/// domain's cluster usage report.
+type ClusteredDomainOut =
+    (Vec<SimResults>, Vec<Option<TelemetryRecorder>>, u64, ClusterUsage, Vec<ControlSample>);
 
 /// Fleet simulation input: the tenant mix, the keep-alive policy, and the
 /// optional fleet-wide concurrency cap that couples functions.
@@ -108,6 +118,15 @@ pub struct FleetConfig {
     /// `None` disables capture entirely — results stay bit-identical
     /// either way (capture draws no RNG and schedules no events).
     pub telemetry: Option<f64>,
+    /// Autoscaling controller moving the capacity at simulated time
+    /// (`crate::control`): the flat fleet cap on the coupled path, the
+    /// host set on the clustered path. `None` (the default) schedules no
+    /// control ticks and is bit-identical to the uncontrolled engines;
+    /// the uncapped sharded path has no capacity to actuate and ignores
+    /// it. With `capacity_domains` > 1 each domain runs its own
+    /// controller over a proportional share of the capacity bounds,
+    /// exactly like cap striping.
+    pub controller: Option<ControllerSpec>,
 }
 
 impl FleetConfig {
@@ -133,6 +152,7 @@ impl FleetConfig {
             fault: FaultProfile::disabled(),
             retry: RetryPolicy::none(),
             telemetry: None,
+            controller: None,
         }
     }
 
@@ -166,6 +186,7 @@ impl FleetConfig {
             fault: FaultProfile::disabled(),
             retry: RetryPolicy::none(),
             telemetry: None,
+            controller: None,
         }
     }
 
@@ -245,6 +266,13 @@ impl FleetConfig {
         self
     }
 
+    /// Attach an autoscaling controller (see [`ControllerSpec`] and
+    /// [`FleetConfig::controller`]).
+    pub fn with_controller(mut self, spec: ControllerSpec) -> Self {
+        self.controller = Some(spec);
+        self
+    }
+
     fn build_engine(&self, i: usize) -> FunctionEngine {
         let mut engine = FunctionEngine::new(
             i as u32,
@@ -269,19 +297,19 @@ impl FleetConfig {
             self.cluster.is_none() || self.fleet_max_concurrency.is_none(),
             "cluster and fleet_max_concurrency are mutually exclusive capacity models"
         );
-        let (per_function, recorders, cap_rejections, cluster_usage) =
+        let (per_function, recorders, cap_rejections, cluster_usage, control_samples) =
             match (&self.cluster, self.fleet_max_concurrency) {
                 (Some(cl), _) => {
-                    let (runs, recs, rejections, usage) = self.run_clustered(cl);
-                    (runs, recs, rejections, Some(usage))
+                    let (runs, recs, rejections, usage, ctl) = self.run_clustered(cl);
+                    (runs, recs, rejections, Some(usage), ctl)
                 }
                 (None, Some(cap)) => {
-                    let (runs, recs, rejections) = self.run_coupled(cap);
-                    (runs, recs, rejections, None)
+                    let (runs, recs, rejections, ctl) = self.run_coupled(cap);
+                    (runs, recs, rejections, None, ctl)
                 }
                 (None, None) => {
                     let (runs, recs) = self.run_sharded();
-                    (runs, recs, 0, None)
+                    (runs, recs, 0, None, Vec::new())
                 }
             };
         let names = self.functions.iter().map(|f| f.name.clone()).collect();
@@ -292,7 +320,15 @@ impl FleetConfig {
             .telemetry
             .is_some()
             .then(|| recorders.into_iter().map(Option::unwrap_or_default).collect());
-        FleetResults { names, per_function, aggregate, telemetry }
+        // The sharded path has no shared capacity to actuate, so a
+        // configured controller reports nothing there.
+        let control = match &self.controller {
+            Some(spec) if self.cluster.is_some() || self.fleet_max_concurrency.is_some() => {
+                Some(ControlReport::from_samples(control_samples, spec))
+            }
+            _ => None,
+        };
+        FleetResults { names, per_function, aggregate, telemetry, control }
     }
 
     /// Domains actually used for a shared resource of `resources` units
@@ -335,7 +371,7 @@ impl FleetConfig {
     /// (`cap/K`, remainder to the lowest domains) on its own queue and
     /// scoped thread; results come back in global function order and cap
     /// rejections sum across domains.
-    fn run_coupled(&self, cap: usize) -> (Vec<SimResults>, Vec<Option<TelemetryRecorder>>, u64) {
+    fn run_coupled(&self, cap: usize) -> CoupledDomainOut {
         let k = self.effective_domains(cap);
         if k <= 1 {
             return self.run_coupled_domain(0, 1, cap);
@@ -348,27 +384,26 @@ impl FleetConfig {
         let mut runs: Vec<Option<SimResults>> = (0..n).map(|_| None).collect();
         let mut recorders: Vec<Option<TelemetryRecorder>> = (0..n).map(|_| None).collect();
         let mut rejections = 0u64;
-        for (d, (druns, drecs, drej)) in domains.into_iter().enumerate() {
+        let mut samples = Vec::new();
+        for (d, (druns, drecs, drej, dctl)) in domains.into_iter().enumerate() {
             for (j, (r, rec)) in druns.into_iter().zip(drecs).enumerate() {
                 runs[d + j * k] = Some(r);
                 recorders[d + j * k] = rec;
             }
             rejections += drej;
+            // Domain-order concatenation keeps the control trace
+            // thread-count-invariant.
+            samples.extend(dctl);
         }
         let runs = runs.into_iter().map(|r| r.expect("stride covers every function")).collect();
-        (runs, recorders, rejections)
+        (runs, recorders, rejections, samples)
     }
 
     /// One capacity domain of the coupled path: the single-queue,
     /// single-threaded loop over the global function stride
     /// `{domain, domain + k, ...}` with its own admission gate. `k = 1`
     /// is the entire fleet — the exact legacy coupled computation.
-    fn run_coupled_domain(
-        &self,
-        domain: usize,
-        k: usize,
-        cap: usize,
-    ) -> (Vec<SimResults>, Vec<Option<TelemetryRecorder>>, u64) {
+    fn run_coupled_domain(&self, domain: usize, k: usize, cap: usize) -> CoupledDomainOut {
         let horizon = SimTime::from_secs(self.horizon);
         let indices: Vec<usize> = (domain..self.functions.len()).step_by(k).collect();
         let mut engines: Vec<FunctionEngine> =
@@ -382,6 +417,17 @@ impl FleetConfig {
         }
         queue.schedule(horizon, 0, Event::Horizon);
         let mut gate = FleetGate::capped(cap);
+        // Control state lives with this domain's single-queue loop: ticks
+        // are tagged with the domain index (a global function id in this
+        // stride) and intercepted below before any engine sees them. No
+        // controller -> no tick ever scheduled -> bit-identical run.
+        let mut control = self.controller.as_ref().map(|spec| ControlLoop::new(spec, domain, k));
+        if let Some(ctl) = &control {
+            let first = ctl.first_tick();
+            if first < self.horizon {
+                queue.schedule(SimTime::from_secs(first), domain as u32, Event::ControlTick);
+            }
+        }
         while let Some((t, f, ev)) = queue.pop() {
             if matches!(ev, Event::Horizon) {
                 break;
@@ -389,10 +435,24 @@ impl FleetConfig {
             // Queue tags are *global* function indices; this domain owns
             // the stride f ≡ domain (mod k), so the local slot is f / k.
             debug_assert_eq!(f as usize % k, domain);
+            if matches!(ev, Event::ControlTick) {
+                let ctl = control.as_mut().expect("control tick without a controller");
+                let now = t.as_secs();
+                let (observed, capacity) = gate.observe();
+                let desired = ctl.tick(now, observed, capacity);
+                if desired != capacity {
+                    gate.scale_to(desired, t);
+                }
+                let next = now + ctl.tick_interval;
+                if next < self.horizon {
+                    queue.schedule(SimTime::from_secs(next), domain as u32, Event::ControlTick);
+                }
+                continue;
+            }
             let engine = &mut engines[f as usize / k];
             engine.maybe_start_stats(t);
             engine.set_now(t);
-            engine.sample_tick(Some((cap - gate.live) as u64));
+            engine.sample_tick(Some(gate.headroom()));
             engine.handle_event(&mut queue, &mut FleetCapacity::Gate(&mut gate), ev);
         }
         let mut runs = Vec::with_capacity(engines.len());
@@ -401,10 +461,11 @@ impl FleetConfig {
             runs.push(engine.finish(horizon));
             // Flush samples due in the final (last event, horizon] window
             // — `finish` advanced the engine clock to the horizon.
-            engine.sample_tick(Some((cap - gate.live) as u64));
+            engine.sample_tick(Some(gate.headroom()));
             recorders.push(engine.take_recorder());
         }
-        (runs, recorders, gate.cap_rejections)
+        let samples = control.map(|c| c.samples).unwrap_or_default();
+        (runs, recorders, gate.cap_rejections, samples)
     }
 
     /// Cluster-coupled functions: the coupled path's single-queue
@@ -414,10 +475,7 @@ impl FleetConfig {
     /// bin-packing its stride of functions onto a contiguous block of
     /// `hosts/K` hosts (remainder to the lowest domains); per-domain
     /// utilization reports concatenate back into global host order.
-    fn run_clustered(
-        &self,
-        cl: &ClusterConfig,
-    ) -> (Vec<SimResults>, Vec<Option<TelemetryRecorder>>, u64, ClusterUsage) {
+    fn run_clustered(&self, cl: &ClusterConfig) -> ClusteredDomainOut {
         let k = self.effective_domains(cl.hosts);
         if k <= 1 {
             return self.run_clustered_domain(0, 1, cl.clone());
@@ -445,7 +503,8 @@ impl FleetConfig {
         let mut recorders: Vec<Option<TelemetryRecorder>> = (0..n).map(|_| None).collect();
         let mut rejections = 0u64;
         let mut usage = ClusterUsage::default();
-        for (d, (druns, drecs, drej, du)) in domains.into_iter().enumerate() {
+        let mut samples = Vec::new();
+        for (d, (druns, drecs, drej, du, dctl)) in domains.into_iter().enumerate() {
             for (j, (r, rec)) in druns.into_iter().zip(drecs).enumerate() {
                 runs[d + j * k] = Some(r);
                 recorders[d + j * k] = rec;
@@ -456,21 +515,17 @@ impl FleetConfig {
             // Domain blocks are contiguous, so domain-order concatenation
             // is global host order.
             usage.host_utilization.extend(du.host_utilization);
+            samples.extend(dctl);
         }
         let runs = runs.into_iter().map(|r| r.expect("stride covers every function")).collect();
-        (runs, recorders, rejections, usage)
+        (runs, recorders, rejections, usage, samples)
     }
 
     /// One capacity domain of the clustered path: the single-queue loop
     /// over the global function stride `{domain, domain + k, ...}`
     /// against its own (already host-subsetted) cluster. `k = 1` is the
     /// entire fleet on the full cluster — the exact legacy computation.
-    fn run_clustered_domain(
-        &self,
-        domain: usize,
-        k: usize,
-        cl: ClusterConfig,
-    ) -> (Vec<SimResults>, Vec<Option<TelemetryRecorder>>, u64, ClusterUsage) {
+    fn run_clustered_domain(&self, domain: usize, k: usize, cl: ClusterConfig) -> ClusteredDomainOut {
         let horizon = SimTime::from_secs(self.horizon);
         let indices: Vec<usize> = (domain..self.functions.len()).step_by(k).collect();
         let mut engines: Vec<FunctionEngine> =
@@ -487,11 +542,57 @@ impl FleetConfig {
         // engines tag placements with their global index), so size the
         // state for the whole fleet even when the domain owns a stride.
         let mut cluster = ClusterState::new(&cl, self.functions.len());
+        // Controller state (see run_coupled_domain): capacity units here
+        // are hosts — active plus still-provisioning.
+        let mut control = self.controller.as_ref().map(|spec| ControlLoop::new(spec, domain, k));
+        let mut pending: Vec<f64> = Vec::new();
+        if let Some(ctl) = &control {
+            let first = ctl.first_tick();
+            if first < self.horizon {
+                queue.schedule(SimTime::from_secs(first), domain as u32, Event::ControlTick);
+            }
+        }
         while let Some((t, f, ev)) = queue.pop() {
             if matches!(ev, Event::Horizon) {
                 break;
             }
             debug_assert_eq!(f as usize % k, domain);
+            if matches!(ev, Event::ControlTick) {
+                let ctl = control.as_mut().expect("control tick without a controller");
+                let now = t.as_secs();
+                // Advance only the accounting clock: recomputing drain
+                // cordons at tick times would shift window boundaries and
+                // break the inert-controller bit-identity contract.
+                cluster.set_now(now);
+                // Hosts whose provisioning delay elapsed join warm before
+                // this tick observes capacity.
+                pending.retain(|&ready| {
+                    if ready <= now {
+                        cluster.add_host();
+                        false
+                    } else {
+                        true
+                    }
+                });
+                let mut scaler = ClusterScaler {
+                    cluster: &mut cluster,
+                    engines: &mut engines,
+                    k,
+                    pending: &mut pending,
+                    delay: ctl.provision_delay,
+                    eviction: cl.eviction,
+                };
+                let (observed, capacity) = scaler.observe();
+                let desired = ctl.tick(now, observed, capacity);
+                if desired != capacity {
+                    scaler.scale_to(desired, t);
+                }
+                let next = now + ctl.tick_interval;
+                if next < self.horizon {
+                    queue.schedule(SimTime::from_secs(next), domain as u32, Event::ControlTick);
+                }
+                continue;
+            }
             let local = f as usize / k;
             // Drain windows opening at or before this event cordon their
             // host and (with eviction on) reclaim its idle containers.
@@ -538,7 +639,8 @@ impl FleetConfig {
         }
         let rejections = cluster.gate_rejections();
         let usage = cluster.usage(self.horizon);
-        (runs, recorders, rejections, usage)
+        let samples = control.map(|c| c.samples).unwrap_or_default();
+        (runs, recorders, rejections, usage, samples)
     }
 
     /// Evict every idle container from a newly cordoned host. Busy
@@ -609,6 +711,52 @@ impl FleetConfig {
             if !progressed {
                 break;
             }
+        }
+    }
+}
+
+/// Cluster backend of the [`ScalableCapacity`] seam: capacity units are
+/// hosts — active plus still inside their provisioning delay. Scale-out
+/// queues a pending host that joins warm after the delay elapses (at the
+/// tick that observes it); scale-in cancels pending hosts first (newest
+/// ready time), then retires live hosts through the cordon/evict
+/// machinery so busy containers drain naturally.
+struct ClusterScaler<'a> {
+    cluster: &'a mut ClusterState,
+    engines: &'a mut Vec<FunctionEngine>,
+    k: usize,
+    pending: &'a mut Vec<f64>,
+    delay: f64,
+    eviction: bool,
+}
+
+impl ScalableCapacity for ClusterScaler<'_> {
+    fn observe(&self) -> (f64, u64) {
+        let capacity = self.cluster.active_hosts() + self.pending.len() as u64;
+        (self.cluster.memory_utilization(), capacity)
+    }
+
+    fn scale_to(&mut self, desired: u64, now: SimTime) {
+        let current = self.cluster.active_hosts() + self.pending.len() as u64;
+        if desired > current {
+            for _ in 0..desired - current {
+                self.pending.push(now.as_secs() + self.delay);
+            }
+            return;
+        }
+        let mut shrink = current - desired;
+        while shrink > 0 && self.pending.pop().is_some() {
+            shrink -= 1;
+        }
+        while shrink > 0 {
+            let Some(host) = self.cluster.retire_target() else {
+                break;
+            };
+            self.cluster.retire_host(host);
+            if self.eviction {
+                FleetConfig::drain_host(self.engines, self.cluster, self.k, host, now);
+            }
+            shrink -= 1;
         }
     }
 }
@@ -910,6 +1058,10 @@ pub struct FleetResults {
     /// Per-function telemetry recordings, index-aligned with `names`.
     /// `Some` exactly when [`FleetConfig::telemetry`] was set.
     pub telemetry: Option<Vec<TelemetryRecorder>>,
+    /// Autoscaling control report. `Some` exactly when
+    /// [`FleetConfig::controller`] was set on a capped or clustered run
+    /// (the sharded path has no capacity to actuate).
+    pub control: Option<ControlReport>,
 }
 
 /// Fleet cost rollup: per-function estimates plus the exact sum.
@@ -1177,6 +1329,7 @@ mod tests {
                 fault: FaultProfile::disabled(),
                 retry: RetryPolicy::none(),
                 telemetry: None,
+                controller: None,
             }
             .run()
         };
@@ -1235,6 +1388,7 @@ mod tests {
             fault: FaultProfile::disabled(),
             retry: RetryPolicy::none(),
             telemetry: None,
+            controller: None,
         }
     }
 
@@ -1387,6 +1541,7 @@ mod tests {
             fault: FaultProfile::disabled(),
             retry: RetryPolicy::none(),
             telemetry: None,
+            controller: None,
         };
         let res = cfg.run();
         assert_eq!(res.aggregate.total_requests, 10);
@@ -1427,6 +1582,7 @@ mod tests {
             fault: FaultProfile::disabled(),
             retry: RetryPolicy::none(),
             telemetry: None,
+            controller: None,
         };
         let plain = base.clone().with_prewarm_lead(0.0).run();
         let prewarmed = base.run();

@@ -31,6 +31,9 @@
 //!   (first-fit, least-loaded, round-robin, packing-aware), memory-pressure
 //!   eviction and host-drain windows; replaces the flat fleet counter when
 //!   configured.
+//! * [`control`] — the autoscaling control subsystem: feedback controllers
+//!   (target-tracking, PID, step ladder) observed/actuated on a fixed
+//!   simulated-time tick, moving the fleet cap or the cluster host set.
 //! * [`fleet`] — multi-function fleet simulation: N heterogeneous functions
 //!   under a pluggable keep-alive policy, with an optional fleet-wide
 //!   concurrency cap or a finite-resource [`cluster`], and a fleet cost
@@ -54,6 +57,7 @@
 pub mod analytical;
 pub mod cli;
 pub mod cluster;
+pub mod control;
 pub mod cost;
 pub mod emulator;
 pub mod figures;
@@ -68,6 +72,7 @@ pub mod whatif;
 pub mod workload;
 
 pub use cluster::{ClusterConfig, SchedulerSpec};
+pub use control::{ControlReport, ControlSample, ControllerSpec};
 pub use fleet::{FleetConfig, FleetResults, KeepAlivePolicy, PolicySpec};
 pub use scenario::{
     run_scenario, ExperimentSpec, ProcessSpec, ScenarioReport, ScenarioSpec, SourceSpec,

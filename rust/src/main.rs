@@ -16,6 +16,7 @@
 use anyhow::{bail, Context, Result};
 use simfaas::cli::Args;
 use simfaas::cluster::{ClusterConfig, SchedulerSpec};
+use simfaas::control::ControllerSpec;
 use simfaas::cost::Provider;
 use simfaas::emulator::{EmulatorConfig, Platform};
 use simfaas::figures;
@@ -84,7 +85,7 @@ const COMMANDS: &[Cmd] = &[
     Cmd {
         name: "fleet",
         summary: "multi-function fleet simulation (synthetic mix or real Azure trace)",
-        flags: "--functions N --horizon --skip --seed --threads\n--policy fixed|adaptive --threshold (fixed)\n--range --bin (adaptive) --fleet-cap (0 = none)\n--capacity-domains K (shard the capped/clustered paths; 1 = off)\n--hosts N (0 = no cluster) --host-memory MB --host-cpus C\n--scheduler first-fit|least-loaded|round-robin|packing\n--prewarm-lead S (adaptive head-arm prewarm; 0 = off)\n--trace-dir DIR (Azure Functions 2019 dataset CSVs)\n--trace-top-k K --trace-scale X (with --trace-dir)\n--provider --memory --top K --json\n[--compare-thresholds a,b,c  fixed grid vs adaptive sweep]\n--failure-rate P --coldstart-failure-rate P --timeout S [--timeout-kills]\n--retry none|fixed:D[,N]|exponential:BASE,CAP[,N]\n--record-trace out.jsonl (also writes .perfetto.json/.metrics.csv)\n--metrics-interval S (state samples every S sim-seconds)",
+        flags: "--functions N --horizon --skip --seed --threads\n--policy fixed|adaptive --threshold (fixed)\n--range --bin (adaptive) --fleet-cap (0 = none)\n--capacity-domains K (shard the capped/clustered paths; 1 = off)\n--controller target:U|pid:KP,KI,KD|step:LO,HI (autoscale the cap/hosts;\n  options ;tick=S;min=N;max=N;delay=S — needs --fleet-cap or --hosts)\n--hosts N (0 = no cluster) --host-memory MB --host-cpus C\n--scheduler first-fit|least-loaded|round-robin|packing\n--prewarm-lead S (adaptive head-arm prewarm; 0 = off)\n--trace-dir DIR (Azure Functions 2019 dataset CSVs)\n--trace-top-k K --trace-scale X (with --trace-dir)\n--provider --memory --top K --json\n[--compare-thresholds a,b,c  fixed grid vs adaptive sweep]\n--failure-rate P --coldstart-failure-rate P --timeout S [--timeout-kills]\n--retry none|fixed:D[,N]|exponential:BASE,CAP[,N]\n--record-trace out.jsonl (also writes .perfetto.json/.metrics.csv)\n--metrics-interval S (state samples every S sim-seconds)",
         operands: 0,
         run: cmd_fleet,
     },
@@ -374,6 +375,18 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     // Capacity-domain sharding of the capped/clustered paths (validated
     // against the cap / host count by ScenarioSpec::validate below).
     fleet.capacity_domains = args.get_usize("capacity-domains", 1)?;
+    // Autoscaling controller moving the fleet cap / host set at simulated
+    // time (requires a capacity model; ScenarioSpec::validate checks).
+    if let Some(ctl) = args.get("controller") {
+        fleet.controller = Some(ControllerSpec::parse(ctl).with_context(|| {
+            format!(
+                "--controller: unparseable controller {ctl:?} \
+                 (expected target:UTIL[,COOLDOWN,STEP] | pid:KP,KI,KD[,TARGET] | \
+                 step:LOW,HIGH[,STEP], with optional ;tick=SECS;min=N;max=N;delay=SECS \
+                 options)"
+            )
+        })?);
+    }
     fleet.prewarm_lead = args.get_f64("prewarm-lead", 0.0)?;
     fleet.memory_mb = args.get_f64("memory", 128.0)?;
     fleet.top_k = args.get_usize("top", 5)?;

@@ -13,6 +13,7 @@ use super::spec::{
     WorkloadSpec,
 };
 use crate::cluster::{ClusterConfig, SchedulerSpec};
+use crate::control::ControllerSpec;
 use crate::cost::Provider;
 use crate::fleet::PolicyKind;
 use crate::sim::fault::{DegradationWindow, FaultProfile, TimeoutAction};
@@ -618,6 +619,9 @@ fn experiment_to_json(e: &ExperimentSpec) -> JsonValue {
             if f.capacity_domains != 1 {
                 o.set("capacity_domains", f.capacity_domains);
             }
+            if let Some(ctl) = &f.controller {
+                o.set("controller", ctl.as_str());
+            }
         }
     }
     o
@@ -756,6 +760,7 @@ fn experiment_from_json(v: &JsonValue) -> Result<ExperimentSpec> {
                     "compare_extra",
                     "cluster",
                     "capacity_domains",
+                    "controller",
                 ],
                 what,
             )?;
@@ -784,6 +789,19 @@ fn experiment_from_json(v: &JsonValue) -> Result<ExperimentSpec> {
                 f.cluster = Some(cluster_from_json(cv)?);
             }
             f.capacity_domains = usize_field(o, "capacity_domains", what, 1)?;
+            if let Some(cv) = o.get("controller") {
+                let s = cv
+                    .as_str()
+                    .context("experiment.controller must be a string")?;
+                f.controller = Some(ControllerSpec::parse(s).with_context(|| {
+                    format!(
+                        "experiment.controller: unparseable controller {s:?} \
+                         (expected target:UTIL[,COOLDOWN,STEP] | \
+                         pid:KP,KI,KD[,TARGET] | step:LOW,HIGH[,STEP], with \
+                         optional ;tick=SECS;min=N;max=N;delay=SECS options)"
+                    )
+                })?);
+            }
             ExperimentSpec::Fleet(f)
         }
         other => bail!(
@@ -1127,6 +1145,22 @@ mod tests {
             )),
         );
         roundtrip(
+            &ScenarioSpec::new("autoscale").with_experiment(ExperimentSpec::Fleet(
+                FleetScenario::new(6).with_fleet_cap(32).with_controller(
+                    ControllerSpec::target_tracking(0.7)
+                        .with_tick(30.0)
+                        .with_bounds(2, 64)
+                        .with_provision_delay(45.0),
+                ),
+            )),
+        );
+        roundtrip(
+            &ScenarioSpec::new("autoscale-pid").with_experiment(ExperimentSpec::Fleet(
+                FleetScenario::new(4).with_cluster(ClusterConfig::new(3, 1_024.0, 8.0))
+                    .with_controller(ControllerSpec::pid(0.8, 0.1, 0.05)),
+            )),
+        );
+        roundtrip(
             &ScenarioSpec::new("temporal").with_experiment(ExperimentSpec::Temporal {
                 replications: 4,
                 sample_interval: Some(50.0),
@@ -1390,6 +1424,14 @@ mod tests {
             .unwrap_err()
         );
         assert!(err.contains("first-fit|least-loaded|round-robin|packing"), "{err}");
+        let err = format!(
+            "{:#}",
+            ScenarioSpec::from_json_str(
+                r#"{"name":"x","experiment":{"type":"fleet","fleet_cap":8,"controller":"bang:1"}}"#
+            )
+            .unwrap_err()
+        );
+        assert!(err.contains("target:UTIL"), "{err}");
         let err = format!(
             "{:#}",
             ScenarioSpec::from_json_str(

@@ -22,8 +22,10 @@ use crate::sim::{
     InitialState, Process, Rng, ServerlessSimulator, ServerlessTemporalSimulator, SimResults,
     TemporalResults,
 };
+use crate::control::ControlReport;
 use crate::telemetry::{
-    chrome_trace, write_samples_csv, write_spans_jsonl, Observer, StateSample, TelemetryRecorder,
+    chrome_trace, write_control_csv, write_samples_csv, write_spans_jsonl, Observer, StateSample,
+    TelemetryRecorder,
 };
 use crate::whatif::{self, PolicyOutcome};
 use crate::workload::{AzureDataset, SyntheticTrace, TraceProvenance, TraceSource};
@@ -51,6 +53,9 @@ pub struct TelemetrySummary {
     pub perfetto_path: Option<String>,
     /// The time-series CSV destination, when written.
     pub metrics_path: Option<String>,
+    /// The control-tick CSV destination, when written (controlled fleet
+    /// runs with a `record_trace` path only).
+    pub control_path: Option<String>,
 }
 
 /// What [`run_scenario`] hands back: the engine results for the spec's
@@ -209,6 +214,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport> {
             cfg.cluster = f.cluster.clone();
             cfg.capacity_domains = f.capacity_domains;
             cfg.prewarm_lead = f.prewarm_lead;
+            cfg.controller = f.controller;
             if let Some(r) = &spec.reliability {
                 cfg.fault = r.fault.clone();
                 cfg.retry = r.retry.clone();
@@ -248,7 +254,20 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<ScenarioReport> {
                 let results = cfg.run();
                 let telemetry = match (&spec.observability, &results.telemetry) {
                     (Some(obs), Some(recs)) => {
-                        Some(export_telemetry(recs, &results.names, obs)?)
+                        let mut t = export_telemetry(recs, &results.names, obs)?;
+                        if let (Some(path), Some(ctl)) =
+                            (&obs.record_trace, &results.control)
+                        {
+                            let stem = path.strip_suffix(".jsonl").unwrap_or(path);
+                            let control_path = format!("{stem}.control.csv");
+                            let mut csv = Vec::new();
+                            write_control_csv(&mut csv, &ctl.samples)?;
+                            std::fs::write(&control_path, &csv).with_context(|| {
+                                format!("writing control csv {control_path}")
+                            })?;
+                            t.control_path = Some(control_path);
+                        }
+                        Some(t)
                     }
                     _ => None,
                 };
@@ -304,6 +323,7 @@ fn export_telemetry(
         span_path: None,
         perfetto_path: None,
         metrics_path: None,
+        control_path: None,
     };
     if let Some(path) = &obs.record_trace {
         let stem = path.strip_suffix(".jsonl").unwrap_or(path);
@@ -340,6 +360,9 @@ fn render_telemetry(t: &TelemetrySummary) -> String {
     {
         s.push_str(&format!("telemetry files: {spans} | {perfetto} | {metrics}\n"));
     }
+    if let Some(control) = &t.control_path {
+        s.push_str(&format!("control ticks: {control}\n"));
+    }
     s
 }
 
@@ -354,6 +377,9 @@ fn telemetry_json(t: &TelemetrySummary) -> JsonValue {
     }
     if let Some(p) = &t.metrics_path {
         o.set("metrics_path", p.as_str());
+    }
+    if let Some(p) = &t.control_path {
+        o.set("control_path", p.as_str());
     }
     o
 }
@@ -459,6 +485,10 @@ impl ScenarioReport {
                             cl.host_cpus,
                             cl.scheduler.as_str()
                         ));
+                        for w in cl.drain_horizon_warnings(spec.run.horizon) {
+                            s.push_str(&w);
+                            s.push('\n');
+                        }
                     }
                     if f.capacity_domains > 1 {
                         s.push_str(&format!(
@@ -475,6 +505,12 @@ impl ScenarioReport {
                     cost.total.runtime_charges,
                     cost.total.provider_infra_cost
                 ));
+                if let Some(ctl) = &results.control {
+                    for line in ctl.to_lines() {
+                        s.push_str(&line);
+                        s.push('\n');
+                    }
+                }
                 let top = (*top_k).min(results.per_function.len());
                 if top > 0 {
                     let mut order: Vec<usize> = (0..results.per_function.len()).collect();
@@ -647,6 +683,9 @@ impl ScenarioReport {
                 if let Some(t) = telemetry {
                     o.set("telemetry", telemetry_json(t));
                 }
+                if let Some(ctl) = &results.control {
+                    o.set("control", control_json(ctl));
+                }
                 o
             }
             ScenarioReport::FleetComparison { outcomes, provenance, .. } => {
@@ -679,6 +718,28 @@ impl ScenarioReport {
             }
         }
     }
+}
+
+/// The §Control digest as a JSON object (per-tick samples stay in the
+/// control CSV; the JSON carries the summary).
+fn control_json(r: &ControlReport) -> JsonValue {
+    let mut o = JsonValue::object();
+    o.set("spec", r.spec.as_str())
+        .set("setpoint", r.setpoint)
+        .set("domains", r.domains)
+        .set("ticks", r.ticks)
+        .set("scale_up_events", r.scale_up_events)
+        .set("scale_down_events", r.scale_down_events)
+        .set("min_capacity", r.min_capacity)
+        .set("max_capacity", r.max_capacity)
+        .set("final_capacity", r.final_capacity)
+        .set("pct_ticks_at_cap", r.pct_ticks_at_cap)
+        .set("overshoot", r.overshoot)
+        .set(
+            "settling_time",
+            r.settling_time.map(JsonValue::from).unwrap_or(JsonValue::Null),
+        );
+    o
 }
 
 /// Workload provenance as a JSON object (`{"source", "detail", "functions"}`).
@@ -1306,6 +1367,75 @@ mod tests {
             _ => panic!("wrong report kind"),
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A controlled fleet scenario carries its §Control digest through
+    /// every output surface: the report struct, the rendered table, the
+    /// JSON, and (with a record_trace path) the control-tick CSV.
+    #[test]
+    fn controlled_fleet_reports_and_exports_control_ticks() {
+        use crate::control::ControllerSpec;
+        let dir =
+            std::env::temp_dir().join(format!("simfaas_run_control_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace_path = dir.join("ctl.jsonl").display().to_string();
+        let spec = ScenarioSpec::new("ctl")
+            .with_horizon(2_000.0)
+            .with_skip_initial(0.0)
+            .with_seed(4)
+            .with_experiment(ExperimentSpec::Fleet(
+                FleetScenario::new(6).with_fleet_cap(3).with_controller(
+                    ControllerSpec::target_tracking(0.7).with_tick(50.0).with_bounds(1, 16),
+                ),
+            ))
+            .with_observability(ObservabilitySpec::new(Some(trace_path), 500.0));
+        let report = run_scenario(&spec).unwrap();
+        match &report {
+            ScenarioReport::Fleet { results, telemetry, .. } => {
+                let ctl = results.control.as_ref().expect("controlled run reports control");
+                assert!(ctl.ticks > 0);
+                let csv_path = telemetry
+                    .as_ref()
+                    .and_then(|t| t.control_path.clone())
+                    .expect("record_trace writes the control CSV");
+                let csv = std::fs::read_to_string(&csv_path).unwrap();
+                assert!(csv.starts_with("domain,t,observed,"), "{csv}");
+                assert_eq!(csv.lines().count(), ctl.samples.len() + 1);
+            }
+            _ => panic!("wrong report kind"),
+        }
+        let text = report.render(&spec);
+        assert!(text.contains("Controller target:0.7"), "{text}");
+        assert!(text.contains("control ticks:"), "{text}");
+        let json = report.to_json(&spec).to_string();
+        assert!(json.contains("\"control\":"), "{json}");
+        assert!(json.contains("\"settling_time\":"), "{json}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A drain window that outlives the horizon is flagged in the rendered
+    /// report (satellite: the cordoned host silently leaks capacity).
+    #[test]
+    fn unfinished_drain_window_warns_in_the_report() {
+        use crate::cluster::ClusterConfig;
+        let spec = ScenarioSpec::new("leak")
+            .with_horizon(1_000.0)
+            .with_skip_initial(0.0)
+            .with_experiment(ExperimentSpec::Fleet(FleetScenario::new(3).with_cluster(
+                ClusterConfig::new(2, 2_048.0, 16.0).with_drain(1, 500.0, 5_000.0),
+            )));
+        let report = run_scenario(&spec).unwrap();
+        let text = report.render(&spec);
+        assert!(text.contains("never completes within the 1000 s horizon"), "{text}");
+        // A drain that finishes in time stays quiet.
+        let ok = ScenarioSpec::new("ok")
+            .with_horizon(1_000.0)
+            .with_skip_initial(0.0)
+            .with_experiment(ExperimentSpec::Fleet(FleetScenario::new(3).with_cluster(
+                ClusterConfig::new(2, 2_048.0, 16.0).with_drain(1, 100.0, 400.0),
+            )));
+        let report = run_scenario(&ok).unwrap();
+        assert!(!report.render(&ok).contains("warning:"));
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! the `simfaas steady` experiment.
 
 use crate::cluster::ClusterConfig;
+use crate::control::ControllerSpec;
 use crate::cost::Provider;
 use crate::fleet::PolicySpec;
 use crate::figures::{COLD_MEAN, WARM_MEAN};
@@ -322,6 +323,11 @@ pub struct FleetScenario {
     /// `fleet_cap` or `cluster` when `> 1` (the uncapped path is
     /// already parallel).
     pub capacity_domains: usize,
+    /// Autoscaling controller moving the fleet cap or the cluster host
+    /// set on a fixed simulated-time tick ([`crate::control`]). Requires
+    /// a `fleet_cap` or a `cluster` — there is nothing to actuate
+    /// otherwise.
+    pub controller: Option<ControllerSpec>,
 }
 
 impl FleetScenario {
@@ -338,6 +344,7 @@ impl FleetScenario {
             prewarm_lead: 0.0,
             cluster: None,
             capacity_domains: 1,
+            controller: None,
         }
     }
 
@@ -381,6 +388,12 @@ impl FleetScenario {
     /// Shard the capped/clustered paths into `k` capacity domains.
     pub fn with_capacity_domains(mut self, k: usize) -> Self {
         self.capacity_domains = k;
+        self
+    }
+
+    /// Attach an autoscaling controller (see [`ControllerSpec`]).
+    pub fn with_controller(mut self, spec: ControllerSpec) -> Self {
+        self.controller = Some(spec);
         self
     }
 }
@@ -868,6 +881,18 @@ impl ScenarioSpec {
                     }
                     if let Err(e) = cl.validate() {
                         bail!("fleet.cluster: {e}");
+                    }
+                }
+                if let Some(ctl) = &f.controller {
+                    if f.fleet_cap.is_none() && f.cluster.is_none() {
+                        bail!(
+                            "fleet.controller requires a fleet_cap or a cluster — \
+                             an autoscaling controller has nothing to actuate on \
+                             the uncapped path"
+                        );
+                    }
+                    if let Err(e) = ctl.validate() {
+                        bail!("fleet.controller: {e}");
                     }
                 }
                 if f.capacity_domains == 0 {

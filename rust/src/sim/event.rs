@@ -68,6 +68,11 @@ pub enum Event {
         /// Index into [`crate::sim::FaultProfile::degradation`].
         window: u32,
     },
+    /// Fleet-level autoscaling tick: observe the capacity signal and
+    /// actuate the configured controller (`crate::control`). Scheduled
+    /// and intercepted by the fleet run loops before any engine core
+    /// sees it; never dispatched to a single-function simulator.
+    ControlTick,
     /// End of simulation horizon.
     Horizon,
 }

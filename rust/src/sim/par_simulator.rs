@@ -108,6 +108,9 @@ impl ParServerlessSimulator {
                 ),
                 Event::DegradationStart { window } => self.core.handle_degradation_start(window),
                 Event::DegradationEnd { window } => self.core.handle_degradation_end(window),
+                Event::ControlTick => {
+                    unreachable!("control ticks are scheduled only by the fleet run loops")
+                }
                 Event::Horizon => break,
             }
         }

@@ -393,6 +393,9 @@ impl ServerlessSimulator {
                 ),
                 Event::DegradationStart { window } => self.core.handle_degradation_start(window),
                 Event::DegradationEnd { window } => self.core.handle_degradation_end(window),
+                Event::ControlTick => {
+                    unreachable!("control ticks are scheduled only by the fleet run loops")
+                }
                 Event::Horizon => break,
             }
         }

@@ -10,6 +10,7 @@
 
 use super::recorder::TelemetryRecorder;
 use super::span::{SpanOutcome, SpanRecord, SpanVerdict, StateSample};
+use crate::control::ControlSample;
 use crate::output::json::JsonValue;
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, Write};
@@ -17,6 +18,9 @@ use std::io::{BufRead, Write};
 /// Header of the internal-state time-series CSV.
 pub const SAMPLES_CSV_HEADER: &str = "function,t,live,busy,idle,in_flight,total_requests,\
 cold_requests,warm_requests,cold_start_rate,degradation_active,cap_headroom";
+
+/// Header of the autoscaling control-tick CSV.
+pub const CONTROL_CSV_HEADER: &str = "domain,t,observed,error,actuation,capacity";
 
 /// Serialize one span as a JSON object (sorted keys, compact).
 pub fn span_to_json(s: &SpanRecord) -> JsonValue {
@@ -122,6 +126,22 @@ pub fn write_samples_csv<W: Write>(w: &mut W, samples: &[StateSample]) -> std::i
             s.cold_start_rate(),
             s.degradation_active,
             headroom,
+        )?;
+    }
+    Ok(())
+}
+
+/// Write autoscaling control-tick records as CSV (header +
+/// `{:.6}`-formatted floats). Samples arrive concatenated in domain
+/// order from the fleet run loops, so the bytes are independent of the
+/// shard/thread count.
+pub fn write_control_csv<W: Write>(w: &mut W, samples: &[ControlSample]) -> std::io::Result<()> {
+    writeln!(w, "{CONTROL_CSV_HEADER}")?;
+    for s in samples {
+        writeln!(
+            w,
+            "{},{:.6},{:.6},{:.6},{},{}",
+            s.domain, s.t, s.observed, s.error, s.actuation, s.capacity,
         )?;
     }
     Ok(())
@@ -274,6 +294,36 @@ mod tests {
         let row = lines.next().unwrap();
         // cold_start_rate = 5 / 95.
         assert_eq!(row, "2,60.000000,4,1,3,1,100,5,90,0.052632,0,996");
+        assert_eq!(lines.next(), None);
+    }
+
+    #[test]
+    fn control_csv_has_header_and_rows() {
+        let samples = vec![
+            ControlSample {
+                domain: 0,
+                t: 30.0,
+                observed: 0.85,
+                error: 0.15,
+                actuation: 2,
+                capacity: 10,
+            },
+            ControlSample {
+                domain: 1,
+                t: 30.0,
+                observed: 0.4,
+                error: -0.3,
+                actuation: -1,
+                capacity: 3,
+            },
+        ];
+        let mut bytes = Vec::new();
+        write_control_csv(&mut bytes, &samples).unwrap();
+        let text = String::from_utf8(bytes).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(lines.next(), Some(CONTROL_CSV_HEADER));
+        assert_eq!(lines.next(), Some("0,30.000000,0.850000,0.150000,2,10"));
+        assert_eq!(lines.next(), Some("1,30.000000,0.400000,-0.300000,-1,3"));
         assert_eq!(lines.next(), None);
     }
 

@@ -32,7 +32,8 @@ pub mod recorder;
 pub mod span;
 
 pub use export::{
-    chrome_trace, read_spans_jsonl, write_samples_csv, write_spans_jsonl, SAMPLES_CSV_HEADER,
+    chrome_trace, read_spans_jsonl, write_control_csv, write_samples_csv, write_spans_jsonl,
+    CONTROL_CSV_HEADER, SAMPLES_CSV_HEADER,
 };
 pub use recorder::{Observer, TelemetryRecorder, TelemetrySink};
 pub use span::{SpanOutcome, SpanRecord, SpanVerdict, StateSample};

@@ -8,6 +8,7 @@ pub mod sweep;
 pub use sweep::{sweep, sweep_grid, GridPoint, SweepOutcome};
 
 use crate::cluster::SchedulerSpec;
+use crate::control::ControllerSpec;
 use crate::cost::PricingTable;
 use crate::fleet::{fleet_cost, FleetConfig, FleetCostReport, FleetResults, PolicySpec};
 use crate::sim::ensemble::{derive_seeds, run_indexed, EnsembleOpts, EnsembleResults};
@@ -198,6 +199,46 @@ pub fn scheduler_comparison(
         .collect()
 }
 
+/// Autoscaling what-if: the same tenant mix under static capacity versus a
+/// grid of feedback controllers ([`crate::control`]). The first outcome is
+/// the uncontrolled baseline (labelled `static`); each controller then runs
+/// the identical trace with the fleet cap or cluster host set moved at
+/// simulated time. Comparing cost against rejections / cold starts across
+/// the outcomes traces the cost-vs-SLO frontier the control subsystem
+/// exists to expose: how much capacity (and therefore money) does each
+/// policy spend to hold service quality?
+///
+/// Requires `base` to have a scalable backend — a `fleet_max_concurrency`
+/// cap or a `cluster` — since a controller has nothing to actuate
+/// otherwise.
+pub fn controller_comparison(
+    base: &FleetConfig,
+    controllers: &[ControllerSpec],
+    pricing: &PricingTable,
+) -> Vec<PolicyOutcome> {
+    assert!(
+        base.fleet_max_concurrency.is_some() || base.cluster.is_some(),
+        "controller_comparison requires a capped or clustered fleet"
+    );
+    assert!(!controllers.is_empty(), "no controllers to compare");
+    let mut out = Vec::with_capacity(1 + controllers.len());
+    let static_cfg = {
+        let mut c = base.clone();
+        c.controller = None;
+        c
+    };
+    let results = static_cfg.run();
+    let cost = fleet_cost(&static_cfg, &results, pricing);
+    out.push(PolicyOutcome { label: "static".to_string(), results, cost });
+    for spec in controllers {
+        let cfg = base.clone().with_controller(*spec);
+        let results = cfg.run();
+        let cost = fleet_cost(&cfg, &results, pricing);
+        out.push(PolicyOutcome { label: spec.as_str(), results, cost });
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -322,6 +363,63 @@ mod tests {
         assert!(digests.len() >= 3, "schedulers too similar: {} distinct", digests.len());
         // Cost reports ride along.
         assert!(out.iter().all(|o| o.cost.total.requests > 0.0));
+    }
+
+    #[test]
+    fn controller_comparison_diverges_on_azure_sample() {
+        use crate::workload::{AzureDataset, TraceSource};
+        use std::path::PathBuf;
+        let dir =
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples/traces/azure_sample");
+        let ds = AzureDataset::load(&dir).expect("bundled sample trace parses");
+        let src = TraceSource::AzureDataset(ds.top_k(10));
+        // A deliberately tight fleet cap so static capacity rejects work and
+        // every controller has something to fix.
+        let base = FleetConfig::from_source(&src, 7_200.0, 0.0, 0xC1A5, PolicySpec::fixed(600.0))
+            .with_fleet_cap(4);
+        let controllers = [
+            ControllerSpec::target_tracking(0.7).with_tick(30.0).with_bounds(2, 40),
+            ControllerSpec::pid(0.8, 0.1, 0.05).with_tick(30.0).with_bounds(2, 40),
+            ControllerSpec::step(0.3, 0.9).with_tick(30.0).with_bounds(2, 40),
+        ];
+        let out = controller_comparison(&base, &controllers, &PricingTable::aws_lambda());
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].label, "static");
+        assert!(out[0].results.control.is_none());
+        // Same trace everywhere: total arrivals are controller-invariant.
+        let totals: Vec<u64> =
+            out.iter().map(|o| o.results.aggregate.total_requests).collect();
+        assert!(totals.iter().all(|&t| t == totals[0] && t > 0), "{totals:?}");
+        // Every controlled run carries its control report and actually ticked.
+        for o in &out[1..] {
+            let report = o.results.control.as_ref().unwrap_or_else(|| {
+                panic!("{}: controlled run must carry a control report", o.label)
+            });
+            assert!(report.ticks > 0, "{}", o.label);
+            assert_eq!(o.label, report.spec);
+        }
+        // The acceptance criterion: >= 3 controllers land at distinct points
+        // on the cost-vs-SLO frontier (capacity spent vs service quality).
+        let digests: std::collections::BTreeSet<Vec<u64>> = out[1..]
+            .iter()
+            .map(|o| {
+                let a = &o.results.aggregate;
+                vec![
+                    a.cold_requests,
+                    a.rejected_requests,
+                    a.billed_instance_seconds.to_bits(),
+                    o.cost.total.developer_total().to_bits(),
+                ]
+            })
+            .collect();
+        assert!(digests.len() >= 3, "controllers too similar: {} distinct", digests.len());
+        // The controllers buy service quality the static cap cannot:
+        // scaling out strictly reduces rejections on this trace.
+        let static_rej = out[0].results.aggregate.rejected_requests;
+        assert!(
+            out[1..].iter().any(|o| o.results.aggregate.rejected_requests < static_rej),
+            "no controller beat the static cap ({static_rej} rejections)"
+        );
     }
 
     #[test]

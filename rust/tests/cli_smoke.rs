@@ -307,6 +307,55 @@ fn fleet_rejects_bad_flags() {
     assert!(text.contains("functions"), "{text}");
 }
 
+/// The autoscaling flag flows through the fleet translator: the report
+/// gains its §Control section, the JSON carries the digest, and bad or
+/// unanchored controller specs are clean errors.
+#[test]
+fn fleet_controller_flag_reports_control_section() {
+    let (ok, text) = simfaas(&[
+        "fleet",
+        "--functions",
+        "6",
+        "--horizon",
+        "2000",
+        "--skip",
+        "0",
+        "--fleet-cap",
+        "4",
+        "--controller",
+        "target:0.7",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("Controller target:0.7"), "{text}");
+    assert!(text.contains("scale events"), "{text}");
+    let (ok, text) = simfaas(&[
+        "fleet",
+        "--functions",
+        "6",
+        "--horizon",
+        "2000",
+        "--skip",
+        "0",
+        "--fleet-cap",
+        "4",
+        "--controller",
+        "target:0.7",
+        "--json",
+    ]);
+    assert!(ok, "{text}");
+    let line = text.lines().find(|l| l.starts_with('{')).expect("json line");
+    assert!(line.contains("\"control\":"), "{line}");
+    assert!(line.contains("\"settling_time\":"), "{line}");
+    // A malformed controller spec is a clean error naming the grammar.
+    let (ok, text) = simfaas(&["fleet", "--fleet-cap", "4", "--controller", "bang:1"]);
+    assert!(!ok);
+    assert!(text.contains("target:UTIL"), "{text}");
+    // A controller without a capacity model is rejected before running.
+    let (ok, text) = simfaas(&["fleet", "--functions", "2", "--controller", "target:0.7"]);
+    assert!(!ok);
+    assert!(text.contains("fleet_cap or a cluster"), "{text}");
+}
+
 #[test]
 fn sweep_prints_grid() {
     let (ok, text) = simfaas(&[

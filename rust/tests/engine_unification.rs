@@ -322,6 +322,7 @@ fn single_prewarm_in_flight_covers_the_whole_lead_window() {
         fault: FaultProfile::disabled(),
         retry: RetryPolicy::none(),
         telemetry: None,
+        controller: None,
     };
     let results = cfg.run();
     let r = &results.per_function[0];
@@ -465,6 +466,99 @@ fn faulted_fleet_bit_identical_across_thread_counts() {
     }
     let coupled = base.clone().with_fleet_cap(1_000_000).run();
     assert_eq!(fleet_digest(&coupled), fleet_digest(&reference));
+}
+
+/// Control-layer inertness property: a *configured but inert* controller
+/// — target-tracking with step limit 0, PID with every gain 0 — ticks on
+/// schedule yet never actuates, so both backends (flat gate cap, finite
+/// cluster) must reproduce the no-controller engines bit for bit.
+#[test]
+fn inert_controllers_are_bit_identical_to_no_controller_engines() {
+    use simfaas::{ClusterConfig, ControllerSpec};
+    let inert = [
+        ControllerSpec::parse("target:0.7,60,0").expect("spec"),
+        ControllerSpec::parse("pid:0,0,0,0.7").expect("spec"),
+    ];
+    let mut rng = Rng::new(23);
+    let trace = SyntheticTrace::generate(8, &mut rng);
+    let base = FleetConfig::from_trace(&trace, 3_000.0, 0.0, 23, PolicySpec::fixed(300.0));
+
+    let capped = base.clone().with_fleet_cap(3);
+    let capped_ref = capped.clone().run();
+    assert!(capped_ref.aggregate.cap_rejections > 0); // the cap binds
+    for spec in inert {
+        let res = capped.clone().with_controller(spec).run();
+        assert_eq!(fleet_digest(&res), fleet_digest(&capped_ref), "gate {}", spec.as_str());
+        let ctl = res.control.expect("control report");
+        assert!(ctl.ticks > 0);
+        assert_eq!(ctl.scale_up_events + ctl.scale_down_events, 0);
+    }
+
+    let clustered = base.clone().with_cluster(ClusterConfig::new(2, 512.0, 4.0));
+    let clustered_ref = clustered.clone().run();
+    for spec in inert {
+        let res = clustered.clone().with_controller(spec).run();
+        assert_eq!(fleet_digest(&res), fleet_digest(&clustered_ref), "cluster {}", spec.as_str());
+        assert!(res.control.expect("control report").ticks > 0);
+    }
+}
+
+/// The point of autoscaling, pinned as a digest inequality: a target-
+/// tracking controller allowed to raise a tight gate cap mid-run must
+/// shed gate-only rejections vs the static-cap run on the same seed.
+#[test]
+fn controller_raising_the_cap_sheds_gate_rejections() {
+    use simfaas::ControllerSpec;
+    let mut rng = Rng::new(31);
+    let trace = SyntheticTrace::generate(8, &mut rng);
+    let base = FleetConfig::from_trace(&trace, 3_000.0, 0.0, 31, PolicySpec::fixed(300.0))
+        .with_fleet_cap(2);
+    let static_run = base.clone().run();
+    assert!(static_run.aggregate.cap_rejections > 0, "static cap must bind");
+    let spec = ControllerSpec::target_tracking(0.7).with_tick(20.0).with_bounds(2, 64);
+    let controlled = base.with_controller(spec).run();
+    let ctl = controlled.control.as_ref().expect("control report");
+    assert!(ctl.scale_up_events > 0, "controller never scaled out");
+    assert!(
+        controlled.aggregate.cap_rejections < static_run.aggregate.cap_rejections,
+        "controlled {} vs static {}",
+        controlled.aggregate.cap_rejections,
+        static_run.aggregate.cap_rejections
+    );
+}
+
+/// Configured controllers keep the sharded determinism contract: control
+/// state lives with each capacity domain's single-queue loop, so for a
+/// fixed domain count a controlled fleet is bit-identical (samples
+/// included) at any thread count.
+#[test]
+fn controlled_fleet_bit_identical_across_thread_counts() {
+    use simfaas::ControllerSpec;
+    let mut rng = Rng::new(47);
+    let trace = SyntheticTrace::generate(10, &mut rng);
+    let spec = ControllerSpec::target_tracking(0.7).with_tick(25.0).with_bounds(2, 32);
+    for domains in [1usize, 3] {
+        let base = FleetConfig::from_trace(&trace, 3_000.0, 0.0, 47, PolicySpec::fixed(300.0))
+            .with_fleet_cap(4)
+            .with_capacity_domains(domains)
+            .with_controller(spec);
+        let reference = base.clone().with_threads(1).run();
+        let ref_ctl = reference.control.as_ref().expect("control report");
+        assert!(ref_ctl.ticks > 0, "domains={domains}");
+        for threads in [2, 8] {
+            let res = base.clone().with_threads(threads).run();
+            assert_eq!(
+                fleet_digest(&res),
+                fleet_digest(&reference),
+                "domains={domains} threads={threads}"
+            );
+            assert_eq!(
+                res.control.as_ref().expect("control report").samples,
+                ref_ctl.samples,
+                "domains={domains} threads={threads}"
+            );
+        }
+    }
 }
 
 /// Telemetry zero-overhead contract: an *enabled* observer draws no RNG

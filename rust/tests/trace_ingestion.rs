@@ -96,6 +96,7 @@ fn streaming_fleet_is_bit_identical_to_eager_materialization() {
         fault: simfaas::sim::FaultProfile::disabled(),
         retry: simfaas::sim::RetryPolicy::none(),
         telemetry: None,
+        controller: None,
     }
     .run();
 
@@ -213,6 +214,31 @@ fn bundled_azure_scenario_file_runs_end_to_end() {
         }
         _ => panic!("expected a fleet report"),
     }
+}
+
+/// The bundled autoscaling scenario (Azure sample trace + target-tracking
+/// host scaling on a 2-host cluster) executes end to end with a control
+/// report in the output — the in-process version of
+/// `simfaas run examples/scenarios/fleet_autoscale.json`.
+#[test]
+fn bundled_autoscale_scenario_file_runs_end_to_end() {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../examples/scenarios/fleet_autoscale.json");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut spec = ScenarioSpec::from_json_str(&text).unwrap();
+    spec.resolve_source_paths(path.parent().unwrap());
+    let report = run_scenario(&spec).unwrap();
+    match &report {
+        ScenarioReport::Fleet { results, .. } => {
+            let ctl = results.control.as_ref().expect("control report");
+            assert!(ctl.ticks > 0, "controller never ticked");
+            assert!(ctl.spec.starts_with("target:0.7"), "{}", ctl.spec);
+        }
+        _ => panic!("expected a fleet report"),
+    }
+    let rendered = report.render(&spec);
+    assert!(rendered.contains("Controller target:0.7"), "{rendered}");
+    assert!(rendered.contains("scale events"), "{rendered}");
 }
 
 #[test]

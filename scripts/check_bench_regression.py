@@ -91,7 +91,14 @@ def main() -> int:
     for case in sorted(set(fresh) - set(baseline)):
         print(f"{case}: {fresh[case]:.3g} events/s (no baseline yet)")
     for case in sorted(set(args.require) - set(fresh)):
-        failures.append(f"{case}: required case missing from {args.fresh}")
+        # Name every file searched: the record the case is missing from and
+        # whether the committed baseline still expects it (a bench refactor
+        # dropped the case) or never had it (a typo'd --require).
+        if case in baseline:
+            detail = f"baseline {args.baseline} still lists it at {baseline[case]:.3g} events/s"
+        else:
+            detail = f"absent from baseline {args.baseline} too"
+        failures.append(f"{case}: required case missing from {args.fresh} ({detail})")
 
     if failures:
         print("\nbench regression gate FAILED:", file=sys.stderr)
